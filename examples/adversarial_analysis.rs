@@ -1,0 +1,105 @@
+//! Adversarial straggler analysis (paper §4):
+//!
+//!     cargo run --release --example adversarial_analysis
+//!
+//! 1. The Thm-10 linear-time attack on FRC (err = k - r exactly).
+//! 2. Polynomial heuristics (greedy, local search) against every code —
+//!    randomized codes (BGC/rBGC) blunt the attack, FRC shatters.
+//! 3. The Thm-11 NP-hardness witness: the DkS → r-ASP reduction's
+//!    objective identity, plus the heuristic-vs-exhaustive gap on small
+//!    instances.
+
+use gradcode::adversary::{
+    asp_objective, dks_to_asp, exhaustive_worst_case, frc_worst_stragglers, greedy_dks,
+    greedy_stragglers, local_search_stragglers, objective_identity_gap,
+};
+use gradcode::codes::Scheme;
+use gradcode::decode::OptimalDecoder;
+use gradcode::graph::random_regular_graph;
+use gradcode::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(2017);
+
+    // ---------------------------------------------------- 1. Thm 10
+    println!("== 1. Thm 10: the FRC block attack ==");
+    let (k, s) = (100usize, 10usize);
+    let g = Scheme::Frc.build(k, k, s).assignment(&mut rng);
+    for r in [50usize, 70, 80, 90] {
+        let ns = frc_worst_stragglers(&g, r);
+        let adv = OptimalDecoder::new().err(&g.select_columns(&ns));
+        let rand = {
+            let mut acc = 0.0;
+            for _ in 0..50 {
+                acc += OptimalDecoder::new().err(&g.select_columns(&rng.sample_indices(k, r)));
+            }
+            acc / 50.0
+        };
+        println!(
+            "  r={r:>3}: adversarial err = {adv:>5.1} (theory {})   random-straggler mean = {rand:.4}",
+            k - r
+        );
+    }
+
+    // ------------------------------------------- 2. heuristics per code
+    println!("\n== 2. polynomial adversaries vs every code (k=100, s=10, r=80) ==");
+    let r = 80;
+    let rho = k as f64 / (r as f64 * s as f64);
+    println!(
+        "  {:<12} {:>10} {:>12} {:>12} {:>14}",
+        "scheme", "random", "block-attack", "greedy", "local-search"
+    );
+    for scheme in [Scheme::Frc, Scheme::Bgc, Scheme::Rbgc, Scheme::RegularGraph, Scheme::Cyclic] {
+        let g = scheme.build(k, k, s).assignment(&mut rng);
+        let opt_err = |ns: &[usize]| OptimalDecoder::new().err(&g.select_columns(ns));
+        let rand = opt_err(&rng.sample_indices(k, r));
+        let block = opt_err(&frc_worst_stragglers(&g, r));
+        let greedy = opt_err(&greedy_stragglers(&g, r, rho));
+        let ls = opt_err(&local_search_stragglers(&g, r, rho, 3));
+        println!(
+            "  {:<12} {rand:>10.3} {block:>12.3} {greedy:>12.3} {ls:>14.3}",
+            scheme.name()
+        );
+    }
+    println!("  (optimal-decode err of the survivor set each adversary leaves behind)");
+
+    // ---------------------------------------------------- 3. Thm 11
+    println!("\n== 3. Thm 11: DkS -> r-ASP reduction (NP-hardness witness) ==");
+    let d = 4;
+    let graph = random_regular_graph(16, d, &mut rng);
+    let inst = dks_to_asp(&graph, d);
+    let rho_red = 0.5;
+    let mut max_gap = 0.0f64;
+    for t in 1..=12 {
+        let subset = rng.sample_indices(16, t);
+        max_gap = max_gap.max(objective_identity_gap(&inst, &graph, &subset, rho_red));
+    }
+    println!("  objective identity |lhs - rhs| over random subsets: {max_gap:.2e} (eq. 4.2/4.3)");
+
+    // Densest-subgraph view: greedy DkS and greedy ASP chase the same set.
+    let t = 8;
+    let dks_set = greedy_dks(&graph, t);
+    println!(
+        "  greedy DkS t={t}: e(S) = {} edges (graph has {})",
+        graph.edges_within(&dks_set),
+        graph.edge_count()
+    );
+
+    // Heuristic vs exhaustive on a small BGC.
+    let (ks, ss, rs) = (14usize, 3usize, 9usize);
+    let rho_s = ks as f64 / (rs as f64 * ss as f64);
+    let gm = Scheme::Bgc.build(ks, ks, ss).assignment(&mut rng);
+    let (_, exact) = exhaustive_worst_case(&gm, rs, rho_s);
+    let gr = asp_objective(&gm, &greedy_stragglers(&gm, rs, rho_s), rho_s);
+    let lso = asp_objective(&gm, &local_search_stragglers(&gm, rs, rho_s, 10), rho_s);
+    println!(
+        "  small-BGC worst case: exhaustive {exact:.3}, greedy {gr:.3} ({:.0}%), local-search {lso:.3} ({:.0}%)",
+        100.0 * gr / exact,
+        100.0 * lso / exact
+    );
+    println!(
+        "\nReading: FRC's worst case is catastrophic and easy to find; the\n\
+         random codes leave polynomial adversaries near the random-straggler\n\
+         regime — and finding their true worst case is NP-hard (Thm 11)."
+    );
+}

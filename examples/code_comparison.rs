@@ -1,0 +1,82 @@
+//! Code-comparison sweep: the paper's Figures 2-4 at the command line.
+//!
+//!     cargo run --release --example code_comparison [trials]
+//!
+//! Prints the one-step and optimal decoding error of FRC / BGC / rBGC /
+//! s-regular / cyclic codes across the straggler fraction δ, plus the
+//! decode wall-time per scheme — the decoding-complexity-vs-accuracy
+//! trade-off the paper's §6 discusses.
+
+use std::time::Instant;
+
+use gradcode::codes::Scheme;
+use gradcode::decode::{OneStepDecoder, OptimalDecoder};
+use gradcode::sim::MonteCarlo;
+use gradcode::util::Rng;
+
+fn main() {
+    let trials: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(500);
+    let (k, s) = (100usize, 10usize);
+    let deltas = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+    let schemes =
+        [Scheme::Frc, Scheme::Bgc, Scheme::Rbgc, Scheme::RegularGraph, Scheme::Cyclic];
+
+    println!("k={k}, s={s}, {trials} trials per point\n");
+
+    for &kind in &["one-step", "optimal"] {
+        println!("== {kind} decoding error / k ==");
+        print!("{:<10}", "delta");
+        for scheme in &schemes {
+            print!("{:>11}", scheme.name());
+        }
+        println!();
+        for &delta in &deltas {
+            let r = (((1.0 - delta) * k as f64).round() as usize).max(1);
+            print!("{delta:<10.1}");
+            for &scheme in &schemes {
+                let mc = MonteCarlo::new(trials, 1234);
+                let mean = mc.mean(|rng| {
+                    let g = scheme.build(k, k, s).assignment(rng);
+                    let a = g.select_columns(&rng.sample_indices(k, r));
+                    match kind {
+                        "one-step" => OneStepDecoder::canonical(k, r, s).err1(&a),
+                        _ => OptimalDecoder::new().err(&a),
+                    }
+                });
+                print!("{:>11.4}", mean / k as f64);
+            }
+            println!();
+        }
+        println!();
+    }
+
+    // Decode cost: the complexity side of the trade-off.
+    println!("== decode wall-time per call (k={k}, r=80, s={s}) ==");
+    let r = 80;
+    let mut rng = Rng::new(5);
+    for &scheme in &schemes {
+        let g = scheme.build(k, k, s).assignment(&mut rng);
+        let a = g.select_columns(&rng.sample_indices(k, r));
+        let reps = 200;
+        let t0 = Instant::now();
+        let mut acc = 0.0;
+        for _ in 0..reps {
+            acc += OneStepDecoder::canonical(k, r, s).err1(&a);
+        }
+        let one_t = t0.elapsed().as_secs_f64() / reps as f64;
+        let t1 = Instant::now();
+        for _ in 0..reps {
+            acc += OptimalDecoder::new().err(&a);
+        }
+        let opt_t = t1.elapsed().as_secs_f64() / reps as f64;
+        std::hint::black_box(acc);
+        println!(
+            "  {:<12} one-step {:>8.1}ns   optimal {:>9.1}us   ratio {:>6.0}x",
+            scheme.name(),
+            one_t * 1e9,
+            opt_t * 1e6,
+            opt_t / one_t
+        );
+    }
+    println!("\nShapes to expect (paper §6): FRC ≈ s-regular ≪ BGC under one-step;\nFRC ≪ everything under optimal decoding; one-step is orders of\nmagnitude cheaper — the complexity/accuracy trade-off.");
+}

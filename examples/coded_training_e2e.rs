@@ -1,0 +1,115 @@
+//! End-to-end driver (EXP-E2E in DESIGN.md): train a model through the
+//! FULL three-layer stack and log the loss curve.
+//!
+//!     make artifacts && cargo run --release --example coded_training_e2e
+//!
+//! Layers exercised per step: Pallas-kernel HLO (L1) inside the JAX
+//! partition-gradient graph (L2), executed by the PJRT engine pool and
+//! coordinated — codes, stragglers, deadline, decode — in Rust (L3).
+//! Falls back to the native backend (same math) if artifacts are absent.
+//!
+//! Compares FRC / BGC / rBGC against the uncoded baselines the paper's
+//! intro motivates: wait-for-all (no stragglers tolerated) and
+//! ignore-stragglers (drop their gradients entirely).
+
+use gradcode::codes::Scheme;
+use gradcode::coordinator::{DecoderKind, ModelKind};
+use gradcode::runtime::{Backend, EnginePool, LinearDims, Manifest, MlpDims};
+use gradcode::stragglers::{DeadlinePolicy, LatencyModel};
+use gradcode::training::{train, TrainConfig};
+
+fn backend() -> (Option<EnginePool>, Backend) {
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => {
+            let pool = EnginePool::start(m, 4).expect("engine pool");
+            let b = Backend::Pjrt(pool.handle());
+            eprintln!("backend: pjrt ({} engines)", 4);
+            (Some(pool), b)
+        }
+        Err(e) => {
+            eprintln!("backend: native (pjrt unavailable: {e})");
+            (
+                None,
+                Backend::Native {
+                    linear: LinearDims { m: 32, d: 64 },
+                    mlp: MlpDims { m: 32, d_in: 32, d_hidden: 64, d_out: 16, flat_dim: 3152 },
+                    s_max: 10,
+                },
+            )
+        }
+    }
+}
+
+fn run(
+    b: &Backend,
+    label: &str,
+    scheme: Scheme,
+    s: usize,
+    r: usize,
+    decoder: DecoderKind,
+    steps: usize,
+) {
+    let k = 100;
+    let mut cfg = TrainConfig::new(scheme, k, s, ModelKind::Mlp);
+    cfg.steps = steps;
+    cfg.lr = 2.0;
+    cfg.coordinator.decoder = decoder;
+    cfg.coordinator.seed = 7;
+    // Heavy-tailed worker latencies: the classic straggler regime.
+    cfg.coordinator.latency = LatencyModel::Pareto { scale: 0.05, shape: 1.3 };
+    cfg.coordinator.deadline = DeadlinePolicy::FastestR(r);
+
+    let t0 = std::time::Instant::now();
+    let out = train(b, &cfg).expect("training failed");
+    let wall = t0.elapsed().as_secs_f64();
+    let h = &out.history;
+    println!(
+        "{label:<28} loss {:.4} -> {:.4}   decode-err/k {:.4}   virt-gather {:.1}s   wall {:.1}s",
+        h.rounds[0].loss,
+        h.final_loss(),
+        h.mean_decode_err() / k as f64,
+        h.total_gather_time(),
+        wall
+    );
+    // Dump the full curve for the headline run.
+    if label.starts_with("FRC") {
+        eprintln!("--- loss curve ({label}) ---");
+        for m in h.rounds.iter().step_by(usize::max(1, h.rounds.len() / 20)) {
+            eprintln!("  step {:>4}  loss {:.5}  survivors {}", m.round, m.loss, m.survivors);
+        }
+    }
+}
+
+fn main() {
+    let (_pool, b) = backend();
+    let steps = std::env::var("E2E_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(200);
+    let k = 100;
+    let r = 80; // tolerate 20% stragglers per round
+
+    println!(
+        "== coded MLP training: k={k} partitions, {} params, {} steps, 20% stragglers ==",
+        b.mlp_dims().flat_dim,
+        steps
+    );
+
+    // Coded schemes: compute s partitions per worker, decode around the
+    // stragglers.
+    run(&b, "FRC s=10 / one-step", Scheme::Frc, 10, r, DecoderKind::OneStep, steps);
+    run(&b, "FRC s=10 / optimal", Scheme::Frc, 10, r, DecoderKind::Optimal, steps);
+    run(&b, "BGC s=10 / one-step", Scheme::Bgc, 10, r, DecoderKind::OneStep, steps);
+    run(&b, "rBGC s=10 / one-step", Scheme::Rbgc, 10, r, DecoderKind::OneStep, steps);
+    run(&b, "s-regular s=10 / one-step", Scheme::RegularGraph, 10, r, DecoderKind::OneStep, steps);
+
+    // Baselines: uncoded (cyclic with s=1 is the identity assignment).
+    // wait-all: no straggler tolerance — gather time balloons under the
+    // Pareto tail; ignore-stragglers: fast but biased gradients.
+    run(&b, "uncoded / wait-all", Scheme::Cyclic, 1, k, DecoderKind::OneStep, steps);
+    run(&b, "uncoded / ignore-stragglers", Scheme::Cyclic, 1, r, DecoderKind::OneStep, steps);
+
+    println!(
+        "\nReading: coded schemes keep the virt-gather time of the r-fastest\n\
+         workers (like ignore-stragglers) while their decode error — and\n\
+         hence final loss — tracks the wait-all baseline. That trade-off\n\
+         is the paper's thesis."
+    );
+}

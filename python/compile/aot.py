@@ -1,0 +1,186 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the Rust `xla` crate links) rejects (`proto.id() <= INT_MAX`). The text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Run once via ``make artifacts``; Python is never on the request path.
+
+Outputs (under --out-dir, default ../artifacts):
+  grad_linear.hlo.txt   (x(m,d), w(d), y(m))          -> (g(d),)
+  grad_mlp.hlo.txt      (theta(F), x(m,in), y(m,out)) -> (loss, grad(F))
+  combine_linear.hlo.txt(grads(s,d), coeffs(s))       -> (v(d),)
+  combine_mlp.hlo.txt   (grads(s,F), coeffs(s))       -> (v(F),)
+  manifest.json          all static shapes, for the Rust runtime
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.ref import ref_coded_combine, ref_linear_grad, ref_mlp_loss
+from .model import (
+    LinearDims,
+    MlpDims,
+    _unflatten,
+    coded_combine_message,
+    linear_partition_grad,
+    linear_worker_message,
+    mlp_partition_grad,
+    mlp_worker_message,
+)
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _selfcheck(lin: LinearDims, mlp: MlpDims, s_max: int) -> None:
+    """Refuse to emit artifacts whose numerics disagree with the oracle."""
+    key = jax.random.PRNGKey(0)
+    kx, kw, ky, kt = jax.random.split(key, 4)
+
+    x = jax.random.normal(kx, (lin.m, lin.d), F32)
+    w = jax.random.normal(kw, (lin.d,), F32)
+    y = jax.random.normal(ky, (lin.m,), F32)
+    (g,) = linear_partition_grad(x, w, y)
+    np.testing.assert_allclose(g, ref_linear_grad(x, w, y), rtol=2e-4, atol=2e-5)
+
+    theta = 0.1 * jax.random.normal(kt, (mlp.flat_dim,), F32)
+    xm = jax.random.normal(kx, (mlp.m, mlp.d_in), F32)
+    ym = jax.random.normal(ky, (mlp.m, mlp.d_out), F32)
+    loss, flat = mlp_partition_grad(theta, xm, ym, dims=mlp)
+    params = _unflatten(theta, mlp)
+    ref_loss = ref_mlp_loss(params, xm, ym)
+    ref_flat = jnp.concatenate(
+        [p.ravel() for p in jax.grad(ref_mlp_loss)(params, xm, ym)]
+    )
+    np.testing.assert_allclose(loss, ref_loss, rtol=1e-5)
+    np.testing.assert_allclose(flat, ref_flat, rtol=2e-3, atol=2e-5)
+
+    grads = jax.random.normal(kx, (s_max, lin.d), F32)
+    coeffs = jax.random.normal(kw, (s_max,), F32)
+    (v,) = coded_combine_message(grads, coeffs)
+    np.testing.assert_allclose(v, ref_coded_combine(grads, coeffs), rtol=2e-4, atol=2e-5)
+
+
+def build_artifacts(out_dir: str, lin: LinearDims, mlp: MlpDims, s_max: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    _selfcheck(lin, mlp, s_max)
+
+    entries = {
+        "grad_linear": (
+            linear_partition_grad,
+            (_spec(lin.m, lin.d), _spec(lin.d), _spec(lin.m)),
+        ),
+        "grad_mlp": (
+            functools.partial(mlp_partition_grad, dims=mlp),
+            (_spec(mlp.flat_dim), _spec(mlp.m, mlp.d_in), _spec(mlp.m, mlp.d_out)),
+        ),
+        "combine_linear": (
+            coded_combine_message,
+            (_spec(s_max, lin.d), _spec(s_max)),
+        ),
+        "combine_mlp": (
+            coded_combine_message,
+            (_spec(s_max, mlp.flat_dim), _spec(s_max)),
+        ),
+        # Fused one-dispatch-per-worker rounds (§Perf): s gradients +
+        # coded combine lowered into a single module.
+        "msg_linear": (
+            linear_worker_message,
+            (
+                _spec(lin.d),
+                _spec(s_max, lin.m, lin.d),
+                _spec(s_max, lin.m),
+                _spec(s_max),
+            ),
+        ),
+        "msg_mlp": (
+            functools.partial(mlp_worker_message, dims=mlp),
+            (
+                _spec(mlp.flat_dim),
+                _spec(s_max, mlp.m, mlp.d_in),
+                _spec(s_max, mlp.m, mlp.d_out),
+                _spec(s_max),
+            ),
+        ),
+    }
+
+    manifest = {
+        "format": "hlo-text",
+        "dtype": "f32",
+        "s_max": s_max,
+        "linear": {"m": lin.m, "d": lin.d},
+        "mlp": {
+            "m": mlp.m,
+            "d_in": mlp.d_in,
+            "d_hidden": mlp.d_hidden,
+            "d_out": mlp.d_out,
+            "flat_dim": mlp.flat_dim,
+        },
+        "artifacts": {},
+    }
+
+    for name, (fn, specs) in entries.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [list(s.shape) for s in specs],
+        }
+        print(f"  {fname}: {len(text)} chars")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--linear-m", type=int, default=32)
+    p.add_argument("--linear-d", type=int, default=64)
+    p.add_argument("--mlp-m", type=int, default=32)
+    p.add_argument("--mlp-din", type=int, default=32)
+    p.add_argument("--mlp-hidden", type=int, default=64)
+    p.add_argument("--mlp-dout", type=int, default=16)
+    p.add_argument("--s-max", type=int, default=10)
+    args = p.parse_args()
+
+    lin = LinearDims(m=args.linear_m, d=args.linear_d)
+    mlp = MlpDims(
+        m=args.mlp_m,
+        d_in=args.mlp_din,
+        d_hidden=args.mlp_hidden,
+        d_out=args.mlp_dout,
+    )
+    print(f"AOT-lowering to {args.out_dir} (mlp flat_dim={mlp.flat_dim})")
+    build_artifacts(args.out_dir, lin, mlp, args.s_max)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

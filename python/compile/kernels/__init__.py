@@ -1,0 +1,13 @@
+"""L1 Pallas kernels (build-time only).
+
+Every kernel here is lowered with ``interpret=True`` so the emitted HLO is
+plain XLA ops runnable by the CPU PJRT client the Rust runtime uses. On a
+real TPU the same BlockSpecs express the HBM->VMEM schedule; see
+DESIGN.md section "Hardware-Adaptation".
+"""
+
+from .linear_grad import linear_grad
+from .matmul import matmul
+from .combine import coded_combine
+
+__all__ = ["linear_grad", "matmul", "coded_combine"]

@@ -1,0 +1,45 @@
+"""Pallas kernel for the coded message: v = sum_i c_i * g_i.
+
+This is the linear combination each worker sends to the master (the
+entries of its column of G are the coefficients c). Stragglers that
+finished only some tasks zero the corresponding coefficients, so a single
+(s_max, d) artifact serves every worker.
+
+The grid tiles the gradient dimension d; each step contracts the full
+coefficient vector against an (s, bd) block of the stacked gradients —
+a skinny matvec that maps onto one MXU pass per tile on TPU.
+"""
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(g_ref, c_ref, o_ref):
+    o_ref[...] = c_ref[...] @ g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def coded_combine(grads, coeffs, *, block_d: int = 256):
+    """v = coeffs @ grads for grads (s, d), coeffs (s,) -> (d,)."""
+    s, d = grads.shape
+    if coeffs.shape != (s,):
+        raise ValueError(f"coeffs shape {coeffs.shape} != ({s},)")
+    # Snap to the largest divisor of d that is <= block_d, so any gradient
+    # length works (flat MLP grads are rarely powers of two).
+    block_d = min(block_d, d)
+    while d % block_d != 0:
+        block_d -= 1
+    grid = (d // block_d,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s, block_d), lambda i: (0, i)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), grads.dtype),
+        interpret=True,
+    )(grads, coeffs)

@@ -1,0 +1,54 @@
+"""Tiled matmul Pallas kernel — the MXU-shaped primitive under the MLP.
+
+Classic (i, j, kk) grid: each step multiplies an (bm, bk) tile of A with a
+(bk, bn) tile of B and accumulates into the (bm, bn) output tile, which is
+revisited for every kk (output BlockSpec ignores the contraction index).
+On TPU this is the canonical MXU systolic schedule; interpret=True lowers
+it to plain HLO so the CPU PJRT client can run it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(a, b, *, block_m: int = 16, block_n: int = 16, block_k: int = 16):
+    """C = A @ B with (bm, bn, bk) tiling.
+
+    Shapes: a (m, k), b (k, n); every block size must divide its dim.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {k} vs {k2}")
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    for dim, blk, name in ((m, block_m, "m"), (n, block_n, "n"), (k, block_k, "k")):
+        if dim % blk != 0:
+            raise ValueError(f"block_{name}={blk} must divide {name}={dim}")
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

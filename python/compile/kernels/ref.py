@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+pytest asserts allclose(kernel(...), ref_*(...)) across hypothesis-swept
+shapes; the AOT pipeline refuses to emit artifacts if the check fails.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_linear_grad(x, w, y):
+    """g = X^T (X w - y) / m."""
+    m = x.shape[0]
+    return x.T @ (x @ w - y) / m
+
+
+def ref_matmul(a, b):
+    return a @ b
+
+
+def ref_coded_combine(grads, coeffs):
+    return coeffs @ grads
+
+
+def ref_mlp_loss(params, x, y):
+    """2-layer tanh MLP, mean-squared error against dense targets."""
+    w1, b1, w2, b2 = params
+    h = jnp.tanh(x @ w1 + b1)
+    o = h @ w2 + b2
+    return jnp.mean((o - y) ** 2)

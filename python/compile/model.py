@@ -1,0 +1,133 @@
+"""L2: the per-worker compute graphs, built on the L1 Pallas kernels.
+
+Three jittable functions are AOT-lowered to HLO text by ``aot.py``:
+
+* ``linear_partition_grad`` — the paper's f_i for least squares: the
+  gradient of one data shard. One Pallas linear_grad call.
+* ``mlp_partition_grad``    — f_i for a 2-layer tanh MLP (MSE loss):
+  forward + *manual* backward, with every matmul routed through the
+  tiled Pallas matmul kernel (pallas_call has no autodiff rule, and
+  manual backprop is what a production AOT path ships anyway). Returns
+  (loss, flat_grad) so the Rust side logs loss curves for free.
+* ``coded_combine_message`` — the worker->master message: the linear
+  combination of its s gradients with its column of G as coefficients.
+
+All shapes are static; the Rust runtime reads them from
+``artifacts/manifest.json``.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels import linear_grad, matmul, coded_combine
+
+
+@dataclass(frozen=True)
+class MlpDims:
+    """Static shape bundle for the MLP partition gradient."""
+
+    m: int = 32  # examples per partition shard
+    d_in: int = 32
+    d_hidden: int = 64
+    d_out: int = 16
+
+    @property
+    def flat_dim(self) -> int:
+        """Length of the flattened (W1, b1, W2, b2) gradient vector."""
+        return (
+            self.d_in * self.d_hidden
+            + self.d_hidden
+            + self.d_hidden * self.d_out
+            + self.d_out
+        )
+
+
+@dataclass(frozen=True)
+class LinearDims:
+    """Static shape bundle for the least-squares partition gradient."""
+
+    m: int = 32
+    d: int = 64
+
+
+def linear_partition_grad(x, w, y):
+    """g_i = X_i^T (X_i w - y_i) / m — one shard of the full gradient."""
+    return (linear_grad(x, w, y),)
+
+
+def _unflatten(theta, dims: MlpDims):
+    """Split the flat parameter vector into (W1, b1, W2, b2)."""
+    i = 0
+    w1 = theta[i : i + dims.d_in * dims.d_hidden].reshape(dims.d_in, dims.d_hidden)
+    i += dims.d_in * dims.d_hidden
+    b1 = theta[i : i + dims.d_hidden]
+    i += dims.d_hidden
+    w2 = theta[i : i + dims.d_hidden * dims.d_out].reshape(dims.d_hidden, dims.d_out)
+    i += dims.d_hidden * dims.d_out
+    b2 = theta[i : i + dims.d_out]
+    return w1, b1, w2, b2
+
+
+def mlp_partition_grad(theta, x, y, *, dims: MlpDims):
+    """(loss, flat_grad) of a 2-layer tanh MLP with MSE loss on one shard.
+
+    Forward:  H = tanh(X W1 + b1);  O = H W2 + b2;  L = mean((O - Y)^2).
+    Backward is written out by hand; all five matmuls go through the
+    Pallas kernel so the hot path is the tiled MXU schedule end to end.
+    """
+    w1, b1, w2, b2 = _unflatten(theta, dims)
+    m = dims.m
+
+    # Forward
+    z1 = matmul(x, w1) + b1  # (m, h)
+    h = jnp.tanh(z1)
+    o = matmul(h, w2) + b2  # (m, o)
+    diff = o - y
+    loss = jnp.mean(diff**2)
+
+    # Backward (MSE): dO = 2 (O - Y) / (m * d_out)
+    do = (2.0 / (m * dims.d_out)) * diff
+    dw2 = matmul(h.T, do)  # (h, o)
+    db2 = jnp.sum(do, axis=0)
+    dh = matmul(do, w2.T)  # (m, h)
+    dz1 = dh * (1.0 - h**2)
+    dw1 = matmul(x.T, dz1)  # (in, h)
+    db1 = jnp.sum(dz1, axis=0)
+
+    flat = jnp.concatenate([dw1.ravel(), db1, dw2.ravel(), db2])
+    return loss, flat
+
+
+def coded_combine_message(grads, coeffs):
+    """The coded message: v = sum_i coeffs[i] * grads[i] (one G column)."""
+    return (coded_combine(grads, coeffs),)
+
+
+def linear_worker_message(w, xs, ys, coeffs):
+    """Fused worker round: s partition gradients + coded combine in ONE
+    lowered module (one PJRT dispatch per worker per step instead of
+    s + 1 — the §Perf L2 optimization; see EXPERIMENTS.md).
+
+    xs: (s, m, d) stacked shards, ys: (s, m), coeffs: (s,).
+    Unused slots carry zero shards and zero coefficients.
+    """
+    s = xs.shape[0]
+    grads = jnp.stack([linear_grad(xs[i], w, ys[i]) for i in range(s)])
+    return (coded_combine(grads, coeffs),)
+
+
+def mlp_worker_message(theta, xs, ys, coeffs, *, dims: MlpDims):
+    """Fused MLP worker round: per-shard (loss, grad) + coded combine.
+
+    Returns (losses (s,), message (flat_dim,)); the coordinator sums
+    only the losses of real (non-padded) tasks.
+    """
+    s = xs.shape[0]
+    losses = []
+    grads = []
+    for i in range(s):
+        loss, flat = mlp_partition_grad(theta, xs[i], ys[i], dims=dims)
+        losses.append(loss)
+        grads.append(flat)
+    return jnp.stack(losses), coded_combine(jnp.stack(grads), coeffs)

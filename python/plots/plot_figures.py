@@ -1,0 +1,110 @@
+"""Render the paper's Figures 2-5 from the CSVs `make figures` emits.
+
+Usage:  python python/plots/plot_figures.py [results_dir] [out_dir]
+
+Produces fig2.png .. fig5.png with the same panel layout as the paper
+(s = 5 left, s = 10 right; Fig. 5 one curve per delta). Pure plotting —
+all numbers come from the Rust harness.
+"""
+
+import csv
+import os
+import sys
+from collections import defaultdict
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+
+def load(path):
+    rows = []
+    with open(path) as f:
+        for row in csv.DictReader(f):
+            row["s"] = int(row["s"])
+            row["delta"] = float(row["delta"])
+            row["t"] = int(row["t"])
+            row["value"] = float(row["value"])
+            rows.append(row)
+    return rows
+
+
+def plot_error_vs_delta(rows, title, ylabel, out_path):
+    s_values = sorted({r["s"] for r in rows})
+    fig, axes = plt.subplots(1, len(s_values), figsize=(6 * len(s_values), 4.2))
+    if len(s_values) == 1:
+        axes = [axes]
+    for ax, s in zip(axes, s_values):
+        series = defaultdict(list)
+        for r in rows:
+            if r["s"] == s:
+                series[r["scheme"]].append((r["delta"], r["value"]))
+        for scheme, pts in sorted(series.items()):
+            pts.sort()
+            ax.plot([p[0] for p in pts], [p[1] for p in pts], marker="o", ms=3, label=scheme)
+        ax.set_xlabel(r"straggler fraction $\delta$")
+        ax.set_ylabel(ylabel)
+        ax.set_title(f"{title} (s={s})")
+        ax.legend(fontsize=8)
+        ax.grid(alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(out_path, dpi=130)
+    plt.close(fig)
+    print(f"wrote {out_path}")
+
+
+def plot_fig5(rows, out_path):
+    s_values = sorted({r["s"] for r in rows})
+    fig, axes = plt.subplots(1, len(s_values), figsize=(6 * len(s_values), 4.2))
+    if len(s_values) == 1:
+        axes = [axes]
+    for ax, s in zip(axes, s_values):
+        series = defaultdict(list)
+        for r in rows:
+            if r["s"] == s:
+                series[r["delta"]].append((r["t"], r["value"]))
+        for delta, pts in sorted(series.items()):
+            pts.sort()
+            ax.plot(
+                [p[0] for p in pts],
+                [p[1] for p in pts],
+                marker="o",
+                ms=3,
+                label=rf"$\delta$={delta:g}",
+            )
+        ax.set_xlabel("iteration t")
+        ax.set_ylabel(r"$\|u_t\|^2 / k$")
+        ax.set_title(f"algorithmic decoding error, BGC (s={s})")
+        ax.legend(fontsize=8)
+        ax.grid(alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(out_path, dpi=130)
+    plt.close(fig)
+    print(f"wrote {out_path}")
+
+
+def main():
+    results = sys.argv[1] if len(sys.argv) > 1 else "results"
+    out = sys.argv[2] if len(sys.argv) > 2 else results
+    os.makedirs(out, exist_ok=True)
+    specs = [
+        ("fig2.csv", "one-step decoding error", r"$\mathrm{err}_1(A)/k$", "fig2.png"),
+        ("fig3.csv", "optimal decoding error", r"$\mathrm{err}(A)/k$", "fig3.png"),
+        ("fig4.csv", "one-step vs optimal", "error / k", "fig4.png"),
+    ]
+    for csv_name, title, ylabel, png in specs:
+        path = os.path.join(results, csv_name)
+        if os.path.exists(path):
+            plot_error_vs_delta(load(path), title, ylabel, os.path.join(out, png))
+        else:
+            print(f"skip {csv_name} (not found; run `make figures`)")
+    f5 = os.path.join(results, "fig5.csv")
+    if os.path.exists(f5):
+        plot_fig5(load(f5), os.path.join(out, "fig5.png"))
+    else:
+        print("skip fig5.csv (not found)")
+
+
+if __name__ == "__main__":
+    main()

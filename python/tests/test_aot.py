@@ -1,0 +1,63 @@
+"""AOT pipeline tests: artifacts exist, are HLO text, shapes in manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import build_artifacts
+from compile.model import LinearDims, MlpDims
+
+LIN = LinearDims(m=8, d=16)
+MLP = MlpDims(m=8, d_in=8, d_hidden=16, d_out=4)
+S_MAX = 4
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = build_artifacts(str(out), LIN, MLP, S_MAX)
+    return out, manifest
+
+
+def test_all_artifacts_emitted(built):
+    out, manifest = built
+    expected = {
+        "grad_linear",
+        "grad_mlp",
+        "combine_linear",
+        "combine_mlp",
+        "msg_linear",
+        "msg_mlp",
+    }
+    assert set(manifest["artifacts"]) == expected
+    for meta in manifest["artifacts"].values():
+        path = out / meta["file"]
+        assert path.exists() and path.stat().st_size > 200
+
+
+def test_artifacts_are_hlo_text_not_proto(built):
+    out, manifest = built
+    for meta in manifest["artifacts"].values():
+        head = (out / meta["file"]).read_text()[:200]
+        assert "HloModule" in head  # text, parseable by HloModuleProto::from_text
+
+
+def test_manifest_shapes(built):
+    out, manifest = built
+    m = json.loads((out / "manifest.json").read_text())
+    assert m["linear"] == {"m": LIN.m, "d": LIN.d}
+    assert m["mlp"]["flat_dim"] == MLP.flat_dim
+    assert m["s_max"] == S_MAX
+    gl = m["artifacts"]["grad_linear"]["inputs"]
+    assert gl == [[LIN.m, LIN.d], [LIN.d], [LIN.m]]
+    cm = m["artifacts"]["combine_mlp"]["inputs"]
+    assert cm == [[S_MAX, MLP.flat_dim], [S_MAX]]
+
+
+def test_hlo_entry_returns_tuple(built):
+    # return_tuple=True => ROOT of entry computation is a tuple; the Rust
+    # side unconditionally unwraps with to_tuple().
+    out, manifest = built
+    text = (out / manifest["artifacts"]["grad_mlp"]["file"]).read_text()
+    assert "tuple(" in text or "ROOT" in text

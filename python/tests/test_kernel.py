@@ -1,0 +1,138 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes/seeds; every Pallas kernel must match ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import coded_combine, linear_grad, matmul
+from compile.kernels.ref import ref_coded_combine, ref_linear_grad, ref_matmul
+
+F32 = jnp.float32
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, F32)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- linear_grad
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    mt=st.integers(1, 6),  # m = mt * block_m
+    d=st.sampled_from([1, 3, 8, 32, 64]),
+    block_m=st.sampled_from([1, 2, 4, 8]),
+)
+def test_linear_grad_matches_ref(seed, mt, d, block_m):
+    m = mt * block_m
+    kx, kw, ky = _keys(seed, 3)
+    x, w, y = _rand(kx, m, d), _rand(kw, d), _rand(ky, m)
+    got = linear_grad(x, w, y, block_m=block_m)
+    np.testing.assert_allclose(got, ref_linear_grad(x, w, y), rtol=2e-4, atol=2e-5)
+
+
+def test_linear_grad_zero_weights():
+    kx, ky = _keys(0, 2)
+    x, y = _rand(kx, 16, 8), _rand(ky, 16)
+    got = linear_grad(x, jnp.zeros(8, F32), y)
+    np.testing.assert_allclose(got, -x.T @ y / 16, rtol=1e-5, atol=1e-6)
+
+
+def test_linear_grad_at_solution_is_zero():
+    # y = X w* exactly => gradient at w* is 0.
+    kx, kw = _keys(1, 2)
+    x, w = _rand(kx, 32, 8), _rand(kw, 8)
+    y = x @ w
+    got = linear_grad(x, w, y)
+    np.testing.assert_allclose(got, jnp.zeros(8), atol=1e-5)
+
+
+def test_linear_grad_rejects_bad_block():
+    kx, kw, ky = _keys(2, 3)
+    with pytest.raises(ValueError):
+        linear_grad(_rand(kx, 10, 4), _rand(kw, 4), _rand(ky, 10), block_m=3)
+
+
+# --------------------------------------------------------------------- matmul
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    mt=st.integers(1, 4),
+    nt=st.integers(1, 4),
+    kt=st.integers(1, 4),
+    blk=st.sampled_from([1, 2, 4, 8, 16]),
+)
+def test_matmul_matches_ref(seed, mt, nt, kt, blk):
+    m, n, k = mt * blk, nt * blk, kt * blk
+    ka, kb = _keys(seed, 2)
+    a, b = _rand(ka, m, k), _rand(kb, k, n)
+    got = matmul(a, b, block_m=blk, block_n=blk, block_k=blk)
+    np.testing.assert_allclose(got, ref_matmul(a, b), rtol=2e-4, atol=2e-5)
+
+
+def test_matmul_identity():
+    (ka,) = _keys(3, 1)
+    a = _rand(ka, 16, 16)
+    np.testing.assert_allclose(matmul(a, jnp.eye(16, dtype=F32)), a, rtol=1e-6)
+
+
+def test_matmul_contraction_mismatch():
+    ka, kb = _keys(4, 2)
+    with pytest.raises(ValueError):
+        matmul(_rand(ka, 8, 4), _rand(kb, 8, 8))
+
+
+def test_matmul_block_larger_than_dim_is_clamped():
+    ka, kb = _keys(5, 2)
+    a, b = _rand(ka, 4, 4), _rand(kb, 4, 4)
+    got = matmul(a, b, block_m=64, block_n=64, block_k=64)
+    np.testing.assert_allclose(got, a @ b, rtol=2e-4, atol=2e-5)
+
+
+# -------------------------------------------------------------- coded_combine
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s=st.integers(1, 12),
+    dt=st.integers(1, 6),
+    block_d=st.sampled_from([1, 2, 8, 32]),
+)
+def test_combine_matches_ref(seed, s, dt, block_d):
+    d = dt * block_d
+    kg, kc = _keys(seed, 2)
+    grads, coeffs = _rand(kg, s, d), _rand(kc, s)
+    got = coded_combine(grads, coeffs, block_d=block_d)
+    np.testing.assert_allclose(got, ref_coded_combine(grads, coeffs), rtol=2e-4, atol=2e-5)
+
+
+def test_combine_zero_coeffs_gives_zero():
+    (kg,) = _keys(6, 1)
+    grads = _rand(kg, 5, 64)
+    got = coded_combine(grads, jnp.zeros(5, F32))
+    np.testing.assert_allclose(got, jnp.zeros(64), atol=0)
+
+
+def test_combine_onehot_selects_row():
+    (kg,) = _keys(7, 1)
+    grads = _rand(kg, 5, 64)
+    c = jnp.zeros(5, F32).at[3].set(1.0)
+    np.testing.assert_allclose(coded_combine(grads, c), grads[3], rtol=1e-6)
+
+
+def test_combine_all_ones_is_sum():
+    # This is exactly the boolean-G worker message (FRC/BGC coefficients).
+    (kg,) = _keys(8, 1)
+    grads = _rand(kg, 7, 32)
+    got = coded_combine(grads, jnp.ones(7, F32), block_d=16)
+    np.testing.assert_allclose(got, grads.sum(axis=0), rtol=2e-4, atol=2e-5)

@@ -1,0 +1,103 @@
+"""Fused L2 worker-message modules vs composed oracle.
+
+msg_linear / msg_mlp fuse s partition gradients + the coded combine in
+one module (the §Perf optimization); they must equal the composition of
+the individual reference functions exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ref_coded_combine, ref_linear_grad
+from compile.model import (
+    MlpDims,
+    _unflatten,
+    linear_worker_message,
+    mlp_partition_grad,
+    mlp_worker_message,
+)
+
+F32 = jnp.float32
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, F32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s=st.integers(1, 6),
+    m=st.sampled_from([4, 8]),
+    d=st.sampled_from([4, 16]),
+)
+def test_linear_message_matches_composition(seed, s, m, d):
+    kw, kx, ky, kc = jax.random.split(jax.random.PRNGKey(seed), 4)
+    w = _rand(kw, d)
+    xs = _rand(kx, s, m, d)
+    ys = _rand(ky, s, m)
+    coeffs = _rand(kc, s)
+    (got,) = linear_worker_message(w, xs, ys, coeffs)
+    grads = jnp.stack([ref_linear_grad(xs[i], w, ys[i]) for i in range(s)])
+    want = ref_coded_combine(grads, coeffs)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_linear_message_zero_coeff_drops_shard():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    w = _rand(k1, 8)
+    xs = _rand(k2, 3, 4, 8)
+    ys = _rand(k3, 3, 4)
+    full = linear_worker_message(w, xs, ys, jnp.array([1.0, 0.0, 1.0], F32))[0]
+    # Replacing the dropped shard with garbage must not change the message.
+    xs2 = xs.at[1].set(99.0)
+    alt = linear_worker_message(w, xs2, ys, jnp.array([1.0, 0.0, 1.0], F32))[0]
+    np.testing.assert_allclose(full, alt, rtol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), s=st.integers(1, 4))
+def test_mlp_message_matches_composition(seed, s):
+    dims = MlpDims(m=4, d_in=4, d_hidden=6, d_out=2)
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    theta = 0.1 * _rand(k1, dims.flat_dim)
+    xs = _rand(k2, s, dims.m, dims.d_in)
+    ys = _rand(k3, s, dims.m, dims.d_out)
+    coeffs = _rand(k4, s)
+    losses, msg = mlp_worker_message(theta, xs, ys, coeffs, dims=dims)
+
+    ref_losses = []
+    grads = []
+    for i in range(s):
+        loss, flat = mlp_partition_grad(theta, xs[i], ys[i], dims=dims)
+        ref_losses.append(loss)
+        grads.append(flat)
+    np.testing.assert_allclose(losses, jnp.stack(ref_losses), rtol=1e-5)
+    want = ref_coded_combine(jnp.stack(grads), coeffs)
+    np.testing.assert_allclose(msg, want, rtol=2e-3, atol=2e-5)
+
+
+def test_mlp_message_losses_are_per_shard():
+    dims = MlpDims(m=4, d_in=3, d_hidden=4, d_out=2)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    theta = 0.1 * _rand(k1, dims.flat_dim)
+    xs = _rand(k2, 2, dims.m, dims.d_in)
+    ys = _rand(k3, 2, dims.m, dims.d_out)
+    losses, _ = mlp_worker_message(theta, xs, ys, jnp.ones(2, F32), dims=dims)
+    for i in range(2):
+        loss_i, _ = mlp_partition_grad(theta, xs[i], ys[i], dims=dims)
+        np.testing.assert_allclose(losses[i], loss_i, rtol=1e-6)
+
+
+def test_unflatten_used_by_message_path():
+    # Guard the parameter layout contract between python and rust
+    # (native.rs splits theta in the same w1|b1|w2|b2 order).
+    dims = MlpDims(m=2, d_in=2, d_hidden=3, d_out=2)
+    theta = jnp.arange(dims.flat_dim, dtype=F32)
+    w1, b1, w2, b2 = _unflatten(theta, dims)
+    assert float(w1[0, 0]) == 0.0
+    assert float(b1[0]) == dims.d_in * dims.d_hidden
+    assert float(w2[0, 0]) == dims.d_in * dims.d_hidden + dims.d_hidden
+    assert float(b2[-1]) == dims.flat_dim - 1

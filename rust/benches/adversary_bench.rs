@@ -1,0 +1,49 @@
+//! Bench for adversarial straggler selection (paper §4 / EXP-T10/T11):
+//! wall-time of each adversary and the objective it reaches, across
+//! codes and sizes. The paper claims the FRC attack is linear-time and
+//! general worst-case selection is NP-hard — so the block attack should
+//! be microseconds while the heuristics scale polynomially and still
+//! fall short of exhaustive.
+//!
+//! Run: `cargo bench --bench adversary_bench`.
+
+mod common;
+
+use gradcode::adversary::{
+    asp_objective, frc_worst_stragglers, greedy_stragglers, local_search_stragglers,
+};
+use gradcode::codes::Scheme;
+use gradcode::util::bench::black_box;
+use gradcode::util::Rng;
+
+fn main() {
+    let b = common::bencher();
+    let sizes: &[(usize, usize)] =
+        if common::quick() { &[(100, 10)] } else { &[(100, 10), (200, 10), (400, 20)] };
+
+    for &(k, s) in sizes {
+        let r = (k * 4) / 5;
+        let rho = k as f64 / (r as f64 * s as f64);
+        for scheme in [Scheme::Frc, Scheme::Bgc] {
+            let g = scheme.build(k, k, s).assignment(&mut Rng::new(1));
+            b.bench(&format!("adversary/block-attack/{}/k{k}", scheme.name()), || {
+                black_box(frc_worst_stragglers(&g, r))
+            });
+            b.bench(&format!("adversary/greedy/{}/k{k}", scheme.name()), || {
+                black_box(greedy_stragglers(&g, r, rho))
+            });
+            if k <= 200 {
+                b.bench(&format!("adversary/local-search/{}/k{k}", scheme.name()), || {
+                    black_box(local_search_stragglers(&g, r, rho, 2))
+                });
+            }
+            // Objective values reached (reported once, not timed).
+            let obj_block = asp_objective(&g, &frc_worst_stragglers(&g, r), rho);
+            let obj_greedy = asp_objective(&g, &greedy_stragglers(&g, r, rho), rho);
+            println!(
+                "objective {} k={k}: block-attack {obj_block:.3} greedy {obj_greedy:.3}",
+                scheme.name()
+            );
+        }
+    }
+}

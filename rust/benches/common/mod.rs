@@ -1,0 +1,40 @@
+#![allow(dead_code)] // each bench target uses a subset of these helpers
+
+//! Shared bench plumbing: trial budgets and CSV emission.
+//!
+//! All figure benches honor two env vars:
+//!   BENCH_TRIALS  — Monte-Carlo trials per point (default 300; the
+//!                   paper uses 5000 — set BENCH_TRIALS=5000 to match).
+//!   BENCH_QUICK   — =1 shrinks everything for CI smoke runs.
+
+use gradcode::sim::MonteCarlo;
+use gradcode::util::bench::Bencher;
+
+pub fn trials() -> usize {
+    if quick() {
+        60
+    } else {
+        std::env::var("BENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(300)
+    }
+}
+
+pub fn quick() -> bool {
+    gradcode::util::bench::quick_mode()
+}
+
+pub fn bencher() -> Bencher {
+    if quick() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    }
+}
+
+pub fn mc(seed: u64) -> MonteCarlo {
+    MonteCarlo::new(trials(), seed)
+}
+
+/// Print a figure/table banner so bench logs are self-describing.
+pub fn banner(name: &str, what: &str) {
+    println!("\n=== {name}: {what} (trials={}) ===", trials());
+}

@@ -1,0 +1,55 @@
+//! Decoder hot-path benchmarks — the §Perf targets for L3.
+//!
+//! * one-step decode: a single sparse pass; target >= 1e8 nnz/s.
+//! * optimal decode (LSQR): target << 1ms at the paper's k=100.
+//! * algorithmic iterates: per-iteration cost (2 sparse matvecs).
+//! * scaling in k at fixed density.
+//!
+//! Run: `cargo bench --bench decode_throughput`.
+
+mod common;
+
+use gradcode::codes::Scheme;
+use gradcode::decode::{algorithmic_error_curve, OneStepDecoder, OptimalDecoder, StepSize};
+use gradcode::linalg::spectral_norm;
+use gradcode::sim::figures::draw_non_straggler_matrix;
+use gradcode::util::bench::black_box;
+use gradcode::util::Rng;
+
+fn main() {
+    let b = common::bencher();
+
+    // Paper-sized instance.
+    let mut rng = Rng::new(1);
+    let a100 = draw_non_straggler_matrix(Scheme::Bgc, 100, 10, 80, &mut rng);
+    let nnz = a100.nnz() as u64;
+
+    b.bench_throughput("decode/one-step/k100 (nnz/s)", nnz, || {
+        black_box(OneStepDecoder::canonical(100, 80, 10).err1(&a100))
+    });
+    b.bench("decode/optimal-lsqr/k100", || black_box(OptimalDecoder::new().err(&a100)));
+    b.bench("decode/algorithmic-10-iters/k100", || {
+        let mut r = Rng::new(2);
+        black_box(algorithmic_error_curve(&a100, StepSize::Lemma17 { k: 100, r: 80, s: 10 }, 10, &mut r))
+    });
+    b.bench("decode/spectral-norm/k100", || {
+        let mut r = Rng::new(3);
+        black_box(spectral_norm(&a100, &mut r, 300, 1e-10))
+    });
+
+    // Scaling sweep in k at s = log2(k)-ish density.
+    let ks: &[usize] = if common::quick() { &[100, 400] } else { &[100, 400, 1600, 6400] };
+    for &k in ks {
+        let s = ((k as f64).log2().ceil() as usize).max(4);
+        let r = (k * 4) / 5;
+        let mut rng = Rng::new(k as u64);
+        let a = draw_non_straggler_matrix(Scheme::Bgc, k, s, r, &mut rng);
+        let nnz = a.nnz() as u64;
+        b.bench_throughput(&format!("decode/one-step/k{k} (nnz/s)"), nnz, || {
+            black_box(OneStepDecoder::canonical(k, r, s).err1(&a))
+        });
+        b.bench(&format!("decode/optimal-lsqr/k{k}"), || {
+            black_box(OptimalDecoder::new().err(&a))
+        });
+    }
+}

@@ -1,0 +1,89 @@
+//! End-to-end coordination benchmark (EXP-E2E §Perf): per-step wall
+//! time of the full coded training loop, split by backend, and the
+//! gather/decode overhead relative to worker compute. The paper's L3
+//! claim: coordination must not be the bottleneck.
+//!
+//! Run (after `make artifacts`): `cargo bench --bench e2e_training`.
+
+mod common;
+
+use gradcode::codes::Scheme;
+use gradcode::coordinator::{DecoderKind, ModelKind};
+use gradcode::runtime::{Backend, EnginePool, LinearDims, Manifest, MlpDims};
+use gradcode::stragglers::{DeadlinePolicy, LatencyModel};
+use gradcode::training::{train, TrainConfig};
+
+fn bench_backend(label: &str, backend: &Backend, steps: usize) {
+    for (scheme, decoder) in [
+        (Scheme::Frc, DecoderKind::OneStep),
+        (Scheme::Frc, DecoderKind::Optimal),
+        (Scheme::Bgc, DecoderKind::OneStep),
+    ] {
+        let k = 50;
+        let mut cfg = TrainConfig::new(scheme, k, 10, ModelKind::Mlp);
+        cfg.steps = steps;
+        cfg.lr = 1.0;
+        cfg.coordinator.seed = 3;
+        cfg.coordinator.latency = LatencyModel::Pareto { scale: 0.02, shape: 1.5 };
+        cfg.coordinator.deadline = DeadlinePolicy::FastestR(40);
+        let t0 = std::time::Instant::now();
+        let out = train(backend, &cfg).expect("train");
+        let per_step = t0.elapsed().as_secs_f64() / steps as f64;
+        println!(
+            "e2e/{label}/{}/{}: {:.2}ms/step (k={k}, final loss {:.4})",
+            scheme.name(),
+            decoder.name(),
+            per_step * 1e3,
+            out.history.final_loss()
+        );
+    }
+}
+
+fn main() {
+    let steps = if common::quick() { 3 } else { 10 };
+
+    let native = Backend::Native {
+        linear: LinearDims { m: 32, d: 64 },
+        mlp: MlpDims { m: 32, d_in: 32, d_hidden: 64, d_out: 16, flat_dim: 3152 },
+        s_max: 10,
+    };
+    bench_backend("native", &native, steps);
+
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => {
+            let engines = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+            let pool = EnginePool::start(m, engines).expect("pool");
+            let backend = Backend::Pjrt(pool.handle());
+            println!("pjrt engines: {engines}");
+            bench_backend("pjrt", &backend, steps);
+            bench_message_paths(&backend);
+        }
+        Err(e) => println!("SKIP pjrt e2e bench: {e} (run `make artifacts`)"),
+    }
+}
+
+/// §Perf before/after: per-worker message cost, fused (1 dispatch) vs
+/// per-task (s + 1 dispatches).
+fn bench_message_paths(backend: &Backend) {
+    use gradcode::coordinator::{compute_message_via, MessagePath, WorkerSpec};
+    use gradcode::training::MlpDataset;
+    use gradcode::util::Rng;
+
+    let b = common::bencher();
+    let dims = backend.mlp_dims();
+    let mut rng = Rng::new(9);
+    let ds = MlpDataset::generate(dims, 10, &mut rng);
+    let theta: Vec<f32> = (0..dims.flat_dim).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let spec = WorkerSpec {
+        id: 0,
+        tasks: (0..backend.s_max()).collect(),
+        coeffs: vec![1.0; backend.s_max()],
+    };
+    for (label, path) in
+        [("fused", MessagePath::Fused), ("per-task", MessagePath::PerTask)]
+    {
+        b.bench(&format!("e2e/worker-message/mlp/{label}"), || {
+            compute_message_via(backend, ModelKind::Mlp, &theta, &ds.shards, &spec, path).unwrap()
+        });
+    }
+}

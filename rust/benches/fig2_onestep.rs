@@ -1,0 +1,43 @@
+//! Bench + regeneration for paper Figure 2: average one-step decoding
+//! error err_1(A)/k vs straggler fraction δ for FRC / BGC / s-regular
+//! (k=100, s ∈ {5, 10}, ρ = k/(rs)).
+//!
+//! Run: `cargo bench --bench fig2_onestep` (BENCH_TRIALS=5000 for the
+//! paper's full protocol). Prints the CSV series + timing of the
+//! per-point Monte-Carlo pipeline.
+
+mod common;
+
+use gradcode::sim::figures::{draw_non_straggler_matrix, figure2, FigPoint, FigureConfig};
+use gradcode::codes::Scheme;
+use gradcode::decode::OneStepDecoder;
+use gradcode::util::bench::black_box;
+use gradcode::util::Rng;
+
+fn main() {
+    common::banner("fig2", "one-step error vs delta");
+    let cfg = FigureConfig { mc: common::mc(2017), ..FigureConfig::paper(common::trials(), 2017) };
+    let t0 = std::time::Instant::now();
+    let pts = figure2(&cfg);
+    let elapsed = t0.elapsed();
+    println!("{}", FigPoint::csv_header());
+    for p in &pts {
+        println!("{}", p.to_csv());
+    }
+    println!(
+        "fig2 total: {:.2}s for {} points ({} trials each)",
+        elapsed.as_secs_f64(),
+        pts.len(),
+        cfg.mc.trials
+    );
+
+    // Micro: cost of one trial per scheme (draw G + select + err1).
+    let b = common::bencher();
+    for scheme in [Scheme::Frc, Scheme::Bgc, Scheme::RegularGraph] {
+        let mut rng = Rng::new(1);
+        b.bench(&format!("fig2/trial/{}", scheme.name()), || {
+            let a = draw_non_straggler_matrix(scheme, 100, 10, 80, &mut rng);
+            black_box(OneStepDecoder::canonical(100, 80, 10).err1(&a))
+        });
+    }
+}

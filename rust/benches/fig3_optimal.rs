@@ -1,0 +1,41 @@
+//! Bench + regeneration for paper Figure 3: average optimal decoding
+//! error err(A)/k vs δ for FRC / BGC / s-regular (k=100, s ∈ {5, 10}).
+//!
+//! Run: `cargo bench --bench fig3_optimal` (BENCH_TRIALS=5000 for the
+//! full paper protocol).
+
+mod common;
+
+use gradcode::codes::Scheme;
+use gradcode::decode::OptimalDecoder;
+use gradcode::sim::figures::{draw_non_straggler_matrix, figure3, FigPoint, FigureConfig};
+use gradcode::util::bench::black_box;
+use gradcode::util::Rng;
+
+fn main() {
+    common::banner("fig3", "optimal error vs delta");
+    let cfg = FigureConfig { mc: common::mc(2017), ..FigureConfig::paper(common::trials(), 2017) };
+    let t0 = std::time::Instant::now();
+    let pts = figure3(&cfg);
+    let elapsed = t0.elapsed();
+    println!("{}", FigPoint::csv_header());
+    for p in &pts {
+        println!("{}", p.to_csv());
+    }
+    println!(
+        "fig3 total: {:.2}s for {} points ({} trials each)",
+        elapsed.as_secs_f64(),
+        pts.len(),
+        cfg.mc.trials
+    );
+
+    // Micro: LSQR decode cost per scheme at the paper's size.
+    let b = common::bencher();
+    for scheme in [Scheme::Frc, Scheme::Bgc, Scheme::RegularGraph] {
+        let mut rng = Rng::new(2);
+        let a = draw_non_straggler_matrix(scheme, 100, 10, 80, &mut rng);
+        b.bench(&format!("fig3/lsqr-decode/{}", scheme.name()), || {
+            black_box(OptimalDecoder::new().err(&a))
+        });
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench + regeneration for paper Figure 4: one-step vs optimal
+//! decoding error per scheme (six panels: {BGC, s-regular, FRC} ×
+//! s ∈ {5, 10}).
+//!
+//! Run: `cargo bench --bench fig4_compare`.
+
+mod common;
+
+use gradcode::sim::figures::{figure4, FigPoint, FigureConfig};
+
+fn main() {
+    common::banner("fig4", "one-step vs optimal per scheme");
+    let cfg = FigureConfig { mc: common::mc(2017), ..FigureConfig::paper(common::trials(), 2017) };
+    let t0 = std::time::Instant::now();
+    let pts = figure4(&cfg);
+    let elapsed = t0.elapsed();
+    println!("{}", FigPoint::csv_header());
+    for p in &pts {
+        println!("{}", p.to_csv());
+    }
+    println!(
+        "fig4 total: {:.2}s for {} points ({} trials each)",
+        elapsed.as_secs_f64(),
+        pts.len(),
+        cfg.mc.trials
+    );
+
+    // Headline check: the one-step/optimal gap per scheme at delta=0.5.
+    println!("\nfig4 gap summary (delta closest to 0.5, s=10):");
+    for scheme in ["FRC", "BGC", "s-regular"] {
+        let get = |dec: &str| {
+            pts.iter()
+                .filter(|p| p.scheme == format!("{scheme}/{dec}") && p.s == 10)
+                .min_by(|a, b| {
+                    (a.delta - 0.5).abs().partial_cmp(&(b.delta - 0.5).abs()).unwrap()
+                })
+                .map(|p| p.value)
+                .unwrap_or(f64::NAN)
+        };
+        let (one, opt) = (get("one-step"), get("optimal"));
+        println!("  {scheme:<10} one-step {one:.4}  optimal {opt:.4}  gap {:.1}x", one / opt.max(1e-12));
+    }
+}

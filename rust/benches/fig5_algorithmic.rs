@@ -1,0 +1,50 @@
+//! Bench + regeneration for paper Figure 5: algorithmic decoding error
+//! ||u_t||²/k of a BGC vs iteration t, for δ ∈ {0.1,...,0.8},
+//! s ∈ {5, 10}, ν = ||A||² (k = 100).
+//!
+//! Run: `cargo bench --bench fig5_algorithmic`.
+
+mod common;
+
+use gradcode::codes::Scheme;
+use gradcode::decode::{algorithmic_error_curve, StepSize};
+use gradcode::sim::figures::{draw_non_straggler_matrix, figure5, FigPoint, FigureConfig};
+use gradcode::util::bench::black_box;
+use gradcode::util::Rng;
+
+fn main() {
+    common::banner("fig5", "algorithmic error ||u_t||^2/k vs t (BGC)");
+    let cfg = FigureConfig { mc: common::mc(2017), ..FigureConfig::paper(common::trials(), 2017) };
+    let t_max = 15;
+    let t0 = std::time::Instant::now();
+    let pts = figure5(&cfg, t_max);
+    let elapsed = t0.elapsed();
+    println!("{}", FigPoint::csv_header());
+    for p in &pts {
+        println!("{}", p.to_csv());
+    }
+    println!(
+        "fig5 total: {:.2}s for {} points ({} trials each)",
+        elapsed.as_secs_f64(),
+        pts.len(),
+        cfg.mc.trials
+    );
+
+    // Micro: one curve evaluation (power iteration + t_max iterates).
+    let b = common::bencher();
+    let mut rng = Rng::new(3);
+    let a = draw_non_straggler_matrix(Scheme::Bgc, 100, 10, 80, &mut rng);
+    b.bench("fig5/curve-eval/spectral-nu", || {
+        let mut r = Rng::new(4);
+        black_box(algorithmic_error_curve(&a, StepSize::SpectralNormSq, t_max, &mut r))
+    });
+    b.bench("fig5/curve-eval/lemma17-nu", || {
+        let mut r = Rng::new(4);
+        black_box(algorithmic_error_curve(
+            &a,
+            StepSize::Lemma17 { k: 100, r: 80, s: 10 },
+            t_max,
+            &mut r,
+        ))
+    });
+}

@@ -1,0 +1,47 @@
+//! Bench + regeneration for the paper's closed-form results:
+//! Thm 5 / Thm 6 / Thm 8 / Thm 10 / Thm 11 / Thm 21 / Thm 24 —
+//! theorem-predicted vs Monte-Carlo-measured, as CSV rows.
+//!
+//! Run: `cargo bench --bench thm_tables`.
+
+mod common;
+
+use gradcode::codes::Scheme;
+use gradcode::sim::tables::{
+    thm10_table, thm11_table, thm21_table, thm5_table, thm6_table, thm8_table, TableRow,
+};
+
+fn main() {
+    let mc = common::mc(2017);
+    let (k, s) = (100usize, 10usize);
+    let deltas = [0.1, 0.25, 0.5, 0.75];
+
+    println!("{}", TableRow::csv_header());
+    let t0 = std::time::Instant::now();
+
+    for row in thm5_table(k, s, &deltas, &mc) {
+        println!("{}", row.to_csv());
+    }
+    for row in thm6_table(k, s, &deltas, &mc) {
+        println!("{}", row.to_csv());
+    }
+    for row in thm8_table(k, &[0, 1], &[0.1, 0.25], &mc) {
+        println!("{}", row.to_csv());
+    }
+    for row in thm10_table(k, s, &[25, 50, 75], &mc) {
+        println!("{}", row.to_csv());
+    }
+    for row in thm11_table(2017) {
+        println!("{}", row.to_csv());
+    }
+    let ks: &[usize] = if common::quick() { &[50, 100] } else { &[50, 100, 200] };
+    let s_of_k = |k: usize| ((k as f64).ln().ceil() as usize).max(2);
+    for row in thm21_table(Scheme::Bgc, ks, s_of_k, 0.25, &mc) {
+        println!("{}", row.to_csv());
+    }
+    for row in thm21_table(Scheme::Rbgc, ks, s_of_k, 0.25, &mc) {
+        println!("{}", row.to_csv());
+    }
+
+    println!("thm tables total: {:.2}s", t0.elapsed().as_secs_f64());
+}

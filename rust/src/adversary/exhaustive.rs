@@ -1,0 +1,94 @@
+//! Exhaustive adversary — the ground-truth worst case for tiny n.
+//!
+//! Enumerates all C(n, r) survivor sets. Exponential, so it is gated to
+//! n <= 24; used in tests and the thm11 table to measure the optimality
+//! gap of the polynomial heuristics (greedy / local search).
+
+use super::asp_objective;
+use crate::linalg::CscMatrix;
+
+/// Max n for which exhaustive enumeration is permitted.
+pub const MAX_N: usize = 24;
+
+/// The true worst-case survivor set and its objective value.
+pub fn exhaustive_worst_case(g: &CscMatrix, r: usize, rho: f64) -> (Vec<usize>, f64) {
+    let n = g.cols;
+    assert!(n <= MAX_N, "exhaustive adversary capped at n <= {MAX_N}");
+    assert!(r <= n && r >= 1);
+
+    let mut best_obj = f64::NEG_INFINITY;
+    let mut best: Vec<usize> = Vec::new();
+    // Iterate over all r-subsets via the "revolving door" of bitmasks.
+    let mut comb: Vec<usize> = (0..r).collect();
+    loop {
+        let obj = asp_objective(g, &comb, rho);
+        if obj > best_obj {
+            best_obj = obj;
+            best = comb.clone();
+        }
+        // Next combination in lexicographic order.
+        let mut i = r;
+        loop {
+            if i == 0 {
+                return (best, best_obj);
+            }
+            i -= 1;
+            if comb[i] != i + n - r {
+                break;
+            }
+        }
+        comb[i] += 1;
+        for j in i + 1..r {
+            comb[j] = comb[j - 1] + 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adversary::{greedy_stragglers, local_search_stragglers};
+    use crate::codes::{BernoulliCode, FractionalRepetitionCode, GradientCode};
+    use crate::util::Rng;
+
+    #[test]
+    fn finds_block_kill_on_tiny_frc() {
+        let (k, s, r) = (8usize, 2usize, 6usize);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let g = FractionalRepetitionCode::new(k, k, s).assignment(&mut Rng::new(1));
+        let (_best, obj) = exhaustive_worst_case(&g, r, rho);
+        // Killing one whole block leaves 2 tasks uncovered; each
+        // uncovered row contributes 1. Plus the kept-rows deviation from
+        // rho-scaling. Sanity: objective >= 2 (the uncovered rows).
+        assert!(obj >= 2.0 - 1e-9, "{obj}");
+    }
+
+    #[test]
+    fn upper_bounds_heuristics() {
+        let (k, s, r) = (12usize, 3usize, 8usize);
+        let rho = k as f64 / (r as f64 * s as f64);
+        for seed in 0..4 {
+            let g = BernoulliCode::new(k, k, s).assignment(&mut Rng::new(seed));
+            let (_, exact) = exhaustive_worst_case(&g, r, rho);
+            let greedy = asp_objective(&g, &greedy_stragglers(&g, r, rho), rho);
+            let ls = asp_objective(&g, &local_search_stragglers(&g, r, rho, 10), rho);
+            assert!(exact >= greedy - 1e-9, "exact {exact} < greedy {greedy}");
+            assert!(exact >= ls - 1e-9, "exact {exact} < local search {ls}");
+        }
+    }
+
+    #[test]
+    fn enumerates_all_subsets_r_equals_n() {
+        let g = BernoulliCode::new(6, 6, 2).assignment(&mut Rng::new(5));
+        let (best, obj) = exhaustive_worst_case(&g, 6, 0.5);
+        assert_eq!(best, (0..6).collect::<Vec<_>>());
+        assert!((obj - asp_objective(&g, &best, 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "capped")]
+    fn rejects_large_n() {
+        let g = BernoulliCode::new(30, 30, 2).assignment(&mut Rng::new(6));
+        exhaustive_worst_case(&g, 10, 1.0);
+    }
+}

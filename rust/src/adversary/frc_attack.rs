@@ -1,0 +1,132 @@
+//! The FRC block attack (paper §4.1, Thm 10).
+//!
+//! FRC columns come in k/s groups of identical columns. Killing all s
+//! copies of a group zeroes those s coordinates of the decode, adding s
+//! to err(A). The attack greedily kills ⌊(k-r)/s⌋ whole groups (plus a
+//! partial group with the leftover budget, which contributes nothing —
+//! it only wastes budget, which is why the adversary kills whole groups
+//! first). Works on any column-permuted FRC: groups are recovered by
+//! hashing column supports, O(k) expected time — matching the paper's
+//! "quadratic time with access to G only" bound with room to spare.
+
+use super::Adversary;
+use crate::linalg::CscMatrix;
+use std::collections::HashMap;
+
+/// Choose the r non-stragglers that maximize FRC decoding error:
+/// keep workers covering as few distinct blocks as possible.
+pub fn frc_worst_stragglers(g: &CscMatrix, r: usize) -> Vec<usize> {
+    assert!(r <= g.cols);
+    // Group columns by identical support (the FRC blocks).
+    let mut groups: HashMap<&[usize], Vec<usize>> = HashMap::new();
+    for j in 0..g.cols {
+        groups.entry(g.col_support(j)).or_default().push(j);
+    }
+    // Keep whole groups while budget lasts: every fully-kept group leaves
+    // err unchanged; every fully-killed group adds its block size.
+    let mut groups: Vec<Vec<usize>> = groups.into_values().collect();
+    // Deterministic order: by first column index.
+    groups.sort_by_key(|cols| cols[0]);
+
+    let mut survivors = Vec::with_capacity(r);
+    // Prefer to *fill* the survivor set with as few groups as possible,
+    // so the killed budget wipes out whole groups. Taking the largest
+    // groups first minimizes the number of partially-surviving groups.
+    groups.sort_by_key(|cols| std::cmp::Reverse(cols.len()));
+    for group in &groups {
+        if survivors.len() == r {
+            break;
+        }
+        let take = group.len().min(r - survivors.len());
+        survivors.extend_from_slice(&group[..take]);
+    }
+    survivors.sort_unstable();
+    survivors
+}
+
+/// Trait adapter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrcAttack;
+
+impl Adversary for FrcAttack {
+    fn worst_non_stragglers(&self, g: &CscMatrix, r: usize) -> Vec<usize> {
+        frc_worst_stragglers(g, r)
+    }
+
+    fn name(&self) -> &'static str {
+        "frc-block-attack"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{FractionalRepetitionCode, GradientCode};
+    use crate::decode::OptimalDecoder;
+    use crate::util::Rng;
+
+    #[test]
+    fn forces_err_equal_k_minus_r() {
+        // Thm 10: err(A) = k - r when s | (k - r).
+        let (k, s) = (20, 5);
+        let code = FractionalRepetitionCode::new(k, k, s);
+        let g = code.assignment(&mut Rng::new(1));
+        for r in [5, 10, 15] {
+            let ns = frc_worst_stragglers(&g, r);
+            assert_eq!(ns.len(), r);
+            let a = g.select_columns(&ns);
+            let err = OptimalDecoder::new().err(&a);
+            assert!(
+                (err - (k - r) as f64).abs() < 1e-8,
+                "r={r}: err {err} != {}",
+                k - r
+            );
+        }
+    }
+
+    #[test]
+    fn partial_budget_wastes_nothing_extra() {
+        // k=20, s=5, r=12: survivors fill 2 groups fully + 2 of a third;
+        // 1 group fully killed -> err = 5 = floor((k-r)/s)*s.
+        let (k, s, r) = (20usize, 5usize, 12usize);
+        let code = FractionalRepetitionCode::new(k, k, s);
+        let g = code.assignment(&mut Rng::new(2));
+        let ns = frc_worst_stragglers(&g, r);
+        let err = OptimalDecoder::new().err(&g.select_columns(&ns));
+        let expect = ((k - r) / s * s) as f64;
+        assert!((err - expect).abs() < 1e-8, "err {err} != {expect}");
+    }
+
+    #[test]
+    fn attack_survives_column_permutation() {
+        let (k, s, r) = (24usize, 4usize, 12usize);
+        let code = FractionalRepetitionCode::new(k, k, s);
+        let g = code.assignment(&mut Rng::new(3));
+        // Permute columns.
+        let mut rng = Rng::new(4);
+        let mut perm: Vec<usize> = (0..k).collect();
+        rng.shuffle(&mut perm);
+        let gp = g.select_columns(&perm);
+        let ns = frc_worst_stragglers(&gp, r);
+        let err = OptimalDecoder::new().err(&gp.select_columns(&ns));
+        assert!((err - (k - r) as f64).abs() < 1e-8, "err {err}");
+    }
+
+    #[test]
+    fn adversarial_much_worse_than_random_average() {
+        let (k, s, r) = (100usize, 10usize, 80usize);
+        let code = FractionalRepetitionCode::new(k, k, s);
+        let g = code.assignment(&mut Rng::new(5));
+        let adv_err = OptimalDecoder::new().err(&g.select_columns(&frc_worst_stragglers(&g, r)));
+        // Random straggler average (Thm 6): k * C(k-s, r-s)/C(k, r) ≈ tiny.
+        let mut rng = Rng::new(6);
+        let mut rand_err = 0.0;
+        for _ in 0..20 {
+            let idx = rng.sample_indices(k, r);
+            rand_err += OptimalDecoder::new().err(&g.select_columns(&idx));
+        }
+        rand_err /= 20.0;
+        assert!(adv_err >= 20.0 - 1e-9, "adv {adv_err}");
+        assert!(adv_err > 5.0 * (rand_err + 1e-12), "adv {adv_err} vs random {rand_err}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Greedy polynomial-time adversary for general codes.
+//!
+//! Since r-ASP is NP-hard (Thm 11), a realistic adversary is a greedy
+//! heuristic: start from all n workers surviving and repeatedly kill the
+//! worker whose removal most increases the one-step decoding error of
+//! the survivors. Incremental row-sum maintenance makes each sweep
+//! O(n · nnz/n) = O(nnz), total O((n-r) · n · s̄).
+
+use super::Adversary;
+use crate::linalg::CscMatrix;
+
+/// Greedily pick r survivors that (locally) maximize err_1.
+pub fn greedy_stragglers(g: &CscMatrix, r: usize, rho: f64) -> Vec<usize> {
+    assert!(r <= g.cols && r >= 1);
+    let k = g.rows;
+    let mut alive: Vec<bool> = vec![true; g.cols];
+    let mut alive_count = g.cols;
+
+    // row_sums of the surviving submatrix.
+    let mut sums = g.row_sums();
+    // Current objective: sum_i (rho * sums[i] - 1)^2 — maintained lazily
+    // per candidate via the delta of its column.
+    while alive_count > r {
+        let mut best_j = usize::MAX;
+        let mut best_delta = f64::NEG_INFINITY;
+        for j in 0..g.cols {
+            if !alive[j] {
+                continue;
+            }
+            // Removing column j changes rows in its support:
+            // delta = sum_{(i,v) in col j} [ (rho(sums_i - v) - 1)^2
+            //                                - (rho sums_i - 1)^2 ]
+            let mut delta = 0.0;
+            for (i, v) in g.col(j) {
+                let before = rho * sums[i] - 1.0;
+                let after = rho * (sums[i] - v) - 1.0;
+                delta += after * after - before * before;
+            }
+            if delta > best_delta {
+                best_delta = delta;
+                best_j = j;
+            }
+        }
+        debug_assert!(best_j != usize::MAX);
+        alive[best_j] = false;
+        alive_count -= 1;
+        for (i, v) in g.col(best_j) {
+            sums[i] -= v;
+        }
+        debug_assert!(sums.len() == k);
+    }
+    (0..g.cols).filter(|&j| alive[j]).collect()
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct GreedyAdversary {
+    pub rho: f64,
+}
+
+impl Adversary for GreedyAdversary {
+    fn worst_non_stragglers(&self, g: &CscMatrix, r: usize) -> Vec<usize> {
+        greedy_stragglers(g, r, self.rho)
+    }
+
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adversary::asp_objective;
+    use crate::codes::{BernoulliCode, FractionalRepetitionCode, GradientCode};
+    use crate::stragglers::{StragglerModel, UniformStragglers};
+    use crate::util::Rng;
+
+    #[test]
+    fn returns_exactly_r_sorted_survivors() {
+        let g = BernoulliCode::new(30, 30, 4).assignment(&mut Rng::new(1));
+        let ns = greedy_stragglers(&g, 18, 30.0 / (18.0 * 4.0));
+        assert_eq!(ns.len(), 18);
+        assert!(ns.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn beats_random_stragglers_on_average() {
+        let (k, s, r) = (40usize, 5usize, 28usize);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let g = BernoulliCode::new(k, k, s).assignment(&mut Rng::new(2));
+        let greedy_obj = asp_objective(&g, &greedy_stragglers(&g, r, rho), rho);
+        let mut rng = Rng::new(3);
+        let model = UniformStragglers::new(1.0 - r as f64 / k as f64);
+        let mut rand_obj = 0.0;
+        let trials = 50;
+        for _ in 0..trials {
+            rand_obj += asp_objective(&g, &model.non_stragglers(k, &mut rng), rho);
+        }
+        rand_obj /= trials as f64;
+        assert!(
+            greedy_obj > rand_obj,
+            "greedy {greedy_obj} should beat random {rand_obj}"
+        );
+    }
+
+    #[test]
+    fn recovers_block_attack_on_frc() {
+        // On FRC the greedy adversary should find (close to) the block
+        // attack's objective: killing whole blocks.
+        let (k, s, r) = (20usize, 4usize, 12usize);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let g = FractionalRepetitionCode::new(k, k, s).assignment(&mut Rng::new(4));
+        let greedy_obj = asp_objective(&g, &greedy_stragglers(&g, r, rho), rho);
+        let block_obj = asp_objective(
+            &g,
+            &crate::adversary::frc_worst_stragglers(&g, r),
+            rho,
+        );
+        assert!(
+            greedy_obj >= 0.8 * block_obj,
+            "greedy {greedy_obj} far below block attack {block_obj}"
+        );
+    }
+
+    #[test]
+    fn r_equals_n_removes_nothing() {
+        let g = BernoulliCode::new(10, 10, 2).assignment(&mut Rng::new(5));
+        let ns = greedy_stragglers(&g, 10, 1.0);
+        assert_eq!(ns, (0..10).collect::<Vec<_>>());
+    }
+}

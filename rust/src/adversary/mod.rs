@@ -1,0 +1,53 @@
+//! Adversarial straggler selection (paper §4).
+//!
+//! §4.1: against FRC an adversary kills whole task-blocks and forces
+//! err(A) = k - r in linear time (Thm 10). §4.2: for general codes the
+//! problem (r-ASP, Definition 4) is NP-hard via reduction from densest
+//! k-subgraph (Thm 11), so polynomial adversaries must use heuristics —
+//! we implement greedy removal, local search, and (for tiny n) an
+//! exhaustive oracle to measure how far the heuristics fall short.
+
+pub mod exhaustive;
+pub mod frc_attack;
+pub mod greedy;
+pub mod local_search;
+pub mod reduction;
+
+pub use exhaustive::exhaustive_worst_case;
+pub use frc_attack::frc_worst_stragglers;
+pub use greedy::greedy_stragglers;
+pub use local_search::local_search_stragglers;
+pub use reduction::{dks_to_asp, greedy_dks, objective_identity_gap, AspInstance};
+
+use crate::linalg::CscMatrix;
+
+/// The r-ASP objective (Definition 4): the one-step decoding error of
+/// the column submatrix selected by `non_stragglers`.
+pub fn asp_objective(g: &CscMatrix, non_stragglers: &[usize], rho: f64) -> f64 {
+    let a = g.select_columns(non_stragglers);
+    let sums = a.row_sums();
+    sums.iter().map(|&v| (rho * v - 1.0).powi(2)).sum()
+}
+
+/// An adversary proposes the non-straggler set that *maximizes* the
+/// decoding error (i.e. picks the worst r columns to survive).
+pub trait Adversary {
+    fn worst_non_stragglers(&self, g: &CscMatrix, r: usize) -> Vec<usize>;
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asp_objective_matches_onestep_error() {
+        use crate::decode::OneStepDecoder;
+        let g = CscMatrix::from_supports(4, vec![vec![0, 1], vec![2], vec![3], vec![0]]);
+        let ns = vec![0, 2];
+        let rho = 0.5;
+        let direct = asp_objective(&g, &ns, rho);
+        let via_decoder = OneStepDecoder::new(rho).err1(&g.select_columns(&ns));
+        assert!((direct - via_decoder).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,211 @@
+//! The DkS → r-ASP reduction (paper Thm 11): adversarial straggler
+//! selection is NP-hard.
+//!
+//! Given a d-regular graph (V, E), build C = [B | 0] where B is the
+//! |E| x |V| unsigned incidence matrix padded with |E| - |V| zero
+//! columns (C is square |E| x |E|, boolean, ≤ d nonzeros per column —
+//! note |E| = nd/2 for a simple d-regular graph; the paper's |E| = nd
+//! double-counts, the construction is otherwise unchanged). For
+//! ρ ∈ (0, 2/3) the r-ASP optimum on C with r = t + (|E| - n) selects
+//! exactly t incidence columns whose vertex set is the densest
+//! t-subgraph, because (eq. 4.2/4.3)
+//!
+//!   ||ρ C x - 1||^2 = 2ρ² e(S) + dρ² |S| - 2ρ d |S| + |E|.
+//!
+//! `objective_identity_gap` verifies that algebra numerically; the
+//! thm11 table + tests use it as the NP-hardness witness, and compare
+//! greedy-ASP against greedy-DkS on reduction instances.
+
+use crate::graph::Graph;
+use crate::linalg::CscMatrix;
+
+/// A reduction instance: the ASP matrix C plus provenance.
+#[derive(Clone, Debug)]
+pub struct AspInstance {
+    /// |E| x |E| boolean matrix [B | 0].
+    pub c: CscMatrix,
+    pub n_vertices: usize,
+    pub degree: usize,
+    pub num_edges: usize,
+}
+
+impl AspInstance {
+    /// The survivor budget r that makes t incidence columns optimal.
+    pub fn r_for_subset_size(&self, t: usize) -> usize {
+        t + (self.num_edges - self.n_vertices)
+    }
+
+    /// The survivor set encoding vertex subset S: S's incidence columns
+    /// plus all zero columns.
+    pub fn survivors_for_subset(&self, subset: &[usize]) -> Vec<usize> {
+        let mut cols: Vec<usize> = subset.to_vec();
+        cols.extend(self.n_vertices..self.num_edges);
+        cols.sort_unstable();
+        cols
+    }
+}
+
+/// Build the Thm-11 instance from a d-regular graph.
+pub fn dks_to_asp(g: &Graph, d: usize) -> AspInstance {
+    assert!(g.is_regular(d), "reduction requires a d-regular graph");
+    let n = g.n;
+    let m = n * d / 2; // |E|
+    assert!(m >= n, "need |E| >= |V| (d >= 2) to pad C square");
+
+    // Edge enumeration: (u, v) with u < v, in adjacency order.
+    let mut edge_id = std::collections::HashMap::new();
+    let mut next = 0usize;
+    for u in 0..n {
+        for &v in &g.adj[u] {
+            if u < v {
+                edge_id.insert((u, v), next);
+                next += 1;
+            }
+        }
+    }
+    assert_eq!(next, m);
+
+    // Column j < n: incidence of vertex j (rows = edges touching j).
+    // Column j >= n: zero.
+    let mut supports: Vec<Vec<usize>> = Vec::with_capacity(m);
+    for v in 0..n {
+        let rows: Vec<usize> = g.adj[v]
+            .iter()
+            .map(|&u| {
+                let key = (v.min(u), v.max(u));
+                edge_id[&key]
+            })
+            .collect();
+        supports.push(rows);
+    }
+    supports.resize(m, Vec::new());
+
+    AspInstance { c: CscMatrix::from_supports(m, supports), n_vertices: n, degree: d, num_edges: m }
+}
+
+/// | lhs - rhs | of eq. 4.2/4.3 for a given vertex subset:
+/// lhs = the actual one-step objective on the survivors encoding S,
+/// rhs = 2ρ² e(S) + dρ² |S| - 2ρ d |S| + |E|.
+pub fn objective_identity_gap(inst: &AspInstance, g: &Graph, subset: &[usize], rho: f64) -> f64 {
+    let survivors = inst.survivors_for_subset(subset);
+    let lhs = super::asp_objective(&inst.c, &survivors, rho);
+    let e_s = g.edges_within(subset) as f64;
+    let t = subset.len() as f64;
+    let d = inst.degree as f64;
+    let rhs = 2.0 * rho * rho * e_s + d * rho * rho * t - 2.0 * rho * d * t
+        + inst.num_edges as f64;
+    (lhs - rhs).abs()
+}
+
+/// Greedy densest-t-subgraph by min-degree peeling (the classic charikar
+/// style heuristic): repeatedly delete the vertex with the fewest edges
+/// into the surviving set until t vertices remain.
+pub fn greedy_dks(g: &Graph, t: usize) -> Vec<usize> {
+    assert!(t <= g.n && t >= 1);
+    let mut alive = vec![true; g.n];
+    let mut deg: Vec<usize> = (0..g.n).map(|v| g.degree(v)).collect();
+    let mut remaining = g.n;
+    while remaining > t {
+        let v = (0..g.n)
+            .filter(|&v| alive[v])
+            .min_by_key(|&v| deg[v])
+            .unwrap();
+        alive[v] = false;
+        remaining -= 1;
+        for &u in &g.adj[v] {
+            if alive[u] {
+                deg[u] -= 1;
+            }
+        }
+    }
+    (0..g.n).filter(|&v| alive[v]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random_regular_graph;
+    use crate::util::Rng;
+
+    #[test]
+    fn instance_shape_and_sparsity() {
+        let g = Graph::ring_lattice(10, 4);
+        let inst = dks_to_asp(&g, 4);
+        assert_eq!(inst.num_edges, 20);
+        assert_eq!(inst.c.rows, 20);
+        assert_eq!(inst.c.cols, 20);
+        // Incidence columns have exactly d entries; padding columns zero.
+        for v in 0..10 {
+            assert_eq!(inst.c.col_nnz(v), 4);
+        }
+        for j in 10..20 {
+            assert_eq!(inst.c.col_nnz(j), 0);
+        }
+        // Every edge row has exactly 2 incidences.
+        assert!(inst.c.row_degrees().iter().all(|&d| d == 2));
+    }
+
+    #[test]
+    fn objective_identity_holds_exactly() {
+        let mut rng = Rng::new(1);
+        let g = random_regular_graph(12, 4, &mut rng);
+        let inst = dks_to_asp(&g, 4);
+        for rho in [0.1, 0.3, 0.5, 0.65] {
+            for _ in 0..10 {
+                let t = 1 + rng.usize(12);
+                let subset = rng.sample_indices(12, t);
+                let gap = objective_identity_gap(&inst, &g, &subset, rho);
+                assert!(gap < 1e-9, "identity gap {gap} at rho={rho}, t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn denser_subsets_give_larger_objective() {
+        // At fixed |S|, the identity says the objective is increasing in
+        // e(S): the ASP adversary is hunting dense subgraphs.
+        let g = Graph::ring_lattice(12, 4);
+        let inst = dks_to_asp(&g, 4);
+        let rho = 0.5;
+        // Contiguous run on the ring (dense) vs spread-out (sparse).
+        let dense: Vec<usize> = (0..4).collect();
+        let sparse = vec![0, 3, 6, 9];
+        let dense_obj =
+            super::super::asp_objective(&inst.c, &inst.survivors_for_subset(&dense), rho);
+        let sparse_obj =
+            super::super::asp_objective(&inst.c, &inst.survivors_for_subset(&sparse), rho);
+        assert!(g.edges_within(&dense) > g.edges_within(&sparse));
+        assert!(dense_obj > sparse_obj, "{dense_obj} <= {sparse_obj}");
+    }
+
+    #[test]
+    fn greedy_dks_returns_t_vertices_preferring_density() {
+        let mut rng = Rng::new(2);
+        let g = random_regular_graph(20, 4, &mut rng);
+        let s = greedy_dks(&g, 8);
+        assert_eq!(s.len(), 8);
+        // Compare with mean density of random subsets.
+        let mut rand_edges = 0.0;
+        for _ in 0..50 {
+            rand_edges += g.edges_within(&rng.sample_indices(20, 8)) as f64;
+        }
+        rand_edges /= 50.0;
+        assert!(
+            g.edges_within(&s) as f64 >= rand_edges,
+            "greedy {} < random mean {rand_edges}",
+            g.edges_within(&s)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "d-regular")]
+    fn rejects_irregular_graph() {
+        let mut g = Graph::ring_lattice(8, 2);
+        g.adj[0].push(4);
+        g.adj[4].push(0);
+        for a in g.adj.iter_mut() {
+            a.sort_unstable();
+        }
+        dks_to_asp(&g, 2);
+    }
+}

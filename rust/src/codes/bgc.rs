@@ -1,0 +1,96 @@
+//! Bernoulli Gradient Code (paper §5).
+//!
+//! G_ij ~ Bernoulli(s/k) iid. Each worker computes s tasks in
+//! expectation; the randomness is the defence against polynomial-time
+//! adversaries (Thm 11: adversarial straggler selection is NP-hard in
+//! general), at the cost of a worse average-case error than FRC
+//! (Thm 21: err_1(A) <= C^2 k / ((1-δ) s) w.h.p. for s >= log k).
+
+use super::GradientCode;
+use crate::linalg::CscMatrix;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct BernoulliCode {
+    k: usize,
+    n: usize,
+    s: usize,
+}
+
+impl BernoulliCode {
+    pub fn new(k: usize, n: usize, s: usize) -> Self {
+        assert!(k >= 1 && n >= 1);
+        assert!(s >= 1 && s <= k, "need 1 <= s <= k");
+        BernoulliCode { k, n, s }
+    }
+
+    pub fn p(&self) -> f64 {
+        self.s as f64 / self.k as f64
+    }
+}
+
+impl GradientCode for BernoulliCode {
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn s(&self) -> usize {
+        self.s
+    }
+    fn name(&self) -> &'static str {
+        "BGC"
+    }
+
+    fn assignment(&self, rng: &mut Rng) -> CscMatrix {
+        let p = self.p();
+        let supports = (0..self.n)
+            .map(|_| (0..self.k).filter(|_| rng.bernoulli(p)).collect())
+            .collect();
+        CscMatrix::from_supports(self.k, supports)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_density_close_to_s_over_k() {
+        let code = BernoulliCode::new(100, 100, 10);
+        let mut rng = Rng::new(7);
+        let mut total = 0usize;
+        let draws = 50;
+        for _ in 0..draws {
+            total += code.assignment(&mut rng).nnz();
+        }
+        let mean_nnz = total as f64 / draws as f64;
+        // E[nnz] = k * n * s/k = n * s = 1000.
+        assert!((mean_nnz - 1000.0).abs() < 60.0, "mean nnz {mean_nnz}");
+    }
+
+    #[test]
+    fn boolean_and_dims() {
+        let code = BernoulliCode::new(50, 40, 5);
+        let g = code.assignment(&mut Rng::new(1));
+        assert_eq!((g.rows, g.cols), (50, 40));
+        assert!(g.is_boolean());
+    }
+
+    #[test]
+    fn different_draws_differ() {
+        let code = BernoulliCode::new(50, 50, 5);
+        let mut rng = Rng::new(2);
+        let a = code.assignment(&mut rng);
+        let b = code.assignment(&mut rng);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn s_equals_k_gives_full_matrix() {
+        let code = BernoulliCode::new(10, 5, 10);
+        let g = code.assignment(&mut Rng::new(3));
+        assert_eq!(g.nnz(), 50); // p = 1
+    }
+}

@@ -1,0 +1,122 @@
+//! Fractional Repetition Code (paper §3, construction from Tandon et
+//! al. [23]).
+//!
+//! G_frac is block-diagonal with k/s all-ones s x s blocks: the k tasks
+//! are split into k/s groups of s, and each group is replicated on s
+//! workers. Any surviving worker of a group recovers that group's s
+//! tasks exactly, which is why FRC's optimal decoding error is αs where
+//! α = number of groups whose workers all straggled (Thm 6-8) — and why
+//! an adversary that kills whole groups forces err = k - r (Thm 10).
+
+use super::GradientCode;
+use crate::linalg::CscMatrix;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct FractionalRepetitionCode {
+    k: usize,
+    n: usize,
+    s: usize,
+}
+
+impl FractionalRepetitionCode {
+    /// Requires n == k (the paper's setting) and s | k.
+    pub fn new(k: usize, n: usize, s: usize) -> Self {
+        assert_eq!(k, n, "FRC requires n == k (paper §3)");
+        assert!(s >= 1 && s <= k, "need 1 <= s <= k");
+        assert_eq!(k % s, 0, "FRC requires s | k (paper assumes s divides k)");
+        FractionalRepetitionCode { k, n, s }
+    }
+
+    /// The block (task-group) index of worker/column j.
+    pub fn block_of_column(&self, j: usize) -> usize {
+        j / self.s
+    }
+
+    /// The s task indices of block b.
+    pub fn block_tasks(&self, b: usize) -> std::ops::Range<usize> {
+        b * self.s..(b + 1) * self.s
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.k / self.s
+    }
+}
+
+impl GradientCode for FractionalRepetitionCode {
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn s(&self) -> usize {
+        self.s
+    }
+    fn name(&self) -> &'static str {
+        "FRC"
+    }
+
+    fn assignment(&self, _rng: &mut Rng) -> CscMatrix {
+        let supports = (0..self.n)
+            .map(|j| self.block_tasks(self.block_of_column(j)).collect())
+            .collect();
+        CscMatrix::from_supports(self.k, supports)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_diagonal_structure() {
+        let code = FractionalRepetitionCode::new(6, 6, 2);
+        let g = code.assignment(&mut Rng::new(0)).to_dense();
+        for i in 0..6 {
+            for j in 0..6 {
+                let expect = if i / 2 == j / 2 { 1.0 } else { 0.0 };
+                assert_eq!(g[(i, j)], expect, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn every_column_has_s_entries() {
+        let code = FractionalRepetitionCode::new(100, 100, 10);
+        let g = code.assignment(&mut Rng::new(0));
+        for j in 0..100 {
+            assert_eq!(g.col_nnz(j), 10);
+        }
+        assert_eq!(g.nnz(), 1000);
+    }
+
+    #[test]
+    fn every_task_replicated_s_times() {
+        let code = FractionalRepetitionCode::new(20, 20, 5);
+        let g = code.assignment(&mut Rng::new(0));
+        assert!(g.row_degrees().iter().all(|&d| d == 5));
+    }
+
+    #[test]
+    fn columns_in_same_block_are_identical() {
+        let code = FractionalRepetitionCode::new(12, 12, 3);
+        let g = code.assignment(&mut Rng::new(0));
+        for j in 0..12 {
+            let b = code.block_of_column(j);
+            assert_eq!(g.col_support(j), (b * 3..(b + 1) * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "s | k")]
+    fn indivisible_s_panics() {
+        FractionalRepetitionCode::new(10, 10, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "n == k")]
+    fn wrong_n_panics() {
+        FractionalRepetitionCode::new(10, 12, 2);
+    }
+}

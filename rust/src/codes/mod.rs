@@ -1,0 +1,113 @@
+//! Gradient codes: assignment matrices G (paper §2.2).
+//!
+//! A code is a k x n matrix G whose column j lists the tasks assigned to
+//! worker j (support) and the coefficients of the linear combination the
+//! worker returns. All the paper's codes are boolean; the trait allows
+//! weighted codes too.
+
+pub mod bgc;
+pub mod cyclic;
+pub mod frc;
+pub mod normalized;
+pub mod rbgc;
+pub mod regular_code;
+
+pub use bgc::BernoulliCode;
+pub use normalized::{normalize_columns, normalized_rho, NormalizedCode};
+pub use cyclic::CyclicRepetitionCode;
+pub use frc::FractionalRepetitionCode;
+pub use rbgc::RegularizedBernoulliCode;
+pub use regular_code::RegularGraphCode;
+
+use crate::linalg::CscMatrix;
+use crate::util::Rng;
+
+/// A gradient-code construction.
+pub trait GradientCode {
+    /// Number of tasks / functions k.
+    fn k(&self) -> usize;
+    /// Number of workers n.
+    fn n(&self) -> usize;
+    /// Target per-worker tasks s (exact or in expectation, per scheme).
+    fn s(&self) -> usize;
+    /// Human-readable scheme name (used in figure/table output).
+    fn name(&self) -> &'static str;
+    /// Build the k x n assignment matrix. Randomized schemes draw from
+    /// `rng`; deterministic schemes ignore it.
+    fn assignment(&self, rng: &mut Rng) -> CscMatrix;
+}
+
+/// The schemes compared in the paper's §6 simulations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Frc,
+    Bgc,
+    Rbgc,
+    RegularGraph,
+    Cyclic,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s.to_ascii_lowercase().as_str() {
+            "frc" => Some(Scheme::Frc),
+            "bgc" => Some(Scheme::Bgc),
+            "rbgc" => Some(Scheme::Rbgc),
+            "regular" | "sregular" | "s-regular" | "expander" => Some(Scheme::RegularGraph),
+            "cyclic" => Some(Scheme::Cyclic),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Frc => "FRC",
+            Scheme::Bgc => "BGC",
+            Scheme::Rbgc => "rBGC",
+            Scheme::RegularGraph => "s-regular",
+            Scheme::Cyclic => "cyclic",
+        }
+    }
+
+    /// Instantiate the scheme at (k, n, s).
+    pub fn build(&self, k: usize, n: usize, s: usize) -> Box<dyn GradientCode + Send + Sync> {
+        match self {
+            Scheme::Frc => Box::new(FractionalRepetitionCode::new(k, n, s)),
+            Scheme::Bgc => Box::new(BernoulliCode::new(k, n, s)),
+            Scheme::Rbgc => Box::new(RegularizedBernoulliCode::new(k, n, s)),
+            Scheme::RegularGraph => Box::new(RegularGraphCode::new(k, n, s)),
+            Scheme::Cyclic => Box::new(CyclicRepetitionCode::new(k, n, s)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for (txt, want) in [
+            ("frc", Scheme::Frc),
+            ("BGC", Scheme::Bgc),
+            ("rbgc", Scheme::Rbgc),
+            ("expander", Scheme::RegularGraph),
+            ("s-regular", Scheme::RegularGraph),
+            ("cyclic", Scheme::Cyclic),
+        ] {
+            assert_eq!(Scheme::parse(txt), Some(want));
+        }
+        assert_eq!(Scheme::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_produces_right_dims() {
+        let mut rng = Rng::new(1);
+        for scheme in [Scheme::Frc, Scheme::Bgc, Scheme::Rbgc, Scheme::RegularGraph, Scheme::Cyclic] {
+            let code = scheme.build(20, 20, 5);
+            let g = code.assignment(&mut rng);
+            assert_eq!(g.rows, 20, "{}", scheme.name());
+            assert_eq!(g.cols, 20, "{}", scheme.name());
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Coefficient-normalized code wrapper — weighted gradient codes.
+//!
+//! The paper's codes are boolean, but its framework (§2.2) allows any
+//! coefficients in G's columns. Normalizing each column by its degree
+//! (entries 1/deg instead of 1) makes every worker send the *average*
+//! of its task gradients. Two findings the ablation documents:
+//!
+//! * optimal decoding is INVARIANT to column scaling (the span of A is
+//!   unchanged) — normalization is free under Algorithm 2;
+//! * one-step decoding does NOT improve for BGC: the error is dominated
+//!   by row-coverage randomness (which tasks get hit), not by column-
+//!   degree variance, so averaging the degrees away buys nothing.
+
+use super::GradientCode;
+use crate::linalg::CscMatrix;
+use crate::util::Rng;
+
+/// Wraps any code, rescaling each column to sum to 1.
+pub struct NormalizedCode<C: GradientCode> {
+    pub inner: C,
+}
+
+impl<C: GradientCode> NormalizedCode<C> {
+    pub fn new(inner: C) -> Self {
+        NormalizedCode { inner }
+    }
+}
+
+impl<C: GradientCode> GradientCode for NormalizedCode<C> {
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+    fn s(&self) -> usize {
+        self.inner.s()
+    }
+    fn name(&self) -> &'static str {
+        "normalized"
+    }
+
+    fn assignment(&self, rng: &mut Rng) -> CscMatrix {
+        normalize_columns(&self.inner.assignment(rng))
+    }
+}
+
+/// Rescale every column of G so its entries sum to 1 (zero columns are
+/// left untouched).
+pub fn normalize_columns(g: &CscMatrix) -> CscMatrix {
+    let cols = (0..g.cols)
+        .map(|j| {
+            let col: Vec<(usize, f64)> = g.col(j).collect();
+            let total: f64 = col.iter().map(|&(_, v)| v).sum();
+            if total == 0.0 {
+                col
+            } else {
+                col.into_iter().map(|(i, v)| (i, v / total)).collect()
+            }
+        })
+        .collect();
+    CscMatrix::from_columns(g.rows, cols)
+}
+
+/// The matching one-step ρ for a normalized code: each surviving column
+/// contributes mass 1 spread over its tasks, so the expected row sum is
+/// r/k and exact reconstruction needs ρ = k/r.
+pub fn normalized_rho(k: usize, r: usize) -> f64 {
+    k as f64 / r as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{BernoulliCode, FractionalRepetitionCode};
+    use crate::decode::OneStepDecoder;
+
+    #[test]
+    fn columns_sum_to_one() {
+        let g = BernoulliCode::new(30, 30, 5).assignment(&mut Rng::new(1));
+        let gn = normalize_columns(&g);
+        for j in 0..gn.cols {
+            let total: f64 = gn.col(j).map(|(_, v)| v).sum();
+            if gn.col_nnz(j) > 0 {
+                assert!((total - 1.0).abs() < 1e-12, "col {j} sums to {total}");
+            }
+        }
+    }
+
+    #[test]
+    fn normalized_frc_is_exact_with_full_response() {
+        let code = NormalizedCode::new(FractionalRepetitionCode::new(12, 12, 3));
+        let g = code.assignment(&mut Rng::new(2));
+        // All workers respond: rho = k/r = 1.
+        let err = OneStepDecoder::new(normalized_rho(12, 12)).err1(&g);
+        assert!(err < 1e-12, "{err}");
+    }
+
+    #[test]
+    fn normalization_preserves_optimal_error() {
+        // Column scaling never changes span(A): err(A) is invariant.
+        use crate::decode::OptimalDecoder;
+        let (k, s, r) = (30usize, 5usize, 20usize);
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let g = BernoulliCode::new(k, k, s).assignment(&mut rng);
+            let a = g.select_columns(&rng.sample_indices(k, r));
+            let raw = OptimalDecoder::new().err(&a);
+            let norm = OptimalDecoder::new().err(&normalize_columns(&a));
+            assert!((raw - norm).abs() < 1e-6 * (1.0 + raw), "{raw} vs {norm}");
+        }
+    }
+
+    #[test]
+    fn normalization_does_not_help_bgc_onestep() {
+        // The documented negative result: coverage noise dominates, so
+        // normalized one-step error stays within the same regime as
+        // boolean (and empirically slightly above it).
+        let (k, s, r) = (60usize, 6usize, 45usize);
+        let mut rng = Rng::new(3);
+        let mut raw_total = 0.0;
+        let mut norm_total = 0.0;
+        for _ in 0..40 {
+            let g = BernoulliCode::new(k, k, s).assignment(&mut rng);
+            let idx = rng.sample_indices(k, r);
+            let a = g.select_columns(&idx);
+            raw_total += OneStepDecoder::canonical(k, r, s).err1(&a);
+            let an = normalize_columns(&a);
+            norm_total += OneStepDecoder::new(normalized_rho(k, r)).err1(&an);
+        }
+        let ratio = norm_total / raw_total;
+        assert!(
+            (0.8..2.5).contains(&ratio),
+            "normalized/boolean ratio {ratio} left the expected regime"
+        );
+    }
+
+    #[test]
+    fn zero_columns_survive_normalization() {
+        let g = CscMatrix::from_supports(4, vec![vec![0, 1], vec![]]);
+        let gn = normalize_columns(&g);
+        assert_eq!(gn.col_nnz(1), 0);
+        assert_eq!(gn.cols, 2);
+    }
+}

@@ -1,0 +1,126 @@
+//! Regularized Bernoulli Gradient Code (paper §5.3, Algorithm 3).
+//!
+//! Start from BGC; any column with more than 2s entries is thinned by
+//! removing random edges until it has exactly s. This caps per-worker
+//! load at 2s and — per Le-Levina-Vershynin regularization (Thm 22) —
+//! restores spectral concentration for s < log k, giving the Thm 24
+//! bound err_1(A') <= C^2 α^3 k / ((1-δ) s) for ALL s >= 1.
+
+use super::GradientCode;
+use crate::linalg::CscMatrix;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RegularizedBernoulliCode {
+    k: usize,
+    n: usize,
+    s: usize,
+}
+
+impl RegularizedBernoulliCode {
+    pub fn new(k: usize, n: usize, s: usize) -> Self {
+        assert!(k >= 1 && n >= 1);
+        assert!(s >= 1 && s <= k, "need 1 <= s <= k");
+        RegularizedBernoulliCode { k, n, s }
+    }
+}
+
+impl GradientCode for RegularizedBernoulliCode {
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn s(&self) -> usize {
+        self.s
+    }
+    fn name(&self) -> &'static str {
+        "rBGC"
+    }
+
+    /// Algorithm 3: Bernoulli(s/k) entries, then for every column with
+    /// degree d > 2s remove random edges until d == s.
+    fn assignment(&self, rng: &mut Rng) -> CscMatrix {
+        let p = self.s as f64 / self.k as f64;
+        let supports = (0..self.n)
+            .map(|_| {
+                let mut col: Vec<usize> = (0..self.k).filter(|_| rng.bernoulli(p)).collect();
+                if col.len() > 2 * self.s {
+                    // Remove random edges until degree s (paper's loop
+                    // runs `while d > s`, i.e. thins all the way to s).
+                    while col.len() > self.s {
+                        let idx = rng.usize(col.len());
+                        col.swap_remove(idx);
+                    }
+                    col.sort_unstable();
+                }
+                col
+            })
+            .collect();
+        CscMatrix::from_supports(self.k, supports)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::GradientCode;
+
+    #[test]
+    fn max_degree_is_at_most_2s() {
+        // With s=2, k=20 collisions are common enough to exercise the
+        // thinning branch over many draws.
+        let code = RegularizedBernoulliCode::new(20, 20, 2);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let g = code.assignment(&mut rng);
+            for j in 0..g.cols {
+                assert!(g.col_nnz(j) <= 4, "col degree {} > 2s", g.col_nnz(j));
+            }
+        }
+    }
+
+    #[test]
+    fn thinned_columns_have_exactly_s() {
+        // Force thinning: s=1, k=4 -> p=0.25, degree>2 happens often.
+        let code = RegularizedBernoulliCode::new(4, 50, 1);
+        let mut rng = Rng::new(2);
+        let mut saw_thinned = false;
+        for _ in 0..100 {
+            let g = code.assignment(&mut rng);
+            for j in 0..g.cols {
+                let d = g.col_nnz(j);
+                assert!(d <= 2, "col degree {d} > 2s=2");
+                if d == 1 {
+                    saw_thinned = true;
+                }
+            }
+        }
+        assert!(saw_thinned);
+    }
+
+    #[test]
+    fn untouched_columns_match_bernoulli_distribution() {
+        // Mean degree should stay ~s (slightly below due to thinning).
+        let code = RegularizedBernoulliCode::new(100, 100, 5);
+        let mut rng = Rng::new(3);
+        let mut total = 0usize;
+        for _ in 0..30 {
+            total += code.assignment(&mut rng).nnz();
+        }
+        let mean_deg = total as f64 / (30.0 * 100.0);
+        assert!((mean_deg - 5.0).abs() < 0.5, "mean degree {mean_deg}");
+    }
+
+    #[test]
+    fn supports_are_sorted_and_distinct() {
+        let code = RegularizedBernoulliCode::new(10, 30, 1);
+        let mut rng = Rng::new(4);
+        let g = code.assignment(&mut rng);
+        for j in 0..g.cols {
+            let sup = g.col_support(j);
+            assert!(sup.windows(2).all(|w| w[0] < w[1]), "col {j} not strictly sorted");
+        }
+    }
+}

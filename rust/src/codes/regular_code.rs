@@ -1,0 +1,80 @@
+//! s-regular graph code (the expander baseline of Raviv et al. [20],
+//! paper §6): G is the adjacency matrix of a random s-regular graph on
+//! k vertices. Random regular graphs are near-Ramanujan w.h.p. [15], so
+//! this is the paper's practical stand-in for explicit Ramanujan
+//! constructions (which are "notoriously tricky to compute").
+
+use super::GradientCode;
+use crate::graph::random_regular_graph;
+use crate::linalg::CscMatrix;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RegularGraphCode {
+    k: usize,
+    n: usize,
+    s: usize,
+}
+
+impl RegularGraphCode {
+    /// Requires n == k (G is a square adjacency matrix) and k*s even.
+    pub fn new(k: usize, n: usize, s: usize) -> Self {
+        assert_eq!(k, n, "regular-graph code requires n == k (adjacency matrix)");
+        assert!(s >= 1 && s < k, "need 1 <= s < k");
+        assert!(k * s % 2 == 0, "k*s must be even for an s-regular graph");
+        RegularGraphCode { k, n, s }
+    }
+}
+
+impl GradientCode for RegularGraphCode {
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn s(&self) -> usize {
+        self.s
+    }
+    fn name(&self) -> &'static str {
+        "s-regular"
+    }
+
+    fn assignment(&self, rng: &mut Rng) -> CscMatrix {
+        let g = random_regular_graph(self.k, self.s, rng);
+        CscMatrix::from_supports(self.k, g.adj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_s_regular_both_ways() {
+        let code = RegularGraphCode::new(50, 50, 6);
+        let g = code.assignment(&mut Rng::new(1));
+        for j in 0..50 {
+            assert_eq!(g.col_nnz(j), 6);
+        }
+        assert!(g.row_degrees().iter().all(|&d| d == 6));
+    }
+
+    #[test]
+    fn assignment_is_symmetric() {
+        let code = RegularGraphCode::new(30, 30, 4);
+        let g = code.assignment(&mut Rng::new(2)).to_dense();
+        for i in 0..30 {
+            for j in 0..30 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+            assert_eq!(g[(i, i)], 0.0, "self-loop at {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn odd_ks_panics() {
+        RegularGraphCode::new(25, 25, 5);
+    }
+}

@@ -1,0 +1,80 @@
+//! Coordinator configuration.
+
+use crate::codes::Scheme;
+use crate::stragglers::{DeadlinePolicy, LatencyModel};
+
+/// Which decoder the master runs on the survivor matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecoderKind {
+    /// Algorithm 1 with ρ = k/(rs): O(nnz), streamable.
+    OneStep,
+    /// Algorithm 2 via LSQR: minimizes ||A x - 1_k||².
+    Optimal,
+}
+
+impl DecoderKind {
+    pub fn parse(s: &str) -> Option<DecoderKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "onestep" | "one-step" | "1step" => Some(DecoderKind::OneStep),
+            "optimal" | "lsqr" => Some(DecoderKind::Optimal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecoderKind::OneStep => "one-step",
+            DecoderKind::Optimal => "optimal",
+        }
+    }
+}
+
+/// Full coordinator setup for a training run.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub scheme: Scheme,
+    /// Tasks (= data shards) k; also n (workers) for the paper's codes.
+    pub k: usize,
+    /// Tasks per worker s.
+    pub s: usize,
+    pub decoder: DecoderKind,
+    pub latency: LatencyModel,
+    pub deadline: DeadlinePolicy,
+    pub seed: u64,
+    /// Worker-compute parallelism (OS threads submitting to the pool).
+    pub threads: usize,
+}
+
+impl CoordinatorConfig {
+    pub fn new(scheme: Scheme, k: usize, s: usize) -> Self {
+        CoordinatorConfig {
+            scheme,
+            k,
+            s,
+            decoder: DecoderKind::OneStep,
+            latency: LatencyModel::ShiftedExp { base: 0.05, rate: 10.0 },
+            deadline: DeadlinePolicy::FastestR((k * 4) / 5),
+            seed: 0,
+            threads: crate::util::parallel::default_threads(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decoder_parse() {
+        assert_eq!(DecoderKind::parse("onestep"), Some(DecoderKind::OneStep));
+        assert_eq!(DecoderKind::parse("LSQR"), Some(DecoderKind::Optimal));
+        assert_eq!(DecoderKind::parse("x"), None);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = CoordinatorConfig::new(Scheme::Frc, 100, 10);
+        assert_eq!(c.k, 100);
+        assert!(matches!(c.deadline, crate::stragglers::DeadlinePolicy::FastestR(80)));
+    }
+}

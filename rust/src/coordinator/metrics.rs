@@ -1,0 +1,101 @@
+//! Per-round metrics and training history (CSV-dumpable).
+
+/// One training round's observability record.
+#[derive(Clone, Debug, Default)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// Training loss (model-dependent: exact for linear, mean worker
+    /// loss for MLP).
+    pub loss: f64,
+    /// Decoding error ||A x - 1_k||² of the round's survivor matrix.
+    pub decode_err: f64,
+    /// Survivor count r.
+    pub survivors: usize,
+    /// Virtual gather time (when the deadline fired), seconds.
+    pub gather_time: f64,
+    /// Wall-clock compute+coordination time, seconds.
+    pub wall_time: f64,
+}
+
+impl RoundMetrics {
+    pub fn csv_header() -> &'static str {
+        "round,loss,decode_err,survivors,gather_time,wall_time"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{:.6e},{:.6e},{},{:.6},{:.6}",
+            self.round, self.loss, self.decode_err, self.survivors, self.gather_time, self.wall_time
+        )
+    }
+}
+
+/// A whole run's history plus summary statistics.
+#[derive(Clone, Debug, Default)]
+pub struct TrainingHistory {
+    pub rounds: Vec<RoundMetrics>,
+}
+
+impl TrainingHistory {
+    pub fn push(&mut self, m: RoundMetrics) {
+        self.rounds.push(m);
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.rounds.last().map(|m| m.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn mean_decode_err(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return f64::NAN;
+        }
+        self.rounds.iter().map(|m| m.decode_err).sum::<f64>() / self.rounds.len() as f64
+    }
+
+    pub fn total_gather_time(&self) -> f64 {
+        self.rounds.iter().map(|m| m.gather_time).sum()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(RoundMetrics::csv_header());
+        out.push('\n');
+        for m in &self.rounds {
+            out.push_str(&m.to_csv());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_summaries() {
+        let mut h = TrainingHistory::default();
+        for i in 0..3 {
+            h.push(RoundMetrics {
+                round: i,
+                loss: 10.0 - i as f64,
+                decode_err: i as f64,
+                survivors: 8,
+                gather_time: 0.5,
+                wall_time: 0.1,
+            });
+        }
+        assert_eq!(h.final_loss(), 8.0);
+        assert_eq!(h.mean_decode_err(), 1.0);
+        assert!((h.total_gather_time() - 1.5).abs() < 1e-12);
+        let csv = h.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("round,"));
+    }
+
+    #[test]
+    fn empty_history_is_nan() {
+        let h = TrainingHistory::default();
+        assert!(h.final_loss().is_nan());
+        assert!(h.mean_decode_err().is_nan());
+    }
+}

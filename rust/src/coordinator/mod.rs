@@ -1,0 +1,21 @@
+//! L3 coordinator — the paper's system layer.
+//!
+//! The master assigns tasks via a gradient code G, broadcasts the model,
+//! gathers coded messages until the deadline policy fires, decodes the
+//! surviving columns (one-step or optimal), and emits the gradient-sum
+//! estimate plus round metrics. Workers are logical entities whose
+//! compute runs on the PJRT engine pool ([`crate::runtime`]) and whose
+//! completion times come from a latency model ([`crate::stragglers`]).
+
+pub mod config;
+pub mod master;
+pub mod metrics;
+pub mod worker;
+
+pub use config::{CoordinatorConfig, DecoderKind};
+pub use master::{gather_and_decode, Round};
+pub use metrics::{RoundMetrics, TrainingHistory};
+pub use worker::{
+    compute_message, compute_message_via, specs_from_assignment, Message, MessagePath,
+    ModelKind, WorkerSpec,
+};

@@ -1,0 +1,294 @@
+//! Worker-side logic: task lists from G columns and coded messages.
+//!
+//! Worker j computes the gradients of the tasks in column j of G and
+//! sends back ONE vector — the linear combination with its column's
+//! coefficients (computed by the AOT `combine_*` artifact, so the
+//! message construction itself exercises the L1 kernel).
+
+use anyhow::{bail, Result};
+
+use crate::linalg::CscMatrix;
+use crate::runtime::{Backend, CombineKind};
+use crate::training::data::Shard;
+
+/// Worker j's standing assignment (column j of G).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerSpec {
+    pub id: usize,
+    pub tasks: Vec<usize>,
+    pub coeffs: Vec<f64>,
+}
+
+/// Decompose an assignment matrix into per-worker specs.
+pub fn specs_from_assignment(g: &CscMatrix) -> Vec<WorkerSpec> {
+    (0..g.cols)
+        .map(|j| {
+            let (tasks, coeffs): (Vec<usize>, Vec<f64>) = g.col(j).unzip();
+            WorkerSpec { id: j, tasks, coeffs }
+        })
+        .collect()
+}
+
+/// One worker's round output.
+#[derive(Clone, Debug, Default)]
+pub struct Message {
+    pub worker: usize,
+    /// The coded linear combination of its task gradients.
+    pub payload: Vec<f32>,
+    /// Sum of per-task losses (MLP model; 0 for linear).
+    pub loss_sum: f64,
+    /// Number of tasks this worker computed.
+    pub tasks_done: usize,
+}
+
+/// Which model the workers are differentiating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Linear,
+    Mlp,
+}
+
+/// How the worker round is dispatched to the backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MessagePath {
+    /// One fused dispatch per worker (msg_* artifacts) — the §Perf
+    /// optimized path; falls back to PerTask if artifacts lack it.
+    Fused,
+    /// s + 1 dispatches per worker (grad_* per task + combine_*).
+    PerTask,
+}
+
+/// Compute worker `spec`'s coded message for the current params.
+///
+/// Stacks the task gradients into (s_max, d) buffers (zero-padded, zero
+/// coefficients for unused rows) and runs the combine artifact. Workers
+/// with more than s_max tasks (possible for BGC, whose column degrees
+/// are Binomial with tail above the mean s) process their task list in
+/// s_max-sized chunks and sum the partial combines — the message is
+/// identical, only the kernel is invoked ⌈tasks/s_max⌉ times.
+pub fn compute_message(
+    backend: &Backend,
+    model: ModelKind,
+    params: &[f32],
+    shards: &[Shard],
+    spec: &WorkerSpec,
+) -> Result<Message> {
+    compute_message_via(backend, model, params, shards, spec, MessagePath::Fused)
+}
+
+/// `compute_message` with an explicit dispatch path (benchmarks compare
+/// the two; production uses Fused when available).
+pub fn compute_message_via(
+    backend: &Backend,
+    model: ModelKind,
+    params: &[f32],
+    shards: &[Shard],
+    spec: &WorkerSpec,
+    path: MessagePath,
+) -> Result<Message> {
+    if path == MessagePath::Fused && backend.has_fused_message() {
+        return compute_message_fused(backend, model, params, shards, spec);
+    }
+    compute_message_pertask(backend, model, params, shards, spec)
+}
+
+/// Fused path: chunk the task list into s_max groups, one backend
+/// dispatch per chunk (typically exactly one).
+fn compute_message_fused(
+    backend: &Backend,
+    model: ModelKind,
+    params: &[f32],
+    shards: &[Shard],
+    spec: &WorkerSpec,
+) -> Result<Message> {
+    let s_max = backend.s_max();
+    let (xdim, ydim, d) = match model {
+        ModelKind::Linear => {
+            let l = backend.linear_dims();
+            (l.m * l.d, l.m, l.d)
+        }
+        ModelKind::Mlp => {
+            let m = backend.mlp_dims();
+            (m.m * m.d_in, m.m * m.d_out, m.flat_dim)
+        }
+    };
+
+    let mut payload = vec![0.0f32; d];
+    let mut loss_sum = 0.0f64;
+    let positions: Vec<usize> = (0..spec.tasks.len()).collect();
+    for chunk in positions.chunks(s_max.max(1)) {
+        let mut xs = vec![0.0f32; s_max * xdim];
+        let mut ys = vec![0.0f32; s_max * ydim];
+        let mut coeffs = vec![0.0f32; s_max];
+        for (slot, &pos) in chunk.iter().enumerate() {
+            let (task, coeff) = (spec.tasks[pos], spec.coeffs[pos]);
+            if task >= shards.len() {
+                bail!("worker {}: task {task} out of range", spec.id);
+            }
+            let shard = &shards[task];
+            xs[slot * xdim..(slot + 1) * xdim].copy_from_slice(&shard.x);
+            ys[slot * ydim..(slot + 1) * ydim].copy_from_slice(&shard.y);
+            coeffs[slot] = coeff as f32;
+        }
+        match model {
+            ModelKind::Linear => {
+                let partial = backend.linear_message(params, &xs, &ys, &coeffs)?;
+                for (p, v) in payload.iter_mut().zip(&partial) {
+                    *p += v;
+                }
+            }
+            ModelKind::Mlp => {
+                let (losses, partial) = backend.mlp_message(params, &xs, &ys, &coeffs)?;
+                for slot in 0..chunk.len() {
+                    loss_sum += losses[slot] as f64;
+                }
+                for (p, v) in payload.iter_mut().zip(&partial) {
+                    *p += v;
+                }
+            }
+        }
+    }
+    Ok(Message { worker: spec.id, payload, loss_sum, tasks_done: spec.tasks.len() })
+}
+
+/// Per-task path (s + 1 dispatches): kept for benchmarking and as the
+/// fallback when artifacts predate the fused modules.
+fn compute_message_pertask(
+    backend: &Backend,
+    model: ModelKind,
+    params: &[f32],
+    shards: &[Shard],
+    spec: &WorkerSpec,
+) -> Result<Message> {
+    let s_max = backend.s_max();
+    let (d, kind) = match model {
+        ModelKind::Linear => (backend.linear_dims().d, CombineKind::Linear),
+        ModelKind::Mlp => (backend.mlp_dims().flat_dim, CombineKind::Mlp),
+    };
+
+    let mut payload = vec![0.0f32; d];
+    let mut loss_sum = 0.0f64;
+    let chunks: Vec<usize> = (0..spec.tasks.len()).collect();
+    for chunk in chunks.chunks(s_max.max(1)) {
+        let mut stacked = vec![0.0f32; s_max * d];
+        let mut coeffs = vec![0.0f32; s_max];
+        for (slot, &pos) in chunk.iter().enumerate() {
+            let (task, coeff) = (spec.tasks[pos], spec.coeffs[pos]);
+            if task >= shards.len() {
+                bail!("worker {}: task {task} out of range", spec.id);
+            }
+            let shard = &shards[task];
+            let grad = match model {
+                ModelKind::Linear => backend.linear_grad(&shard.x, params, &shard.y)?,
+                ModelKind::Mlp => {
+                    let (loss, grad) = backend.mlp_grad(params, &shard.x, &shard.y)?;
+                    loss_sum += loss as f64;
+                    grad
+                }
+            };
+            stacked[slot * d..(slot + 1) * d].copy_from_slice(&grad);
+            coeffs[slot] = coeff as f32;
+        }
+        let partial = backend.combine(kind, &stacked, &coeffs)?;
+        for (p, v) in payload.iter_mut().zip(&partial) {
+            *p += v;
+        }
+    }
+
+    Ok(Message {
+        worker: spec.id,
+        payload,
+        loss_sum,
+        tasks_done: spec.tasks.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{FractionalRepetitionCode, GradientCode};
+    use crate::runtime::{LinearDims, MlpDims};
+    use crate::training::data::LinearDataset;
+    use crate::util::Rng;
+
+    fn backend() -> Backend {
+        Backend::Native {
+            linear: LinearDims { m: 8, d: 4 },
+            mlp: MlpDims { m: 4, d_in: 3, d_hidden: 4, d_out: 2, flat_dim: 3 * 4 + 4 + 4 * 2 + 2 },
+            s_max: 4,
+        }
+    }
+
+    #[test]
+    fn specs_mirror_columns() {
+        let g = FractionalRepetitionCode::new(8, 8, 2).assignment(&mut Rng::new(0));
+        let specs = specs_from_assignment(&g);
+        assert_eq!(specs.len(), 8);
+        assert_eq!(specs[0].tasks, vec![0, 1]);
+        assert_eq!(specs[3].tasks, vec![2, 3]);
+        assert!(specs.iter().all(|s| s.coeffs.iter().all(|&c| c == 1.0)));
+    }
+
+    #[test]
+    fn message_is_sum_of_task_gradients_for_boolean_code() {
+        let b = backend();
+        let dims = b.linear_dims();
+        let mut rng = Rng::new(1);
+        let ds = LinearDataset::generate(dims, 4, 0.1, &mut rng);
+        let params = vec![0.1f32; dims.d];
+        let spec = WorkerSpec { id: 0, tasks: vec![1, 3], coeffs: vec![1.0, 1.0] };
+        let msg =
+            compute_message(&b, ModelKind::Linear, &params, &ds.shards, &spec).unwrap();
+        let g1 = b.linear_grad(&ds.shards[1].x, &params, &ds.shards[1].y).unwrap();
+        let g3 = b.linear_grad(&ds.shards[3].x, &params, &ds.shards[3].y).unwrap();
+        for i in 0..dims.d {
+            assert!((msg.payload[i] - (g1[i] + g3[i])).abs() < 1e-5);
+        }
+        assert_eq!(msg.tasks_done, 2);
+    }
+
+    #[test]
+    fn mlp_message_accumulates_loss() {
+        let b = backend();
+        let dims = b.mlp_dims();
+        let mut rng = Rng::new(2);
+        let ds = crate::training::data::MlpDataset::generate(dims, 3, &mut rng);
+        let params = vec![0.05f32; dims.flat_dim];
+        let spec = WorkerSpec { id: 1, tasks: vec![0, 2], coeffs: vec![1.0, 1.0] };
+        let msg = compute_message(&b, ModelKind::Mlp, &params, &ds.shards, &spec).unwrap();
+        assert!(msg.loss_sum > 0.0);
+        assert_eq!(msg.payload.len(), dims.flat_dim);
+    }
+
+    #[test]
+    fn more_tasks_than_s_max_chunks_correctly() {
+        // 6 tasks with s_max = 4: two combine chunks, same message as
+        // summing all task gradients directly.
+        let b = backend();
+        let dims = b.linear_dims();
+        let ds = LinearDataset::generate(dims, 6, 0.1, &mut Rng::new(3));
+        let params = vec![0.2f32; dims.d];
+        let spec = WorkerSpec { id: 0, tasks: (0..6).collect(), coeffs: vec![1.0; 6] };
+        let msg =
+            compute_message(&b, ModelKind::Linear, &params, &ds.shards, &spec).unwrap();
+        let mut want = vec![0.0f32; dims.d];
+        for t in 0..6 {
+            let g = b.linear_grad(&ds.shards[t].x, &params, &ds.shards[t].y).unwrap();
+            for (w, v) in want.iter_mut().zip(&g) {
+                *w += v;
+            }
+        }
+        for (a, w) in msg.payload.iter().zip(&want) {
+            assert!((a - w).abs() < 1e-5);
+        }
+        assert_eq!(msg.tasks_done, 6);
+    }
+
+    #[test]
+    fn out_of_range_task_errors() {
+        let b = backend();
+        let ds = LinearDataset::generate(b.linear_dims(), 2, 0.0, &mut Rng::new(4));
+        let spec = WorkerSpec { id: 0, tasks: vec![5], coeffs: vec![1.0] };
+        assert!(compute_message(&b, ModelKind::Linear, &[0.0; 4], &ds.shards, &spec).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Algorithmic decoding (paper Lemma 12 / §6.2, adapted from randomized
+//! Kaczmarz [26]): u_t = (I - A A^T / ν)^t 1_k.
+//!
+//! ||u_t||^2 decreases monotonically to err(A) when ν >= ||A||_2^2; the
+//! intermediate iterates interpolate between the one-step error (t = 1,
+//! ν = rs^2/k — Lemma 17) and the optimal error (t -> ∞). Figure 5 plots
+//! exactly these curves with ν = ||A||_2^2.
+
+use super::Decoder;
+use crate::linalg::{norm2_sq, spectral_norm, CscMatrix};
+use crate::util::Rng;
+
+/// How to pick ν.
+#[derive(Clone, Copy, Debug)]
+pub enum StepSize {
+    /// ν = ||A||_2^2 estimated by power iteration (Fig. 5 setting).
+    SpectralNormSq,
+    /// ν = r s^2 / k (Lemma 17's closed-form choice).
+    Lemma17 { k: usize, r: usize, s: usize },
+    /// Explicit ν.
+    Fixed(f64),
+}
+
+impl StepSize {
+    pub fn resolve(&self, a: &CscMatrix, rng: &mut Rng) -> f64 {
+        match *self {
+            StepSize::SpectralNormSq => {
+                let n = spectral_norm(a, rng, 300, 1e-10);
+                // Tiny inflation keeps ν >= ||A||^2 despite estimation
+                // error, preserving Lemma 12's monotonicity guarantee.
+                (n * n * (1.0 + 1e-6)).max(f64::MIN_POSITIVE)
+            }
+            StepSize::Lemma17 { k, r, s } => r as f64 * (s * s) as f64 / k as f64,
+            StepSize::Fixed(v) => v,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AlgorithmicDecoder {
+    pub steps: usize,
+    pub step_size: StepSize,
+    /// Seed for the power-iteration RNG (kept internal so the decoder is
+    /// deterministic given A).
+    pub seed: u64,
+}
+
+impl AlgorithmicDecoder {
+    pub fn new(steps: usize, step_size: StepSize) -> Self {
+        AlgorithmicDecoder { steps, step_size, seed: 0x5EED }
+    }
+
+    /// The iterate u_t after `steps` applications.
+    pub fn iterate(&self, a: &CscMatrix) -> Vec<f64> {
+        let mut rng = Rng::new(self.seed);
+        let nu = self.step_size.resolve(a, &mut rng);
+        let mut u = vec![1.0; a.rows];
+        for _ in 0..self.steps {
+            let atu = a.t_matvec(&u);
+            let aatu = a.matvec(&atu);
+            for (ui, yi) in u.iter_mut().zip(&aatu) {
+                *ui -= yi / nu;
+            }
+        }
+        u
+    }
+
+    /// ||u_t||^2 — the algorithmic decoding error at t = steps.
+    pub fn error_at(&self, a: &CscMatrix) -> f64 {
+        norm2_sq(&self.iterate(a))
+    }
+}
+
+/// The whole curve {||u_t||^2}_{t=0..=t_max} in one sweep (Fig. 5's
+/// series), reusing iterates instead of recomputing per t.
+pub fn algorithmic_error_curve(
+    a: &CscMatrix,
+    step_size: StepSize,
+    t_max: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let nu = step_size.resolve(a, rng);
+    let mut u = vec![1.0; a.rows];
+    let mut curve = Vec::with_capacity(t_max + 1);
+    curve.push(norm2_sq(&u));
+    // Scratch buffers reused across iterations (allocation-free loop).
+    let mut atu = vec![0.0; a.cols];
+    let mut aatu = vec![0.0; a.rows];
+    for _ in 1..=t_max {
+        a.t_matvec_into(&u, &mut atu);
+        a.matvec_into(&atu, &mut aatu);
+        for (ui, yi) in u.iter_mut().zip(&aatu) {
+            *ui -= yi / nu;
+        }
+        curve.push(norm2_sq(&u));
+    }
+    curve
+}
+
+impl Decoder for AlgorithmicDecoder {
+    /// Weights x such that A x = 1_k - u_t. From the recursion,
+    /// x = (1/ν) Σ_{i<t} A^T u_i; we accumulate it alongside u.
+    fn weights(&self, a: &CscMatrix) -> Vec<f64> {
+        let mut rng = Rng::new(self.seed);
+        let nu = self.step_size.resolve(a, &mut rng);
+        let mut u = vec![1.0; a.rows];
+        let mut x = vec![0.0; a.cols];
+        for _ in 0..self.steps {
+            let atu = a.t_matvec(&u);
+            for (xj, aj) in x.iter_mut().zip(&atu) {
+                *xj += aj / nu;
+            }
+            let aatu = a.matvec(&atu);
+            for (ui, yi) in u.iter_mut().zip(&aatu) {
+                *ui -= yi / nu;
+            }
+        }
+        x
+    }
+
+    fn name(&self) -> &'static str {
+        "algorithmic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{BernoulliCode, GradientCode};
+    use crate::decode::{decode_error, OptimalDecoder};
+
+    fn random_a(k: usize, r: usize, s: usize, seed: u64) -> CscMatrix {
+        let mut rng = Rng::new(seed);
+        let g = BernoulliCode::new(k, k, s).assignment(&mut rng);
+        g.select_columns(&rng.sample_indices(k, r))
+    }
+
+    #[test]
+    fn curve_is_monotone_decreasing_with_spectral_nu() {
+        let a = random_a(40, 30, 5, 1);
+        let mut rng = Rng::new(2);
+        let curve = algorithmic_error_curve(&a, StepSize::SpectralNormSq, 30, &mut rng);
+        for w in curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "not monotone: {} -> {}", w[0], w[1]);
+        }
+        assert_eq!(curve[0], 40.0); // ||1_k||^2 = k
+    }
+
+    #[test]
+    fn curve_converges_to_optimal_error() {
+        let a = random_a(30, 25, 5, 3);
+        let mut rng = Rng::new(4);
+        let curve = algorithmic_error_curve(&a, StepSize::SpectralNormSq, 3000, &mut rng);
+        let opt = OptimalDecoder::new().err(&a);
+        let last = *curve.last().unwrap();
+        assert!(
+            (last - opt).abs() < 1e-4 * (1.0 + opt),
+            "algorithmic {last} vs optimal {opt}"
+        );
+    }
+
+    #[test]
+    fn curve_upper_bounds_optimal_everywhere() {
+        // Lemma 12: ||u_t||^2 >= err(A) for all t.
+        let a = random_a(30, 20, 4, 5);
+        let mut rng = Rng::new(6);
+        let curve = algorithmic_error_curve(&a, StepSize::SpectralNormSq, 50, &mut rng);
+        let opt = OptimalDecoder::new().err(&a);
+        for (t, &e) in curve.iter().enumerate() {
+            assert!(e >= opt - 1e-7, "t={t}: {e} < err(A)={opt}");
+        }
+    }
+
+    #[test]
+    fn weights_reproduce_iterate_error() {
+        // decode_error(A, weights) must equal ||u_t||^2.
+        let a = random_a(25, 20, 4, 7);
+        let d = AlgorithmicDecoder::new(10, StepSize::SpectralNormSq);
+        let w = d.weights(&a);
+        let via_weights = decode_error(&a, &w);
+        let via_iterate = d.error_at(&a);
+        assert!((via_weights - via_iterate).abs() < 1e-8, "{via_weights} vs {via_iterate}");
+    }
+
+    #[test]
+    fn zero_steps_is_identity() {
+        let a = random_a(20, 10, 3, 8);
+        let d = AlgorithmicDecoder::new(0, StepSize::SpectralNormSq);
+        assert_eq!(d.error_at(&a), 20.0);
+    }
+
+    #[test]
+    fn lemma17_stepsize_value() {
+        let nu = StepSize::Lemma17 { k: 100, r: 80, s: 5 }
+            .resolve(&CscMatrix::from_supports(1, vec![vec![0]]), &mut Rng::new(0));
+        assert!((nu - 20.0).abs() < 1e-12);
+    }
+}

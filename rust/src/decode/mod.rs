@@ -1,0 +1,63 @@
+//! Decoding algorithms (paper Algorithms 1 & 2, Lemma 12) and the two
+//! error functionals err(A) (Definition 1) and err_1(A) (Definition 2).
+//!
+//! A decoder produces a weight vector x over the r non-straggler
+//! messages; the master's gradient estimate is then
+//! ĝ = Σ_j x_j · msg_j, whose accuracy is governed by ||A x - 1_k||^2
+//! (eq. 2.3: the recovery error is at most ||f||^2 · err).
+
+pub mod algorithmic;
+pub mod onestep;
+pub mod optimal;
+pub mod streaming;
+
+pub use algorithmic::{algorithmic_error_curve, AlgorithmicDecoder, StepSize};
+pub use onestep::OneStepDecoder;
+pub use streaming::StreamingOneStep;
+pub use optimal::OptimalDecoder;
+
+use crate::linalg::{norm2_sq, CscMatrix};
+
+/// A decoding method: weights over non-straggler messages.
+pub trait Decoder {
+    /// Weight vector x (length A.cols) approximating A x ≈ 1_k.
+    fn weights(&self, a: &CscMatrix) -> Vec<f64>;
+    fn name(&self) -> &'static str;
+
+    /// The decoding error ||A x - 1_k||^2 achieved by this decoder on A.
+    fn error(&self, a: &CscMatrix) -> f64 {
+        let x = self.weights(a);
+        decode_error(a, &x)
+    }
+}
+
+///||A x - 1_k||^2 for a given weight vector.
+pub fn decode_error(a: &CscMatrix, x: &[f64]) -> f64 {
+    let ax = a.matvec(x);
+    let diff: Vec<f64> = ax.iter().map(|v| v - 1.0).collect();
+    norm2_sq(&diff)
+}
+
+/// The decoded approximation v = A x (the paper's "approximation to
+/// 1_k"); applied to messages this is the master's gradient estimate.
+pub fn decode_vector(a: &CscMatrix, x: &[f64]) -> Vec<f64> {
+    a.matvec(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_error_of_exact_solution_is_zero() {
+        // Identity: x = 1 reproduces 1_k.
+        let a = CscMatrix::from_supports(3, vec![vec![0], vec![1], vec![2]]);
+        assert_eq!(decode_error(&a, &[1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn decode_error_of_zero_weights_is_k() {
+        let a = CscMatrix::from_supports(5, vec![vec![0, 1]]);
+        assert_eq!(decode_error(&a, &[0.0]), 5.0);
+    }
+}

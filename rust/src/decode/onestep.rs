@@ -1,0 +1,92 @@
+//! One-step decoding (paper Algorithm 1): x = ρ 1_r, v = ρ A 1_r.
+//!
+//! O(nnz) — "linear complexity in the sparsity of the input" — and
+//! streamable: the master never needs A in memory, only the running sum
+//! of messages. The canonical step size is ρ = k/(rs): if G has exactly
+//! s entries per row and column, every row of A has ≈ rs/k entries and
+//! ρ A 1_r reconstructs 1_k exactly.
+
+use super::Decoder;
+use crate::linalg::CscMatrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct OneStepDecoder {
+    /// ρ. Use `OneStepDecoder::canonical(k, r, s)` for ρ = k/(rs).
+    pub rho: f64,
+}
+
+impl OneStepDecoder {
+    pub fn new(rho: f64) -> Self {
+        assert!(rho > 0.0, "rho must be positive");
+        OneStepDecoder { rho }
+    }
+
+    /// The paper's default ρ = k / (r s).
+    pub fn canonical(k: usize, r: usize, s: usize) -> Self {
+        assert!(r > 0 && s > 0);
+        OneStepDecoder { rho: k as f64 / (r as f64 * s as f64) }
+    }
+
+    /// err_1(A) = ||ρ A 1_r - 1_k||^2 computed in one sparse pass.
+    pub fn err1(&self, a: &CscMatrix) -> f64 {
+        let sums = a.row_sums();
+        sums.iter().map(|&v| (self.rho * v - 1.0).powi(2)).sum()
+    }
+}
+
+impl Decoder for OneStepDecoder {
+    fn weights(&self, a: &CscMatrix) -> Vec<f64> {
+        vec![self.rho; a.cols]
+    }
+
+    fn name(&self) -> &'static str {
+        "one-step"
+    }
+
+    fn error(&self, a: &CscMatrix) -> f64 {
+        // Specialized: avoids materializing the weight vector.
+        self.err1(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::decode_error;
+
+    #[test]
+    fn err1_matches_generic_path() {
+        let a = CscMatrix::from_supports(6, vec![vec![0, 1], vec![2, 3], vec![1, 4]]);
+        let d = OneStepDecoder::new(0.7);
+        let generic = decode_error(&a, &d.weights(&a));
+        assert!((d.err1(&a) - generic).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_recovery_on_perfectly_regular_a() {
+        // k=4, r=2, s=2, each row has rs/k = 1 entry: rho = k/(rs) = 1.
+        let a = CscMatrix::from_supports(4, vec![vec![0, 1], vec![2, 3]]);
+        let d = OneStepDecoder::canonical(4, 2, 2);
+        assert!((d.rho - 1.0).abs() < 1e-15);
+        assert_eq!(d.err1(&a), 0.0);
+    }
+
+    #[test]
+    fn empty_matrix_gives_err_k() {
+        let a = CscMatrix::from_supports(5, vec![vec![], vec![]]);
+        let d = OneStepDecoder::new(1.0);
+        assert_eq!(d.err1(&a), 5.0);
+    }
+
+    #[test]
+    fn canonical_rho_value() {
+        let d = OneStepDecoder::canonical(100, 80, 5);
+        assert!((d.rho - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_rho_panics() {
+        OneStepDecoder::new(0.0);
+    }
+}

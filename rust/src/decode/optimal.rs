@@ -1,0 +1,147 @@
+//! Optimal decoding (paper Algorithm 2): x = argmin ||A x - 1_k||^2.
+//!
+//! err(A) (Definition 1) is the squared residual at the optimum. We
+//! solve with LSQR on the sparse A (rank-deficiency safe: FRC submatrices
+//! have duplicate columns); a dense normal-equation path exists for
+//! cross-validation (`OptimalDecoder::dense_check`).
+
+use super::Decoder;
+use crate::linalg::{cholesky::solve_normal_equations, lsqr, CscMatrix, LsqrOptions};
+
+#[derive(Clone, Debug)]
+pub struct OptimalDecoder {
+    pub opts: LsqrOptions,
+}
+
+impl Default for OptimalDecoder {
+    fn default() -> Self {
+        OptimalDecoder { opts: LsqrOptions::default() }
+    }
+}
+
+impl OptimalDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// err(A) = min_x ||A x - 1_k||^2.
+    pub fn err(&self, a: &CscMatrix) -> f64 {
+        if a.cols == 0 || a.nnz() == 0 {
+            return a.rows as f64;
+        }
+        let b = vec![1.0; a.rows];
+        let res = lsqr(a, &b, &self.opts);
+        res.residual_norm * res.residual_norm
+    }
+
+    /// Dense cross-check via ridge-regularized normal equations. Only
+    /// for small matrices (tests, exhaustive adversary).
+    pub fn dense_check(&self, a: &CscMatrix) -> Option<f64> {
+        let d = a.to_dense();
+        let b = vec![1.0; a.rows];
+        let x = solve_normal_equations(&d, &b, 1e-10)?;
+        let ax = d.matvec(&x);
+        Some(ax.iter().zip(&b).map(|(axi, bi)| (axi - bi).powi(2)).sum())
+    }
+}
+
+impl Decoder for OptimalDecoder {
+    fn weights(&self, a: &CscMatrix) -> Vec<f64> {
+        if a.cols == 0 {
+            return Vec::new();
+        }
+        let b = vec![1.0; a.rows];
+        lsqr(a, &b, &self.opts).x
+    }
+
+    fn name(&self) -> &'static str {
+        "optimal"
+    }
+
+    fn error(&self, a: &CscMatrix) -> f64 {
+        self.err(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{BernoulliCode, FractionalRepetitionCode, GradientCode};
+    use crate::decode::OneStepDecoder;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_has_zero_error() {
+        let a = CscMatrix::from_supports(4, (0..4).map(|i| vec![i]).collect());
+        assert!(OptimalDecoder::new().err(&a) < 1e-18);
+    }
+
+    #[test]
+    fn err_counts_uncovered_tasks_for_disjoint_supports() {
+        // Two disjoint columns covering 3 of 5 tasks: err = 2.
+        let a = CscMatrix::from_supports(5, vec![vec![0, 1], vec![2]]);
+        let e = OptimalDecoder::new().err(&a);
+        // Column [0,1] can only produce equal entries in rows 0,1: best is
+        // x=1 exactly reproducing both. err = 5 - 3 = 2.
+        assert!((e - 2.0).abs() < 1e-9, "{e}");
+    }
+
+    #[test]
+    fn frc_error_is_multiple_of_s() {
+        // Paper §3: err(A_frac) = αs where α = missing blocks.
+        let code = FractionalRepetitionCode::new(20, 20, 5);
+        let g = code.assignment(&mut Rng::new(1));
+        // Keep workers only from blocks 0 and 2: blocks 1, 3 missing.
+        let a = g.select_columns(&[0, 1, 10, 11]);
+        let e = OptimalDecoder::new().err(&a);
+        assert!((e - 10.0).abs() < 1e-8, "{e}");
+    }
+
+    #[test]
+    fn optimal_never_exceeds_onestep() {
+        let code = BernoulliCode::new(40, 40, 5);
+        let mut rng = Rng::new(2);
+        for trial in 0..10 {
+            let g = code.assignment(&mut rng);
+            let idx = rng.sample_indices(40, 30);
+            let a = g.select_columns(&idx);
+            let opt = OptimalDecoder::new().err(&a);
+            let one = OneStepDecoder::canonical(40, 30, 5).err1(&a);
+            assert!(
+                opt <= one + 1e-8,
+                "trial {trial}: optimal {opt} > one-step {one}"
+            );
+        }
+    }
+
+    #[test]
+    fn lsqr_matches_dense_normal_equations() {
+        let code = BernoulliCode::new(30, 30, 4);
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let g = code.assignment(&mut rng);
+            let idx = rng.sample_indices(30, 20);
+            let a = g.select_columns(&idx);
+            let d = OptimalDecoder::new();
+            let sparse = d.err(&a);
+            let dense = d.dense_check(&a).unwrap();
+            assert!((sparse - dense).abs() < 1e-5, "{sparse} vs {dense}");
+        }
+    }
+
+    #[test]
+    fn empty_a_gives_err_k() {
+        let a = CscMatrix::from_supports(7, vec![]);
+        assert_eq!(OptimalDecoder::new().err(&a), 7.0);
+    }
+
+    #[test]
+    fn error_bounded_by_k() {
+        let code = BernoulliCode::new(25, 25, 3);
+        let mut rng = Rng::new(4);
+        let g = code.assignment(&mut rng);
+        let a = g.select_columns(&rng.sample_indices(25, 5));
+        let e = OptimalDecoder::new().err(&a);
+        assert!((0.0..=25.0 + 1e-9).contains(&e));
+    }
+}

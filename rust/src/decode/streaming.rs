@@ -1,0 +1,153 @@
+//! Streaming one-step decoder — the paper's memory argument made real.
+//!
+//! §2.2: "we can apply the one-step decoding method even if we do not
+//! have direct access to A ... avoid putting the entire matrix A into
+//! memory of the master". This decoder consumes (column-support,
+//! message) pairs as workers respond, maintaining only the running
+//! coverage counts and payload sum — O(k + d) memory independent of r.
+//! It also exposes an *early-stop* signal: once every task is covered
+//! at its expected multiplicity, waiting longer cannot reduce err_1.
+
+use crate::linalg::CscMatrix;
+
+/// Incremental one-step decode state.
+#[derive(Clone, Debug)]
+pub struct StreamingOneStep {
+    k: usize,
+    rho: f64,
+    /// Σ over received columns of their support indicators (row sums).
+    coverage: Vec<f64>,
+    /// ρ · Σ received payloads.
+    payload_sum: Vec<f64>,
+    received: usize,
+}
+
+impl StreamingOneStep {
+    /// `rho` is fixed up front (ρ = k/(rs) for the paper's protocol —
+    /// note r must be the *planned* survivor count, e.g. the FastestR
+    /// deadline parameter, since streaming can't know r in advance).
+    pub fn new(k: usize, d: usize, rho: f64) -> Self {
+        assert!(rho > 0.0);
+        StreamingOneStep {
+            k,
+            rho,
+            coverage: vec![0.0; k],
+            payload_sum: vec![0.0; d],
+            received: 0,
+        }
+    }
+
+    /// Ingest one worker's response: its G-column entries and payload.
+    pub fn ingest(&mut self, column: &[(usize, f64)], payload: &[f32]) {
+        assert_eq!(payload.len(), self.payload_sum.len());
+        for &(i, v) in column {
+            assert!(i < self.k, "row {i} out of range");
+            self.coverage[i] += v;
+        }
+        for (acc, &p) in self.payload_sum.iter_mut().zip(payload) {
+            *acc += self.rho * p as f64;
+        }
+        self.received += 1;
+    }
+
+    pub fn received(&self) -> usize {
+        self.received
+    }
+
+    /// Current one-step error ||ρ A 1 - 1_k||² given what has arrived.
+    pub fn current_err1(&self) -> f64 {
+        self.coverage.iter().map(|&c| (self.rho * c - 1.0).powi(2)).sum()
+    }
+
+    /// The running gradient estimate ĝ = ρ Σ msg_j.
+    pub fn estimate(&self) -> Vec<f32> {
+        self.payload_sum.iter().map(|&v| v as f32).collect()
+    }
+
+    /// True when every task's coverage has reached 1/ρ (its target
+    /// multiplicity): more responses can only overshoot, so a master
+    /// waiting for accuracy may stop gathering now.
+    pub fn fully_covered(&self) -> bool {
+        let target = 1.0 / self.rho;
+        self.coverage.iter().all(|&c| c >= target - 1e-9)
+    }
+}
+
+/// Reference check: streaming over all of A must equal the batch path.
+pub fn batch_equivalent(a: &CscMatrix, rho: f64) -> f64 {
+    let sums = a.row_sums();
+    sums.iter().map(|&v| (rho * v - 1.0).powi(2)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{BernoulliCode, FractionalRepetitionCode, GradientCode};
+    use crate::decode::OneStepDecoder;
+    use crate::util::Rng;
+
+    #[test]
+    fn streaming_matches_batch_err1() {
+        let mut rng = Rng::new(1);
+        let g = BernoulliCode::new(30, 30, 5).assignment(&mut rng);
+        let survivors = rng.sample_indices(30, 20);
+        let a = g.select_columns(&survivors);
+        let rho = 30.0 / (20.0 * 5.0);
+
+        let mut s = StreamingOneStep::new(30, 4, rho);
+        for &j in &survivors {
+            let col: Vec<(usize, f64)> = g.col(j).collect();
+            s.ingest(&col, &[0.0; 4]);
+        }
+        let batch = OneStepDecoder::new(rho).err1(&a);
+        assert!((s.current_err1() - batch).abs() < 1e-10);
+        assert_eq!(s.received(), 20);
+    }
+
+    #[test]
+    fn estimate_accumulates_scaled_payloads() {
+        let mut s = StreamingOneStep::new(4, 3, 0.5);
+        s.ingest(&[(0, 1.0)], &[2.0, 0.0, 4.0]);
+        s.ingest(&[(1, 1.0)], &[2.0, 2.0, 0.0]);
+        let est = s.estimate();
+        assert_eq!(est, vec![2.0, 1.0, 2.0]); // 0.5 * sums
+    }
+
+    #[test]
+    fn error_decreases_then_is_zero_for_full_frc() {
+        // FRC with all workers responding and rho = 1/s: exact recovery.
+        let (k, sdeg) = (12usize, 3usize);
+        let g = FractionalRepetitionCode::new(k, k, sdeg).assignment(&mut Rng::new(2));
+        let rho = 1.0 / sdeg as f64;
+        let mut s = StreamingOneStep::new(k, 1, rho);
+        let mut last = s.current_err1();
+        assert_eq!(last, k as f64);
+        for j in 0..k {
+            let col: Vec<(usize, f64)> = g.col(j).collect();
+            s.ingest(&col, &[0.0]);
+            let now = s.current_err1();
+            assert!(now <= last + 1e-12, "error rose: {last} -> {now}");
+            last = now;
+        }
+        assert!(last < 1e-12);
+        assert!(s.fully_covered());
+    }
+
+    #[test]
+    fn fully_covered_fires_exactly_at_target() {
+        // rho = 1/2: each task needs coverage 2.
+        let mut s = StreamingOneStep::new(2, 1, 0.5);
+        s.ingest(&[(0, 1.0), (1, 1.0)], &[0.0]);
+        assert!(!s.fully_covered());
+        s.ingest(&[(0, 1.0), (1, 1.0)], &[0.0]);
+        assert!(s.fully_covered());
+    }
+
+    #[test]
+    fn memory_is_independent_of_streamed_columns() {
+        // Structural: state size fixed by (k, d) only.
+        let s = StreamingOneStep::new(1000, 10, 0.1);
+        assert_eq!(s.coverage.len(), 1000);
+        assert_eq!(s.payload_sum.len(), 10);
+    }
+}

@@ -1,0 +1,156 @@
+//! Bipartite-graph view of a non-straggler matrix A (paper §5.1).
+//!
+//! A is k x r; left vertices are the k tasks, right vertices the r
+//! workers, with an edge (i, j) iff A_ij != 0. Lemma 14/15 relate the
+//! algorithmic decoding error to weighted closed-walk counts on this
+//! graph; `walk_moments` computes 1^T (A A^T)^t 1 for the Lemma-15
+//! alternating-sum cross-checks in tests and the thm tables.
+
+use crate::linalg::CscMatrix;
+
+/// Degree statistics of the bipartite view.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegreeStats {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+}
+
+fn stats(degrees: &[usize]) -> DegreeStats {
+    let min = degrees.iter().copied().min().unwrap_or(0);
+    let max = degrees.iter().copied().max().unwrap_or(0);
+    let mean = if degrees.is_empty() {
+        0.0
+    } else {
+        degrees.iter().sum::<usize>() as f64 / degrees.len() as f64
+    };
+    DegreeStats { min, max, mean }
+}
+
+/// Left-vertex (task) degrees: how many responding workers cover task i.
+pub fn left_degrees(a: &CscMatrix) -> Vec<usize> {
+    a.row_degrees()
+}
+
+/// Right-vertex (worker) degrees: tasks per responding worker.
+pub fn right_degrees(a: &CscMatrix) -> Vec<usize> {
+    (0..a.cols).map(|j| a.col_nnz(j)).collect()
+}
+
+pub fn left_degree_stats(a: &CscMatrix) -> DegreeStats {
+    stats(&left_degrees(a))
+}
+
+pub fn right_degree_stats(a: &CscMatrix) -> DegreeStats {
+    stats(&right_degrees(a))
+}
+
+/// Number of tasks covered by no responding worker. Each such task
+/// contributes exactly 1 to err(A) for boolean codes (its coordinate of
+/// 1_k is orthogonal to the span of A).
+pub fn uncovered_tasks(a: &CscMatrix) -> usize {
+    left_degrees(a).iter().filter(|&&d| d == 0).count()
+}
+
+/// a_t = 1^T (A A^T)^t 1 for t = 0..=t_max — the weighted closed-walk
+/// counts of Lemma 14 (walks of length 2t from a left vertex back to a
+/// left vertex). Computed by repeated matvec, O(t_max * nnz).
+pub fn walk_moments(a: &CscMatrix, t_max: usize) -> Vec<f64> {
+    let mut u = vec![1.0; a.rows];
+    let mut moments = Vec::with_capacity(t_max + 1);
+    moments.push(a.rows as f64); // t = 0: 1^T 1 = k
+    for _ in 1..=t_max {
+        let atu = a.t_matvec(&u);
+        u = a.matvec(&atu);
+        moments.push(u.iter().sum::<f64>());
+    }
+    moments
+}
+
+/// Lemma 15: ||u_t||^2 as the alternating binomial sum of walk moments,
+/// sum_{i=0}^{2t} (-1)^i C(2t, i) a_i / nu^i. Numerically fragile for
+/// large t (alternating sum) — used as a *test oracle* against the
+/// direct iterate computation for small t.
+pub fn lemma15_error(a: &CscMatrix, nu: f64, t: usize) -> f64 {
+    let moments = walk_moments(a, 2 * t);
+    let mut sum = 0.0;
+    let mut binom = 1.0; // C(2t, 0)
+    let mut nu_pow = 1.0;
+    for i in 0..=2 * t {
+        let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+        sum += sign * binom * moments[i] / nu_pow;
+        // C(2t, i+1) = C(2t, i) * (2t - i) / (i + 1)
+        binom = binom * (2 * t - i) as f64 / (i + 1) as f64;
+        nu_pow *= nu;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn bernoulli_matrix(k: usize, r: usize, p: f64, seed: u64) -> CscMatrix {
+        let mut rng = Rng::new(seed);
+        let cols = (0..r)
+            .map(|_| (0..k).filter(|_| rng.bernoulli(p)).collect())
+            .collect();
+        CscMatrix::from_supports(k, cols)
+    }
+
+    #[test]
+    fn degrees_sum_to_nnz() {
+        let a = bernoulli_matrix(40, 30, 0.2, 1);
+        let ld: usize = left_degrees(&a).iter().sum();
+        let rd: usize = right_degrees(&a).iter().sum();
+        assert_eq!(ld, a.nnz());
+        assert_eq!(rd, a.nnz());
+    }
+
+    #[test]
+    fn uncovered_counts_zero_rows() {
+        let a = CscMatrix::from_supports(4, vec![vec![0, 1], vec![1]]);
+        assert_eq!(uncovered_tasks(&a), 2); // tasks 2 and 3
+    }
+
+    #[test]
+    fn walk_moment_t0_is_k() {
+        let a = bernoulli_matrix(25, 20, 0.15, 2);
+        assert_eq!(walk_moments(&a, 0)[0], 25.0);
+    }
+
+    #[test]
+    fn walk_moment_t1_counts_paths() {
+        // a_1 = 1^T A A^T 1 = ||A^T 1||^2 = sum_j (col degree)^2
+        let a = bernoulli_matrix(25, 20, 0.15, 3);
+        let expected: f64 = right_degrees(&a).iter().map(|&d| (d * d) as f64).sum();
+        let m = walk_moments(&a, 1);
+        assert!((m[1] - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lemma15_matches_direct_iterate_t1() {
+        // ||u_1||^2 = ||(I - AA^T/nu) 1||^2 expanded = a0 - 2 a1/nu + a2/nu^2
+        let a = bernoulli_matrix(20, 15, 0.2, 4);
+        let nu = 30.0;
+        let direct = {
+            let atu = a.t_matvec(&vec![1.0; a.rows]);
+            let aatu = a.matvec(&atu);
+            let u1: Vec<f64> = (0..a.rows).map(|i| 1.0 - aatu[i] / nu).collect();
+            u1.iter().map(|x| x * x).sum::<f64>()
+        };
+        let lemma = lemma15_error(&a, nu, 1);
+        assert!((direct - lemma).abs() < 1e-8, "{direct} vs {lemma}");
+    }
+
+    #[test]
+    fn degree_stats() {
+        let a = CscMatrix::from_supports(3, vec![vec![0], vec![0, 1, 2]]);
+        let rs = right_degree_stats(&a);
+        assert_eq!(rs, DegreeStats { min: 1, max: 3, mean: 2.0 });
+        let ls = left_degree_stats(&a);
+        assert_eq!(ls.min, 1);
+        assert_eq!(ls.max, 2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Graph substrate: random s-regular generation, the bipartite view of
+//! non-straggler matrices (Lemma 14/15 walk counting), and spectral-gap
+//! diagnostics for expander codes.
+
+pub mod bipartite;
+pub mod regular;
+pub mod spectral;
+
+pub use regular::{random_regular_graph, Graph};

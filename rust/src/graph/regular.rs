@@ -1,0 +1,247 @@
+//! Random s-regular graph generation — the substrate for the expander
+//! baseline of Raviv et al. [20] (paper §6 compares against random
+//! s-regular graphs, which are near-Ramanujan expanders w.h.p. [15]).
+//!
+//! Pairing/configuration model with rejection of self-loops and multi-
+//! edges, plus an edge-swap repair pass so generation terminates for all
+//! feasible (k, s) instead of resampling forever on unlucky tails.
+
+use crate::util::Rng;
+
+/// A simple undirected graph as sorted adjacency lists.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    pub adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].len()
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].binary_search(&v).is_ok()
+    }
+
+    pub fn is_regular(&self, s: usize) -> bool {
+        self.adj.iter().all(|a| a.len() == s)
+    }
+
+    /// Simple graph: no self-loops, no duplicate edges.
+    pub fn is_simple(&self) -> bool {
+        self.adj.iter().enumerate().all(|(v, a)| {
+            a.windows(2).all(|w| w[0] < w[1]) && !a.contains(&v)
+        })
+    }
+
+    /// Number of edges inside the vertex subset (used by DkS heuristics).
+    pub fn edges_within(&self, subset: &[usize]) -> usize {
+        let mut inset = vec![false; self.n];
+        for &v in subset {
+            inset[v] = true;
+        }
+        let mut count = 0;
+        for &v in subset {
+            for &u in &self.adj[v] {
+                if inset[u] && u > v {
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+
+    /// d-regular ring lattice (each vertex tied to d/2 neighbours each
+    /// side) — a deterministic regular graph for tests and reductions.
+    pub fn ring_lattice(n: usize, d: usize) -> Graph {
+        assert!(d % 2 == 0 && d < n, "ring lattice needs even d < n");
+        let mut adj = vec![Vec::new(); n];
+        for v in 0..n {
+            for step in 1..=d / 2 {
+                let u = (v + step) % n;
+                adj[v].push(u);
+                adj[u].push(v);
+            }
+        }
+        for a in adj.iter_mut() {
+            a.sort_unstable();
+        }
+        Graph { n, adj }
+    }
+
+    pub fn complete(n: usize) -> Graph {
+        let adj = (0..n).map(|v| (0..n).filter(|&u| u != v).collect()).collect();
+        Graph { n, adj }
+    }
+}
+
+/// Generate a uniform-ish random s-regular simple graph on n vertices.
+///
+/// Configuration model: put s stubs on each vertex, take a random perfect
+/// matching of stubs; retry a bounded number of times, then repair the
+/// remaining self-loops/multi-edges with random edge swaps (the standard
+/// practical construction; the induced bias is negligible for s ≪ n).
+pub fn random_regular_graph(n: usize, s: usize, rng: &mut Rng) -> Graph {
+    assert!(s < n, "degree must be < n");
+    assert!(n * s % 2 == 0, "n*s must be even");
+    const ATTEMPTS: usize = 50;
+
+    for _ in 0..ATTEMPTS {
+        if let Some(g) = try_configuration(n, s, rng) {
+            return g;
+        }
+    }
+    // Repair path: accept a defective multigraph matching and fix it.
+    repair_matching(n, s, rng)
+}
+
+/// One configuration-model draw; None if it produced a loop/multi-edge.
+fn try_configuration(n: usize, s: usize, rng: &mut Rng) -> Option<Graph> {
+    let mut stubs: Vec<usize> = (0..n * s).map(|i| i / s).collect();
+    rng.shuffle(&mut stubs);
+    let mut adj = vec![Vec::with_capacity(s); n];
+    for pair in stubs.chunks(2) {
+        let (u, v) = (pair[0], pair[1]);
+        if u == v || adj[u].contains(&v) {
+            return None;
+        }
+        adj[u].push(v);
+        adj[v].push(u);
+    }
+    for a in adj.iter_mut() {
+        a.sort_unstable();
+    }
+    Some(Graph { n, adj })
+}
+
+/// Take a defective matching and swap edges until simple.
+fn repair_matching(n: usize, s: usize, rng: &mut Rng) -> Graph {
+    // Edge list with possible defects.
+    let mut stubs: Vec<usize> = (0..n * s).map(|i| i / s).collect();
+    rng.shuffle(&mut stubs);
+    let mut edges: Vec<(usize, usize)> = stubs.chunks(2).map(|p| (p[0], p[1])).collect();
+
+    let edge_key = |u: usize, v: usize| (u.min(v), u.max(v));
+    let mut counts = std::collections::HashMap::new();
+    for &(u, v) in &edges {
+        *counts.entry(edge_key(u, v)).or_insert(0usize) += 1;
+    }
+    let is_bad = |u: usize, v: usize, counts: &std::collections::HashMap<(usize, usize), usize>| {
+        u == v || counts[&edge_key(u, v)] > 1
+    };
+
+    let mut guard = 0usize;
+    loop {
+        let bad: Vec<usize> = (0..edges.len())
+            .filter(|&i| {
+                let (u, v) = edges[i];
+                is_bad(u, v, &counts)
+            })
+            .collect();
+        if bad.is_empty() {
+            break;
+        }
+        guard += 1;
+        assert!(guard < 1_000_000, "edge-swap repair failed to converge");
+        let i = bad[rng.usize(bad.len())];
+        let j = rng.usize(edges.len());
+        if i == j {
+            continue;
+        }
+        let (a, b) = edges[i];
+        let (c, d) = edges[j];
+        // Propose swap (a,b),(c,d) -> (a,d),(c,b).
+        let (n1, n2) = ((a, d), (c, b));
+        if n1.0 == n1.1 || n2.0 == n2.1 {
+            continue;
+        }
+        let k1 = edge_key(n1.0, n1.1);
+        let k2 = edge_key(n2.0, n2.1);
+        if counts.get(&k1).copied().unwrap_or(0) > 0 || counts.get(&k2).copied().unwrap_or(0) > 0 {
+            continue;
+        }
+        // Apply.
+        *counts.get_mut(&edge_key(a, b)).unwrap() -= 1;
+        *counts.get_mut(&edge_key(c, d)).unwrap() -= 1;
+        *counts.entry(k1).or_insert(0) += 1;
+        *counts.entry(k2).or_insert(0) += 1;
+        edges[i] = n1;
+        edges[j] = n2;
+    }
+
+    let mut adj = vec![Vec::with_capacity(s); n];
+    for (u, v) in edges {
+        adj[u].push(v);
+        adj[v].push(u);
+    }
+    for a in adj.iter_mut() {
+        a.sort_unstable();
+    }
+    Graph { n, adj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_regular_is_simple_and_regular() {
+        let mut rng = Rng::new(1);
+        for &(n, s) in &[(10, 3), (20, 5), (100, 10), (101, 4)] {
+            let g = random_regular_graph(n, s, &mut rng);
+            assert!(g.is_regular(s), "not {s}-regular for n={n}");
+            assert!(g.is_simple(), "not simple for n={n}, s={s}");
+            assert_eq!(g.edge_count(), n * s / 2);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g1 = random_regular_graph(30, 4, &mut Rng::new(9));
+        let g2 = random_regular_graph(30, 4, &mut Rng::new(9));
+        assert_eq!(g1.adj, g2.adj);
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn odd_degree_sum_panics() {
+        random_regular_graph(5, 3, &mut Rng::new(1));
+    }
+
+    #[test]
+    fn ring_lattice_structure() {
+        let g = Graph::ring_lattice(8, 4);
+        assert!(g.is_regular(4));
+        assert!(g.is_simple());
+        assert!(g.has_edge(0, 1) && g.has_edge(0, 2) && !g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn complete_graph_edges_within() {
+        let g = Graph::complete(6);
+        assert_eq!(g.edges_within(&[0, 1, 2]), 3);
+        assert_eq!(g.edges_within(&[4]), 0);
+        assert_eq!(g.edge_count(), 15);
+    }
+
+    #[test]
+    fn edges_within_matches_bruteforce() {
+        let mut rng = Rng::new(11);
+        let g = random_regular_graph(30, 6, &mut rng);
+        let subset: Vec<usize> = rng.sample_indices(30, 12);
+        let mut brute = 0;
+        for i in 0..subset.len() {
+            for j in i + 1..subset.len() {
+                if g.has_edge(subset[i], subset[j]) {
+                    brute += 1;
+                }
+            }
+        }
+        assert_eq!(g.edges_within(&subset), brute);
+    }
+}

@@ -1,0 +1,114 @@
+//! Spectral diagnostics for graph-based codes.
+//!
+//! The quality of an s-regular expander code is governed by
+//! λ(G) = max{|λ2|, |λk|} (Thm 3 / Raviv et al. [20]); Ramanujan graphs
+//! achieve λ ≤ 2 sqrt(s-1). These helpers quantify how close a random
+//! s-regular draw is to that bound (the paper's argument for using
+//! random regular graphs instead of explicit Ramanujan constructions).
+
+use super::regular::Graph;
+use crate::linalg::{regular_graph_lambda, CscMatrix};
+use crate::util::Rng;
+
+/// Adjacency matrix of a graph as boolean CSC.
+pub fn adjacency(g: &Graph) -> CscMatrix {
+    CscMatrix::from_supports(g.n, g.adj.clone())
+}
+
+/// λ(G) = max{|λ2|, |λk|} for an s-regular graph.
+pub fn lambda(g: &Graph, s: usize, rng: &mut Rng) -> f64 {
+    debug_assert!(g.is_regular(s));
+    regular_graph_lambda(&adjacency(g), s, rng, 500)
+}
+
+/// The Ramanujan bound 2 sqrt(s-1).
+pub fn ramanujan_bound(s: usize) -> f64 {
+    2.0 * ((s - 1) as f64).sqrt()
+}
+
+/// λ(G) / (2 sqrt(s-1)): ≈1 means near-Ramanujan (a good expander).
+pub fn expansion_quality(g: &Graph, s: usize, rng: &mut Rng) -> f64 {
+    lambda(g, s, rng) / ramanujan_bound(s)
+}
+
+/// Expander-mixing check: for all sampled vertex pairs (S, T),
+/// |e(S,T) - s|S||T|/n| <= λ sqrt(|S||T|). Returns the max violation
+/// ratio over `samples` random pairs (<= 1 means the mixing lemma holds
+/// with the given λ on every sampled pair).
+pub fn mixing_violation(g: &Graph, s: usize, lam: f64, samples: usize, rng: &mut Rng) -> f64 {
+    let n = g.n;
+    let mut worst: f64 = 0.0;
+    for _ in 0..samples {
+        let a = 1 + rng.usize(n / 2);
+        let b = 1 + rng.usize(n / 2);
+        let sv = rng.sample_indices(n, a);
+        let tv = rng.sample_indices(n, b);
+        let mut in_t = vec![false; n];
+        for &v in &tv {
+            in_t[v] = true;
+        }
+        // e(S, T): ordered pairs (u in S, v in T) with an edge.
+        let mut e_st = 0usize;
+        for &u in &sv {
+            for &v in &g.adj[u] {
+                if in_t[v] {
+                    e_st += 1;
+                }
+            }
+        }
+        let expected = s as f64 * a as f64 * b as f64 / n as f64;
+        let bound = lam * ((a * b) as f64).sqrt();
+        if bound > 0.0 {
+            worst = worst.max((e_st as f64 - expected).abs() / bound);
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::regular::random_regular_graph;
+
+    #[test]
+    fn complete_graph_lambda_is_one() {
+        let g = Graph::complete(8);
+        let l = lambda(&g, 7, &mut Rng::new(1));
+        assert!((l - 1.0).abs() < 1e-5, "{l}");
+    }
+
+    #[test]
+    fn random_regular_is_near_ramanujan() {
+        // Friedman's theorem: random s-regular graphs have
+        // λ ≤ 2 sqrt(s-1) + o(1) w.h.p. Allow 25% slack at k=100.
+        let mut rng = Rng::new(2);
+        let g = random_regular_graph(100, 10, &mut rng);
+        let q = expansion_quality(&g, 10, &mut rng);
+        assert!(q < 1.25, "expansion quality {q}");
+        assert!(q > 0.5, "suspiciously small λ: quality {q}");
+    }
+
+    #[test]
+    fn mixing_lemma_holds_on_random_regular() {
+        let mut rng = Rng::new(3);
+        let g = random_regular_graph(60, 6, &mut rng);
+        let lam = lambda(&g, 6, &mut rng);
+        // Use a slightly inflated λ to absorb power-iteration tolerance.
+        let v = mixing_violation(&g, 6, lam * 1.05, 200, &mut rng);
+        assert!(v <= 1.0, "mixing violation {v}");
+    }
+
+    #[test]
+    fn adjacency_is_symmetric_boolean() {
+        let mut rng = Rng::new(4);
+        let g = random_regular_graph(20, 4, &mut rng);
+        let a = adjacency(&g);
+        assert!(a.is_boolean());
+        let d = a.to_dense();
+        for i in 0..20 {
+            for j in 0..20 {
+                assert_eq!(d[(i, j)], d[(j, i)]);
+            }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! # gradcode — Approximate Gradient Coding via Sparse Random Graphs
+//!
+//! A production-quality reproduction of Charles, Papailiopoulos &
+//! Ellenberg (2017) as a three-layer Rust + JAX + Pallas system. See
+//! README.md for the architecture and DESIGN.md for the experiment map.
+//!
+//! * [`codes`] — FRC / BGC / rBGC / s-regular / cyclic constructions.
+//! * [`decode`] — one-step, optimal (LSQR), and algorithmic decoders.
+//! * [`stragglers`] — random and latency-driven straggler models.
+//! * [`adversary`] — Thm-10 FRC attack, greedy/local-search/exhaustive
+//!   heuristics, and the Thm-11 DkS reduction.
+//! * [`sim`] — Monte-Carlo harness regenerating Figures 2-5 and the
+//!   theorem tables.
+//! * [`runtime`] — PJRT engine pool executing the AOT HLO artifacts.
+//! * [`coordinator`] — master/worker gather, deadline, decode.
+//! * [`training`] — synthetic data + the end-to-end coded GD loop.
+//! * [`graph`], [`linalg`], [`util`] — substrates built from scratch.
+
+pub mod adversary;
+pub mod codes;
+pub mod coordinator;
+pub mod decode;
+pub mod graph;
+pub mod linalg;
+pub mod runtime;
+pub mod sim;
+pub mod stragglers;
+pub mod training;
+pub mod util;

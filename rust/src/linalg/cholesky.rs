@@ -1,0 +1,133 @@
+//! Dense Cholesky solve — the cross-validation decoder.
+//!
+//! For small k the optimal decode can be done by normal equations
+//! (A^T A + eps I) x = A^T b with a dense Cholesky factorization. Tests
+//! use this to validate LSQR; the figure harness uses LSQR.
+
+use super::dense::DenseMatrix;
+
+/// Cholesky factor L (lower triangular) of an SPD matrix, or None if the
+/// matrix is not positive definite within tolerance.
+pub fn cholesky(a: &DenseMatrix) -> Option<DenseMatrix> {
+    assert_eq!(a.rows, a.cols, "cholesky needs square input");
+    let n = a.rows;
+    let mut l = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b (forward substitution).
+pub fn forward_sub(l: &DenseMatrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * y[k];
+        }
+        y[i] = sum / l[(i, i)];
+    }
+    y
+}
+
+/// Solve L^T x = y (backward substitution).
+pub fn backward_sub(l: &DenseMatrix, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    x
+}
+
+/// Solve the regularized normal equations (A^T A + ridge I) x = A^T b.
+///
+/// `ridge > 0` guarantees positive-definiteness even for rank-deficient A
+/// (e.g. FRC's duplicate columns); 1e-10 perturbs err(A) negligibly at
+/// the k=100 scales of the paper's figures.
+pub fn solve_normal_equations(a: &DenseMatrix, b: &[f64], ridge: f64) -> Option<Vec<f64>> {
+    let mut gram = a.gram();
+    for i in 0..gram.rows {
+        gram[(i, i)] += ridge;
+    }
+    let l = cholesky(&gram)?;
+    let atb = a.t_matvec(b);
+    let y = forward_sub(&l, &atb);
+    Some(backward_sub(&l, &y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::norm2;
+
+    #[test]
+    fn factorizes_spd() {
+        let a = DenseMatrix::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let l = cholesky(&a).unwrap();
+        let llt = l.matmul(&l.transpose());
+        for i in 0..2 {
+            for j in 0..2 {
+                assert!((llt[(i, j)] - a[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solves_least_squares_via_normal_equations() {
+        let a = DenseMatrix::from_rows(&[vec![1.0, 0.0], vec![1.0, 1.0], vec![1.0, 2.0]]);
+        let b = [1.0, 2.0, 4.0];
+        let x = solve_normal_equations(&a, &b, 1e-12).unwrap();
+        // Known LS solution for this system: intercept 5/6, slope 3/2.
+        assert!((x[0] - 5.0 / 6.0).abs() < 1e-6, "{x:?}");
+        assert!((x[1] - 1.5).abs() < 1e-6, "{x:?}");
+    }
+
+    #[test]
+    fn ridge_handles_rank_deficiency() {
+        // Duplicate columns: unregularized normal equations are singular.
+        let a = DenseMatrix::from_rows(&[vec![1.0, 1.0], vec![0.0, 0.0]]);
+        let x = solve_normal_equations(&a, &[1.0, 1.0], 1e-10).unwrap();
+        let ax = a.matvec(&x);
+        let res = [(ax[0] - 1.0), (ax[1] - 1.0)];
+        assert!((norm2(&res) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn triangular_solves_roundtrip() {
+        let l = DenseMatrix::from_rows(&[vec![2.0, 0.0], vec![1.0, 3.0]]);
+        let b = [4.0, 10.0];
+        let y = forward_sub(&l, &b);
+        assert!((y[0] - 2.0).abs() < 1e-14 && (y[1] - 8.0 / 3.0).abs() < 1e-14);
+        let x = backward_sub(&l, &y);
+        // Check L L^T x = b
+        let llt = l.matmul(&l.transpose());
+        let back = llt.matvec(&x);
+        assert!((back[0] - b[0]).abs() < 1e-12 && (back[1] - b[1]).abs() < 1e-12);
+    }
+}

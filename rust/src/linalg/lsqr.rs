@@ -1,0 +1,222 @@
+//! LSQR (Paige & Saunders 1982) — the optimal decoder's solver.
+//!
+//! Solves min_x ||A x - b||_2 using only matvec / t_matvec, so it runs
+//! directly on the sparse non-straggler matrix A without forming A^T A.
+//! This matters for the paper's Algorithm 2: A is k x r, sparse (s
+//! entries per column) and often rank-deficient (FRC has duplicate
+//! columns); LSQR converges to the minimum-norm least-squares solution.
+
+use super::sparse::CscMatrix;
+
+/// Convergence report for an LSQR run.
+#[derive(Clone, Debug)]
+pub struct LsqrResult {
+    pub x: Vec<f64>,
+    /// ||A x - b||_2 at the returned iterate.
+    pub residual_norm: f64,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Options for `lsqr`.
+#[derive(Clone, Debug)]
+pub struct LsqrOptions {
+    pub atol: f64,
+    pub btol: f64,
+    pub max_iter: usize,
+}
+
+impl Default for LsqrOptions {
+    fn default() -> Self {
+        LsqrOptions { atol: 1e-12, btol: 1e-12, max_iter: 0 }
+    }
+}
+
+/// min_x ||A x - b||. `max_iter = 0` defaults to 4 * max(rows, cols).
+pub fn lsqr(a: &CscMatrix, b: &[f64], opts: &LsqrOptions) -> LsqrResult {
+    let (m, n) = (a.rows, a.cols);
+    assert_eq!(b.len(), m);
+    let max_iter = if opts.max_iter == 0 { 4 * m.max(n) } else { opts.max_iter };
+
+    let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
+
+    // Golub-Kahan bidiagonalization state.
+    let mut u = b.to_vec();
+    let mut beta = norm(&u);
+    let mut x = vec![0.0; n];
+    if beta == 0.0 {
+        return LsqrResult { x, residual_norm: 0.0, iterations: 0, converged: true };
+    }
+    for ui in u.iter_mut() {
+        *ui /= beta;
+    }
+    let mut v = a.t_matvec(&u);
+    let mut alpha = norm(&v);
+    if alpha == 0.0 {
+        // b orthogonal to range(A): x = 0 is optimal.
+        return LsqrResult { x, residual_norm: beta, iterations: 0, converged: true };
+    }
+    for vi in v.iter_mut() {
+        *vi /= alpha;
+    }
+
+    let mut w = v.clone();
+    let mut phi_bar = beta;
+    let mut rho_bar = alpha;
+    let b_norm = beta;
+    let mut a_norm_sq = 0.0; // running estimate of ||A||_F^2 over the Krylov basis
+
+    let mut iterations = 0;
+    let mut converged = false;
+
+    // Scratch buffers reused across iterations (perf: allocation-free
+    // inner loop — see EXPERIMENTS.md §Perf).
+    let mut av = vec![0.0; m];
+    let mut atu = vec![0.0; n];
+
+    for it in 1..=max_iter {
+        iterations = it;
+
+        // u = A v - alpha u; beta = ||u||
+        a.matvec_into(&v, &mut av);
+        for i in 0..m {
+            u[i] = av[i] - alpha * u[i];
+        }
+        beta = norm(&u);
+        if beta > 0.0 {
+            for ui in u.iter_mut() {
+                *ui /= beta;
+            }
+        }
+
+        // v = A^T u - beta v; alpha = ||v||
+        a.t_matvec_into(&u, &mut atu);
+        for j in 0..n {
+            v[j] = atu[j] - beta * v[j];
+        }
+        alpha = norm(&v);
+        if alpha > 0.0 {
+            for vi in v.iter_mut() {
+                *vi /= alpha;
+            }
+        }
+
+        a_norm_sq += alpha * alpha + beta * beta;
+
+        // Givens rotation to eliminate beta from the bidiagonal system.
+        let rho = (rho_bar * rho_bar + beta * beta).sqrt();
+        let c = rho_bar / rho;
+        let s = beta / rho;
+        let theta = s * alpha;
+        rho_bar = -c * alpha;
+        let phi = c * phi_bar;
+        phi_bar *= s;
+
+        // Update x and the search direction w.
+        let t1 = phi / rho;
+        let t2 = -theta / rho;
+        for j in 0..n {
+            x[j] += t1 * w[j];
+            w[j] = v[j] + t2 * w[j];
+        }
+
+        // Stopping rules (Paige-Saunders criteria 1 & 2).
+        let res = phi_bar; // ||A x - b|| for the current iterate
+        let a_norm = a_norm_sq.sqrt();
+        // ||A^T r|| estimate:
+        let atr = phi_bar * alpha * c.abs();
+        if res <= opts.btol * b_norm + opts.atol * a_norm * norm(&x) {
+            converged = true;
+            break;
+        }
+        if a_norm > 0.0 && res > 0.0 && atr / (a_norm * res) <= opts.atol {
+            converged = true;
+            break;
+        }
+        if alpha == 0.0 {
+            converged = true;
+            break;
+        }
+    }
+
+    // Recompute the true residual (phi_bar is an estimate).
+    let r: Vec<f64> = {
+        let ax = a.matvec(&x);
+        b.iter().zip(ax).map(|(bi, axi)| bi - axi).collect()
+    };
+    LsqrResult { x, residual_norm: norm(&r), iterations, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::norm2;
+
+    fn csc(rows: usize, cols: Vec<Vec<(usize, f64)>>) -> CscMatrix {
+        CscMatrix::from_columns(rows, cols)
+    }
+
+    #[test]
+    fn solves_square_system_exactly() {
+        // A = [[2, 1], [1, 3]], b = [5, 10] -> x = [1, 3]
+        let a = csc(2, vec![vec![(0, 2.0), (1, 1.0)], vec![(0, 1.0), (1, 3.0)]]);
+        let r = lsqr(&a, &[5.0, 10.0], &LsqrOptions::default());
+        assert!(r.residual_norm < 1e-9, "residual {}", r.residual_norm);
+        assert!((r.x[0] - 1.0).abs() < 1e-8 && (r.x[1] - 3.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn overdetermined_least_squares() {
+        // A = [[1],[1],[1]], b = [1, 2, 3] -> x = 2, residual^2 = 2
+        let a = csc(3, vec![vec![(0, 1.0), (1, 1.0), (2, 1.0)]]);
+        let r = lsqr(&a, &[1.0, 2.0, 3.0], &LsqrOptions::default());
+        assert!((r.x[0] - 2.0).abs() < 1e-10);
+        assert!((r.residual_norm - 2.0_f64.sqrt()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn rank_deficient_duplicate_columns() {
+        // Two identical columns (the FRC case): minimum-norm solution
+        // splits the weight, residual is still the projection error.
+        let a = csc(2, vec![vec![(0, 1.0)], vec![(0, 1.0)]]);
+        let r = lsqr(&a, &[1.0, 1.0], &LsqrOptions::default());
+        // err(A) = ||proj_residual||^2 = 1 (second coordinate unreachable)
+        assert!((r.residual_norm - 1.0).abs() < 1e-10, "residual {}", r.residual_norm);
+        assert!((r.x[0] + r.x[1] - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn zero_rhs() {
+        let a = csc(2, vec![vec![(0, 1.0)], vec![(1, 1.0)]]);
+        let r = lsqr(&a, &[0.0, 0.0], &LsqrOptions::default());
+        assert_eq!(r.x, vec![0.0, 0.0]);
+        assert_eq!(r.residual_norm, 0.0);
+    }
+
+    #[test]
+    fn b_orthogonal_to_range() {
+        // A's range is span(e0); b = e1.
+        let a = csc(2, vec![vec![(0, 1.0)]]);
+        let r = lsqr(&a, &[0.0, 1.0], &LsqrOptions::default());
+        assert!(norm2(&r.x) < 1e-12);
+        assert!((r.residual_norm - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_tall_system_agrees_with_normal_equations() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(42);
+        let (m, n) = (30, 8);
+        let cols: Vec<Vec<(usize, f64)>> = (0..n)
+            .map(|_| (0..m).map(|i| (i, rng.normal())).collect())
+            .collect();
+        let a = csc(m, cols);
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let r = lsqr(&a, &b, &LsqrOptions::default());
+        // Optimality condition: A^T (A x - b) = 0.
+        let ax = a.matvec(&r.x);
+        let res: Vec<f64> = ax.iter().zip(&b).map(|(axi, bi)| axi - bi).collect();
+        let grad = a.t_matvec(&res);
+        assert!(norm2(&grad) < 1e-6, "gradient norm {}", norm2(&grad));
+    }
+}

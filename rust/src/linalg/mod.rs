@@ -1,0 +1,15 @@
+//! Numerical substrate: dense/sparse matrices, least-squares solvers,
+//! and spectral estimation. Everything the decoders and the adversarial
+//! analysis need, built from scratch (no external linalg crates in the
+//! offline vendor set).
+
+pub mod cholesky;
+pub mod dense;
+pub mod lsqr;
+pub mod power_iter;
+pub mod sparse;
+
+pub use dense::{axpy, dot, norm2, norm2_sq, scale, DenseMatrix};
+pub use lsqr::{lsqr, LsqrOptions, LsqrResult};
+pub use power_iter::{regular_graph_lambda, spectral_norm};
+pub use sparse::CscMatrix;

@@ -1,0 +1,138 @@
+//! Power iteration — spectral norm ||A||_2 and graph spectral gap.
+//!
+//! Two uses in the paper:
+//!  * the algorithmic decoder's step size ν = ||A||_2^2 (Fig. 5 setting),
+//!  * λ(G) = max{|λ2|, |λk|} for s-regular expander codes (Thm 3): for an
+//!    s-regular graph the top eigenpair is (s, 1/sqrt(k)), so λ(G) is the
+//!    spectral norm of the rank-1-deflated operator v -> Av - (s/k)(1^T v)1.
+
+use super::sparse::CscMatrix;
+use crate::util::Rng;
+
+/// Estimate ||A||_2 via power iteration on A^T A. Deterministic given the
+/// rng; relative accuracy ~1e-8 at the paper's problem sizes.
+pub fn spectral_norm(a: &CscMatrix, rng: &mut Rng, max_iter: usize, tol: f64) -> f64 {
+    let n = a.cols;
+    if n == 0 || a.nnz() == 0 {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm == 0.0 {
+        v[0] = 1.0;
+        norm = 1.0;
+    }
+    for vi in v.iter_mut() {
+        *vi /= norm;
+    }
+    let mut sigma_sq = 0.0;
+    for _ in 0..max_iter {
+        let av = a.matvec(&v);
+        let atav = a.t_matvec(&av);
+        let new_sigma_sq = atav.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if new_sigma_sq == 0.0 {
+            return 0.0;
+        }
+        for (vi, wi) in v.iter_mut().zip(&atav) {
+            *vi = wi / new_sigma_sq;
+        }
+        if (new_sigma_sq - sigma_sq).abs() <= tol * new_sigma_sq {
+            sigma_sq = new_sigma_sq;
+            break;
+        }
+        sigma_sq = new_sigma_sq;
+    }
+    sigma_sq.sqrt()
+}
+
+/// λ(G) = max{|λ2|, |λk|} for the adjacency matrix of an s-regular graph.
+///
+/// Power iteration on the deflated operator B = A - (s/k) J, whose
+/// spectrum is {0} ∪ {λ2..λk}: its spectral norm is exactly λ(G).
+pub fn regular_graph_lambda(adj: &CscMatrix, s: usize, rng: &mut Rng, max_iter: usize) -> f64 {
+    assert_eq!(adj.rows, adj.cols, "adjacency must be square");
+    let k = adj.rows;
+    let shift = s as f64 / k as f64;
+    let mut v: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+    // Remove the all-ones component up front.
+    let mean = v.iter().sum::<f64>() / k as f64;
+    for vi in v.iter_mut() {
+        *vi -= mean;
+    }
+    let mut lambda = 0.0;
+    for _ in 0..max_iter {
+        let av = adj.matvec(&v);
+        let ones_dot = v.iter().sum::<f64>();
+        let mut w: Vec<f64> = av.iter().map(|&x| x - shift * ones_dot).collect();
+        // Re-deflate to fight numerical drift back toward 1.
+        let wm = w.iter().sum::<f64>() / k as f64;
+        for wi in w.iter_mut() {
+            *wi -= wm;
+        }
+        let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        for wi in w.iter_mut() {
+            *wi /= norm;
+        }
+        lambda = norm;
+        v = w;
+    }
+    lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        // diag(3, 1) -> ||A|| = 3
+        let a = CscMatrix::from_columns(2, vec![vec![(0, 3.0)], vec![(1, 1.0)]]);
+        let mut rng = Rng::new(1);
+        let s = spectral_norm(&a, &mut rng, 200, 1e-12);
+        assert!((s - 3.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn spectral_norm_of_ones_matrix() {
+        // J (3x3): ||J|| = 3.
+        let cols = (0..3).map(|_| (0..3).map(|i| (i, 1.0)).collect()).collect();
+        let a = CscMatrix::from_columns(3, cols);
+        let mut rng = Rng::new(2);
+        let s = spectral_norm(&a, &mut rng, 200, 1e-12);
+        assert!((s - 3.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn spectral_norm_zero_matrix() {
+        let a = CscMatrix::from_supports(3, vec![vec![], vec![], vec![]]);
+        let mut rng = Rng::new(3);
+        assert_eq!(spectral_norm(&a, &mut rng, 50, 1e-10), 0.0);
+    }
+
+    #[test]
+    fn lambda_of_complete_graph() {
+        // K_4 is 3-regular with eigenvalues {3, -1, -1, -1}: λ(G) = 1.
+        let k = 4;
+        let cols: Vec<Vec<usize>> =
+            (0..k).map(|j| (0..k).filter(|&i| i != j).collect()).collect();
+        let adj = CscMatrix::from_supports(k, cols);
+        let mut rng = Rng::new(4);
+        let l = regular_graph_lambda(&adj, 3, &mut rng, 300);
+        assert!((l - 1.0).abs() < 1e-6, "{l}");
+    }
+
+    #[test]
+    fn lambda_of_cycle() {
+        // C_6 is 2-regular; λ(G) = max |2 cos(2πj/6)| over j=1..5 = 2cos(π/3)*... = 2*cos(60°)=1? Actually eigenvalues 2cos(2πj/6): {2, 1, -1, -2, -1, 1} -> λ = 2 (the -2 from bipartiteness).
+        let k = 6;
+        let cols: Vec<Vec<usize>> =
+            (0..k).map(|j| vec![(j + 1) % k, (j + k - 1) % k]).collect();
+        let adj = CscMatrix::from_supports(k, cols);
+        let mut rng = Rng::new(5);
+        let l = regular_graph_lambda(&adj, 2, &mut rng, 500);
+        assert!((l - 2.0).abs() < 1e-4, "{l}");
+    }
+}

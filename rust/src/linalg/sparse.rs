@@ -1,0 +1,249 @@
+//! Compressed-sparse-column matrices — the native representation of
+//! assignment matrices G and non-straggler submatrices A.
+//!
+//! Columns are first-class because the paper's objects are column-wise:
+//! column j of G is worker j's task list + combination coefficients, and
+//! A is a *column* submatrix of G. CSC makes `select_columns` (straggler
+//! removal) and the one-step decode (a column-sum pass) O(nnz).
+
+use super::dense::DenseMatrix;
+
+/// Sparse matrix in CSC layout with explicit f64 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// col_ptr[j]..col_ptr[j+1] indexes row_idx/vals for column j.
+    pub col_ptr: Vec<usize>,
+    pub row_idx: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from per-column (row, value) lists. Rows within a column
+    /// need not be sorted; they are sorted here for deterministic layout.
+    pub fn from_columns(rows: usize, columns: Vec<Vec<(usize, f64)>>) -> Self {
+        let cols = columns.len();
+        let mut col_ptr = Vec::with_capacity(cols + 1);
+        let mut row_idx = Vec::new();
+        let mut vals = Vec::new();
+        col_ptr.push(0);
+        for mut col in columns {
+            col.sort_unstable_by_key(|&(r, _)| r);
+            for (r, v) in col {
+                assert!(r < rows, "row index {r} out of bounds ({rows})");
+                row_idx.push(r);
+                vals.push(v);
+            }
+            col_ptr.push(row_idx.len());
+        }
+        CscMatrix { rows, cols, col_ptr, row_idx, vals }
+    }
+
+    /// Build a boolean matrix from per-column support sets (all values 1).
+    pub fn from_supports(rows: usize, supports: Vec<Vec<usize>>) -> Self {
+        Self::from_columns(
+            rows,
+            supports
+                .into_iter()
+                .map(|s| s.into_iter().map(|r| (r, 1.0)).collect())
+                .collect(),
+        )
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    /// Entries of column j as (row, value) pairs.
+    pub fn col(&self, j: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let range = self.col_ptr[j]..self.col_ptr[j + 1];
+        self.row_idx[range.clone()].iter().copied().zip(self.vals[range].iter().copied())
+    }
+
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// The column-submatrix with the given column indices (the paper's A
+    /// from G given the non-straggler set). Indices may repeat.
+    pub fn select_columns(&self, idx: &[usize]) -> CscMatrix {
+        let mut col_ptr = Vec::with_capacity(idx.len() + 1);
+        let nnz_est: usize = idx.iter().map(|&j| self.col_nnz(j)).sum();
+        let mut row_idx = Vec::with_capacity(nnz_est);
+        let mut vals = Vec::with_capacity(nnz_est);
+        col_ptr.push(0);
+        for &j in idx {
+            assert!(j < self.cols, "column {j} out of bounds ({})", self.cols);
+            let range = self.col_ptr[j]..self.col_ptr[j + 1];
+            row_idx.extend_from_slice(&self.row_idx[range.clone()]);
+            vals.extend_from_slice(&self.vals[range]);
+            col_ptr.push(row_idx.len());
+        }
+        CscMatrix { rows: self.rows, cols: idx.len(), col_ptr, row_idx, vals }
+    }
+
+    /// y = A x (x over columns). O(nnz).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A x written into a caller-provided buffer (hot-path variant:
+    /// LSQR and the algorithmic decoder call this every iteration, so
+    /// per-iteration allocation would dominate at the paper's k=100).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        y.fill(0.0);
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                y[self.row_idx[k]] += self.vals[k] * xj;
+            }
+        }
+    }
+
+    /// y = A^T x (x over rows). O(nnz).
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.t_matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A^T x into a caller-provided buffer (see `matvec_into`).
+    pub fn t_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        for j in 0..self.cols {
+            let mut acc = 0.0;
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                acc += self.vals[k] * x[self.row_idx[k]];
+            }
+            y[j] = acc;
+        }
+    }
+
+    /// Row sums: A 1_cols in one pass (the one-step decode hot path).
+    pub fn row_sums(&self) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        for k in 0..self.nnz() {
+            y[self.row_idx[k]] += self.vals[k];
+        }
+        y
+    }
+
+    /// Per-row nonzero counts (left-vertex degrees of the bipartite view).
+    pub fn row_degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.rows];
+        for &r in &self.row_idx {
+            d[r] += 1;
+        }
+        d
+    }
+
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                m[(self.row_idx[k], j)] += self.vals[k];
+            }
+        }
+        m
+    }
+
+    /// Support (sorted row indices) of column j — used to hash duplicate
+    /// columns in the FRC adversary.
+    pub fn col_support(&self, j: usize) -> &[usize] {
+        &self.row_idx[self.col_ptr[j]..self.col_ptr[j + 1]]
+    }
+
+    /// Remove entries of column j, keeping only rows in `keep` (used by
+    /// rBGC regularization).
+    pub fn is_boolean(&self) -> bool {
+        self.vals.iter().all(|&v| v == 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> CscMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        CscMatrix::from_columns(
+            3,
+            vec![vec![(0, 1.0), (2, 4.0)], vec![(1, 3.0)], vec![(0, 2.0), (2, 5.0)]],
+        )
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = example();
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(a.matvec(&x), a.to_dense().matvec(&x));
+    }
+
+    #[test]
+    fn t_matvec_matches_dense() {
+        let a = example();
+        let x = vec![1.0, -1.0, 0.5];
+        assert_eq!(a.t_matvec(&x), a.to_dense().t_matvec(&x));
+    }
+
+    #[test]
+    fn select_columns_subsets() {
+        let a = example();
+        let s = a.select_columns(&[2, 0]);
+        assert_eq!(s.cols, 2);
+        assert_eq!(s.to_dense().col(0), vec![2.0, 0.0, 5.0]);
+        assert_eq!(s.to_dense().col(1), vec![1.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn select_columns_allows_repeats() {
+        let a = example();
+        let s = a.select_columns(&[1, 1]);
+        assert_eq!(s.cols, 2);
+        assert_eq!(s.nnz(), 2);
+    }
+
+    #[test]
+    fn row_sums_matches_matvec_ones() {
+        let a = example();
+        assert_eq!(a.row_sums(), a.matvec(&vec![1.0; 3]));
+    }
+
+    #[test]
+    fn degrees_and_support() {
+        let a = example();
+        assert_eq!(a.row_degrees(), vec![2, 1, 2]);
+        assert_eq!(a.col_support(0), &[0, 2]);
+        assert_eq!(a.col_nnz(1), 1);
+    }
+
+    #[test]
+    fn from_supports_boolean() {
+        let a = CscMatrix::from_supports(4, vec![vec![0, 3], vec![1]]);
+        assert!(a.is_boolean());
+        assert_eq!(a.nnz(), 3);
+    }
+
+    #[test]
+    fn unsorted_columns_are_sorted() {
+        let a = CscMatrix::from_columns(3, vec![vec![(2, 5.0), (0, 1.0)]]);
+        assert_eq!(a.col_support(0), &[0, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_row_panics() {
+        let _ = CscMatrix::from_supports(2, vec![vec![5]]);
+    }
+}

@@ -1,0 +1,374 @@
+//! `repro` — CLI for the gradcode reproduction.
+//!
+//! Subcommands (arg parsing is hand-rolled; clap is not in the offline
+//! vendor set):
+//!
+//!   repro figures --fig 2|3|4|5 [--trials N] [--k K] [--seed S]
+//!       Regenerate a paper figure's series as CSV on stdout.
+//!   repro tables --table thm5|thm6|thm8|thm10|thm11|thm21|thm24
+//!       Regenerate a theorem-vs-measured table as CSV.
+//!   repro train [--scheme frc|bgc|rbgc|regular|cyclic] [--model linear|mlp]
+//!               [--decoder onestep|optimal] [--k K] [--s S] [--steps N]
+//!               [--delta D] [--backend pjrt|native] [--engines E]
+//!       Run the end-to-end coded training loop; per-round CSV on stdout.
+//!   repro adversary [--k K] [--s S] [--r R]
+//!       Compare straggler-selection strategies on every code.
+//!   repro demo
+//!       30-second tour: one figure point, one attack, one training run.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use gradcode::adversary::{
+    asp_objective, frc_worst_stragglers, greedy_stragglers, local_search_stragglers,
+};
+use gradcode::codes::Scheme;
+use gradcode::coordinator::{DecoderKind, ModelKind};
+use gradcode::decode::OptimalDecoder;
+use gradcode::runtime::{Backend, EnginePool, LinearDims, Manifest, MlpDims};
+use gradcode::sim::{figures, tables, FigPoint, FigureConfig, MonteCarlo, TableRow};
+use gradcode::stragglers::{DeadlinePolicy, LatencyModel};
+use gradcode::training::{train, TrainConfig};
+use gradcode::util::Rng;
+
+/// Tiny argv parser: --key value pairs after a subcommand.
+struct Args {
+    sub: String,
+    kv: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let sub = it.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = Vec::new();
+        while let Some(key) = it.next() {
+            let key = key
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {key:?}"))?
+                .to_string();
+            let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            kv.push((key, val));
+        }
+        Ok(Args { sub, kv })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{key} {v:?}")))
+            .unwrap_or(Ok(default))
+    }
+
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{key} {v:?}")))
+            .unwrap_or(Ok(default))
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().with_context(|| format!("--{key} {v:?}")))
+            .unwrap_or(Ok(default))
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.sub.as_str() {
+        "figures" => cmd_figures(&args),
+        "tables" => cmd_tables(&args),
+        "train" => cmd_train(&args),
+        "adversary" => cmd_adversary(&args),
+        "ablation" => cmd_ablation(&args),
+        "inspect" => cmd_inspect(&args),
+        "demo" => cmd_demo(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}; try `repro help`"),
+    }
+}
+
+const HELP: &str = "\
+repro — Approximate Gradient Coding via Sparse Random Graphs (2017)
+
+USAGE:
+  repro figures --fig 2|3|4|5 [--trials N] [--k K] [--seed S] [--tmax T]
+  repro tables  --table thm5|thm6|thm8|thm10|thm11|thm21|thm24 [--trials N]
+  repro train   [--scheme S] [--model linear|mlp] [--decoder onestep|optimal]
+                [--k K] [--s S] [--steps N] [--delta D] [--lr LR]
+                [--backend pjrt|native] [--engines E] [--seed S]
+  repro adversary [--k K] [--s S] [--r R] [--seed S]
+  repro ablation  --study rho|rbgc|lsqr|normalization [--trials N]
+  repro inspect   [--artifact NAME]     # HLO stats of an AOT artifact
+  repro demo
+";
+
+// -------------------------------------------------------------- figures
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let fig = args.usize("fig", 2)?;
+    let trials = args.usize("trials", 5000)?;
+    let seed = args.u64("seed", 2017)?;
+    let k = args.usize("k", 100)?;
+    let tmax = args.usize("tmax", 15)?;
+
+    let mut cfg = FigureConfig::paper(trials, seed);
+    cfg.k = k;
+    let pts: Vec<FigPoint> = match fig {
+        2 => figures::figure2(&cfg),
+        3 => figures::figure3(&cfg),
+        4 => figures::figure4(&cfg),
+        5 => figures::figure5(&cfg, tmax),
+        other => bail!("unknown figure {other} (paper has figures 2-5)"),
+    };
+    println!("{}", FigPoint::csv_header());
+    for p in pts {
+        println!("{}", p.to_csv());
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- tables
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let table = args.get("table").unwrap_or("thm5");
+    let trials = args.usize("trials", 2000)?;
+    let seed = args.u64("seed", 2017)?;
+    let k = args.usize("k", 100)?;
+    let s = args.usize("s", 10)?;
+    let mc = MonteCarlo::new(trials, seed);
+    let deltas = [0.1, 0.25, 0.5, 0.75];
+
+    let rows: Vec<TableRow> = match table {
+        "thm5" => tables::thm5_table(k, s, &deltas, &mc),
+        "thm6" => tables::thm6_table(k, s, &deltas, &mc),
+        "thm8" => tables::thm8_table(k, &[0, 1, 2], &[0.1, 0.25, 0.5], &mc),
+        "thm10" => tables::thm10_table(k, s, &[k / 4, k / 2, 3 * k / 4], &mc),
+        "thm11" => tables::thm11_table(seed),
+        "thm21" => tables::thm21_table(
+            Scheme::Bgc,
+            &[50, 100, 200, 400],
+            |k| ((k as f64).ln().ceil() as usize).max(2),
+            0.25,
+            &mc,
+        ),
+        "thm24" => tables::thm21_table(
+            Scheme::Rbgc,
+            &[50, 100, 200, 400],
+            |k| ((k as f64).ln().ceil() as usize).max(2),
+            0.25,
+            &mc,
+        ),
+        other => bail!("unknown table {other:?}"),
+    };
+    println!("{}", TableRow::csv_header());
+    for r in rows {
+        println!("{}", r.to_csv());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- train
+
+/// Build the requested backend. PJRT needs `make artifacts` first.
+fn build_backend(args: &Args) -> Result<(Option<EnginePool>, Backend)> {
+    let which = args.get("backend").unwrap_or("pjrt");
+    match which {
+        "pjrt" => {
+            let manifest = Manifest::load(Manifest::default_dir())?;
+            let engines = args.usize("engines", 2)?;
+            let pool = EnginePool::start(manifest, engines)?;
+            let backend = Backend::Pjrt(pool.handle());
+            Ok((Some(pool), backend))
+        }
+        "native" => Ok((
+            None,
+            // Native dims mirror the aot.py defaults.
+            Backend::Native {
+                linear: LinearDims { m: 32, d: 64 },
+                mlp: MlpDims { m: 32, d_in: 32, d_hidden: 64, d_out: 16, flat_dim: 3152 },
+                s_max: 10,
+            },
+        )),
+        other => bail!("unknown backend {other:?} (pjrt|native)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let scheme = Scheme::parse(args.get("scheme").unwrap_or("frc"))
+        .ok_or_else(|| anyhow!("bad --scheme"))?;
+    let model = match args.get("model").unwrap_or("linear") {
+        "linear" => ModelKind::Linear,
+        "mlp" => ModelKind::Mlp,
+        other => bail!("unknown model {other:?}"),
+    };
+    let k = args.usize("k", 100)?;
+    let s = args.usize("s", 10)?;
+    let steps = args.usize("steps", 200)?;
+    let delta = args.f64("delta", 0.2)?;
+    let lr = args.f64("lr", 0.5)?;
+
+    let (_pool, backend) = build_backend(args)?;
+    let mut cfg = TrainConfig::new(scheme, k, s, model);
+    cfg.steps = steps;
+    cfg.lr = lr;
+    cfg.coordinator.seed = args.u64("seed", 0)?;
+    cfg.coordinator.decoder = DecoderKind::parse(args.get("decoder").unwrap_or("onestep"))
+        .ok_or_else(|| anyhow!("bad --decoder"))?;
+    cfg.coordinator.latency = LatencyModel::Pareto { scale: 0.02, shape: 1.5 };
+    let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
+    cfg.coordinator.deadline = DeadlinePolicy::FastestR(r);
+
+    eprintln!(
+        "training {} model, scheme={} k={k} s={s} r={r} decoder={} backend={}",
+        match model {
+            ModelKind::Linear => "linear",
+            ModelKind::Mlp => "mlp",
+        },
+        scheme.name(),
+        cfg.coordinator.decoder.name(),
+        backend.name()
+    );
+    let out = train(&backend, &cfg)?;
+    print!("{}", out.history.to_csv());
+    eprintln!(
+        "final loss {:.6e}, mean decode err {:.3e}, total gather {:.2}s",
+        out.history.final_loss(),
+        out.history.mean_decode_err(),
+        out.history.total_gather_time()
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------ adversary
+
+fn cmd_adversary(args: &Args) -> Result<()> {
+    let k = args.usize("k", 100)?;
+    let s = args.usize("s", 10)?;
+    let r = args.usize("r", (k * 4) / 5)?;
+    let seed = args.u64("seed", 2017)?;
+    let rho = k as f64 / (r as f64 * s as f64);
+    let mut rng = Rng::new(seed);
+
+    println!("scheme,strategy,objective,err_optimal");
+    for scheme in [Scheme::Frc, Scheme::Bgc, Scheme::Rbgc, Scheme::RegularGraph, Scheme::Cyclic] {
+        let g = scheme.build(k, k, s).assignment(&mut rng);
+        let report = |strategy: &str, ns: &[usize]| {
+            let obj = asp_objective(&g, ns, rho);
+            let err = OptimalDecoder::new().err(&g.select_columns(ns));
+            println!("{},{strategy},{obj:.6e},{err:.6e}", scheme.name());
+        };
+        report("random", &rng.sample_indices(k, r));
+        report("frc-block-attack", &frc_worst_stragglers(&g, r));
+        report("greedy", &greedy_stragglers(&g, r, rho));
+        report("local-search", &local_search_stragglers(&g, r, rho, 5));
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- ablation
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    use gradcode::sim::ablations;
+    let study = args.get("study").unwrap_or("rho");
+    let trials = args.usize("trials", 500)?;
+    let mc = MonteCarlo::new(trials, args.u64("seed", 2017)?);
+    let (k, s) = (args.usize("k", 100)?, args.usize("s", 10)?);
+
+    let pts = match study {
+        "rho" => ablations::rho_sweep(
+            Scheme::Bgc,
+            k,
+            s,
+            0.25,
+            &[0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 2.0],
+            &mc,
+        ),
+        "rbgc" => ablations::rbgc_threshold(
+            k,
+            s,
+            0.25,
+            &[(1.0, 1.0), (1.5, 1.0), (2.0, 1.0), (2.0, 1.5), (3.0, 2.0)],
+            &mc,
+        ),
+        "lsqr" => ablations::lsqr_tolerance(Scheme::Bgc, k, s, 0.25, &[1, 2, 4, 8, 16, 64], &mc),
+        "normalization" => {
+            ablations::normalization(Scheme::Bgc, k, s, &[0.1, 0.3, 0.5], &mc)
+        }
+        other => bail!("unknown study {other:?} (rho|rbgc|lsqr|normalization)"),
+    };
+    println!("{}", gradcode::sim::AblationPoint::csv_header());
+    for p in pts {
+        println!("{}", p.to_csv());
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------- inspect
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let names: Vec<String> = match args.get("artifact") {
+        Some(n) => vec![n.to_string()],
+        None => manifest.artifacts.iter().map(|a| a.name.clone()).collect(),
+    };
+    for name in names {
+        let spec = manifest.spec(&name)?;
+        let stats = gradcode::runtime::inspect_file(&spec.path)?;
+        println!(
+            "{name}: module={} computations={} instructions={} entry-params={}",
+            stats.module_name, stats.computations, stats.instructions, stats.parameters
+        );
+        let mut ops: Vec<(&String, &usize)> = stats.opcodes.iter().collect();
+        ops.sort_by_key(|&(_, c)| std::cmp::Reverse(*c));
+        for (op, count) in ops.iter().take(10) {
+            println!("    {op:<24} {count}");
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- demo
+
+fn cmd_demo() -> Result<()> {
+    println!("== 1. decoding error at one figure point (k=100, s=5, delta=0.3) ==");
+    let mc = MonteCarlo::new(300, 1);
+    let cfg = FigureConfig { k: 100, s_values: vec![5], deltas: vec![0.3], mc };
+    for p in figures::figure2(&cfg) {
+        println!("  one-step {}: err1/k = {:.4}", p.scheme, p.value);
+    }
+    for p in figures::figure3(&cfg) {
+        println!("  optimal  {}: err/k  = {:.4}", p.scheme, p.value);
+    }
+
+    println!("== 2. the Thm-10 attack on FRC (k=100, s=10, r=80) ==");
+    let mut rng = Rng::new(2);
+    let g = Scheme::Frc.build(100, 100, 10).assignment(&mut rng);
+    let ns = frc_worst_stragglers(&g, 80);
+    let err = OptimalDecoder::new().err(&g.select_columns(&ns));
+    println!("  adversarial err = {err} (theory: k - r = 20)");
+
+    println!("== 3. coded training, native backend (k=20, s=5, 25% stragglers) ==");
+    let backend = Backend::Native {
+        linear: LinearDims { m: 16, d: 16 },
+        mlp: MlpDims { m: 8, d_in: 8, d_hidden: 16, d_out: 4, flat_dim: 8 * 16 + 16 + 16 * 4 + 4 },
+        s_max: 10,
+    };
+    let mut cfg = TrainConfig::new(Scheme::Frc, 20, 5, ModelKind::Linear);
+    cfg.steps = 30;
+    cfg.coordinator.deadline = DeadlinePolicy::FastestR(15);
+    let out = train(&backend, &cfg)?;
+    println!(
+        "  loss {:.4} -> {:.4} over {} rounds with 5/20 stragglers per round",
+        out.history.rounds[0].loss,
+        out.history.final_loss(),
+        out.history.rounds.len()
+    );
+    println!("demo OK");
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parses `artifacts/manifest.json` (shapes + files)
+//! so the engine can validate inputs before handing them to PJRT.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Static shapes of the linear partition gradient.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinearDims {
+    pub m: usize,
+    pub d: usize,
+}
+
+/// Static shapes of the MLP partition gradient.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MlpDims {
+    pub m: usize,
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub d_out: usize,
+    pub flat_dim: usize,
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    /// Input shapes in argument order (row-major dims).
+    pub inputs: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub s_max: usize,
+    pub linear: LinearDims,
+    pub mlp: MlpDims,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        if j.get("format")?.as_str()? != "hlo-text" {
+            bail!("unsupported artifact format (expected hlo-text)");
+        }
+
+        let lin = j.get("linear")?;
+        let linear = LinearDims {
+            m: lin.get("m")?.as_usize()?,
+            d: lin.get("d")?.as_usize()?,
+        };
+        let mj = j.get("mlp")?;
+        let mlp = MlpDims {
+            m: mj.get("m")?.as_usize()?,
+            d_in: mj.get("d_in")?.as_usize()?,
+            d_hidden: mj.get("d_hidden")?.as_usize()?,
+            d_out: mj.get("d_out")?.as_usize()?,
+            flat_dim: mj.get("flat_dim")?.as_usize()?,
+        };
+        let expected_flat =
+            mlp.d_in * mlp.d_hidden + mlp.d_hidden + mlp.d_hidden * mlp.d_out + mlp.d_out;
+        if expected_flat != mlp.flat_dim {
+            bail!("manifest flat_dim {} != derived {}", mlp.flat_dim, expected_flat);
+        }
+
+        let mut artifacts = Vec::new();
+        for (name, spec) in j.get("artifacts")?.as_obj()? {
+            let file = spec.get("file")?.as_str()?;
+            let inputs = spec
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact file missing: {path:?}");
+            }
+            artifacts.push(ArtifactSpec { name: name.clone(), path, inputs });
+        }
+
+        Ok(Manifest {
+            dir,
+            s_max: j.get("s_max")?.as_usize()?,
+            linear,
+            mlp,
+            artifacts,
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// Default artifact directory: $GRADCODE_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("GRADCODE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+/// Number of elements implied by a shape.
+pub fn shape_len(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gradcode-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    const BODY: &str = r#"{
+      "format": "hlo-text", "dtype": "f32", "s_max": 4,
+      "linear": {"m": 8, "d": 16},
+      "mlp": {"m": 8, "d_in": 8, "d_hidden": 16, "d_out": 4, "flat_dim": 212},
+      "artifacts": {
+        "grad_linear": {"file": "grad_linear.hlo.txt", "inputs": [[8,16],[16],[8]]}
+      }
+    }"#;
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = tmpdir("ok");
+        write_manifest(&dir, BODY);
+        std::fs::write(dir.join("grad_linear.hlo.txt"), "HloModule m").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.s_max, 4);
+        assert_eq!(m.linear, LinearDims { m: 8, d: 16 });
+        assert_eq!(m.mlp.flat_dim, 212);
+        let spec = m.spec("grad_linear").unwrap();
+        assert_eq!(spec.inputs, vec![vec![8, 16], vec![16], vec![8]]);
+        assert!(m.spec("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifact_file() {
+        let dir = tmpdir("missing");
+        write_manifest(&dir, BODY);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_flat_dim() {
+        let dir = tmpdir("flat");
+        write_manifest(&dir, &BODY.replace("212", "999"));
+        std::fs::write(dir.join("grad_linear.hlo.txt"), "HloModule m").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn shape_len_products() {
+        assert_eq!(shape_len(&[8, 16]), 128);
+        assert_eq!(shape_len(&[]), 1);
+    }
+}

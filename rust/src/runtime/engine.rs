@@ -1,0 +1,224 @@
+//! PJRT execution engine pool.
+//!
+//! The `xla` crate's PjRtClient is Rc-based (not Send), so each engine
+//! runs on its own OS thread with its own CPU client and its own compiled
+//! copies of every artifact. Callers hold a cheap, clonable `EngineHandle`
+//! and submit `(artifact name, input buffers)`; requests are distributed
+//! over the pool via a shared work queue. Python never runs here — the
+//! engines load the HLO text that `make artifacts` produced.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::{shape_len, Manifest};
+
+/// A request: run `artifact` on `inputs` (row-major f32 buffers).
+struct Request {
+    artifact: String,
+    inputs: Vec<Vec<f32>>,
+    reply: Sender<Result<Vec<Vec<f32>>>>,
+}
+
+enum Job {
+    Run(Request),
+    Shutdown,
+}
+
+/// Clonable submission handle to the engine pool.
+///
+/// The queue sender sits behind a mutex so the handle is `Send + Sync`
+/// (std's mpsc `Sender` is not `Sync`); the lock is held only for the
+/// enqueue, never during execution.
+#[derive(Clone)]
+pub struct EngineHandle {
+    queue: Arc<Mutex<Sender<Job>>>,
+    manifest: Arc<Manifest>,
+}
+
+/// The pool itself; dropping it shuts the engine threads down.
+pub struct EnginePool {
+    handle: EngineHandle,
+    threads: Vec<JoinHandle<()>>,
+    shutdown_tx: Sender<Job>,
+    workers: usize,
+}
+
+impl EnginePool {
+    /// Spawn `workers` engine threads, each compiling all artifacts.
+    pub fn start(manifest: Manifest, workers: usize) -> Result<EnginePool> {
+        let workers = workers.max(1);
+        let manifest = Arc::new(manifest);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut threads = Vec::with_capacity(workers);
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            let manifest = Arc::clone(&manifest);
+            let ready = ready_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-engine-{i}"))
+                    .spawn(move || engine_thread(manifest, rx, ready))
+                    .context("spawning engine thread")?,
+            );
+        }
+        drop(ready_tx);
+        // Wait for every engine to finish compiling (or fail fast).
+        for _ in 0..workers {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("engine thread died during startup"))??;
+        }
+        let handle = EngineHandle { queue: Arc::new(Mutex::new(tx.clone())), manifest };
+        Ok(EnginePool { handle, threads, shutdown_tx: tx, workers })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        for _ in 0..self.threads.len() {
+            let _ = self.shutdown_tx.send(Job::Shutdown);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Validate shapes and execute `artifact` on the pool (blocking).
+    /// Returns the tuple outputs as row-major f32 buffers.
+    pub fn run(&self, artifact: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.spec(artifact)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{artifact}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (buf, shape)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if buf.len() != shape_len(shape) {
+                bail!(
+                    "{artifact}: input {i} has {} elements, shape {:?} needs {}",
+                    buf.len(),
+                    shape,
+                    shape_len(shape)
+                );
+            }
+        }
+        let (reply_tx, reply_rx) = channel();
+        self.queue
+            .lock()
+            .unwrap()
+            .send(Job::Run(Request {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: reply_tx,
+            }))
+            .map_err(|_| anyhow!("engine pool is shut down"))?;
+        reply_rx.recv().map_err(|_| anyhow!("engine dropped the request"))?
+    }
+}
+
+/// Body of one engine thread: build client, compile artifacts, serve.
+fn engine_thread(
+    manifest: Arc<Manifest>,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    ready: Sender<Result<()>>,
+) {
+    let setup = || -> Result<(xla::PjRtClient, HashMap<String, xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for spec in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(&spec.path)
+                .with_context(|| format!("parsing HLO text {:?}", spec.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {:?}", spec.name))?;
+            exes.insert(spec.name.clone(), exe);
+        }
+        Ok((client, exes))
+    };
+
+    let (_client, exes) = match setup() {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(Job::Run(req)) => {
+                let result = execute(&exes, &manifest, &req);
+                let _ = req.reply.send(result);
+            }
+            Ok(Job::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+fn execute(
+    exes: &HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    req: &Request,
+) -> Result<Vec<Vec<f32>>> {
+    let exe = exes
+        .get(&req.artifact)
+        .ok_or_else(|| anyhow!("artifact {:?} not compiled", req.artifact))?;
+    let spec = manifest.spec(&req.artifact)?;
+
+    // Build literals with the manifest shapes.
+    let mut literals = Vec::with_capacity(req.inputs.len());
+    for (buf, shape) in req.inputs.iter().zip(&spec.inputs) {
+        let lit = xla::Literal::vec1(buf);
+        let lit = if shape.len() == 1 {
+            lit
+        } else {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims).context("reshaping input literal")?
+        };
+        literals.push(lit);
+    }
+
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .with_context(|| format!("executing {:?}", req.artifact))?;
+    let tuple = result[0][0]
+        .to_literal_sync()
+        .context("fetching result literal")?;
+    // aot.py lowers with return_tuple=True: unwrap the tuple.
+    let parts = tuple.to_tuple().context("untupling result")?;
+    parts
+        .into_iter()
+        .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+        .collect()
+}

@@ -1,0 +1,175 @@
+//! HLO-text inspector: L2 profiling without loading Python.
+//!
+//! Parses the AOT artifacts' HLO text into summary statistics —
+//! instruction counts by opcode, computation count, parameter/root
+//! shapes — used by the §Perf L2 analysis ("no redundant recomputation,
+//! fused where XLA can fuse") and by tests that assert the lowered
+//! graphs have the expected structure (e.g. grad_mlp contains the five
+//! dots of the hand-written backward pass, not more).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Summary of one HLO module's text.
+#[derive(Clone, Debug, Default)]
+pub struct HloStats {
+    pub module_name: String,
+    pub computations: usize,
+    pub instructions: usize,
+    /// instruction count per opcode (dot, add, tanh, ...).
+    pub opcodes: BTreeMap<String, usize>,
+    /// Parameter count of the ENTRY computation only (the module's
+    /// actual inputs; nested fusion computations have their own).
+    pub parameters: usize,
+}
+
+impl HloStats {
+    pub fn count(&self, opcode: &str) -> usize {
+        self.opcodes.get(opcode).copied().unwrap_or(0)
+    }
+}
+
+/// Parse HLO text into stats. The text grammar is
+/// `result = opcode(...)` per instruction line; computations open with
+/// `{` after a signature line (`ENTRY ... {` or `%name ... {`).
+pub fn parse_hlo_text(text: &str) -> HloStats {
+    let mut stats = HloStats::default();
+    let mut in_entry = false;
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = trimmed.strip_prefix("HloModule") {
+            stats.module_name =
+                rest.trim().split([',', ' ']).next().unwrap_or("").to_string();
+            continue;
+        }
+        if trimmed.ends_with('{') {
+            stats.computations += 1;
+            in_entry = trimmed.starts_with("ENTRY");
+            continue;
+        }
+        if trimmed == "}" {
+            in_entry = false;
+            continue;
+        }
+        // Instruction lines: `[ROOT] %name = type opcode(args)`.
+        let body = trimmed.strip_prefix("ROOT ").unwrap_or(trimmed);
+        let Some(eq) = body.find(" = ") else { continue };
+        let rhs = &body[eq + 3..];
+        // rhs looks like `f32[2,2]{1,0} dot(%a, %b), contracting...` or
+        // `(f32[2]{0}, s32[]) tuple(...)` — skip type tokens (anything
+        // with brackets / trailing commas / leading parens) until the
+        // opcode token.
+        let looks_like_type = |t: &str| {
+            t.starts_with('(')
+                || t.ends_with(',')
+                || t.contains('[')
+                || t.contains('{')
+                || t.ends_with(')')
+        };
+        let mut tokens = rhs.split_whitespace();
+        let mut opcode_token = match tokens.next() {
+            Some(t) => t,
+            None => continue,
+        };
+        while looks_like_type(opcode_token) && !opcode_token.contains('(') {
+            match tokens.next() {
+                Some(t) => opcode_token = t,
+                None => break,
+            }
+        }
+        // A tuple type like `(f32[2]{0},` starts with '(' but is still a
+        // type; the opcode is the first token containing '(' that also
+        // has a name prefix (e.g. `tuple(`), or a bare identifier.
+        if opcode_token.starts_with('(') {
+            let mut found = None;
+            for t in tokens.by_ref() {
+                if !looks_like_type(t) || (t.contains('(') && !t.starts_with('(')) {
+                    found = Some(t);
+                    break;
+                }
+            }
+            match found {
+                Some(t) => opcode_token = t,
+                None => continue,
+            }
+        }
+        let opcode = opcode_token.split('(').next().unwrap_or("").trim_start_matches('%');
+        if opcode.is_empty() {
+            continue;
+        }
+        stats.instructions += 1;
+        *stats.opcodes.entry(opcode.to_string()).or_insert(0) += 1;
+        if opcode == "parameter" && in_entry {
+            stats.parameters += 1;
+        }
+    }
+    stats
+}
+
+pub fn inspect_file(path: impl AsRef<Path>) -> Result<HloStats> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    Ok(parse_hlo_text(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0})->f32[2,2]{1,0}}
+
+ENTRY %main.4 (Arg_0.1: f32[2,2]) -> f32[2,2] {
+  %Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  %dot.2 = f32[2,2]{1,0} dot(f32[2,2]{1,0} %Arg_0.1, f32[2,2]{1,0} %Arg_0.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %add.3 = f32[2,2]{1,0} add(f32[2,2]{1,0} %dot.2, f32[2,2]{1,0} %Arg_0.1)
+}
+"#;
+
+    #[test]
+    fn parses_sample_module() {
+        let s = parse_hlo_text(SAMPLE);
+        assert_eq!(s.module_name, "jit_fn");
+        assert_eq!(s.computations, 1);
+        assert_eq!(s.count("parameter"), 1);
+        assert_eq!(s.count("dot"), 1);
+        assert_eq!(s.count("add"), 1);
+        assert_eq!(s.instructions, 3);
+    }
+
+    #[test]
+    fn real_artifacts_have_expected_structure() {
+        // Only meaningful after `make artifacts`; skip otherwise.
+        let dir = crate::runtime::Manifest::default_dir();
+        let Ok(manifest) = crate::runtime::Manifest::load(&dir) else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let grad_mlp = inspect_file(manifest.spec("grad_mlp").unwrap().path.clone()).unwrap();
+        // The hand-written backward has 5 matmuls (fwd: 2, bwd: 3); XLA
+        // merges transposed-operand pairs so the lowered module may
+        // carry fewer dots, but never fewer than the 3 independent
+        // contractions — and recomputation would push it well above 8.
+        let dots = grad_mlp.count("dot");
+        assert!(
+            (3..=8).contains(&dots),
+            "grad_mlp has {dots} dots, expected 3..=8 (5 written, XLA may merge/split)"
+        );
+        assert_eq!(grad_mlp.parameters, 3, "theta, x, y");
+
+        let combine = inspect_file(manifest.spec("combine_linear").unwrap().path.clone()).unwrap();
+        assert!(combine.count("dot") >= 1);
+        assert_eq!(combine.parameters, 2);
+    }
+
+    #[test]
+    fn empty_text_parses_to_zero() {
+        let s = parse_hlo_text("");
+        assert_eq!(s.instructions, 0);
+        assert_eq!(s.computations, 0);
+    }
+}

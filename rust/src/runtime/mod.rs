@@ -1,0 +1,204 @@
+//! Runtime layer: load and execute the AOT artifacts from the hot path.
+//!
+//! * [`artifact`] — manifest parsing (the aot.py ⇄ Rust contract).
+//! * [`engine`]   — PJRT engine pool (per-thread CPU clients; HLO text →
+//!   compile → execute).
+//! * [`native`]   — pure-Rust reference backend (test oracle + fallback).
+//!
+//! [`Backend`] abstracts the two so the coordinator is agnostic.
+
+pub mod artifact;
+pub mod engine;
+pub mod hlo_inspect;
+pub mod native;
+
+pub use artifact::{ArtifactSpec, LinearDims, Manifest, MlpDims};
+pub use engine::{EngineHandle, EnginePool};
+pub use hlo_inspect::{inspect_file, parse_hlo_text, HloStats};
+
+use anyhow::Result;
+
+/// Gradient-compute backend used by workers.
+#[derive(Clone)]
+pub enum Backend {
+    /// AOT HLO artifacts executed on the PJRT engine pool.
+    Pjrt(EngineHandle),
+    /// Pure-Rust reference implementation (same math, no artifacts).
+    Native { linear: LinearDims, mlp: MlpDims, s_max: usize },
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt(_) => "pjrt",
+            Backend::Native { .. } => "native",
+        }
+    }
+
+    pub fn linear_dims(&self) -> LinearDims {
+        match self {
+            Backend::Pjrt(h) => h.manifest().linear,
+            Backend::Native { linear, .. } => *linear,
+        }
+    }
+
+    pub fn mlp_dims(&self) -> MlpDims {
+        match self {
+            Backend::Pjrt(h) => h.manifest().mlp,
+            Backend::Native { mlp, .. } => *mlp,
+        }
+    }
+
+    pub fn s_max(&self) -> usize {
+        match self {
+            Backend::Pjrt(h) => h.manifest().s_max,
+            Backend::Native { s_max, .. } => *s_max,
+        }
+    }
+
+    /// Partition gradient of the linear model.
+    pub fn linear_grad(&self, x: &[f32], w: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            Backend::Pjrt(h) => {
+                let mut out = h.run("grad_linear", vec![x.to_vec(), w.to_vec(), y.to_vec()])?;
+                Ok(out.remove(0))
+            }
+            Backend::Native { linear, .. } => native::linear_grad(*linear, x, w, y),
+        }
+    }
+
+    /// Partition (loss, gradient) of the MLP.
+    pub fn mlp_grad(&self, theta: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, Vec<f32>)> {
+        match self {
+            Backend::Pjrt(h) => {
+                let mut out =
+                    h.run("grad_mlp", vec![theta.to_vec(), x.to_vec(), y.to_vec()])?;
+                let loss = out.remove(0);
+                let grad = out.remove(0);
+                Ok((loss[0], grad))
+            }
+            Backend::Native { mlp, .. } => native::mlp_grad(*mlp, theta, x, y),
+        }
+    }
+
+    /// True when the fused one-dispatch worker-message modules are
+    /// available (msg_linear / msg_mlp artifacts, or native backend).
+    pub fn has_fused_message(&self) -> bool {
+        match self {
+            Backend::Pjrt(h) => {
+                h.manifest().spec("msg_linear").is_ok() && h.manifest().spec("msg_mlp").is_ok()
+            }
+            Backend::Native { .. } => true,
+        }
+    }
+
+    /// Fused linear worker round: s_max partition gradients + coded
+    /// combine in ONE dispatch (xs (s,m,d), ys (s,m), coeffs (s)).
+    pub fn linear_message(
+        &self,
+        w: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        coeffs: &[f32],
+    ) -> Result<Vec<f32>> {
+        match self {
+            Backend::Pjrt(h) => {
+                let mut out = h.run(
+                    "msg_linear",
+                    vec![w.to_vec(), xs.to_vec(), ys.to_vec(), coeffs.to_vec()],
+                )?;
+                Ok(out.remove(0))
+            }
+            Backend::Native { linear, s_max, .. } => {
+                native::linear_message(*linear, *s_max, w, xs, ys, coeffs)
+            }
+        }
+    }
+
+    /// Fused MLP worker round: (losses (s,), message (flat_dim,)).
+    pub fn mlp_message(
+        &self,
+        theta: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        coeffs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        match self {
+            Backend::Pjrt(h) => {
+                let mut out = h.run(
+                    "msg_mlp",
+                    vec![theta.to_vec(), xs.to_vec(), ys.to_vec(), coeffs.to_vec()],
+                )?;
+                let losses = out.remove(0);
+                let msg = out.remove(0);
+                Ok((losses, msg))
+            }
+            Backend::Native { mlp, s_max, .. } => {
+                native::mlp_message(*mlp, *s_max, theta, xs, ys, coeffs)
+            }
+        }
+    }
+
+    /// Coded worker message: coeffs @ grads for (s_max, d) stacked grads.
+    /// `which` picks the matching combine artifact dimension.
+    pub fn combine(&self, which: CombineKind, grads: &[f32], coeffs: &[f32]) -> Result<Vec<f32>> {
+        let d = match which {
+            CombineKind::Linear => self.linear_dims().d,
+            CombineKind::Mlp => self.mlp_dims().flat_dim,
+        };
+        let s = self.s_max();
+        match self {
+            Backend::Pjrt(h) => {
+                let name = match which {
+                    CombineKind::Linear => "combine_linear",
+                    CombineKind::Mlp => "combine_mlp",
+                };
+                let mut out = h.run(name, vec![grads.to_vec(), coeffs.to_vec()])?;
+                Ok(out.remove(0))
+            }
+            Backend::Native { .. } => native::coded_combine(s, d, grads, coeffs),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CombineKind {
+    Linear,
+    Mlp,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_backend() -> Backend {
+        Backend::Native {
+            linear: LinearDims { m: 4, d: 3 },
+            mlp: MlpDims { m: 4, d_in: 3, d_hidden: 4, d_out: 2, flat_dim: 3 * 4 + 4 + 4 * 2 + 2 },
+            s_max: 3,
+        }
+    }
+
+    #[test]
+    fn native_backend_roundtrip() {
+        let b = native_backend();
+        let x = vec![1.0f32; 12];
+        let w = vec![0.5f32; 3];
+        let y = vec![1.0f32; 4];
+        let g = b.linear_grad(&x, &w, &y).unwrap();
+        assert_eq!(g.len(), 3);
+        // Xw = 1.5 per row, residual 0.5, g = mean over rows of x*0.5 = 0.5
+        for v in g {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn combine_uses_s_max_rows() {
+        let b = native_backend();
+        let d = 3;
+        let grads = vec![1.0f32; 3 * d];
+        let msg = b.combine(CombineKind::Linear, &grads, &[1.0, 1.0, 0.0]).unwrap();
+        assert_eq!(msg, vec![2.0, 2.0, 2.0]);
+    }
+}

@@ -1,0 +1,311 @@
+//! Native Rust reference backend — the same math as the AOT artifacts,
+//! written directly in Rust.
+//!
+//! Three jobs: (1) test oracle for the PJRT path (integration tests
+//! assert PJRT == native to f32 tolerance); (2) artifact-free fallback
+//! so the simulation/figure stack runs even before `make artifacts`;
+//! (3) baseline for the runtime benchmarks (PJRT dispatch overhead vs
+//! plain loops).
+
+use anyhow::{bail, Result};
+
+use super::artifact::{LinearDims, MlpDims};
+
+/// g = X^T (X w - y) / m  (matches kernels/linear_grad.py).
+pub fn linear_grad(dims: LinearDims, x: &[f32], w: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+    let (m, d) = (dims.m, dims.d);
+    if x.len() != m * d || w.len() != d || y.len() != m {
+        bail!("linear_grad shape mismatch");
+    }
+    let mut g = vec![0.0f32; d];
+    for i in 0..m {
+        let row = &x[i * d..(i + 1) * d];
+        let mut r = -y[i];
+        for (xv, wv) in row.iter().zip(w) {
+            r += xv * wv;
+        }
+        for (gj, xv) in g.iter_mut().zip(row) {
+            *gj += xv * r;
+        }
+    }
+    let inv_m = 1.0 / m as f32;
+    for gj in g.iter_mut() {
+        *gj *= inv_m;
+    }
+    Ok(g)
+}
+
+/// (loss, flat_grad) of the 2-layer tanh MLP with MSE loss
+/// (matches model.mlp_partition_grad).
+pub fn mlp_grad(dims: MlpDims, theta: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, Vec<f32>)> {
+    let MlpDims { m, d_in, d_hidden, d_out, flat_dim } = dims;
+    if theta.len() != flat_dim || x.len() != m * d_in || y.len() != m * d_out {
+        bail!("mlp_grad shape mismatch");
+    }
+    let (w1, rest) = theta.split_at(d_in * d_hidden);
+    let (b1, rest) = rest.split_at(d_hidden);
+    let (w2, b2) = rest.split_at(d_hidden * d_out);
+
+    // Forward.
+    let mut h = vec![0.0f32; m * d_hidden]; // tanh(z1)
+    for i in 0..m {
+        for j in 0..d_hidden {
+            let mut z = b1[j];
+            for t in 0..d_in {
+                z += x[i * d_in + t] * w1[t * d_hidden + j];
+            }
+            h[i * d_hidden + j] = z.tanh();
+        }
+    }
+    let mut diff = vec![0.0f32; m * d_out]; // o - y
+    let mut loss = 0.0f32;
+    for i in 0..m {
+        for j in 0..d_out {
+            let mut o = b2[j];
+            for t in 0..d_hidden {
+                o += h[i * d_hidden + t] * w2[t * d_out + j];
+            }
+            let dv = o - y[i * d_out + j];
+            diff[i * d_out + j] = dv;
+            loss += dv * dv;
+        }
+    }
+    loss /= (m * d_out) as f32;
+
+    // Backward: dO = 2 (O - Y) / (m * d_out).
+    let scale = 2.0 / (m * d_out) as f32;
+    let do_: Vec<f32> = diff.iter().map(|v| v * scale).collect();
+
+    let mut dw2 = vec![0.0f32; d_hidden * d_out];
+    let mut db2 = vec![0.0f32; d_out];
+    for i in 0..m {
+        for j in 0..d_out {
+            let g = do_[i * d_out + j];
+            db2[j] += g;
+            for t in 0..d_hidden {
+                dw2[t * d_out + j] += h[i * d_hidden + t] * g;
+            }
+        }
+    }
+    // dH = dO W2^T; dZ1 = dH * (1 - h^2)
+    let mut dz1 = vec![0.0f32; m * d_hidden];
+    for i in 0..m {
+        for t in 0..d_hidden {
+            let mut dh = 0.0f32;
+            for j in 0..d_out {
+                dh += do_[i * d_out + j] * w2[t * d_out + j];
+            }
+            let hv = h[i * d_hidden + t];
+            dz1[i * d_hidden + t] = dh * (1.0 - hv * hv);
+        }
+    }
+    let mut dw1 = vec![0.0f32; d_in * d_hidden];
+    let mut db1 = vec![0.0f32; d_hidden];
+    for i in 0..m {
+        for t in 0..d_hidden {
+            let g = dz1[i * d_hidden + t];
+            db1[t] += g;
+            for u in 0..d_in {
+                dw1[u * d_hidden + t] += x[i * d_in + u] * g;
+            }
+        }
+    }
+
+    let mut flat = Vec::with_capacity(flat_dim);
+    flat.extend_from_slice(&dw1);
+    flat.extend_from_slice(&db1);
+    flat.extend_from_slice(&dw2);
+    flat.extend_from_slice(&db2);
+    Ok((loss, flat))
+}
+
+/// v = coeffs @ grads (matches kernels/combine.py). grads is (s, d)
+/// row-major.
+pub fn coded_combine(s: usize, d: usize, grads: &[f32], coeffs: &[f32]) -> Result<Vec<f32>> {
+    if grads.len() != s * d || coeffs.len() != s {
+        bail!("coded_combine shape mismatch");
+    }
+    let mut v = vec![0.0f32; d];
+    for (i, &c) in coeffs.iter().enumerate() {
+        if c == 0.0 {
+            continue;
+        }
+        let row = &grads[i * d..(i + 1) * d];
+        for (vj, gj) in v.iter_mut().zip(row) {
+            *vj += c * gj;
+        }
+    }
+    Ok(v)
+}
+
+/// Fused linear worker round (mirrors model.linear_worker_message):
+/// s partition gradients + coded combine in one call.
+pub fn linear_message(
+    dims: LinearDims,
+    s: usize,
+    w: &[f32],
+    xs: &[f32],
+    ys: &[f32],
+    coeffs: &[f32],
+) -> Result<Vec<f32>> {
+    let (m, d) = (dims.m, dims.d);
+    if xs.len() != s * m * d || ys.len() != s * m || coeffs.len() != s {
+        bail!("linear_message shape mismatch");
+    }
+    let mut grads = vec![0.0f32; s * d];
+    for i in 0..s {
+        let g = linear_grad(dims, &xs[i * m * d..(i + 1) * m * d], w, &ys[i * m..(i + 1) * m])?;
+        grads[i * d..(i + 1) * d].copy_from_slice(&g);
+    }
+    coded_combine(s, d, &grads, coeffs)
+}
+
+/// Fused MLP worker round (mirrors model.mlp_worker_message):
+/// returns (per-shard losses, coded message).
+pub fn mlp_message(
+    dims: MlpDims,
+    s: usize,
+    theta: &[f32],
+    xs: &[f32],
+    ys: &[f32],
+    coeffs: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let (m, din, dout, f) = (dims.m, dims.d_in, dims.d_out, dims.flat_dim);
+    if xs.len() != s * m * din || ys.len() != s * m * dout || coeffs.len() != s {
+        bail!("mlp_message shape mismatch");
+    }
+    let mut losses = vec![0.0f32; s];
+    let mut grads = vec![0.0f32; s * f];
+    for i in 0..s {
+        let (loss, flat) = mlp_grad(
+            dims,
+            theta,
+            &xs[i * m * din..(i + 1) * m * din],
+            &ys[i * m * dout..(i + 1) * m * dout],
+        )?;
+        losses[i] = loss;
+        grads[i * f..(i + 1) * f].copy_from_slice(&flat);
+    }
+    let msg = coded_combine(s, f, &grads, coeffs)?;
+    Ok((losses, msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randf(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn linear_grad_zero_at_solution() {
+        let dims = LinearDims { m: 8, d: 4 };
+        let mut rng = Rng::new(1);
+        let x = randf(&mut rng, 32, 1.0);
+        let w = randf(&mut rng, 4, 1.0);
+        // y = X w exactly.
+        let mut y = vec![0.0f32; 8];
+        for i in 0..8 {
+            for j in 0..4 {
+                y[i] += x[i * 4 + j] * w[j];
+            }
+        }
+        let g = linear_grad(dims, &x, &w, &y).unwrap();
+        assert!(g.iter().all(|v| v.abs() < 1e-5), "{g:?}");
+    }
+
+    #[test]
+    fn linear_grad_matches_finite_difference() {
+        let dims = LinearDims { m: 6, d: 3 };
+        let mut rng = Rng::new(2);
+        let x = randf(&mut rng, 18, 1.0);
+        let w = randf(&mut rng, 3, 1.0);
+        let y = randf(&mut rng, 6, 1.0);
+        let g = linear_grad(dims, &x, &w, &y).unwrap();
+        // loss = ||Xw - y||^2 / (2m); grad = X^T(Xw-y)/m.
+        let loss = |w: &[f32]| -> f64 {
+            let mut acc = 0.0f64;
+            for i in 0..6 {
+                let mut r = -y[i] as f64;
+                for j in 0..3 {
+                    r += (x[i * 3 + j] * w[j]) as f64;
+                }
+                acc += r * r;
+            }
+            acc / 12.0
+        };
+        let eps = 1e-3f32;
+        for j in 0..3 {
+            let mut wp = w.clone();
+            wp[j] += eps;
+            let mut wm = w.clone();
+            wm[j] -= eps;
+            let fd = (loss(&wp) - loss(&wm)) / (2.0 * eps as f64);
+            assert!((fd - g[j] as f64).abs() < 1e-3, "j={j}: fd {fd} vs {}", g[j]);
+        }
+    }
+
+    #[test]
+    fn mlp_grad_matches_finite_difference() {
+        let dims = MlpDims { m: 4, d_in: 3, d_hidden: 5, d_out: 2, flat_dim: 3 * 5 + 5 + 5 * 2 + 2 };
+        let mut rng = Rng::new(3);
+        let theta = randf(&mut rng, dims.flat_dim, 0.3);
+        let x = randf(&mut rng, 12, 1.0);
+        let y = randf(&mut rng, 8, 1.0);
+        let (loss0, flat) = mlp_grad(dims, &theta, &x, &y).unwrap();
+        assert!(loss0 > 0.0);
+        let eps = 1e-2f32;
+        // Spot-check a few coordinates across all parameter groups.
+        for &j in &[0usize, 7, 15, 16, 20, 25, 30, dims.flat_dim - 1] {
+            let mut tp = theta.clone();
+            tp[j] += eps;
+            let mut tm = theta.clone();
+            tm[j] -= eps;
+            let (lp, _) = mlp_grad(dims, &tp, &x, &y).unwrap();
+            let (lm, _) = mlp_grad(dims, &tm, &x, &y).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - flat[j]).abs() < 2e-3 * (1.0 + flat[j].abs()),
+                "coord {j}: fd {fd} vs analytic {}",
+                flat[j]
+            );
+        }
+    }
+
+    #[test]
+    fn mlp_descends() {
+        let dims = MlpDims { m: 8, d_in: 4, d_hidden: 8, d_out: 2, flat_dim: 4 * 8 + 8 + 8 * 2 + 2 };
+        let mut rng = Rng::new(4);
+        let mut theta = randf(&mut rng, dims.flat_dim, 0.3);
+        let x = randf(&mut rng, 32, 1.0);
+        let y = randf(&mut rng, 16, 1.0);
+        let (l0, mut g) = mlp_grad(dims, &theta, &x, &y).unwrap();
+        let mut l = l0;
+        for _ in 0..30 {
+            for (t, gv) in theta.iter_mut().zip(&g) {
+                *t -= 0.5 * gv;
+            }
+            let (ln, gn) = mlp_grad(dims, &theta, &x, &y).unwrap();
+            l = ln;
+            g = gn;
+        }
+        assert!(l < l0, "loss {l0} -> {l}");
+    }
+
+    #[test]
+    fn combine_selects_and_sums() {
+        let grads = vec![1.0, 2.0, 10.0, 20.0, 100.0, 200.0];
+        let v = coded_combine(3, 2, &grads, &[1.0, 0.0, 1.0]).unwrap();
+        assert_eq!(v, vec![101.0, 202.0]);
+        let v = coded_combine(3, 2, &grads, &[0.5, 1.0, 0.0]).unwrap();
+        assert_eq!(v, vec![10.5, 21.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        assert!(linear_grad(LinearDims { m: 2, d: 2 }, &[0.0; 3], &[0.0; 2], &[0.0; 2]).is_err());
+        assert!(coded_combine(2, 2, &[0.0; 4], &[0.0; 3]).is_err());
+    }
+}

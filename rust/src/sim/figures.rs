@@ -1,0 +1,292 @@
+//! Regeneration of every figure in the paper's §6 (Figures 2-5).
+//!
+//! Each function returns the plotted series as data points; the CLI
+//! prints them as CSV, and `rust/benches/fig*` wrap them with timing.
+//! Paper protocol: k = 100, r = (1-δ)k, 5000 trials per point,
+//! ρ = k/(rs) for one-step decoding, ν = ||A||² for the Fig. 5 curves.
+
+use super::montecarlo::MonteCarlo;
+use crate::codes::Scheme;
+use crate::decode::{algorithmic_error_curve, OneStepDecoder, OptimalDecoder, StepSize};
+use crate::linalg::CscMatrix;
+use crate::util::Rng;
+
+/// One plotted point: figure id, series labels, x, y.
+#[derive(Clone, Debug)]
+pub struct FigPoint {
+    pub figure: &'static str,
+    pub scheme: String,
+    pub s: usize,
+    pub delta: f64,
+    /// Iteration index for Fig. 5; 0 otherwise.
+    pub t: usize,
+    pub value: f64,
+}
+
+impl FigPoint {
+    pub fn csv_header() -> &'static str {
+        "figure,scheme,s,delta,t,value"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{:.3},{},{:.6e}",
+            self.figure, self.scheme, self.s, self.delta, self.t, self.value
+        )
+    }
+}
+
+/// Shared sweep configuration (paper defaults).
+#[derive(Clone, Debug)]
+pub struct FigureConfig {
+    pub k: usize,
+    pub s_values: Vec<usize>,
+    pub deltas: Vec<f64>,
+    pub mc: MonteCarlo,
+}
+
+impl FigureConfig {
+    /// Paper settings: k=100, s ∈ {5, 10}, δ ∈ {0.05..0.9}, 5000 trials.
+    pub fn paper(trials: usize, seed: u64) -> Self {
+        FigureConfig {
+            k: 100,
+            s_values: vec![5, 10],
+            deltas: (1..=18).map(|i| i as f64 * 0.05).collect(),
+            mc: MonteCarlo::new(trials, seed),
+        }
+    }
+
+    pub fn r(&self, delta: f64) -> usize {
+        (((1.0 - delta) * self.k as f64).round() as usize).clamp(1, self.k)
+    }
+}
+
+/// Draw A for one trial: build G (randomized schemes re-draw per trial,
+/// exactly like the paper's simulations) and keep r uniform columns.
+pub fn draw_non_straggler_matrix(
+    scheme: Scheme,
+    k: usize,
+    s: usize,
+    r: usize,
+    rng: &mut Rng,
+) -> CscMatrix {
+    let code = scheme.build(k, k, s);
+    let g = code.assignment(rng);
+    let idx = rng.sample_indices(k, r);
+    g.select_columns(&idx)
+}
+
+/// The three schemes compared in Figs. 2-4.
+pub const FIG_SCHEMES: [Scheme; 3] = [Scheme::Frc, Scheme::Bgc, Scheme::RegularGraph];
+
+/// Figure 2: average one-step error err_1(A)/k vs δ, ρ = k/(rs).
+pub fn figure2(cfg: &FigureConfig) -> Vec<FigPoint> {
+    error_sweep(cfg, "fig2", &FIG_SCHEMES, ErrorKind::OneStep)
+}
+
+/// Figure 3: average optimal decoding error err(A)/k vs δ.
+pub fn figure3(cfg: &FigureConfig) -> Vec<FigPoint> {
+    error_sweep(cfg, "fig3", &FIG_SCHEMES, ErrorKind::Optimal)
+}
+
+/// Figure 4: one-step vs optimal per scheme (six panels). Emitted as
+/// both error kinds per scheme; the scheme label carries the decoder.
+pub fn figure4(cfg: &FigureConfig) -> Vec<FigPoint> {
+    let mut out = Vec::new();
+    for kind in [ErrorKind::OneStep, ErrorKind::Optimal] {
+        for p in error_sweep(cfg, "fig4", &FIG_SCHEMES, kind) {
+            out.push(FigPoint {
+                scheme: format!("{}/{}", p.scheme, kind.label()),
+                ..p
+            });
+        }
+    }
+    out
+}
+
+/// Figure 5: algorithmic decoding error ||u_t||²/k of a BGC for
+/// δ ∈ {0.1, 0.2, 0.3, 0.5, 0.8}, ν = ||A||², t = 0..=t_max.
+pub fn figure5(cfg: &FigureConfig, t_max: usize) -> Vec<FigPoint> {
+    let deltas = [0.1, 0.2, 0.3, 0.5, 0.8];
+    let mut out = Vec::new();
+    for &s in &cfg.s_values {
+        for &delta in &deltas {
+            let r = cfg.r(delta);
+            let k = cfg.k;
+            let curve = cfg.mc.mean_curve(t_max + 1, |rng| {
+                let a = draw_non_straggler_matrix(Scheme::Bgc, k, s, r, rng);
+                algorithmic_error_curve(&a, StepSize::SpectralNormSq, t_max, rng)
+            });
+            for (t, &v) in curve.iter().enumerate() {
+                out.push(FigPoint {
+                    figure: "fig5",
+                    scheme: "BGC".to_string(),
+                    s,
+                    delta,
+                    t,
+                    value: v / k as f64,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    OneStep,
+    Optimal,
+}
+
+impl ErrorKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ErrorKind::OneStep => "one-step",
+            ErrorKind::Optimal => "optimal",
+        }
+    }
+}
+
+fn error_sweep(
+    cfg: &FigureConfig,
+    figure: &'static str,
+    schemes: &[Scheme],
+    kind: ErrorKind,
+) -> Vec<FigPoint> {
+    let mut out = Vec::new();
+    for &scheme in schemes {
+        for &s in &cfg.s_values {
+            for &delta in &cfg.deltas {
+                let r = cfg.r(delta);
+                let k = cfg.k;
+                let mean = cfg.mc.mean(|rng| {
+                    let a = draw_non_straggler_matrix(scheme, k, s, r, rng);
+                    match kind {
+                        ErrorKind::OneStep => OneStepDecoder::canonical(k, r, s).err1(&a),
+                        ErrorKind::Optimal => OptimalDecoder::new().err(&a),
+                    }
+                });
+                out.push(FigPoint {
+                    figure,
+                    scheme: scheme.name().to_string(),
+                    s,
+                    delta,
+                    t: 0,
+                    value: mean / k as f64,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> FigureConfig {
+        FigureConfig {
+            k: 20,
+            s_values: vec![5],
+            deltas: vec![0.2, 0.5],
+            mc: MonteCarlo::new(60, 42),
+        }
+    }
+
+    #[test]
+    fn figure2_has_expected_shape_and_ordering() {
+        let cfg = tiny_cfg();
+        let pts = figure2(&cfg);
+        assert_eq!(pts.len(), 3 * 1 * 2); // schemes x s x deltas
+        // Error grows with delta for every scheme.
+        for scheme in ["FRC", "BGC", "s-regular"] {
+            let vals: Vec<f64> = pts
+                .iter()
+                .filter(|p| p.scheme == scheme)
+                .map(|p| p.value)
+                .collect();
+            assert!(vals[1] >= vals[0] * 0.8, "{scheme}: {vals:?}");
+        }
+    }
+
+    #[test]
+    fn figure3_frc_below_bgc() {
+        // The paper's headline qualitative result (Fig. 3): FRC's optimal
+        // decoding error is far below BGC's.
+        let cfg = tiny_cfg();
+        let pts = figure3(&cfg);
+        let get = |scheme: &str, delta: f64| {
+            pts.iter()
+                .find(|p| p.scheme == scheme && (p.delta - delta).abs() < 1e-9)
+                .unwrap()
+                .value
+        };
+        assert!(get("FRC", 0.2) < get("BGC", 0.2));
+        assert!(get("FRC", 0.5) < get("BGC", 0.5));
+    }
+
+    #[test]
+    fn figure4_contains_both_decoders() {
+        let cfg = tiny_cfg();
+        let pts = figure4(&cfg);
+        assert!(pts.iter().any(|p| p.scheme.ends_with("/one-step")));
+        assert!(pts.iter().any(|p| p.scheme.ends_with("/optimal")));
+        // one-step >= optimal pointwise (same sweep, same seeds).
+        for p1 in pts.iter().filter(|p| p.scheme.ends_with("/one-step")) {
+            let base = p1.scheme.trim_end_matches("/one-step");
+            let p2 = pts
+                .iter()
+                .find(|p| {
+                    p.scheme == format!("{base}/optimal")
+                        && p.s == p1.s
+                        && (p.delta - p1.delta).abs() < 1e-9
+                })
+                .unwrap();
+            assert!(
+                p1.value >= p2.value - 1e-9,
+                "{}: one-step {} < optimal {}",
+                p1.scheme,
+                p1.value,
+                p2.value
+            );
+        }
+    }
+
+    #[test]
+    fn figure5_curves_decrease_in_t() {
+        let cfg = FigureConfig {
+            k: 20,
+            s_values: vec![5],
+            deltas: vec![],
+            mc: MonteCarlo::new(30, 7),
+        };
+        let pts = figure5(&cfg, 6);
+        // Group by delta and check monotone decrease.
+        for &delta in &[0.1, 0.5, 0.8] {
+            let mut vals: Vec<(usize, f64)> = pts
+                .iter()
+                .filter(|p| (p.delta - delta).abs() < 1e-9)
+                .map(|p| (p.t, p.value))
+                .collect();
+            vals.sort_by_key(|&(t, _)| t);
+            assert_eq!(vals[0].0, 0);
+            assert!((vals[0].1 - 1.0).abs() < 1e-12, "u_0 = k -> value 1.0");
+            for w in vals.windows(2) {
+                assert!(w[1].1 <= w[0].1 + 1e-9, "delta {delta}: not monotone");
+            }
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_format() {
+        let p = FigPoint {
+            figure: "fig2",
+            scheme: "FRC".into(),
+            s: 5,
+            delta: 0.25,
+            t: 0,
+            value: 0.125,
+        };
+        assert_eq!(p.to_csv(), "fig2,FRC,5,0.250,0,1.250000e-1");
+    }
+}

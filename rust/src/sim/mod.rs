@@ -1,0 +1,12 @@
+//! Simulation harness: the Monte-Carlo engine plus the figure/table
+//! regeneration entry points used by the CLI and the bench targets.
+
+pub mod ablations;
+pub mod figures;
+pub mod montecarlo;
+pub mod tables;
+
+pub use figures::{FigPoint, FigureConfig};
+pub use montecarlo::MonteCarlo;
+pub use ablations::AblationPoint;
+pub use tables::TableRow;

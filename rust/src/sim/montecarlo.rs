@@ -1,0 +1,127 @@
+//! Monte-Carlo engine: seeded, multi-threaded trial averaging.
+//!
+//! Every figure point in the paper is "average X over 5000 trials"; this
+//! module runs those trials across threads with per-trial forked RNG
+//! streams, so results are bit-identical regardless of thread count.
+
+use crate::util::{parallel::parallel_map, Rng};
+
+/// Configuration shared by all simulation entry points.
+#[derive(Clone, Copy, Debug)]
+pub struct MonteCarlo {
+    pub trials: usize,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl MonteCarlo {
+    pub fn new(trials: usize, seed: u64) -> Self {
+        MonteCarlo { trials, seed, threads: crate::util::parallel::default_threads() }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Mean of `f` over `trials` independent RNG streams.
+    pub fn mean(&self, f: impl Fn(&mut Rng) -> f64 + Sync) -> f64 {
+        let root = Rng::new(self.seed);
+        let vals = parallel_map(self.trials, self.threads, |i| {
+            let mut rng = root.fork(i as u64);
+            f(&mut rng)
+        });
+        vals.iter().sum::<f64>() / self.trials.max(1) as f64
+    }
+
+    /// Mean and sample standard deviation.
+    pub fn mean_std(&self, f: impl Fn(&mut Rng) -> f64 + Sync) -> (f64, f64) {
+        let root = Rng::new(self.seed);
+        let vals = parallel_map(self.trials, self.threads, |i| {
+            let mut rng = root.fork(i as u64);
+            f(&mut rng)
+        });
+        let n = vals.len().max(1) as f64;
+        let mean = vals.iter().sum::<f64>() / n;
+        let var = if vals.len() > 1 {
+            vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (n - 1.0)
+        } else {
+            0.0
+        };
+        (mean, var.sqrt())
+    }
+
+    /// Element-wise mean of vector-valued trials (all same length) —
+    /// used for the Fig. 5 curves {||u_t||^2}_t.
+    pub fn mean_curve(&self, len: usize, f: impl Fn(&mut Rng) -> Vec<f64> + Sync) -> Vec<f64> {
+        let root = Rng::new(self.seed);
+        let curves = parallel_map(self.trials, self.threads, |i| {
+            let mut rng = root.fork(i as u64);
+            let c = f(&mut rng);
+            assert_eq!(c.len(), len, "trial curve length mismatch");
+            c
+        });
+        let mut mean = vec![0.0; len];
+        for c in &curves {
+            for (m, v) in mean.iter_mut().zip(c) {
+                *m += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= self.trials.max(1) as f64;
+        }
+        mean
+    }
+
+    /// Fraction of trials where the predicate holds (e.g. P(err > αs)).
+    pub fn probability(&self, f: impl Fn(&mut Rng) -> bool + Sync) -> f64 {
+        self.mean(|rng| if f(rng) { 1.0 } else { 0.0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_independent_of_thread_count() {
+        let f = |rng: &mut Rng| rng.f64();
+        let a = MonteCarlo { trials: 500, seed: 1, threads: 1 }.mean(f);
+        let b = MonteCarlo { trials: 500, seed: 1, threads: 8 }.mean(f);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mean_of_uniform_is_half() {
+        let mc = MonteCarlo::new(50_000, 2);
+        let m = mc.mean(|rng| rng.f64());
+        assert!((m - 0.5).abs() < 0.01, "{m}");
+    }
+
+    #[test]
+    fn std_of_constant_is_zero() {
+        let mc = MonteCarlo::new(100, 3);
+        let (m, s) = mc.mean_std(|_| 4.0);
+        assert_eq!(m, 4.0);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn probability_estimates() {
+        let mc = MonteCarlo::new(20_000, 4);
+        let p = mc.probability(|rng| rng.bernoulli(0.25));
+        assert!((p - 0.25).abs() < 0.02, "{p}");
+    }
+
+    #[test]
+    fn mean_curve_elementwise() {
+        let mc = MonteCarlo::new(1000, 5);
+        let c = mc.mean_curve(3, |rng| {
+            let x = rng.f64();
+            vec![x, 2.0 * x, 1.0]
+        });
+        assert!((c[0] - 0.5).abs() < 0.05);
+        assert!((c[1] - 2.0 * c[0]).abs() < 1e-12);
+        assert_eq!(c[2], 1.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Adversarial straggler model: an attacker controls who straggles.
+//!
+//! Bridges `crate::adversary` into the coordinator, modelling the §4
+//! threat: a scheduler-level adversary (or a worst-case network) that
+//! delays exactly the workers whose loss hurts decoding most. The
+//! worst-case set is computed ONCE against G (the adversary knows the
+//! code, not the data) and replayed every round — matching the paper's
+//! standing-assignment setting.
+
+use super::StragglerModel;
+use crate::adversary::{frc_worst_stragglers, greedy_stragglers, local_search_stragglers};
+use crate::linalg::CscMatrix;
+use crate::util::Rng;
+
+/// Which attack the adversary mounts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttackKind {
+    /// Thm-10 block attack (linear time; devastating on FRC).
+    BlockAttack,
+    /// Greedy column removal on the one-step objective.
+    Greedy,
+    /// Greedy + 1-swap local search.
+    LocalSearch,
+}
+
+/// A straggler model that always returns the adversary's survivor set.
+#[derive(Clone, Debug)]
+pub struct AdversarialStragglers {
+    survivors: Vec<usize>,
+    kind: AttackKind,
+}
+
+impl AdversarialStragglers {
+    /// Mount `kind` against assignment matrix `g`, keeping r survivors
+    /// (i.e. the adversary delays the other n - r workers).
+    pub fn plan(g: &CscMatrix, r: usize, s: usize, kind: AttackKind) -> Self {
+        let rho = g.rows as f64 / (r as f64 * s as f64);
+        let survivors = match kind {
+            AttackKind::BlockAttack => frc_worst_stragglers(g, r),
+            AttackKind::Greedy => greedy_stragglers(g, r, rho),
+            AttackKind::LocalSearch => local_search_stragglers(g, r, rho, 3),
+        };
+        AdversarialStragglers { survivors, kind }
+    }
+
+    pub fn survivors(&self) -> &[usize] {
+        &self.survivors
+    }
+
+    pub fn kind(&self) -> AttackKind {
+        self.kind
+    }
+}
+
+impl StragglerModel for AdversarialStragglers {
+    fn non_stragglers(&self, n: usize, _rng: &mut Rng) -> Vec<usize> {
+        assert!(self.survivors.iter().all(|&j| j < n), "attack planned for a different n");
+        self.survivors.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        match self.kind {
+            AttackKind::BlockAttack => "adversarial-block",
+            AttackKind::Greedy => "adversarial-greedy",
+            AttackKind::LocalSearch => "adversarial-local-search",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{GradientCode, Scheme};
+    use crate::decode::OptimalDecoder;
+    use crate::stragglers::UniformStragglers;
+
+    #[test]
+    fn block_attack_on_frc_forces_k_minus_r() {
+        let (k, s, r) = (40usize, 5usize, 30usize);
+        let g = Scheme::Frc.build(k, k, s).assignment(&mut Rng::new(1));
+        let adv = AdversarialStragglers::plan(&g, r, s, AttackKind::BlockAttack);
+        let mut rng = Rng::new(2);
+        let ns = adv.non_stragglers(k, &mut rng);
+        assert_eq!(ns.len(), r);
+        let err = OptimalDecoder::new().err(&g.select_columns(&ns));
+        assert!((err - (k - r) as f64).abs() < 1e-8, "{err}");
+    }
+
+    #[test]
+    fn adversary_beats_random_on_every_code() {
+        let (k, s, r) = (40usize, 5usize, 30usize);
+        let mut rng = Rng::new(3);
+        for scheme in [Scheme::Frc, Scheme::Bgc, Scheme::Cyclic] {
+            let g = scheme.build(k, k, s).assignment(&mut rng);
+            let adv = AdversarialStragglers::plan(&g, r, s, AttackKind::Greedy);
+            let adv_err = OptimalDecoder::new()
+                .err(&g.select_columns(&adv.non_stragglers(k, &mut rng)));
+            let uni = UniformStragglers::new(0.25);
+            let mut rand_err = 0.0;
+            for _ in 0..30 {
+                rand_err += OptimalDecoder::new()
+                    .err(&g.select_columns(&uni.non_stragglers(k, &mut rng)));
+            }
+            rand_err /= 30.0;
+            assert!(
+                adv_err >= rand_err - 1e-9,
+                "{}: adversarial {adv_err} < random {rand_err}",
+                scheme.name()
+            );
+        }
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let (k, s, r) = (20usize, 4usize, 15usize);
+        let g = Scheme::Bgc.build(k, k, s).assignment(&mut Rng::new(4));
+        let adv = AdversarialStragglers::plan(&g, r, s, AttackKind::LocalSearch);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(99);
+        assert_eq!(adv.non_stragglers(k, &mut r1), adv.non_stragglers(k, &mut r2));
+    }
+
+    #[test]
+    #[should_panic(expected = "different n")]
+    fn wrong_n_panics() {
+        let g = Scheme::Bgc.build(10, 10, 2).assignment(&mut Rng::new(6));
+        let adv = AdversarialStragglers::plan(&g, 8, 2, AttackKind::Greedy);
+        adv.non_stragglers(5, &mut Rng::new(7));
+    }
+}

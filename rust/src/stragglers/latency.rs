@@ -1,0 +1,161 @@
+//! Latency-based stragglers: workers draw completion times from a
+//! latency distribution; the master's deadline policy decides who counts
+//! as a non-straggler. This is the mechanism behind the paper's
+//! abstract straggler model (see DESIGN.md §Hardware-Adaptation) and is
+//! what the e2e coordinator uses.
+
+use super::StragglerModel;
+use crate::util::Rng;
+
+/// Worker completion-time distributions (seconds).
+#[derive(Clone, Copy, Debug)]
+pub enum LatencyModel {
+    /// base + Exp(rate): light-tailed service times.
+    ShiftedExp { base: f64, rate: f64 },
+    /// Pareto(x_m, alpha): heavy-tailed — the classic straggler regime.
+    Pareto { scale: f64, shape: f64 },
+    /// Bimodal: fast with prob 1-p, slow (straggler) with prob p —
+    /// models the "attack of the clones" scenario [1].
+    Bimodal { fast: f64, slow: f64, p_slow: f64 },
+}
+
+impl LatencyModel {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            LatencyModel::ShiftedExp { base, rate } => base + rng.exp(rate),
+            LatencyModel::Pareto { scale, shape } => rng.pareto(scale, shape),
+            LatencyModel::Bimodal { fast, slow, p_slow } => {
+                if rng.bernoulli(p_slow) {
+                    slow
+                } else {
+                    fast
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LatencyModel::ShiftedExp { .. } => "shifted-exp",
+            LatencyModel::Pareto { .. } => "pareto",
+            LatencyModel::Bimodal { .. } => "bimodal",
+        }
+    }
+}
+
+/// When does the master stop waiting?
+#[derive(Clone, Copy, Debug)]
+pub enum DeadlinePolicy {
+    /// Fixed wall-clock deadline.
+    Fixed(f64),
+    /// Wait for the fastest r workers (order-statistic gather).
+    FastestR(usize),
+}
+
+/// Latencies + the induced non-straggler set for one round.
+#[derive(Clone, Debug)]
+pub struct LatencySample {
+    pub latencies: Vec<f64>,
+    pub non_stragglers: Vec<usize>,
+    /// The effective gather time (when the master stopped waiting).
+    pub gather_time: f64,
+}
+
+/// Draw one round of latencies and apply the deadline policy.
+pub fn sample_round(
+    model: &LatencyModel,
+    policy: &DeadlinePolicy,
+    n: usize,
+    rng: &mut Rng,
+) -> LatencySample {
+    let latencies: Vec<f64> = (0..n).map(|_| model.sample(rng)).collect();
+    let (non_stragglers, gather_time) = match *policy {
+        DeadlinePolicy::Fixed(deadline) => {
+            let ns: Vec<usize> =
+                (0..n).filter(|&i| latencies[i] <= deadline).collect();
+            (ns, deadline)
+        }
+        DeadlinePolicy::FastestR(r) => {
+            let r = r.clamp(1, n);
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| latencies[a].partial_cmp(&latencies[b]).unwrap());
+            let mut ns = order[..r].to_vec();
+            let gather = latencies[order[r - 1]];
+            ns.sort_unstable();
+            (ns, gather)
+        }
+    };
+    LatencySample { latencies, non_stragglers, gather_time }
+}
+
+/// A latency-driven straggler model (adapts `sample_round` to the
+/// `StragglerModel` trait for the Monte-Carlo harness).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyStragglers {
+    pub model: LatencyModel,
+    pub policy: DeadlinePolicy,
+}
+
+impl StragglerModel for LatencyStragglers {
+    fn non_stragglers(&self, n: usize, rng: &mut Rng) -> Vec<usize> {
+        sample_round(&self.model, &self.policy, n, rng).non_stragglers
+    }
+
+    fn name(&self) -> &'static str {
+        "latency"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fastest_r_returns_exactly_r() {
+        let m = LatencyModel::ShiftedExp { base: 0.1, rate: 2.0 };
+        let mut rng = Rng::new(1);
+        let s = sample_round(&m, &DeadlinePolicy::FastestR(30), 100, &mut rng);
+        assert_eq!(s.non_stragglers.len(), 30);
+        // Gather time = r-th order statistic; all non-stragglers <= it.
+        for &i in &s.non_stragglers {
+            assert!(s.latencies[i] <= s.gather_time);
+        }
+    }
+
+    #[test]
+    fn fixed_deadline_filters() {
+        let m = LatencyModel::Bimodal { fast: 0.1, slow: 10.0, p_slow: 0.3 };
+        let mut rng = Rng::new(2);
+        let s = sample_round(&m, &DeadlinePolicy::Fixed(1.0), 200, &mut rng);
+        // All fast workers respond, all slow ones straggle.
+        for i in 0..200 {
+            let is_ns = s.non_stragglers.binary_search(&i).is_ok();
+            assert_eq!(is_ns, s.latencies[i] <= 1.0);
+        }
+        // ~70% fast
+        let frac = s.non_stragglers.len() as f64 / 200.0;
+        assert!((frac - 0.7).abs() < 0.12, "{frac}");
+    }
+
+    #[test]
+    fn pareto_produces_heavy_tail() {
+        let m = LatencyModel::Pareto { scale: 1.0, shape: 1.2 };
+        let mut rng = Rng::new(3);
+        let lats: Vec<f64> = (0..10_000).map(|_| m.sample(&mut rng)).collect();
+        let max = lats.iter().cloned().fold(0.0, f64::max);
+        let med = {
+            let mut v = lats.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[5000]
+        };
+        assert!(max / med > 50.0, "tail ratio {}", max / med);
+    }
+
+    #[test]
+    fn fastest_r_clamps() {
+        let m = LatencyModel::ShiftedExp { base: 0.0, rate: 1.0 };
+        let mut rng = Rng::new(4);
+        let s = sample_round(&m, &DeadlinePolicy::FastestR(500), 10, &mut rng);
+        assert_eq!(s.non_stragglers.len(), 10);
+    }
+}

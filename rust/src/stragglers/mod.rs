@@ -1,0 +1,38 @@
+//! Straggler models: who fails to respond by the deadline.
+//!
+//! The paper's analysis assumes the r = (1-δ)k non-stragglers are chosen
+//! uniformly at random (§3, §5) or adversarially (§4). The coordinator
+//! additionally supports latency-based models where stragglers emerge
+//! from heavy-tailed worker completion times and a gather deadline —
+//! the mechanism that produces "random" straggler sets in real clusters.
+
+pub mod adversarial;
+pub mod latency;
+pub mod random;
+
+pub use latency::{sample_round, DeadlinePolicy, LatencyModel, LatencySample, LatencyStragglers};
+pub use adversarial::{AdversarialStragglers, AttackKind};
+pub use random::UniformStragglers;
+
+use crate::util::Rng;
+
+/// A straggler model selects the non-straggler (responding) worker set.
+pub trait StragglerModel {
+    /// Return the sorted indices of the non-straggler workers out of n.
+    fn non_stragglers(&self, n: usize, rng: &mut Rng) -> Vec<usize>;
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_model_respects_r() {
+        let m = UniformStragglers::new(0.3);
+        let mut rng = Rng::new(1);
+        let ns = m.non_stragglers(100, &mut rng);
+        assert_eq!(ns.len(), 70);
+        assert!(ns.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,72 @@
+//! Uniformly random stragglers — the paper's average-case model:
+//! the r = ceil((1-δ) n) non-stragglers are a uniform subset.
+
+use super::StragglerModel;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct UniformStragglers {
+    /// Straggler fraction δ in [0, 1).
+    pub delta: f64,
+}
+
+impl UniformStragglers {
+    pub fn new(delta: f64) -> Self {
+        assert!((0.0..1.0).contains(&delta), "delta must be in [0, 1)");
+        UniformStragglers { delta }
+    }
+
+    /// r = round((1-δ) n), clamped to [1, n].
+    pub fn r(&self, n: usize) -> usize {
+        (((1.0 - self.delta) * n as f64).round() as usize).clamp(1, n)
+    }
+}
+
+impl StragglerModel for UniformStragglers {
+    fn non_stragglers(&self, n: usize, rng: &mut Rng) -> Vec<usize> {
+        let r = self.r(n);
+        let mut idx = rng.sample_indices(n, r);
+        idx.sort_unstable();
+        idx
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform-random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r_computation() {
+        assert_eq!(UniformStragglers::new(0.0).r(100), 100);
+        assert_eq!(UniformStragglers::new(0.25).r(100), 75);
+        assert_eq!(UniformStragglers::new(0.99).r(100), 1);
+    }
+
+    #[test]
+    fn subsets_are_uniformish() {
+        // Each worker should be a non-straggler ~r/n of the time.
+        let m = UniformStragglers::new(0.5);
+        let mut rng = Rng::new(2);
+        let mut counts = vec![0usize; 20];
+        let trials = 20_000;
+        for _ in 0..trials {
+            for i in m.non_stragglers(20, &mut rng) {
+                counts[i] += 1;
+            }
+        }
+        for &c in &counts {
+            let p = c as f64 / trials as f64;
+            assert!((p - 0.5).abs() < 0.03, "inclusion prob {p}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "delta")]
+    fn delta_one_rejected() {
+        UniformStragglers::new(1.0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Synthetic datasets, partitioned into the paper's k task shards.
+//!
+//! The paper's f_i are per-sample (or per-shard) gradients of a training
+//! loss (§2.2); we generate (a) a noisy linear-regression problem with a
+//! known planted model w*, and (b) a teacher-MLP regression problem, and
+//! split both into k equal shards — one per task.
+
+use crate::runtime::{LinearDims, MlpDims};
+use crate::util::Rng;
+
+/// One task shard: x is (m, d)-row-major, y is (m * d_out) (d_out = 1
+/// for the linear model).
+#[derive(Clone, Debug, Default)]
+pub struct Shard {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+/// Linear-regression dataset with planted w*.
+#[derive(Clone, Debug)]
+pub struct LinearDataset {
+    pub dims: LinearDims,
+    pub shards: Vec<Shard>,
+    pub w_star: Vec<f32>,
+    pub noise: f64,
+}
+
+impl LinearDataset {
+    pub fn generate(dims: LinearDims, k: usize, noise: f64, rng: &mut Rng) -> Self {
+        let w_star: Vec<f32> = (0..dims.d).map(|_| rng.normal() as f32).collect();
+        let shards = (0..k)
+            .map(|_| {
+                let x: Vec<f32> =
+                    (0..dims.m * dims.d).map(|_| rng.normal() as f32).collect();
+                let y: Vec<f32> = (0..dims.m)
+                    .map(|i| {
+                        let row = &x[i * dims.d..(i + 1) * dims.d];
+                        let clean: f32 =
+                            row.iter().zip(&w_star).map(|(a, b)| a * b).sum();
+                        clean + (rng.normal() * noise) as f32
+                    })
+                    .collect();
+                Shard { x, y }
+            })
+            .collect();
+        LinearDataset { dims, shards, w_star, noise }
+    }
+
+    /// Full-batch mean loss 0.5/m ||X w - y||^2 averaged over shards
+    /// (exact, Rust-side; used for loss curves and tests).
+    pub fn loss(&self, w: &[f32]) -> f64 {
+        let (m, d) = (self.dims.m, self.dims.d);
+        let mut total = 0.0f64;
+        for shard in &self.shards {
+            for i in 0..m {
+                let row = &shard.x[i * d..(i + 1) * d];
+                let pred: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum();
+                let r = (pred - shard.y[i]) as f64;
+                total += 0.5 * r * r;
+            }
+        }
+        total / (self.shards.len() * m) as f64
+    }
+}
+
+/// Teacher-MLP regression dataset (targets from a random frozen MLP).
+#[derive(Clone, Debug)]
+pub struct MlpDataset {
+    pub dims: MlpDims,
+    pub shards: Vec<Shard>,
+    pub teacher: Vec<f32>,
+}
+
+impl MlpDataset {
+    pub fn generate(dims: MlpDims, k: usize, rng: &mut Rng) -> Self {
+        let teacher: Vec<f32> =
+            (0..dims.flat_dim).map(|_| (rng.normal() * 0.5) as f32).collect();
+        let shards = (0..k)
+            .map(|_| {
+                let x: Vec<f32> =
+                    (0..dims.m * dims.d_in).map(|_| rng.normal() as f32).collect();
+                let y = teacher_forward(&teacher, &x, dims);
+                Shard { x, y }
+            })
+            .collect();
+        MlpDataset { dims, shards, teacher }
+    }
+}
+
+/// Forward pass of the frozen teacher (same architecture as the model).
+fn teacher_forward(theta: &[f32], x: &[f32], dims: MlpDims) -> Vec<f32> {
+    let MlpDims { m, d_in, d_hidden, d_out, .. } = dims;
+    let (w1, rest) = theta.split_at(d_in * d_hidden);
+    let (b1, rest) = rest.split_at(d_hidden);
+    let (w2, b2) = rest.split_at(d_hidden * d_out);
+    let mut y = vec![0.0f32; m * d_out];
+    for i in 0..m {
+        let mut h = vec![0.0f32; d_hidden];
+        for j in 0..d_hidden {
+            let mut z = b1[j];
+            for t in 0..d_in {
+                z += x[i * d_in + t] * w1[t * d_hidden + j];
+            }
+            h[j] = z.tanh();
+        }
+        for j in 0..d_out {
+            let mut o = b2[j];
+            for t in 0..d_hidden {
+                o += h[t] * w2[t * d_out + j];
+            }
+            y[i * d_out + j] = o;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LIN: LinearDims = LinearDims { m: 8, d: 4 };
+    const MLP: MlpDims =
+        MlpDims { m: 4, d_in: 3, d_hidden: 5, d_out: 2, flat_dim: 3 * 5 + 5 + 5 * 2 + 2 };
+
+    #[test]
+    fn linear_shapes_and_count() {
+        let ds = LinearDataset::generate(LIN, 10, 0.1, &mut Rng::new(1));
+        assert_eq!(ds.shards.len(), 10);
+        for s in &ds.shards {
+            assert_eq!(s.x.len(), 32);
+            assert_eq!(s.y.len(), 8);
+        }
+    }
+
+    #[test]
+    fn linear_loss_minimized_at_w_star_when_noiseless() {
+        let ds = LinearDataset::generate(LIN, 5, 0.0, &mut Rng::new(2));
+        let at_star = ds.loss(&ds.w_star);
+        assert!(at_star < 1e-10, "{at_star}");
+        let zero = vec![0.0f32; LIN.d];
+        assert!(ds.loss(&zero) > at_star + 0.1);
+    }
+
+    #[test]
+    fn linear_noise_raises_floor() {
+        let ds = LinearDataset::generate(LIN, 20, 0.5, &mut Rng::new(3));
+        let at_star = ds.loss(&ds.w_star);
+        // E[loss at w*] = 0.5 * noise^2 = 0.125.
+        assert!((at_star - 0.125).abs() < 0.08, "{at_star}");
+    }
+
+    #[test]
+    fn mlp_targets_come_from_teacher() {
+        let ds = MlpDataset::generate(MLP, 3, &mut Rng::new(4));
+        // Recomputing targets with the stored teacher matches exactly.
+        for s in &ds.shards {
+            assert_eq!(s.y, teacher_forward(&ds.teacher, &s.x, MLP));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = LinearDataset::generate(LIN, 4, 0.1, &mut Rng::new(9));
+        let b = LinearDataset::generate(LIN, 4, 0.1, &mut Rng::new(9));
+        assert_eq!(a.shards[2].x, b.shards[2].x);
+    }
+}

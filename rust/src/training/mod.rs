@@ -1,0 +1,7 @@
+//! Training layer: synthetic datasets and the end-to-end coded GD loop.
+
+pub mod data;
+pub mod driver;
+
+pub use data::{LinearDataset, MlpDataset, Shard};
+pub use driver::{train, TrainConfig, TrainOutcome};

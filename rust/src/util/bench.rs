@@ -1,0 +1,135 @@
+//! Micro-benchmark harness for the `harness = false` bench targets.
+//!
+//! Criterion is not in the offline vendor set, so this provides the same
+//! workflow: warmup, timed iterations, median/p10/p90 reporting, and a
+//! `black_box` to defeat const-folding. Output is one line per benchmark,
+//! machine-grepable for EXPERIMENTS.md.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark runner. Prints `bench <name> ... median=<t> p10=<t> p90=<t>`.
+pub struct Bencher {
+    /// Minimum wall-clock time to spend measuring each benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before measurement.
+    pub warmup_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(700),
+            warmup_time: Duration::from_millis(200),
+        }
+    }
+}
+
+/// Format a duration with appropriate unit.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3}s", ns / 1_000_000_000.0)
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(250),
+            warmup_time: Duration::from_millis(50),
+        }
+    }
+
+    /// Benchmark `f`, returning the median per-iteration time.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Duration {
+        // Warmup + estimate per-iter cost.
+        let warm_start = Instant::now();
+        let mut iters_done = 0u64;
+        while warm_start.elapsed() < self.warmup_time || iters_done == 0 {
+            std_black_box(f());
+            iters_done += 1;
+            if iters_done > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / iters_done as f64;
+
+        // Choose a batch size so each sample takes ~1/50 of measure_time.
+        let target_sample = self.measure_time.as_secs_f64() / 50.0;
+        let batch = ((target_sample / per_iter.max(1e-12)).ceil() as u64).max(1);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure_time || samples.len() < 10 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std_black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> Duration {
+            let idx = ((samples.len() - 1) as f64 * p).round() as usize;
+            Duration::from_secs_f64(samples[idx])
+        };
+        let (p10, med, p90) = (q(0.10), q(0.50), q(0.90));
+        println!(
+            "bench {name:<48} median={:<10} p10={:<10} p90={:<10} samples={}",
+            fmt_duration(med),
+            fmt_duration(p10),
+            fmt_duration(p90),
+            samples.len()
+        );
+        med
+    }
+
+    /// Benchmark and report a derived throughput (items/sec).
+    pub fn bench_throughput<T>(&self, name: &str, items: u64, f: impl FnMut() -> T) -> f64 {
+        let med = self.bench(name, f);
+        let thr = items as f64 / med.as_secs_f64();
+        println!("bench {name:<48} throughput={thr:.3e} items/s");
+        thr
+    }
+}
+
+/// True when benches should run in quick mode (CI / `make test`).
+pub fn quick_mode() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_time() {
+        let b = Bencher {
+            measure_time: Duration::from_millis(30),
+            warmup_time: Duration::from_millis(5),
+        };
+        let med = b.bench("noop-ish", || black_box(3u64).wrapping_mul(7));
+        assert!(med.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_duration(Duration::from_micros(50)).ends_with("us"));
+        assert!(fmt_duration(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+}

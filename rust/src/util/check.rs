@@ -1,0 +1,64 @@
+//! Tiny property-testing harness (proptest is not in the vendor set).
+//!
+//! `property(cases, seed, |rng| ...)` runs a closure over `cases` forked
+//! RNG streams; on failure it reports the failing case index + seed so
+//! the exact case can be replayed with `Rng::new(seed).fork(i)`.
+
+use super::rng::Rng;
+
+/// Run `f` over `cases` independent RNG streams; panic with a replayable
+/// (seed, case) pair on the first failure.
+pub fn property(cases: usize, seed: u64, f: impl Fn(&mut Rng) -> Result<(), String>) {
+    let root = Rng::new(seed);
+    for i in 0..cases {
+        let mut rng = root.fork(i as u64);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at case {i} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Assert two floats are within absolute + relative tolerance.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol})"))
+    }
+}
+
+/// Assert a predicate with a formatted message.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes_trivially() {
+        property(50, 1, |rng| {
+            let x = rng.f64();
+            ensure((0.0..1.0).contains(&x), format!("{x} out of range"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn property_reports_failure() {
+        property(10, 2, |rng| ensure(rng.f64() < 0.5, "too big"));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1e6, 1e6 + 1.0, 1e-9).is_err());
+        assert!(close(1e6, 1e6 + 1.0, 1e-5).is_ok());
+    }
+}

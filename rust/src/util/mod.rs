@@ -1,0 +1,12 @@
+//! Cross-cutting substrates: RNG, JSON, parallel map, bench + property
+//! harnesses. Hand-rolled because the offline vendor set only ships the
+//! `xla` PJRT bindings and `anyhow` (see Cargo.toml note).
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

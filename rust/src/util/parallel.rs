@@ -1,0 +1,94 @@
+//! Scoped-thread parallel map — the Monte-Carlo engine's backbone.
+//!
+//! Hand-rolled (no rayon in the offline vendor set): chunks the index
+//! space across `threads` OS threads via `std::thread::scope`, preserving
+//! output order. Each worker gets its own forked RNG stream upstream, so
+//! results are independent of the thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default (capped so the figure
+/// harness stays polite on shared machines).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Parallel `(0..n).map(f)` with order-preserving output.
+///
+/// Work is distributed dynamically (atomic counter), so skewed per-item
+/// cost (e.g. LSQR on ill-conditioned draws) does not idle threads.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out = vec![T::default(); n];
+    let next = AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<T>>> = (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                *slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    for (i, slot) in slots.into_iter().enumerate() {
+        out[i] = slot.into_inner().unwrap().expect("worker missed slot");
+    }
+    out
+}
+
+/// Parallel mean of `n` trial values (the Monte-Carlo primitive).
+pub fn parallel_mean<F>(n: usize, threads: usize, f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    let vals = parallel_map(n, threads, f);
+    vals.iter().sum::<f64>() / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map() {
+        let f = |i: usize| (i * i) as f64;
+        let par = parallel_map(1000, 8, f);
+        let ser: Vec<f64> = (0..1000).map(f).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        assert_eq!(parallel_map(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let v: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn mean_of_constant() {
+        assert!((parallel_mean(100, 4, |_| 2.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_result() {
+        let f = |i: usize| (i as f64).sqrt();
+        let a = parallel_map(512, 2, f);
+        let b = parallel_map(512, 7, f);
+        assert_eq!(a, b);
+    }
+}

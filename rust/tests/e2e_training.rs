@@ -1,0 +1,92 @@
+//! End-to-end integration: the full three-layer stack (AOT artifacts →
+//! PJRT engines → coded workers → master decode → GD update) trains a
+//! model and the loss goes down. Skipped if artifacts are not built.
+
+use gradcode::codes::Scheme;
+use gradcode::coordinator::{DecoderKind, ModelKind};
+use gradcode::runtime::{Backend, EnginePool, Manifest};
+use gradcode::stragglers::{DeadlinePolicy, LatencyModel};
+use gradcode::training::{train, TrainConfig};
+
+fn pjrt_backend(engines: usize) -> Option<(EnginePool, Backend)> {
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => {
+            let pool = EnginePool::start(m, engines).expect("engine pool");
+            let b = Backend::Pjrt(pool.handle());
+            Some((pool, b))
+        }
+        Err(e) => {
+            eprintln!("SKIP e2e training: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn base_cfg(scheme: Scheme, model: ModelKind, k: usize, s: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new(scheme, k, s, model);
+    cfg.steps = 25;
+    cfg.lr = 0.4;
+    cfg.coordinator.seed = 11;
+    cfg.coordinator.latency = LatencyModel::Pareto { scale: 0.02, shape: 1.5 };
+    cfg.coordinator.deadline = DeadlinePolicy::FastestR((k * 3) / 4);
+    cfg
+}
+
+#[test]
+fn linear_model_trains_through_pjrt_with_frc() {
+    let Some((_pool, backend)) = pjrt_backend(2) else { return };
+    let cfg = base_cfg(Scheme::Frc, ModelKind::Linear, 20, 5);
+    let out = train(&backend, &cfg).unwrap();
+    let (first, last) = (out.history.rounds[0].loss, out.history.final_loss());
+    assert!(last < 0.5 * first, "loss {first} -> {last}");
+}
+
+#[test]
+fn mlp_trains_through_pjrt_with_bgc_stragglers() {
+    let Some((_pool, backend)) = pjrt_backend(2) else { return };
+    let mut cfg = base_cfg(Scheme::Bgc, ModelKind::Mlp, 16, 5);
+    cfg.steps = 30;
+    cfg.lr = 1.0;
+    let out = train(&backend, &cfg).unwrap();
+    let (first, last) = (out.history.rounds[0].loss, out.history.final_loss());
+    assert!(last < 0.9 * first, "mlp loss {first} -> {last}");
+    // Straggler machinery actually dropped workers every round.
+    assert!(out.history.rounds.iter().all(|r| r.survivors == 12));
+}
+
+#[test]
+fn pjrt_and_native_training_agree() {
+    // Same config, same seed: the PJRT and native backends must produce
+    // (numerically) the same trajectory — the runtime is behaviourally
+    // transparent.
+    let Some((_pool, pjrt)) = pjrt_backend(1) else { return };
+    let native = Backend::Native {
+        linear: pjrt.linear_dims(),
+        mlp: pjrt.mlp_dims(),
+        s_max: pjrt.s_max(),
+    };
+    let cfg = base_cfg(Scheme::Frc, ModelKind::Linear, 12, 4);
+    let out_p = train(&pjrt, &cfg).unwrap();
+    let out_n = train(&native, &cfg).unwrap();
+    for (a, b) in out_p.params.iter().zip(&out_n.params) {
+        assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn optimal_decoder_no_worse_than_onestep_e2e() {
+    let Some((_pool, backend)) = pjrt_backend(2) else { return };
+    let mut one = base_cfg(Scheme::Bgc, ModelKind::Linear, 20, 5);
+    one.coordinator.decoder = DecoderKind::OneStep;
+    let mut opt = one.clone();
+    opt.coordinator.decoder = DecoderKind::Optimal;
+    let out_one = train(&backend, &one).unwrap();
+    let out_opt = train(&backend, &opt).unwrap();
+    // Decode error comparison is the paper's guarantee (per-round).
+    assert!(
+        out_opt.history.mean_decode_err() <= out_one.history.mean_decode_err() + 1e-9,
+        "optimal {} > one-step {}",
+        out_opt.history.mean_decode_err(),
+        out_one.history.mean_decode_err()
+    );
+}

@@ -1,0 +1,168 @@
+//! Integration tests across the runtime boundary: AOT HLO artifacts
+//! (from `make artifacts`) loaded and executed via PJRT, validated
+//! against the native Rust reference implementation — the end-to-end
+//! L1/L2 ⇄ L3 numerics contract.
+//!
+//! These tests are skipped (with a loud message) if artifacts/ has not
+//! been built; `make test` always builds artifacts first.
+
+use gradcode::coordinator::{compute_message, ModelKind, WorkerSpec};
+use gradcode::runtime::{native, Backend, CombineKind, EnginePool, Manifest};
+use gradcode::training::data::{LinearDataset, MlpDataset};
+use gradcode::util::Rng;
+
+fn manifest() -> Option<Manifest> {
+    // Tests run from the crate root; artifacts live in ./artifacts.
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP pjrt integration: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn randf(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn pjrt_linear_grad_matches_native() {
+    let Some(m) = manifest() else { return };
+    let pool = EnginePool::start(m, 1).expect("engine pool");
+    let backend = Backend::Pjrt(pool.handle());
+    let dims = backend.linear_dims();
+    let mut rng = Rng::new(1);
+    for _ in 0..5 {
+        let x = randf(&mut rng, dims.m * dims.d);
+        let w = randf(&mut rng, dims.d);
+        let y = randf(&mut rng, dims.m);
+        let pjrt = backend.linear_grad(&x, &w, &y).unwrap();
+        let native = native::linear_grad(dims, &x, &w, &y).unwrap();
+        for (a, b) in pjrt.iter().zip(&native) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_mlp_grad_matches_native() {
+    let Some(m) = manifest() else { return };
+    let pool = EnginePool::start(m, 1).expect("engine pool");
+    let backend = Backend::Pjrt(pool.handle());
+    let dims = backend.mlp_dims();
+    let mut rng = Rng::new(2);
+    let theta: Vec<f32> = (0..dims.flat_dim).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let x = randf(&mut rng, dims.m * dims.d_in);
+    let y = randf(&mut rng, dims.m * dims.d_out);
+    let (loss_p, grad_p) = backend.mlp_grad(&theta, &x, &y).unwrap();
+    let (loss_n, grad_n) = native::mlp_grad(dims, &theta, &x, &y).unwrap();
+    assert!((loss_p - loss_n).abs() < 1e-4 * (1.0 + loss_n.abs()), "{loss_p} vs {loss_n}");
+    let mut max_gap = 0.0f32;
+    for (a, b) in grad_p.iter().zip(&grad_n) {
+        max_gap = max_gap.max((a - b).abs());
+    }
+    assert!(max_gap < 1e-4, "max grad gap {max_gap}");
+}
+
+#[test]
+fn pjrt_combine_matches_native() {
+    let Some(m) = manifest() else { return };
+    let pool = EnginePool::start(m, 1).expect("engine pool");
+    let backend = Backend::Pjrt(pool.handle());
+    let d = backend.linear_dims().d;
+    let s = backend.s_max();
+    let mut rng = Rng::new(3);
+    let grads = randf(&mut rng, s * d);
+    let coeffs = randf(&mut rng, s);
+    let pjrt = backend.combine(CombineKind::Linear, &grads, &coeffs).unwrap();
+    let native = native::coded_combine(s, d, &grads, &coeffs).unwrap();
+    for (a, b) in pjrt.iter().zip(&native) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+    }
+}
+
+#[test]
+fn pjrt_worker_message_matches_native_backend() {
+    let Some(m) = manifest() else { return };
+    let pool = EnginePool::start(m, 2).expect("engine pool");
+    let pjrt = Backend::Pjrt(pool.handle());
+    let native_b = Backend::Native {
+        linear: pjrt.linear_dims(),
+        mlp: pjrt.mlp_dims(),
+        s_max: pjrt.s_max(),
+    };
+    let dims = pjrt.linear_dims();
+    let mut rng = Rng::new(4);
+    let ds = LinearDataset::generate(dims, 6, 0.1, &mut rng);
+    let params = randf(&mut rng, dims.d);
+    let spec = WorkerSpec { id: 0, tasks: vec![0, 2, 5], coeffs: vec![1.0, 1.0, 1.0] };
+    let mp = compute_message(&pjrt, ModelKind::Linear, &params, &ds.shards, &spec).unwrap();
+    let mn = compute_message(&native_b, ModelKind::Linear, &params, &ds.shards, &spec).unwrap();
+    for (a, b) in mp.payload.iter().zip(&mn.payload) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+    }
+}
+
+#[test]
+fn pjrt_fused_message_matches_pertask() {
+    // The §Perf fused module (one dispatch) must produce the same
+    // message as the per-task path (s + 1 dispatches).
+    use gradcode::coordinator::{compute_message_via, MessagePath};
+    let Some(m) = manifest() else { return };
+    let pool = EnginePool::start(m, 1).expect("engine pool");
+    let backend = Backend::Pjrt(pool.handle());
+    assert!(backend.has_fused_message(), "artifacts missing msg_* modules");
+    let mut rng = Rng::new(6);
+
+    // Linear model.
+    let ld = backend.linear_dims();
+    let ds = LinearDataset::generate(ld, 8, 0.1, &mut rng);
+    let params = randf(&mut rng, ld.d);
+    let spec = WorkerSpec { id: 0, tasks: vec![1, 4, 6], coeffs: vec![1.0, 1.0, 1.0] };
+    let fused =
+        compute_message_via(&backend, ModelKind::Linear, &params, &ds.shards, &spec, MessagePath::Fused)
+            .unwrap();
+    let pertask =
+        compute_message_via(&backend, ModelKind::Linear, &params, &ds.shards, &spec, MessagePath::PerTask)
+            .unwrap();
+    for (a, b) in fused.payload.iter().zip(&pertask.payload) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "linear: {a} vs {b}");
+    }
+
+    // MLP model (losses must match too).
+    let md = backend.mlp_dims();
+    let ds = MlpDataset::generate(md, 6, &mut rng);
+    let theta: Vec<f32> = (0..md.flat_dim).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let spec = WorkerSpec { id: 1, tasks: vec![0, 3], coeffs: vec![1.0, 1.0] };
+    let fused =
+        compute_message_via(&backend, ModelKind::Mlp, &theta, &ds.shards, &spec, MessagePath::Fused)
+            .unwrap();
+    let pertask =
+        compute_message_via(&backend, ModelKind::Mlp, &theta, &ds.shards, &spec, MessagePath::PerTask)
+            .unwrap();
+    assert!((fused.loss_sum - pertask.loss_sum).abs() < 1e-4 * (1.0 + pertask.loss_sum));
+    for (a, b) in fused.payload.iter().zip(&pertask.payload) {
+        assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "mlp: {a} vs {b}");
+    }
+}
+
+#[test]
+fn pjrt_pool_parallel_submission() {
+    let Some(m) = manifest() else { return };
+    let pool = EnginePool::start(m, 2).expect("engine pool");
+    let backend = Backend::Pjrt(pool.handle());
+    let dims = backend.mlp_dims();
+    let mut rng = Rng::new(5);
+    let ds = MlpDataset::generate(dims, 8, &mut rng);
+    let theta: Vec<f32> = (0..dims.flat_dim).map(|_| (rng.normal() * 0.1) as f32).collect();
+    // Hammer the pool from several threads at once.
+    let losses = gradcode::util::parallel::parallel_map(8, 4, |i| {
+        let (loss, _) = backend.mlp_grad(&theta, &ds.shards[i].x, &ds.shards[i].y).unwrap();
+        loss as f64
+    });
+    assert!(losses.iter().all(|&l| l.is_finite() && l > 0.0));
+    // Same shard -> same loss regardless of which engine served it.
+    let (l0, _) = backend.mlp_grad(&theta, &ds.shards[0].x, &ds.shards[0].y).unwrap();
+    assert!((l0 as f64 - losses[0]).abs() < 1e-7);
+}

@@ -1,0 +1,214 @@
+//! Cross-module property tests: the paper's structural invariants,
+//! checked over randomized instances via the hand-rolled property
+//! harness (`gradcode::util::check`). Each property cites the paper
+//! statement it guards.
+
+use gradcode::adversary::{asp_objective, frc_worst_stragglers, greedy_stragglers};
+use gradcode::codes::Scheme;
+use gradcode::decode::{
+    algorithmic_error_curve, decode_error, Decoder, OneStepDecoder, OptimalDecoder, StepSize,
+};
+use gradcode::graph::bipartite::{lemma15_error, uncovered_tasks};
+use gradcode::sim::tables::{thm5_exact, thm6_expected};
+use gradcode::util::check::{close, ensure, property};
+use gradcode::util::Rng;
+
+/// Random (scheme, k, s, r) instance at test scale.
+fn random_instance(rng: &mut Rng) -> (Scheme, usize, usize, usize) {
+    let schemes = [Scheme::Frc, Scheme::Bgc, Scheme::Rbgc, Scheme::RegularGraph, Scheme::Cyclic];
+    let scheme = schemes[rng.usize(schemes.len())];
+    // FRC needs s | k; regular graph needs k*s even. Pick from a safe grid.
+    let (k, s) = [(20, 4), (20, 5), (24, 6), (30, 5), (40, 8)][rng.usize(5)];
+    let r = 1 + rng.usize(k - 1);
+    (scheme, k, s, r)
+}
+
+fn draw_a(scheme: Scheme, k: usize, s: usize, r: usize, rng: &mut Rng) -> gradcode::linalg::CscMatrix {
+    let g = scheme.build(k, k, s).assignment(rng);
+    g.select_columns(&rng.sample_indices(k, r))
+}
+
+#[test]
+fn prop_error_bounds_0_le_err_le_k() {
+    // Paper §2.2: "for any A, 0 <= err(A) <= k".
+    property(60, 101, |rng| {
+        let (scheme, k, s, r) = random_instance(rng);
+        let a = draw_a(scheme, k, s, r, rng);
+        let err = OptimalDecoder::new().err(&a);
+        ensure(
+            (-1e-9..=k as f64 + 1e-9).contains(&err),
+            format!("{} err {err} outside [0, {k}]", scheme.name()),
+        )
+    });
+}
+
+#[test]
+fn prop_onestep_dominates_optimal() {
+    // Paper §2.2: err_1(A) >= err(A) for every A.
+    property(60, 102, |rng| {
+        let (scheme, k, s, r) = random_instance(rng);
+        let a = draw_a(scheme, k, s, r, rng);
+        let opt = OptimalDecoder::new().err(&a);
+        let one = OneStepDecoder::canonical(k, r, s).err1(&a);
+        ensure(
+            one >= opt - 1e-7,
+            format!("{}: err1 {one} < err {opt}", scheme.name()),
+        )
+    });
+}
+
+#[test]
+fn prop_uncovered_tasks_lower_bound_err() {
+    // Tasks covered by no survivor contribute >= 1 each to err(A).
+    property(50, 103, |rng| {
+        let (scheme, k, s, r) = random_instance(rng);
+        let a = draw_a(scheme, k, s, r, rng);
+        let err = OptimalDecoder::new().err(&a);
+        let unc = uncovered_tasks(&a) as f64;
+        ensure(err >= unc - 1e-7, format!("err {err} < uncovered {unc}"))
+    });
+}
+
+#[test]
+fn prop_frc_error_is_alpha_s() {
+    // Paper §3: err(A_frc) = αs, α = number of fully-straggled blocks.
+    property(50, 104, |rng| {
+        let k = 20;
+        let s = [4usize, 5][rng.usize(2)];
+        let r = 1 + rng.usize(k - 1);
+        let g = Scheme::Frc.build(k, k, s).assignment(rng);
+        let cols = rng.sample_indices(k, r);
+        let a = g.select_columns(&cols);
+        // Count missing blocks directly.
+        let mut present = vec![false; k / s];
+        for &j in &cols {
+            present[j / s] = true;
+        }
+        let alpha = present.iter().filter(|&&p| !p).count();
+        let err = OptimalDecoder::new().err(&a);
+        close(err, (alpha * s) as f64, 1e-7)
+    });
+}
+
+#[test]
+fn prop_algorithmic_curve_monotone_and_above_optimal() {
+    // Lemma 12: ||u_t||^2 decreasing (nu >= ||A||^2) and >= err(A).
+    property(30, 105, |rng| {
+        let (scheme, k, s, r) = random_instance(rng);
+        let a = draw_a(scheme, k, s, r, rng);
+        let curve = algorithmic_error_curve(&a, StepSize::SpectralNormSq, 25, rng);
+        let opt = OptimalDecoder::new().err(&a);
+        for w in curve.windows(2) {
+            ensure(w[1] <= w[0] + 1e-8, format!("not monotone: {} -> {}", w[0], w[1]))?;
+        }
+        ensure(
+            curve.iter().all(|&e| e >= opt - 1e-6),
+            "curve dipped below err(A)",
+        )
+    });
+}
+
+#[test]
+fn prop_lemma15_walk_expansion_matches_iterates() {
+    // Lemma 15: the alternating walk-moment sum equals ||u_t||^2 (small
+    // t; the sum is numerically fragile for large t).
+    property(30, 106, |rng| {
+        let (scheme, k, s, r) = random_instance(rng);
+        let a = draw_a(scheme, k, s, r, rng);
+        let nu = {
+            let mut prng = rng.fork(7);
+            StepSize::SpectralNormSq.resolve(&a, &mut prng)
+        };
+        for t in 1..=2 {
+            let direct = algorithmic_error_curve(&a, StepSize::Fixed(nu), t, rng)[t];
+            let viawalks = lemma15_error(&a, nu, t);
+            close(direct, viawalks, 1e-6)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decoder_weights_realize_reported_error() {
+    // For every decoder the reported error equals the error of the
+    // weights it returns (no bookkeeping drift).
+    property(40, 107, |rng| {
+        let (scheme, k, s, r) = random_instance(rng);
+        let a = draw_a(scheme, k, s, r, rng);
+        let dec = OptimalDecoder::new();
+        let w = dec.weights(&a);
+        close(decode_error(&a, &w), dec.err(&a), 1e-6)?;
+        let one = OneStepDecoder::canonical(k, r, s);
+        let w1 = one.weights(&a);
+        close(decode_error(&a, &w1), one.err1(&a), 1e-9)
+    });
+}
+
+#[test]
+fn prop_adversary_at_least_random() {
+    // Greedy adversary never does worse than a random straggler draw
+    // (it starts from all-alive and removes only improving columns).
+    property(25, 108, |rng| {
+        let (_, k, s, _) = random_instance(rng);
+        let r = (k * 2) / 3;
+        let rho = k as f64 / (r as f64 * s as f64);
+        let g = Scheme::Bgc.build(k, k, s).assignment(rng);
+        let adv = asp_objective(&g, &greedy_stragglers(&g, r, rho), rho);
+        let rand = asp_objective(&g, &rng.sample_indices(k, r), rho);
+        ensure(adv >= rand - 1e-7, format!("greedy {adv} < random {rand}"))
+    });
+}
+
+#[test]
+fn prop_frc_attack_matches_thm10_floor() {
+    // Thm 10: block attack achieves floor((k-r)/s)*s optimal error.
+    property(30, 109, |rng| {
+        let k = 20;
+        let s = [4usize, 5][rng.usize(2)];
+        let r = 1 + rng.usize(k - 1);
+        let g = Scheme::Frc.build(k, k, s).assignment(rng);
+        let ns = frc_worst_stragglers(&g, r);
+        let err = OptimalDecoder::new().err(&g.select_columns(&ns));
+        close(err, (((k - r) / s) * s) as f64, 1e-7)
+    });
+}
+
+#[test]
+fn prop_closed_forms_are_sane() {
+    // thm5/thm6 closed forms: non-negative, bounded by k, decreasing in r.
+    property(40, 110, |rng| {
+        let k = 20 + 5 * rng.usize(5);
+        let s = 1 + rng.usize(5);
+        let r1 = 1 + rng.usize(k - 2);
+        let r2 = r1 + 1;
+        for &f in &[thm6_expected as fn(usize, usize, usize) -> f64] {
+            let (e1, e2) = (f(k, r1, s), f(k, r2, s));
+            ensure(e1 >= -1e-9 && e1 <= k as f64 + 1e-9, format!("thm6 {e1} out of range"))?;
+            ensure(e2 <= e1 + 1e-9, format!("thm6 not decreasing: {e1} -> {e2}"))?;
+        }
+        let e = thm5_exact(k, r1, s);
+        ensure(e >= -1e-6, format!("thm5 exact negative: {e}"))
+    });
+}
+
+#[test]
+fn prop_column_degree_caps_respected() {
+    // rBGC: col degree <= 2s (Alg. 3); FRC/cyclic/s-regular: exactly s.
+    property(40, 111, |rng| {
+        let (k, s) = [(20usize, 4usize), (30, 5), (24, 6)][rng.usize(3)];
+        let rbgc = Scheme::Rbgc.build(k, k, s).assignment(rng);
+        for j in 0..k {
+            ensure(rbgc.col_nnz(j) <= 2 * s, format!("rBGC col {j} degree {}", rbgc.col_nnz(j)))?;
+        }
+        for scheme in [Scheme::Frc, Scheme::Cyclic, Scheme::RegularGraph] {
+            let g = scheme.build(k, k, s).assignment(rng);
+            for j in 0..k {
+                ensure(
+                    g.col_nnz(j) == s,
+                    format!("{} col {j} degree {} != {s}", scheme.name(), g.col_nnz(j)),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
