@@ -38,3 +38,59 @@ pub fn mc(seed: u64) -> MonteCarlo {
 pub fn banner(name: &str, what: &str) {
     println!("\n=== {name}: {what} (trials={}) ===", trials());
 }
+
+/// One decode-benchmark measurement, emitted to `BENCH_decode.json` so
+/// future PRs can diff throughput trajectories against fixed seeds.
+pub struct DecodeBenchRecord {
+    /// What was measured, e.g. "one-step/fused".
+    pub label: String,
+    pub scheme: String,
+    pub k: usize,
+    pub n: usize,
+    pub s: usize,
+    /// Non-straggler count of the benchmarked instance.
+    pub r: usize,
+    /// RNG seed the instance was drawn with (fixed across PRs).
+    pub seed: u64,
+    pub ns_per_decode: f64,
+    pub decodes_per_sec: f64,
+}
+
+impl DecodeBenchRecord {
+    fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"label\": \"{}\", \"scheme\": \"{}\", \"k\": {}, \"n\": {}, ",
+                "\"s\": {}, \"r\": {}, \"seed\": {}, \"ns_per_decode\": {:.3}, ",
+                "\"decodes_per_sec\": {:.3e}}}"
+            ),
+            self.label,
+            self.scheme,
+            self.k,
+            self.n,
+            self.s,
+            self.r,
+            self.seed,
+            self.ns_per_decode,
+            self.decodes_per_sec,
+        )
+    }
+}
+
+/// Write the benchmark trajectory file (`BENCH_decode.json` in the
+/// crate root, or `$BENCH_JSON_DIR` if set). Records use fixed seeds so
+/// regressions show up as pure-throughput deltas across PRs.
+pub fn write_decode_bench_json(records: &[DecodeBenchRecord]) {
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_decode.json");
+    let body: Vec<String> = records.iter().map(|r| format!("    {}", r.to_json())).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"decode_throughput\",\n  \"quick\": {},\n  \"records\": [\n{}\n  ]\n}}\n",
+        quick(),
+        body.join(",\n")
+    );
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("WARN: could not write {}: {e}", path.display()),
+    }
+}

@@ -1,25 +1,99 @@
 //! Decoder hot-path benchmarks — the §Perf targets for L3.
 //!
+//! * fused vs seed one-step decode at k = n = 1000, s = 10: the
+//!   acceptance target is fused ≥ 3× (no A materialization, no
+//!   allocation, single pass over G's selected columns).
+//! * workspace vs allocating LSQR, cold vs warm-started.
 //! * one-step decode: a single sparse pass; target >= 1e8 nnz/s.
-//! * optimal decode (LSQR): target << 1ms at the paper's k=100.
-//! * algorithmic iterates: per-iteration cost (2 sparse matvecs).
 //! * scaling in k at fixed density.
+//!
+//! Emits `BENCH_decode.json` (fixed seeds) for cross-PR trajectories.
 //!
 //! Run: `cargo bench --bench decode_throughput`.
 
 mod common;
 
-use gradcode::codes::Scheme;
-use gradcode::decode::{algorithmic_error_curve, OneStepDecoder, OptimalDecoder, StepSize};
-use gradcode::linalg::spectral_norm;
+use common::DecodeBenchRecord;
+use gradcode::codes::{GradientCode, Scheme};
+use gradcode::decode::{
+    algorithmic_error_curve, DecodeWorkspace, OneStepDecoder, OptimalDecoder, StepSize,
+};
+use gradcode::linalg::{spectral_norm, LsqrOptions};
 use gradcode::sim::figures::draw_non_straggler_matrix;
 use gradcode::util::bench::black_box;
 use gradcode::util::Rng;
 
 fn main() {
     let b = common::bencher();
+    let mut records: Vec<DecodeBenchRecord> = Vec::new();
 
-    // Paper-sized instance.
+    // ------------------------------------------------- headline: fused
+    // k = n = 1000, s = 10 — the ISSUE's acceptance instance. The seed
+    // path materializes A (three Vecs) and then row-sums it; the fused
+    // path accumulates coverage straight from G.
+    let (k1, s1, r1, seed1) = (1000usize, 10usize, 900usize, 42u64);
+    let mut rng = Rng::new(seed1);
+    let g1 = Scheme::Bgc.build(k1, k1, s1).assignment(&mut rng);
+    let idx1 = rng.sample_indices(k1, r1);
+    let rho1 = k1 as f64 / (r1 as f64 * s1 as f64);
+
+    let t_seed = b.bench("decode/one-step/seed-path/k1000", || {
+        let a = g1.select_columns(&idx1);
+        let sums = a.row_sums();
+        black_box(sums.iter().map(|&v| (rho1 * v - 1.0).powi(2)).sum::<f64>())
+    });
+    let mut ws = DecodeWorkspace::new();
+    let t_fused = b.bench("decode/one-step/fused/k1000", || {
+        black_box(ws.err1_fused(&g1, &idx1, rho1))
+    });
+    let speedup = t_seed.as_secs_f64() / t_fused.as_secs_f64();
+    println!(
+        "bench decode/one-step/fused-speedup/k1000               {speedup:.2}x (target >= 3x)"
+    );
+    for (label, t) in [("one-step/seed-path", t_seed), ("one-step/fused", t_fused)] {
+        records.push(DecodeBenchRecord {
+            label: label.to_string(),
+            scheme: "BGC".to_string(),
+            k: k1,
+            n: k1,
+            s: s1,
+            r: r1,
+            seed: seed1,
+            ns_per_decode: t.as_nanos() as f64,
+            decodes_per_sec: 1.0 / t.as_secs_f64(),
+        });
+    }
+
+    // ------------------------------------- optimal decode: LSQR paths
+    let opts = LsqrOptions::default();
+    let t_alloc = b.bench("decode/optimal-lsqr/alloc/k1000", || {
+        black_box(OptimalDecoder::new().err(&g1.select_columns(&idx1)))
+    });
+    let t_ws = b.bench("decode/optimal-lsqr/workspace/k1000", || {
+        black_box(ws.optimal_err(&g1, &idx1, &opts, None))
+    });
+    let t_warm = b.bench("decode/optimal-lsqr/warm-start/k1000", || {
+        black_box(ws.optimal_err(&g1, &idx1, &opts, Some(rho1)))
+    });
+    for (label, t) in [
+        ("optimal/alloc", t_alloc),
+        ("optimal/workspace", t_ws),
+        ("optimal/warm-start", t_warm),
+    ] {
+        records.push(DecodeBenchRecord {
+            label: label.to_string(),
+            scheme: "BGC".to_string(),
+            k: k1,
+            n: k1,
+            s: s1,
+            r: r1,
+            seed: seed1,
+            ns_per_decode: t.as_nanos() as f64,
+            decodes_per_sec: 1.0 / t.as_secs_f64(),
+        });
+    }
+
+    // --------------------------------------------- paper-sized (k=100)
     let mut rng = Rng::new(1);
     let a100 = draw_non_straggler_matrix(Scheme::Bgc, 100, 10, 80, &mut rng);
     let nnz = a100.nnz() as u64;
@@ -37,19 +111,34 @@ fn main() {
         black_box(spectral_norm(&a100, &mut r, 300, 1e-10))
     });
 
-    // Scaling sweep in k at s = log2(k)-ish density.
+    // ------------------------- scaling sweep in k at log2(k)-ish density
     let ks: &[usize] = if common::quick() { &[100, 400] } else { &[100, 400, 1600, 6400] };
     for &k in ks {
         let s = ((k as f64).log2().ceil() as usize).max(4);
         let r = (k * 4) / 5;
         let mut rng = Rng::new(k as u64);
-        let a = draw_non_straggler_matrix(Scheme::Bgc, k, s, r, &mut rng);
-        let nnz = a.nnz() as u64;
-        b.bench_throughput(&format!("decode/one-step/k{k} (nnz/s)"), nnz, || {
-            black_box(OneStepDecoder::canonical(k, r, s).err1(&a))
+        let g = Scheme::Bgc.build(k, k, s).assignment(&mut rng);
+        let idx = rng.sample_indices(k, r);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let nnz: u64 = idx.iter().map(|&j| g.col_nnz(j) as u64).sum();
+        b.bench_throughput(&format!("decode/one-step/fused/k{k} (nnz/s)"), nnz, || {
+            black_box(ws.err1_fused(&g, &idx, rho))
         });
-        b.bench(&format!("decode/optimal-lsqr/k{k}"), || {
-            black_box(OptimalDecoder::new().err(&a))
+        let t = b.bench(&format!("decode/optimal-lsqr/workspace/k{k}"), || {
+            black_box(ws.optimal_err(&g, &idx, &opts, None))
+        });
+        records.push(DecodeBenchRecord {
+            label: "optimal/workspace-scaling".to_string(),
+            scheme: "BGC".to_string(),
+            k,
+            n: k,
+            s,
+            r,
+            seed: k as u64,
+            ns_per_decode: t.as_nanos() as f64,
+            decodes_per_sec: 1.0 / t.as_secs_f64(),
         });
     }
+
+    common::write_decode_bench_json(&records);
 }

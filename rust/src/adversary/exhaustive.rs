@@ -4,7 +4,7 @@
 //! n <= 24; used in tests and the thm11 table to measure the optimality
 //! gap of the polynomial heuristics (greedy / local search).
 
-use super::asp_objective;
+use super::asp_objective_with;
 use crate::linalg::CscMatrix;
 
 /// Max n for which exhaustive enumeration is permitted.
@@ -18,10 +18,12 @@ pub fn exhaustive_worst_case(g: &CscMatrix, r: usize, rho: f64) -> (Vec<usize>, 
 
     let mut best_obj = f64::NEG_INFINITY;
     let mut best: Vec<usize> = Vec::new();
+    // One coverage accumulator reused across all C(n, r) evaluations.
+    let mut row_acc = Vec::new();
     // Iterate over all r-subsets via the "revolving door" of bitmasks.
     let mut comb: Vec<usize> = (0..r).collect();
     loop {
-        let obj = asp_objective(g, &comb, rho);
+        let obj = asp_objective_with(g, &comb, rho, &mut row_acc);
         if obj > best_obj {
             best_obj = obj;
             best = comb.clone();
@@ -47,7 +49,7 @@ pub fn exhaustive_worst_case(g: &CscMatrix, r: usize, rho: f64) -> (Vec<usize>, 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::adversary::{greedy_stragglers, local_search_stragglers};
+    use crate::adversary::{asp_objective, greedy_stragglers, local_search_stragglers};
     use crate::codes::{BernoulliCode, FractionalRepetitionCode, GradientCode};
     use crate::util::Rng;
 

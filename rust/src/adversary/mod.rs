@@ -22,11 +22,25 @@ pub use reduction::{dks_to_asp, greedy_dks, objective_identity_gap, AspInstance}
 use crate::linalg::CscMatrix;
 
 /// The r-ASP objective (Definition 4): the one-step decoding error of
-/// the column submatrix selected by `non_stragglers`.
+/// the column submatrix selected by `non_stragglers`, computed through
+/// the fused no-materialize path (row coverage accumulated straight
+/// from G — bit-identical to selecting A and summing its rows).
 pub fn asp_objective(g: &CscMatrix, non_stragglers: &[usize], rho: f64) -> f64 {
-    let a = g.select_columns(non_stragglers);
-    let sums = a.row_sums();
-    sums.iter().map(|&v| (rho * v - 1.0).powi(2)).sum()
+    let mut row_acc = Vec::new();
+    crate::decode::err1_from_supports(g, non_stragglers, rho, &mut row_acc)
+}
+
+/// [`asp_objective`] with a caller-reused accumulator. The exhaustive
+/// adversary evaluates C(n, r) candidate sets through this variant with
+/// one shared buffer; greedy and local search don't need it — they
+/// maintain row sums incrementally and never re-evaluate from scratch.
+pub fn asp_objective_with(
+    g: &CscMatrix,
+    non_stragglers: &[usize],
+    rho: f64,
+    row_acc: &mut Vec<f64>,
+) -> f64 {
+    crate::decode::err1_from_supports(g, non_stragglers, rho, row_acc)
 }
 
 /// An adversary proposes the non-straggler set that *maximizes* the

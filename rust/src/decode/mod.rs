@@ -10,11 +10,13 @@ pub mod algorithmic;
 pub mod onestep;
 pub mod optimal;
 pub mod streaming;
+pub mod workspace;
 
 pub use algorithmic::{algorithmic_error_curve, AlgorithmicDecoder, StepSize};
 pub use onestep::OneStepDecoder;
 pub use streaming::StreamingOneStep;
 pub use optimal::OptimalDecoder;
+pub use workspace::{err1_from_supports, DecodeWorkspace};
 
 use crate::linalg::{norm2_sq, CscMatrix};
 

@@ -1,0 +1,274 @@
+//! Workspace-reused decode engine — the zero-allocation trial pipeline.
+//!
+//! Every figure point in the paper averages over thousands of trials,
+//! and each trial used to allocate the straggler index set, the
+//! submatrix A (three fresh `Vec`s in `select_columns`), the row-sum
+//! buffer, and all LSQR iteration vectors. A [`DecodeWorkspace`] owns
+//! all of that scratch — one per worker thread, handed to the
+//! Monte-Carlo engine via `MonteCarlo::mean_ws` — so the steady-state
+//! trial loop performs **zero heap allocations** (pinned by the
+//! `zero_alloc` integration test).
+//!
+//! The centerpiece is the fused path [`err1_from_supports`]: the
+//! paper's own §2.2 observation that one-step decoding is *streamable*
+//! means `err_1(A) = ||ρ A 1_r − 1_k||²` needs only the row coverage
+//! counts, which can be accumulated straight from G's columns — A is
+//! never materialized. The accumulation visits the selected columns in
+//! order, exactly like `select_columns` + `row_sums` would, so the
+//! fused and materialized paths are bit-identical (pinned by the
+//! `decode_parity` integration test).
+
+use crate::linalg::{lsqr_with, CscMatrix, LsqrOptions, LsqrWorkspace};
+use crate::util::Rng;
+
+/// err_1(A) computed directly from G plus the non-straggler index set,
+/// in O(k + nnz(A)), without materializing A. `row_acc` is the reused
+/// coverage buffer (resized to `g.rows`, capacity kept).
+///
+/// Accumulation order matches `select_columns(ns)` + `row_sums()`
+/// exactly, so results are bit-identical to the materialized path.
+pub fn err1_from_supports(
+    g: &CscMatrix,
+    non_stragglers: &[usize],
+    rho: f64,
+    row_acc: &mut Vec<f64>,
+) -> f64 {
+    row_acc.clear();
+    row_acc.resize(g.rows, 0.0);
+    for &j in non_stragglers {
+        assert!(j < g.cols, "column {j} out of bounds ({})", g.cols);
+        for p in g.col_ptr[j]..g.col_ptr[j + 1] {
+            row_acc[g.row_idx[p]] += g.vals[p];
+        }
+    }
+    row_acc.iter().map(|&v| (rho * v - 1.0).powi(2)).sum()
+}
+
+/// Per-thread scratch for the straggler→decode trial pipeline.
+///
+/// All buffers grow to the largest instance seen and are then reused;
+/// after a warmup trial, running more trials of the same shape does no
+/// heap allocation at all.
+#[derive(Clone, Debug)]
+pub struct DecodeWorkspace {
+    /// Materialized submatrix A (only the optimal path needs it).
+    a: CscMatrix,
+    /// Row coverage / row-sum accumulator (length k).
+    row_acc: Vec<f64>,
+    /// RHS ones vector 1_k for LSQR.
+    ones: Vec<f64>,
+    /// Warm-start vector (ρ · 1_r) for the optimal decoder.
+    x0: Vec<f64>,
+    /// Fisher-Yates scratch for straggler sampling (length n).
+    pool: Vec<usize>,
+    /// The sampled non-straggler index set (length r).
+    idx: Vec<usize>,
+    /// LSQR iteration vectors.
+    lsqr: LsqrWorkspace,
+}
+
+impl Default for DecodeWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DecodeWorkspace {
+    pub fn new() -> Self {
+        DecodeWorkspace {
+            a: CscMatrix::empty(),
+            row_acc: Vec::new(),
+            ones: Vec::new(),
+            x0: Vec::new(),
+            pool: Vec::new(),
+            idx: Vec::new(),
+            lsqr: LsqrWorkspace::new(),
+        }
+    }
+
+    /// The non-straggler set sampled by the most recent `*_trial` call.
+    pub fn last_non_stragglers(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// Fused one-step error for an explicit non-straggler set.
+    pub fn err1_fused(&mut self, g: &CscMatrix, non_stragglers: &[usize], rho: f64) -> f64 {
+        err1_from_supports(g, non_stragglers, rho, &mut self.row_acc)
+    }
+
+    /// Reference parity path: materialize A into the workspace
+    /// submatrix, then run the row-sum pass (same result as
+    /// [`DecodeWorkspace::err1_fused`], bit for bit).
+    pub fn err1_materialized(&mut self, g: &CscMatrix, non_stragglers: &[usize], rho: f64) -> f64 {
+        g.select_columns_into(non_stragglers, &mut self.a);
+        self.a.row_sums_into(&mut self.row_acc);
+        self.row_acc.iter().map(|&v| (rho * v - 1.0).powi(2)).sum()
+    }
+
+    /// Optimal decoding error err(A) for an explicit non-straggler set,
+    /// via workspace-owned LSQR. `warm = Some(rho)` warm-starts at the
+    /// one-step weights ρ·1_r (deterministic per figure point, so trial
+    /// results stay independent of thread scheduling); `None` is
+    /// bit-identical to `OptimalDecoder::err` on the materialized A.
+    pub fn optimal_err(
+        &mut self,
+        g: &CscMatrix,
+        non_stragglers: &[usize],
+        opts: &LsqrOptions,
+        warm: Option<f64>,
+    ) -> f64 {
+        g.select_columns_into(non_stragglers, &mut self.a);
+        optimal_err_on_selected(&self.a, &mut self.ones, &mut self.x0, &mut self.lsqr, opts, warm)
+    }
+
+    /// One full Monte-Carlo trial of the one-step decoder: sample r
+    /// uniform non-stragglers from G's columns, then compute err_1
+    /// through the fused no-materialize path. Allocation-free at steady
+    /// state. RNG consumption matches the historical
+    /// `sample_indices` + `select_columns` + `err1` sequence, so seeded
+    /// results are unchanged.
+    pub fn onestep_trial(&mut self, g: &CscMatrix, r: usize, rho: f64, rng: &mut Rng) -> f64 {
+        rng.sample_indices_into(g.cols, r, &mut self.pool, &mut self.idx);
+        err1_from_supports(g, &self.idx, rho, &mut self.row_acc)
+    }
+
+    /// One full Monte-Carlo trial of the optimal decoder: sample r
+    /// uniform non-stragglers, materialize A into the reused buffer,
+    /// solve with workspace LSQR. See [`DecodeWorkspace::optimal_err`]
+    /// for the `warm` semantics.
+    pub fn optimal_trial(
+        &mut self,
+        g: &CscMatrix,
+        r: usize,
+        opts: &LsqrOptions,
+        warm: Option<f64>,
+        rng: &mut Rng,
+    ) -> f64 {
+        rng.sample_indices_into(g.cols, r, &mut self.pool, &mut self.idx);
+        g.select_columns_into(&self.idx, &mut self.a);
+        optimal_err_on_selected(&self.a, &mut self.ones, &mut self.x0, &mut self.lsqr, opts, warm)
+    }
+}
+
+/// Shared tail of the optimal-decode paths: the empty-A convention,
+/// the 1_k rhs, the optional ρ·1_r warm start, and the LSQR solve —
+/// on already-selected A, with every buffer caller-owned. Free-standing
+/// (not a method) so `optimal_trial` can call it while `self.idx` is
+/// borrowed.
+fn optimal_err_on_selected(
+    a: &CscMatrix,
+    ones: &mut Vec<f64>,
+    x0_buf: &mut Vec<f64>,
+    lsqr_ws: &mut LsqrWorkspace,
+    opts: &LsqrOptions,
+    warm: Option<f64>,
+) -> f64 {
+    if a.cols == 0 || a.nnz() == 0 {
+        return a.rows as f64;
+    }
+    ones.clear();
+    ones.resize(a.rows, 1.0);
+    let x0: Option<&[f64]> = match warm {
+        Some(rho) => {
+            x0_buf.clear();
+            x0_buf.resize(a.cols, rho);
+            Some(x0_buf)
+        }
+        None => None,
+    };
+    let summary = lsqr_with(a, ones, opts, x0, lsqr_ws);
+    summary.residual_norm * summary.residual_norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{GradientCode, Scheme};
+    use crate::decode::{OneStepDecoder, OptimalDecoder};
+
+    fn draw_g(scheme: Scheme, k: usize, s: usize, seed: u64) -> CscMatrix {
+        scheme.build(k, k, s).assignment(&mut Rng::new(seed))
+    }
+
+    #[test]
+    fn fused_matches_materialized_bit_for_bit() {
+        let g = draw_g(Scheme::Bgc, 40, 5, 1);
+        let mut ws = DecodeWorkspace::new();
+        let mut rng = Rng::new(2);
+        for _ in 0..25 {
+            let idx = rng.sample_indices(40, 30);
+            let fused = ws.err1_fused(&g, &idx, 0.25);
+            let mat = ws.err1_materialized(&g, &idx, 0.25);
+            assert_eq!(fused.to_bits(), mat.to_bits(), "{fused} vs {mat}");
+        }
+    }
+
+    #[test]
+    fn fused_matches_decoder_on_selected_submatrix() {
+        let g = draw_g(Scheme::Frc, 20, 5, 3);
+        let mut ws = DecodeWorkspace::new();
+        let idx = vec![0, 3, 7, 7, 19]; // repeats allowed, like FRC dups
+        let rho = 0.4;
+        let via_decoder = OneStepDecoder::new(rho).err1(&g.select_columns(&idx));
+        let fused = ws.err1_fused(&g, &idx, rho);
+        assert_eq!(fused.to_bits(), via_decoder.to_bits());
+    }
+
+    #[test]
+    fn optimal_err_matches_allocating_decoder() {
+        let g = draw_g(Scheme::Bgc, 30, 4, 4);
+        let mut ws = DecodeWorkspace::new();
+        let mut rng = Rng::new(5);
+        let opts = LsqrOptions::default();
+        for _ in 0..10 {
+            let idx = rng.sample_indices(30, 22);
+            let reference = OptimalDecoder::new().err(&g.select_columns(&idx));
+            let cold = ws.optimal_err(&g, &idx, &opts, None);
+            assert_eq!(cold.to_bits(), reference.to_bits(), "{cold} vs {reference}");
+        }
+    }
+
+    #[test]
+    fn warm_start_agrees_with_cold_within_tolerance() {
+        let g = draw_g(Scheme::Bgc, 30, 4, 6);
+        let mut ws = DecodeWorkspace::new();
+        let mut rng = Rng::new(7);
+        let opts = LsqrOptions::default();
+        let rho = 30.0 / (22.0 * 4.0);
+        for _ in 0..10 {
+            let idx = rng.sample_indices(30, 22);
+            let cold = ws.optimal_err(&g, &idx, &opts, None);
+            let warm = ws.optimal_err(&g, &idx, &opts, Some(rho));
+            assert!(
+                (warm - cold).abs() < 1e-6 * (1.0 + cold),
+                "warm {warm} vs cold {cold}"
+            );
+        }
+    }
+
+    #[test]
+    fn trial_methods_consume_rng_like_legacy_path() {
+        // Same seed -> the trial methods and the historical allocating
+        // sequence draw identical straggler sets and identical errors.
+        let g = draw_g(Scheme::RegularGraph, 24, 4, 8);
+        let (r, rho) = (18usize, 24.0 / (18.0 * 4.0));
+
+        let mut legacy_rng = Rng::new(9);
+        let idx = legacy_rng.sample_indices(24, r);
+        let legacy = OneStepDecoder::new(rho).err1(&g.select_columns(&idx));
+
+        let mut ws = DecodeWorkspace::new();
+        let mut rng = Rng::new(9);
+        let fused = ws.onestep_trial(&g, r, rho, &mut rng);
+        assert_eq!(fused.to_bits(), legacy.to_bits());
+        assert_eq!(ws.last_non_stragglers(), &idx[..]);
+    }
+
+    #[test]
+    fn empty_selection_gives_err_k() {
+        let g = draw_g(Scheme::Frc, 12, 3, 10);
+        let mut ws = DecodeWorkspace::new();
+        assert_eq!(ws.err1_fused(&g, &[], 1.0), 12.0);
+        assert_eq!(ws.optimal_err(&g, &[], &LsqrOptions::default(), None), 12.0);
+    }
+}

@@ -5,6 +5,15 @@
 //! This matters for the paper's Algorithm 2: A is k x r, sparse (s
 //! entries per column) and often rank-deficient (FRC has duplicate
 //! columns); LSQR converges to the minimum-norm least-squares solution.
+//!
+//! Two entry points:
+//! * [`lsqr`] — the allocating reference path (fresh vectors per solve).
+//! * [`lsqr_with`] — the hot-path variant: every per-solve vector lives
+//!   in a caller-owned [`LsqrWorkspace`] reused across trials, and an
+//!   optional warm-start iterate `x0` turns the solve into a correction
+//!   solve `min_dx ||A dx - (b - A x0)||`. With `x0 = None` the
+//!   arithmetic is operation-for-operation identical to [`lsqr`], so
+//!   the two paths produce bit-identical results (pinned by tests).
 
 use super::sparse::CscMatrix;
 
@@ -147,6 +156,199 @@ pub fn lsqr(a: &CscMatrix, b: &[f64], opts: &LsqrOptions) -> LsqrResult {
     LsqrResult { x, residual_norm: norm(&r), iterations, converged }
 }
 
+/// Reusable scratch for [`lsqr_with`]: the Golub-Kahan vectors (u, v,
+/// w), the solution x, and the two matvec buffers. `clear + resize`
+/// keeps capacity, so a workspace reused across same-shaped solves does
+/// zero heap allocation after the first solve.
+#[derive(Clone, Debug, Default)]
+pub struct LsqrWorkspace {
+    u: Vec<f64>,
+    v: Vec<f64>,
+    w: Vec<f64>,
+    x: Vec<f64>,
+    av: Vec<f64>,
+    atu: Vec<f64>,
+}
+
+impl LsqrWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The solution vector of the most recent [`lsqr_with`] call.
+    pub fn x(&self) -> &[f64] {
+        &self.x
+    }
+}
+
+/// Convergence report for [`lsqr_with`] — like [`LsqrResult`] but the
+/// solution stays in the workspace ([`LsqrWorkspace::x`]), so the hot
+/// path returns without allocating.
+#[derive(Clone, Copy, Debug)]
+pub struct LsqrSummary {
+    /// ||A x - b||_2 at the returned iterate.
+    pub residual_norm: f64,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// min_x ||A x - b|| with workspace-owned vectors and optional warm
+/// start. `x0 = Some(v)` solves for the correction `dx` against the
+/// deflated rhs `b - A x0` and returns `x = x0 + dx` in `ws.x` — at the
+/// paper's figure points the one-step weights ρ·1_r are a natural x0,
+/// shared by every trial at the point. `x0 = None` reproduces [`lsqr`]
+/// bit-for-bit.
+pub fn lsqr_with(
+    a: &CscMatrix,
+    b: &[f64],
+    opts: &LsqrOptions,
+    x0: Option<&[f64]>,
+    ws: &mut LsqrWorkspace,
+) -> LsqrSummary {
+    let (m, n) = (a.rows, a.cols);
+    assert_eq!(b.len(), m);
+    let max_iter = if opts.max_iter == 0 { 4 * m.max(n) } else { opts.max_iter };
+
+    let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
+
+    ws.x.clear();
+    ws.x.resize(n, 0.0);
+    ws.v.clear();
+    ws.v.resize(n, 0.0);
+    ws.w.clear();
+    ws.w.resize(n, 0.0);
+    ws.av.clear();
+    ws.av.resize(m, 0.0);
+    ws.atu.clear();
+    ws.atu.resize(n, 0.0);
+
+    // u = b - A x0 (just b when cold: identical arithmetic to `lsqr`).
+    ws.u.clear();
+    ws.u.extend_from_slice(b);
+    if let Some(x0) = x0 {
+        assert_eq!(x0.len(), n, "warm-start length != cols");
+        a.matvec_into(x0, &mut ws.av);
+        for i in 0..m {
+            ws.u[i] -= ws.av[i];
+        }
+    }
+
+    let mut beta = norm(&ws.u);
+    if beta == 0.0 {
+        // b (or the deflated rhs) already reproduced exactly: x = x0.
+        if let Some(x0) = x0 {
+            ws.x.copy_from_slice(x0);
+        }
+        return LsqrSummary { residual_norm: 0.0, iterations: 0, converged: true };
+    }
+    for ui in ws.u.iter_mut() {
+        *ui /= beta;
+    }
+    a.t_matvec_into(&ws.u, &mut ws.v);
+    let mut alpha = norm(&ws.v);
+    if alpha == 0.0 {
+        // rhs orthogonal to range(A): dx = 0 is optimal.
+        if let Some(x0) = x0 {
+            ws.x.copy_from_slice(x0);
+        }
+        return LsqrSummary { residual_norm: beta, iterations: 0, converged: true };
+    }
+    for vi in ws.v.iter_mut() {
+        *vi /= alpha;
+    }
+
+    ws.w.copy_from_slice(&ws.v);
+    let mut phi_bar = beta;
+    let mut rho_bar = alpha;
+    let b_norm = beta;
+    let mut a_norm_sq = 0.0;
+
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for it in 1..=max_iter {
+        iterations = it;
+
+        // u = A v - alpha u; beta = ||u||
+        a.matvec_into(&ws.v, &mut ws.av);
+        for i in 0..m {
+            ws.u[i] = ws.av[i] - alpha * ws.u[i];
+        }
+        beta = norm(&ws.u);
+        if beta > 0.0 {
+            for ui in ws.u.iter_mut() {
+                *ui /= beta;
+            }
+        }
+
+        // v = A^T u - beta v; alpha = ||v||
+        a.t_matvec_into(&ws.u, &mut ws.atu);
+        for j in 0..n {
+            ws.v[j] = ws.atu[j] - beta * ws.v[j];
+        }
+        alpha = norm(&ws.v);
+        if alpha > 0.0 {
+            for vi in ws.v.iter_mut() {
+                *vi /= alpha;
+            }
+        }
+
+        a_norm_sq += alpha * alpha + beta * beta;
+
+        // Givens rotation to eliminate beta from the bidiagonal system.
+        let rho = (rho_bar * rho_bar + beta * beta).sqrt();
+        let c = rho_bar / rho;
+        let s = beta / rho;
+        let theta = s * alpha;
+        rho_bar = -c * alpha;
+        let phi = c * phi_bar;
+        phi_bar *= s;
+
+        // Update x and the search direction w.
+        let t1 = phi / rho;
+        let t2 = -theta / rho;
+        for j in 0..n {
+            ws.x[j] += t1 * ws.w[j];
+            ws.w[j] = ws.v[j] + t2 * ws.w[j];
+        }
+
+        // Stopping rules (Paige-Saunders criteria 1 & 2).
+        let res = phi_bar;
+        let a_norm = a_norm_sq.sqrt();
+        let atr = phi_bar * alpha * c.abs();
+        if res <= opts.btol * b_norm + opts.atol * a_norm * norm(&ws.x) {
+            converged = true;
+            break;
+        }
+        if a_norm > 0.0 && res > 0.0 && atr / (a_norm * res) <= opts.atol {
+            converged = true;
+            break;
+        }
+        if alpha == 0.0 {
+            converged = true;
+            break;
+        }
+    }
+
+    // Fold the warm start back in, then recompute the true residual
+    // (phi_bar is an estimate) without allocating.
+    if let Some(x0) = x0 {
+        for j in 0..n {
+            ws.x[j] += x0[j];
+        }
+    }
+    a.matvec_into(&ws.x, &mut ws.av);
+    let residual_sq: f64 = b
+        .iter()
+        .zip(ws.av.iter())
+        .map(|(bi, axi)| {
+            let d = bi - axi;
+            d * d
+        })
+        .sum();
+    LsqrSummary { residual_norm: residual_sq.sqrt(), iterations, converged }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +402,84 @@ mod tests {
         let r = lsqr(&a, &[0.0, 1.0], &LsqrOptions::default());
         assert!(norm2(&r.x) < 1e-12);
         assert!((r.residual_norm - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lsqr_with_cold_is_bit_identical_to_lsqr() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(11);
+        let mut ws = LsqrWorkspace::new();
+        for trial in 0..20 {
+            let (m, n) = (12 + trial % 5, 7);
+            let cols: Vec<Vec<(usize, f64)>> = (0..n)
+                .map(|_| (0..m).filter(|_| rng.f64() < 0.4).map(|i| (i, rng.normal())).collect())
+                .collect();
+            let a = csc(m, cols);
+            let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let reference = lsqr(&a, &b, &LsqrOptions::default());
+            let summary = lsqr_with(&a, &b, &LsqrOptions::default(), None, &mut ws);
+            assert_eq!(
+                summary.residual_norm.to_bits(),
+                reference.residual_norm.to_bits(),
+                "trial {trial}: {} vs {}",
+                summary.residual_norm,
+                reference.residual_norm
+            );
+            assert_eq!(summary.iterations, reference.iterations);
+            assert_eq!(summary.converged, reference.converged);
+            assert_eq!(ws.x(), &reference.x[..], "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn warm_start_reaches_same_residual() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(12);
+        let (m, n) = (25, 10);
+        let cols: Vec<Vec<(usize, f64)>> = (0..n)
+            .map(|_| (0..m).map(|i| (i, rng.normal())).collect())
+            .collect();
+        let a = csc(m, cols);
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let mut ws = LsqrWorkspace::new();
+        let cold = lsqr_with(&a, &b, &LsqrOptions::default(), None, &mut ws);
+        // Warm start from a perturbation of the cold solution.
+        let x0: Vec<f64> = ws.x().iter().map(|&v| v + 0.01).collect();
+        let warm = lsqr_with(&a, &b, &LsqrOptions::default(), Some(&x0), &mut ws);
+        assert!(
+            (warm.residual_norm - cold.residual_norm).abs() < 1e-8 * (1.0 + cold.residual_norm),
+            "warm {} vs cold {}",
+            warm.residual_norm,
+            cold.residual_norm
+        );
+    }
+
+    #[test]
+    fn warm_start_at_exact_solution_converges_immediately() {
+        // A x = b solvable: warm-starting at the solution gives a zero
+        // deflated rhs and an instant exit.
+        let a = csc(2, vec![vec![(0, 2.0), (1, 1.0)], vec![(0, 1.0), (1, 3.0)]]);
+        let mut ws = LsqrWorkspace::new();
+        let s = lsqr_with(&a, &[5.0, 10.0], &LsqrOptions::default(), Some(&[1.0, 3.0]), &mut ws);
+        assert_eq!(s.iterations, 0);
+        assert!(s.residual_norm < 1e-12);
+        assert!((ws.x()[0] - 1.0).abs() < 1e-12 && (ws.x()[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn workspace_reuse_across_shapes() {
+        // Shrinking and growing dims must not leak state between solves.
+        let mut ws = LsqrWorkspace::new();
+        let a1 = csc(3, vec![vec![(0, 1.0), (1, 1.0), (2, 1.0)]]);
+        let s1 = lsqr_with(&a1, &[1.0, 2.0, 3.0], &LsqrOptions::default(), None, &mut ws);
+        assert!((ws.x()[0] - 2.0).abs() < 1e-10);
+        assert!((s1.residual_norm - 2.0_f64.sqrt()).abs() < 1e-10);
+
+        let a2 = csc(2, vec![vec![(0, 2.0), (1, 1.0)], vec![(0, 1.0), (1, 3.0)]]);
+        let s2 = lsqr_with(&a2, &[5.0, 10.0], &LsqrOptions::default(), None, &mut ws);
+        assert!(s2.residual_norm < 1e-9);
+        assert_eq!(ws.x().len(), 2);
+        assert!((ws.x()[0] - 1.0).abs() < 1e-8 && (ws.x()[1] - 3.0).abs() < 1e-8);
     }
 
     #[test]

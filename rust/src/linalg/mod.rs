@@ -10,6 +10,6 @@ pub mod power_iter;
 pub mod sparse;
 
 pub use dense::{axpy, dot, norm2, norm2_sq, scale, DenseMatrix};
-pub use lsqr::{lsqr, LsqrOptions, LsqrResult};
+pub use lsqr::{lsqr, lsqr_with, LsqrOptions, LsqrResult, LsqrSummary, LsqrWorkspace};
 pub use power_iter::{regular_graph_lambda, spectral_norm};
 pub use sparse::CscMatrix;

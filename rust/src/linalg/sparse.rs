@@ -65,8 +65,18 @@ impl CscMatrix {
         self.col_ptr[j + 1] - self.col_ptr[j]
     }
 
+    /// An empty 0×0 matrix — the starting state for workspace buffers
+    /// that are filled via [`CscMatrix::select_columns_into`].
+    pub fn empty() -> CscMatrix {
+        CscMatrix { rows: 0, cols: 0, col_ptr: vec![0], row_idx: Vec::new(), vals: Vec::new() }
+    }
+
     /// The column-submatrix with the given column indices (the paper's A
     /// from G given the non-straggler set). Indices may repeat.
+    ///
+    /// Allocating reference path; the Monte-Carlo hot loop uses
+    /// [`CscMatrix::select_columns_into`] to reuse one buffer across
+    /// trials (parity between the two is pinned by tests).
     pub fn select_columns(&self, idx: &[usize]) -> CscMatrix {
         let mut col_ptr = Vec::with_capacity(idx.len() + 1);
         let nnz_est: usize = idx.iter().map(|&j| self.col_nnz(j)).sum();
@@ -81,6 +91,26 @@ impl CscMatrix {
             col_ptr.push(row_idx.len());
         }
         CscMatrix { rows: self.rows, cols: idx.len(), col_ptr, row_idx, vals }
+    }
+
+    /// [`CscMatrix::select_columns`] into a caller-owned matrix, reusing
+    /// its buffers: zero heap traffic once `out`'s capacity has grown to
+    /// the largest submatrix seen (the steady state of the trial loop).
+    /// The layout and value order are identical to the allocating path.
+    pub fn select_columns_into(&self, idx: &[usize], out: &mut CscMatrix) {
+        out.rows = self.rows;
+        out.cols = idx.len();
+        out.col_ptr.clear();
+        out.row_idx.clear();
+        out.vals.clear();
+        out.col_ptr.push(0);
+        for &j in idx {
+            assert!(j < self.cols, "column {j} out of bounds ({})", self.cols);
+            let range = self.col_ptr[j]..self.col_ptr[j + 1];
+            out.row_idx.extend_from_slice(&self.row_idx[range.clone()]);
+            out.vals.extend_from_slice(&self.vals[range]);
+            out.col_ptr.push(out.row_idx.len());
+        }
     }
 
     /// y = A x (x over columns). O(nnz).
@@ -137,6 +167,16 @@ impl CscMatrix {
         y
     }
 
+    /// [`CscMatrix::row_sums`] into a reused buffer (resized to `rows`,
+    /// keeping capacity). Same accumulation order as the allocating path.
+    pub fn row_sums_into(&self, y: &mut Vec<f64>) {
+        y.clear();
+        y.resize(self.rows, 0.0);
+        for k in 0..self.nnz() {
+            y[self.row_idx[k]] += self.vals[k];
+        }
+    }
+
     /// Per-row nonzero counts (left-vertex degrees of the bipartite view).
     pub fn row_degrees(&self) -> Vec<usize> {
         let mut d = vec![0usize; self.rows];
@@ -162,8 +202,38 @@ impl CscMatrix {
         &self.row_idx[self.col_ptr[j]..self.col_ptr[j + 1]]
     }
 
-    /// Remove entries of column j, keeping only rows in `keep` (used by
-    /// rBGC regularization).
+    /// Remove entries of column j, keeping only rows for which `keep`
+    /// is true (the rBGC-style per-column thinning primitive). Later
+    /// columns' storage shifts left; O(nnz) worst case, O(col_nnz(j) +
+    /// tail) moved.
+    pub fn retain_rows_in_col(&mut self, j: usize, keep: &[bool]) {
+        assert!(j < self.cols, "column {j} out of bounds ({})", self.cols);
+        assert_eq!(keep.len(), self.rows, "keep mask length != rows");
+        let start = self.col_ptr[j];
+        let end = self.col_ptr[j + 1];
+        let mut write = start;
+        for read in start..end {
+            if keep[self.row_idx[read]] {
+                self.row_idx[write] = self.row_idx[read];
+                self.vals[write] = self.vals[read];
+                write += 1;
+            }
+        }
+        let removed = end - write;
+        if removed > 0 {
+            self.row_idx.copy_within(end.., write);
+            self.vals.copy_within(end.., write);
+            let new_len = self.row_idx.len() - removed;
+            self.row_idx.truncate(new_len);
+            self.vals.truncate(new_len);
+            for p in self.col_ptr[j + 1..].iter_mut() {
+                *p -= removed;
+            }
+        }
+    }
+
+    /// True when every stored value is 1 (a boolean assignment matrix,
+    /// the form all of the paper's code constructions produce).
     pub fn is_boolean(&self) -> bool {
         self.vals.iter().all(|&v| v == 1.0)
     }
@@ -245,5 +315,92 @@ mod tests {
     #[should_panic]
     fn out_of_bounds_row_panics() {
         let _ = CscMatrix::from_supports(2, vec![vec![5]]);
+    }
+
+    /// The `_into` variant must match the allocating path exactly — for
+    /// repeated columns (FRC duplicate workers), the empty index set,
+    /// and the full-range identity selection — while reusing buffers.
+    #[test]
+    fn select_columns_into_matches_allocating_variant() {
+        let a = example();
+        let mut out = CscMatrix::empty();
+        let cases: Vec<Vec<usize>> = vec![
+            vec![1, 1],          // repeated column indices
+            vec![],              // empty index set
+            vec![0, 1, 2],       // full-range identity
+            vec![2, 0],          // reorder
+            vec![2, 2, 2, 2],    // many repeats, forcing buffer growth
+            vec![1],             // shrink back down (buffers must reset)
+        ];
+        for idx in &cases {
+            let reference = a.select_columns(idx);
+            a.select_columns_into(idx, &mut out);
+            assert_eq!(out, reference, "idx = {idx:?}");
+        }
+    }
+
+    #[test]
+    fn select_columns_into_empty_set_is_kx0() {
+        let a = example();
+        let mut out = CscMatrix::empty();
+        a.select_columns_into(&[], &mut out);
+        assert_eq!(out.rows, 3);
+        assert_eq!(out.cols, 0);
+        assert_eq!(out.nnz(), 0);
+        assert_eq!(out.col_ptr, vec![0]);
+    }
+
+    #[test]
+    fn select_columns_into_full_identity_roundtrips() {
+        let a = example();
+        let mut out = CscMatrix::empty();
+        a.select_columns_into(&[0, 1, 2], &mut out);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn select_columns_into_oob_panics() {
+        let a = example();
+        let mut out = CscMatrix::empty();
+        a.select_columns_into(&[3], &mut out);
+    }
+
+    #[test]
+    fn row_sums_into_matches_row_sums() {
+        let a = example();
+        let mut buf = vec![99.0; 1]; // wrong size on purpose: must resize
+        a.row_sums_into(&mut buf);
+        assert_eq!(buf, a.row_sums());
+    }
+
+    #[test]
+    fn retain_rows_in_col_filters_and_shifts() {
+        let mut a = example();
+        // Drop row 2 from column 0: [[1,0,2],[0,3,0],[0,0,5]].
+        a.retain_rows_in_col(0, &[true, true, false]);
+        assert_eq!(a.col_support(0), &[0]);
+        assert_eq!(a.col_support(1), &[1]);
+        assert_eq!(a.col_support(2), &[0, 2]); // later columns intact
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.to_dense().col(2), vec![2.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn retain_rows_in_col_keep_all_is_noop() {
+        let mut a = example();
+        let before = a.clone();
+        a.retain_rows_in_col(1, &[true, true, true]);
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn retain_rows_in_col_drop_all_empties_column() {
+        let mut a = example();
+        a.retain_rows_in_col(2, &[false, false, false]);
+        assert_eq!(a.col_nnz(2), 0);
+        assert_eq!(a.nnz(), 3);
+        // Structure still valid: col_ptr monotone, ends at nnz.
+        assert_eq!(*a.col_ptr.last().unwrap(), a.nnz());
     }
 }

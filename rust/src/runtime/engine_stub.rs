@@ -1,0 +1,82 @@
+//! API-compatible stand-in for the PJRT engine pool, compiled when the
+//! `pjrt` cargo feature is off (the `xla` bindings are not in the
+//! offline vendor set).
+//!
+//! Every type and method signature matches `engine.rs`, so callers —
+//! the CLI, the coordinator, tests, benches — compile unchanged and get
+//! a clear runtime error directing them to the native backend (or to a
+//! build with `--features pjrt`). The pjrt integration tests skip
+//! before ever constructing a pool (they bail when artifacts are
+//! missing), so the default test suite never hits these errors.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::artifact::Manifest;
+
+/// Clonable submission handle (stub: carries only the manifest).
+#[derive(Clone)]
+pub struct EngineHandle {
+    manifest: Arc<Manifest>,
+}
+
+/// Stub pool: construction always fails with a build-configuration hint.
+pub struct EnginePool {
+    handle: EngineHandle,
+    workers: usize,
+}
+
+impl EnginePool {
+    /// Always fails: the real engine needs the `pjrt` feature.
+    pub fn start(manifest: Manifest, workers: usize) -> Result<EnginePool> {
+        let _ = (manifest, workers);
+        bail!(
+            "gradcode was built without the `pjrt` feature (the xla \
+             bindings are not in the offline vendor set); rebuild with \
+             `--features pjrt` or use the native backend"
+        )
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+impl EngineHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Always fails (see [`EnginePool::start`]).
+    pub fn run(&self, artifact: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let _ = (artifact, inputs);
+        bail!("PJRT engine unavailable: gradcode was built without the `pjrt` feature")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_reports_missing_feature() {
+        use super::super::artifact::{LinearDims, MlpDims};
+        let manifest = Manifest {
+            dir: std::path::PathBuf::from("artifacts"),
+            s_max: 1,
+            linear: LinearDims { m: 1, d: 1 },
+            mlp: MlpDims { m: 1, d_in: 1, d_hidden: 1, d_out: 1, flat_dim: 5 },
+            artifacts: Vec::new(),
+        };
+        let err = match EnginePool::start(manifest, 2) {
+            Err(e) => format!("{e}"),
+            Ok(_) => panic!("stub pool must not start"),
+        };
+        assert!(err.contains("pjrt"), "{err}");
+    }
+}

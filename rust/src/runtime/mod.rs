@@ -8,6 +8,22 @@
 //! [`Backend`] abstracts the two so the coordinator is agnostic.
 
 pub mod artifact;
+
+// The real PJRT engine needs the external `xla` bindings, which the
+// offline vendor set does not ship. Enabling `pjrt` without them would
+// die mid-compile on unresolved `xla::` paths, so fail fast with an
+// actionable message instead; builds that have added the dependency
+// opt in with `RUSTFLAGS="--cfg gradcode_has_xla"`.
+#[cfg(all(feature = "pjrt", not(gradcode_has_xla)))]
+compile_error!(
+    "the `pjrt` feature requires the external `xla` bindings: add `xla` \
+     to [dependencies] in rust/Cargo.toml and build with \
+     RUSTFLAGS=\"--cfg gradcode_has_xla\" (see the Cargo.toml header)"
+);
+#[cfg(all(feature = "pjrt", gradcode_has_xla))]
+pub mod engine;
+#[cfg(not(all(feature = "pjrt", gradcode_has_xla)))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 pub mod hlo_inspect;
 pub mod native;

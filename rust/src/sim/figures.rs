@@ -7,8 +7,8 @@
 
 use super::montecarlo::MonteCarlo;
 use crate::codes::Scheme;
-use crate::decode::{algorithmic_error_curve, OneStepDecoder, OptimalDecoder, StepSize};
-use crate::linalg::CscMatrix;
+use crate::decode::{algorithmic_error_curve, DecodeWorkspace, StepSize};
+use crate::linalg::{CscMatrix, LsqrOptions};
 use crate::util::Rng;
 
 /// One plotted point: figure id, series labels, x, y.
@@ -147,23 +147,31 @@ impl ErrorKind {
     }
 }
 
+/// The shared sweep engine behind Figures 2-4, running on the fused
+/// straggler→decode pipeline: each worker thread owns one
+/// [`DecodeWorkspace`], every trial samples stragglers and decodes
+/// without materializing A (one-step) or allocating solver state
+/// (optimal). Per-trial RNG consumption matches the historical
+/// allocating path, so seeded figure values are unchanged.
 fn error_sweep(
     cfg: &FigureConfig,
     figure: &'static str,
     schemes: &[Scheme],
     kind: ErrorKind,
 ) -> Vec<FigPoint> {
+    let opts = LsqrOptions::default();
     let mut out = Vec::new();
     for &scheme in schemes {
         for &s in &cfg.s_values {
             for &delta in &cfg.deltas {
                 let r = cfg.r(delta);
                 let k = cfg.k;
-                let mean = cfg.mc.mean(|rng| {
-                    let a = draw_non_straggler_matrix(scheme, k, s, r, rng);
+                let rho = k as f64 / (r as f64 * s as f64);
+                let mean = cfg.mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
+                    let g = scheme.build(k, k, s).assignment(rng);
                     match kind {
-                        ErrorKind::OneStep => OneStepDecoder::canonical(k, r, s).err1(&a),
-                        ErrorKind::Optimal => OptimalDecoder::new().err(&a),
+                        ErrorKind::OneStep => ws.onestep_trial(&g, r, rho, rng),
+                        ErrorKind::Optimal => ws.optimal_trial(&g, r, &opts, None, rng),
                     }
                 });
                 out.push(FigPoint {

@@ -3,8 +3,17 @@
 //! Every figure point in the paper is "average X over 5000 trials"; this
 //! module runs those trials across threads with per-trial forked RNG
 //! streams, so results are bit-identical regardless of thread count.
+//!
+//! The `*_ws` variants thread a per-worker workspace (typically a
+//! `decode::DecodeWorkspace`) through the trial closure, which is what
+//! makes the steady-state trial loop allocation-free: scratch buffers
+//! are built once per thread and reused across every trial it runs.
+//! Workspaces are scratch only — trial results must not depend on the
+//! workspace's prior contents, so means stay independent of thread
+//! count and scheduling.
 
-use crate::util::{parallel::parallel_map, Rng};
+use crate::util::parallel::{parallel_map, parallel_map_with};
+use crate::util::Rng;
 
 /// Configuration shared by all simulation entry points.
 #[derive(Clone, Copy, Debug)]
@@ -77,6 +86,30 @@ impl MonteCarlo {
     pub fn probability(&self, f: impl Fn(&mut Rng) -> bool + Sync) -> f64 {
         self.mean(|rng| if f(rng) { 1.0 } else { 0.0 })
     }
+
+    /// [`MonteCarlo::mean`] with a per-thread workspace built by `init`
+    /// and handed to every trial — the zero-allocation hot path.
+    pub fn mean_ws<W>(
+        &self,
+        init: impl Fn() -> W + Sync,
+        f: impl Fn(&mut W, &mut Rng) -> f64 + Sync,
+    ) -> f64 {
+        let root = Rng::new(self.seed);
+        let vals = parallel_map_with(self.trials, self.threads, init, |ws, i| {
+            let mut rng = root.fork(i as u64);
+            f(ws, &mut rng)
+        });
+        vals.iter().sum::<f64>() / self.trials.max(1) as f64
+    }
+
+    /// [`MonteCarlo::probability`] with a per-thread workspace.
+    pub fn probability_ws<W>(
+        &self,
+        init: impl Fn() -> W + Sync,
+        f: impl Fn(&mut W, &mut Rng) -> bool + Sync,
+    ) -> f64 {
+        self.mean_ws(init, |ws, rng| if f(ws, rng) { 1.0 } else { 0.0 })
+    }
 }
 
 #[cfg(test)]
@@ -89,6 +122,30 @@ mod tests {
         let a = MonteCarlo { trials: 500, seed: 1, threads: 1 }.mean(f);
         let b = MonteCarlo { trials: 500, seed: 1, threads: 8 }.mean(f);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mean_ws_matches_mean_and_thread_invariance() {
+        // A workspace-using trial whose result ignores workspace history
+        // must agree with the plain path at every thread count.
+        let plain = MonteCarlo { trials: 400, seed: 3, threads: 4 }.mean(|rng| rng.f64());
+        for threads in [1, 2, 8] {
+            let ws_mean = MonteCarlo { trials: 400, seed: 3, threads }.mean_ws(
+                || vec![0.0f64; 4],
+                |ws, rng| {
+                    ws[0] = rng.f64(); // fully overwritten each trial
+                    ws[0]
+                },
+            );
+            assert_eq!(ws_mean, plain, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn probability_ws_estimates() {
+        let mc = MonteCarlo::new(20_000, 4);
+        let p = mc.probability_ws(|| (), |_, rng| rng.bernoulli(0.25));
+        assert!((p - 0.25).abs() < 0.02, "{p}");
     }
 
     #[test]

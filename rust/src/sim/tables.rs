@@ -8,15 +8,15 @@
 //! * thm11 — DkS reduction identity gap + heuristic-vs-exhaustive ratio.
 //! * thm21 — BGC / rBGC one-step error vs the C²k/((1-δ)s) envelope.
 
-use super::figures::draw_non_straggler_matrix;
 use super::montecarlo::MonteCarlo;
 use crate::adversary::{
     asp_objective, dks_to_asp, exhaustive_worst_case, frc_worst_stragglers, greedy_stragglers,
     local_search_stragglers, objective_identity_gap,
 };
 use crate::codes::{FractionalRepetitionCode, GradientCode, Scheme};
-use crate::decode::{OneStepDecoder, OptimalDecoder};
+use crate::decode::{DecodeWorkspace, OptimalDecoder};
 use crate::graph::random_regular_graph;
+use crate::linalg::LsqrOptions;
 use crate::util::Rng;
 
 /// One comparison row.
@@ -83,9 +83,10 @@ pub fn thm5_table(k: usize, s: usize, deltas: &[f64], mc: &MonteCarlo) -> Vec<Ta
     let mut rows = Vec::new();
     for &delta in deltas {
         let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
-        let measured = mc.mean(|rng| {
-            let a = draw_non_straggler_matrix(Scheme::Frc, k, s, r, rng);
-            OneStepDecoder::canonical(k, r, s).err1(&a)
+        let rho = k as f64 / (r as f64 * s as f64);
+        let measured = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
+            let g = Scheme::Frc.build(k, k, s).assignment(rng);
+            ws.onestep_trial(&g, r, rho, rng)
         });
         rows.push(TableRow {
             table: "thm5",
@@ -135,9 +136,15 @@ pub fn thm6_table(k: usize, s: usize, deltas: &[f64], mc: &MonteCarlo) -> Vec<Ta
         .map(|&delta| {
             let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
             let expected = thm6_expected(k, r, s);
-            let measured = mc.mean(|rng| {
-                let a = draw_non_straggler_matrix(Scheme::Frc, k, s, r, rng);
-                OptimalDecoder::new().err(&a)
+            let opts = LsqrOptions::default();
+            // Warm-start every trial at the one-step weights ρ·1_r —
+            // constant across trials at this (k, r, s) point. For FRC
+            // with no stragglers this is the exact solution, and with
+            // stragglers it deflates the covered blocks out of the rhs.
+            let rho = k as f64 / (r as f64 * s as f64);
+            let measured = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
+                let g = Scheme::Frc.build(k, k, s).assignment(rng);
+                ws.optimal_trial(&g, r, &opts, Some(rho), rng)
             });
             TableRow {
                 table: "thm6",
@@ -174,9 +181,10 @@ pub fn thm8_table(k: usize, alphas: &[usize], deltas: &[f64], mc: &MonteCarlo) -
                 .unwrap_or(k);
             let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
             let threshold = (alpha * s) as f64;
-            let measured = mc.probability(|rng| {
-                let a = draw_non_straggler_matrix(Scheme::Frc, k, s, r, rng);
-                OptimalDecoder::new().err(&a) > threshold + 1e-6
+            let opts = LsqrOptions::default();
+            let measured = mc.probability_ws(DecodeWorkspace::new, |ws, rng| {
+                let g = Scheme::Frc.build(k, k, s).assignment(rng);
+                ws.optimal_trial(&g, r, &opts, None, rng) > threshold + 1e-6
             });
             rows.push(TableRow {
                 table: "thm8",
@@ -208,9 +216,9 @@ pub fn thm10_table(k: usize, s: usize, rs: &[usize], mc: &MonteCarlo) -> Vec<Tab
             measured: adv,
             note: "err(A) under block attack".into(),
         });
-        let rand = mc.mean(|rng| {
-            let idx = rng.sample_indices(k, r);
-            OptimalDecoder::new().err(&g.select_columns(&idx))
+        let opts = LsqrOptions::default();
+        let rand = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
+            ws.optimal_trial(&g, r, &opts, None, rng)
         });
         rows.push(TableRow {
             table: "thm10",
@@ -327,9 +335,10 @@ pub fn thm21_table(
         .map(|&k| {
             let s = s_of_k(k);
             let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
-            let mean_err1 = mc.mean(|rng| {
-                let a = draw_non_straggler_matrix(scheme, k, s, r, rng);
-                OneStepDecoder::canonical(k, r, s).err1(&a)
+            let rho = k as f64 / (r as f64 * s as f64);
+            let mean_err1 = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
+                let g = scheme.build(k, k, s).assignment(rng);
+                ws.onestep_trial(&g, r, rho, rng)
             });
             let c = (mean_err1 * (1.0 - delta) * s as f64 / k as f64).sqrt();
             TableRow {

@@ -1,10 +1,17 @@
 //! Scoped-thread parallel map — the Monte-Carlo engine's backbone.
 //!
-//! Hand-rolled (no rayon in the offline vendor set): chunks the index
-//! space across `threads` OS threads via `std::thread::scope`, preserving
-//! output order. Each worker gets its own forked RNG stream upstream, so
-//! results are independent of the thread count.
+//! Hand-rolled (no rayon in the offline vendor set): workers claim
+//! contiguous index chunks off an atomic counter and write results
+//! straight into their output slots — no per-item locks, no `Default +
+//! Clone` bounds, no post-pass collection. Each worker can build a
+//! per-thread workspace via [`parallel_map_with`]'s init hook, which is
+//! how the simulation layer reuses decode scratch across trials.
+//!
+//! Results are position-addressed, so the output is order-preserving
+//! and — as long as `f(i)` is a pure function of `i` (each trial forks
+//! its own RNG stream upstream) — bit-identical for every thread count.
 
+use std::mem::{ManuallyDrop, MaybeUninit};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Number of worker threads to use by default (capped so the figure
@@ -15,36 +22,82 @@ pub fn default_threads() -> usize {
 
 /// Parallel `(0..n).map(f)` with order-preserving output.
 ///
-/// Work is distributed dynamically (atomic counter), so skewed per-item
-/// cost (e.g. LSQR on ill-conditioned draws) does not idle threads.
+/// Work is distributed dynamically in chunks (atomic counter), so
+/// skewed per-item cost (e.g. LSQR on ill-conditioned draws) does not
+/// idle threads, while cheap items don't thrash the counter.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send,
     F: Fn(usize) -> T + Sync,
+{
+    parallel_map_with(n, threads, || (), move |_ws, i| f(i))
+}
+
+/// [`parallel_map`] with a per-thread workspace: every worker thread
+/// calls `init()` once and hands the workspace to each `f(&mut ws, i)`
+/// it runs. The workspace is scratch only — `f` must fully overwrite
+/// whatever state it reads, so results stay independent of which thread
+/// (and in which order) ran each item.
+pub fn parallel_map_with<W, T, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> W + Sync,
+    F: Fn(&mut W, usize) -> T + Sync,
 {
     let threads = threads.max(1).min(n.max(1));
     if threads == 1 || n <= 1 {
-        return (0..n).map(f).collect();
+        let mut ws = init();
+        return (0..n).map(|i| f(&mut ws, i)).collect();
     }
-    let mut out = vec![T::default(); n];
+
+    // Chunk size: enough chunks per thread for load balancing (~8×),
+    // large enough that the atomic is off the hot path for cheap items.
+    let chunk = (n / (threads * 8)).max(1);
+
+    let mut out: Vec<MaybeUninit<T>> = Vec::with_capacity(n);
+    // SAFETY: MaybeUninit<T> requires no initialization.
+    unsafe { out.set_len(n) };
+
+    /// Shareable pointer to the output slots. Writes are raced-free
+    /// because the atomic counter hands every index to exactly one
+    /// worker, and the scope join synchronizes them with the reader.
+    struct OutPtr<T>(*mut MaybeUninit<T>);
+    unsafe impl<T: Send> Sync for OutPtr<T> {}
+
+    let out_ptr = OutPtr(out.as_mut_ptr());
     let next = AtomicUsize::new(0);
-    let slots: Vec<std::sync::Mutex<Option<T>>> = (0..n).map(|_| std::sync::Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            let out_ptr = &out_ptr;
+            let next = &next;
+            let init = &init;
+            let f = &f;
+            scope.spawn(move || {
+                let mut ws = init();
+                loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        let v = f(&mut ws, i);
+                        // SAFETY: index i was claimed by exactly this
+                        // worker; slots are disjoint.
+                        unsafe { (*out_ptr.0.add(i)).write(v) };
+                    }
                 }
-                let v = f(i);
-                *slots[i].lock().unwrap() = Some(v);
             });
         }
     });
-    for (i, slot) in slots.into_iter().enumerate() {
-        out[i] = slot.into_inner().unwrap().expect("worker missed slot");
+
+    // SAFETY: the scope joined every worker, and together they claimed
+    // and wrote each index in 0..n exactly once, so all n slots are
+    // initialized. Transmute Vec<MaybeUninit<T>> -> Vec<T> in place.
+    unsafe {
+        let mut out = ManuallyDrop::new(out);
+        Vec::from_raw_parts(out.as_mut_ptr() as *mut T, n, out.capacity())
     }
-    out
 }
 
 /// Parallel mean of `n` trial values (the Monte-Carlo primitive).
@@ -90,5 +143,62 @@ mod tests {
         let a = parallel_map(512, 2, f);
         let b = parallel_map(512, 7, f);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn no_default_or_clone_bound_required() {
+        // A type that is Send but neither Default nor Clone.
+        struct Opaque(#[allow(dead_code)] Box<u64>);
+        let v = parallel_map(64, 4, |i| Opaque(Box::new(i as u64)));
+        assert_eq!(v.len(), 64);
+        assert_eq!(*v[63].0, 63);
+    }
+
+    #[test]
+    fn workspace_hook_provides_per_thread_scratch() {
+        // The workspace is reused within a thread but never shared
+        // across threads; f fully overwrites it per item.
+        let out = parallel_map_with(
+            200,
+            4,
+            || Vec::<u64>::new(),
+            |ws, i| {
+                ws.clear();
+                ws.extend((0..(i % 7) as u64).map(|x| x + i as u64));
+                ws.iter().sum::<u64>()
+            },
+        );
+        let reference: Vec<u64> = (0..200)
+            .map(|i| (0..(i % 7) as u64).map(|x| x + i as u64).sum())
+            .collect();
+        assert_eq!(out, reference);
+    }
+
+    #[test]
+    fn workspace_results_identical_across_thread_counts() {
+        let run = |threads| {
+            parallel_map_with(333, threads, || [0f64; 8], |ws, i| {
+                for (j, slot) in ws.iter_mut().enumerate() {
+                    *slot = (i * j) as f64;
+                }
+                ws.iter().sum::<f64>()
+            })
+        };
+        let a = run(1);
+        let b = run(3);
+        let c = run(16);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn large_n_with_many_threads_covers_every_slot() {
+        // Regression guard for the chunked counter: no index skipped,
+        // none written twice (values are position-dependent).
+        let n = 10_007; // prime, to exercise ragged final chunks
+        let v = parallel_map(n, 13, |i| i);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(i, x);
+        }
     }
 }

@@ -110,6 +110,29 @@ impl Rng {
         pool
     }
 
+    /// [`Rng::sample_indices`] into caller-owned buffers: `pool` is the
+    /// Fisher-Yates scratch (resized to n, capacity kept) and `out`
+    /// receives the m sampled indices. Draws the identical RNG stream
+    /// as the allocating variant, so seeded simulations are unchanged;
+    /// zero heap allocation once both buffers have warmed up.
+    pub fn sample_indices_into(
+        &mut self,
+        n: usize,
+        m: usize,
+        pool: &mut Vec<usize>,
+        out: &mut Vec<usize>,
+    ) {
+        assert!(m <= n, "sample_indices_into: m={m} > n={n}");
+        pool.clear();
+        pool.extend(0..n);
+        for i in 0..m {
+            let j = i + self.usize(n - i);
+            pool.swap(i, j);
+        }
+        out.clear();
+        out.extend_from_slice(&pool[..m]);
+    }
+
     /// Standard normal via Box-Muller (cached pair).
     pub fn normal(&mut self) -> f64 {
         if let Some(z) = self.gauss_spare.take() {
@@ -200,6 +223,21 @@ mod tests {
         let hits = (0..100_000).filter(|_| r.bernoulli(0.3)).count();
         let mean = hits as f64 / 100_000.0;
         assert!((mean - 0.3).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn sample_indices_into_matches_allocating_variant() {
+        let mut a = Rng::new(6);
+        let mut b = Rng::new(6);
+        let (mut pool, mut out) = (Vec::new(), Vec::new());
+        for trial in 0..50 {
+            let m = trial % 21;
+            let reference = a.sample_indices(50, m);
+            b.sample_indices_into(50, m, &mut pool, &mut out);
+            assert_eq!(out, reference, "trial {trial}");
+        }
+        // Streams stayed in lockstep throughout.
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

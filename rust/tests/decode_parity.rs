@@ -1,0 +1,205 @@
+//! Parity pins for the zero-allocation decode pipeline: the fused and
+//! workspace-reused paths must reproduce the allocating reference paths
+//! exactly (one-step: bit-identical; ISSUE acceptance: ≤ 1e-12 across
+//! 100 seeded trials), and `parallel_map` results must not depend on
+//! thread count.
+
+use gradcode::codes::{GradientCode, Scheme};
+use gradcode::decode::{err1_from_supports, DecodeWorkspace, OneStepDecoder, OptimalDecoder};
+use gradcode::linalg::{lsqr, lsqr_with, LsqrOptions, LsqrWorkspace};
+use gradcode::sim::MonteCarlo;
+use gradcode::util::parallel::parallel_map_with;
+use gradcode::util::Rng;
+
+/// 100 seeded trials, three schemes: fused vs materialized one-step
+/// error. The paths share accumulation order, so the agreement is in
+/// fact bit-for-bit — far inside the 1e-12 acceptance band.
+#[test]
+fn fused_err1_matches_materialized_100_trials() {
+    let schemes = [Scheme::Frc, Scheme::Bgc, Scheme::RegularGraph];
+    let (k, s) = (300usize, 10usize);
+    let mut ws = DecodeWorkspace::new();
+    let mut trials = 0;
+    for (si, &scheme) in schemes.iter().enumerate() {
+        let mut rng = Rng::new(1000 + si as u64);
+        let g = scheme.build(k, k, s).assignment(&mut rng);
+        for _ in 0..34 {
+            let r = 1 + rng.usize(k);
+            let idx = rng.sample_indices(k, r);
+            let rho = k as f64 / (r as f64 * s as f64);
+
+            // Seed reference: materialize A, row-sum, square.
+            let a = g.select_columns(&idx);
+            let seed_path = OneStepDecoder::new(rho).err1(&a);
+
+            let fused = ws.err1_fused(&g, &idx, rho);
+            assert!(
+                (fused - seed_path).abs() <= 1e-12,
+                "{scheme:?} r={r}: fused {fused} vs seed {seed_path}"
+            );
+            assert_eq!(fused.to_bits(), seed_path.to_bits(), "{scheme:?} r={r}");
+
+            let materialized = ws.err1_materialized(&g, &idx, rho);
+            assert_eq!(fused.to_bits(), materialized.to_bits());
+            trials += 1;
+        }
+    }
+    assert!(trials >= 100, "only {trials} trials");
+}
+
+/// The free-function fused path with a bare buffer agrees with the
+/// workspace method (they are the same code; this pins the public API).
+#[test]
+fn free_function_matches_workspace_method() {
+    let g = Scheme::Bgc.build(60, 60, 6).assignment(&mut Rng::new(5));
+    let mut ws = DecodeWorkspace::new();
+    let mut buf = Vec::new();
+    let mut rng = Rng::new(6);
+    for _ in 0..20 {
+        let idx = rng.sample_indices(60, 45);
+        let a = err1_from_supports(&g, &idx, 0.2, &mut buf);
+        let b = ws.err1_fused(&g, &idx, 0.2);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// Workspace LSQR (cold) is bit-identical to the allocating decoder.
+#[test]
+fn workspace_optimal_matches_allocating_decoder() {
+    let (k, s) = (120usize, 6usize);
+    let mut ws = DecodeWorkspace::new();
+    let opts = LsqrOptions::default();
+    for (si, scheme) in [Scheme::Frc, Scheme::Bgc].into_iter().enumerate() {
+        let mut rng = Rng::new(2000 + si as u64);
+        let g = scheme.build(k, k, s).assignment(&mut rng);
+        for _ in 0..15 {
+            let r = 1 + rng.usize(k);
+            let idx = rng.sample_indices(k, r);
+            let reference = OptimalDecoder::new().err(&g.select_columns(&idx));
+            let cold = ws.optimal_err(&g, &idx, &opts, None);
+            assert_eq!(
+                cold.to_bits(),
+                reference.to_bits(),
+                "{scheme:?} r={r}: {cold} vs {reference}"
+            );
+        }
+    }
+}
+
+/// Warm-started optimal decode reaches the same minimum (the residual
+/// of a least-squares problem is unique even when x is not). Covers
+/// both BGC and the rank-deficient FRC regime — duplicate columns are
+/// the solver's hardest case and the one production warm-start call
+/// site (thm6_table) runs exclusively on FRC submatrices.
+#[test]
+fn warm_start_reaches_same_error() {
+    let k = 100usize;
+    let mut ws = DecodeWorkspace::new();
+    let opts = LsqrOptions::default();
+    // FRC needs s | k, hence s = 10 there.
+    for (seed, scheme, s) in [(77u64, Scheme::Bgc, 8usize), (78, Scheme::Frc, 10)] {
+        let mut rng = Rng::new(seed);
+        let g = scheme.build(k, k, s).assignment(&mut rng);
+        for _ in 0..20 {
+            let r = (k / 2) + rng.usize(k / 2);
+            let idx = rng.sample_indices(k, r);
+            let rho = k as f64 / (r as f64 * s as f64);
+            let cold = ws.optimal_err(&g, &idx, &opts, None);
+            let warm = ws.optimal_err(&g, &idx, &opts, Some(rho));
+            assert!(
+                (warm - cold).abs() <= 1e-7 * (1.0 + cold.abs()),
+                "{scheme:?} r={r}: warm {warm} vs cold {cold}"
+            );
+        }
+    }
+}
+
+/// thm6's exact production shape: FRC, warm start at ρ·1_r, compared
+/// against the allocating cold reference across the δ range the table
+/// sweeps — the published values must not drift.
+#[test]
+fn thm6_shape_warm_start_matches_cold_reference() {
+    let (k, s) = (20usize, 5usize);
+    let mut ws = DecodeWorkspace::new();
+    let opts = LsqrOptions::default();
+    let mut rng = Rng::new(79);
+    for &delta in &[0.0, 0.25, 0.5, 0.75] {
+        let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
+        let rho = k as f64 / (r as f64 * s as f64);
+        for _ in 0..10 {
+            let g = Scheme::Frc.build(k, k, s).assignment(&mut rng);
+            let idx = rng.sample_indices(k, r);
+            let reference = OptimalDecoder::new().err(&g.select_columns(&idx));
+            let warm = ws.optimal_err(&g, &idx, &opts, Some(rho));
+            assert!(
+                (warm - reference).abs() <= 1e-7 * (1.0 + reference.abs()),
+                "delta={delta} r={r}: warm {warm} vs reference {reference}"
+            );
+        }
+    }
+}
+
+/// lsqr_with(None) == lsqr, down to the bit, on rank-deficient FRC
+/// submatrices (duplicate columns) — the solver's hardest regime.
+#[test]
+fn lsqr_with_parity_on_rank_deficient_instances() {
+    let g = Scheme::Frc.build(40, 40, 5).assignment(&mut Rng::new(3));
+    let mut rng = Rng::new(4);
+    let mut ws = LsqrWorkspace::new();
+    let opts = LsqrOptions::default();
+    for _ in 0..25 {
+        let idx = rng.sample_indices(40, 25);
+        let a = g.select_columns(&idx);
+        let b = vec![1.0; a.rows];
+        let reference = lsqr(&a, &b, &opts);
+        let summary = lsqr_with(&a, &b, &opts, None, &mut ws);
+        assert_eq!(summary.residual_norm.to_bits(), reference.residual_norm.to_bits());
+        assert_eq!(summary.iterations, reference.iterations);
+        assert_eq!(ws.x(), &reference.x[..]);
+    }
+}
+
+/// Monte-Carlo means through the workspace pipeline are identical for
+/// every thread count (the per-trial RNG fork plus position-addressed
+/// output writes make scheduling invisible).
+#[test]
+fn workspace_monte_carlo_thread_invariance() {
+    let (k, s, r) = (40usize, 5usize, 30usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let run = |threads: usize| {
+        MonteCarlo { trials: 200, seed: 9, threads }.mean_ws(DecodeWorkspace::new, |ws, rng| {
+            let g = Scheme::Bgc.build(k, k, s).assignment(rng);
+            ws.onestep_trial(&g, r, rho, rng)
+        })
+    };
+    let a = run(1);
+    let b = run(4);
+    let c = run(11);
+    assert_eq!(a.to_bits(), b.to_bits());
+    assert_eq!(b.to_bits(), c.to_bits());
+}
+
+/// parallel_map_with output is bit-identical across thread counts even
+/// for heavier per-item work (LSQR solves of varying difficulty).
+#[test]
+fn parallel_map_with_bit_identical_across_threads() {
+    let g = Scheme::Bgc.build(30, 30, 4).assignment(&mut Rng::new(8));
+    let opts = LsqrOptions::default();
+    let run = |threads: usize| {
+        parallel_map_with(
+            64,
+            threads,
+            DecodeWorkspace::new,
+            |ws, i| {
+                let mut rng = Rng::new(500 + i as u64);
+                let r = 5 + (i % 20);
+                ws.optimal_trial(&g, r, &opts, None, &mut rng)
+            },
+        )
+    };
+    let a = run(2);
+    let b = run(7);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}

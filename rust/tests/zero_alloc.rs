@@ -1,0 +1,119 @@
+//! Proof that the steady-state trial loop is allocation-free: a
+//! counting global allocator (test binary only) wraps the system
+//! allocator with per-thread counters, the straggler→decode pipeline
+//! runs a warmup to grow every workspace buffer, and the measured loop
+//! must then perform exactly zero heap allocations.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use gradcode::codes::{GradientCode, Scheme};
+use gradcode::decode::DecodeWorkspace;
+use gradcode::linalg::LsqrOptions;
+use gradcode::util::Rng;
+
+struct CountingAllocator;
+
+thread_local! {
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+fn allocations_on_this_thread() -> u64 {
+    ALLOC_COUNT.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAllocator = CountingAllocator;
+
+/// The fused one-step trial loop: sample stragglers, accumulate
+/// coverage from G, square — zero allocations at steady state.
+#[test]
+fn onestep_trial_loop_is_allocation_free_after_warmup() {
+    let (k, s, r) = (200usize, 10usize, 150usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    // FRC: fixed per-column degree, so submatrix capacity is constant.
+    let g = Scheme::Frc.build(k, k, s).assignment(&mut Rng::new(11));
+    let mut ws = DecodeWorkspace::new();
+    let mut rng = Rng::new(12);
+
+    let mut warmup_sum = 0.0;
+    for _ in 0..5 {
+        warmup_sum += ws.onestep_trial(&g, r, rho, &mut rng);
+    }
+    assert!(warmup_sum.is_finite());
+
+    let before = allocations_on_this_thread();
+    let mut sum = 0.0;
+    for _ in 0..100 {
+        sum += ws.onestep_trial(&g, r, rho, &mut rng);
+    }
+    let allocs = allocations_on_this_thread() - before;
+    assert!(sum.is_finite() && sum >= 0.0);
+    assert_eq!(allocs, 0, "steady-state one-step loop allocated {allocs} times");
+}
+
+/// The full fused straggler→decode pipeline including the optimal
+/// (LSQR) decoder with warm start: zero allocations at steady state.
+#[test]
+fn optimal_trial_loop_is_allocation_free_after_warmup() {
+    let (k, s, r) = (200usize, 10usize, 150usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let g = Scheme::Frc.build(k, k, s).assignment(&mut Rng::new(13));
+    let mut ws = DecodeWorkspace::new();
+    let opts = LsqrOptions::default();
+    let mut rng = Rng::new(14);
+
+    let mut warmup_sum = 0.0;
+    for _ in 0..5 {
+        warmup_sum += ws.optimal_trial(&g, r, &opts, Some(rho), &mut rng);
+        warmup_sum += ws.optimal_trial(&g, r, &opts, None, &mut rng);
+    }
+    assert!(warmup_sum.is_finite());
+
+    let before = allocations_on_this_thread();
+    let mut sum = 0.0;
+    for _ in 0..50 {
+        sum += ws.optimal_trial(&g, r, &opts, Some(rho), &mut rng);
+        sum += ws.optimal_trial(&g, r, &opts, None, &mut rng);
+    }
+    let allocs = allocations_on_this_thread() - before;
+    assert!(sum.is_finite() && sum >= 0.0);
+    assert_eq!(allocs, 0, "steady-state optimal loop allocated {allocs} times");
+}
+
+/// Control: the counter itself works — the legacy allocating path must
+/// register allocations (otherwise the two tests above prove nothing).
+#[test]
+fn counting_allocator_detects_legacy_allocations() {
+    let (k, s, r) = (200usize, 10usize, 150usize);
+    let g = Scheme::Frc.build(k, k, s).assignment(&mut Rng::new(15));
+    let mut rng = Rng::new(16);
+    let before = allocations_on_this_thread();
+    let idx = rng.sample_indices(k, r);
+    let a = g.select_columns(&idx);
+    let sums = a.row_sums();
+    assert!(sums.iter().sum::<f64>() > 0.0);
+    let allocs = allocations_on_this_thread() - before;
+    assert!(allocs >= 4, "legacy path should allocate (got {allocs})");
+}
