@@ -3,6 +3,11 @@
 //! * fused vs seed one-step decode at k = n = 1000, s = 10: the
 //!   acceptance target is fused ≥ 3× (no A materialization, no
 //!   allocation, single pass over G's selected columns).
+//! * **row-pass CSR vs CSC** at k = n = 1000 (the PR 2 acceptance
+//!   instance): row sums over the materialized A, and the streamed
+//!   CSR err_1 vs the fused CSC accumulation.
+//! * blocked vs scalar dense kernels (the LSQR inner-loop reductions).
+//! * `assignment_into` re-draw vs the allocating `assignment`.
 //! * workspace vs allocating LSQR, cold vs warm-started.
 //! * one-step decode: a single sparse pass; target >= 1e8 nnz/s.
 //! * scaling in k at fixed density.
@@ -14,11 +19,11 @@
 mod common;
 
 use common::DecodeBenchRecord;
-use gradcode::codes::{GradientCode, Scheme};
+use gradcode::codes::{AssignmentScratch, GradientCode, Scheme};
 use gradcode::decode::{
     algorithmic_error_curve, DecodeWorkspace, OneStepDecoder, OptimalDecoder, StepSize,
 };
-use gradcode::linalg::{spectral_norm, LsqrOptions};
+use gradcode::linalg::{blocked, spectral_norm, CscMatrix, CsrMatrix, LsqrOptions};
 use gradcode::sim::figures::draw_non_straggler_matrix;
 use gradcode::util::bench::black_box;
 use gradcode::util::Rng;
@@ -51,6 +56,135 @@ fn main() {
         "bench decode/one-step/fused-speedup/k1000               {speedup:.2}x (target >= 3x)"
     );
     for (label, t) in [("one-step/seed-path", t_seed), ("one-step/fused", t_fused)] {
+        records.push(DecodeBenchRecord {
+            label: label.to_string(),
+            scheme: "BGC".to_string(),
+            k: k1,
+            n: k1,
+            s: s1,
+            r: r1,
+            seed: seed1,
+            ns_per_decode: t.as_nanos() as f64,
+            decodes_per_sec: 1.0 / t.as_secs_f64(),
+        });
+    }
+
+    // --------------------------- PR 2 headline: row-pass CSR vs CSC
+    // The same A both ways: CSC scatters row accumulation through the
+    // column walk; the CSR mirror streams each row contiguously.
+    let a1 = g1.select_columns(&idx1);
+    let a1_csr = a1.to_csr();
+    let mut row_buf: Vec<f64> = Vec::new();
+    let t_rows_csc = b.bench("decode/row-sums/csc/k1000", || {
+        a1.row_sums_into(&mut row_buf);
+        black_box(row_buf.last().copied())
+    });
+    let t_rows_csr = b.bench("decode/row-sums/csr/k1000", || {
+        a1_csr.row_sums_into(&mut row_buf);
+        black_box(row_buf.last().copied())
+    });
+    let row_speedup = t_rows_csc.as_secs_f64() / t_rows_csr.as_secs_f64();
+    println!(
+        "bench decode/row-sums/csr-speedup/k1000                {row_speedup:.2}x ({:+.1}%)",
+        (row_speedup - 1.0) * 100.0
+    );
+    for (label, t) in [("row-sums/csc", t_rows_csc), ("row-sums/csr", t_rows_csr)] {
+        records.push(DecodeBenchRecord {
+            label: label.to_string(),
+            scheme: "BGC".to_string(),
+            k: k1,
+            n: k1,
+            s: s1,
+            r: r1,
+            seed: seed1,
+            ns_per_decode: t.as_nanos() as f64,
+            decodes_per_sec: 1.0 / t.as_secs_f64(),
+        });
+    }
+
+    // Streamed err_1 over the workspace-cached CSR mirror of G vs the
+    // fused CSC accumulation (same straggler set, bit-identical value).
+    ws.mirror_csr(&g1);
+    let t_streamed = b.bench("decode/one-step/csr-streamed/k1000", || {
+        black_box(ws.err1_streamed(&idx1, rho1))
+    });
+    let streamed_speedup = t_fused.as_secs_f64() / t_streamed.as_secs_f64();
+    println!(
+        "bench decode/one-step/csr-vs-fused-speedup/k1000       {streamed_speedup:.2}x ({:+.1}%)",
+        (streamed_speedup - 1.0) * 100.0
+    );
+    records.push(DecodeBenchRecord {
+        label: "one-step/csr-streamed".to_string(),
+        scheme: "BGC".to_string(),
+        k: k1,
+        n: k1,
+        s: s1,
+        r: r1,
+        seed: seed1,
+        ns_per_decode: t_streamed.as_nanos() as f64,
+        decodes_per_sec: 1.0 / t_streamed.as_secs_f64(),
+    });
+
+    // One-step on the materialized A, CSR vs CSC (the err1_csr path).
+    let onestep1 = OneStepDecoder::new(rho1);
+    let t_err1_csc = b.bench("decode/err1-materialized/csc/k1000", || {
+        black_box(onestep1.err1(&a1))
+    });
+    let t_err1_csr = b.bench("decode/err1-materialized/csr/k1000", || {
+        black_box(onestep1.err1_csr(&a1_csr))
+    });
+
+    // Mirror construction cost (amortized over a figure point's trials).
+    let mut csr_buf = CsrMatrix::empty();
+    let t_to_csr = b.bench("linalg/to-csr-into/k1000", || {
+        g1.to_csr_into(&mut csr_buf);
+        black_box(csr_buf.nnz())
+    });
+
+    // Blocked vs scalar dense reductions at the LSQR working size.
+    let xv: Vec<f64> = (0..k1).map(|i| (i as f64).sin()).collect();
+    let yv: Vec<f64> = (0..k1).map(|i| (i as f64).cos()).collect();
+    let t_dot_scalar = b.bench("kernel/dot/scalar/n1000", || {
+        black_box(gradcode::linalg::dot(&xv, &yv))
+    });
+    let t_dot_blocked = b.bench("kernel/dot/blocked4/n1000", || black_box(blocked::dot(&xv, &yv)));
+    println!(
+        "bench kernel/dot/blocked4-speedup/n1000                {:.2}x",
+        t_dot_scalar.as_secs_f64() / t_dot_blocked.as_secs_f64()
+    );
+    for (label, t) in [
+        ("err1-materialized/csc", t_err1_csc),
+        ("err1-materialized/csr", t_err1_csr),
+        ("to-csr-into", t_to_csr),
+        ("kernel/dot-scalar", t_dot_scalar),
+        ("kernel/dot-blocked4", t_dot_blocked),
+    ] {
+        records.push(DecodeBenchRecord {
+            label: label.to_string(),
+            scheme: "BGC".to_string(),
+            k: k1,
+            n: k1,
+            s: s1,
+            r: r1,
+            seed: seed1,
+            ns_per_decode: t.as_nanos() as f64,
+            decodes_per_sec: 1.0 / t.as_secs_f64(),
+        });
+    }
+
+    // Re-draw: allocating assignment vs workspace assignment_into.
+    let code1 = Scheme::Bgc.build(k1, k1, s1);
+    let mut redraw_rng = Rng::new(seed1);
+    let t_draw_alloc = b.bench("codes/assignment/alloc/k1000", || {
+        black_box(code1.assignment(&mut redraw_rng).nnz())
+    });
+    let mut g_buf = CscMatrix::empty();
+    let mut scratch = AssignmentScratch::new();
+    let t_draw_into = b.bench("codes/assignment-into/k1000", || {
+        code1.assignment_into(&mut redraw_rng, &mut g_buf, &mut scratch);
+        black_box(g_buf.nnz())
+    });
+    for (label, t) in [("redraw/alloc", t_draw_alloc), ("redraw/into", t_draw_into)] {
         records.push(DecodeBenchRecord {
             label: label.to_string(),
             scheme: "BGC".to_string(),

@@ -6,7 +6,7 @@
 //! general), at the cost of a worse average-case error than FRC
 //! (Thm 21: err_1(A) <= C^2 k / ((1-δ) s) w.h.p. for s >= log k).
 
-use super::GradientCode;
+use super::{AssignmentScratch, GradientCode};
 use crate::linalg::CscMatrix;
 use crate::util::Rng;
 
@@ -49,6 +49,28 @@ impl GradientCode for BernoulliCode {
             .map(|_| (0..self.k).filter(|_| rng.bernoulli(p)).collect())
             .collect();
         CscMatrix::from_supports(self.k, supports)
+    }
+
+    /// Allocation-free re-draw: Bernoulli entries stream straight into
+    /// the reused CSC buffers (column-major, rows ascending — the same
+    /// draw order and layout as `assignment`).
+    fn assignment_into(&self, rng: &mut Rng, out: &mut CscMatrix, _scratch: &mut AssignmentScratch) {
+        let p = self.p();
+        out.rows = self.k;
+        out.cols = self.n;
+        out.col_ptr.clear();
+        out.row_idx.clear();
+        out.vals.clear();
+        out.col_ptr.push(0);
+        for _ in 0..self.n {
+            for i in 0..self.k {
+                if rng.bernoulli(p) {
+                    out.row_idx.push(i);
+                    out.vals.push(1.0);
+                }
+            }
+            out.col_ptr.push(out.row_idx.len());
+        }
     }
 }
 

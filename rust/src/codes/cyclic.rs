@@ -5,7 +5,7 @@
 //! deterministic, maximally-spread boolean code: useful as a
 //! non-random, non-blocked contrast to FRC/BGC in ablations.
 
-use super::GradientCode;
+use super::{AssignmentScratch, GradientCode};
 use crate::linalg::CscMatrix;
 use crate::util::Rng;
 
@@ -43,6 +43,30 @@ impl GradientCode for CyclicRepetitionCode {
             .map(|j| (0..self.s).map(|t| (j + t) % self.k).collect())
             .collect();
         CscMatrix::from_supports(self.k, supports)
+    }
+
+    /// Allocation-free re-draw (deterministic): each cyclic window is
+    /// staged in `scratch.col`, sorted — `from_supports` sorts wrapped
+    /// windows the same way — and appended to the reused buffers.
+    fn assignment_into(&self, _rng: &mut Rng, out: &mut CscMatrix, scratch: &mut AssignmentScratch) {
+        out.rows = self.k;
+        out.cols = self.n;
+        out.col_ptr.clear();
+        out.row_idx.clear();
+        out.vals.clear();
+        out.col_ptr.push(0);
+        let col = &mut scratch.col;
+        col.reserve(self.s);
+        for j in 0..self.n {
+            col.clear();
+            col.extend((0..self.s).map(|t| (j + t) % self.k));
+            col.sort_unstable();
+            for &i in col.iter() {
+                out.row_idx.push(i);
+                out.vals.push(1.0);
+            }
+            out.col_ptr.push(out.row_idx.len());
+        }
     }
 }
 

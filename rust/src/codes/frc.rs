@@ -8,7 +8,7 @@
 //! α = number of groups whose workers all straggled (Thm 6-8) — and why
 //! an adversary that kills whole groups forces err = k - r (Thm 10).
 
-use super::GradientCode;
+use super::{AssignmentScratch, GradientCode};
 use crate::linalg::CscMatrix;
 use crate::util::Rng;
 
@@ -62,6 +62,24 @@ impl GradientCode for FractionalRepetitionCode {
             .map(|j| self.block_tasks(self.block_of_column(j)).collect())
             .collect();
         CscMatrix::from_supports(self.k, supports)
+    }
+
+    /// Allocation-free re-draw (deterministic: no RNG, fixed nnz = n·s,
+    /// so the buffers reach steady state after one call).
+    fn assignment_into(&self, _rng: &mut Rng, out: &mut CscMatrix, _scratch: &mut AssignmentScratch) {
+        out.rows = self.k;
+        out.cols = self.n;
+        out.col_ptr.clear();
+        out.row_idx.clear();
+        out.vals.clear();
+        out.col_ptr.push(0);
+        for j in 0..self.n {
+            for i in self.block_tasks(self.block_of_column(j)) {
+                out.row_idx.push(i);
+                out.vals.push(1.0);
+            }
+            out.col_ptr.push(out.row_idx.len());
+        }
     }
 }
 

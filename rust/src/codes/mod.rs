@@ -22,6 +22,29 @@ pub use regular_code::RegularGraphCode;
 use crate::linalg::CscMatrix;
 use crate::util::Rng;
 
+/// Reusable scratch for [`GradientCode::assignment_into`] — the flat
+/// buffers the constructors need while re-drawing G without allocating.
+/// One per `decode::DecodeWorkspace`; each scheme uses the subset it
+/// needs (rBGC: `col`; s-regular: `stubs`/`adj_flat`/`deg`; BGC/FRC
+/// write straight into the output and touch none of it).
+#[derive(Clone, Debug, Default)]
+pub struct AssignmentScratch {
+    /// Per-column support build buffer (≤ k entries).
+    pub col: Vec<usize>,
+    /// Configuration-model stub pool (n·s entries).
+    pub stubs: Vec<usize>,
+    /// Flat adjacency for graph-based codes (n·s entries).
+    pub adj_flat: Vec<usize>,
+    /// Per-vertex fill counts for `adj_flat` (n entries).
+    pub deg: Vec<usize>,
+}
+
+impl AssignmentScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// A gradient-code construction.
 pub trait GradientCode {
     /// Number of tasks / functions k.
@@ -35,6 +58,21 @@ pub trait GradientCode {
     /// Build the k x n assignment matrix. Randomized schemes draw from
     /// `rng`; deterministic schemes ignore it.
     fn assignment(&self, rng: &mut Rng) -> CscMatrix;
+
+    /// [`GradientCode::assignment`] into a caller-owned matrix, reusing
+    /// its buffers (and `scratch`) so schemes that re-draw G every
+    /// Monte-Carlo trial do it allocation-free at steady state.
+    ///
+    /// Contract, pinned by `tests/decode_parity.rs` for every scheme:
+    /// draws the **identical RNG stream** and produces the **identical
+    /// matrix layout** as `assignment`, so seeded simulations are
+    /// unchanged when call sites switch to the `_into` path. The
+    /// default implementation is the allocating fallback for codes
+    /// without a specialized path (e.g. wrappers like `NormalizedCode`).
+    fn assignment_into(&self, rng: &mut Rng, out: &mut CscMatrix, scratch: &mut AssignmentScratch) {
+        let _ = scratch;
+        *out = self.assignment(rng);
+    }
 }
 
 /// The schemes compared in the paper's §6 simulations.
@@ -84,6 +122,26 @@ impl Scheme {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Every scheme's `assignment_into` must match `assignment` exactly
+    /// (same RNG draws, same layout) and leave the streams in lockstep.
+    #[test]
+    fn assignment_into_matches_assignment_bitwise() {
+        let mut out = CscMatrix::empty();
+        let mut scratch = AssignmentScratch::new();
+        for scheme in [Scheme::Frc, Scheme::Bgc, Scheme::Rbgc, Scheme::RegularGraph, Scheme::Cyclic]
+        {
+            let code = scheme.build(20, 20, 4);
+            let mut ra = Rng::new(77);
+            let mut rb = Rng::new(77);
+            for draw in 0..15 {
+                let reference = code.assignment(&mut ra);
+                code.assignment_into(&mut rb, &mut out, &mut scratch);
+                assert_eq!(out, reference, "{} draw {draw}", scheme.name());
+            }
+            assert_eq!(ra.next_u64(), rb.next_u64(), "{} rng diverged", scheme.name());
+        }
+    }
 
     #[test]
     fn scheme_parse_roundtrip() {

@@ -6,7 +6,7 @@
 //! restores spectral concentration for s < log k, giving the Thm 24
 //! bound err_1(A') <= C^2 α^3 k / ((1-δ) s) for ALL s >= 1.
 
-use super::GradientCode;
+use super::{AssignmentScratch, GradientCode};
 use crate::linalg::CscMatrix;
 use crate::util::Rng;
 
@@ -59,6 +59,38 @@ impl GradientCode for RegularizedBernoulliCode {
             })
             .collect();
         CscMatrix::from_supports(self.k, supports)
+    }
+
+    /// Allocation-free re-draw: each column is built in `scratch.col`
+    /// (reserved to k once, the max possible degree), thinned with the
+    /// identical swap-remove walk, sorted in place, and appended to the
+    /// reused CSC buffers. Same RNG stream and layout as `assignment`.
+    fn assignment_into(&self, rng: &mut Rng, out: &mut CscMatrix, scratch: &mut AssignmentScratch) {
+        let p = self.s as f64 / self.k as f64;
+        out.rows = self.k;
+        out.cols = self.n;
+        out.col_ptr.clear();
+        out.row_idx.clear();
+        out.vals.clear();
+        out.col_ptr.push(0);
+        let col = &mut scratch.col;
+        col.reserve(self.k);
+        for _ in 0..self.n {
+            col.clear();
+            col.extend((0..self.k).filter(|_| rng.bernoulli(p)));
+            if col.len() > 2 * self.s {
+                while col.len() > self.s {
+                    let idx = rng.usize(col.len());
+                    col.swap_remove(idx);
+                }
+                col.sort_unstable();
+            }
+            for &i in col.iter() {
+                out.row_idx.push(i);
+                out.vals.push(1.0);
+            }
+            out.col_ptr.push(out.row_idx.len());
+        }
     }
 }
 

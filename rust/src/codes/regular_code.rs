@@ -4,8 +4,9 @@
 //! this is the paper's practical stand-in for explicit Ramanujan
 //! constructions (which are "notoriously tricky to compute").
 
-use super::GradientCode;
+use super::{AssignmentScratch, GradientCode};
 use crate::graph::random_regular_graph;
+use crate::graph::regular::{repair_matching, try_configuration_flat, CONFIGURATION_ATTEMPTS};
 use crate::linalg::CscMatrix;
 use crate::util::Rng;
 
@@ -43,6 +44,52 @@ impl GradientCode for RegularGraphCode {
     fn assignment(&self, rng: &mut Rng) -> CscMatrix {
         let g = random_regular_graph(self.k, self.s, rng);
         CscMatrix::from_supports(self.k, g.adj)
+    }
+
+    /// Re-draw with configuration-model attempts in `scratch`'s flat
+    /// buffers (identical RNG stream and accept/reject walk as
+    /// `random_regular_graph`), emitting the accepted adjacency
+    /// column-by-column into the reused CSC buffers — allocation-free
+    /// when an attempt lands. A configuration is simple with
+    /// probability ≈ exp(−(s²−1)/4), so for sparse degrees (s ≤ 3)
+    /// the flat path all but always wins, while denser graphs fall
+    /// through to the same (allocating) edge-swap repair the reference
+    /// path uses — still RNG-identical, just not allocation-free.
+    fn assignment_into(&self, rng: &mut Rng, out: &mut CscMatrix, scratch: &mut AssignmentScratch) {
+        let (k, s) = (self.k, self.s);
+        out.rows = k;
+        out.cols = self.n;
+        out.col_ptr.clear();
+        out.row_idx.clear();
+        out.vals.clear();
+        out.col_ptr.push(0);
+        for _ in 0..CONFIGURATION_ATTEMPTS {
+            if try_configuration_flat(
+                k,
+                s,
+                rng,
+                &mut scratch.stubs,
+                &mut scratch.adj_flat,
+                &mut scratch.deg,
+            ) {
+                for v in 0..k {
+                    for &u in &scratch.adj_flat[v * s..(v + 1) * s] {
+                        out.row_idx.push(u);
+                        out.vals.push(1.0);
+                    }
+                    out.col_ptr.push(out.row_idx.len());
+                }
+                return;
+            }
+        }
+        let g = repair_matching(k, s, rng);
+        for v in 0..k {
+            for &u in &g.adj[v] {
+                out.row_idx.push(u);
+                out.vals.push(1.0);
+            }
+            out.col_ptr.push(out.row_idx.len());
+        }
     }
 }
 

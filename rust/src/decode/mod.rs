@@ -16,7 +16,7 @@ pub use algorithmic::{algorithmic_error_curve, AlgorithmicDecoder, StepSize};
 pub use onestep::OneStepDecoder;
 pub use streaming::StreamingOneStep;
 pub use optimal::OptimalDecoder;
-pub use workspace::{err1_from_supports, DecodeWorkspace};
+pub use workspace::{err1_from_supports, err1_streamed_counts, DecodeWorkspace};
 
 use crate::linalg::{norm2_sq, CscMatrix};
 

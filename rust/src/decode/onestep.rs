@@ -7,7 +7,7 @@
 //! ρ A 1_r reconstructs 1_k exactly.
 
 use super::Decoder;
-use crate::linalg::CscMatrix;
+use crate::linalg::{blocked, CscMatrix, CsrMatrix};
 
 #[derive(Clone, Copy, Debug)]
 pub struct OneStepDecoder {
@@ -31,6 +31,20 @@ impl OneStepDecoder {
     pub fn err1(&self, a: &CscMatrix) -> f64 {
         let sums = a.row_sums();
         sums.iter().map(|&v| (self.rho * v - 1.0).powi(2)).sum()
+    }
+
+    /// err_1 on a CSR mirror of A: one contiguous row-major sweep with
+    /// blocked per-row reductions — no row-sum buffer, no scatter.
+    /// Bit-identical to [`OneStepDecoder::err1`] on boolean A (integer
+    /// row sums); agrees to rounding on weighted A.
+    pub fn err1_csr(&self, a: &CsrMatrix) -> f64 {
+        let mut total = 0.0;
+        for i in 0..a.rows {
+            let row = &a.vals[a.row_ptr[i]..a.row_ptr[i + 1]];
+            let v = blocked::sum(row);
+            total += (self.rho * v - 1.0).powi(2);
+        }
+        total
     }
 }
 
@@ -76,6 +90,24 @@ mod tests {
         let a = CscMatrix::from_supports(5, vec![vec![], vec![]]);
         let d = OneStepDecoder::new(1.0);
         assert_eq!(d.err1(&a), 5.0);
+    }
+
+    #[test]
+    fn err1_csr_bit_identical_on_boolean_a() {
+        let a = CscMatrix::from_supports(6, vec![vec![0, 1], vec![2, 3], vec![1, 4]]);
+        let d = OneStepDecoder::new(0.7);
+        assert_eq!(d.err1_csr(&a.to_csr()).to_bits(), d.err1(&a).to_bits());
+    }
+
+    #[test]
+    fn err1_csr_close_on_weighted_a() {
+        let a = CscMatrix::from_columns(
+            4,
+            vec![vec![(0, 0.3), (2, 1.7)], vec![(1, -0.4), (2, 0.9), (3, 2.2)]],
+        );
+        let d = OneStepDecoder::new(1.1);
+        let (csc, csr) = (d.err1(&a), d.err1_csr(&a.to_csr()));
+        assert!((csc - csr).abs() <= 1e-12 * (1.0 + csc.abs()), "{csc} vs {csr}");
     }
 
     #[test]

@@ -18,7 +18,24 @@
 //! fused and materialized paths are bit-identical (pinned by the
 //! `decode_parity` integration test).
 
-use crate::linalg::{lsqr_with, CscMatrix, LsqrOptions, LsqrWorkspace};
+//! Two PR-2 additions extend the pipeline:
+//!
+//! * **CSR mirror** — [`DecodeWorkspace::mirror_csr`] caches a
+//!   row-major twin of G (built once per G via `to_csr_into`), and
+//!   [`DecodeWorkspace::err1_streamed`] computes err_1 in one
+//!   contiguous sweep over it (blocked 4-lane row reductions) instead
+//!   of scattering through CSC columns. For boolean G — every code the
+//!   paper constructs — coverage counts are integers, so the streamed
+//!   value is bit-identical to the fused CSC path.
+//! * **Allocation-free re-draw** — the `*_redraw_trial` methods re-draw
+//!   G itself through [`GradientCode::assignment_into`] into a
+//!   workspace-owned matrix, so schemes that sample a fresh G every
+//!   trial (BGC, rBGC, s-regular) also run with zero steady-state heap
+//!   traffic. RNG consumption matches the historical
+//!   `assignment` + `*_trial` sequence, so seeded results are unchanged.
+
+use crate::codes::{AssignmentScratch, GradientCode};
+use crate::linalg::{blocked, lsqr_with, CscMatrix, CsrMatrix, LsqrOptions, LsqrWorkspace};
 use crate::util::Rng;
 
 /// err_1(A) computed directly from G plus the non-straggler index set,
@@ -44,6 +61,27 @@ pub fn err1_from_supports(
     row_acc.iter().map(|&v| (rho * v - 1.0).powi(2)).sum()
 }
 
+/// err_1 streamed row-major over a CSR mirror of G: `col_count[j]` is
+/// the selection multiplicity of column j (0 for stragglers), and each
+/// row's coverage is a contiguous gather-reduce
+/// ([`blocked::masked_row_sum`]) — no row-indexed scatter at all.
+///
+/// For boolean G the per-row coverage is an exact integer, so the
+/// result is bit-identical to [`err1_from_supports`] on the same
+/// selection (pinned by `tests/decode_parity.rs`); for weighted G the
+/// two paths agree to rounding only.
+pub fn err1_streamed_counts(g: &CsrMatrix, col_count: &[u32], rho: f64) -> f64 {
+    assert_eq!(col_count.len(), g.cols, "count length != cols");
+    let mut total = 0.0;
+    for i in 0..g.rows {
+        let lo = g.row_ptr[i];
+        let hi = g.row_ptr[i + 1];
+        let cov = blocked::masked_row_sum(&g.vals[lo..hi], &g.col_idx[lo..hi], col_count);
+        total += (rho * cov - 1.0).powi(2);
+    }
+    total
+}
+
 /// Per-thread scratch for the straggler→decode trial pipeline.
 ///
 /// All buffers grow to the largest instance seen and are then reused;
@@ -65,6 +103,15 @@ pub struct DecodeWorkspace {
     idx: Vec<usize>,
     /// LSQR iteration vectors.
     lsqr: LsqrWorkspace,
+    /// Workspace-owned G for the allocation-free re-draw trials.
+    g: CscMatrix,
+    /// Constructor scratch for [`GradientCode::assignment_into`].
+    scratch: AssignmentScratch,
+    /// Cached CSR mirror of the caller's G (see
+    /// [`DecodeWorkspace::mirror_csr`]).
+    g_csr: CsrMatrix,
+    /// Per-column selection multiplicities for the streamed err_1 pass.
+    col_count: Vec<u32>,
 }
 
 impl Default for DecodeWorkspace {
@@ -83,7 +130,38 @@ impl DecodeWorkspace {
             pool: Vec::new(),
             idx: Vec::new(),
             lsqr: LsqrWorkspace::new(),
+            g: CscMatrix::empty(),
+            scratch: AssignmentScratch::new(),
+            g_csr: CsrMatrix::empty(),
+            col_count: Vec::new(),
         }
+    }
+
+    /// Pre-size every workspace-owned buffer for re-draw trials at
+    /// (k, n, s), using the hard nnz bound k·n. Optional — buffers grow
+    /// on demand anyway — but after this call the re-draw loops perform
+    /// **zero** heap allocations from the very first trial (the strict
+    /// regime `tests/zero_alloc.rs` pins), rather than settling after a
+    /// warmup whose high-water mark can still be exceeded by an
+    /// unusually dense Bernoulli draw.
+    pub fn reserve_redraw(&mut self, k: usize, n: usize, s: usize) {
+        let nnz_cap = k * n;
+        self.g.col_ptr.reserve(n + 1);
+        self.g.row_idx.reserve(nnz_cap);
+        self.g.vals.reserve(nnz_cap);
+        self.a.col_ptr.reserve(n + 1);
+        self.a.row_idx.reserve(nnz_cap);
+        self.a.vals.reserve(nnz_cap);
+        self.scratch.col.reserve(k);
+        self.scratch.stubs.reserve(n * s);
+        self.scratch.adj_flat.reserve(n * s);
+        self.scratch.deg.reserve(n);
+        self.row_acc.reserve(k);
+        self.ones.reserve(k);
+        self.x0.reserve(n);
+        self.pool.reserve(n);
+        self.idx.reserve(n);
+        self.col_count.reserve(n);
     }
 
     /// The non-straggler set sampled by the most recent `*_trial` call.
@@ -147,6 +225,125 @@ impl DecodeWorkspace {
         rng.sample_indices_into(g.cols, r, &mut self.pool, &mut self.idx);
         g.select_columns_into(&self.idx, &mut self.a);
         optimal_err_on_selected(&self.a, &mut self.ones, &mut self.x0, &mut self.lsqr, opts, warm)
+    }
+
+    // ------------------------------------------------- CSR fast path
+
+    /// Cache the CSR mirror of `g` for the streamed row-major decode
+    /// paths. Build it **once per G** (O(nnz), reusing the workspace
+    /// buffers) — the streamed methods below read the mirror only, so
+    /// the caller must re-mirror after switching to a different G.
+    /// The re-draw trials invalidate the mirror automatically.
+    pub fn mirror_csr(&mut self, g: &CscMatrix) {
+        g.to_csr_into(&mut self.g_csr);
+    }
+
+    /// The currently cached CSR mirror (empty until
+    /// [`DecodeWorkspace::mirror_csr`] runs). Exposed for benches and
+    /// parity tests.
+    pub fn csr_mirror(&self) -> &CsrMatrix {
+        &self.g_csr
+    }
+
+    fn invalidate_mirror(&mut self) {
+        self.g_csr.rows = 0;
+        self.g_csr.cols = 0;
+        self.g_csr.row_ptr.clear();
+        self.g_csr.row_ptr.push(0);
+        self.g_csr.col_idx.clear();
+        self.g_csr.vals.clear();
+    }
+
+    /// err_1 for an explicit non-straggler set, streamed over the
+    /// cached CSR mirror (one contiguous row-major pass; bit-identical
+    /// to [`DecodeWorkspace::err1_fused`] on boolean G).
+    pub fn err1_streamed(&mut self, non_stragglers: &[usize], rho: f64) -> f64 {
+        let csr = &self.g_csr;
+        assert!(
+            csr.rows > 0 || csr.cols > 0,
+            "call mirror_csr before the streamed decode paths"
+        );
+        self.col_count.clear();
+        self.col_count.resize(csr.cols, 0);
+        for &j in non_stragglers {
+            assert!(j < csr.cols, "column {j} out of bounds ({})", csr.cols);
+            self.col_count[j] += 1;
+        }
+        err1_streamed_counts(csr, &self.col_count, rho)
+    }
+
+    /// One full one-step Monte-Carlo trial on the CSR fast path:
+    /// sample r uniform non-stragglers (identical RNG stream to
+    /// [`DecodeWorkspace::onestep_trial`]), then stream err_1 over the
+    /// cached mirror. Requires [`DecodeWorkspace::mirror_csr`] first.
+    pub fn onestep_trial_streamed(&mut self, r: usize, rho: f64, rng: &mut Rng) -> f64 {
+        assert!(
+            self.g_csr.rows > 0 || self.g_csr.cols > 0,
+            "call mirror_csr before the streamed decode paths"
+        );
+        rng.sample_indices_into(self.g_csr.cols, r, &mut self.pool, &mut self.idx);
+        self.col_count.clear();
+        self.col_count.resize(self.g_csr.cols, 0);
+        for &j in &self.idx {
+            self.col_count[j] += 1;
+        }
+        err1_streamed_counts(&self.g_csr, &self.col_count, rho)
+    }
+
+    // ------------------------------------------- re-draw trial paths
+
+    /// One full one-step trial for schemes that re-draw G every trial:
+    /// draw G into the workspace ([`GradientCode::assignment_into`]),
+    /// sample r non-stragglers, run the fused err_1 pass — all through
+    /// reused buffers. RNG consumption matches the historical
+    /// `code.assignment(rng)` + `onestep_trial(&g, ..)` sequence, so
+    /// seeded figure/table values are unchanged.
+    pub fn onestep_redraw_trial(
+        &mut self,
+        code: &dyn GradientCode,
+        r: usize,
+        rho: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.invalidate_mirror();
+        code.assignment_into(rng, &mut self.g, &mut self.scratch);
+        rng.sample_indices_into(self.g.cols, r, &mut self.pool, &mut self.idx);
+        err1_from_supports(&self.g, &self.idx, rho, &mut self.row_acc)
+    }
+
+    /// One full optimal-decode trial with per-trial G re-draw; see
+    /// [`DecodeWorkspace::onestep_redraw_trial`] for the re-draw
+    /// contract and [`DecodeWorkspace::optimal_err`] for `warm`.
+    pub fn optimal_redraw_trial(
+        &mut self,
+        code: &dyn GradientCode,
+        r: usize,
+        opts: &LsqrOptions,
+        warm: Option<f64>,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.invalidate_mirror();
+        code.assignment_into(rng, &mut self.g, &mut self.scratch);
+        rng.sample_indices_into(self.g.cols, r, &mut self.pool, &mut self.idx);
+        self.g.select_columns_into(&self.idx, &mut self.a);
+        optimal_err_on_selected(&self.a, &mut self.ones, &mut self.x0, &mut self.lsqr, opts, warm)
+    }
+
+    /// Re-draw G and materialize one straggler trial's A in the
+    /// workspace, returning it — for decoders that need A itself (the
+    /// Fig. 5 algorithmic curve). RNG consumption matches the
+    /// historical `draw_non_straggler_matrix` exactly.
+    pub fn redraw_submatrix(
+        &mut self,
+        code: &dyn GradientCode,
+        r: usize,
+        rng: &mut Rng,
+    ) -> &CscMatrix {
+        self.invalidate_mirror();
+        code.assignment_into(rng, &mut self.g, &mut self.scratch);
+        rng.sample_indices_into(self.g.cols, r, &mut self.pool, &mut self.idx);
+        self.g.select_columns_into(&self.idx, &mut self.a);
+        &self.a
     }
 }
 
@@ -270,5 +467,102 @@ mod tests {
         let mut ws = DecodeWorkspace::new();
         assert_eq!(ws.err1_fused(&g, &[], 1.0), 12.0);
         assert_eq!(ws.optimal_err(&g, &[], &LsqrOptions::default(), None), 12.0);
+    }
+
+    #[test]
+    fn streamed_err1_matches_fused_bitwise_on_boolean_g() {
+        let g = draw_g(Scheme::Bgc, 40, 5, 21);
+        let mut ws = DecodeWorkspace::new();
+        ws.mirror_csr(&g);
+        let mut rng = Rng::new(22);
+        for _ in 0..20 {
+            let r = 1 + rng.usize(40);
+            let idx = rng.sample_indices(40, r);
+            let rho = 40.0 / (r as f64 * 5.0);
+            let fused = ws.err1_fused(&g, &idx, rho);
+            let streamed = ws.err1_streamed(&idx, rho);
+            assert_eq!(fused.to_bits(), streamed.to_bits(), "r={r}: {fused} vs {streamed}");
+        }
+    }
+
+    #[test]
+    fn streamed_handles_repeated_columns_like_fused() {
+        let g = draw_g(Scheme::Frc, 20, 5, 23);
+        let mut ws = DecodeWorkspace::new();
+        ws.mirror_csr(&g);
+        let idx = vec![3, 3, 3, 7, 0];
+        let fused = ws.err1_fused(&g, &idx, 0.4);
+        let streamed = ws.err1_streamed(&idx, 0.4);
+        assert_eq!(fused.to_bits(), streamed.to_bits());
+    }
+
+    #[test]
+    fn streamed_trial_consumes_rng_like_fused_trial() {
+        let g = draw_g(Scheme::RegularGraph, 24, 4, 24);
+        let (r, rho) = (18usize, 24.0 / (18.0 * 4.0));
+        let mut ws_a = DecodeWorkspace::new();
+        let mut ws_b = DecodeWorkspace::new();
+        ws_b.mirror_csr(&g);
+        let mut rng_a = Rng::new(25);
+        let mut rng_b = Rng::new(25);
+        for _ in 0..10 {
+            let fused = ws_a.onestep_trial(&g, r, rho, &mut rng_a);
+            let streamed = ws_b.onestep_trial_streamed(r, rho, &mut rng_b);
+            assert_eq!(fused.to_bits(), streamed.to_bits());
+            assert_eq!(ws_a.last_non_stragglers(), ws_b.last_non_stragglers());
+        }
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+    }
+
+    #[test]
+    #[should_panic(expected = "mirror_csr")]
+    fn streamed_without_mirror_panics() {
+        let mut ws = DecodeWorkspace::new();
+        let mut rng = Rng::new(1);
+        ws.onestep_trial_streamed(3, 1.0, &mut rng);
+    }
+
+    #[test]
+    fn redraw_trials_match_legacy_sequence_bitwise() {
+        for scheme in [Scheme::Bgc, Scheme::Rbgc, Scheme::RegularGraph, Scheme::Frc] {
+            let (k, s, r) = (24usize, 4usize, 18usize);
+            let rho = k as f64 / (r as f64 * s as f64);
+            let code = scheme.build(k, k, s);
+            let opts = LsqrOptions::default();
+
+            let mut legacy_ws = DecodeWorkspace::new();
+            let mut legacy_rng = Rng::new(26);
+            let mut redraw_ws = DecodeWorkspace::new();
+            let mut redraw_rng = Rng::new(26);
+            for trial in 0..8 {
+                let g = code.assignment(&mut legacy_rng);
+                let legacy = legacy_ws.onestep_trial(&g, r, rho, &mut legacy_rng);
+                let redrawn = redraw_ws.onestep_redraw_trial(code.as_ref(), r, rho, &mut redraw_rng);
+                assert_eq!(legacy.to_bits(), redrawn.to_bits(), "{scheme:?} trial {trial}");
+
+                let g2 = code.assignment(&mut legacy_rng);
+                let legacy_opt = legacy_ws.optimal_trial(&g2, r, &opts, Some(rho), &mut legacy_rng);
+                let redrawn_opt =
+                    redraw_ws.optimal_redraw_trial(code.as_ref(), r, &opts, Some(rho), &mut redraw_rng);
+                assert_eq!(legacy_opt.to_bits(), redrawn_opt.to_bits(), "{scheme:?} trial {trial}");
+            }
+            assert_eq!(legacy_rng.next_u64(), redraw_rng.next_u64(), "{scheme:?} rng diverged");
+        }
+    }
+
+    #[test]
+    fn redraw_submatrix_matches_draw_non_straggler_matrix() {
+        use crate::sim::figures::draw_non_straggler_matrix;
+        let (k, s, r) = (20usize, 5usize, 14usize);
+        let mut legacy_rng = Rng::new(27);
+        let mut ws_rng = Rng::new(27);
+        let mut ws = DecodeWorkspace::new();
+        let code = Scheme::Bgc.build(k, k, s);
+        for _ in 0..6 {
+            let reference = draw_non_straggler_matrix(Scheme::Bgc, k, s, r, &mut legacy_rng);
+            let a = ws.redraw_submatrix(code.as_ref(), r, &mut ws_rng);
+            assert_eq!(*a, reference);
+        }
+        assert_eq!(legacy_rng.next_u64(), ws_rng.next_u64());
     }
 }

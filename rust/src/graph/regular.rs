@@ -89,15 +89,57 @@ impl Graph {
 pub fn random_regular_graph(n: usize, s: usize, rng: &mut Rng) -> Graph {
     assert!(s < n, "degree must be < n");
     assert!(n * s % 2 == 0, "n*s must be even");
-    const ATTEMPTS: usize = 50;
 
-    for _ in 0..ATTEMPTS {
+    for _ in 0..CONFIGURATION_ATTEMPTS {
         if let Some(g) = try_configuration(n, s, rng) {
             return g;
         }
     }
     // Repair path: accept a defective multigraph matching and fix it.
     repair_matching(n, s, rng)
+}
+
+/// Configuration-model retries before falling back to edge-swap repair.
+/// Shared with `codes::RegularGraphCode::assignment_into` so the two
+/// generation paths consume identical RNG streams.
+pub const CONFIGURATION_ATTEMPTS: usize = 50;
+
+/// Zero-allocation twin of `try_configuration`: one configuration-model
+/// draw into caller-owned flat buffers. On success (`true`) the sorted
+/// neighbours of vertex v are `adj_flat[v*s..(v+1)*s]`. Consumes the
+/// exact RNG stream of the allocating variant — one full stub shuffle —
+/// and applies the identical self-loop/multi-edge rejection, so a
+/// retry loop over either variant stays in seeded lockstep (pinned by
+/// a test below).
+pub fn try_configuration_flat(
+    n: usize,
+    s: usize,
+    rng: &mut Rng,
+    stubs: &mut Vec<usize>,
+    adj_flat: &mut Vec<usize>,
+    deg: &mut Vec<usize>,
+) -> bool {
+    stubs.clear();
+    stubs.extend((0..n * s).map(|i| i / s));
+    rng.shuffle(stubs);
+    adj_flat.clear();
+    adj_flat.resize(n * s, 0);
+    deg.clear();
+    deg.resize(n, 0);
+    for pair in stubs.chunks(2) {
+        let (u, v) = (pair[0], pair[1]);
+        if u == v || adj_flat[u * s..u * s + deg[u]].contains(&v) {
+            return false;
+        }
+        adj_flat[u * s + deg[u]] = v;
+        deg[u] += 1;
+        adj_flat[v * s + deg[v]] = u;
+        deg[v] += 1;
+    }
+    for v in 0..n {
+        adj_flat[v * s..(v + 1) * s].sort_unstable();
+    }
+    true
 }
 
 /// One configuration-model draw; None if it produced a loop/multi-edge.
@@ -119,8 +161,13 @@ fn try_configuration(n: usize, s: usize, rng: &mut Rng) -> Option<Graph> {
     Some(Graph { n, adj })
 }
 
-/// Take a defective matching and swap edges until simple.
-fn repair_matching(n: usize, s: usize, rng: &mut Rng) -> Graph {
+/// Take a defective matching and swap edges until simple. Allocates;
+/// reached when all [`CONFIGURATION_ATTEMPTS`] rejections fire — rare
+/// for s ≤ 3 but the usual outcome for denser degrees, since one
+/// configuration is simple with probability ≈ exp(−(s²−1)/4).
+/// `pub(crate)` so the zero-allocation `assignment_into` path can
+/// share the identical fallback.
+pub(crate) fn repair_matching(n: usize, s: usize, rng: &mut Rng) -> Graph {
     // Edge list with possible defects.
     let mut stubs: Vec<usize> = (0..n * s).map(|i| i / s).collect();
     rng.shuffle(&mut stubs);
@@ -205,6 +252,28 @@ mod tests {
         let g1 = random_regular_graph(30, 4, &mut Rng::new(9));
         let g2 = random_regular_graph(30, 4, &mut Rng::new(9));
         assert_eq!(g1.adj, g2.adj);
+    }
+
+    #[test]
+    fn flat_configuration_matches_allocating_variant() {
+        // Same seed -> same accept/reject decision and, on accept, the
+        // same sorted adjacency; the RNG streams stay in lockstep.
+        let (mut stubs, mut adj_flat, mut deg) = (Vec::new(), Vec::new(), Vec::new());
+        for seed in 0..40u64 {
+            for &(n, s) in &[(12usize, 3usize), (20, 5), (9, 2)] {
+                let mut ra = Rng::new(seed);
+                let mut rb = Rng::new(seed);
+                let reference = try_configuration(n, s, &mut ra);
+                let ok = try_configuration_flat(n, s, &mut rb, &mut stubs, &mut adj_flat, &mut deg);
+                assert_eq!(ok, reference.is_some(), "n={n} s={s} seed={seed}");
+                if let Some(g) = reference {
+                    for v in 0..n {
+                        assert_eq!(&adj_flat[v * s..(v + 1) * s], &g.adj[v][..], "vertex {v}");
+                    }
+                }
+                assert_eq!(ra.next_u64(), rb.next_u64(), "rng diverged (seed {seed})");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! SIMD-friendly blocked kernels — manual 4-lane (`f64x4`-style)
+//! blocking for the dense reductions in the LSQR inner loop and the
+//! row reductions of the CSR fast path.
+//!
+//! No `std::simd` / intrinsics (the crate builds on stable with no
+//! deps); instead every reduction runs 4 independent accumulators so
+//! LLVM can keep them in one vector register, plus a scalar tail.
+//!
+//! **Blocking convention** (shared by every kernel here, and the
+//! contract the parity suite pins):
+//! * lane width [`LANES`] = 4, accumulators a0..a3 over indices
+//!   `4c + lane`;
+//! * lanes combine as `(a0 + a1) + (a2 + a3)`, then `+ tail` last;
+//! * elementwise kernels (`axpy`, `scaled_sub`, `update_x_w`) are
+//!   bit-identical to their scalar loops (no reassociation — unrolling
+//!   an elementwise op does not change its arithmetic);
+//! * reduction kernels (`dot`, `norm2_sq`, `sum`, `masked_row_sum`,
+//!   `diff_norm2_sq`) reassociate the sum, so on arbitrary f64 data
+//!   they agree with the scalar order only to rounding — but on
+//!   integer-valued data (boolean assignment matrices, coverage
+//!   counts < 2^53) every grouping is exact, so blocked == scalar
+//!   bit-for-bit. `tests/linalg_parity.rs` pins both regimes.
+
+/// Lane width of the manual blocking.
+pub const LANES: usize = 4;
+
+/// Blocked dot product Σ a_i b_i.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let q = n - n % LANES;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < q {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += LANES;
+    }
+    let mut tail = 0.0;
+    for j in q..n {
+        tail += a[j] * b[j];
+    }
+    ((s0 + s1) + (s2 + s3)) + tail
+}
+
+/// Blocked Σ a_i² (squared 2-norm).
+#[inline]
+pub fn norm2_sq(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// Blocked 2-norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    norm2_sq(a).sqrt()
+}
+
+/// Blocked Σ a_i.
+#[inline]
+pub fn sum(a: &[f64]) -> f64 {
+    let n = a.len();
+    let q = n - n % LANES;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < q {
+        s0 += a[i];
+        s1 += a[i + 1];
+        s2 += a[i + 2];
+        s3 += a[i + 3];
+        i += LANES;
+    }
+    let mut tail = 0.0;
+    for j in q..n {
+        tail += a[j];
+    }
+    ((s0 + s1) + (s2 + s3)) + tail
+}
+
+/// Blocked Σ (a_i − b_i)² — the LSQR true-residual recomputation.
+#[inline]
+pub fn diff_norm2_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let q = n - n % LANES;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < q {
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+        i += LANES;
+    }
+    let mut tail = 0.0;
+    for j in q..n {
+        let d = a[j] - b[j];
+        tail += d * d;
+    }
+    ((s0 + s1) + (s2 + s3)) + tail
+}
+
+/// Gather-multiply row reduction for the CSR fast path:
+/// Σ_p vals[p] · count[cols[p]]. `count` is the per-column selection
+/// multiplicity (0 for stragglers). Exact — identical to any other
+/// accumulation order — whenever the products are integers (boolean
+/// G), which is every code the paper constructs.
+#[inline]
+pub fn masked_row_sum(vals: &[f64], cols: &[usize], count: &[u32]) -> f64 {
+    debug_assert_eq!(vals.len(), cols.len());
+    let n = vals.len();
+    let q = n - n % LANES;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < q {
+        s0 += vals[i] * count[cols[i]] as f64;
+        s1 += vals[i + 1] * count[cols[i + 1]] as f64;
+        s2 += vals[i + 2] * count[cols[i + 2]] as f64;
+        s3 += vals[i + 3] * count[cols[i + 3]] as f64;
+        i += LANES;
+    }
+    let mut tail = 0.0;
+    for j in q..n {
+        tail += vals[j] * count[cols[j]] as f64;
+    }
+    ((s0 + s1) + (s2 + s3)) + tail
+}
+
+// --------------------------------------------- elementwise (bit-transparent)
+
+/// y += α·x, 4-unrolled. Elementwise: bit-identical to the scalar loop.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let q = n - n % LANES;
+    let mut i = 0;
+    while i < q {
+        y[i] += alpha * x[i];
+        y[i + 1] += alpha * x[i + 1];
+        y[i + 2] += alpha * x[i + 2];
+        y[i + 3] += alpha * x[i + 3];
+        i += LANES;
+    }
+    for j in q..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// y ← x − α·y, 4-unrolled (the LSQR bidiagonalization refresh
+/// `u = A v − α u`). Elementwise: bit-identical to the scalar loop.
+#[inline]
+pub fn scaled_sub(x: &[f64], alpha: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let q = n - n % LANES;
+    let mut i = 0;
+    while i < q {
+        y[i] = x[i] - alpha * y[i];
+        y[i + 1] = x[i + 1] - alpha * y[i + 1];
+        y[i + 2] = x[i + 2] - alpha * y[i + 2];
+        y[i + 3] = x[i + 3] - alpha * y[i + 3];
+        i += LANES;
+    }
+    for j in q..n {
+        y[j] = x[j] - alpha * y[j];
+    }
+}
+
+/// The fused LSQR solution/search-direction update:
+/// x += t1·w; w ← v + t2·w (old w used for both, per element).
+/// Elementwise: bit-identical to the scalar loop.
+#[inline]
+pub fn update_x_w(x: &mut [f64], w: &mut [f64], v: &[f64], t1: f64, t2: f64) {
+    debug_assert_eq!(x.len(), w.len());
+    debug_assert_eq!(x.len(), v.len());
+    let n = x.len();
+    let q = n - n % LANES;
+    let mut i = 0;
+    while i < q {
+        x[i] += t1 * w[i];
+        w[i] = v[i] + t2 * w[i];
+        x[i + 1] += t1 * w[i + 1];
+        w[i + 1] = v[i + 1] + t2 * w[i + 1];
+        x[i + 2] += t1 * w[i + 2];
+        w[i + 2] = v[i + 2] + t2 * w[i + 2];
+        x[i + 3] += t1 * w[i + 3];
+        w[i + 3] = v[i + 3] + t2 * w[i + 3];
+        i += LANES;
+    }
+    for j in q..n {
+        x[j] += t1 * w[j];
+        w[j] = v[j] + t2 * w[j];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn dot_matches_scalar_within_rounding() {
+        let mut rng = Rng::new(1);
+        for n in [0, 1, 3, 4, 5, 7, 8, 64, 1001] {
+            let a = random_vec(&mut rng, n);
+            let b = random_vec(&mut rng, n);
+            let scalar: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let blocked = dot(&a, &b);
+            let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f64>().max(1.0);
+            assert!((blocked - scalar).abs() <= 1e-12 * scale, "n={n}: {blocked} vs {scalar}");
+        }
+    }
+
+    #[test]
+    fn reductions_exact_on_integer_data() {
+        // Integer-valued f64 sums are exact under any grouping, so the
+        // blocked kernels must match the scalar order bit-for-bit.
+        let mut rng = Rng::new(2);
+        for n in [1, 5, 16, 129] {
+            let a: Vec<f64> = (0..n).map(|_| rng.usize(100) as f64).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.usize(100) as f64).collect();
+            let scalar_dot: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert_eq!(dot(&a, &b).to_bits(), scalar_dot.to_bits());
+            let scalar_sum: f64 = a.iter().sum();
+            assert_eq!(sum(&a).to_bits(), scalar_sum.to_bits());
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_bit_identical_to_scalar() {
+        let mut rng = Rng::new(3);
+        for n in [0, 1, 2, 4, 6, 9, 33] {
+            let x = random_vec(&mut rng, n);
+            let v = random_vec(&mut rng, n);
+            let y0 = random_vec(&mut rng, n);
+            let (alpha, t1, t2) = (rng.normal(), rng.normal(), rng.normal());
+
+            let mut y_scalar = y0.clone();
+            for j in 0..n {
+                y_scalar[j] += alpha * x[j];
+            }
+            let mut y_blocked = y0.clone();
+            axpy(alpha, &x, &mut y_blocked);
+            assert_eq!(y_scalar, y_blocked, "axpy n={n}");
+
+            let mut u_scalar = y0.clone();
+            for j in 0..n {
+                u_scalar[j] = x[j] - alpha * u_scalar[j];
+            }
+            let mut u_blocked = y0.clone();
+            scaled_sub(&x, alpha, &mut u_blocked);
+            assert_eq!(u_scalar, u_blocked, "scaled_sub n={n}");
+
+            let (mut xs, mut ws) = (y0.clone(), x.clone());
+            for j in 0..n {
+                xs[j] += t1 * ws[j];
+                ws[j] = v[j] + t2 * ws[j];
+            }
+            let (mut xb, mut wb) = (y0.clone(), x.clone());
+            update_x_w(&mut xb, &mut wb, &v, t1, t2);
+            assert_eq!(xs, xb, "update_x_w x n={n}");
+            assert_eq!(ws, wb, "update_x_w w n={n}");
+        }
+    }
+
+    #[test]
+    fn masked_row_sum_counts_boolean_exactly() {
+        // Boolean values + integer counts: the reduction is exact.
+        let vals = vec![1.0; 11];
+        let cols: Vec<usize> = (0..11).collect();
+        let mut count = vec![0u32; 11];
+        for j in [0, 2, 3, 7, 10, 10] {
+            count[j] += 1;
+        }
+        // note: col 10 has multiplicity 2 via the repeated index above
+        let expect: f64 = cols.iter().map(|&c| count[c] as f64).sum();
+        assert_eq!(masked_row_sum(&vals, &cols, &count).to_bits(), expect.to_bits());
+        assert_eq!(masked_row_sum(&vals, &cols, &count), 6.0);
+    }
+
+    #[test]
+    fn diff_norm2_sq_matches_naive() {
+        let mut rng = Rng::new(4);
+        let a = random_vec(&mut rng, 37);
+        let b = random_vec(&mut rng, 37);
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!((diff_norm2_sq(&a, &b) - naive).abs() <= 1e-12 * naive.max(1.0));
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(sum(&[]), 0.0);
+        assert_eq!(norm2(&[]), 0.0);
+        assert_eq!(diff_norm2_sq(&[], &[]), 0.0);
+        assert_eq!(masked_row_sum(&[], &[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,304 @@
+//! Compressed-sparse-row mirror of [`CscMatrix`] — the row-major fast
+//! path for the decoders' repeated row passes (row coverage, row sums,
+//! the streamed one-step error).
+//!
+//! CSC stays the *native* representation (the paper's objects are
+//! column-wise: columns are workers, straggler removal is a column
+//! selection). But the decode inner loops are row reductions, which in
+//! CSC scatter through memory; the CSR twin streams them contiguously.
+//! A mirror is built once per G with [`CscMatrix::to_csr`] /
+//! [`CscMatrix::to_csr_into`] and cached in `decode::DecodeWorkspace`.
+//!
+//! **Order guarantee**: the conversion is a stable counting-sort
+//! transpose, so within each CSR row the entries appear in ascending
+//! column order — exactly the order in which the CSC kernels visit
+//! them. Every `CsrMatrix` kernel below therefore accumulates in the
+//! *same sequence* as its `CscMatrix` counterpart and is bit-identical
+//! to it (pinned by `tests/linalg_parity.rs`), not merely close.
+
+use super::dense::DenseMatrix;
+use super::sparse::CscMatrix;
+
+/// Sparse matrix in CSR layout with explicit f64 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// row_ptr[i]..row_ptr[i+1] indexes col_idx/vals for row i.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// An empty 0×0 matrix — the starting state for workspace-cached
+    /// mirrors filled via [`CscMatrix::to_csr_into`].
+    pub fn empty() -> CsrMatrix {
+        CsrMatrix { rows: 0, cols: 0, row_ptr: vec![0], col_idx: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Allocating conversion (see [`CscMatrix::to_csr_into`] for the
+    /// buffer-reusing hot-path variant).
+    pub fn from_csc(csc: &CscMatrix) -> CsrMatrix {
+        let mut out = CsrMatrix::empty();
+        csc.to_csr_into(&mut out);
+        out
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Entries of row i as (col, value) pairs, in ascending column order.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let range = self.row_ptr[i]..self.row_ptr[i + 1];
+        self.col_idx[range.clone()].iter().copied().zip(self.vals[range].iter().copied())
+    }
+
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// y = A x (x over columns). Bit-identical to [`CscMatrix::matvec`]:
+    /// both add the (nonzero-x) terms of each row in ascending column
+    /// order — CSR just does it in one contiguous sweep per row instead
+    /// of scattering across the column walk.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A x into a caller-provided buffer.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let mut acc = 0.0;
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let xj = x[self.col_idx[p]];
+                // The CSC path skips zero x entries at the column level;
+                // skipping here keeps the exact same addition sequence.
+                if xj == 0.0 {
+                    continue;
+                }
+                acc += self.vals[p] * xj;
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// y = A^T x (x over rows). Bit-identical to
+    /// [`CscMatrix::t_matvec`]: each output column accumulates its
+    /// terms in ascending row order in both layouts.
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.t_matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A^T x into a caller-provided buffer.
+    pub fn t_matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                y[self.col_idx[p]] += self.vals[p] * xi;
+            }
+        }
+    }
+
+    /// Row sums A·1 in one contiguous pass. Bit-identical to
+    /// [`CscMatrix::row_sums`] (same per-row addition order).
+    pub fn row_sums(&self) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.row_sums_into(&mut y);
+        y
+    }
+
+    /// [`CsrMatrix::row_sums`] into a reused buffer (resized to `rows`,
+    /// keeping capacity).
+    pub fn row_sums_into(&self, y: &mut Vec<f64>) {
+        y.clear();
+        y.resize(self.rows, 0.0);
+        for (i, slot) in y.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.vals[p];
+            }
+            *slot = acc;
+        }
+    }
+
+    /// Per-row nonzero counts — a pointer diff per row, no scatter.
+    pub fn row_degrees(&self) -> Vec<usize> {
+        (0..self.rows).map(|i| self.row_nnz(i)).collect()
+    }
+
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                m[(i, self.col_idx[p])] += self.vals[p];
+            }
+        }
+        m
+    }
+}
+
+impl CscMatrix {
+    /// Build the CSR mirror (allocating; see
+    /// [`CscMatrix::to_csr_into`] for the workspace-cached variant).
+    pub fn to_csr(&self) -> CsrMatrix {
+        CsrMatrix::from_csc(self)
+    }
+
+    /// Build the CSR mirror into caller-owned buffers: zero heap
+    /// traffic once `out`'s capacity has grown to this nnz/shape.
+    ///
+    /// Stable counting-sort transpose: within each CSR row, entries
+    /// keep ascending column order (duplicates keep their CSC order),
+    /// which is what makes the CSR kernels bit-identical to the CSC
+    /// ones. No scratch needed — `row_ptr` doubles as the insertion
+    /// cursor and is shifted back afterwards.
+    pub fn to_csr_into(&self, out: &mut CsrMatrix) {
+        out.rows = self.rows;
+        out.cols = self.cols;
+        out.row_ptr.clear();
+        out.row_ptr.resize(self.rows + 1, 0);
+        for &r in &self.row_idx {
+            out.row_ptr[r + 1] += 1;
+        }
+        for i in 1..=self.rows {
+            out.row_ptr[i] += out.row_ptr[i - 1];
+        }
+        let nnz = self.nnz();
+        out.col_idx.clear();
+        out.col_idx.resize(nnz, 0);
+        out.vals.clear();
+        out.vals.resize(nnz, 0.0);
+        for j in 0..self.cols {
+            for p in self.col_ptr[j]..self.col_ptr[j + 1] {
+                let r = self.row_idx[p];
+                let dst = out.row_ptr[r];
+                out.col_idx[dst] = j;
+                out.vals[dst] = self.vals[p];
+                out.row_ptr[r] += 1;
+            }
+        }
+        // Each cursor now sits at its row's end == the next row's
+        // start; shift right to restore the start pointers.
+        for i in (1..=self.rows).rev() {
+            out.row_ptr[i] = out.row_ptr[i - 1];
+        }
+        out.row_ptr[0] = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> CscMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        CscMatrix::from_columns(
+            3,
+            vec![vec![(0, 1.0), (2, 4.0)], vec![(1, 3.0)], vec![(0, 2.0), (2, 5.0)]],
+        )
+    }
+
+    #[test]
+    fn roundtrip_preserves_dense_form() {
+        let a = example();
+        let csr = a.to_csr();
+        assert_eq!(csr.to_dense(), a.to_dense());
+        assert_eq!(csr.nnz(), a.nnz());
+        assert_eq!((csr.rows, csr.cols), (a.rows, a.cols));
+    }
+
+    #[test]
+    fn rows_are_in_ascending_column_order() {
+        let csr = example().to_csr();
+        for i in 0..csr.rows {
+            let cols: Vec<usize> = csr.row(i).map(|(c, _)| c).collect();
+            let mut sorted = cols.clone();
+            sorted.sort_unstable();
+            assert_eq!(cols, sorted, "row {i}");
+        }
+        assert_eq!(csr.row(0).collect::<Vec<_>>(), vec![(0, 1.0), (2, 2.0)]);
+        assert_eq!(csr.row_nnz(1), 1);
+    }
+
+    #[test]
+    fn matvec_bit_identical_to_csc() {
+        let a = example();
+        let csr = a.to_csr();
+        let x = vec![1.5, -2.0, 0.25];
+        let yc = a.matvec(&x);
+        let yr = csr.matvec(&x);
+        for (c, r) in yc.iter().zip(&yr) {
+            assert_eq!(c.to_bits(), r.to_bits());
+        }
+    }
+
+    #[test]
+    fn t_matvec_and_row_sums_bit_identical_to_csc() {
+        let a = example();
+        let csr = a.to_csr();
+        let x = vec![0.5, 1.0, -1.0];
+        for (c, r) in a.t_matvec(&x).iter().zip(&csr.t_matvec(&x)) {
+            assert_eq!(c.to_bits(), r.to_bits());
+        }
+        for (c, r) in a.row_sums().iter().zip(&csr.row_sums()) {
+            assert_eq!(c.to_bits(), r.to_bits());
+        }
+        assert_eq!(a.row_degrees(), csr.row_degrees());
+    }
+
+    #[test]
+    fn to_csr_into_reuses_buffers_and_matches_fresh() {
+        let a = example();
+        let mut out = CsrMatrix::empty();
+        a.to_csr_into(&mut out);
+        assert_eq!(out, a.to_csr());
+        // Convert a different (smaller) matrix into the same buffer.
+        let b = CscMatrix::from_supports(2, vec![vec![1], vec![0, 1]]);
+        b.to_csr_into(&mut out);
+        assert_eq!(out, b.to_csr());
+        assert_eq!(out.rows, 2);
+        assert_eq!(out.nnz(), 3);
+    }
+
+    #[test]
+    fn empty_and_zero_row_matrices() {
+        let empty = CscMatrix::empty().to_csr();
+        assert_eq!(empty.rows, 0);
+        assert_eq!(empty.row_ptr, vec![0]);
+
+        // A matrix with an empty row and an empty column.
+        let a = CscMatrix::from_columns(3, vec![vec![(0, 1.0)], vec![], vec![(2, 2.0)]]);
+        let csr = a.to_csr();
+        assert_eq!(csr.row_nnz(0), 1);
+        assert_eq!(csr.row_nnz(1), 0);
+        assert_eq!(csr.row_nnz(2), 1);
+        assert_eq!(csr.to_dense(), a.to_dense());
+    }
+
+    #[test]
+    fn duplicate_entries_preserved() {
+        // Duplicate (row, col) entries must survive with multiplicity,
+        // in the same order CSC stores them (the transpose is stable).
+        let a = CscMatrix::from_columns(2, vec![vec![(0, 1.0), (0, 2.0)], vec![(1, 3.0)]]);
+        let csr = a.to_csr();
+        assert_eq!(csr.nnz(), 3);
+        let csc_col0_vals: Vec<f64> = a.col(0).map(|(_, v)| v).collect();
+        let csr_row0_vals: Vec<f64> = csr.row(0).map(|(_, v)| v).collect();
+        assert_eq!(csr_row0_vals, csc_col0_vals);
+        assert!(csr.row(0).all(|(c, _)| c == 0));
+        assert_eq!(csr.row_sums(), a.row_sums());
+    }
+}

@@ -14,7 +14,13 @@
 //!   solve `min_dx ||A dx - (b - A x0)||`. With `x0 = None` the
 //!   arithmetic is operation-for-operation identical to [`lsqr`], so
 //!   the two paths produce bit-identical results (pinned by tests).
+//!
+//! Both entry points run their dense inner-loop arithmetic through the
+//! [`blocked`](super::blocked) 4-lane kernels — the same kernels in
+//! both, so the lsqr/lsqr_with bit-parity above is unaffected by the
+//! blocking (reductions reassociate identically in the two paths).
 
+use super::blocked;
 use super::sparse::CscMatrix;
 
 /// Convergence report for an LSQR run.
@@ -47,11 +53,9 @@ pub fn lsqr(a: &CscMatrix, b: &[f64], opts: &LsqrOptions) -> LsqrResult {
     assert_eq!(b.len(), m);
     let max_iter = if opts.max_iter == 0 { 4 * m.max(n) } else { opts.max_iter };
 
-    let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
-
     // Golub-Kahan bidiagonalization state.
     let mut u = b.to_vec();
-    let mut beta = norm(&u);
+    let mut beta = blocked::norm2(&u);
     let mut x = vec![0.0; n];
     if beta == 0.0 {
         return LsqrResult { x, residual_norm: 0.0, iterations: 0, converged: true };
@@ -60,7 +64,7 @@ pub fn lsqr(a: &CscMatrix, b: &[f64], opts: &LsqrOptions) -> LsqrResult {
         *ui /= beta;
     }
     let mut v = a.t_matvec(&u);
-    let mut alpha = norm(&v);
+    let mut alpha = blocked::norm2(&v);
     if alpha == 0.0 {
         // b orthogonal to range(A): x = 0 is optimal.
         return LsqrResult { x, residual_norm: beta, iterations: 0, converged: true };
@@ -88,10 +92,8 @@ pub fn lsqr(a: &CscMatrix, b: &[f64], opts: &LsqrOptions) -> LsqrResult {
 
         // u = A v - alpha u; beta = ||u||
         a.matvec_into(&v, &mut av);
-        for i in 0..m {
-            u[i] = av[i] - alpha * u[i];
-        }
-        beta = norm(&u);
+        blocked::scaled_sub(&av, alpha, &mut u);
+        beta = blocked::norm2(&u);
         if beta > 0.0 {
             for ui in u.iter_mut() {
                 *ui /= beta;
@@ -100,10 +102,8 @@ pub fn lsqr(a: &CscMatrix, b: &[f64], opts: &LsqrOptions) -> LsqrResult {
 
         // v = A^T u - beta v; alpha = ||v||
         a.t_matvec_into(&u, &mut atu);
-        for j in 0..n {
-            v[j] = atu[j] - beta * v[j];
-        }
-        alpha = norm(&v);
+        blocked::scaled_sub(&atu, beta, &mut v);
+        alpha = blocked::norm2(&v);
         if alpha > 0.0 {
             for vi in v.iter_mut() {
                 *vi /= alpha;
@@ -124,17 +124,14 @@ pub fn lsqr(a: &CscMatrix, b: &[f64], opts: &LsqrOptions) -> LsqrResult {
         // Update x and the search direction w.
         let t1 = phi / rho;
         let t2 = -theta / rho;
-        for j in 0..n {
-            x[j] += t1 * w[j];
-            w[j] = v[j] + t2 * w[j];
-        }
+        blocked::update_x_w(&mut x, &mut w, &v, t1, t2);
 
         // Stopping rules (Paige-Saunders criteria 1 & 2).
         let res = phi_bar; // ||A x - b|| for the current iterate
         let a_norm = a_norm_sq.sqrt();
         // ||A^T r|| estimate:
         let atr = phi_bar * alpha * c.abs();
-        if res <= opts.btol * b_norm + opts.atol * a_norm * norm(&x) {
+        if res <= opts.btol * b_norm + opts.atol * a_norm * blocked::norm2(&x) {
             converged = true;
             break;
         }
@@ -148,12 +145,11 @@ pub fn lsqr(a: &CscMatrix, b: &[f64], opts: &LsqrOptions) -> LsqrResult {
         }
     }
 
-    // Recompute the true residual (phi_bar is an estimate).
-    let r: Vec<f64> = {
-        let ax = a.matvec(&x);
-        b.iter().zip(ax).map(|(bi, axi)| bi - axi).collect()
-    };
-    LsqrResult { x, residual_norm: norm(&r), iterations, converged }
+    // Recompute the true residual (phi_bar is an estimate) — via the
+    // same blocked kernel `lsqr_with` uses, preserving their bit-parity.
+    let ax = a.matvec(&x);
+    let residual_norm = blocked::diff_norm2_sq(b, &ax).sqrt();
+    LsqrResult { x, residual_norm, iterations, converged }
 }
 
 /// Reusable scratch for [`lsqr_with`]: the Golub-Kahan vectors (u, v,
@@ -209,8 +205,6 @@ pub fn lsqr_with(
     assert_eq!(b.len(), m);
     let max_iter = if opts.max_iter == 0 { 4 * m.max(n) } else { opts.max_iter };
 
-    let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
-
     ws.x.clear();
     ws.x.resize(n, 0.0);
     ws.v.clear();
@@ -233,7 +227,7 @@ pub fn lsqr_with(
         }
     }
 
-    let mut beta = norm(&ws.u);
+    let mut beta = blocked::norm2(&ws.u);
     if beta == 0.0 {
         // b (or the deflated rhs) already reproduced exactly: x = x0.
         if let Some(x0) = x0 {
@@ -245,7 +239,7 @@ pub fn lsqr_with(
         *ui /= beta;
     }
     a.t_matvec_into(&ws.u, &mut ws.v);
-    let mut alpha = norm(&ws.v);
+    let mut alpha = blocked::norm2(&ws.v);
     if alpha == 0.0 {
         // rhs orthogonal to range(A): dx = 0 is optimal.
         if let Some(x0) = x0 {
@@ -271,10 +265,8 @@ pub fn lsqr_with(
 
         // u = A v - alpha u; beta = ||u||
         a.matvec_into(&ws.v, &mut ws.av);
-        for i in 0..m {
-            ws.u[i] = ws.av[i] - alpha * ws.u[i];
-        }
-        beta = norm(&ws.u);
+        blocked::scaled_sub(&ws.av, alpha, &mut ws.u);
+        beta = blocked::norm2(&ws.u);
         if beta > 0.0 {
             for ui in ws.u.iter_mut() {
                 *ui /= beta;
@@ -283,10 +275,8 @@ pub fn lsqr_with(
 
         // v = A^T u - beta v; alpha = ||v||
         a.t_matvec_into(&ws.u, &mut ws.atu);
-        for j in 0..n {
-            ws.v[j] = ws.atu[j] - beta * ws.v[j];
-        }
-        alpha = norm(&ws.v);
+        blocked::scaled_sub(&ws.atu, beta, &mut ws.v);
+        alpha = blocked::norm2(&ws.v);
         if alpha > 0.0 {
             for vi in ws.v.iter_mut() {
                 *vi /= alpha;
@@ -307,16 +297,13 @@ pub fn lsqr_with(
         // Update x and the search direction w.
         let t1 = phi / rho;
         let t2 = -theta / rho;
-        for j in 0..n {
-            ws.x[j] += t1 * ws.w[j];
-            ws.w[j] = ws.v[j] + t2 * ws.w[j];
-        }
+        blocked::update_x_w(&mut ws.x, &mut ws.w, &ws.v, t1, t2);
 
         // Stopping rules (Paige-Saunders criteria 1 & 2).
         let res = phi_bar;
         let a_norm = a_norm_sq.sqrt();
         let atr = phi_bar * alpha * c.abs();
-        if res <= opts.btol * b_norm + opts.atol * a_norm * norm(&ws.x) {
+        if res <= opts.btol * b_norm + opts.atol * a_norm * blocked::norm2(&ws.x) {
             converged = true;
             break;
         }
@@ -338,15 +325,8 @@ pub fn lsqr_with(
         }
     }
     a.matvec_into(&ws.x, &mut ws.av);
-    let residual_sq: f64 = b
-        .iter()
-        .zip(ws.av.iter())
-        .map(|(bi, axi)| {
-            let d = bi - axi;
-            d * d
-        })
-        .sum();
-    LsqrSummary { residual_norm: residual_sq.sqrt(), iterations, converged }
+    let residual_norm = blocked::diff_norm2_sq(b, &ws.av).sqrt();
+    LsqrSummary { residual_norm, iterations, converged }
 }
 
 #[cfg(test)]

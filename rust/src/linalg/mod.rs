@@ -2,13 +2,41 @@
 //! and spectral estimation. Everything the decoders and the adversarial
 //! analysis need, built from scratch (no external linalg crates in the
 //! offline vendor set).
+//!
+//! # CSC vs CSR — who owns which pass
+//!
+//! [`CscMatrix`] is the **native** layout: the paper's objects are
+//! column-wise (column j = worker j's task list), so straggler removal
+//! (`select_columns*`) and the fused one-step accumulation walk columns
+//! and are O(nnz) in CSC. [`CsrMatrix`] is the **row-major mirror** for
+//! the decode inner loops that reduce over rows — row coverage, row
+//! sums, the streamed one-step error — which in CSC scatter through
+//! memory. The mirror is built once per G ([`CscMatrix::to_csr`] /
+//! [`CscMatrix::to_csr_into`]) and cached in `decode::DecodeWorkspace`;
+//! the conversion is a stable counting-sort transpose, so every CSR
+//! kernel accumulates in the same order as its CSC counterpart and the
+//! two layouts produce bit-identical results (`tests/linalg_parity.rs`).
+//!
+//! # Blocking convention
+//!
+//! [`blocked`] holds the SIMD-friendly kernels (manual 4-lane blocking,
+//! scalar tail) used by the LSQR inner loop and the CSR row reductions:
+//! four independent accumulators over indices `4c + lane`, combined as
+//! `(a0 + a1) + (a2 + a3)`, tail added last. Elementwise kernels are
+//! bit-identical to their scalar loops; reduction kernels reassociate
+//! (exact on integer-valued data — every boolean assignment matrix —
+//! and within rounding otherwise). Both `lsqr` and `lsqr_with` use the
+//! same blocked kernels, so their mutual bit-parity is preserved.
 
+pub mod blocked;
 pub mod cholesky;
+pub mod csr;
 pub mod dense;
 pub mod lsqr;
 pub mod power_iter;
 pub mod sparse;
 
+pub use csr::CsrMatrix;
 pub use dense::{axpy, dot, norm2, norm2_sq, scale, DenseMatrix};
 pub use lsqr::{lsqr, lsqr_with, LsqrOptions, LsqrResult, LsqrSummary, LsqrWorkspace};
 pub use power_iter::{regular_graph_lambda, spectral_norm};

@@ -113,9 +113,10 @@ pub fn figure5(cfg: &FigureConfig, t_max: usize) -> Vec<FigPoint> {
         for &delta in &deltas {
             let r = cfg.r(delta);
             let k = cfg.k;
-            let curve = cfg.mc.mean_curve(t_max + 1, |rng| {
-                let a = draw_non_straggler_matrix(Scheme::Bgc, k, s, r, rng);
-                algorithmic_error_curve(&a, StepSize::SpectralNormSq, t_max, rng)
+            let code = Scheme::Bgc.build(k, k, s);
+            let curve = cfg.mc.mean_curve_ws(t_max + 1, DecodeWorkspace::new, |ws, rng| {
+                let a = ws.redraw_submatrix(code.as_ref(), r, rng);
+                algorithmic_error_curve(a, StepSize::SpectralNormSq, t_max, rng)
             });
             for (t, &v) in curve.iter().enumerate() {
                 out.push(FigPoint {
@@ -149,10 +150,12 @@ impl ErrorKind {
 
 /// The shared sweep engine behind Figures 2-4, running on the fused
 /// straggler→decode pipeline: each worker thread owns one
-/// [`DecodeWorkspace`], every trial samples stragglers and decodes
-/// without materializing A (one-step) or allocating solver state
-/// (optimal). Per-trial RNG consumption matches the historical
-/// allocating path, so seeded figure values are unchanged.
+/// [`DecodeWorkspace`], every trial re-draws G *into the workspace*
+/// (`assignment_into` — no allocation even for randomized schemes),
+/// samples stragglers, and decodes without materializing A (one-step)
+/// or allocating solver state (optimal). Per-trial RNG consumption
+/// matches the historical allocating path, so seeded figure values are
+/// unchanged.
 fn error_sweep(
     cfg: &FigureConfig,
     figure: &'static str,
@@ -167,11 +170,11 @@ fn error_sweep(
                 let r = cfg.r(delta);
                 let k = cfg.k;
                 let rho = k as f64 / (r as f64 * s as f64);
-                let mean = cfg.mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
-                    let g = scheme.build(k, k, s).assignment(rng);
-                    match kind {
-                        ErrorKind::OneStep => ws.onestep_trial(&g, r, rho, rng),
-                        ErrorKind::Optimal => ws.optimal_trial(&g, r, &opts, None, rng),
+                let code = scheme.build(k, k, s);
+                let mean = cfg.mc.mean_ws(DecodeWorkspace::new, |ws, rng| match kind {
+                    ErrorKind::OneStep => ws.onestep_redraw_trial(code.as_ref(), r, rho, rng),
+                    ErrorKind::Optimal => {
+                        ws.optimal_redraw_trial(code.as_ref(), r, &opts, None, rng)
                     }
                 });
                 out.push(FigPoint {

@@ -7,10 +7,14 @@
 //! The `*_ws` variants thread a per-worker workspace (typically a
 //! `decode::DecodeWorkspace`) through the trial closure, which is what
 //! makes the steady-state trial loop allocation-free: scratch buffers
-//! are built once per thread and reused across every trial it runs.
-//! Workspaces are scratch only — trial results must not depend on the
-//! workspace's prior contents, so means stay independent of thread
-//! count and scheduling.
+//! are built once per thread and reused across every trial it runs —
+//! including, since the `assignment_into` re-draw path landed, the
+//! assignment matrix G itself for schemes that sample a fresh G every
+//! trial. Workspaces are scratch only — trial results must not depend
+//! on the workspace's prior contents, so means stay independent of
+//! thread count and scheduling. (A workspace-cached CSR mirror of a
+//! *fixed* G is fine: it is a pure function of the figure point, not
+//! of trial history.)
 
 use crate::util::parallel::{parallel_map, parallel_map_with};
 use crate::util::Rng;
@@ -102,6 +106,33 @@ impl MonteCarlo {
         vals.iter().sum::<f64>() / self.trials.max(1) as f64
     }
 
+    /// [`MonteCarlo::mean_curve`] with a per-thread workspace — the
+    /// Fig. 5 sweep re-draws G per trial through the workspace.
+    pub fn mean_curve_ws<W>(
+        &self,
+        len: usize,
+        init: impl Fn() -> W + Sync,
+        f: impl Fn(&mut W, &mut Rng) -> Vec<f64> + Sync,
+    ) -> Vec<f64> {
+        let root = Rng::new(self.seed);
+        let curves = parallel_map_with(self.trials, self.threads, init, |ws, i| {
+            let mut rng = root.fork(i as u64);
+            let c = f(ws, &mut rng);
+            assert_eq!(c.len(), len, "trial curve length mismatch");
+            c
+        });
+        let mut mean = vec![0.0; len];
+        for c in &curves {
+            for (m, v) in mean.iter_mut().zip(c) {
+                *m += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= self.trials.max(1) as f64;
+        }
+        mean
+    }
+
     /// [`MonteCarlo::probability`] with a per-thread workspace.
     pub fn probability_ws<W>(
         &self,
@@ -168,6 +199,30 @@ mod tests {
         let mc = MonteCarlo::new(20_000, 4);
         let p = mc.probability(|rng| rng.bernoulli(0.25));
         assert!((p - 0.25).abs() < 0.02, "{p}");
+    }
+
+    #[test]
+    fn mean_curve_ws_matches_plain_curve() {
+        let mc = MonteCarlo::new(300, 6);
+        let plain = mc.mean_curve(2, |rng| {
+            let x = rng.f64();
+            vec![x, x * x]
+        });
+        for threads in [1, 4] {
+            let ws = MonteCarlo { threads, ..mc }.mean_curve_ws(
+                2,
+                || vec![0.0f64; 2],
+                |buf, rng| {
+                    let x = rng.f64();
+                    buf[0] = x;
+                    buf[1] = x * x;
+                    buf.clone()
+                },
+            );
+            for (a, b) in plain.iter().zip(&ws) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads {threads}");
+            }
+        }
     }
 
     #[test]

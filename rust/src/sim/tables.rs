@@ -81,12 +81,12 @@ pub fn thm5_exact(k: usize, r: usize, s: usize) -> f64 {
 
 pub fn thm5_table(k: usize, s: usize, deltas: &[f64], mc: &MonteCarlo) -> Vec<TableRow> {
     let mut rows = Vec::new();
+    let code = Scheme::Frc.build(k, k, s);
     for &delta in deltas {
         let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
         let rho = k as f64 / (r as f64 * s as f64);
         let measured = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
-            let g = Scheme::Frc.build(k, k, s).assignment(rng);
-            ws.onestep_trial(&g, r, rho, rng)
+            ws.onestep_redraw_trial(code.as_ref(), r, rho, rng)
         });
         rows.push(TableRow {
             table: "thm5",
@@ -131,6 +131,7 @@ pub fn thm6_paper(k: usize, r: usize, s: usize) -> f64 {
 }
 
 pub fn thm6_table(k: usize, s: usize, deltas: &[f64], mc: &MonteCarlo) -> Vec<TableRow> {
+    let code = Scheme::Frc.build(k, k, s);
     deltas
         .iter()
         .map(|&delta| {
@@ -143,8 +144,7 @@ pub fn thm6_table(k: usize, s: usize, deltas: &[f64], mc: &MonteCarlo) -> Vec<Ta
             // stragglers it deflates the covered blocks out of the rhs.
             let rho = k as f64 / (r as f64 * s as f64);
             let measured = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
-                let g = Scheme::Frc.build(k, k, s).assignment(rng);
-                ws.optimal_trial(&g, r, &opts, Some(rho), rng)
+                ws.optimal_redraw_trial(code.as_ref(), r, &opts, Some(rho), rng)
             });
             TableRow {
                 table: "thm6",
@@ -182,9 +182,9 @@ pub fn thm8_table(k: usize, alphas: &[usize], deltas: &[f64], mc: &MonteCarlo) -
             let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
             let threshold = (alpha * s) as f64;
             let opts = LsqrOptions::default();
+            let code = Scheme::Frc.build(k, k, s);
             let measured = mc.probability_ws(DecodeWorkspace::new, |ws, rng| {
-                let g = Scheme::Frc.build(k, k, s).assignment(rng);
-                ws.optimal_trial(&g, r, &opts, None, rng) > threshold + 1e-6
+                ws.optimal_redraw_trial(code.as_ref(), r, &opts, None, rng) > threshold + 1e-6
             });
             rows.push(TableRow {
                 table: "thm8",
@@ -336,9 +336,9 @@ pub fn thm21_table(
             let s = s_of_k(k);
             let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
             let rho = k as f64 / (r as f64 * s as f64);
+            let code = scheme.build(k, k, s);
             let mean_err1 = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
-                let g = scheme.build(k, k, s).assignment(rng);
-                ws.onestep_trial(&g, r, rho, rng)
+                ws.onestep_redraw_trial(code.as_ref(), r, rho, rng)
             });
             let c = (mean_err1 * (1.0 - delta) * s as f64 / k as f64).sqrt();
             TableRow {

@@ -159,6 +159,80 @@ fn lsqr_with_parity_on_rank_deficient_instances() {
     }
 }
 
+/// The CSR-streamed `err1` pins against the PR 1 paths (fused CSC
+/// accumulation AND the materialized `select_columns` + `row_sums`
+/// reference) on the exact table configurations: thm5/thm10 (FRC,
+/// k=20, s=5), thm8's threshold shapes, and the thm21/thm24 k-sweep
+/// (BGC and rBGC). All boolean codes, so the agreement is bit-for-bit.
+#[test]
+fn csr_streamed_err1_matches_pr1_paths_on_thm_configurations() {
+    let mut ws = DecodeWorkspace::new();
+    // (scheme, k, s) of the published table sweeps.
+    let configs = [
+        (Scheme::Frc, 20usize, 5usize),       // thm5 / thm6 / thm10
+        (Scheme::Frc, 20, 10),                // thm8 threshold shape
+        (Scheme::Bgc, 30, 4),                 // thm21 sweep point
+        (Scheme::Bgc, 60, 5),                 // thm21 sweep point
+        (Scheme::Rbgc, 30, 4),                // thm24 sweep point
+        (Scheme::RegularGraph, 30, 5),        // fig. 2-4 companion
+    ];
+    for (ci, &(scheme, k, s)) in configs.iter().enumerate() {
+        let mut rng = Rng::new(4000 + ci as u64);
+        let g = scheme.build(k, k, s).assignment(&mut rng);
+        ws.mirror_csr(&g);
+        for &delta in &[0.0, 0.25, 0.5, 0.75] {
+            let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
+            let rho = k as f64 / (r as f64 * s as f64);
+            for _ in 0..5 {
+                let idx = rng.sample_indices(k, r);
+                let seed_path = OneStepDecoder::new(rho).err1(&g.select_columns(&idx));
+                let fused = ws.err1_fused(&g, &idx, rho);
+                let streamed = ws.err1_streamed(&idx, rho);
+                assert_eq!(
+                    streamed.to_bits(),
+                    seed_path.to_bits(),
+                    "{scheme:?} k={k} s={s} delta={delta}: streamed {streamed} vs seed {seed_path}"
+                );
+                assert_eq!(streamed.to_bits(), fused.to_bits());
+            }
+        }
+    }
+}
+
+/// The table refactor onto the re-draw trials must not move a single
+/// bit: a Monte-Carlo mean through `onestep_redraw_trial` /
+/// `optimal_redraw_trial` (warm-started, thm6's production shape)
+/// equals the PR 1 closure form (`assignment` + `*_trial`) exactly.
+#[test]
+fn redraw_monte_carlo_means_match_pr1_closure_form() {
+    let (k, s) = (20usize, 5usize);
+    let opts = LsqrOptions::default();
+    for &delta in &[0.25, 0.5] {
+        let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let mc = MonteCarlo { trials: 150, seed: 31, threads: 4 };
+
+        let legacy_onestep = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
+            let g = Scheme::Frc.build(k, k, s).assignment(rng);
+            ws.onestep_trial(&g, r, rho, rng)
+        });
+        let code = Scheme::Frc.build(k, k, s);
+        let redraw_onestep = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
+            ws.onestep_redraw_trial(code.as_ref(), r, rho, rng)
+        });
+        assert_eq!(legacy_onestep.to_bits(), redraw_onestep.to_bits(), "delta={delta}");
+
+        let legacy_optimal = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
+            let g = Scheme::Frc.build(k, k, s).assignment(rng);
+            ws.optimal_trial(&g, r, &opts, Some(rho), rng)
+        });
+        let redraw_optimal = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
+            ws.optimal_redraw_trial(code.as_ref(), r, &opts, Some(rho), rng)
+        });
+        assert_eq!(legacy_optimal.to_bits(), redraw_optimal.to_bits(), "delta={delta}");
+    }
+}
+
 /// Monte-Carlo means through the workspace pipeline are identical for
 /// every thread count (the per-trial RNG fork plus position-addressed
 /// output writes make scheduling invisible).

@@ -1,0 +1,203 @@
+//! Randomized linalg parity suite — the pin that lets the CSR mirror
+//! and the blocked kernels replace the CSC scalar paths on the hot
+//! loops without any drift.
+//!
+//! A seeded mini-proptest harness over `util::rng` (no external deps)
+//! generates ≥ 200 random sparse matrices across shapes, densities,
+//! and edge cases (empty rows, empty columns, zero-size dimensions,
+//! duplicate entries, boolean and weighted values) and asserts:
+//!
+//! * CSR vs CSC **bit-identical** results for `matvec`, `t_matvec`,
+//!   and `row_sums` (the conversion preserves per-row accumulation
+//!   order, so this is exact equality, not tolerance);
+//! * `to_csr_into` on a reused buffer == fresh `to_csr`;
+//! * blocked vs scalar kernel parity: bit-exact on integer-valued
+//!   data, ≤ 1e-12 relative on arbitrary floats;
+//! * the streamed err_1 (CSR + column counts) is bit-identical to the
+//!   fused CSC accumulation on boolean matrices.
+
+use gradcode::decode::{err1_from_supports, err1_streamed_counts};
+use gradcode::linalg::{blocked, CscMatrix, CsrMatrix};
+use gradcode::util::Rng;
+
+/// One random CSC matrix: shape, density, and value style all drawn
+/// from `rng`, with explicit edge cases mixed in via `case_idx`.
+fn random_matrix(rng: &mut Rng, case_idx: usize) -> CscMatrix {
+    // Cycle through deliberate edge shapes before falling back to
+    // general random shapes, so the suite always covers them.
+    let (rows, cols) = match case_idx % 8 {
+        0 => (1, 1),
+        1 => (1 + rng.usize(6), 0),            // no columns
+        2 => (1, 1 + rng.usize(30)),           // single row
+        3 => (1 + rng.usize(30), 1),           // single column
+        _ => (1 + rng.usize(40), 1 + rng.usize(40)),
+    };
+    let density = [0.0, 0.05, 0.3, 0.9][rng.usize(4)];
+    let boolean = rng.bernoulli(0.5);
+    let mut columns: Vec<Vec<(usize, f64)>> = Vec::with_capacity(cols);
+    for _ in 0..cols {
+        let mut col: Vec<(usize, f64)> = (0..rows)
+            .filter(|_| rng.bernoulli(density))
+            .map(|i| (i, if boolean { 1.0 } else { rng.normal() }))
+            .collect();
+        // Occasionally force an empty column or a duplicate entry.
+        if rng.bernoulli(0.1) {
+            col.clear();
+        } else if !col.is_empty() && rng.bernoulli(0.15) {
+            let dup = col[rng.usize(col.len())];
+            col.push(dup);
+        }
+        columns.push(col);
+    }
+    // Occasionally blank an entire row (empty-row edge case).
+    if rows > 1 && rng.bernoulli(0.3) {
+        let blank = rng.usize(rows);
+        for col in columns.iter_mut() {
+            col.retain(|&(r, _)| r != blank);
+        }
+    }
+    CscMatrix::from_columns(rows, columns)
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str, case: usize) {
+    assert_eq!(a.len(), b.len(), "{what} length (case {case})");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}] (case {case}): {x} vs {y}");
+    }
+}
+
+/// The headline pin: every CSR kernel is bit-identical to its CSC
+/// counterpart on ≥ 200 random matrices.
+#[test]
+fn csr_kernels_bit_identical_to_csc_over_200_cases() {
+    let mut rng = Rng::new(0xC5C_C5A);
+    let mut csr_buf = CsrMatrix::empty();
+    let cases = 220;
+    for case in 0..cases {
+        let a = random_matrix(&mut rng, case);
+        let csr = a.to_csr();
+
+        // Reused-buffer conversion must equal the fresh one.
+        a.to_csr_into(&mut csr_buf);
+        assert_eq!(csr_buf, csr, "to_csr_into mismatch (case {case})");
+
+        // Structure: same dims/nnz, dense forms agree, rows sorted.
+        assert_eq!((csr.rows, csr.cols, csr.nnz()), (a.rows, a.cols, a.nnz()));
+        assert_eq!(csr.to_dense(), a.to_dense(), "dense mismatch (case {case})");
+        for i in 0..csr.rows {
+            let cols_of_row: Vec<usize> = csr.row(i).map(|(c, _)| c).collect();
+            assert!(
+                cols_of_row.windows(2).all(|w| w[0] <= w[1]),
+                "row {i} not in column order (case {case})"
+            );
+        }
+
+        // Kernels: bit-identical, including a zero-laden x (the CSC
+        // matvec skips zero x entries; CSR must skip identically).
+        let mut x_cols: Vec<f64> = (0..a.cols).map(|_| rng.normal()).collect();
+        for xi in x_cols.iter_mut() {
+            if rng.bernoulli(0.25) {
+                *xi = 0.0;
+            }
+        }
+        let x_rows: Vec<f64> = (0..a.rows).map(|_| rng.normal()).collect();
+        assert_bits_eq(&a.matvec(&x_cols), &csr.matvec(&x_cols), "matvec", case);
+        assert_bits_eq(&a.t_matvec(&x_rows), &csr.t_matvec(&x_rows), "t_matvec", case);
+        assert_bits_eq(&a.row_sums(), &csr.row_sums(), "row_sums", case);
+        assert_eq!(a.row_degrees(), csr.row_degrees(), "row_degrees (case {case})");
+    }
+}
+
+/// Blocked reductions vs the scalar definitions: exact on integers,
+/// ≤ 1e-12 relative on floats, across lengths that exercise every
+/// tail residue (len mod 4 ∈ {0,1,2,3}).
+#[test]
+fn blocked_kernels_match_scalar_over_all_tail_residues() {
+    let mut rng = Rng::new(0xB10C);
+    for case in 0..120 {
+        let n = case % 4 + 4 * rng.usize(12); // every residue, up to ~48
+        let integer = case % 2 == 0;
+        let gen = |rng: &mut Rng| -> f64 {
+            if integer {
+                rng.usize(200) as f64 - 100.0
+            } else {
+                rng.normal()
+            }
+        };
+        let a: Vec<f64> = (0..n).map(|_| gen(&mut rng)).collect();
+        let b: Vec<f64> = (0..n).map(|_| gen(&mut rng)).collect();
+
+        let dot_ref: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let sum_ref: f64 = a.iter().sum();
+        let nsq_ref: f64 = a.iter().map(|x| x * x).sum();
+        let diff_ref: f64 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+
+        if integer {
+            assert_eq!(blocked::dot(&a, &b).to_bits(), dot_ref.to_bits(), "dot case {case}");
+            assert_eq!(blocked::sum(&a).to_bits(), sum_ref.to_bits(), "sum case {case}");
+            assert_eq!(blocked::norm2_sq(&a).to_bits(), nsq_ref.to_bits(), "nsq case {case}");
+            assert_eq!(
+                blocked::diff_norm2_sq(&a, &b).to_bits(),
+                diff_ref.to_bits(),
+                "diff case {case}"
+            );
+        } else {
+            let tol = |r: f64| 1e-12 * (1.0 + r.abs());
+            assert!((blocked::dot(&a, &b) - dot_ref).abs() <= tol(dot_ref), "dot case {case}");
+            assert!((blocked::sum(&a) - sum_ref).abs() <= tol(sum_ref), "sum case {case}");
+            assert!((blocked::norm2_sq(&a) - nsq_ref).abs() <= tol(nsq_ref), "nsq case {case}");
+            assert!(
+                (blocked::diff_norm2_sq(&a, &b) - diff_ref).abs() <= tol(diff_ref),
+                "diff case {case}"
+            );
+        }
+
+        // Elementwise kernels are bit-identical regardless of values.
+        let alpha = gen(&mut rng);
+        let mut y_scalar = b.clone();
+        for (yi, xi) in y_scalar.iter_mut().zip(&a) {
+            *yi += alpha * xi;
+        }
+        let mut y_blocked = b.clone();
+        blocked::axpy(alpha, &a, &mut y_blocked);
+        assert_bits_eq(&y_scalar, &y_blocked, "axpy", case);
+    }
+}
+
+/// Streamed err_1 (CSR + counts) is bit-identical to the fused CSC
+/// accumulation on boolean matrices — any straggler set, including
+/// repeats and the empty set.
+#[test]
+fn streamed_err1_bit_identical_to_fused_on_boolean_matrices() {
+    let mut rng = Rng::new(0xE221);
+    let mut row_acc = Vec::new();
+    for case in 0..80 {
+        let (rows, cols) = (1 + rng.usize(50), 1 + rng.usize(50));
+        let density = [0.05, 0.2, 0.6][rng.usize(3)];
+        let supports: Vec<Vec<usize>> = (0..cols)
+            .map(|_| (0..rows).filter(|_| rng.bernoulli(density)).collect())
+            .collect();
+        let g = CscMatrix::from_supports(rows, supports);
+        let csr = g.to_csr();
+
+        // Selection: sometimes empty, sometimes with repeats.
+        let sel: Vec<usize> = match case % 3 {
+            0 => Vec::new(),
+            1 => (0..1 + rng.usize(cols)).map(|_| rng.usize(cols)).collect(), // repeats ok
+            _ => rng.sample_indices(cols, 1 + rng.usize(cols)),
+        };
+        let rho = 0.25 + rng.f64();
+
+        let fused = err1_from_supports(&g, &sel, rho, &mut row_acc);
+        let mut counts = vec![0u32; cols];
+        for &j in &sel {
+            counts[j] += 1;
+        }
+        let streamed = err1_streamed_counts(&csr, &counts, rho);
+        assert_eq!(
+            fused.to_bits(),
+            streamed.to_bits(),
+            "case {case}: fused {fused} vs streamed {streamed}"
+        );
+    }
+}

@@ -102,6 +102,110 @@ fn optimal_trial_loop_is_allocation_free_after_warmup() {
     assert_eq!(allocs, 0, "steady-state optimal loop allocated {allocs} times");
 }
 
+/// The CSR-cached workspace path: mirror G once, then the streamed
+/// one-step trial loop (sample + row-major err_1 sweep) must be
+/// allocation-free at steady state.
+#[test]
+fn csr_streamed_trial_loop_is_allocation_free_after_warmup() {
+    let (k, s, r) = (200usize, 10usize, 150usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let g = Scheme::Bgc.build(k, k, s).assignment(&mut Rng::new(21));
+    let mut ws = DecodeWorkspace::new();
+    ws.mirror_csr(&g);
+    let mut rng = Rng::new(22);
+
+    let mut warmup_sum = 0.0;
+    for _ in 0..5 {
+        warmup_sum += ws.onestep_trial_streamed(r, rho, &mut rng);
+    }
+    assert!(warmup_sum.is_finite());
+
+    let before = allocations_on_this_thread();
+    let mut sum = 0.0;
+    for _ in 0..100 {
+        sum += ws.onestep_trial_streamed(r, rho, &mut rng);
+    }
+    let allocs = allocations_on_this_thread() - before;
+    assert!(sum.is_finite() && sum >= 0.0);
+    assert_eq!(allocs, 0, "steady-state CSR-streamed loop allocated {allocs} times");
+
+    // Re-mirroring an identically-shaped G reuses the same buffers too.
+    let before = allocations_on_this_thread();
+    ws.mirror_csr(&g);
+    let allocs = allocations_on_this_thread() - before;
+    assert_eq!(allocs, 0, "re-mirroring same-shape G allocated {allocs} times");
+}
+
+/// The `assignment_into` re-draw loop: randomized schemes re-draw G
+/// itself every trial through the workspace, and with the worst-case
+/// reserve the whole draw→sample→decode loop performs zero heap
+/// allocations — including the very first trial.
+#[test]
+fn redraw_trial_loop_is_allocation_free_for_randomized_schemes() {
+    let (k, r) = (60usize, 45usize);
+    for scheme in [Scheme::Bgc, Scheme::Rbgc, Scheme::RegularGraph, Scheme::Frc, Scheme::Cyclic] {
+        // s-regular runs at s=2: the configuration model accepts a draw
+        // with probability exp(−(s²−1)/4), so sparse degrees stay on
+        // the zero-alloc flat path while dense ones would fall back to
+        // the (allocating) edge-swap repair almost every draw.
+        let s = if scheme == Scheme::RegularGraph { 2usize } else { 6 };
+        let rho = k as f64 / (r as f64 * s as f64);
+        let code = scheme.build(k, k, s);
+        let mut ws = DecodeWorkspace::new();
+        // Reserve the k·n worst case up front: afterwards even a
+        // maximally dense Bernoulli draw fits without reallocating.
+        ws.reserve_redraw(k, k, s);
+        let mut rng = Rng::new(23);
+
+        let mut warmup_sum = 0.0;
+        for _ in 0..3 {
+            warmup_sum += ws.onestep_redraw_trial(code.as_ref(), r, rho, &mut rng);
+        }
+        assert!(warmup_sum.is_finite());
+
+        let before = allocations_on_this_thread();
+        let mut sum = 0.0;
+        for _ in 0..100 {
+            sum += ws.onestep_redraw_trial(code.as_ref(), r, rho, &mut rng);
+        }
+        let allocs = allocations_on_this_thread() - before;
+        assert!(sum.is_finite() && sum >= 0.0);
+        assert_eq!(
+            allocs, 0,
+            "{}: steady-state redraw loop allocated {allocs} times",
+            code.name()
+        );
+    }
+}
+
+/// The optimal (LSQR) decoder composed with per-trial G re-draw: zero
+/// steady-state allocations once LSQR's iteration vectors have warmed.
+#[test]
+fn optimal_redraw_trial_loop_is_allocation_free_after_warmup() {
+    let (k, s, r) = (60usize, 6usize, 45usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let code = Scheme::Rbgc.build(k, k, s);
+    let mut ws = DecodeWorkspace::new();
+    ws.reserve_redraw(k, k, s);
+    let opts = LsqrOptions::default();
+    let mut rng = Rng::new(24);
+
+    let mut warmup_sum = 0.0;
+    for _ in 0..5 {
+        warmup_sum += ws.optimal_redraw_trial(code.as_ref(), r, &opts, Some(rho), &mut rng);
+    }
+    assert!(warmup_sum.is_finite());
+
+    let before = allocations_on_this_thread();
+    let mut sum = 0.0;
+    for _ in 0..50 {
+        sum += ws.optimal_redraw_trial(code.as_ref(), r, &opts, Some(rho), &mut rng);
+    }
+    let allocs = allocations_on_this_thread() - before;
+    assert!(sum.is_finite() && sum >= 0.0);
+    assert_eq!(allocs, 0, "steady-state optimal redraw loop allocated {allocs} times");
+}
+
 /// Control: the counter itself works — the legacy allocating path must
 /// register allocations (otherwise the two tests above prove nothing).
 #[test]
