@@ -24,7 +24,9 @@ use gradcode::decode::{
     algorithmic_error_curve, DecodeWorkspace, OneStepDecoder, OptimalDecoder, StepSize,
 };
 use gradcode::linalg::{blocked, spectral_norm, CscMatrix, CsrMatrix, LsqrOptions};
-use gradcode::sim::figures::draw_non_straggler_matrix;
+use gradcode::sim::figures::{draw_non_straggler_matrix, FigPartialPoint};
+use gradcode::sim::shard::ShardPoints;
+use gradcode::sim::{JobKind, JobSpec, MonteCarlo, Shard, ShardArtifact};
 use gradcode::util::bench::black_box;
 use gradcode::util::Rng;
 
@@ -269,6 +271,95 @@ fn main() {
             s,
             r,
             seed: k as u64,
+            ns_per_decode: t.as_nanos() as f64,
+            decodes_per_sec: 1.0 / t.as_secs_f64(),
+        });
+    }
+
+    // ----------------------- shard overhead at the k = n = 1000 instance
+    // The distributed path's cost vs in-process aggregation: (a) one
+    // figure point's mean through `mean_ws` (the num_shards = 1 case),
+    // (b) the same mean as a 4-shard fan-out including the full JSON
+    // artifact round trip and merge, and (c) serialize+parse+merge
+    // alone on prebuilt partials — the pure shard overhead a multi-
+    // process run pays on top of the trials themselves.
+    let shard_trials = if common::quick() { 48 } else { 128 };
+    let mc_shard = MonteCarlo::new(shard_trials, seed1).with_threads(1);
+    let shard_job = JobSpec {
+        kind: JobKind::Figure,
+        id: "2".to_string(),
+        trials: shard_trials,
+        seed: seed1,
+        k: k1,
+        s: 0,
+        tmax: 0,
+    };
+    let num_shards = 4usize;
+
+    let t_inproc = b.bench("shard/in-process-mean/k1000", || {
+        black_box(mc_shard.mean_ws(DecodeWorkspace::new, |ws, rng| {
+            ws.onestep_redraw_trial(code1.as_ref(), r1, rho1, rng)
+        }))
+    });
+
+    let make_artifact_text = |sid: usize| -> String {
+        let shard = Shard::new(sid, num_shards).unwrap();
+        let partial = mc_shard.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
+            ws.onestep_redraw_trial(code1.as_ref(), r1, rho1, rng)
+        });
+        let point = FigPartialPoint {
+            figure: "fig2",
+            scheme: "BGC".to_string(),
+            s: s1,
+            delta: 0.1,
+            k: k1,
+            partial,
+        };
+        let art = ShardArtifact {
+            job: shard_job.clone(),
+            shard_id: sid,
+            num_shards,
+            points: ShardPoints::Fig(vec![point]),
+        };
+        art.to_json_string()
+    };
+
+    let t_fanout = b.bench("shard/4shard-fanout+merge/k1000", || {
+        let texts: Vec<String> = (0..num_shards).map(|sid| make_artifact_text(sid)).collect();
+        let parsed: Vec<ShardArtifact> =
+            texts.iter().map(|t| ShardArtifact::parse(t).unwrap()).collect();
+        let merged = ShardArtifact::merge(parsed).unwrap();
+        black_box(merged.to_csv().len())
+    });
+
+    // Pure overhead: artifacts prebuilt once, bench only the byte-level
+    // round trip and the merge/finalize work.
+    let prebuilt: Vec<String> = (0..num_shards).map(|sid| make_artifact_text(sid)).collect();
+    let t_merge_only = b.bench("shard/serialize+merge-only/4shards", || {
+        let parsed: Vec<ShardArtifact> =
+            prebuilt.iter().map(|t| ShardArtifact::parse(t).unwrap()).collect();
+        let merged = ShardArtifact::merge(parsed).unwrap();
+        black_box(merged.to_csv().len())
+    });
+    println!(
+        "bench shard/overhead/k1000                             {:+.1}% fan-out vs in-process \
+         (merge-only {})",
+        (t_fanout.as_secs_f64() / t_inproc.as_secs_f64() - 1.0) * 100.0,
+        gradcode::util::bench::fmt_duration(t_merge_only)
+    );
+    for (label, t) in [
+        ("shard/in-process-mean", t_inproc),
+        ("shard/4shard-fanout+merge", t_fanout),
+        ("shard/serialize+merge-only", t_merge_only),
+    ] {
+        records.push(DecodeBenchRecord {
+            label: label.to_string(),
+            scheme: "BGC".to_string(),
+            k: k1,
+            n: k1,
+            s: s1,
+            r: r1,
+            seed: seed1,
             ns_per_decode: t.as_nanos() as f64,
             decodes_per_sec: 1.0 / t.as_secs_f64(),
         });

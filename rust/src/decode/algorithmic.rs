@@ -99,7 +99,7 @@ pub fn algorithmic_error_curve(
 
 impl Decoder for AlgorithmicDecoder {
     /// Weights x such that A x = 1_k - u_t. From the recursion,
-    /// x = (1/ν) Σ_{i<t} A^T u_i; we accumulate it alongside u.
+    /// `x = (1/ν) Σ_{i<t} Aᵀ u_i`; we accumulate it alongside u.
     fn weights(&self, a: &CscMatrix) -> Vec<f64> {
         let mut rng = Rng::new(self.seed);
         let nu = self.step_size.resolve(a, &mut rng);

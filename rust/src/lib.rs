@@ -2,7 +2,8 @@
 //!
 //! A production-quality reproduction of Charles, Papailiopoulos &
 //! Ellenberg (2017) as a three-layer Rust + JAX + Pallas system. See
-//! README.md for the architecture and DESIGN.md for the experiment map.
+//! the repository's README.md for an overview and ARCHITECTURE.md for
+//! the decode-pipeline and sharding design.
 //!
 //! * [`codes`] — FRC / BGC / rBGC / s-regular / cyclic constructions.
 //! * [`decode`] — one-step, optimal (LSQR), and algorithmic decoders.
@@ -10,7 +11,8 @@
 //! * [`adversary`] — Thm-10 FRC attack, greedy/local-search/exhaustive
 //!   heuristics, and the Thm-11 DkS reduction.
 //! * [`sim`] — Monte-Carlo harness regenerating Figures 2-5 and the
-//!   theorem tables.
+//!   theorem tables; [`sim::shard`] fans any run out across
+//!   processes/machines with bit-identical merged results.
 //! * [`runtime`] — PJRT engine pool executing the AOT HLO artifacts.
 //! * [`coordinator`] — master/worker gather, deadline, decode.
 //! * [`training`] — synthetic data + the end-to-end coded GD loop.
@@ -27,3 +29,14 @@ pub mod sim;
 pub mod stragglers;
 pub mod training;
 pub mod util;
+
+// Compile the README / ARCHITECTURE code blocks as doctests so the
+// documented examples cannot rot (CI runs `cargo test --doc`). The
+// structs exist only under rustdoc's doctest collection pass.
+#[doc = include_str!("../../README.md")]
+#[cfg(doctest)]
+pub struct ReadmeDoctests;
+
+#[doc = include_str!("../../ARCHITECTURE.md")]
+#[cfg(doctest)]
+pub struct ArchitectureDoctests;

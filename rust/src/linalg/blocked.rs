@@ -107,7 +107,7 @@ pub fn diff_norm2_sq(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// Gather-multiply row reduction for the CSR fast path:
-/// Σ_p vals[p] · count[cols[p]]. `count` is the per-column selection
+/// `Σ_p vals[p] · count[cols[p]]`. `count` is the per-column selection
 /// multiplicity (0 for stragglers). Exact — identical to any other
 /// accumulation order — whenever the products are integers (boolean
 /// G), which is every code the paper constructs.

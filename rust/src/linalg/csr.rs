@@ -24,7 +24,7 @@ use super::sparse::CscMatrix;
 pub struct CsrMatrix {
     pub rows: usize,
     pub cols: usize,
-    /// row_ptr[i]..row_ptr[i+1] indexes col_idx/vals for row i.
+    /// `row_ptr[i]..row_ptr[i+1]` indexes `col_idx`/`vals` for row i.
     pub row_ptr: Vec<usize>,
     pub col_idx: Vec<usize>,
     pub vals: Vec<f64>,

@@ -13,7 +13,7 @@ use super::dense::DenseMatrix;
 pub struct CscMatrix {
     pub rows: usize,
     pub cols: usize,
-    /// col_ptr[j]..col_ptr[j+1] indexes row_idx/vals for column j.
+    /// `col_ptr[j]..col_ptr[j+1]` indexes `row_idx`/`vals` for column j.
     pub col_ptr: Vec<usize>,
     pub row_idx: Vec<usize>,
     pub vals: Vec<f64>,

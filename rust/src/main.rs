@@ -1,22 +1,59 @@
-//! `repro` — CLI for the gradcode reproduction.
+//! `repro` — CLI for the gradcode reproduction (binary name:
+//! `gradcode`; run it as `cargo run --release -- <subcommand>`).
 //!
-//! Subcommands (arg parsing is hand-rolled; clap is not in the offline
-//! vendor set):
+//! Arg parsing is hand-rolled (clap is not in the offline vendor set):
+//! `--key value` pairs after a subcommand, plus positional file
+//! arguments for `merge`. Unknown subcommands and unknown flags are
+//! **errors**: the full usage block is printed to stderr and the
+//! process exits with status 2 (runtime failures exit 1).
 //!
-//!   repro figures --fig 2|3|4|5 [--trials N] [--k K] [--seed S]
-//!       Regenerate a paper figure's series as CSV on stdout.
-//!   repro tables --table thm5|thm6|thm8|thm10|thm11|thm21|thm24
-//!       Regenerate a theorem-vs-measured table as CSV.
-//!   repro train [--scheme frc|bgc|rbgc|regular|cyclic] [--model linear|mlp]
-//!               [--decoder onestep|optimal] [--k K] [--s S] [--steps N]
-//!               [--delta D] [--backend pjrt|native] [--engines E]
-//!       Run the end-to-end coded training loop; per-round CSV on stdout.
-//!   repro adversary [--k K] [--s S] [--r R]
-//!       Compare straggler-selection strategies on every code.
-//!   repro demo
-//!       30-second tour: one figure point, one attack, one training run.
+//! Subcommands and every flag default:
+//!
+//! ```text
+//! repro figures    --fig 2          figure to regenerate (2|3|4|5)
+//!                  --trials 5000    Monte-Carlo trials per point
+//!                  --seed 2017      root RNG seed
+//!                  --k 100          tasks/workers k (= n)
+//!                  --tmax 15        iterations for --fig 5 curves
+//!                  --threads auto   worker threads (results invariant)
+//! repro tables     --table thm5     thm3|thm5|thm6|thm8|thm10|thm11|thm21|thm24
+//!                  --trials 2000    Monte-Carlo trials per point
+//!                  --seed 2017      root RNG seed
+//!                  --k 100          tasks/workers k
+//!                  --s 10           per-worker load s (thm3/thm5/thm6/thm10
+//!                                   only; the other tables derive s and
+//!                                   reject the flag)
+//!                  --threads auto
+//! repro shard      --fig F | --table T   exactly one of the two
+//!                  --shard-id I     this shard's index (required, 0-based)
+//!                  --num-shards N   total shards (required)
+//!                  --out FILE       artifact path (default: stdout)
+//!                  (+ the figures/tables flags above; --trials defaults
+//!                   to 5000 for figures, 2000 for tables)
+//! repro merge      FILE...          shard artifacts; emits the same CSV
+//!                                   as the unsharded run, bit-for-bit
+//! repro train      --scheme frc     frc|bgc|rbgc|regular|cyclic
+//!                  --model linear   linear|mlp
+//!                  --decoder onestep onestep|optimal
+//!                  --k 100  --s 10  --steps 200  --delta 0.2  --lr 0.5
+//!                  --backend pjrt   pjrt|native
+//!                  --engines 2      PJRT engine pool size
+//!                  --seed 0
+//! repro adversary  --k 100  --s 10  --r 80 (= 4k/5)  --seed 2017
+//! repro ablation   --study rho      rho|rbgc|lsqr|normalization
+//!                  --trials 500  --seed 2017  --k 100  --s 10
+//! repro inspect    --artifact NAME  (default: every manifest entry)
+//! repro demo
+//! repro help
+//! ```
+//!
+//! The `shard`/`merge` pair distributes a figure/table run across
+//! processes or machines: each shard runs a disjoint trial range and
+//! writes exact partial aggregates as JSON; `merge` validates the
+//! partition and reproduces the unsharded CSV bit-for-bit (see
+//! `sim::shard` and ARCHITECTURE.md).
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::Context;
 
 use gradcode::adversary::{
     asp_objective, frc_worst_stragglers, greedy_stragglers, local_search_stragglers,
@@ -25,71 +62,198 @@ use gradcode::codes::Scheme;
 use gradcode::coordinator::{DecoderKind, ModelKind};
 use gradcode::decode::OptimalDecoder;
 use gradcode::runtime::{Backend, EnginePool, LinearDims, Manifest, MlpDims};
-use gradcode::sim::{figures, tables, FigPoint, FigureConfig, MonteCarlo, TableRow};
+use gradcode::sim::shard::TABLE_IDS;
+use gradcode::sim::{
+    figures, FigureConfig, JobKind, JobSpec, MonteCarlo, Shard, ShardArtifact,
+};
 use gradcode::stragglers::{DeadlinePolicy, LatencyModel};
 use gradcode::training::{train, TrainConfig};
 use gradcode::util::Rng;
 
-/// Tiny argv parser: --key value pairs after a subcommand.
+/// CLI failure modes: usage errors reprint the help block and exit 2;
+/// runtime errors exit 1.
+#[derive(Debug)]
+enum CliError {
+    Usage(String),
+    Runtime(anyhow::Error),
+}
+
+impl From<anyhow::Error> for CliError {
+    fn from(e: anyhow::Error) -> Self {
+        CliError::Runtime(e)
+    }
+}
+
+type CliResult<T = ()> = Result<T, CliError>;
+
+fn usage<T>(msg: impl Into<String>) -> CliResult<T> {
+    Err(CliError::Usage(msg.into()))
+}
+
+/// Tiny argv parser: `--key value` pairs plus positional arguments
+/// after a subcommand.
 struct Args {
     sub: String,
     kv: Vec<(String, String)>,
+    positional: Vec<String>,
 }
 
 impl Args {
-    fn parse() -> Result<Args> {
+    fn parse() -> CliResult<Args> {
         let mut it = std::env::args().skip(1);
         let sub = it.next().unwrap_or_else(|| "help".to_string());
         let mut kv = Vec::new();
-        while let Some(key) = it.next() {
-            let key = key
-                .strip_prefix("--")
-                .ok_or_else(|| anyhow!("expected --flag, got {key:?}"))?
-                .to_string();
-            let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
-            kv.push((key, val));
+        let mut positional = Vec::new();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let Some(val) = it.next() else {
+                    return usage(format!("--{key} needs a value"));
+                };
+                kv.push((key.to_string(), val));
+            } else {
+                positional.push(tok);
+            }
         }
-        Ok(Args { sub, kv })
+        Ok(Args { sub, kv, positional })
+    }
+
+    /// Reject flags the subcommand does not define, and positional
+    /// arguments unless the subcommand takes them.
+    fn finish(&self, allowed: &[&str], allow_positional: bool) -> CliResult<()> {
+        for (k, _) in &self.kv {
+            if !allowed.contains(&k.as_str()) {
+                let hint = if allowed.is_empty() {
+                    "takes no flags".to_string()
+                } else {
+                    format!("allowed: --{}", allowed.join(", --"))
+                };
+                return usage(format!("unknown flag --{k} for `repro {}` ({hint})", self.sub));
+            }
+        }
+        if !allow_positional && !self.positional.is_empty() {
+            return usage(format!(
+                "`repro {}` takes no positional arguments (got {:?})",
+                self.sub, self.positional
+            ));
+        }
+        Ok(())
     }
 
     fn get(&self, key: &str) -> Option<&str> {
         self.kv.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
 
-    fn usize(&self, key: &str, default: usize) -> Result<usize> {
-        self.get(key)
-            .map(|v| v.parse::<usize>().with_context(|| format!("--{key} {v:?}")))
-            .unwrap_or(Ok(default))
+    fn usize(&self, key: &str, default: usize) -> CliResult<usize> {
+        match self.get(key) {
+            Some(v) => match v.parse::<usize>() {
+                Ok(x) => Ok(x),
+                Err(_) => usage(format!("--{key} {v:?}: expected a non-negative integer")),
+            },
+            None => Ok(default),
+        }
     }
 
-    fn f64(&self, key: &str, default: f64) -> Result<f64> {
-        self.get(key)
-            .map(|v| v.parse::<f64>().with_context(|| format!("--{key} {v:?}")))
-            .unwrap_or(Ok(default))
+    fn f64(&self, key: &str, default: f64) -> CliResult<f64> {
+        match self.get(key) {
+            Some(v) => match v.parse::<f64>() {
+                Ok(x) => Ok(x),
+                Err(_) => usage(format!("--{key} {v:?}: expected a number")),
+            },
+            None => Ok(default),
+        }
     }
 
-    fn u64(&self, key: &str, default: u64) -> Result<u64> {
-        self.get(key)
-            .map(|v| v.parse::<u64>().with_context(|| format!("--{key} {v:?}")))
-            .unwrap_or(Ok(default))
+    fn u64(&self, key: &str, default: u64) -> CliResult<u64> {
+        match self.get(key) {
+            Some(v) => match v.parse::<u64>() {
+                Ok(x) => Ok(x),
+                Err(_) => usage(format!("--{key} {v:?}: expected a non-negative integer")),
+            },
+            None => Ok(default),
+        }
     }
 }
 
-fn main() -> Result<()> {
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(CliError::Usage(msg)) => {
+            eprintln!("error: {msg}");
+            eprintln!();
+            eprint!("{HELP}");
+            2
+        }
+        Err(CliError::Runtime(e)) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> CliResult<()> {
     let args = Args::parse()?;
     match args.sub.as_str() {
-        "figures" => cmd_figures(&args),
-        "tables" => cmd_tables(&args),
-        "train" => cmd_train(&args),
-        "adversary" => cmd_adversary(&args),
-        "ablation" => cmd_ablation(&args),
-        "inspect" => cmd_inspect(&args),
-        "demo" => cmd_demo(),
+        "figures" => {
+            args.finish(&["fig", "trials", "seed", "k", "tmax", "threads"], false)?;
+            cmd_figures(&args)
+        }
+        "tables" => {
+            args.finish(&["table", "trials", "seed", "k", "s", "threads"], false)?;
+            cmd_tables(&args)
+        }
+        "shard" => {
+            // The job-specific flags mirror `figures` / `tables`: --tmax
+            // only makes sense for figure jobs and --s only for table
+            // jobs; whitelisting both unconditionally would silently
+            // ignore the wrong one instead of exiting 2.
+            let mut allowed =
+                vec!["fig", "table", "trials", "seed", "k", "shard-id", "num-shards", "out",
+                     "threads"];
+            if args.get("fig").is_some() {
+                allowed.push("tmax");
+            }
+            if args.get("table").is_some() {
+                allowed.push("s");
+            }
+            args.finish(&allowed, false)?;
+            cmd_shard(&args)
+        }
+        "merge" => {
+            args.finish(&[], true)?;
+            cmd_merge(&args)
+        }
+        "train" => {
+            args.finish(
+                &[
+                    "scheme", "model", "decoder", "k", "s", "steps", "delta", "lr", "backend",
+                    "engines", "seed",
+                ],
+                false,
+            )?;
+            cmd_train(&args)
+        }
+        "adversary" => {
+            args.finish(&["k", "s", "r", "seed"], false)?;
+            cmd_adversary(&args)
+        }
+        "ablation" => {
+            args.finish(&["study", "trials", "seed", "k", "s"], false)?;
+            cmd_ablation(&args)
+        }
+        "inspect" => {
+            args.finish(&["artifact"], false)?;
+            cmd_inspect(&args)
+        }
+        "demo" => {
+            args.finish(&[], false)?;
+            cmd_demo()
+        }
         "help" | "--help" | "-h" => {
-            print!("{}", HELP);
+            print!("{HELP}");
             Ok(())
         }
-        other => bail!("unknown subcommand {other:?}; try `repro help`"),
+        other => usage(format!("unknown subcommand {other:?}")),
     }
 }
 
@@ -98,7 +262,13 @@ repro — Approximate Gradient Coding via Sparse Random Graphs (2017)
 
 USAGE:
   repro figures --fig 2|3|4|5 [--trials N] [--k K] [--seed S] [--tmax T]
-  repro tables  --table thm5|thm6|thm8|thm10|thm11|thm21|thm24 [--trials N]
+                [--threads T]
+  repro tables  --table thm3|thm5|thm6|thm8|thm10|thm11|thm21|thm24
+                [--trials N] [--k K] [--s S] [--seed S] [--threads T]
+  repro shard   --fig F|--table T --shard-id I --num-shards N [--out FILE]
+                [--trials N] [--k K] [--s S] [--seed S] [--tmax T]
+                [--threads T]
+  repro merge   FILE...             # merge shard artifacts -> CSV on stdout
   repro train   [--scheme S] [--model linear|mlp] [--decoder onestep|optimal]
                 [--k K] [--s S] [--steps N] [--delta D] [--lr LR]
                 [--backend pjrt|native] [--engines E] [--seed S]
@@ -106,77 +276,166 @@ USAGE:
   repro ablation  --study rho|rbgc|lsqr|normalization [--trials N]
   repro inspect   [--artifact NAME]     # HLO stats of an AOT artifact
   repro demo
+  repro help
+
+DEFAULTS:
+  figures: --fig 2 --trials 5000 --seed 2017 --k 100 --tmax 15
+  tables:  --table thm5 --trials 2000 --seed 2017 --k 100 --s 10
+  shard:   figures/tables defaults above; --out - (stdout)
+  train:   --scheme frc --model linear --decoder onestep --k 100 --s 10
+           --steps 200 --delta 0.2 --lr 0.5 --backend pjrt --engines 2 --seed 0
+  adversary: --k 100 --s 10 --r 4k/5 --seed 2017
+  ablation:  --study rho --trials 500 --seed 2017 --k 100 --s 10
+  --threads defaults to the machine's core count (capped at 16); results
+  are bit-identical for every thread count.
+
+SHARDING:
+  `repro shard` runs one disjoint slice of a figure/table's trial range
+  and writes exact partial aggregates as a JSON artifact; `repro merge`
+  over a complete shard set reproduces the unsharded CSV bit-for-bit:
+
+    repro shard --fig 3 --shard-id 0 --num-shards 4 --out fig3_0.json
+    ... (shards 1-3, on any mix of machines) ...
+    repro merge fig3_*.json > fig3.csv
+
+Exit status: 0 on success, 1 on runtime failure, 2 on usage errors
+(unknown subcommand/flag, bad flag value).
 ";
 
 // -------------------------------------------------------------- figures
 
-fn cmd_figures(args: &Args) -> Result<()> {
-    let fig = args.usize("fig", 2)?;
-    let trials = args.usize("trials", 5000)?;
-    let seed = args.u64("seed", 2017)?;
-    let k = args.usize("k", 100)?;
-    let tmax = args.usize("tmax", 15)?;
+fn threads_flag(args: &Args) -> CliResult<Option<usize>> {
+    Ok(match args.get("threads") {
+        Some(_) => Some(args.usize("threads", 0)?.max(1)),
+        None => None,
+    })
+}
 
-    let mut cfg = FigureConfig::paper(trials, seed);
-    cfg.k = k;
-    let pts: Vec<FigPoint> = match fig {
-        2 => figures::figure2(&cfg),
-        3 => figures::figure3(&cfg),
-        4 => figures::figure4(&cfg),
-        5 => figures::figure5(&cfg, tmax),
-        other => bail!("unknown figure {other} (paper has figures 2-5)"),
-    };
-    println!("{}", FigPoint::csv_header());
-    for p in pts {
-        println!("{}", p.to_csv());
-    }
+fn cmd_figures(args: &Args) -> CliResult<()> {
+    let job = figure_job(args)?;
+    let points = job.run(Shard::full(), threads_flag(args)?)?;
+    print!("{}", points.to_csv());
     Ok(())
+}
+
+fn figure_job(args: &Args) -> CliResult<JobSpec> {
+    let fig = args.usize("fig", 2)?;
+    if !(2..=5).contains(&fig) {
+        return usage(format!("unknown figure {fig} (paper has figures 2-5)"));
+    }
+    if fig != 5 && args.get("tmax").is_some() {
+        return usage(format!(
+            "--tmax only applies to --fig 5 (figure {fig} has no iteration axis)"
+        ));
+    }
+    Ok(JobSpec {
+        kind: JobKind::Figure,
+        id: fig.to_string(),
+        trials: args.usize("trials", 5000)?,
+        seed: args.u64("seed", 2017)?,
+        k: args.usize("k", 100)?,
+        s: 0,
+        tmax: args.usize("tmax", 15)?,
+    })
 }
 
 // --------------------------------------------------------------- tables
 
-fn cmd_tables(args: &Args) -> Result<()> {
-    let table = args.get("table").unwrap_or("thm5");
-    let trials = args.usize("trials", 2000)?;
-    let seed = args.u64("seed", 2017)?;
-    let k = args.usize("k", 100)?;
-    let s = args.usize("s", 10)?;
-    let mc = MonteCarlo::new(trials, seed);
-    let deltas = [0.1, 0.25, 0.5, 0.75];
+fn cmd_tables(args: &Args) -> CliResult<()> {
+    let job = table_job(args)?;
+    let points = job.run(Shard::full(), threads_flag(args)?)?;
+    print!("{}", points.to_csv());
+    Ok(())
+}
 
-    let rows: Vec<TableRow> = match table {
-        "thm5" => tables::thm5_table(k, s, &deltas, &mc),
-        "thm6" => tables::thm6_table(k, s, &deltas, &mc),
-        "thm8" => tables::thm8_table(k, &[0, 1, 2], &[0.1, 0.25, 0.5], &mc),
-        "thm10" => tables::thm10_table(k, s, &[k / 4, k / 2, 3 * k / 4], &mc),
-        "thm11" => tables::thm11_table(seed),
-        "thm21" => tables::thm21_table(
-            Scheme::Bgc,
-            &[50, 100, 200, 400],
-            |k| ((k as f64).ln().ceil() as usize).max(2),
-            0.25,
-            &mc,
-        ),
-        "thm24" => tables::thm21_table(
-            Scheme::Rbgc,
-            &[50, 100, 200, 400],
-            |k| ((k as f64).ln().ceil() as usize).max(2),
-            0.25,
-            &mc,
-        ),
-        other => bail!("unknown table {other:?}"),
-    };
-    println!("{}", TableRow::csv_header());
-    for r in rows {
-        println!("{}", r.to_csv());
+fn table_job(args: &Args) -> CliResult<JobSpec> {
+    let table = args.get("table").unwrap_or("thm5");
+    if !TABLE_IDS.contains(&table) {
+        return usage(format!("unknown table {table:?} (one of {})", TABLE_IDS.join("|")));
     }
+    // These tables derive s internally (thm8: log-threshold, thm21/24:
+    // ln k, thm11: fixed instance); accepting --s would silently run a
+    // different sweep than the user asked for.
+    if ["thm8", "thm11", "thm21", "thm24"].contains(&table) && args.get("s").is_some() {
+        return usage(format!("--s is not accepted for --table {table} (s is derived internally)"));
+    }
+    Ok(JobSpec {
+        kind: JobKind::Table,
+        id: table.to_string(),
+        trials: args.usize("trials", 2000)?,
+        seed: args.u64("seed", 2017)?,
+        k: args.usize("k", 100)?,
+        s: args.usize("s", 10)?,
+        tmax: 0,
+    })
+}
+
+// -------------------------------------------------------- shard / merge
+
+fn cmd_shard(args: &Args) -> CliResult<()> {
+    let job = match (args.get("fig"), args.get("table")) {
+        (Some(_), Some(_)) => return usage("pass exactly one of --fig / --table, not both"),
+        (Some(_), None) => figure_job(args)?,
+        (None, Some(_)) => table_job(args)?,
+        (None, None) => return usage("`repro shard` needs --fig F or --table T"),
+    };
+    let Some(shard_id) = args.get("shard-id") else {
+        return usage("`repro shard` needs --shard-id I (0-based)");
+    };
+    let Some(num_shards) = args.get("num-shards") else {
+        return usage("`repro shard` needs --num-shards N");
+    };
+    let shard_id = match shard_id.parse::<usize>() {
+        Ok(x) => x,
+        Err(_) => return usage(format!("--shard-id {shard_id:?}: expected an integer")),
+    };
+    let num_shards = match num_shards.parse::<usize>() {
+        Ok(x) => x,
+        Err(_) => return usage(format!("--num-shards {num_shards:?}: expected an integer")),
+    };
+    let shard = match Shard::new(shard_id, num_shards) {
+        Ok(s) => s,
+        Err(e) => return usage(format!("{e}")),
+    };
+
+    let artifact = ShardArtifact::compute(&job, shard, threads_flag(args)?)?;
+    let text = artifact.to_json_string();
+    match args.get("out") {
+        Some("-") | None => print!("{text}"),
+        Some(path) => {
+            std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+            eprintln!(
+                "wrote shard {}/{} of {} {} ({} points) to {path}",
+                shard_id,
+                num_shards,
+                job.kind.name(),
+                job.id,
+                artifact.points.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_merge(args: &Args) -> CliResult<()> {
+    if args.positional.is_empty() {
+        return usage("`repro merge` needs at least one shard artifact file");
+    }
+    let mut shards = Vec::new();
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let artifact = ShardArtifact::parse(&text).with_context(|| format!("parsing {path}"))?;
+        shards.push(artifact);
+    }
+    let merged = ShardArtifact::merge(shards)?;
+    print!("{}", merged.to_csv());
     Ok(())
 }
 
 // ---------------------------------------------------------------- train
 
 /// Build the requested backend. PJRT needs `make artifacts` first.
-fn build_backend(args: &Args) -> Result<(Option<EnginePool>, Backend)> {
+fn build_backend(args: &Args) -> CliResult<(Option<EnginePool>, Backend)> {
     let which = args.get("backend").unwrap_or("pjrt");
     match which {
         "pjrt" => {
@@ -195,17 +454,18 @@ fn build_backend(args: &Args) -> Result<(Option<EnginePool>, Backend)> {
                 s_max: 10,
             },
         )),
-        other => bail!("unknown backend {other:?} (pjrt|native)"),
+        other => usage(format!("unknown backend {other:?} (pjrt|native)")),
     }
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let scheme = Scheme::parse(args.get("scheme").unwrap_or("frc"))
-        .ok_or_else(|| anyhow!("bad --scheme"))?;
+fn cmd_train(args: &Args) -> CliResult<()> {
+    let Some(scheme) = Scheme::parse(args.get("scheme").unwrap_or("frc")) else {
+        return usage("bad --scheme (frc|bgc|rbgc|regular|cyclic)");
+    };
     let model = match args.get("model").unwrap_or("linear") {
         "linear" => ModelKind::Linear,
         "mlp" => ModelKind::Mlp,
-        other => bail!("unknown model {other:?}"),
+        other => return usage(format!("unknown model {other:?} (linear|mlp)")),
     };
     let k = args.usize("k", 100)?;
     let s = args.usize("s", 10)?;
@@ -218,8 +478,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.steps = steps;
     cfg.lr = lr;
     cfg.coordinator.seed = args.u64("seed", 0)?;
-    cfg.coordinator.decoder = DecoderKind::parse(args.get("decoder").unwrap_or("onestep"))
-        .ok_or_else(|| anyhow!("bad --decoder"))?;
+    let Some(decoder) = DecoderKind::parse(args.get("decoder").unwrap_or("onestep")) else {
+        return usage("bad --decoder (onestep|optimal)");
+    };
+    cfg.coordinator.decoder = decoder;
     cfg.coordinator.latency = LatencyModel::Pareto { scale: 0.02, shape: 1.5 };
     let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
     cfg.coordinator.deadline = DeadlinePolicy::FastestR(r);
@@ -247,7 +509,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 // ------------------------------------------------------------ adversary
 
-fn cmd_adversary(args: &Args) -> Result<()> {
+fn cmd_adversary(args: &Args) -> CliResult<()> {
     let k = args.usize("k", 100)?;
     let s = args.usize("s", 10)?;
     let r = args.usize("r", (k * 4) / 5)?;
@@ -273,7 +535,7 @@ fn cmd_adversary(args: &Args) -> Result<()> {
 
 // ------------------------------------------------------------- ablation
 
-fn cmd_ablation(args: &Args) -> Result<()> {
+fn cmd_ablation(args: &Args) -> CliResult<()> {
     use gradcode::sim::ablations;
     let study = args.get("study").unwrap_or("rho");
     let trials = args.usize("trials", 500)?;
@@ -300,7 +562,7 @@ fn cmd_ablation(args: &Args) -> Result<()> {
         "normalization" => {
             ablations::normalization(Scheme::Bgc, k, s, &[0.1, 0.3, 0.5], &mc)
         }
-        other => bail!("unknown study {other:?} (rho|rbgc|lsqr|normalization)"),
+        other => return usage(format!("unknown study {other:?} (rho|rbgc|lsqr|normalization)")),
     };
     println!("{}", gradcode::sim::AblationPoint::csv_header());
     for p in pts {
@@ -311,7 +573,7 @@ fn cmd_ablation(args: &Args) -> Result<()> {
 
 // -------------------------------------------------------------- inspect
 
-fn cmd_inspect(args: &Args) -> Result<()> {
+fn cmd_inspect(args: &Args) -> CliResult<()> {
     let manifest = Manifest::load(Manifest::default_dir())?;
     let names: Vec<String> = match args.get("artifact") {
         Some(n) => vec![n.to_string()],
@@ -335,7 +597,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 
 // ----------------------------------------------------------------- demo
 
-fn cmd_demo() -> Result<()> {
+fn cmd_demo() -> CliResult<()> {
     println!("== 1. decoding error at one figure point (k=100, s=5, delta=0.3) ==");
     let mc = MonteCarlo::new(300, 1);
     let cfg = FigureConfig { k: 100, s_values: vec![5], deltas: vec![0.3], mc };

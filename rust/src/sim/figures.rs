@@ -4,8 +4,17 @@
 //! prints them as CSV, and `rust/benches/fig*` wrap them with timing.
 //! Paper protocol: k = 100, r = (1-δ)k, 5000 trials per point,
 //! ρ = k/(rs) for one-step decoding, ν = ||A||² for the Fig. 5 curves.
+//!
+//! Every figure is expressed as *(per-shard partials) ∘ (finalize)*:
+//! the `*_partials` variants run any [`Shard`] of the trial range and
+//! return [`FigPartialPoint`]s (exact partial aggregates plus the point
+//! metadata), and the classic `figure2`..`figure5` entry points are the
+//! `num_shards = 1` case. `repro shard`/`repro merge` distribute the
+//! same sweep across processes and reproduce these functions' output
+//! bit-for-bit (see [`super::shard`] and `tests/shard_parity.rs`).
 
 use super::montecarlo::MonteCarlo;
+use super::shard::{Partial, Shard};
 use crate::codes::Scheme;
 use crate::decode::{algorithmic_error_curve, DecodeWorkspace, StepSize};
 use crate::linalg::{CscMatrix, LsqrOptions};
@@ -34,6 +43,67 @@ impl FigPoint {
             self.figure, self.scheme, self.s, self.delta, self.t, self.value
         )
     }
+}
+
+/// One figure point's *partial* state: the sweep metadata plus an exact
+/// partial aggregate of this shard's trials. Finalizing a fully-merged
+/// partial yields the published [`FigPoint`]s (one per point; `t_max+1`
+/// per point for the Fig. 5 curves).
+#[derive(Clone, Debug)]
+pub struct FigPartialPoint {
+    pub figure: &'static str,
+    pub scheme: String,
+    pub s: usize,
+    pub delta: f64,
+    /// The figure's k (finalize divides the mean by it).
+    pub k: usize,
+    pub partial: Partial,
+}
+
+impl FigPartialPoint {
+    /// Metadata equality (delta compared by bits) — merge refuses to
+    /// combine partials from different sweep points.
+    pub fn same_point(&self, other: &FigPartialPoint) -> bool {
+        self.figure == other.figure
+            && self.scheme == other.scheme
+            && self.s == other.s
+            && self.delta.to_bits() == other.delta.to_bits()
+            && self.k == other.k
+            && self.partial.kind() == other.partial.kind()
+    }
+
+    /// Finalize a (fully-merged) partial into published figure points.
+    pub fn finalize(&self) -> Vec<FigPoint> {
+        match &self.partial {
+            Partial::Curve { .. } => self
+                .partial
+                .curve_values()
+                .iter()
+                .enumerate()
+                .map(|(t, &v)| FigPoint {
+                    figure: self.figure,
+                    scheme: self.scheme.clone(),
+                    s: self.s,
+                    delta: self.delta,
+                    t,
+                    value: v / self.k as f64,
+                })
+                .collect(),
+            p => vec![FigPoint {
+                figure: self.figure,
+                scheme: self.scheme.clone(),
+                s: self.s,
+                delta: self.delta,
+                t: 0,
+                value: p.value() / self.k as f64,
+            }],
+        }
+    }
+}
+
+/// Finalize a slice of fully-merged partial points.
+pub fn finalize_fig_points(points: &[FigPartialPoint]) -> Vec<FigPoint> {
+    points.iter().flat_map(|p| p.finalize()).collect()
 }
 
 /// Shared sweep configuration (paper defaults).
@@ -81,24 +151,37 @@ pub const FIG_SCHEMES: [Scheme; 3] = [Scheme::Frc, Scheme::Bgc, Scheme::RegularG
 
 /// Figure 2: average one-step error err_1(A)/k vs δ, ρ = k/(rs).
 pub fn figure2(cfg: &FigureConfig) -> Vec<FigPoint> {
-    error_sweep(cfg, "fig2", &FIG_SCHEMES, ErrorKind::OneStep)
+    finalize_fig_points(&figure2_partials(cfg, Shard::full()))
+}
+
+/// One shard of [`figure2`].
+pub fn figure2_partials(cfg: &FigureConfig, shard: Shard) -> Vec<FigPartialPoint> {
+    error_sweep_partials(cfg, "fig2", &FIG_SCHEMES, ErrorKind::OneStep, shard)
 }
 
 /// Figure 3: average optimal decoding error err(A)/k vs δ.
 pub fn figure3(cfg: &FigureConfig) -> Vec<FigPoint> {
-    error_sweep(cfg, "fig3", &FIG_SCHEMES, ErrorKind::Optimal)
+    finalize_fig_points(&figure3_partials(cfg, Shard::full()))
+}
+
+/// One shard of [`figure3`].
+pub fn figure3_partials(cfg: &FigureConfig, shard: Shard) -> Vec<FigPartialPoint> {
+    error_sweep_partials(cfg, "fig3", &FIG_SCHEMES, ErrorKind::Optimal, shard)
 }
 
 /// Figure 4: one-step vs optimal per scheme (six panels). Emitted as
 /// both error kinds per scheme; the scheme label carries the decoder.
 pub fn figure4(cfg: &FigureConfig) -> Vec<FigPoint> {
+    finalize_fig_points(&figure4_partials(cfg, Shard::full()))
+}
+
+/// One shard of [`figure4`].
+pub fn figure4_partials(cfg: &FigureConfig, shard: Shard) -> Vec<FigPartialPoint> {
     let mut out = Vec::new();
     for kind in [ErrorKind::OneStep, ErrorKind::Optimal] {
-        for p in error_sweep(cfg, "fig4", &FIG_SCHEMES, kind) {
-            out.push(FigPoint {
-                scheme: format!("{}/{}", p.scheme, kind.label()),
-                ..p
-            });
+        for mut p in error_sweep_partials(cfg, "fig4", &FIG_SCHEMES, kind, shard) {
+            p.scheme = format!("{}/{}", p.scheme, kind.label());
+            out.push(p);
         }
     }
     out
@@ -107,6 +190,11 @@ pub fn figure4(cfg: &FigureConfig) -> Vec<FigPoint> {
 /// Figure 5: algorithmic decoding error ||u_t||²/k of a BGC for
 /// δ ∈ {0.1, 0.2, 0.3, 0.5, 0.8}, ν = ||A||², t = 0..=t_max.
 pub fn figure5(cfg: &FigureConfig, t_max: usize) -> Vec<FigPoint> {
+    finalize_fig_points(&figure5_partials(cfg, t_max, Shard::full()))
+}
+
+/// One shard of [`figure5`]: a [`Partial::Curve`] per (s, δ) point.
+pub fn figure5_partials(cfg: &FigureConfig, t_max: usize, shard: Shard) -> Vec<FigPartialPoint> {
     let deltas = [0.1, 0.2, 0.3, 0.5, 0.8];
     let mut out = Vec::new();
     for &s in &cfg.s_values {
@@ -114,20 +202,19 @@ pub fn figure5(cfg: &FigureConfig, t_max: usize) -> Vec<FigPoint> {
             let r = cfg.r(delta);
             let k = cfg.k;
             let code = Scheme::Bgc.build(k, k, s);
-            let curve = cfg.mc.mean_curve_ws(t_max + 1, DecodeWorkspace::new, |ws, rng| {
-                let a = ws.redraw_submatrix(code.as_ref(), r, rng);
-                algorithmic_error_curve(a, StepSize::SpectralNormSq, t_max, rng)
-            });
-            for (t, &v) in curve.iter().enumerate() {
-                out.push(FigPoint {
-                    figure: "fig5",
-                    scheme: "BGC".to_string(),
-                    s,
-                    delta,
-                    t,
-                    value: v / k as f64,
+            let partial =
+                cfg.mc.mean_curve_partial_ws(t_max + 1, shard, DecodeWorkspace::new, |ws, rng| {
+                    let a = ws.redraw_submatrix(code.as_ref(), r, rng);
+                    algorithmic_error_curve(a, StepSize::SpectralNormSq, t_max, rng)
                 });
-            }
+            out.push(FigPartialPoint {
+                figure: "fig5",
+                scheme: "BGC".to_string(),
+                s,
+                delta,
+                k,
+                partial,
+            });
         }
     }
     out
@@ -154,14 +241,19 @@ impl ErrorKind {
 /// (`assignment_into` — no allocation even for randomized schemes),
 /// samples stragglers, and decodes without materializing A (one-step)
 /// or allocating solver state (optimal). Per-trial RNG consumption
-/// matches the historical allocating path, so seeded figure values are
-/// unchanged.
-fn error_sweep(
+/// matches the historical allocating path, so seeded *trial values*
+/// are unchanged; the final mean, however, is now the correctly-
+/// rounded exact sum (see [`super::shard::ExactSum`]), which can
+/// differ from the pre-sharding sequential sum in the last ulp. Runs
+/// only the `shard` slice of each point's trials and returns exact
+/// partials.
+fn error_sweep_partials(
     cfg: &FigureConfig,
     figure: &'static str,
     schemes: &[Scheme],
     kind: ErrorKind,
-) -> Vec<FigPoint> {
+    shard: Shard,
+) -> Vec<FigPartialPoint> {
     let opts = LsqrOptions::default();
     let mut out = Vec::new();
     for &scheme in schemes {
@@ -171,19 +263,21 @@ fn error_sweep(
                 let k = cfg.k;
                 let rho = k as f64 / (r as f64 * s as f64);
                 let code = scheme.build(k, k, s);
-                let mean = cfg.mc.mean_ws(DecodeWorkspace::new, |ws, rng| match kind {
-                    ErrorKind::OneStep => ws.onestep_redraw_trial(code.as_ref(), r, rho, rng),
-                    ErrorKind::Optimal => {
-                        ws.optimal_redraw_trial(code.as_ref(), r, &opts, None, rng)
+                let partial = cfg.mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
+                    match kind {
+                        ErrorKind::OneStep => ws.onestep_redraw_trial(code.as_ref(), r, rho, rng),
+                        ErrorKind::Optimal => {
+                            ws.optimal_redraw_trial(code.as_ref(), r, &opts, None, rng)
+                        }
                     }
                 });
-                out.push(FigPoint {
+                out.push(FigPartialPoint {
                     figure,
                     scheme: scheme.name().to_string(),
                     s,
                     delta,
-                    t: 0,
-                    value: mean / k as f64,
+                    k,
+                    partial,
                 });
             }
         }
@@ -285,6 +379,25 @@ mod tests {
             for w in vals.windows(2) {
                 assert!(w[1].1 <= w[0].1 + 1e-9, "delta {delta}: not monotone");
             }
+        }
+    }
+
+    #[test]
+    fn figure2_sharded_partials_merge_to_entry_point_bits() {
+        let cfg = tiny_cfg();
+        let whole = figure2(&cfg);
+        let mut merged = figure2_partials(&cfg, Shard::new(0, 3).unwrap());
+        for sid in 1..3 {
+            let part = figure2_partials(&cfg, Shard::new(sid, 3).unwrap());
+            for (a, b) in merged.iter_mut().zip(&part) {
+                assert!(a.same_point(b));
+                a.partial.merge(&b.partial).unwrap();
+            }
+        }
+        let merged = finalize_fig_points(&merged);
+        assert_eq!(merged.len(), whole.len());
+        for (a, b) in merged.iter().zip(&whole) {
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "{}/{}", a.scheme, a.delta);
         }
     }
 

@@ -1,12 +1,19 @@
 //! Simulation harness: the Monte-Carlo engine plus the figure/table
 //! regeneration entry points used by the CLI and the bench targets.
+//!
+//! The [`shard`] module distributes any figure/table run across
+//! processes/machines as disjoint trial ranges with exact partial
+//! aggregates; merged shards reproduce the single-process output
+//! bit-for-bit (`repro shard` / `repro merge` in the CLI).
 
 pub mod ablations;
 pub mod figures;
 pub mod montecarlo;
+pub mod shard;
 pub mod tables;
 
 pub use figures::{FigPoint, FigureConfig};
 pub use montecarlo::MonteCarlo;
 pub use ablations::AblationPoint;
+pub use shard::{JobKind, JobSpec, MergedRun, Shard, ShardArtifact};
 pub use tables::TableRow;

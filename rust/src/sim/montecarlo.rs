@@ -1,8 +1,21 @@
-//! Monte-Carlo engine: seeded, multi-threaded trial averaging.
+//! Monte-Carlo engine: seeded, multi-threaded, *shardable* trial
+//! averaging.
 //!
-//! Every figure point in the paper is "average X over 5000 trials"; this
-//! module runs those trials across threads with per-trial forked RNG
-//! streams, so results are bit-identical regardless of thread count.
+//! Every figure point in the paper is "average X over 5000 trials";
+//! this module runs those trials across threads with per-trial forked
+//! RNG streams, so results are bit-identical regardless of thread
+//! count.
+//!
+//! Since the sharded subsystem landed ([`super::shard`]), every
+//! aggregation is expressed as *(per-shard partial) ∘ (merge)*: the
+//! `*_partial*` methods run any contiguous slice of the trial range and
+//! return an exact [`Partial`] aggregate, and the classic single-
+//! process entry points below are literally the `num_shards = 1` case
+//! (`Shard::full()`) finalized in place. Partials accumulate through
+//! [`super::shard::ExactSum`], so merging the shards of *any* disjoint
+//! partition reproduces the single-process result bit-for-bit — the
+//! contract `repro shard`/`repro merge` and `tests/shard_parity.rs`
+//! rely on.
 //!
 //! The `*_ws` variants thread a per-worker workspace (typically a
 //! `decode::DecodeWorkspace`) through the trial closure, which is what
@@ -16,6 +29,7 @@
 //! *fixed* G is fine: it is a pure function of the figure point, not
 //! of trial history.)
 
+use super::shard::{ExactSum, Partial, Shard};
 use crate::util::parallel::{parallel_map, parallel_map_with};
 use crate::util::Rng;
 
@@ -37,17 +51,94 @@ impl MonteCarlo {
         self
     }
 
-    /// Mean of `f` over `trials` independent RNG streams.
-    pub fn mean(&self, f: impl Fn(&mut Rng) -> f64 + Sync) -> f64 {
+    // ------------------------------------------- shard-aware primitives
+
+    /// Partial mean of `f` over this shard's slice of the trial range.
+    /// Trial `i` always draws from `root.fork(i)` — the global trial
+    /// index, not the within-shard offset — so the set of trial values
+    /// is independent of the shard layout, and the exact-sum partial
+    /// merges to the unsharded mean bit-for-bit.
+    pub fn mean_partial_ws<W>(
+        &self,
+        shard: Shard,
+        init: impl Fn() -> W + Sync,
+        f: impl Fn(&mut W, &mut Rng) -> f64 + Sync,
+    ) -> Partial {
         let root = Rng::new(self.seed);
-        let vals = parallel_map(self.trials, self.threads, |i| {
-            let mut rng = root.fork(i as u64);
-            f(&mut rng)
+        let range = shard.range(self.trials);
+        let lo = range.start;
+        let vals = parallel_map_with(range.len(), self.threads, init, |ws, j| {
+            let mut rng = root.fork((lo + j) as u64);
+            f(ws, &mut rng)
         });
-        vals.iter().sum::<f64>() / self.trials.max(1) as f64
+        let mut sum = ExactSum::new();
+        for &v in &vals {
+            sum.add(v);
+        }
+        Partial::Mean { count: vals.len() as u64, sum }
     }
 
-    /// Mean and sample standard deviation.
+    /// [`MonteCarlo::mean_partial_ws`] without a workspace.
+    pub fn mean_partial(&self, shard: Shard, f: impl Fn(&mut Rng) -> f64 + Sync) -> Partial {
+        self.mean_partial_ws(shard, || (), |_, rng| f(rng))
+    }
+
+    /// Partial success count of a predicate over this shard's slice.
+    pub fn probability_partial_ws<W>(
+        &self,
+        shard: Shard,
+        init: impl Fn() -> W + Sync,
+        f: impl Fn(&mut W, &mut Rng) -> bool + Sync,
+    ) -> Partial {
+        let root = Rng::new(self.seed);
+        let range = shard.range(self.trials);
+        let lo = range.start;
+        let vals = parallel_map_with(range.len(), self.threads, init, |ws, j| {
+            let mut rng = root.fork((lo + j) as u64);
+            f(ws, &mut rng)
+        });
+        let hits = vals.iter().filter(|&&hit| hit).count() as u64;
+        Partial::Prob { count: vals.len() as u64, hits }
+    }
+
+    /// Partial element-wise curve sums over this shard's slice (all
+    /// trial curves must have length `len`).
+    pub fn mean_curve_partial_ws<W>(
+        &self,
+        len: usize,
+        shard: Shard,
+        init: impl Fn() -> W + Sync,
+        f: impl Fn(&mut W, &mut Rng) -> Vec<f64> + Sync,
+    ) -> Partial {
+        let root = Rng::new(self.seed);
+        let range = shard.range(self.trials);
+        let lo = range.start;
+        let curves = parallel_map_with(range.len(), self.threads, init, |ws, j| {
+            let mut rng = root.fork((lo + j) as u64);
+            let c = f(ws, &mut rng);
+            assert_eq!(c.len(), len, "trial curve length mismatch");
+            c
+        });
+        let mut sums: Vec<ExactSum> = (0..len).map(|_| ExactSum::new()).collect();
+        for c in &curves {
+            for (s, &v) in sums.iter_mut().zip(c) {
+                s.add(v);
+            }
+        }
+        Partial::Curve { count: curves.len() as u64, sums }
+    }
+
+    // ------------------------------- single-process (num_shards = 1) API
+
+    /// Mean of `f` over `trials` independent RNG streams — the
+    /// `num_shards = 1` case of [`MonteCarlo::mean_partial`].
+    pub fn mean(&self, f: impl Fn(&mut Rng) -> f64 + Sync) -> f64 {
+        self.mean_partial(Shard::full(), f).value()
+    }
+
+    /// Mean and sample standard deviation. Std needs the raw trial
+    /// values (two-pass), so this one is not expressed through the
+    /// shard partials; no figure/table entry point uses it.
     pub fn mean_std(&self, f: impl Fn(&mut Rng) -> f64 + Sync) -> (f64, f64) {
         let root = Rng::new(self.seed);
         let vals = parallel_map(self.trials, self.threads, |i| {
@@ -67,28 +158,12 @@ impl MonteCarlo {
     /// Element-wise mean of vector-valued trials (all same length) —
     /// used for the Fig. 5 curves {||u_t||^2}_t.
     pub fn mean_curve(&self, len: usize, f: impl Fn(&mut Rng) -> Vec<f64> + Sync) -> Vec<f64> {
-        let root = Rng::new(self.seed);
-        let curves = parallel_map(self.trials, self.threads, |i| {
-            let mut rng = root.fork(i as u64);
-            let c = f(&mut rng);
-            assert_eq!(c.len(), len, "trial curve length mismatch");
-            c
-        });
-        let mut mean = vec![0.0; len];
-        for c in &curves {
-            for (m, v) in mean.iter_mut().zip(c) {
-                *m += v;
-            }
-        }
-        for m in mean.iter_mut() {
-            *m /= self.trials.max(1) as f64;
-        }
-        mean
+        self.mean_curve_ws(len, || (), |_, rng| f(rng))
     }
 
     /// Fraction of trials where the predicate holds (e.g. P(err > αs)).
     pub fn probability(&self, f: impl Fn(&mut Rng) -> bool + Sync) -> f64 {
-        self.mean(|rng| if f(rng) { 1.0 } else { 0.0 })
+        self.probability_ws(|| (), |_, rng| f(rng))
     }
 
     /// [`MonteCarlo::mean`] with a per-thread workspace built by `init`
@@ -98,12 +173,7 @@ impl MonteCarlo {
         init: impl Fn() -> W + Sync,
         f: impl Fn(&mut W, &mut Rng) -> f64 + Sync,
     ) -> f64 {
-        let root = Rng::new(self.seed);
-        let vals = parallel_map_with(self.trials, self.threads, init, |ws, i| {
-            let mut rng = root.fork(i as u64);
-            f(ws, &mut rng)
-        });
-        vals.iter().sum::<f64>() / self.trials.max(1) as f64
+        self.mean_partial_ws(Shard::full(), init, f).value()
     }
 
     /// [`MonteCarlo::mean_curve`] with a per-thread workspace — the
@@ -114,23 +184,7 @@ impl MonteCarlo {
         init: impl Fn() -> W + Sync,
         f: impl Fn(&mut W, &mut Rng) -> Vec<f64> + Sync,
     ) -> Vec<f64> {
-        let root = Rng::new(self.seed);
-        let curves = parallel_map_with(self.trials, self.threads, init, |ws, i| {
-            let mut rng = root.fork(i as u64);
-            let c = f(ws, &mut rng);
-            assert_eq!(c.len(), len, "trial curve length mismatch");
-            c
-        });
-        let mut mean = vec![0.0; len];
-        for c in &curves {
-            for (m, v) in mean.iter_mut().zip(c) {
-                *m += v;
-            }
-        }
-        for m in mean.iter_mut() {
-            *m /= self.trials.max(1) as f64;
-        }
-        mean
+        self.mean_curve_partial_ws(len, Shard::full(), init, f).curve_values()
     }
 
     /// [`MonteCarlo::probability`] with a per-thread workspace.
@@ -139,7 +193,7 @@ impl MonteCarlo {
         init: impl Fn() -> W + Sync,
         f: impl Fn(&mut W, &mut Rng) -> bool + Sync,
     ) -> f64 {
-        self.mean_ws(init, |ws, rng| if f(ws, rng) { 1.0 } else { 0.0 })
+        self.probability_partial_ws(Shard::full(), init, f).value()
     }
 }
 
@@ -169,6 +223,68 @@ mod tests {
                 },
             );
             assert_eq!(ws_mean, plain, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn sharded_mean_merges_to_single_process_bits() {
+        let mc = MonteCarlo { trials: 501, seed: 11, threads: 4 };
+        let whole = mc.mean_ws(|| (), |_, rng| rng.f64() - 0.5);
+        for num_shards in [1usize, 2, 3, 7] {
+            let mut merged: Option<Partial> = None;
+            for sid in 0..num_shards {
+                let shard = Shard::new(sid, num_shards).unwrap();
+                // Vary thread counts per shard: must not matter.
+                let mc_s = MonteCarlo { threads: 1 + sid, ..mc };
+                let part = mc_s.mean_partial_ws(shard, || (), |_, rng| rng.f64() - 0.5);
+                match merged.as_mut() {
+                    None => merged = Some(part),
+                    Some(m) => m.merge(&part).unwrap(),
+                }
+            }
+            let merged = merged.unwrap();
+            assert_eq!(merged.mc_trials(), Some(501));
+            assert_eq!(
+                merged.value().to_bits(),
+                whole.to_bits(),
+                "num_shards = {num_shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_probability_and_curve_merge_to_single_process_bits() {
+        let mc = MonteCarlo { trials: 300, seed: 12, threads: 3 };
+        let p_whole = mc.probability_ws(|| (), |_, rng| rng.bernoulli(0.3));
+        let c_whole = mc.mean_curve_ws(2, || (), |_, rng| {
+            let x = rng.f64();
+            vec![x, x * x]
+        });
+        for num_shards in [2usize, 5] {
+            let mut p: Option<Partial> = None;
+            let mut c: Option<Partial> = None;
+            for sid in 0..num_shards {
+                let shard = Shard::new(sid, num_shards).unwrap();
+                let pp = mc.probability_partial_ws(shard, || (), |_, rng| rng.bernoulli(0.3));
+                let cc = mc.mean_curve_partial_ws(2, shard, || (), |_, rng| {
+                    let x = rng.f64();
+                    vec![x, x * x]
+                });
+                match p.as_mut() {
+                    None => p = Some(pp),
+                    Some(m) => m.merge(&pp).unwrap(),
+                }
+                match c.as_mut() {
+                    None => c = Some(cc),
+                    Some(m) => m.merge(&cc).unwrap(),
+                }
+            }
+            assert_eq!(p.unwrap().value().to_bits(), p_whole.to_bits());
+            let c_merged = c.unwrap().curve_values();
+            assert_eq!(c_merged.len(), c_whole.len());
+            for (a, b) in c_merged.iter().zip(&c_whole) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
     }
 

@@ -1,0 +1,1126 @@
+//! Sharded Monte-Carlo: split a trial-averaged run across processes /
+//! machines and merge the pieces back **bit-for-bit**.
+//!
+//! Every figure and table in the paper is a "mean over N trials"
+//! estimate. [`super::montecarlo::MonteCarlo`] already forks one RNG
+//! stream per *trial index* (not per thread), so trial `i` produces the
+//! same value no matter which thread — or, with this module, which
+//! **process** — runs it. Sharding therefore only has to solve the
+//! aggregation problem: floating-point addition is not associative, so
+//! naive per-shard sums would drift by an ulp depending on where the
+//! shard boundaries fall.
+//!
+//! The fix is [`ExactSum`], an exact accumulator (Shewchuk's expansion
+//! algorithm, the same one behind Python's `math.fsum`): it represents
+//! the *exact real-number* running sum as a list of non-overlapping
+//! f64 partials, merges are exact, and [`ExactSum::round`] produces the
+//! correctly-rounded f64 of the true sum. Correct rounding is a
+//! function of the exact value alone, so **any partition of the trials
+//! merges to the same bits** — the single-process entry points are
+//! literally the `num_shards = 1` case of the sharded path (pinned by
+//! `tests/shard_parity.rs` and the CI fan-out job).
+//!
+//! # The pieces
+//!
+//! * [`Shard`] — which contiguous slice of the trial range this process
+//!   owns ([`Shard::range`] partitions `0..trials` for any shard count).
+//! * [`Partial`] — an exact partial aggregate of one figure/table
+//!   point: count + [`ExactSum`] for means, success counts for
+//!   probabilities, per-element sums for curves, and a replicated
+//!   `Exact` value for deterministic (non-Monte-Carlo) rows.
+//! * [`JobSpec`] — a figure/table run identified by (kind, id, trials,
+//!   seed, k, s, tmax); [`JobSpec::run`] executes any shard of it.
+//! * [`ShardArtifact`] — the on-disk JSON form of one shard's partials
+//!   (`repro shard --out FILE`); [`ShardArtifact::merge`] validates the
+//!   partition (all shards present, same job, exactly once) and folds
+//!   the partials back into the unsharded result.
+//!
+//! All f64 payloads in the artifact are serialized as **hex bit
+//! patterns** (e.g. `"3fd0000000000000"` for 0.25), so a JSON round
+//! trip through [`crate::util::Json`] is exact by construction — no
+//! shortest-float printing subtleties involved.
+//!
+//! # Example: in-process shard/merge parity
+//!
+//! ```
+//! use gradcode::sim::shard::{Partial, Shard};
+//! use gradcode::sim::MonteCarlo;
+//!
+//! let mc = MonteCarlo::new(500, 7);
+//! let whole = mc.mean(|rng| rng.f64());
+//!
+//! // The same run, split into 3 shards and merged.
+//! let mut merged: Option<Partial> = None;
+//! for sid in 0..3 {
+//!     let shard = Shard::new(sid, 3).unwrap();
+//!     let part = mc.mean_partial(shard, |rng| rng.f64());
+//!     match merged.as_mut() {
+//!         None => merged = Some(part),
+//!         Some(m) => m.merge(&part).unwrap(),
+//!     }
+//! }
+//! assert_eq!(merged.unwrap().value().to_bits(), whole.to_bits());
+//! ```
+
+use std::ops::Range;
+
+use anyhow::{bail, Context, Result};
+
+use super::figures::{self, FigPartialPoint, FigureConfig};
+use super::montecarlo::MonteCarlo;
+use super::tables::{self, RowTemplate, TablePartialPoint};
+use crate::codes::Scheme;
+use crate::util::Json;
+
+// ------------------------------------------------------------ ExactSum
+
+/// Exact f64 accumulator: Shewchuk's non-overlapping expansion, as in
+/// Python's `math.fsum`. The list of partials represents the exact
+/// real-number sum of everything added so far, so accumulation and
+/// [`ExactSum::merge`] are associative and commutative *exactly*, and
+/// [`ExactSum::round`] — the correctly-rounded f64 of the true sum —
+/// does not depend on how the inputs were grouped. This is the property
+/// the shard/merge bit-parity guarantee rests on.
+///
+/// Inputs must be finite (the Monte-Carlo trial values always are);
+/// non-finite inputs poison the expansion like they would a plain sum.
+///
+/// ```
+/// use gradcode::sim::shard::ExactSum;
+/// let mut s = ExactSum::new();
+/// for x in [1e100, 1.0, -1e100] {
+///     s.add(x);
+/// }
+/// // A plain left-to-right f64 sum would return 0.0 here.
+/// assert_eq!(s.round(), 1.0);
+/// ```
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ExactSum {
+    /// Non-overlapping partials in increasing magnitude order.
+    partials: Vec<f64>,
+}
+
+impl ExactSum {
+    pub fn new() -> Self {
+        ExactSum { partials: Vec::new() }
+    }
+
+    /// Add one value, maintaining the non-overlapping invariant via a
+    /// chain of exact two-sums.
+    pub fn add(&mut self, mut x: f64) {
+        let mut i = 0;
+        for j in 0..self.partials.len() {
+            let mut y = self.partials[j];
+            if x.abs() < y.abs() {
+                std::mem::swap(&mut x, &mut y);
+            }
+            let hi = x + y;
+            let lo = y - (hi - x);
+            if lo != 0.0 {
+                self.partials[i] = lo;
+                i += 1;
+            }
+            x = hi;
+        }
+        self.partials.truncate(i);
+        self.partials.push(x);
+    }
+
+    /// Fold another accumulator in. Exact: the merged expansion
+    /// represents the sum of both exact values, so grouping is
+    /// invisible to [`ExactSum::round`].
+    pub fn merge(&mut self, other: &ExactSum) {
+        for &p in &other.partials {
+            self.add(p);
+        }
+    }
+
+    /// The correctly-rounded (round-to-nearest-even) f64 of the exact
+    /// sum. Ported from CPython's `math.fsum` final rounding, including
+    /// the half-ulp tie correction across partials.
+    pub fn round(&self) -> f64 {
+        let p = &self.partials;
+        let mut n = p.len();
+        let mut hi = 0.0;
+        if n > 0 {
+            n -= 1;
+            hi = p[n];
+            let mut lo = 0.0;
+            while n > 0 {
+                let x = hi;
+                n -= 1;
+                let y = p[n];
+                hi = x + y;
+                let yr = hi - x;
+                lo = y - yr;
+                if lo != 0.0 {
+                    break;
+                }
+            }
+            // Make round-half-even correct when the discarded tail
+            // is exactly half an ulp and points the same way as the
+            // next-lower partial.
+            if n > 0 && ((lo < 0.0 && p[n - 1] < 0.0) || (lo > 0.0 && p[n - 1] > 0.0)) {
+                let y = lo * 2.0;
+                let x = hi + y;
+                if y == x - hi {
+                    hi = x;
+                }
+            }
+        }
+        hi
+    }
+
+    /// The raw expansion (read-only; for serialization and tests).
+    pub fn partials(&self) -> &[f64] {
+        &self.partials
+    }
+
+    /// Rebuild from serialized partials. Values are re-accumulated, so
+    /// the invariant holds even if the input list was not a valid
+    /// expansion; the represented exact value is preserved either way.
+    pub fn from_partials(values: &[f64]) -> Self {
+        let mut s = ExactSum::new();
+        for &v in values {
+            s.add(v);
+        }
+        s
+    }
+}
+
+// --------------------------------------------------------------- Shard
+
+/// One slice of a sharded Monte-Carlo run: `shard_id` of `num_shards`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub shard_id: usize,
+    pub num_shards: usize,
+}
+
+impl Shard {
+    /// The whole run as a single shard — what every single-process
+    /// entry point uses.
+    pub fn full() -> Shard {
+        Shard { shard_id: 0, num_shards: 1 }
+    }
+
+    pub fn new(shard_id: usize, num_shards: usize) -> Result<Shard> {
+        if num_shards == 0 {
+            bail!("num_shards must be >= 1");
+        }
+        if shard_id >= num_shards {
+            bail!("shard_id {shard_id} out of range for num_shards {num_shards}");
+        }
+        Ok(Shard { shard_id, num_shards })
+    }
+
+    /// This shard's contiguous trial range. For every `num_shards` the
+    /// ranges `[i * trials / N, (i+1) * trials / N)` are disjoint,
+    /// ordered, and cover `0..trials` exactly; sizes differ by at most
+    /// one trial.
+    ///
+    /// ```
+    /// use gradcode::sim::shard::Shard;
+    /// let covered: usize = (0..7)
+    ///     .map(|i| Shard::new(i, 7).unwrap().range(100).len())
+    ///     .sum();
+    /// assert_eq!(covered, 100);
+    /// ```
+    pub fn range(&self, trials: usize) -> Range<usize> {
+        let lo = trials * self.shard_id / self.num_shards;
+        let hi = trials * (self.shard_id + 1) / self.num_shards;
+        lo..hi
+    }
+}
+
+// ------------------------------------------------------------- Partial
+
+/// An exact partial aggregate of one figure/table point over a shard's
+/// trial range. Merging partials from a disjoint trial partition and
+/// finalizing gives bit-identical results to the unsharded run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Partial {
+    /// Partial mean: trial count and exact sum of trial values.
+    Mean { count: u64, sum: ExactSum },
+    /// Partial probability: trial count and number of successes.
+    Prob { count: u64, hits: u64 },
+    /// Partial element-wise curve mean (Fig. 5's error trajectories).
+    Curve { count: u64, sums: Vec<ExactSum> },
+    /// A deterministic (non-Monte-Carlo) value, recomputed identically
+    /// by every shard; merge asserts bit-equality as an integrity check.
+    Exact { value: f64 },
+}
+
+impl Partial {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Partial::Mean { .. } => "mean",
+            Partial::Prob { .. } => "prob",
+            Partial::Curve { .. } => "curve",
+            Partial::Exact { .. } => "exact",
+        }
+    }
+
+    /// Trials aggregated so far (None for deterministic values).
+    pub fn mc_trials(&self) -> Option<u64> {
+        match self {
+            Partial::Mean { count, .. }
+            | Partial::Prob { count, .. }
+            | Partial::Curve { count, .. } => Some(*count),
+            Partial::Exact { .. } => None,
+        }
+    }
+
+    /// Fold another shard's partial for the same point into this one.
+    pub fn merge(&mut self, other: &Partial) -> Result<()> {
+        match (self, other) {
+            (Partial::Mean { count, sum }, Partial::Mean { count: c2, sum: s2 }) => {
+                *count += c2;
+                sum.merge(s2);
+                Ok(())
+            }
+            (Partial::Prob { count, hits }, Partial::Prob { count: c2, hits: h2 }) => {
+                *count += c2;
+                *hits += h2;
+                Ok(())
+            }
+            (Partial::Curve { count, sums }, Partial::Curve { count: c2, sums: s2 }) => {
+                if sums.len() != s2.len() {
+                    bail!("curve length mismatch: {} vs {}", sums.len(), s2.len());
+                }
+                *count += c2;
+                for (a, b) in sums.iter_mut().zip(s2) {
+                    a.merge(b);
+                }
+                Ok(())
+            }
+            (Partial::Exact { value }, Partial::Exact { value: v2 }) => {
+                if value.to_bits() != v2.to_bits() {
+                    bail!(
+                        "deterministic value disagrees across shards: {value:?} vs {v2:?} \
+                         (artifacts from different code versions or corrupted?)"
+                    );
+                }
+                Ok(())
+            }
+            (a, b) => bail!("cannot merge partial kind {:?} with {:?}", a.kind(), b.kind()),
+        }
+    }
+
+    /// Finalized scalar statistic: mean, probability, or the exact
+    /// value. `Curve` partials have no scalar value and return NaN —
+    /// use [`Partial::curve_values`] for those.
+    pub fn value(&self) -> f64 {
+        match self {
+            Partial::Mean { count, sum } => sum.round() / (*count).max(1) as f64,
+            Partial::Prob { count, hits } => *hits as f64 / (*count).max(1) as f64,
+            Partial::Exact { value } => *value,
+            Partial::Curve { .. } => f64::NAN,
+        }
+    }
+
+    /// Finalized element-wise curve means (empty for scalar kinds).
+    pub fn curve_values(&self) -> Vec<f64> {
+        match self {
+            Partial::Curve { count, sums } => {
+                let n = (*count).max(1) as f64;
+                sums.iter().map(|s| s.round() / n).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------- post-maps
+
+/// Deterministic transform applied to a merged scalar statistic at
+/// finalize time (it must run *after* merging, not per shard, so it is
+/// recorded in the artifact instead of being baked into the partial).
+#[derive(Clone, Copy, Debug)]
+pub enum PostMap {
+    Identity,
+    /// `x ↦ sqrt(x · scale)` — the thm21/thm24 implied-constant fit
+    /// `C = sqrt(mean_err1 · (1-δ) s / k)`.
+    SqrtScale { scale: f64 },
+}
+
+impl PostMap {
+    pub fn apply(&self, x: f64) -> f64 {
+        match self {
+            PostMap::Identity => x,
+            PostMap::SqrtScale { scale } => (x * scale).sqrt(),
+        }
+    }
+
+    /// Bit-level equality (scale compared by bits, so NaN-safe).
+    pub fn bits_eq(&self, other: &PostMap) -> bool {
+        match (self, other) {
+            (PostMap::Identity, PostMap::Identity) => true,
+            (PostMap::SqrtScale { scale: a }, PostMap::SqrtScale { scale: b }) => {
+                a.to_bits() == b.to_bits()
+            }
+            _ => false,
+        }
+    }
+}
+
+// ------------------------------------------------------------- JobSpec
+
+/// What kind of run a shard artifact belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    Figure,
+    Table,
+}
+
+impl JobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Figure => "figure",
+            JobKind::Table => "table",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobKind> {
+        match s {
+            "figure" => Ok(JobKind::Figure),
+            "table" => Ok(JobKind::Table),
+            other => bail!("unknown job kind {other:?} (figure|table)"),
+        }
+    }
+}
+
+/// A fully-specified figure/table run: everything that determines the
+/// output bits. Two artifacts merge only if their jobs are identical.
+///
+/// `id` is `"2".."5"` for figures and `"thm5".."thm24"` for tables;
+/// `s` is table-only (0 for figures, which sweep the paper's s values)
+/// and `tmax` is Figure-5-only (0 otherwise).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobSpec {
+    pub kind: JobKind,
+    pub id: String,
+    pub trials: usize,
+    pub seed: u64,
+    pub k: usize,
+    pub s: usize,
+    pub tmax: usize,
+}
+
+impl JobSpec {
+    /// Execute one shard of this job. `threads` overrides the intra-
+    /// process worker count (results are thread-count invariant; this
+    /// only changes wall-clock). The full run is `shard = Shard::full()`
+    /// — exactly what `repro figures` / `repro tables` execute.
+    pub fn run(&self, shard: Shard, threads: Option<usize>) -> Result<ShardPoints> {
+        let mut mc = MonteCarlo::new(self.trials, self.seed);
+        if let Some(t) = threads {
+            mc = mc.with_threads(t);
+        }
+        match self.kind {
+            JobKind::Figure => {
+                let mut cfg = FigureConfig::paper(self.trials, self.seed);
+                cfg.k = self.k;
+                cfg.mc = mc;
+                let pts = match self.id.as_str() {
+                    "2" => figures::figure2_partials(&cfg, shard),
+                    "3" => figures::figure3_partials(&cfg, shard),
+                    "4" => figures::figure4_partials(&cfg, shard),
+                    "5" => figures::figure5_partials(&cfg, self.tmax, shard),
+                    other => bail!("unknown figure {other:?} (paper has figures 2-5)"),
+                };
+                Ok(ShardPoints::Fig(pts))
+            }
+            JobKind::Table => {
+                let (k, s) = (self.k, self.s);
+                let deltas = [0.1, 0.25, 0.5, 0.75];
+                let pts = match self.id.as_str() {
+                    "thm3" => tables::thm3_partials(&[k / 2, k, 2 * k], s, &mc, shard),
+                    "thm5" => tables::thm5_partials(k, s, &deltas, &mc, shard),
+                    "thm6" => tables::thm6_partials(k, s, &deltas, &mc, shard),
+                    "thm8" => tables::thm8_partials(k, &[0, 1, 2], &[0.1, 0.25, 0.5], &mc, shard),
+                    "thm10" => {
+                        tables::thm10_partials(k, s, &[k / 4, k / 2, 3 * k / 4], &mc, shard)
+                    }
+                    "thm11" => tables::thm11_partials(self.seed),
+                    "thm21" => tables::thm21_partials(
+                        Scheme::Bgc,
+                        &[50, 100, 200, 400],
+                        |k| ((k as f64).ln().ceil() as usize).max(2),
+                        0.25,
+                        &mc,
+                        shard,
+                    ),
+                    "thm24" => tables::thm21_partials(
+                        Scheme::Rbgc,
+                        &[50, 100, 200, 400],
+                        |k| ((k as f64).ln().ceil() as usize).max(2),
+                        0.25,
+                        &mc,
+                        shard,
+                    ),
+                    other => bail!("unknown table {other:?}"),
+                };
+                Ok(ShardPoints::Table(pts))
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- ShardPoints
+
+/// The per-point partials of one shard (or of a merged run).
+#[derive(Clone, Debug)]
+pub enum ShardPoints {
+    Fig(Vec<FigPartialPoint>),
+    Table(Vec<TablePartialPoint>),
+}
+
+impl ShardPoints {
+    pub fn len(&self) -> usize {
+        match self {
+            ShardPoints::Fig(v) => v.len(),
+            ShardPoints::Table(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fold another shard's points in. Points must line up exactly
+    /// (same order, same metadata) — they do by construction, since
+    /// every shard enumerates the same sweep.
+    pub fn merge_from(&mut self, other: &ShardPoints) -> Result<()> {
+        match (self, other) {
+            (ShardPoints::Fig(a), ShardPoints::Fig(b)) => {
+                if a.len() != b.len() {
+                    bail!("point count mismatch: {} vs {}", a.len(), b.len());
+                }
+                for (i, (pa, pb)) in a.iter_mut().zip(b).enumerate() {
+                    if !pa.same_point(pb) {
+                        bail!("figure point {i} metadata mismatch across shards");
+                    }
+                    pa.partial.merge(&pb.partial).with_context(|| format!("figure point {i}"))?;
+                }
+                Ok(())
+            }
+            (ShardPoints::Table(a), ShardPoints::Table(b)) => {
+                if a.len() != b.len() {
+                    bail!("point count mismatch: {} vs {}", a.len(), b.len());
+                }
+                for (i, (pa, pb)) in a.iter_mut().zip(b).enumerate() {
+                    if !pa.same_point(pb) {
+                        bail!("table point {i} metadata mismatch across shards");
+                    }
+                    pa.partial.merge(&pb.partial).with_context(|| format!("table point {i}"))?;
+                }
+                Ok(())
+            }
+            _ => bail!("cannot merge figure points with table points"),
+        }
+    }
+
+    /// Verify every Monte-Carlo point aggregated exactly `trials`
+    /// trials (i.e. the shard partition was complete and disjoint).
+    pub fn check_trials(&self, trials: usize) -> Result<()> {
+        let check = |i: usize, got: Option<u64>| -> Result<()> {
+            if let Some(count) = got {
+                if count != trials as u64 {
+                    bail!("point {i} aggregated {count} trials, expected {trials}");
+                }
+            }
+            Ok(())
+        };
+        match self {
+            ShardPoints::Fig(v) => {
+                for (i, p) in v.iter().enumerate() {
+                    check(i, p.partial.mc_trials())?;
+                }
+            }
+            ShardPoints::Table(v) => {
+                for (i, p) in v.iter().enumerate() {
+                    check(i, p.partial.mc_trials())?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Finalize to the exact CSV the unsharded CLI path prints
+    /// (header + one line per output row, trailing newline).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        match self {
+            ShardPoints::Fig(v) => {
+                out.push_str(figures::FigPoint::csv_header());
+                out.push('\n');
+                for p in v {
+                    for fp in p.finalize() {
+                        out.push_str(&fp.to_csv());
+                        out.push('\n');
+                    }
+                }
+            }
+            ShardPoints::Table(v) => {
+                out.push_str(tables::TableRow::csv_header());
+                out.push('\n');
+                for p in v {
+                    for row in p.finalize() {
+                        out.push_str(&row.to_csv());
+                        out.push('\n');
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------- ShardArtifact
+
+/// On-disk format tag; bump on incompatible schema changes.
+pub const SHARD_FORMAT: &str = "gradcode-shard/v1";
+
+/// One shard's serialized result: the job identity, which slice this
+/// is, and the per-point partial aggregates.
+#[derive(Clone, Debug)]
+pub struct ShardArtifact {
+    pub job: JobSpec,
+    pub shard_id: usize,
+    pub num_shards: usize,
+    pub points: ShardPoints,
+}
+
+/// A validated, fully-merged run ready to emit CSV.
+#[derive(Clone, Debug)]
+pub struct MergedRun {
+    pub job: JobSpec,
+    pub points: ShardPoints,
+}
+
+impl MergedRun {
+    pub fn to_csv(&self) -> String {
+        self.points.to_csv()
+    }
+}
+
+impl ShardArtifact {
+    /// Run one shard of `job` and package the result.
+    pub fn compute(job: &JobSpec, shard: Shard, threads: Option<usize>) -> Result<ShardArtifact> {
+        let points = job.run(shard, threads)?;
+        Ok(ShardArtifact {
+            job: job.clone(),
+            shard_id: shard.shard_id,
+            num_shards: shard.num_shards,
+            points,
+        })
+    }
+
+    /// Validate a set of shard artifacts and fold them into the
+    /// unsharded result: same job everywhere, shard ids covering
+    /// `0..num_shards` exactly once, metadata aligned pointwise, and
+    /// every Monte-Carlo point accounting for exactly `job.trials`
+    /// trials.
+    pub fn merge(mut shards: Vec<ShardArtifact>) -> Result<MergedRun> {
+        if shards.is_empty() {
+            bail!("no shard artifacts to merge");
+        }
+        shards.sort_by_key(|s| s.shard_id);
+        let num_shards = shards[0].num_shards;
+        let ids: Vec<usize> = shards.iter().map(|s| s.shard_id).collect();
+        let expected: Vec<usize> = (0..num_shards).collect();
+        if ids != expected {
+            bail!(
+                "shard artifacts must cover ids 0..{num_shards} exactly once, got {ids:?} \
+                 (missing or duplicate shards?)"
+            );
+        }
+        for s in &shards[1..] {
+            if s.num_shards != num_shards {
+                bail!("num_shards disagrees: {} vs {}", s.num_shards, num_shards);
+            }
+            if s.job != shards[0].job {
+                bail!(
+                    "artifacts come from different jobs: {:?} vs {:?}",
+                    s.job,
+                    shards[0].job
+                );
+            }
+        }
+        let mut iter = shards.into_iter();
+        let first = iter.next().expect("non-empty");
+        let job = first.job;
+        let mut points = first.points;
+        for s in iter {
+            points
+                .merge_from(&s.points)
+                .with_context(|| format!("merging shard {}", s.shard_id))?;
+        }
+        points.check_trials(job.trials)?;
+        Ok(MergedRun { job, points })
+    }
+
+    /// Serialize to the artifact JSON (pretty-printed for readable
+    /// diffs; all f64 payloads as hex bit patterns).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().write_pretty()
+    }
+
+    /// Parse an artifact file's contents.
+    pub fn parse(text: &str) -> Result<ShardArtifact> {
+        Self::from_json(&Json::parse(text).context("invalid JSON")?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let points = match &self.points {
+            ShardPoints::Fig(v) => Json::Arr(v.iter().map(fig_point_to_json).collect()),
+            ShardPoints::Table(v) => Json::Arr(v.iter().map(table_point_to_json).collect()),
+        };
+        obj(vec![
+            ("format", Json::Str(SHARD_FORMAT.to_string())),
+            ("job", job_to_json(&self.job)),
+            ("shard_id", Json::Num(self.shard_id as f64)),
+            ("num_shards", Json::Num(self.num_shards as f64)),
+            ("points", points),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardArtifact> {
+        let format = j.get("format")?.as_str()?;
+        if format != SHARD_FORMAT {
+            bail!("unsupported artifact format {format:?} (expected {SHARD_FORMAT:?})");
+        }
+        let job = job_from_json(j.get("job")?).context("job")?;
+        let shard_id = j.get("shard_id")?.as_usize()?;
+        let num_shards = j.get("num_shards")?.as_usize()?;
+        Shard::new(shard_id, num_shards).context("shard header")?;
+        let raw_points = j.get("points")?.as_arr()?;
+        let points = match job.kind {
+            JobKind::Figure => ShardPoints::Fig(
+                raw_points
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| fig_point_from_json(p).with_context(|| format!("point {i}")))
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            JobKind::Table => ShardPoints::Table(
+                raw_points
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| table_point_from_json(p).with_context(|| format!("point {i}")))
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+        };
+        Ok(ShardArtifact { job, shard_id, num_shards, points })
+    }
+}
+
+// ------------------------------------------------- JSON (de)serialization
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// f64 → exact hex bit pattern (`"3fd0000000000000"`); the inverse of
+/// [`f64_from_bits_json`]. Used for every f64 payload in the artifact
+/// so round trips are exact for all values including NaN and -0.0.
+fn f64_to_bits_json(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn f64_from_bits_json(j: &Json) -> Result<f64> {
+    let s = j.as_str()?;
+    let bits = u64::from_str_radix(s, 16).with_context(|| format!("bad f64 bits {s:?}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn exact_sum_to_json(s: &ExactSum) -> Json {
+    Json::Arr(s.partials().iter().map(|&p| f64_to_bits_json(p)).collect())
+}
+
+fn exact_sum_from_json(j: &Json) -> Result<ExactSum> {
+    let vals = j
+        .as_arr()?
+        .iter()
+        .map(f64_from_bits_json)
+        .collect::<Result<Vec<f64>>>()?;
+    Ok(ExactSum::from_partials(&vals))
+}
+
+fn partial_to_json(p: &Partial) -> Json {
+    match p {
+        Partial::Mean { count, sum } => obj(vec![
+            ("kind", Json::Str("mean".into())),
+            ("count", Json::Num(*count as f64)),
+            ("sum", exact_sum_to_json(sum)),
+        ]),
+        Partial::Prob { count, hits } => obj(vec![
+            ("kind", Json::Str("prob".into())),
+            ("count", Json::Num(*count as f64)),
+            ("hits", Json::Num(*hits as f64)),
+        ]),
+        Partial::Curve { count, sums } => obj(vec![
+            ("kind", Json::Str("curve".into())),
+            ("count", Json::Num(*count as f64)),
+            ("sums", Json::Arr(sums.iter().map(exact_sum_to_json).collect())),
+        ]),
+        Partial::Exact { value } => obj(vec![
+            ("kind", Json::Str("exact".into())),
+            ("value", f64_to_bits_json(*value)),
+        ]),
+    }
+}
+
+fn partial_from_json(j: &Json) -> Result<Partial> {
+    match j.get("kind")?.as_str()? {
+        "mean" => Ok(Partial::Mean {
+            count: j.get("count")?.as_usize()? as u64,
+            sum: exact_sum_from_json(j.get("sum")?)?,
+        }),
+        "prob" => Ok(Partial::Prob {
+            count: j.get("count")?.as_usize()? as u64,
+            hits: j.get("hits")?.as_usize()? as u64,
+        }),
+        "curve" => Ok(Partial::Curve {
+            count: j.get("count")?.as_usize()? as u64,
+            sums: j
+                .get("sums")?
+                .as_arr()?
+                .iter()
+                .map(exact_sum_from_json)
+                .collect::<Result<Vec<_>>>()?,
+        }),
+        "exact" => Ok(Partial::Exact { value: f64_from_bits_json(j.get("value")?)? }),
+        other => bail!("unknown partial kind {other:?}"),
+    }
+}
+
+fn post_to_json(p: &PostMap) -> Json {
+    match p {
+        PostMap::Identity => obj(vec![("kind", Json::Str("identity".into()))]),
+        PostMap::SqrtScale { scale } => obj(vec![
+            ("kind", Json::Str("sqrt_scale".into())),
+            ("scale", f64_to_bits_json(*scale)),
+        ]),
+    }
+}
+
+fn post_from_json(j: &Json) -> Result<PostMap> {
+    match j.get("kind")?.as_str()? {
+        "identity" => Ok(PostMap::Identity),
+        "sqrt_scale" => Ok(PostMap::SqrtScale { scale: f64_from_bits_json(j.get("scale")?)? }),
+        other => bail!("unknown post-map kind {other:?}"),
+    }
+}
+
+fn job_to_json(job: &JobSpec) -> Json {
+    obj(vec![
+        ("kind", Json::Str(job.kind.name().to_string())),
+        ("id", Json::Str(job.id.clone())),
+        ("trials", Json::Num(job.trials as f64)),
+        // u64 seeds can exceed f64's exact-integer range; keep decimal text.
+        ("seed", Json::Str(job.seed.to_string())),
+        ("k", Json::Num(job.k as f64)),
+        ("s", Json::Num(job.s as f64)),
+        ("tmax", Json::Num(job.tmax as f64)),
+    ])
+}
+
+fn job_from_json(j: &Json) -> Result<JobSpec> {
+    Ok(JobSpec {
+        kind: JobKind::parse(j.get("kind")?.as_str()?)?,
+        id: j.get("id")?.as_str()?.to_string(),
+        trials: j.get("trials")?.as_usize()?,
+        seed: j.get("seed")?.as_str()?.parse::<u64>().context("seed")?,
+        k: j.get("k")?.as_usize()?,
+        s: j.get("s")?.as_usize()?,
+        tmax: j.get("tmax")?.as_usize()?,
+    })
+}
+
+/// Every figure id the artifact format knows. Single registry: the
+/// CLI validates against it and deserialization interns through it, so
+/// a new figure cannot be producible-but-unmergeable.
+pub const FIGURE_IDS: [&str; 4] = ["fig2", "fig3", "fig4", "fig5"];
+
+/// Every table id the artifact format and the CLI accept — the single
+/// registry `repro tables`/`repro shard` whitelist from and that
+/// artifact deserialization interns against (keep [`JobSpec::run`]'s
+/// match in step when extending it).
+pub const TABLE_IDS: [&str; 8] =
+    ["thm3", "thm5", "thm6", "thm8", "thm10", "thm11", "thm21", "thm24"];
+
+/// Intern a figure id to the `&'static str` `FigPoint.figure` carries.
+fn intern_figure(name: &str) -> Result<&'static str> {
+    FIGURE_IDS
+        .iter()
+        .find(|&&id| id == name)
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("unknown figure id {name:?} in artifact"))
+}
+
+/// Same interning for table ids, against [`TABLE_IDS`].
+fn intern_table(name: &str) -> Result<&'static str> {
+    TABLE_IDS
+        .iter()
+        .find(|&&id| id == name)
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("unknown table id {name:?} in artifact"))
+}
+
+fn fig_point_to_json(p: &FigPartialPoint) -> Json {
+    obj(vec![
+        ("figure", Json::Str(p.figure.to_string())),
+        ("scheme", Json::Str(p.scheme.clone())),
+        ("s", Json::Num(p.s as f64)),
+        ("delta", f64_to_bits_json(p.delta)),
+        ("k", Json::Num(p.k as f64)),
+        ("partial", partial_to_json(&p.partial)),
+    ])
+}
+
+fn fig_point_from_json(j: &Json) -> Result<FigPartialPoint> {
+    Ok(FigPartialPoint {
+        figure: intern_figure(j.get("figure")?.as_str()?)?,
+        scheme: j.get("scheme")?.as_str()?.to_string(),
+        s: j.get("s")?.as_usize()?,
+        delta: f64_from_bits_json(j.get("delta")?)?,
+        k: j.get("k")?.as_usize()?,
+        partial: partial_from_json(j.get("partial")?)?,
+    })
+}
+
+fn table_point_to_json(p: &TablePartialPoint) -> Json {
+    let rows = p
+        .rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("table", Json::Str(r.table.to_string())),
+                ("label", Json::Str(r.label.clone())),
+                ("expected", f64_to_bits_json(r.expected)),
+                ("note", Json::Str(r.note.clone())),
+                ("post", post_to_json(&r.post)),
+            ])
+        })
+        .collect();
+    obj(vec![("rows", Json::Arr(rows)), ("partial", partial_to_json(&p.partial))])
+}
+
+fn table_point_from_json(j: &Json) -> Result<TablePartialPoint> {
+    let rows = j
+        .get("rows")?
+        .as_arr()?
+        .iter()
+        .map(|r| {
+            Ok(RowTemplate {
+                table: intern_table(r.get("table")?.as_str()?)?,
+                label: r.get("label")?.as_str()?.to_string(),
+                expected: f64_from_bits_json(r.get("expected")?)?,
+                note: r.get("note")?.as_str()?.to_string(),
+                post: post_from_json(r.get("post")?)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TablePartialPoint { rows, partial: partial_from_json(j.get("partial")?)? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_sum_handles_catastrophic_cancellation() {
+        let mut s = ExactSum::new();
+        for x in [1e100, 1.0, -1e100] {
+            s.add(x);
+        }
+        assert_eq!(s.round(), 1.0);
+
+        let mut s = ExactSum::new();
+        s.add(1.0);
+        for _ in 0..10 {
+            s.add(1e-16);
+        }
+        // Plain summation would return 1.0; the exact sum rounds up.
+        assert_eq!(s.round(), 1.0 + 1.0e-15);
+    }
+
+    #[test]
+    fn exact_sum_empty_and_single() {
+        assert_eq!(ExactSum::new().round(), 0.0);
+        let mut s = ExactSum::new();
+        s.add(-2.5);
+        assert_eq!(s.round(), -2.5);
+    }
+
+    #[test]
+    fn exact_sum_partition_invariance_fuzz() {
+        let mut rng = Rng::new(99);
+        for case in 0..50 {
+            // Values spanning ~20 orders of magnitude with mixed signs.
+            let n = 5 + rng.usize(200);
+            let vals: Vec<f64> = (0..n)
+                .map(|_| {
+                    let mag = 10f64.powi(rng.usize(20) as i32 - 10);
+                    (rng.f64() - 0.5) * mag
+                })
+                .collect();
+            let mut whole = ExactSum::new();
+            for &v in &vals {
+                whole.add(v);
+            }
+            // Random contiguous partition into 1..=7 pieces, merged.
+            let pieces = 1 + rng.usize(7);
+            let mut merged = ExactSum::new();
+            for i in 0..pieces {
+                let lo = vals.len() * i / pieces;
+                let hi = vals.len() * (i + 1) / pieces;
+                let mut part = ExactSum::new();
+                for &v in &vals[lo..hi] {
+                    part.add(v);
+                }
+                merged.merge(&part);
+            }
+            assert_eq!(
+                whole.round().to_bits(),
+                merged.round().to_bits(),
+                "case {case}: partition changed the rounded sum"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_ranges_partition_every_trial_count() {
+        for &trials in &[0usize, 1, 5, 60, 5000] {
+            for &n in &[1usize, 2, 3, 7, 64] {
+                let mut covered = Vec::new();
+                let mut prev_end = 0;
+                for i in 0..n {
+                    let r = Shard::new(i, n).unwrap().range(trials);
+                    assert_eq!(r.start, prev_end, "trials={trials} n={n} i={i}");
+                    prev_end = r.end;
+                    covered.extend(r);
+                }
+                assert_eq!(covered, (0..trials).collect::<Vec<_>>(), "trials={trials} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_new_validates() {
+        assert!(Shard::new(0, 0).is_err());
+        assert!(Shard::new(3, 3).is_err());
+        assert!(Shard::new(2, 3).is_ok());
+    }
+
+    #[test]
+    fn partial_mean_merge_matches_whole() {
+        let vals: Vec<f64> = (0..97).map(|i| ((i * 37) % 101) as f64 * 0.01).collect();
+        let mut whole = ExactSum::new();
+        for &v in &vals {
+            whole.add(v);
+        }
+        let whole = Partial::Mean { count: vals.len() as u64, sum: whole };
+
+        let mut halves = [ExactSum::new(), ExactSum::new()];
+        let mut counts = [0u64, 0u64];
+        for (i, &v) in vals.iter().enumerate() {
+            halves[i % 2].add(v);
+            counts[i % 2] += 1;
+        }
+        let mut merged = Partial::Mean { count: counts[0], sum: halves[0].clone() };
+        let second = Partial::Mean { count: counts[1], sum: halves[1].clone() };
+        merged.merge(&second).unwrap();
+        assert_eq!(merged.value().to_bits(), whole.value().to_bits());
+    }
+
+    #[test]
+    fn partial_kind_mismatch_and_exact_disagreement_fail() {
+        let mut m = Partial::Mean { count: 1, sum: ExactSum::new() };
+        assert!(m.merge(&Partial::Prob { count: 1, hits: 0 }).is_err());
+        let mut e = Partial::Exact { value: 1.0 };
+        assert!(e.merge(&Partial::Exact { value: 1.0 }).is_ok());
+        assert!(e.merge(&Partial::Exact { value: 2.0 }).is_err());
+    }
+
+    #[test]
+    fn exact_sum_json_roundtrip_preserves_bits() {
+        let mut s = ExactSum::new();
+        for x in [1e100, 1.0, -1e-300, 0.1, f64::MIN_POSITIVE] {
+            s.add(x);
+        }
+        let j = exact_sum_to_json(&s);
+        let text = j.write();
+        let back = exact_sum_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.round().to_bits(), s.round().to_bits());
+    }
+
+    #[test]
+    fn partial_json_roundtrip_all_kinds() {
+        let mut sum = ExactSum::new();
+        sum.add(0.3);
+        sum.add(1e-17);
+        let cases = [
+            Partial::Mean { count: 42, sum: sum.clone() },
+            Partial::Prob { count: 100, hits: 3 },
+            Partial::Curve { count: 7, sums: vec![sum.clone(), ExactSum::new()] },
+            Partial::Exact { value: f64::NAN },
+            Partial::Exact { value: -0.0 },
+        ];
+        for p in &cases {
+            let back = partial_from_json(&Json::parse(&partial_to_json(p).write()).unwrap())
+                .unwrap();
+            assert_eq!(back.kind(), p.kind());
+            assert_eq!(back.value().to_bits(), p.value().to_bits());
+            assert_eq!(
+                back.curve_values().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                p.curve_values().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn merge_rejects_bad_partitions() {
+        let job = JobSpec {
+            kind: JobKind::Table,
+            id: "thm11".into(),
+            trials: 10,
+            seed: 1,
+            k: 10,
+            s: 2,
+            tmax: 0,
+        };
+        let point = TablePartialPoint {
+            rows: vec![RowTemplate {
+                table: "thm11",
+                label: "x".into(),
+                expected: 0.0,
+                note: "n".into(),
+                post: PostMap::Identity,
+            }],
+            partial: Partial::Exact { value: 1.5 },
+        };
+        let art = |sid: usize, n: usize| ShardArtifact {
+            job: job.clone(),
+            shard_id: sid,
+            num_shards: n,
+            points: ShardPoints::Table(vec![point.clone()]),
+        };
+        // Missing shard 1 of 2.
+        assert!(ShardArtifact::merge(vec![art(0, 2)]).is_err());
+        // Duplicate shard id.
+        assert!(ShardArtifact::merge(vec![art(0, 2), art(0, 2)]).is_err());
+        // Mismatched num_shards.
+        assert!(ShardArtifact::merge(vec![art(0, 2), art(1, 3)]).is_err());
+        // Mismatched job.
+        let mut other = art(1, 2);
+        other.job.seed = 2;
+        assert!(ShardArtifact::merge(vec![art(0, 2), other]).is_err());
+        // Valid 2-shard partition of a deterministic point.
+        let merged = ShardArtifact::merge(vec![art(0, 2), art(1, 2)]).unwrap();
+        assert_eq!(merged.points.len(), 1);
+    }
+}

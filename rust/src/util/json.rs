@@ -1,11 +1,18 @@
-//! Minimal JSON parser — enough to read `artifacts/manifest.json`.
+//! Minimal JSON parser *and writer* — reads `artifacts/manifest.json`
+//! and round-trips the Monte-Carlo shard artifacts (`sim::shard`).
 //!
 //! Hand-rolled because the offline vendor set has no serde_json; this is
-//! a strict RFC-8259 subset parser (no comments, no trailing commas).
+//! a strict RFC-8259 subset parser (no comments, no trailing commas)
+//! plus a writer whose output the parser accepts verbatim:
+//! `Json::parse(&j.write())` reproduces `j` for any value the shard
+//! pipeline produces. Numbers are emitted via Rust's shortest
+//! round-tripping float formatting; exact f64 interchange (bit
+//! patterns) is layered above this module by `sim::shard`, which
+//! encodes payload floats as hex strings.
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -73,6 +80,106 @@ impl Json {
             _ => bail!("not an object: {self:?}"),
         }
     }
+
+    /// Serialize compactly (no whitespace). The output parses back to
+    /// an equal value: strings are escaped per RFC 8259 and numbers use
+    /// Rust's shortest round-tripping formatting. Non-finite numbers
+    /// have no JSON representation and are written as `null` (callers
+    /// that need exact f64 interchange — the shard artifacts — encode
+    /// bit patterns as strings instead of relying on `Json::Num`).
+    pub fn write(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out, None, 0);
+        out
+    }
+
+    /// Serialize with 2-space indentation (readable artifact diffs).
+    /// Parses back identically to [`Json::write`]'s output.
+    pub fn write_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out, Some(2), 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_into(&self, out: &mut String, indent: Option<usize>, level: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    out.push_str(&format!("{x}"));
+                } else {
+                    debug_assert!(false, "non-finite number {x} has no JSON form");
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, level + 1);
+                    item.write_into(out, indent, level + 1);
+                }
+                newline_indent(out, indent, level);
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                if map.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (key, val)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, level + 1);
+                    write_escaped(key, out);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    val.write_into(out, indent, level + 1);
+                }
+                newline_indent(out, indent, level);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, level: usize) {
+    if let Some(width) = indent {
+        out.push('\n');
+        for _ in 0..width * level {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -123,24 +230,27 @@ impl<'a> Parser<'a> {
 
     fn string(&mut self) -> Result<String> {
         self.eat(b'"')?;
-        let mut out = String::new();
+        // Accumulate raw bytes and validate UTF-8 once at the end, so
+        // multi-byte characters in the input pass through intact
+        // (escape sequences are appended in their UTF-8 encoding).
+        let mut out: Vec<u8> = Vec::new();
         loop {
             let c = self.peek()?;
             self.i += 1;
             match c {
-                b'"' => return Ok(out),
+                b'"' => return Ok(String::from_utf8(out).context("invalid UTF-8 in string")?),
                 b'\\' => {
                     let e = self.peek()?;
                     self.i += 1;
-                    match e {
-                        b'"' => out.push('"'),
-                        b'\\' => out.push('\\'),
-                        b'/' => out.push('/'),
-                        b'b' => out.push('\u{8}'),
-                        b'f' => out.push('\u{c}'),
-                        b'n' => out.push('\n'),
-                        b'r' => out.push('\r'),
-                        b't' => out.push('\t'),
+                    let decoded = match e {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'b' => '\u{8}',
+                        b'f' => '\u{c}',
+                        b'n' => '\n',
+                        b'r' => '\r',
+                        b't' => '\t',
                         b'u' => {
                             if self.i + 4 > self.b.len() {
                                 bail!("truncated \\u escape");
@@ -148,13 +258,15 @@ impl<'a> Parser<'a> {
                             let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
                             let cp = u32::from_str_radix(hex, 16)?;
                             self.i += 4;
-                            // No surrogate-pair support; manifest is ASCII.
-                            out.push(char::from_u32(cp).ok_or_else(|| anyhow!("bad codepoint"))?);
+                            // No surrogate-pair support (BMP only).
+                            char::from_u32(cp).ok_or_else(|| anyhow!("bad codepoint"))?
                         }
                         _ => bail!("bad escape \\{}", e as char),
-                    }
+                    };
+                    let mut buf = [0u8; 4];
+                    out.extend_from_slice(decoded.encode_utf8(&mut buf).as_bytes());
                 }
-                _ => out.push(c as char),
+                _ => out.push(c),
             }
         }
     }
@@ -280,5 +392,50 @@ mod tests {
         assert!(Json::Num(1.5).as_usize().is_err());
         assert!(Json::Num(-1.0).as_usize().is_err());
         assert_eq!(Json::Num(7.0).as_usize().unwrap(), 7);
+    }
+
+    #[test]
+    fn write_roundtrips_nested_values() {
+        let j = Json::parse(
+            r#"{"a": [1, 2.5, {"b": "c"}], "d": {}, "e": [], "f": null, "g": true, "h": -0.125}"#,
+        )
+        .unwrap();
+        assert_eq!(Json::parse(&j.write()).unwrap(), j);
+        assert_eq!(Json::parse(&j.write_pretty()).unwrap(), j);
+    }
+
+    #[test]
+    fn write_escapes_strings() {
+        let j = Json::Str("a\"b\\c\nd\te\u{1}".into());
+        let text = j.write();
+        assert_eq!(text, "\"a\\\"b\\\\c\\nd\\te\\u0001\"");
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn write_numbers_roundtrip_exactly() {
+        for x in [0.0, -0.0, 1.0, 0.1, 2e-7, 123456789.25, 5000.0] {
+            let text = Json::Num(x).write();
+            match Json::parse(&text).unwrap() {
+                Json::Num(y) => assert_eq!(y.to_bits(), x.to_bits(), "{text}"),
+                other => panic!("parsed {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn write_compact_has_no_whitespace() {
+        let j = Json::parse(r#"{"a": [1, 2], "b": "x"}"#).unwrap();
+        assert_eq!(j.write(), r#"{"a":[1,2],"b":"x"}"#);
+    }
+
+    #[test]
+    fn non_ascii_strings_roundtrip() {
+        // Raw multi-byte UTF-8 survives parse and write->parse.
+        let j = Json::parse("\"\u{03b4}=0.25 \u{2192} ok\"").unwrap();
+        assert_eq!(j, Json::Str("\u{03b4}=0.25 \u{2192} ok".into()));
+        assert_eq!(Json::parse(&j.write()).unwrap(), j);
+        // \u escapes still decode and re-encode as raw UTF-8.
+        assert_eq!(Json::parse("\"\\u03b4\"").unwrap(), Json::Str("\u{03b4}".into()));
     }
 }

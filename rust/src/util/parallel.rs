@@ -10,6 +10,19 @@
 //! Results are position-addressed, so the output is order-preserving
 //! and — as long as `f(i)` is a pure function of `i` (each trial forks
 //! its own RNG stream upstream) — bit-identical for every thread count.
+//!
+//! This module is the *intra-process* level of the fan-out hierarchy:
+//!
+//! 1. **threads within a process** — here, chunked work stealing over
+//!    one trial range;
+//! 2. **processes/machines** — `sim::shard` slices the trial range into
+//!    disjoint shards and merges exact partial aggregates, so the two
+//!    levels compose without affecting a single output bit.
+//!
+//! Both levels lean on the same invariant: trial `i` is a pure function
+//! of the trial index (per-trial forked RNG streams), so *where* it
+//! runs — which thread, which chunk, which shard, which machine — is
+//! unobservable in the results.
 
 use std::mem::{ManuallyDrop, MaybeUninit};
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -1,0 +1,390 @@
+//! Shard/merge bit-parity pins: for every figure and the Monte-Carlo
+//! theorem tables, running the trial range as {1, 2, 3, 7} disjoint
+//! shards (each with its own thread count), serializing every shard
+//! through the on-disk JSON artifact format, and merging must reproduce
+//! the single-process entry points **bit-for-bit** — the contract the
+//! `repro shard` / `repro merge` CLI pair and the CI fan-out job rely
+//! on.
+
+use gradcode::codes::Scheme;
+use gradcode::sim::figures::{
+    figure2, figure2_partials, figure3, figure3_partials, figure4, figure4_partials, figure5,
+    figure5_partials, finalize_fig_points, FigPoint, FigureConfig,
+};
+use gradcode::sim::shard::ShardPoints;
+use gradcode::sim::tables::{
+    finalize_table_points, thm21_partials, thm21_table, thm5_partials, thm5_table, thm6_partials,
+    thm6_table, thm8_partials, thm8_table, TableRow,
+};
+use gradcode::sim::{JobKind, JobSpec, MonteCarlo, Shard, ShardArtifact};
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+/// Wrap per-shard points in artifacts, push every one of them through
+/// the JSON on-disk format, and merge.
+fn roundtrip_and_merge(job: &JobSpec, per_shard: Vec<ShardPoints>) -> ShardPoints {
+    let num_shards = per_shard.len();
+    let artifacts: Vec<ShardArtifact> = per_shard
+        .into_iter()
+        .enumerate()
+        .map(|(sid, points)| {
+            let art = ShardArtifact { job: job.clone(), shard_id: sid, num_shards, points };
+            let text = art.to_json_string();
+            ShardArtifact::parse(&text).expect("artifact JSON round-trip")
+        })
+        .collect();
+    ShardArtifact::merge(artifacts).expect("merge").points
+}
+
+fn fig_job(trials: usize, id: &str) -> JobSpec {
+    JobSpec {
+        kind: JobKind::Figure,
+        id: id.into(),
+        trials,
+        seed: 0, // metadata only for the wrap-and-merge tests
+        k: 0,
+        s: 0,
+        tmax: 0,
+    }
+}
+
+fn table_job(trials: usize, id: &str) -> JobSpec {
+    JobSpec { kind: JobKind::Table, id: id.into(), trials, seed: 0, k: 0, s: 0, tmax: 0 }
+}
+
+fn assert_fig_points_bit_equal(merged: &ShardPoints, whole: &[FigPoint], ctx: &str) {
+    let ShardPoints::Fig(points) = merged else {
+        panic!("{ctx}: expected figure points");
+    };
+    let finalized = finalize_fig_points(points);
+    assert_eq!(finalized.len(), whole.len(), "{ctx}: point count");
+    for (a, b) in finalized.iter().zip(whole) {
+        assert_eq!(a.figure, b.figure, "{ctx}");
+        assert_eq!(a.scheme, b.scheme, "{ctx}");
+        assert_eq!((a.s, a.t), (b.s, b.t), "{ctx}");
+        assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "{ctx}");
+        assert_eq!(
+            a.value.to_bits(),
+            b.value.to_bits(),
+            "{ctx}: {}/{} s={} delta={} t={}: {} vs {}",
+            a.figure,
+            a.scheme,
+            a.s,
+            a.delta,
+            a.t,
+            a.value,
+            b.value
+        );
+    }
+}
+
+fn assert_table_rows_bit_equal(merged: &ShardPoints, whole: &[TableRow], ctx: &str) {
+    let ShardPoints::Table(points) = merged else {
+        panic!("{ctx}: expected table points");
+    };
+    let finalized = finalize_table_points(points);
+    assert_eq!(finalized.len(), whole.len(), "{ctx}: row count");
+    for (a, b) in finalized.iter().zip(whole) {
+        assert_eq!(a.table, b.table, "{ctx}");
+        assert_eq!(a.label, b.label, "{ctx}");
+        assert_eq!(a.note, b.note, "{ctx}");
+        // NaN-safe comparisons (thm21's expected column is NaN).
+        assert_eq!(a.expected.to_bits(), b.expected.to_bits(), "{ctx}: {}", a.label);
+        assert_eq!(
+            a.measured.to_bits(),
+            b.measured.to_bits(),
+            "{ctx}: {}: {} vs {}",
+            a.label,
+            a.measured,
+            b.measured
+        );
+    }
+}
+
+/// Per-shard thread counts deliberately differ (1, 2, 3, ...): neither
+/// sharding nor threading may move a bit.
+fn shard_threads(sid: usize) -> usize {
+    1 + (sid % 3)
+}
+
+fn tiny_fig_cfg(trials: usize, threads: usize) -> FigureConfig {
+    FigureConfig {
+        k: 20,
+        s_values: vec![5],
+        deltas: vec![0.2, 0.5],
+        mc: MonteCarlo::new(trials, 42).with_threads(threads),
+    }
+}
+
+#[test]
+fn figure2_shard_merge_bit_parity() {
+    let trials = 60;
+    let whole = figure2(&tiny_fig_cfg(trials, 4));
+    for &n in &SHARD_COUNTS {
+        let per_shard: Vec<ShardPoints> = (0..n)
+            .map(|sid| {
+                let cfg = tiny_fig_cfg(trials, shard_threads(sid));
+                ShardPoints::Fig(figure2_partials(&cfg, Shard::new(sid, n).unwrap()))
+            })
+            .collect();
+        let merged = roundtrip_and_merge(&fig_job(trials, "2"), per_shard);
+        assert_fig_points_bit_equal(&merged, &whole, &format!("fig2 n={n}"));
+    }
+}
+
+#[test]
+fn figure3_shard_merge_bit_parity() {
+    let trials = 40;
+    let whole = figure3(&tiny_fig_cfg(trials, 4));
+    for &n in &SHARD_COUNTS {
+        let per_shard: Vec<ShardPoints> = (0..n)
+            .map(|sid| {
+                let cfg = tiny_fig_cfg(trials, shard_threads(sid));
+                ShardPoints::Fig(figure3_partials(&cfg, Shard::new(sid, n).unwrap()))
+            })
+            .collect();
+        let merged = roundtrip_and_merge(&fig_job(trials, "3"), per_shard);
+        assert_fig_points_bit_equal(&merged, &whole, &format!("fig3 n={n}"));
+    }
+}
+
+#[test]
+fn figure4_shard_merge_bit_parity() {
+    let trials = 30;
+    let whole = figure4(&tiny_fig_cfg(trials, 2));
+    for &n in &[2usize, 7] {
+        let per_shard: Vec<ShardPoints> = (0..n)
+            .map(|sid| {
+                let cfg = tiny_fig_cfg(trials, shard_threads(sid));
+                ShardPoints::Fig(figure4_partials(&cfg, Shard::new(sid, n).unwrap()))
+            })
+            .collect();
+        let merged = roundtrip_and_merge(&fig_job(trials, "4"), per_shard);
+        assert_fig_points_bit_equal(&merged, &whole, &format!("fig4 n={n}"));
+    }
+}
+
+#[test]
+fn figure5_curve_shard_merge_bit_parity() {
+    let trials = 24;
+    let t_max = 3;
+    let cfg = |threads| FigureConfig {
+        k: 16,
+        s_values: vec![4],
+        deltas: vec![],
+        mc: MonteCarlo::new(trials, 9).with_threads(threads),
+    };
+    let whole = figure5(&cfg(4), t_max);
+    for &n in &SHARD_COUNTS {
+        let per_shard: Vec<ShardPoints> = (0..n)
+            .map(|sid| {
+                ShardPoints::Fig(figure5_partials(
+                    &cfg(shard_threads(sid)),
+                    t_max,
+                    Shard::new(sid, n).unwrap(),
+                ))
+            })
+            .collect();
+        let merged = roundtrip_and_merge(&fig_job(trials, "5"), per_shard);
+        assert_fig_points_bit_equal(&merged, &whole, &format!("fig5 n={n}"));
+    }
+}
+
+#[test]
+fn thm5_and_thm6_shard_merge_bit_parity() {
+    let (k, s) = (20usize, 5usize);
+    let deltas = [0.25, 0.5];
+    let trials = 60;
+    let mc = |threads| MonteCarlo::new(trials, 17).with_threads(threads);
+    let whole5 = thm5_table(k, s, &deltas, &mc(4));
+    let whole6 = thm6_table(k, s, &deltas, &mc(4));
+    for &n in &SHARD_COUNTS {
+        let shards5: Vec<ShardPoints> = (0..n)
+            .map(|sid| {
+                ShardPoints::Table(thm5_partials(
+                    k,
+                    s,
+                    &deltas,
+                    &mc(shard_threads(sid)),
+                    Shard::new(sid, n).unwrap(),
+                ))
+            })
+            .collect();
+        let merged5 = roundtrip_and_merge(&table_job(trials, "thm5"), shards5);
+        assert_table_rows_bit_equal(&merged5, &whole5, &format!("thm5 n={n}"));
+
+        let shards6: Vec<ShardPoints> = (0..n)
+            .map(|sid| {
+                ShardPoints::Table(thm6_partials(
+                    k,
+                    s,
+                    &deltas,
+                    &mc(shard_threads(sid)),
+                    Shard::new(sid, n).unwrap(),
+                ))
+            })
+            .collect();
+        let merged6 = roundtrip_and_merge(&table_job(trials, "thm6"), shards6);
+        assert_table_rows_bit_equal(&merged6, &whole6, &format!("thm6 n={n}"));
+    }
+}
+
+#[test]
+fn thm8_probability_shard_merge_bit_parity() {
+    let k = 20usize;
+    let alphas = [0usize];
+    let deltas = [0.25];
+    let trials = 60;
+    let mc = |threads| MonteCarlo::new(trials, 23).with_threads(threads);
+    let whole = thm8_table(k, &alphas, &deltas, &mc(4));
+    for &n in &SHARD_COUNTS {
+        let per_shard: Vec<ShardPoints> = (0..n)
+            .map(|sid| {
+                ShardPoints::Table(thm8_partials(
+                    k,
+                    &alphas,
+                    &deltas,
+                    &mc(shard_threads(sid)),
+                    Shard::new(sid, n).unwrap(),
+                ))
+            })
+            .collect();
+        let merged = roundtrip_and_merge(&table_job(trials, "thm8"), per_shard);
+        assert_table_rows_bit_equal(&merged, &whole, &format!("thm8 n={n}"));
+    }
+}
+
+#[test]
+fn thm21_postmap_and_nan_expected_shard_merge_bit_parity() {
+    // thm21's rows carry a NaN expected column and a sqrt post-map —
+    // both must survive the JSON round trip and apply after merging.
+    let ks = [20usize, 40];
+    let s_of_k = |k: usize| ((k as f64).ln().ceil() as usize).max(2);
+    let trials = 40;
+    let mc = |threads: usize| MonteCarlo::new(trials, 31).with_threads(threads);
+    let whole = thm21_table(Scheme::Bgc, &ks, s_of_k, 0.25, &mc(4));
+    for &n in &SHARD_COUNTS {
+        let per_shard: Vec<ShardPoints> = (0..n)
+            .map(|sid| {
+                ShardPoints::Table(thm21_partials(
+                    Scheme::Bgc,
+                    &ks,
+                    s_of_k,
+                    0.25,
+                    &mc(shard_threads(sid)),
+                    Shard::new(sid, n).unwrap(),
+                ))
+            })
+            .collect();
+        let merged = roundtrip_and_merge(&table_job(trials, "thm21"), per_shard);
+        assert_table_rows_bit_equal(&merged, &whole, &format!("thm21 n={n}"));
+    }
+}
+
+#[test]
+fn jobspec_sharded_run_reproduces_unsharded_csv() {
+    // End to end through the exact code path the CLI uses: JobSpec::run
+    // for the full range vs ShardArtifact::compute per shard + merge.
+    // The merged CSV must equal the unsharded CSV byte for byte.
+    let jobs = [
+        JobSpec {
+            kind: JobKind::Figure,
+            id: "2".into(),
+            trials: 8,
+            seed: 2017,
+            k: 16,
+            s: 0,
+            tmax: 0,
+        },
+        JobSpec {
+            kind: JobKind::Table,
+            id: "thm6".into(),
+            trials: 40,
+            seed: 2017,
+            k: 12,
+            s: 3,
+            tmax: 0,
+        },
+        JobSpec {
+            kind: JobKind::Table,
+            id: "thm11".into(),
+            trials: 10,
+            seed: 3,
+            k: 12,
+            s: 3,
+            tmax: 0,
+        },
+    ];
+    for job in &jobs {
+        let unsharded = job.run(Shard::full(), Some(3)).unwrap().to_csv();
+        // Thread count must not change the CSV either.
+        let other_threads = job.run(Shard::full(), Some(1)).unwrap().to_csv();
+        assert_eq!(unsharded, other_threads, "{}: thread dependence", job.id);
+        for &n in &[2usize, 4] {
+            let artifacts: Vec<ShardArtifact> = (0..n)
+                .map(|sid| {
+                    let art = ShardArtifact::compute(
+                        job,
+                        Shard::new(sid, n).unwrap(),
+                        Some(shard_threads(sid)),
+                    )
+                    .unwrap();
+                    ShardArtifact::parse(&art.to_json_string()).unwrap()
+                })
+                .collect();
+            let merged = ShardArtifact::merge(artifacts).unwrap();
+            assert_eq!(merged.to_csv(), unsharded, "{} n={n}", job.id);
+        }
+    }
+}
+
+#[test]
+fn merge_rejects_incomplete_or_mismatched_sets() {
+    let job = JobSpec {
+        kind: JobKind::Table,
+        id: "thm11".into(),
+        trials: 10,
+        seed: 3,
+        k: 12,
+        s: 3,
+        tmax: 0,
+    };
+    let art = |sid: usize, n: usize, job: &JobSpec| {
+        ShardArtifact::compute(job, Shard::new(sid, n).unwrap(), Some(1)).unwrap()
+    };
+    // Complete set merges.
+    assert!(ShardArtifact::merge(vec![art(0, 2, &job), art(1, 2, &job)]).is_ok());
+    // Missing shard.
+    assert!(ShardArtifact::merge(vec![art(0, 2, &job)]).is_err());
+    // Duplicate shard.
+    assert!(ShardArtifact::merge(vec![art(0, 2, &job), art(0, 2, &job)]).is_err());
+    // Job mismatch (different seed -> different deterministic values,
+    // and the job header differs).
+    let mut other = job.clone();
+    other.seed = 4;
+    assert!(ShardArtifact::merge(vec![art(0, 2, &job), art(1, 2, &other)]).is_err());
+    // Out-of-order input is fine (merge sorts by shard id).
+    assert!(ShardArtifact::merge(vec![art(1, 2, &job), art(0, 2, &job)]).is_ok());
+}
+
+#[test]
+fn artifact_json_is_parseable_and_stable() {
+    // Serialize -> parse -> serialize must be a fixed point (the byte
+    // form is what multi-machine runs ship around).
+    let job = JobSpec {
+        kind: JobKind::Figure,
+        id: "2".into(),
+        trials: 8,
+        seed: 2017,
+        k: 16,
+        s: 0,
+        tmax: 0,
+    };
+    let art = ShardArtifact::compute(&job, Shard::new(1, 3).unwrap(), Some(2)).unwrap();
+    let text = art.to_json_string();
+    let reparsed = ShardArtifact::parse(&text).unwrap();
+    assert_eq!(reparsed.to_json_string(), text);
+    // Sanity: the artifact names its format and shard.
+    assert!(text.contains("gradcode-shard/v1"));
+    assert!(text.contains("\"shard_id\": 1"));
+}
