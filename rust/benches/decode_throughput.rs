@@ -317,7 +317,7 @@ fn main() {
         };
         let art = ShardArtifact {
             job: shard_job.clone(),
-            shard_id: sid,
+            shard_ids: vec![sid],
             num_shards,
             points: ShardPoints::Fig(vec![point]),
         };
@@ -360,6 +360,56 @@ fn main() {
             s: s1,
             r: r1,
             seed: seed1,
+            ns_per_decode: t.as_nanos() as f64,
+            decodes_per_sec: 1.0 / t.as_secs_f64(),
+        });
+    }
+
+    // -------------- fan-out *driver* overhead at the k = n = 1000 instance
+    // The real multi-process path: `repro run --fanout 4` (spawn 4 shard
+    // processes, wait, verify, merge) vs the unsharded CLI on the same
+    // job — thm5 at k = n = 1000 (4 deltas, FRC one-step trials). One
+    // timed run each: the child processes execute enough trials that
+    // process spawn jitter is a small fraction of the total.
+    let bin = env!("CARGO_BIN_EXE_gradcode");
+    let driver_trials = if common::quick() { 16usize } else { 64 };
+    let trials_str = driver_trials.to_string();
+    let time_cli = |args: &[&str]| -> std::time::Duration {
+        let t0 = std::time::Instant::now();
+        let status = std::process::Command::new(bin)
+            .args(args)
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .status()
+            .expect("spawning the repro binary");
+        assert!(status.success(), "repro {args:?} failed");
+        t0.elapsed()
+    };
+    let t_cli = time_cli(&[
+        "tables", "--table", "thm5", "--trials", &trials_str, "--k", "1000", "--s", "10",
+    ]);
+    let t_driver = time_cli(&[
+        "run", "--fanout", "4", "--table", "thm5", "--trials", &trials_str, "--k", "1000",
+        "--s", "10",
+    ]);
+    println!(
+        "bench shard/fanout-driver/k1000                        {} vs unsharded CLI {} ({:+.1}%)",
+        gradcode::util::bench::fmt_duration(t_driver),
+        gradcode::util::bench::fmt_duration(t_cli),
+        (t_driver.as_secs_f64() / t_cli.as_secs_f64() - 1.0) * 100.0
+    );
+    for (label, t) in [
+        ("shard/unsharded-cli", t_cli),
+        ("shard/fanout-driver-4proc", t_driver),
+    ] {
+        records.push(DecodeBenchRecord {
+            label: label.to_string(),
+            scheme: "FRC".to_string(),
+            k: k1,
+            n: k1,
+            s: 10,
+            r: 0, // thm5 sweeps deltas; no single r
+            seed: 2017,
             ns_per_decode: t.as_nanos() as f64,
             decodes_per_sec: 1.0 / t.as_secs_f64(),
         });

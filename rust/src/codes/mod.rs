@@ -16,7 +16,7 @@ pub use bgc::BernoulliCode;
 pub use normalized::{normalize_columns, normalized_rho, NormalizedCode};
 pub use cyclic::CyclicRepetitionCode;
 pub use frc::FractionalRepetitionCode;
-pub use rbgc::RegularizedBernoulliCode;
+pub use rbgc::{RegularizedBernoulliCode, ThresholdedBernoulliCode};
 pub use regular_code::RegularGraphCode;
 
 use crate::linalg::CscMatrix;
@@ -25,8 +25,10 @@ use crate::util::Rng;
 /// Reusable scratch for [`GradientCode::assignment_into`] — the flat
 /// buffers the constructors need while re-drawing G without allocating.
 /// One per `decode::DecodeWorkspace`; each scheme uses the subset it
-/// needs (rBGC: `col`; s-regular: `stubs`/`adj_flat`/`deg`; BGC/FRC
-/// write straight into the output and touch none of it).
+/// needs (rBGC and the thresholded ablation BGC: `col`; s-regular:
+/// `stubs`/`adj_flat`/`deg` for the configuration draw plus
+/// `edges`/`bad` for the edge-swap repair fallback; BGC/FRC write
+/// straight into the output and touch none of it).
 #[derive(Clone, Debug, Default)]
 pub struct AssignmentScratch {
     /// Per-column support build buffer (≤ k entries).
@@ -37,6 +39,10 @@ pub struct AssignmentScratch {
     pub adj_flat: Vec<usize>,
     /// Per-vertex fill counts for `adj_flat` (n entries).
     pub deg: Vec<usize>,
+    /// Interleaved endpoint pairs for the edge-swap repair (n·s entries).
+    pub edges: Vec<usize>,
+    /// Defective-edge index list for the repair loop (≤ n·s/2 entries).
+    pub bad: Vec<usize>,
 }
 
 impl AssignmentScratch {

@@ -5,27 +5,53 @@
 //! load at 2s and — per Le-Levina-Vershynin regularization (Thm 22) —
 //! restores spectral concentration for s < log k, giving the Thm 24
 //! bound err_1(A') <= C^2 α^3 k / ((1-δ) s) for ALL s >= 1.
+//!
+//! The generalized family lives here too: [`ThresholdedBernoulliCode`]
+//! thins columns above trigger·s down to target·s for arbitrary
+//! (trigger, target) — the `rbgc` ablation study's knob — and
+//! [`RegularizedBernoulliCode`] is exactly its (2, 1) instance, so the
+//! Bernoulli-draw + swap-remove walk exists in one place and the two
+//! cannot drift out of RNG lockstep.
 
 use super::{AssignmentScratch, GradientCode};
 use crate::linalg::CscMatrix;
 use crate::util::Rng;
 
+/// BGC with arbitrary (trigger, target) regularization thresholds:
+/// Bernoulli(s/k) columns, and any column above trigger·s entries is
+/// thinned down to target·s. (`trigger = 2, target = 1` is the paper's
+/// Algorithm 3, i.e. [`RegularizedBernoulliCode`].)
+///
+/// The `_into` path builds each column in `scratch.col` and is
+/// allocation-free at steady state (`tests/zero_alloc.rs`); both paths
+/// consume the identical RNG stream (pinned by a test below), so the
+/// seeded ablation sweeps are stable across the two.
 #[derive(Clone, Debug)]
-pub struct RegularizedBernoulliCode {
+pub struct ThresholdedBernoulliCode {
     k: usize,
     n: usize,
     s: usize,
+    trigger: f64,
+    target: f64,
 }
 
-impl RegularizedBernoulliCode {
-    pub fn new(k: usize, n: usize, s: usize) -> Self {
+impl ThresholdedBernoulliCode {
+    pub fn new(k: usize, n: usize, s: usize, trigger: f64, target: f64) -> Self {
         assert!(k >= 1 && n >= 1);
         assert!(s >= 1 && s <= k, "need 1 <= s <= k");
-        RegularizedBernoulliCode { k, n, s }
+        assert!(trigger > 0.0 && target > 0.0, "thresholds must be positive");
+        ThresholdedBernoulliCode { k, n, s, trigger, target }
+    }
+
+    /// (trigger·s, max(target·s, 1)) rounded to column degrees.
+    fn degree_thresholds(&self) -> (usize, usize) {
+        let trig = (self.trigger * self.s as f64).round() as usize;
+        let targ = ((self.target * self.s as f64).round() as usize).max(1);
+        (trig, targ)
     }
 }
 
-impl GradientCode for RegularizedBernoulliCode {
+impl GradientCode for ThresholdedBernoulliCode {
     fn k(&self) -> usize {
         self.k
     }
@@ -36,20 +62,20 @@ impl GradientCode for RegularizedBernoulliCode {
         self.s
     }
     fn name(&self) -> &'static str {
-        "rBGC"
+        "thresholded-BGC"
     }
 
-    /// Algorithm 3: Bernoulli(s/k) entries, then for every column with
-    /// degree d > 2s remove random edges until d == s.
     fn assignment(&self, rng: &mut Rng) -> CscMatrix {
         let p = self.s as f64 / self.k as f64;
+        let (trig, targ) = self.degree_thresholds();
         let supports = (0..self.n)
             .map(|_| {
                 let mut col: Vec<usize> = (0..self.k).filter(|_| rng.bernoulli(p)).collect();
-                if col.len() > 2 * self.s {
-                    // Remove random edges until degree s (paper's loop
-                    // runs `while d > s`, i.e. thins all the way to s).
-                    while col.len() > self.s {
+                if col.len() > trig {
+                    // Remove random edges until the target degree (the
+                    // paper's loop runs `while d > s`, i.e. thins all
+                    // the way down, generalized to target·s here).
+                    while col.len() > targ {
                         let idx = rng.usize(col.len());
                         col.swap_remove(idx);
                     }
@@ -67,6 +93,7 @@ impl GradientCode for RegularizedBernoulliCode {
     /// reused CSC buffers. Same RNG stream and layout as `assignment`.
     fn assignment_into(&self, rng: &mut Rng, out: &mut CscMatrix, scratch: &mut AssignmentScratch) {
         let p = self.s as f64 / self.k as f64;
+        let (trig, targ) = self.degree_thresholds();
         out.rows = self.k;
         out.cols = self.n;
         out.col_ptr.clear();
@@ -78,8 +105,8 @@ impl GradientCode for RegularizedBernoulliCode {
         for _ in 0..self.n {
             col.clear();
             col.extend((0..self.k).filter(|_| rng.bernoulli(p)));
-            if col.len() > 2 * self.s {
-                while col.len() > self.s {
+            if col.len() > trig {
+                while col.len() > targ {
                     let idx = rng.usize(col.len());
                     col.swap_remove(idx);
                 }
@@ -91,6 +118,47 @@ impl GradientCode for RegularizedBernoulliCode {
             }
             out.col_ptr.push(out.row_idx.len());
         }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RegularizedBernoulliCode {
+    inner: ThresholdedBernoulliCode,
+}
+
+impl RegularizedBernoulliCode {
+    pub fn new(k: usize, n: usize, s: usize) -> Self {
+        // Algorithm 3 == trigger 2, target 1: thin any column above 2s
+        // down to exactly s. (trig = 2s and targ = s exactly — small
+        // integers are exact in f64, so the generalized thresholds
+        // reproduce the historical `> 2*s` / `> s` comparisons.)
+        RegularizedBernoulliCode { inner: ThresholdedBernoulliCode::new(k, n, s, 2.0, 1.0) }
+    }
+}
+
+impl GradientCode for RegularizedBernoulliCode {
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+    fn s(&self) -> usize {
+        self.inner.s()
+    }
+    fn name(&self) -> &'static str {
+        "rBGC"
+    }
+
+    /// Algorithm 3: Bernoulli(s/k) entries, then for every column with
+    /// degree d > 2s remove random edges until d == s. Delegates to the
+    /// (2, 1) [`ThresholdedBernoulliCode`] — one copy of the draw.
+    fn assignment(&self, rng: &mut Rng) -> CscMatrix {
+        self.inner.assignment(rng)
+    }
+
+    fn assignment_into(&self, rng: &mut Rng, out: &mut CscMatrix, scratch: &mut AssignmentScratch) {
+        self.inner.assignment_into(rng, out, scratch)
     }
 }
 
@@ -154,5 +222,34 @@ mod tests {
             let sup = g.col_support(j);
             assert!(sup.windows(2).all(|w| w[0] < w[1]), "col {j} not strictly sorted");
         }
+    }
+
+    #[test]
+    fn rbgc_is_the_2_1_thresholded_instance() {
+        // The delegation invariant: same seed, same draws, same bits —
+        // Algorithm 3 is exactly (trigger 2, target 1).
+        let rbgc = RegularizedBernoulliCode::new(20, 20, 3);
+        let thresh = ThresholdedBernoulliCode::new(20, 20, 3, 2.0, 1.0);
+        let mut ra = Rng::new(5);
+        let mut rb = Rng::new(5);
+        for draw in 0..15 {
+            assert_eq!(rbgc.assignment(&mut ra), thresh.assignment(&mut rb), "draw {draw}");
+        }
+        assert_eq!(ra.next_u64(), rb.next_u64(), "rng diverged");
+    }
+
+    #[test]
+    fn thresholded_assignment_into_matches_assignment() {
+        let code = ThresholdedBernoulliCode::new(18, 18, 3, 1.5, 1.0);
+        let mut out = CscMatrix::empty();
+        let mut scratch = AssignmentScratch::new();
+        let mut ra = Rng::new(7);
+        let mut rb = Rng::new(7);
+        for draw in 0..20 {
+            let reference = code.assignment(&mut ra);
+            code.assignment_into(&mut rb, &mut out, &mut scratch);
+            assert_eq!(out, reference, "draw {draw}");
+        }
+        assert_eq!(ra.next_u64(), rb.next_u64(), "rng diverged");
     }
 }

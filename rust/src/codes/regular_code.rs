@@ -6,7 +6,7 @@
 
 use super::{AssignmentScratch, GradientCode};
 use crate::graph::random_regular_graph;
-use crate::graph::regular::{repair_matching, try_configuration_flat, CONFIGURATION_ATTEMPTS};
+use crate::graph::regular::{repair_matching_flat, try_configuration_flat, CONFIGURATION_ATTEMPTS};
 use crate::linalg::CscMatrix;
 use crate::util::Rng;
 
@@ -49,12 +49,14 @@ impl GradientCode for RegularGraphCode {
     /// Re-draw with configuration-model attempts in `scratch`'s flat
     /// buffers (identical RNG stream and accept/reject walk as
     /// `random_regular_graph`), emitting the accepted adjacency
-    /// column-by-column into the reused CSC buffers — allocation-free
-    /// when an attempt lands. A configuration is simple with
-    /// probability ≈ exp(−(s²−1)/4), so for sparse degrees (s ≤ 3)
-    /// the flat path all but always wins, while denser graphs fall
-    /// through to the same (allocating) edge-swap repair the reference
-    /// path uses — still RNG-identical, just not allocation-free.
+    /// column-by-column into the reused CSC buffers. A configuration is
+    /// simple with probability ≈ exp(−(s²−1)/4), so for sparse degrees
+    /// (s ≤ 3) an attempt all but always lands, while denser graphs
+    /// fall through to the edge-swap repair — since the flat-buffer
+    /// port of the incremental repair (`repair_matching_flat`), that
+    /// fallback is RNG-identical to the reference path *and*
+    /// allocation-free, so s ≥ 5 re-draws run with zero steady-state
+    /// heap traffic too (pinned by `tests/zero_alloc.rs`).
     fn assignment_into(&self, rng: &mut Rng, out: &mut CscMatrix, scratch: &mut AssignmentScratch) {
         let (k, s) = (self.k, self.s);
         out.rows = k;
@@ -63,6 +65,7 @@ impl GradientCode for RegularGraphCode {
         out.row_idx.clear();
         out.vals.clear();
         out.col_ptr.push(0);
+        let mut accepted = false;
         for _ in 0..CONFIGURATION_ATTEMPTS {
             if try_configuration_flat(
                 k,
@@ -72,19 +75,25 @@ impl GradientCode for RegularGraphCode {
                 &mut scratch.adj_flat,
                 &mut scratch.deg,
             ) {
-                for v in 0..k {
-                    for &u in &scratch.adj_flat[v * s..(v + 1) * s] {
-                        out.row_idx.push(u);
-                        out.vals.push(1.0);
-                    }
-                    out.col_ptr.push(out.row_idx.len());
-                }
-                return;
+                accepted = true;
+                break;
             }
         }
-        let g = repair_matching(k, s, rng);
+        if !accepted {
+            repair_matching_flat(
+                k,
+                s,
+                rng,
+                &mut scratch.stubs,
+                &mut scratch.edges,
+                &mut scratch.adj_flat,
+                &mut scratch.deg,
+                &mut scratch.bad,
+            );
+        }
+        // Either way the sorted neighbours of v are adj_flat[v*s..(v+1)*s].
         for v in 0..k {
-            for &u in &g.adj[v] {
+            for &u in &scratch.adj_flat[v * s..(v + 1) * s] {
                 out.row_idx.push(u);
                 out.vals.push(1.0);
             }
@@ -123,5 +132,25 @@ mod tests {
     #[should_panic(expected = "even")]
     fn odd_ks_panics() {
         RegularGraphCode::new(25, 25, 5);
+    }
+
+    #[test]
+    fn dense_degree_redraw_matches_assignment_through_repair() {
+        // s = 6 at k = 20: P(simple configuration) ≈ exp(−35/4), so
+        // essentially every draw exhausts the attempts and lands on the
+        // repair fallback — the path that must stay RNG-identical now
+        // that it runs in flat buffers.
+        use crate::codes::AssignmentScratch;
+        let code = RegularGraphCode::new(20, 20, 6);
+        let mut out = CscMatrix::empty();
+        let mut scratch = AssignmentScratch::new();
+        let mut ra = Rng::new(5);
+        let mut rb = Rng::new(5);
+        for draw in 0..10 {
+            let reference = code.assignment(&mut ra);
+            code.assignment_into(&mut rb, &mut out, &mut scratch);
+            assert_eq!(out, reference, "draw {draw}");
+        }
+        assert_eq!(ra.next_u64(), rb.next_u64(), "rng diverged");
     }
 }

@@ -156,6 +156,8 @@ impl DecodeWorkspace {
         self.scratch.stubs.reserve(n * s);
         self.scratch.adj_flat.reserve(n * s);
         self.scratch.deg.reserve(n);
+        self.scratch.edges.reserve(n * s);
+        self.scratch.bad.reserve(n * s / 2 + 1);
         self.row_acc.reserve(k);
         self.ones.reserve(k);
         self.x0.reserve(n);
@@ -327,6 +329,50 @@ impl DecodeWorkspace {
         rng.sample_indices_into(self.g.cols, r, &mut self.pool, &mut self.idx);
         self.g.select_columns_into(&self.idx, &mut self.a);
         optimal_err_on_selected(&self.a, &mut self.ones, &mut self.x0, &mut self.lsqr, opts, warm)
+    }
+
+    /// One full one-step trial on the **column-normalized** submatrix:
+    /// re-draw G, sample r non-stragglers, then compute
+    /// `err_1 = ||ρ Â 1_r − 1_k||²` where Â is A with every column
+    /// rescaled to sum to 1 (zero columns untouched) — without ever
+    /// materializing Â. Accumulation order matches
+    /// `codes::normalized::normalize_columns(&A)` followed by
+    /// `OneStepDecoder::err1` exactly (per-column sequential total,
+    /// same divisions, same row-scatter order, same final reduction),
+    /// so the fused value is bit-identical to the historical allocating
+    /// sequence — the ablation suite pins this. Callers pass the
+    /// normalized step size ρ = k/r (`codes::normalized_rho`).
+    pub fn onestep_normalized_redraw_trial(
+        &mut self,
+        code: &dyn GradientCode,
+        r: usize,
+        rho: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.invalidate_mirror();
+        code.assignment_into(rng, &mut self.g, &mut self.scratch);
+        rng.sample_indices_into(self.g.cols, r, &mut self.pool, &mut self.idx);
+        self.g.select_columns_into(&self.idx, &mut self.a);
+        let Self { a, row_acc, .. } = self;
+        row_acc.clear();
+        row_acc.resize(a.rows, 0.0);
+        for j in 0..a.cols {
+            let (lo, hi) = (a.col_ptr[j], a.col_ptr[j + 1]);
+            let mut total = 0.0;
+            for p in lo..hi {
+                total += a.vals[p];
+            }
+            if total == 0.0 {
+                for p in lo..hi {
+                    row_acc[a.row_idx[p]] += a.vals[p];
+                }
+            } else {
+                for p in lo..hi {
+                    row_acc[a.row_idx[p]] += a.vals[p] / total;
+                }
+            }
+        }
+        row_acc.iter().map(|&v| (rho * v - 1.0).powi(2)).sum()
     }
 
     /// Re-draw G and materialize one straggler trial's A in the
@@ -548,6 +594,25 @@ mod tests {
             }
             assert_eq!(legacy_rng.next_u64(), redraw_rng.next_u64(), "{scheme:?} rng diverged");
         }
+    }
+
+    #[test]
+    fn normalized_redraw_trial_matches_legacy_sequence_bitwise() {
+        use crate::codes::normalized::normalize_columns;
+        let (k, s, r) = (24usize, 4usize, 18usize);
+        let rho = k as f64 / r as f64;
+        let code = Scheme::Bgc.build(k, k, s);
+        let mut legacy_rng = Rng::new(33);
+        let mut fused_rng = Rng::new(33);
+        let mut ws = DecodeWorkspace::new();
+        for trial in 0..10 {
+            let g = code.assignment(&mut legacy_rng);
+            let idx = legacy_rng.sample_indices(k, r);
+            let legacy = OneStepDecoder::new(rho).err1(&normalize_columns(&g.select_columns(&idx)));
+            let fused = ws.onestep_normalized_redraw_trial(code.as_ref(), r, rho, &mut fused_rng);
+            assert_eq!(legacy.to_bits(), fused.to_bits(), "trial {trial}");
+        }
+        assert_eq!(legacy_rng.next_u64(), fused_rng.next_u64());
     }
 
     #[test]

@@ -161,12 +161,115 @@ fn try_configuration(n: usize, s: usize, rng: &mut Rng) -> Option<Graph> {
     Some(Graph { n, adj })
 }
 
+/// Zero-allocation twin of [`repair_matching`]: the incremental
+/// edge-swap repair run entirely in caller-owned flat buffers. On
+/// return the **sorted** neighbours of vertex `v` are
+/// `adj_flat[v*s..(v+1)*s]`.
+///
+/// Consumes the exact RNG stream of the allocating variant — the same
+/// stub shuffle, the same defective-edge list order (so the same
+/// `rng.usize` draws), the same swap proposals and accept/reject
+/// decisions — so a seeded caller can switch between the two without
+/// moving a bit (pinned by a test below). The allocating variant's
+/// `HashMap<(u,v), count>` is replaced by a multiset adjacency mirror:
+/// every vertex always owns exactly `s` stub endpoints, so
+/// `adj_flat[u*s..(u+1)*s]` holds `u`'s current neighbours (with
+/// multiplicity; self-loops appear as `u` itself) and edge
+/// multiplicities are membership counts in that segment.
+pub(crate) fn repair_matching_flat(
+    n: usize,
+    s: usize,
+    rng: &mut Rng,
+    stubs: &mut Vec<usize>,
+    edges: &mut Vec<usize>,
+    adj_flat: &mut Vec<usize>,
+    deg: &mut Vec<usize>,
+    bad: &mut Vec<usize>,
+) {
+    // Multiplicity of edge (u, v) == occurrences of v in u's segment
+    // (u != v; self-loops are caught by the u == v check before any
+    // multiplicity lookup, exactly like the allocating variant).
+    fn count(adj: &[usize], s: usize, u: usize, v: usize) -> usize {
+        adj[u * s..(u + 1) * s].iter().filter(|&&x| x == v).count()
+    }
+    // Rewrite one occurrence of `old` in u's segment to `new` — the
+    // mirror of a counts entry decrement + increment.
+    fn replace_one(adj: &mut [usize], s: usize, u: usize, old: usize, new: usize) {
+        let seg = &mut adj[u * s..(u + 1) * s];
+        let pos = seg.iter().position(|&x| x == old).expect("adjacency mirror out of sync");
+        seg[pos] = new;
+    }
+
+    stubs.clear();
+    stubs.extend((0..n * s).map(|i| i / s));
+    rng.shuffle(stubs);
+    // Edge e is the endpoint pair (edges[2e], edges[2e+1]).
+    edges.clear();
+    edges.extend_from_slice(stubs);
+    let m = n * s / 2;
+
+    adj_flat.clear();
+    adj_flat.resize(n * s, 0);
+    deg.clear();
+    deg.resize(n, 0);
+    for e in 0..m {
+        let (u, v) = (edges[2 * e], edges[2 * e + 1]);
+        adj_flat[u * s + deg[u]] = v;
+        deg[u] += 1;
+        adj_flat[v * s + deg[v]] = u;
+        deg[v] += 1;
+    }
+
+    let mut guard = 0usize;
+    loop {
+        bad.clear();
+        for e in 0..m {
+            let (u, v) = (edges[2 * e], edges[2 * e + 1]);
+            if u == v || count(adj_flat, s, u, v) > 1 {
+                bad.push(e);
+            }
+        }
+        if bad.is_empty() {
+            break;
+        }
+        guard += 1;
+        assert!(guard < 1_000_000, "edge-swap repair failed to converge");
+        let i = bad[rng.usize(bad.len())];
+        let j = rng.usize(m);
+        if i == j {
+            continue;
+        }
+        let (a, b) = (edges[2 * i], edges[2 * i + 1]);
+        let (c, d) = (edges[2 * j], edges[2 * j + 1]);
+        // Propose swap (a,b),(c,d) -> (a,d),(c,b).
+        if a == d || c == b {
+            continue;
+        }
+        if count(adj_flat, s, a, d) > 0 || count(adj_flat, s, c, b) > 0 {
+            continue;
+        }
+        // Apply to the edge list and mirror in the adjacency multiset.
+        edges[2 * i + 1] = d;
+        edges[2 * j + 1] = b;
+        replace_one(adj_flat, s, a, b, d);
+        replace_one(adj_flat, s, b, a, c);
+        replace_one(adj_flat, s, c, d, b);
+        replace_one(adj_flat, s, d, c, a);
+    }
+
+    for v in 0..n {
+        adj_flat[v * s..(v + 1) * s].sort_unstable();
+    }
+}
+
 /// Take a defective matching and swap edges until simple. Allocates;
 /// reached when all [`CONFIGURATION_ATTEMPTS`] rejections fire — rare
 /// for s ≤ 3 but the usual outcome for denser degrees, since one
-/// configuration is simple with probability ≈ exp(−(s²−1)/4).
-/// `pub(crate)` so the zero-allocation `assignment_into` path can
-/// share the identical fallback.
+/// configuration is simple with probability ≈ exp(−(s²−1)/4). Kept as
+/// the reference implementation for `random_regular_graph`; the
+/// re-draw hot path uses the flat-buffer twin
+/// [`repair_matching_flat`], which replays this function's RNG walk
+/// without allocating.
 pub(crate) fn repair_matching(n: usize, s: usize, rng: &mut Rng) -> Graph {
     // Edge list with possible defects.
     let mut stubs: Vec<usize> = (0..n * s).map(|i| i / s).collect();
@@ -272,6 +375,33 @@ mod tests {
                     }
                 }
                 assert_eq!(ra.next_u64(), rb.next_u64(), "rng diverged (seed {seed})");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_repair_matches_allocating_variant() {
+        // Dense degrees land on the repair path essentially always
+        // (P(simple config) ≈ exp(−(s²−1)/4)); same seed must give the
+        // same repaired graph and leave the RNG streams in lockstep.
+        let (mut stubs, mut edges, mut adj_flat, mut deg, mut bad) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for seed in 0..25u64 {
+            for &(n, s) in &[(12usize, 5usize), (10, 6), (16, 4)] {
+                let mut ra = Rng::new(seed);
+                let mut rb = Rng::new(seed);
+                let reference = repair_matching(n, s, &mut ra);
+                repair_matching_flat(
+                    n, s, &mut rb, &mut stubs, &mut edges, &mut adj_flat, &mut deg, &mut bad,
+                );
+                for v in 0..n {
+                    assert_eq!(
+                        &adj_flat[v * s..(v + 1) * s],
+                        &reference.adj[v][..],
+                        "vertex {v} (n={n} s={s} seed={seed})"
+                    );
+                }
+                assert_eq!(ra.next_u64(), rb.next_u64(), "rng diverged (n={n} s={s} seed={seed})");
             }
         }
     }

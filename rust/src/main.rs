@@ -24,14 +24,35 @@
 //!                                   only; the other tables derive s and
 //!                                   reject the flag)
 //!                  --threads auto
-//! repro shard      --fig F | --table T   exactly one of the two
+//! repro ablation   --study rho      rho|rbgc|lsqr|normalization
+//!                  --trials 500  --seed 2017  --k 100  --s 10
+//!                  --threads auto
+//! repro shard      --fig F | --table T | --ablation STUDY  exactly one
 //!                  --shard-id I     this shard's index (required, 0-based)
 //!                  --num-shards N   total shards (required)
 //!                  --out FILE       artifact path (default: stdout)
-//!                  (+ the figures/tables flags above; --trials defaults
-//!                   to 5000 for figures, 2000 for tables)
+//!                  (+ the figures/tables/ablation flags above; --trials
+//!                   defaults to 5000 for figures, 2000 for tables, 500
+//!                   for ablations)
+//! repro run        --fig F | --table T | --ablation STUDY  exactly one
+//!                  --fanout 2       spawn N `repro shard` processes
+//!                                   locally, wait, verify, merge, and
+//!                                   emit the unsharded-identical CSV
+//!                  --artifacts-dir DIR  keep the shard artifacts there
+//!                                   (default: a temp dir, removed)
+//!                  (+ the same job flags as `repro shard`; without
+//!                   --threads each child gets cores/fanout workers so
+//!                   the fan-out never oversubscribes the machine)
 //! repro merge      FILE...          shard artifacts; emits the same CSV
 //!                                   as the unsharded run, bit-for-bit
+//!                  --out FILE       instead fold the (possibly
+//!                                   incomplete, disjoint) set into one
+//!                                   compound partial artifact — the
+//!                                   tree-reduction step ("-" = stdout)
+//! repro verify     FILE...          audit an artifact set without
+//!                                   merging: checksums, same job,
+//!                                   disjoint complete shard coverage,
+//!                                   per-artifact trial accounting
 //! repro train      --scheme frc     frc|bgc|rbgc|regular|cyclic
 //!                  --model linear   linear|mlp
 //!                  --decoder onestep onestep|optimal
@@ -40,20 +61,22 @@
 //!                  --engines 2      PJRT engine pool size
 //!                  --seed 0
 //! repro adversary  --k 100  --s 10  --r 80 (= 4k/5)  --seed 2017
-//! repro ablation   --study rho      rho|rbgc|lsqr|normalization
-//!                  --trials 500  --seed 2017  --k 100  --s 10
 //! repro inspect    --artifact NAME  (default: every manifest entry)
 //! repro demo
 //! repro help
 //! ```
 //!
-//! The `shard`/`merge` pair distributes a figure/table run across
-//! processes or machines: each shard runs a disjoint trial range and
-//! writes exact partial aggregates as JSON; `merge` validates the
-//! partition and reproduces the unsharded CSV bit-for-bit (see
-//! `sim::shard` and ARCHITECTURE.md).
+//! The `shard`/`merge` pair distributes a figure/table/ablation run
+//! across processes or machines: each shard runs a disjoint trial range
+//! and writes exact partial aggregates as JSON; `merge` validates the
+//! partition and reproduces the unsharded CSV bit-for-bit. `merge
+//! --out` folds any disjoint subset into a compound artifact (enabling
+//! tree-reduction over thousands of shards), `verify` audits an
+//! artifact set without merging, and `run --fanout N` drives the whole
+//! shard → verify → merge cycle as one local command (see `sim::shard`
+//! and ARCHITECTURE.md).
 
-use anyhow::Context;
+use anyhow::{anyhow, Context};
 
 use gradcode::adversary::{
     asp_objective, frc_worst_stragglers, greedy_stragglers, local_search_stragglers,
@@ -62,7 +85,7 @@ use gradcode::codes::Scheme;
 use gradcode::coordinator::{DecoderKind, ModelKind};
 use gradcode::decode::OptimalDecoder;
 use gradcode::runtime::{Backend, EnginePool, LinearDims, Manifest, MlpDims};
-use gradcode::sim::shard::TABLE_IDS;
+use gradcode::sim::shard::{ABLATION_IDS, TABLE_IDS};
 use gradcode::sim::{
     figures, FigureConfig, JobKind, JobSpec, MonteCarlo, Shard, ShardArtifact,
 };
@@ -203,25 +226,46 @@ fn run() -> CliResult<()> {
             cmd_tables(&args)
         }
         "shard" => {
-            // The job-specific flags mirror `figures` / `tables`: --tmax
-            // only makes sense for figure jobs and --s only for table
-            // jobs; whitelisting both unconditionally would silently
-            // ignore the wrong one instead of exiting 2.
-            let mut allowed =
-                vec!["fig", "table", "trials", "seed", "k", "shard-id", "num-shards", "out",
-                     "threads"];
+            // The job-specific flags mirror `figures`/`tables`/
+            // `ablation`: --tmax only makes sense for figure jobs and
+            // --s only for table/ablation jobs; whitelisting both
+            // unconditionally would silently ignore the wrong one
+            // instead of exiting 2.
+            let mut allowed = vec![
+                "fig", "table", "ablation", "trials", "seed", "k", "shard-id", "num-shards",
+                "out", "threads",
+            ];
             if args.get("fig").is_some() {
                 allowed.push("tmax");
             }
-            if args.get("table").is_some() {
+            if args.get("table").is_some() || args.get("ablation").is_some() {
                 allowed.push("s");
             }
             args.finish(&allowed, false)?;
             cmd_shard(&args)
         }
+        "run" => {
+            // Same conditional job flags as `shard`, plus the driver's.
+            let mut allowed = vec![
+                "fig", "table", "ablation", "fanout", "trials", "seed", "k", "artifacts-dir",
+                "threads",
+            ];
+            if args.get("fig").is_some() {
+                allowed.push("tmax");
+            }
+            if args.get("table").is_some() || args.get("ablation").is_some() {
+                allowed.push("s");
+            }
+            args.finish(&allowed, false)?;
+            cmd_run(&args)
+        }
         "merge" => {
-            args.finish(&[], true)?;
+            args.finish(&["out"], true)?;
             cmd_merge(&args)
+        }
+        "verify" => {
+            args.finish(&[], true)?;
+            cmd_verify(&args)
         }
         "train" => {
             args.finish(
@@ -238,7 +282,7 @@ fn run() -> CliResult<()> {
             cmd_adversary(&args)
         }
         "ablation" => {
-            args.finish(&["study", "trials", "seed", "k", "s"], false)?;
+            args.finish(&["study", "trials", "seed", "k", "s", "threads"], false)?;
             cmd_ablation(&args)
         }
         "inspect" => {
@@ -265,15 +309,26 @@ USAGE:
                 [--threads T]
   repro tables  --table thm3|thm5|thm6|thm8|thm10|thm11|thm21|thm24
                 [--trials N] [--k K] [--s S] [--seed S] [--threads T]
-  repro shard   --fig F|--table T --shard-id I --num-shards N [--out FILE]
-                [--trials N] [--k K] [--s S] [--seed S] [--tmax T]
-                [--threads T]
-  repro merge   FILE...             # merge shard artifacts -> CSV on stdout
+  repro ablation --study rho|rbgc|lsqr|normalization [--trials N] [--k K]
+                [--s S] [--seed S] [--threads T]
+  repro shard   --fig F|--table T|--ablation STUDY --shard-id I
+                --num-shards N [--out FILE] [--trials N] [--k K] [--s S]
+                [--seed S] [--tmax T] [--threads T]
+  repro run     --fig F|--table T|--ablation STUDY [--fanout N]
+                [--artifacts-dir DIR] [--trials N] [--k K] [--s S]
+                [--seed S] [--tmax T] [--threads T]
+                                    # spawn N shard processes, wait,
+                                    # verify, merge -> CSV on stdout
+  repro merge   FILE... [--out FILE]  # merge artifacts -> CSV on stdout;
+                                    # with --out, fold any disjoint
+                                    # subset into one partial artifact
+  repro verify  FILE...             # audit an artifact set (checksums,
+                                    # same job, disjoint complete
+                                    # coverage) without merging
   repro train   [--scheme S] [--model linear|mlp] [--decoder onestep|optimal]
                 [--k K] [--s S] [--steps N] [--delta D] [--lr LR]
                 [--backend pjrt|native] [--engines E] [--seed S]
   repro adversary [--k K] [--s S] [--r R] [--seed S]
-  repro ablation  --study rho|rbgc|lsqr|normalization [--trials N]
   repro inspect   [--artifact NAME]     # HLO stats of an AOT artifact
   repro demo
   repro help
@@ -281,22 +336,35 @@ USAGE:
 DEFAULTS:
   figures: --fig 2 --trials 5000 --seed 2017 --k 100 --tmax 15
   tables:  --table thm5 --trials 2000 --seed 2017 --k 100 --s 10
-  shard:   figures/tables defaults above; --out - (stdout)
+  ablation: --study rho --trials 500 --seed 2017 --k 100 --s 10
+  shard:   figures/tables/ablation defaults above; --out - (stdout)
+  run:     shard defaults above; --fanout 2; --artifacts-dir <temp dir>
+           (temporary artifacts are removed after the merge); each child
+           gets --threads cores/fanout unless --threads is given
   train:   --scheme frc --model linear --decoder onestep --k 100 --s 10
            --steps 200 --delta 0.2 --lr 0.5 --backend pjrt --engines 2 --seed 0
   adversary: --k 100 --s 10 --r 4k/5 --seed 2017
-  ablation:  --study rho --trials 500 --seed 2017 --k 100 --s 10
   --threads defaults to the machine's core count (capped at 16); results
   are bit-identical for every thread count.
 
 SHARDING:
-  `repro shard` runs one disjoint slice of a figure/table's trial range
-  and writes exact partial aggregates as a JSON artifact; `repro merge`
-  over a complete shard set reproduces the unsharded CSV bit-for-bit:
+  `repro shard` runs one disjoint slice of a figure/table/ablation's
+  trial range and writes exact partial aggregates as a checksummed JSON
+  artifact; `repro merge` over a complete shard set reproduces the
+  unsharded CSV bit-for-bit, and `repro run --fanout N` drives the
+  whole cycle (spawn, wait, verify, merge) as one command:
 
-    repro shard --fig 3 --shard-id 0 --num-shards 4 --out fig3_0.json
-    ... (shards 1-3, on any mix of machines) ...
-    repro merge fig3_*.json > fig3.csv
+    repro run --fig 3 --fanout 4 > fig3.csv
+
+  For multi-machine runs, fan out by hand and reduce as a tree —
+  `merge --out` folds any disjoint subset into a compound artifact:
+
+    repro shard --fig 3 --shard-id 0 --num-shards 8 --out fig3_0.json
+    ... (shards 1-7, on any mix of machines) ...
+    repro merge fig3_0.json ... fig3_3.json --out fig3_lo.json
+    repro merge fig3_4.json ... fig3_7.json --out fig3_hi.json
+    repro verify fig3_lo.json fig3_hi.json
+    repro merge fig3_lo.json fig3_hi.json > fig3.csv
 
 Exit status: 0 on success, 1 on runtime failure, 2 on usage errors
 (unknown subcommand/flag, bad flag value).
@@ -348,15 +416,19 @@ fn cmd_tables(args: &Args) -> CliResult<()> {
     Ok(())
 }
 
+/// The tables whose `--s` flag is meaningful; the rest derive s
+/// internally (thm8: log-threshold, thm21/24: ln k, thm11: fixed
+/// instance) and reject the flag.
+const TABLES_WITH_S: [&str; 4] = ["thm3", "thm5", "thm6", "thm10"];
+
 fn table_job(args: &Args) -> CliResult<JobSpec> {
     let table = args.get("table").unwrap_or("thm5");
     if !TABLE_IDS.contains(&table) {
         return usage(format!("unknown table {table:?} (one of {})", TABLE_IDS.join("|")));
     }
-    // These tables derive s internally (thm8: log-threshold, thm21/24:
-    // ln k, thm11: fixed instance); accepting --s would silently run a
+    // Accepting --s for a derived-s table would silently run a
     // different sweep than the user asked for.
-    if ["thm8", "thm11", "thm21", "thm24"].contains(&table) && args.get("s").is_some() {
+    if !TABLES_WITH_S.contains(&table) && args.get("s").is_some() {
         return usage(format!("--s is not accepted for --table {table} (s is derived internally)"));
     }
     Ok(JobSpec {
@@ -370,15 +442,51 @@ fn table_job(args: &Args) -> CliResult<JobSpec> {
     })
 }
 
-// -------------------------------------------------------- shard / merge
+// ------------------------------------------------------------ ablation
+
+fn ablation_job(args: &Args) -> CliResult<JobSpec> {
+    // `repro ablation` spells the study --study; `repro shard` and
+    // `repro run` spell it --ablation (mirroring --fig/--table).
+    let study = args.get("ablation").or(args.get("study")).unwrap_or("rho");
+    if !ABLATION_IDS.contains(&study) {
+        return usage(format!("unknown study {study:?} (one of {})", ABLATION_IDS.join("|")));
+    }
+    Ok(JobSpec {
+        kind: JobKind::Ablation,
+        id: study.to_string(),
+        trials: args.usize("trials", 500)?,
+        seed: args.u64("seed", 2017)?,
+        k: args.usize("k", 100)?,
+        s: args.usize("s", 10)?,
+        tmax: 0,
+    })
+}
+
+fn cmd_ablation(args: &Args) -> CliResult<()> {
+    let job = ablation_job(args)?;
+    let points = job.run(Shard::full(), threads_flag(args)?)?;
+    print!("{}", points.to_csv());
+    Ok(())
+}
+
+// ----------------------------------------- shard / run / merge / verify
+
+/// The job named by exactly one of --fig / --table / --ablation (shared
+/// by `repro shard` and `repro run`).
+fn job_from_kind_flags(args: &Args, cmd: &str) -> CliResult<JobSpec> {
+    match (args.get("fig"), args.get("table"), args.get("ablation")) {
+        (Some(_), None, None) => figure_job(args),
+        (None, Some(_), None) => table_job(args),
+        (None, None, Some(_)) => ablation_job(args),
+        (None, None, None) => {
+            usage(format!("`repro {cmd}` needs --fig F, --table T, or --ablation STUDY"))
+        }
+        _ => usage(format!("pass exactly one of --fig / --table / --ablation to `repro {cmd}`")),
+    }
+}
 
 fn cmd_shard(args: &Args) -> CliResult<()> {
-    let job = match (args.get("fig"), args.get("table")) {
-        (Some(_), Some(_)) => return usage("pass exactly one of --fig / --table, not both"),
-        (Some(_), None) => figure_job(args)?,
-        (None, Some(_)) => table_job(args)?,
-        (None, None) => return usage("`repro shard` needs --fig F or --table T"),
-    };
+    let job = job_from_kind_flags(args, "shard")?;
     let Some(shard_id) = args.get("shard-id") else {
         return usage("`repro shard` needs --shard-id I (0-based)");
     };
@@ -417,18 +525,239 @@ fn cmd_shard(args: &Args) -> CliResult<()> {
     Ok(())
 }
 
-fn cmd_merge(args: &Args) -> CliResult<()> {
-    if args.positional.is_empty() {
-        return usage("`repro merge` needs at least one shard artifact file");
+/// The argv a `repro run` child gets: the job reconstructed flag by
+/// flag (so the child's JobSpec is identical to the parent's and the
+/// artifacts merge), plus the shard header and output path.
+fn shard_child_args(
+    job: &JobSpec,
+    shard_id: usize,
+    num_shards: usize,
+    out: &std::path::Path,
+    threads: Option<usize>,
+) -> Vec<String> {
+    let mut v: Vec<String> = vec!["shard".into()];
+    match job.kind {
+        JobKind::Figure => {
+            v.push("--fig".into());
+            v.push(job.id.clone());
+            if job.id == "5" {
+                v.push("--tmax".into());
+                v.push(job.tmax.to_string());
+            }
+        }
+        JobKind::Table => {
+            v.push("--table".into());
+            v.push(job.id.clone());
+            // Derived-s tables reject --s; their JobSpec carries the
+            // default, which the child reproduces by omission.
+            if TABLES_WITH_S.contains(&job.id.as_str()) {
+                v.push("--s".into());
+                v.push(job.s.to_string());
+            }
+        }
+        JobKind::Ablation => {
+            v.push("--ablation".into());
+            v.push(job.id.clone());
+            v.push("--s".into());
+            v.push(job.s.to_string());
+        }
     }
+    for (flag, val) in [
+        ("--trials", job.trials.to_string()),
+        ("--seed", job.seed.to_string()),
+        ("--k", job.k.to_string()),
+        ("--shard-id", shard_id.to_string()),
+        ("--num-shards", num_shards.to_string()),
+    ] {
+        v.push(flag.into());
+        v.push(val);
+    }
+    v.push("--out".into());
+    v.push(out.to_string_lossy().into_owned());
+    if let Some(t) = threads {
+        v.push("--threads".into());
+        v.push(t.to_string());
+    }
+    v
+}
+
+/// `repro run --fanout N`: the local fan-out driver. Spawns N `repro
+/// shard` child processes of this same binary, waits for all of them,
+/// verifies the artifact set, merges, and prints the
+/// unsharded-identical CSV — the whole CI fan-out workflow in one
+/// command.
+fn cmd_run(args: &Args) -> CliResult<()> {
+    let job = job_from_kind_flags(args, "run")?;
+    let fanout = args.usize("fanout", 2)?;
+    if fanout == 0 {
+        return usage("--fanout must be at least 1");
+    }
+    // Without an explicit --threads, split the machine's worker budget
+    // across the children instead of oversubscribing it N-fold (each
+    // child would otherwise default to the full core count). Results
+    // are thread-count invariant; this only affects wall-clock.
+    let threads = match threads_flag(args)? {
+        Some(t) => Some(t),
+        None => Some((gradcode::util::parallel::default_threads() / fanout).max(1)),
+    };
+    let exe = std::env::current_exe().context("locating the running binary")?;
+    let (dir, keep) = match args.get("artifacts-dir") {
+        Some(d) => {
+            std::fs::create_dir_all(d).with_context(|| format!("creating {d}"))?;
+            (std::path::PathBuf::from(d), true)
+        }
+        None => {
+            let d = std::env::temp_dir().join(format!(
+                "gradcode-fanout-{}-{}-{}",
+                std::process::id(),
+                job.kind.name(),
+                job.id
+            ));
+            std::fs::create_dir_all(&d)
+                .with_context(|| format!("creating {}", d.display()))?;
+            (d, false)
+        }
+    };
+
+    eprintln!(
+        "fanning {} {} out across {fanout} shard processes (artifacts in {})",
+        job.kind.name(),
+        job.id,
+        dir.display()
+    );
+    let mut children = Vec::new();
+    let mut spawn_errors: Vec<String> = Vec::new();
+    for sid in 0..fanout {
+        let out = dir.join(format!("{}_{}_shard_{sid}_of_{fanout}.json", job.kind.name(), job.id));
+        match std::process::Command::new(&exe)
+            .args(shard_child_args(&job, sid, fanout, &out, threads))
+            .spawn()
+        {
+            Ok(child) => children.push((sid, out, child)),
+            Err(e) => spawn_errors.push(format!("spawning shard {sid}: {e}")),
+        }
+    }
+    // Wait for every spawned child (even after a spawn failure, so none
+    // are left running), then verify + merge. The temp artifacts dir is
+    // removed on success AND failure — the HELP text promises temporary
+    // artifacts never outlive the run; pass --artifacts-dir to keep
+    // them for debugging.
+    let outcome = wait_verify_merge(&job, children, spawn_errors);
+    if !keep {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let merged = outcome?;
+    print!("{}", merged.to_csv());
+    Ok(())
+}
+
+/// The collection half of `repro run`: wait for all shard children,
+/// parse their artifacts, verify the set against the **parent's** job
+/// (the children reconstruct it from `shard_child_args`' flags, so a
+/// missed flag would otherwise make every child consistently wrong and
+/// sail through the mutual-consistency checks), and merge.
+fn wait_verify_merge(
+    job: &JobSpec,
+    children: Vec<(usize, std::path::PathBuf, std::process::Child)>,
+    mut failures: Vec<String>,
+) -> CliResult<gradcode::sim::MergedRun> {
+    let mut artifacts = Vec::new();
+    for (sid, out, mut child) in children {
+        let status = match child.wait() {
+            Ok(status) => status,
+            Err(e) => {
+                failures.push(format!("waiting for shard {sid}: {e}"));
+                continue;
+            }
+        };
+        if !status.success() {
+            failures.push(format!("shard {sid} exited with {status}"));
+            continue;
+        }
+        match std::fs::read_to_string(&out) {
+            Ok(text) => match ShardArtifact::parse(&text) {
+                Ok(a) if a.job != *job => failures.push(format!(
+                    "shard {sid} computed a different job than requested: {:?} vs {:?} \
+                     (shard_child_args out of step with a job flag?)",
+                    a.job, job
+                )),
+                Ok(a) => artifacts.push(a),
+                Err(e) => failures.push(format!("shard {sid}: {e:#}")),
+            },
+            Err(e) => failures.push(format!("shard {sid}: reading {}: {e}", out.display())),
+        }
+    }
+    if !failures.is_empty() {
+        return Err(CliError::Runtime(anyhow!("fan-out failed: {}", failures.join("; "))));
+    }
+    ShardArtifact::verify_set(&artifacts)?;
+    Ok(ShardArtifact::merge(artifacts)?)
+}
+
+fn read_artifacts(paths: &[String]) -> CliResult<Vec<ShardArtifact>> {
     let mut shards = Vec::new();
-    for path in &args.positional {
+    for path in paths {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         let artifact = ShardArtifact::parse(&text).with_context(|| format!("parsing {path}"))?;
         shards.push(artifact);
     }
-    let merged = ShardArtifact::merge(shards)?;
-    print!("{}", merged.to_csv());
+    Ok(shards)
+}
+
+fn cmd_merge(args: &Args) -> CliResult<()> {
+    if args.positional.is_empty() {
+        return usage("`repro merge` needs at least one shard artifact file");
+    }
+    let shards = read_artifacts(&args.positional)?;
+    match args.get("out") {
+        // Full merge: validate the complete partition and emit the CSV.
+        None => {
+            let merged = ShardArtifact::merge(shards)?;
+            print!("{}", merged.to_csv());
+        }
+        // Tree-reduction step: fold the (possibly incomplete) disjoint
+        // subset into one compound partial artifact.
+        Some(out) => {
+            let folded = ShardArtifact::merge_partial(shards)?;
+            let text = folded.to_json_string();
+            if out == "-" {
+                print!("{text}");
+            } else {
+                std::fs::write(out, &text).with_context(|| format!("writing {out}"))?;
+                eprintln!(
+                    "folded {} artifact(s) into shards {:?} ({}/{}) of {} {} -> {out}",
+                    args.positional.len(),
+                    folded.shard_ids,
+                    folded.shard_ids.len(),
+                    folded.num_shards,
+                    folded.job.kind.name(),
+                    folded.job.id
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> CliResult<()> {
+    if args.positional.is_empty() {
+        return usage("`repro verify` needs at least one shard artifact file");
+    }
+    // Parsing already enforces checksum integrity per artifact.
+    let shards = read_artifacts(&args.positional)?;
+    ShardArtifact::verify_set(&shards)?;
+    let job = &shards[0].job;
+    println!(
+        "OK: {} artifact(s) verify as {} {} (trials={} seed={} k={}): checksums valid, \
+         shard ids 0..{} covered exactly once, every point accounts for its trial range",
+        shards.len(),
+        job.kind.name(),
+        job.id,
+        job.trials,
+        job.seed,
+        job.k,
+        shards[0].num_shards
+    );
     Ok(())
 }
 
@@ -529,44 +858,6 @@ fn cmd_adversary(args: &Args) -> CliResult<()> {
         report("frc-block-attack", &frc_worst_stragglers(&g, r));
         report("greedy", &greedy_stragglers(&g, r, rho));
         report("local-search", &local_search_stragglers(&g, r, rho, 5));
-    }
-    Ok(())
-}
-
-// ------------------------------------------------------------- ablation
-
-fn cmd_ablation(args: &Args) -> CliResult<()> {
-    use gradcode::sim::ablations;
-    let study = args.get("study").unwrap_or("rho");
-    let trials = args.usize("trials", 500)?;
-    let mc = MonteCarlo::new(trials, args.u64("seed", 2017)?);
-    let (k, s) = (args.usize("k", 100)?, args.usize("s", 10)?);
-
-    let pts = match study {
-        "rho" => ablations::rho_sweep(
-            Scheme::Bgc,
-            k,
-            s,
-            0.25,
-            &[0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 2.0],
-            &mc,
-        ),
-        "rbgc" => ablations::rbgc_threshold(
-            k,
-            s,
-            0.25,
-            &[(1.0, 1.0), (1.5, 1.0), (2.0, 1.0), (2.0, 1.5), (3.0, 2.0)],
-            &mc,
-        ),
-        "lsqr" => ablations::lsqr_tolerance(Scheme::Bgc, k, s, 0.25, &[1, 2, 4, 8, 16, 64], &mc),
-        "normalization" => {
-            ablations::normalization(Scheme::Bgc, k, s, &[0.1, 0.3, 0.5], &mc)
-        }
-        other => return usage(format!("unknown study {other:?} (rho|rbgc|lsqr|normalization)")),
-    };
-    println!("{}", gradcode::sim::AblationPoint::csv_header());
-    for p in pts {
-        println!("{}", p.to_csv());
     }
     Ok(())
 }

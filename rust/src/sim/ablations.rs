@@ -10,12 +10,27 @@
 //!   (negative result: coverage noise dominates degree noise, so
 //!   normalization does not improve BGC one-step error; optimal decode
 //!   is scale-invariant anyway).
+//!
+//! Like the figures and tables, every study is *(per-shard partials) ∘
+//! (finalize)*: the `*_partials` variants run any [`Shard`] of the
+//! trial range on the [`crate::decode::DecodeWorkspace`]-threaded
+//! zero-allocation pipeline and return [`AblationPartialPoint`]s; the
+//! classic entry points below are the `num_shards = 1` case. The
+//! per-study parameter sweeps live in [`study_partials`], the single
+//! dispatch `repro ablation`, `repro shard --ablation`, and
+//! `repro run --ablation` all share (via `shard::JobSpec`), so a study
+//! cannot be producible-but-unmergeable. Trial values are bit-identical
+//! to the historical `mc.mean(|rng| ...)` closures (pinned by the
+//! legacy-parity tests below); merged shards reproduce the unsharded
+//! CSV byte-for-byte (`tests/shard_parity.rs`).
+
+use anyhow::{bail, Result};
 
 use super::montecarlo::MonteCarlo;
-use crate::codes::{normalized::normalize_columns, GradientCode, Scheme};
-use crate::decode::{OneStepDecoder, OptimalDecoder};
-use crate::linalg::{lsqr, CscMatrix, LsqrOptions};
-use crate::util::Rng;
+use super::shard::{Partial, Shard, ABLATION_IDS};
+use crate::codes::{normalized_rho, Scheme, ThresholdedBernoulliCode};
+use crate::decode::DecodeWorkspace;
+use crate::linalg::LsqrOptions;
 
 /// One ablation data point.
 #[derive(Clone, Debug)]
@@ -30,14 +45,132 @@ impl AblationPoint {
         "study,setting,value"
     }
 
+    /// CSV row. `setting` is quoted per RFC 4180 when it contains a
+    /// comma, quote, or newline; every built-in study emits plain
+    /// settings (pinned by a test), so their bytes are unchanged — the
+    /// quoting only guards future studies against emitting rows a CSV
+    /// reader would mis-split.
     pub fn to_csv(&self) -> String {
-        format!("{},{},{:.6e}", self.study, self.setting, self.value)
+        format!("{},{},{:.6e}", self.study, csv_field(&self.setting), self.value)
     }
 }
 
-fn draw_a(scheme: Scheme, k: usize, s: usize, r: usize, rng: &mut Rng) -> CscMatrix {
-    let g = scheme.build(k, k, s).assignment(rng);
-    g.select_columns(&rng.sample_indices(k, r))
+/// RFC-4180 field escaping: pass clean fields through untouched, wrap
+/// hostile ones in quotes with `""` doubling.
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// One ablation point's *partial* state: the study metadata plus an
+/// exact partial aggregate of this shard's trials. Finalizing a
+/// fully-merged partial yields the published [`AblationPoint`].
+#[derive(Clone, Debug)]
+pub struct AblationPartialPoint {
+    pub study: &'static str,
+    pub setting: String,
+    /// The study's k (finalize divides the merged statistic by it).
+    pub k: usize,
+    pub partial: Partial,
+}
+
+impl AblationPartialPoint {
+    /// Metadata equality — merge refuses to combine partials from
+    /// different sweep points.
+    pub fn same_point(&self, other: &AblationPartialPoint) -> bool {
+        self.study == other.study
+            && self.setting == other.setting
+            && self.k == other.k
+            && self.partial.kind() == other.partial.kind()
+    }
+
+    /// Finalize a (fully-merged) partial into the published point.
+    pub fn finalize(&self) -> AblationPoint {
+        AblationPoint {
+            study: self.study,
+            setting: self.setting.clone(),
+            value: self.partial.value() / self.k as f64,
+        }
+    }
+}
+
+/// Finalize a slice of fully-merged partial points.
+pub fn finalize_ablation_points(points: &[AblationPartialPoint]) -> Vec<AblationPoint> {
+    points.iter().map(|p| p.finalize()).collect()
+}
+
+// ------------------------------------------------------ study registry
+
+/// The fixed ρ-factor sweep `--ablation rho` runs.
+pub const RHO_FACTORS: [f64; 7] = [0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 2.0];
+/// The fixed (trigger, target) pairs `--ablation rbgc` runs.
+pub const RBGC_PAIRS: [(f64, f64); 5] =
+    [(1.0, 1.0), (1.5, 1.0), (2.0, 1.0), (2.0, 1.5), (3.0, 2.0)];
+/// The fixed LSQR iteration caps `--ablation lsqr` runs.
+pub const LSQR_CAPS: [usize; 6] = [1, 2, 4, 8, 16, 64];
+/// The fixed δ sweep `--ablation normalization` runs.
+pub const NORMALIZATION_DELTAS: [f64; 3] = [0.1, 0.3, 0.5];
+
+/// One shard of the study registered under the CLI id `study` (one of
+/// [`ABLATION_IDS`]) — the dispatch `shard::JobSpec::run` and every
+/// ablation CLI path share. Sweep parameters are the fixed constants
+/// above; `k`, `s`, and the Monte-Carlo budget come from the job.
+pub fn study_partials(
+    study: &str,
+    k: usize,
+    s: usize,
+    mc: &MonteCarlo,
+    shard: Shard,
+) -> Result<Vec<AblationPartialPoint>> {
+    Ok(match study {
+        "rho" => rho_sweep_partials(Scheme::Bgc, k, s, 0.25, &RHO_FACTORS, mc, shard),
+        "rbgc" => rbgc_threshold_partials(k, s, 0.25, &RBGC_PAIRS, mc, shard),
+        "lsqr" => lsqr_tolerance_partials(Scheme::Bgc, k, s, 0.25, &LSQR_CAPS, mc, shard),
+        "normalization" => {
+            normalization_partials(Scheme::Bgc, k, s, &NORMALIZATION_DELTAS, mc, shard)
+        }
+        other => bail!("unknown ablation study {other:?} (one of {})", ABLATION_IDS.join("|")),
+    })
+}
+
+fn r_of(k: usize, delta: f64) -> usize {
+    (((1.0 - delta) * k as f64).round() as usize).clamp(1, k)
+}
+
+// ---------------------------------------------------------- rho_sweep
+
+/// One shard of [`rho_sweep`]: mean err_1 at ρ = factor · k/(rs),
+/// through the workspace re-draw pipeline.
+pub fn rho_sweep_partials(
+    scheme: Scheme,
+    k: usize,
+    s: usize,
+    delta: f64,
+    factors: &[f64],
+    mc: &MonteCarlo,
+    shard: Shard,
+) -> Vec<AblationPartialPoint> {
+    let r = r_of(k, delta);
+    let canonical = k as f64 / (r as f64 * s as f64);
+    let code = scheme.build(k, k, s);
+    factors
+        .iter()
+        .map(|&f| {
+            let rho = f * canonical;
+            let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
+                ws.onestep_redraw_trial(code.as_ref(), r, rho, rng)
+            });
+            AblationPartialPoint {
+                study: "rho_sweep",
+                setting: format!("{} rho={f:.2}x", scheme.name()),
+                k,
+                partial,
+            }
+        })
+        .collect()
 }
 
 /// ρ sensitivity: mean err_1 at ρ = factor · k/(rs).
@@ -49,20 +182,40 @@ pub fn rho_sweep(
     factors: &[f64],
     mc: &MonteCarlo,
 ) -> Vec<AblationPoint> {
-    let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
-    let canonical = k as f64 / (r as f64 * s as f64);
-    factors
+    finalize_ablation_points(&rho_sweep_partials(scheme, k, s, delta, factors, mc, Shard::full()))
+}
+
+// ----------------------------------------------------- rbgc_threshold
+
+/// One shard of [`rbgc_threshold`]. The code family is
+/// [`ThresholdedBernoulliCode`] in `codes/rbgc.rs` (the paper's
+/// Algorithm 3 generalized to arbitrary (trigger, target); rBGC itself
+/// is the (2, 1) instance, so there is exactly one copy of the draw).
+/// Its `assignment_into` replicates the pre-PR-4 inline closure draw
+/// RNG-for-RNG, so seeded ablation values are unchanged, and the loop
+/// is allocation-free at steady state (`tests/zero_alloc.rs`).
+pub fn rbgc_threshold_partials(
+    k: usize,
+    s: usize,
+    delta: f64,
+    pairs: &[(f64, f64)],
+    mc: &MonteCarlo,
+    shard: Shard,
+) -> Vec<AblationPartialPoint> {
+    let r = r_of(k, delta);
+    let rho = k as f64 / (r as f64 * s as f64); // OneStepDecoder::canonical
+    pairs
         .iter()
-        .map(|&f| {
-            let rho = f * canonical;
-            let mean = mc.mean(|rng| {
-                let a = draw_a(scheme, k, s, r, rng);
-                OneStepDecoder::new(rho).err1(&a)
+        .map(|&(trigger, target)| {
+            let code = ThresholdedBernoulliCode::new(k, k, s, trigger, target);
+            let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
+                ws.onestep_redraw_trial(&code, r, rho, rng)
             });
-            AblationPoint {
-                study: "rho_sweep",
-                setting: format!("{} rho={f:.2}x", scheme.name()),
-                value: mean / k as f64,
+            AblationPartialPoint {
+                study: "rbgc_threshold",
+                setting: format!("trigger={trigger}s target={target}s"),
+                k,
+                partial,
             }
         })
         .collect()
@@ -77,40 +230,50 @@ pub fn rbgc_threshold(
     pairs: &[(f64, f64)],
     mc: &MonteCarlo,
 ) -> Vec<AblationPoint> {
-    let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
-    pairs
-        .iter()
-        .map(|&(trigger, target)| {
-            let mean = mc.mean(|rng| {
-                // Draw a BGC and regularize with the custom thresholds.
-                let p = s as f64 / k as f64;
-                let supports: Vec<Vec<usize>> = (0..k)
-                    .map(|_| {
-                        let mut col: Vec<usize> =
-                            (0..k).filter(|_| rng.bernoulli(p)).collect();
-                        let trig = (trigger * s as f64).round() as usize;
-                        let targ = ((target * s as f64).round() as usize).max(1);
-                        if col.len() > trig {
-                            while col.len() > targ {
-                                let idx = rng.usize(col.len());
-                                col.swap_remove(idx);
-                            }
-                            col.sort_unstable();
-                        }
-                        col
-                    })
-                    .collect();
-                let g = CscMatrix::from_supports(k, supports);
-                let a = g.select_columns(&rng.sample_indices(k, r));
-                OneStepDecoder::canonical(k, r, s).err1(&a)
-            });
-            AblationPoint {
-                study: "rbgc_threshold",
-                setting: format!("trigger={trigger}s target={target}s"),
-                value: mean / k as f64,
-            }
-        })
-        .collect()
+    finalize_ablation_points(&rbgc_threshold_partials(k, s, delta, pairs, mc, Shard::full()))
+}
+
+// ----------------------------------------------------- lsqr_tolerance
+
+/// One shard of [`lsqr_tolerance`]: the full-budget reference row plus
+/// one row per iteration cap, all on the workspace LSQR re-draw path
+/// (`lsqr_with` is bit-identical to the allocating `lsqr`).
+pub fn lsqr_tolerance_partials(
+    scheme: Scheme,
+    k: usize,
+    s: usize,
+    delta: f64,
+    caps: &[usize],
+    mc: &MonteCarlo,
+    shard: Shard,
+) -> Vec<AblationPartialPoint> {
+    let r = r_of(k, delta);
+    let code = scheme.build(k, k, s);
+    let mut out = Vec::new();
+    // Reference: full-budget decode.
+    let opts = LsqrOptions::default();
+    let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
+        ws.optimal_redraw_trial(code.as_ref(), r, &opts, None, rng)
+    });
+    out.push(AblationPartialPoint {
+        study: "lsqr_tolerance",
+        setting: "cap=default".into(),
+        k,
+        partial,
+    });
+    for &cap in caps {
+        let capped = LsqrOptions { max_iter: cap, ..LsqrOptions::default() };
+        let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
+            ws.optimal_redraw_trial(code.as_ref(), r, &capped, None, rng)
+        });
+        out.push(AblationPartialPoint {
+            study: "lsqr_tolerance",
+            setting: format!("cap={cap}"),
+            k,
+            partial,
+        });
+    }
+    out
 }
 
 /// Optimal-decoder accuracy vs LSQR iteration cap.
@@ -122,29 +285,47 @@ pub fn lsqr_tolerance(
     caps: &[usize],
     mc: &MonteCarlo,
 ) -> Vec<AblationPoint> {
-    let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
+    finalize_ablation_points(&lsqr_tolerance_partials(scheme, k, s, delta, caps, mc, Shard::full()))
+}
+
+// ------------------------------------------------------ normalization
+
+/// One shard of [`normalization`]: the boolean arm runs the fused
+/// one-step re-draw trial; the normalized arm runs the fused
+/// column-normalized variant
+/// ([`DecodeWorkspace::onestep_normalized_redraw_trial`]) — both
+/// bit-identical to the historical allocating closures.
+pub fn normalization_partials(
+    scheme: Scheme,
+    k: usize,
+    s: usize,
+    deltas: &[f64],
+    mc: &MonteCarlo,
+    shard: Shard,
+) -> Vec<AblationPartialPoint> {
+    let code = scheme.build(k, k, s);
     let mut out = Vec::new();
-    // Reference: full-budget decode.
-    let reference = mc.mean(|rng| {
-        let a = draw_a(scheme, k, s, r, rng);
-        OptimalDecoder::new().err(&a)
-    });
-    out.push(AblationPoint {
-        study: "lsqr_tolerance",
-        setting: "cap=default".into(),
-        value: reference / k as f64,
-    });
-    for &cap in caps {
-        let mean = mc.mean(|rng| {
-            let a = draw_a(scheme, k, s, r, rng);
-            let b = vec![1.0; a.rows];
-            let res = lsqr(&a, &b, &LsqrOptions { max_iter: cap, ..LsqrOptions::default() });
-            res.residual_norm * res.residual_norm
+    for &delta in deltas {
+        let r = r_of(k, delta);
+        let rho_boolean = k as f64 / (r as f64 * s as f64);
+        let rho_normalized = normalized_rho(k, r);
+        let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
+            ws.onestep_redraw_trial(code.as_ref(), r, rho_boolean, rng)
         });
-        out.push(AblationPoint {
-            study: "lsqr_tolerance",
-            setting: format!("cap={cap}"),
-            value: mean / k as f64,
+        out.push(AblationPartialPoint {
+            study: "normalization",
+            setting: format!("{} delta={delta:.1} boolean", scheme.name()),
+            k,
+            partial,
+        });
+        let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
+            ws.onestep_normalized_redraw_trial(code.as_ref(), r, rho_normalized, rng)
+        });
+        out.push(AblationPartialPoint {
+            study: "normalization",
+            setting: format!("{} delta={delta:.1} normalized", scheme.name()),
+            k,
+            partial,
         });
     }
     out
@@ -158,37 +339,25 @@ pub fn normalization(
     deltas: &[f64],
     mc: &MonteCarlo,
 ) -> Vec<AblationPoint> {
-    let mut out = Vec::new();
-    for &delta in deltas {
-        let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
-        let boolean = mc.mean(|rng| {
-            let a = draw_a(scheme, k, s, r, rng);
-            OneStepDecoder::canonical(k, r, s).err1(&a)
-        });
-        let norm = mc.mean(|rng| {
-            let a = normalize_columns(&draw_a(scheme, k, s, r, rng));
-            OneStepDecoder::new(k as f64 / r as f64).err1(&a)
-        });
-        out.push(AblationPoint {
-            study: "normalization",
-            setting: format!("{} delta={delta:.1} boolean", scheme.name()),
-            value: boolean / k as f64,
-        });
-        out.push(AblationPoint {
-            study: "normalization",
-            setting: format!("{} delta={delta:.1} normalized", scheme.name()),
-            value: norm / k as f64,
-        });
-    }
-    out
+    finalize_ablation_points(&normalization_partials(scheme, k, s, deltas, mc, Shard::full()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codes::normalized::normalize_columns;
+    use crate::decode::{OneStepDecoder, OptimalDecoder};
+    use crate::linalg::{lsqr, CscMatrix};
+    use crate::util::Rng;
 
     fn mc() -> MonteCarlo {
         MonteCarlo::new(120, 7)
+    }
+
+    /// The pre-PR-4 per-trial draw: build G, keep r uniform columns.
+    fn draw_a(scheme: Scheme, k: usize, s: usize, r: usize, rng: &mut Rng) -> CscMatrix {
+        let g = scheme.build(k, k, s).assignment(rng);
+        g.select_columns(&rng.sample_indices(k, r))
     }
 
     #[test]
@@ -232,5 +401,167 @@ mod tests {
     fn csv_format() {
         let p = AblationPoint { study: "rho_sweep", setting: "x".into(), value: 0.5 };
         assert_eq!(p.to_csv(), "rho_sweep,x,5.000000e-1");
+    }
+
+    #[test]
+    fn csv_quoting_escapes_hostile_settings() {
+        let p = AblationPoint { study: "rho_sweep", setting: "a,b \"c\"".into(), value: 1.0 };
+        assert_eq!(p.to_csv(), "rho_sweep,\"a,b \"\"c\"\"\",1.000000e0");
+        let p = AblationPoint { study: "rho_sweep", setting: "line\nbreak".into(), value: 1.0 };
+        assert_eq!(p.to_csv(), "rho_sweep,\"line\nbreak\",1.000000e0");
+    }
+
+    #[test]
+    fn built_in_studies_emit_csv_safe_settings() {
+        // Guarantee behind the unquoted fast path: no registered study
+        // ever emits a comma/quote/newline in `setting`, so the CSV
+        // stays machine-parseable with a naive comma split.
+        let mc = MonteCarlo::new(2, 1);
+        for &id in &ABLATION_IDS {
+            let pts = study_partials(id, 12, 2, &mc, Shard::full()).unwrap();
+            assert!(!pts.is_empty(), "{id}");
+            for p in &pts {
+                assert!(
+                    !p.setting.contains(',')
+                        && !p.setting.contains('"')
+                        && !p.setting.contains('\n'),
+                    "{id}: hostile setting {:?}",
+                    p.setting
+                );
+                let row = p.finalize().to_csv();
+                assert_eq!(row.matches(',').count(), 2, "{id}: {row}");
+            }
+        }
+        assert!(study_partials("nope", 12, 2, &mc, Shard::full()).is_err());
+    }
+
+    // ---- legacy-parity pins: the workspace-threaded studies must
+    // reproduce the pre-PR-4 `mc.mean(|rng| ...)` closures bit-for-bit.
+
+    #[test]
+    fn rho_sweep_matches_legacy_closure_bitwise() {
+        let mc = MonteCarlo::new(50, 11);
+        let (scheme, k, s, delta) = (Scheme::Bgc, 24usize, 4usize, 0.25);
+        let factors = [0.5, 1.0, 2.0];
+        let pts = rho_sweep(scheme, k, s, delta, &factors, &mc);
+        let r = r_of(k, delta);
+        let canonical = k as f64 / (r as f64 * s as f64);
+        for (p, &f) in pts.iter().zip(&factors) {
+            let rho = f * canonical;
+            let legacy = mc.mean(|rng| {
+                let a = draw_a(scheme, k, s, r, rng);
+                OneStepDecoder::new(rho).err1(&a)
+            }) / k as f64;
+            assert_eq!(p.value.to_bits(), legacy.to_bits(), "factor {f}");
+        }
+    }
+
+    #[test]
+    fn rbgc_threshold_matches_legacy_closure_bitwise() {
+        let mc = MonteCarlo::new(40, 12);
+        let (k, s, delta) = (20usize, 3usize, 0.3);
+        let pairs = [(2.0, 1.0), (3.0, 2.0)];
+        let pts = rbgc_threshold(k, s, delta, &pairs, &mc);
+        let r = r_of(k, delta);
+        for (p, &(trigger, target)) in pts.iter().zip(&pairs) {
+            let legacy = mc.mean(|rng| {
+                // The pre-PR-4 inline draw, verbatim.
+                let pb = s as f64 / k as f64;
+                let supports: Vec<Vec<usize>> = (0..k)
+                    .map(|_| {
+                        let mut col: Vec<usize> =
+                            (0..k).filter(|_| rng.bernoulli(pb)).collect();
+                        let trig = (trigger * s as f64).round() as usize;
+                        let targ = ((target * s as f64).round() as usize).max(1);
+                        if col.len() > trig {
+                            while col.len() > targ {
+                                let idx = rng.usize(col.len());
+                                col.swap_remove(idx);
+                            }
+                            col.sort_unstable();
+                        }
+                        col
+                    })
+                    .collect();
+                let g = CscMatrix::from_supports(k, supports);
+                let a = g.select_columns(&rng.sample_indices(k, r));
+                OneStepDecoder::canonical(k, r, s).err1(&a)
+            }) / k as f64;
+            assert_eq!(p.value.to_bits(), legacy.to_bits(), "pair ({trigger}, {target})");
+        }
+    }
+
+    #[test]
+    fn lsqr_tolerance_matches_legacy_closure_bitwise() {
+        let mc = MonteCarlo::new(30, 13);
+        let (scheme, k, s, delta) = (Scheme::Bgc, 20usize, 4usize, 0.3);
+        let caps = [1usize, 8];
+        let pts = lsqr_tolerance(scheme, k, s, delta, &caps, &mc);
+        let r = r_of(k, delta);
+        let reference = mc.mean(|rng| {
+            let a = draw_a(scheme, k, s, r, rng);
+            OptimalDecoder::new().err(&a)
+        }) / k as f64;
+        assert_eq!(pts[0].value.to_bits(), reference.to_bits(), "cap=default");
+        for (p, &cap) in pts[1..].iter().zip(&caps) {
+            let legacy = mc.mean(|rng| {
+                let a = draw_a(scheme, k, s, r, rng);
+                let b = vec![1.0; a.rows];
+                let res =
+                    lsqr(&a, &b, &LsqrOptions { max_iter: cap, ..LsqrOptions::default() });
+                res.residual_norm * res.residual_norm
+            }) / k as f64;
+            assert_eq!(p.value.to_bits(), legacy.to_bits(), "cap {cap}");
+        }
+    }
+
+    #[test]
+    fn normalization_matches_legacy_closure_bitwise() {
+        let mc = MonteCarlo::new(40, 14);
+        let (scheme, k, s) = (Scheme::Bgc, 20usize, 4usize);
+        let delta = 0.3;
+        let pts = normalization(scheme, k, s, &[delta], &mc);
+        let r = r_of(k, delta);
+        let boolean = mc.mean(|rng| {
+            let a = draw_a(scheme, k, s, r, rng);
+            OneStepDecoder::canonical(k, r, s).err1(&a)
+        }) / k as f64;
+        let norm = mc.mean(|rng| {
+            let a = normalize_columns(&draw_a(scheme, k, s, r, rng));
+            OneStepDecoder::new(k as f64 / r as f64).err1(&a)
+        }) / k as f64;
+        assert_eq!(pts[0].value.to_bits(), boolean.to_bits(), "boolean arm");
+        assert_eq!(pts[1].value.to_bits(), norm.to_bits(), "normalized arm");
+    }
+
+    #[test]
+    fn sharded_study_partials_merge_to_entry_point_bits() {
+        let mc = MonteCarlo::new(45, 9);
+        let args = (Scheme::Bgc, 16usize, 3usize, 0.25);
+        let factors = [0.5, 1.0];
+        let whole = rho_sweep(args.0, args.1, args.2, args.3, &factors, &mc);
+        let mut merged =
+            rho_sweep_partials(args.0, args.1, args.2, args.3, &factors, &mc, Shard::new(0, 3).unwrap());
+        for sid in 1..3 {
+            let part = rho_sweep_partials(
+                args.0,
+                args.1,
+                args.2,
+                args.3,
+                &factors,
+                &mc,
+                Shard::new(sid, 3).unwrap(),
+            );
+            for (a, b) in merged.iter_mut().zip(&part) {
+                assert!(a.same_point(b));
+                a.partial.merge(&b.partial).unwrap();
+            }
+        }
+        let merged = finalize_ablation_points(&merged);
+        assert_eq!(merged.len(), whole.len());
+        for (a, b) in merged.iter().zip(&whole) {
+            assert_eq!(a.setting, b.setting);
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "{}", a.setting);
+        }
     }
 }

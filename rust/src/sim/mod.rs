@@ -1,10 +1,13 @@
-//! Simulation harness: the Monte-Carlo engine plus the figure/table
-//! regeneration entry points used by the CLI and the bench targets.
+//! Simulation harness: the Monte-Carlo engine plus the figure/table/
+//! ablation regeneration entry points used by the CLI and the bench
+//! targets.
 //!
-//! The [`shard`] module distributes any figure/table run across
-//! processes/machines as disjoint trial ranges with exact partial
-//! aggregates; merged shards reproduce the single-process output
-//! bit-for-bit (`repro shard` / `repro merge` in the CLI).
+//! The [`shard`] module distributes any figure/table/ablation run
+//! across processes/machines as disjoint trial ranges with exact
+//! partial aggregates; merged shards reproduce the single-process
+//! output bit-for-bit, compound artifacts (`repro merge --out`) make
+//! the reduction a tree, and `repro verify` audits artifact sets
+//! without merging.
 
 pub mod ablations;
 pub mod figures;
@@ -14,6 +17,6 @@ pub mod tables;
 
 pub use figures::{FigPoint, FigureConfig};
 pub use montecarlo::MonteCarlo;
-pub use ablations::AblationPoint;
+pub use ablations::{AblationPartialPoint, AblationPoint};
 pub use shard::{JobKind, JobSpec, MergedRun, Shard, ShardArtifact};
 pub use tables::TableRow;

@@ -11,11 +11,14 @@
 //! `*_partial*` methods run any contiguous slice of the trial range and
 //! return an exact [`Partial`] aggregate, and the classic single-
 //! process entry points below are literally the `num_shards = 1` case
-//! (`Shard::full()`) finalized in place. Partials accumulate through
-//! [`super::shard::ExactSum`], so merging the shards of *any* disjoint
-//! partition reproduces the single-process result bit-for-bit — the
-//! contract `repro shard`/`repro merge` and `tests/shard_parity.rs`
-//! rely on.
+//! (`Shard::full()`) finalized in place — since PR 4 that includes
+//! [`MonteCarlo::mean_std`], which rides on an exact moment accumulator
+//! (count / Σx / Σx² through [`Partial::Moments`]) instead of a
+//! two-pass sweep over the raw trial values. Partials accumulate
+//! through [`super::shard::ExactSum`], so merging the shards of *any*
+//! disjoint partition reproduces the single-process result bit-for-bit
+//! — the contract `repro shard`/`repro merge` and
+//! `tests/shard_parity.rs` rely on.
 //!
 //! The `*_ws` variants thread a per-worker workspace (typically a
 //! `decode::DecodeWorkspace`) through the trial closure, which is what
@@ -30,7 +33,7 @@
 //! of trial history.)
 
 use super::shard::{ExactSum, Partial, Shard};
-use crate::util::parallel::{parallel_map, parallel_map_with};
+use crate::util::parallel::parallel_map_with;
 use crate::util::Rng;
 
 /// Configuration shared by all simulation entry points.
@@ -81,6 +84,34 @@ impl MonteCarlo {
     /// [`MonteCarlo::mean_partial_ws`] without a workspace.
     pub fn mean_partial(&self, shard: Shard, f: impl Fn(&mut Rng) -> f64 + Sync) -> Partial {
         self.mean_partial_ws(shard, || (), |_, rng| f(rng))
+    }
+
+    /// Partial first and second moments (count, exact Σx, exact Σx²)
+    /// of `f` over this shard's slice — the merge-safe accumulator
+    /// behind [`MonteCarlo::mean_std`]. The square is taken per trial
+    /// *before* accumulation, so every input to the exact sums is a
+    /// pure function of the trial index; any disjoint partition merges
+    /// to the same finalized (mean, std) bits.
+    pub fn mean_std_partial_ws<W>(
+        &self,
+        shard: Shard,
+        init: impl Fn() -> W + Sync,
+        f: impl Fn(&mut W, &mut Rng) -> f64 + Sync,
+    ) -> Partial {
+        let root = Rng::new(self.seed);
+        let range = shard.range(self.trials);
+        let lo = range.start;
+        let vals = parallel_map_with(range.len(), self.threads, init, |ws, j| {
+            let mut rng = root.fork((lo + j) as u64);
+            f(ws, &mut rng)
+        });
+        let mut sum = ExactSum::new();
+        let mut sumsq = ExactSum::new();
+        for &v in &vals {
+            sum.add(v);
+            sumsq.add(v * v);
+        }
+        Partial::Moments { count: vals.len() as u64, sum, sumsq }
     }
 
     /// Partial success count of a predicate over this shard's slice.
@@ -136,23 +167,26 @@ impl MonteCarlo {
         self.mean_partial(Shard::full(), f).value()
     }
 
-    /// Mean and sample standard deviation. Std needs the raw trial
-    /// values (two-pass), so this one is not expressed through the
-    /// shard partials; no figure/table entry point uses it.
+    /// Mean and sample standard deviation — the `num_shards = 1` case
+    /// of [`MonteCarlo::mean_std_partial_ws`], finalized via
+    /// [`Partial::mean_std`]. Accumulates exact moments (count, Σx,
+    /// Σx²) instead of the pre-PR-4 two-pass sweep, so it is shardable
+    /// like everything else. Trade-off: the one-pass variance identity
+    /// cancels when `mean² ≫ var` (relative error ~ `(mean²/var)·2⁻⁵³`
+    /// despite the exact sums) — center the trial values in `f` if your
+    /// statistic lives in that regime; see [`Partial::mean_std`]. No
+    /// figure/table output uses `mean_std`.
     pub fn mean_std(&self, f: impl Fn(&mut Rng) -> f64 + Sync) -> (f64, f64) {
-        let root = Rng::new(self.seed);
-        let vals = parallel_map(self.trials, self.threads, |i| {
-            let mut rng = root.fork(i as u64);
-            f(&mut rng)
-        });
-        let n = vals.len().max(1) as f64;
-        let mean = vals.iter().sum::<f64>() / n;
-        let var = if vals.len() > 1 {
-            vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (n - 1.0)
-        } else {
-            0.0
-        };
-        (mean, var.sqrt())
+        self.mean_std_ws(|| (), |_, rng| f(rng))
+    }
+
+    /// [`MonteCarlo::mean_std`] with a per-thread workspace.
+    pub fn mean_std_ws<W>(
+        &self,
+        init: impl Fn() -> W + Sync,
+        f: impl Fn(&mut W, &mut Rng) -> f64 + Sync,
+    ) -> (f64, f64) {
+        self.mean_std_partial_ws(Shard::full(), init, f).mean_std()
     }
 
     /// Element-wise mean of vector-valued trials (all same length) —
@@ -308,6 +342,39 @@ mod tests {
         let (m, s) = mc.mean_std(|_| 4.0);
         assert_eq!(m, 4.0);
         assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn mean_std_estimates_uniform_moments() {
+        let mc = MonteCarlo::new(20_000, 8);
+        let (m, s) = mc.mean_std(|rng| rng.f64());
+        assert!((m - 0.5).abs() < 0.01, "{m}");
+        assert!((s - (1.0f64 / 12.0).sqrt()).abs() < 0.01, "{s}");
+    }
+
+    #[test]
+    fn sharded_mean_std_merges_to_single_process_bits() {
+        let mc = MonteCarlo { trials: 501, seed: 13, threads: 4 };
+        let trial = |_: &mut (), rng: &mut Rng| rng.f64() * 3.0 - 1.0;
+        let (m_whole, s_whole) = mc.mean_std(|rng| rng.f64() * 3.0 - 1.0);
+        for num_shards in [1usize, 2, 3, 7] {
+            let mut merged: Option<Partial> = None;
+            for sid in 0..num_shards {
+                let shard = Shard::new(sid, num_shards).unwrap();
+                // Vary thread counts per shard: must not matter.
+                let mc_s = MonteCarlo { threads: 1 + sid, ..mc };
+                let part = mc_s.mean_std_partial_ws(shard, || (), trial);
+                match merged.as_mut() {
+                    None => merged = Some(part),
+                    Some(m) => m.merge(&part).unwrap(),
+                }
+            }
+            let merged = merged.unwrap();
+            assert_eq!(merged.mc_trials(), Some(501));
+            let (m, s) = merged.mean_std();
+            assert_eq!(m.to_bits(), m_whole.to_bits(), "num_shards = {num_shards}");
+            assert_eq!(s.to_bits(), s_whole.to_bits(), "num_shards = {num_shards}");
+        }
     }
 
     #[test]

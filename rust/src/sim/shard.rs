@@ -24,21 +24,36 @@
 //!
 //! * [`Shard`] — which contiguous slice of the trial range this process
 //!   owns ([`Shard::range`] partitions `0..trials` for any shard count).
-//! * [`Partial`] — an exact partial aggregate of one figure/table
-//!   point: count + [`ExactSum`] for means, success counts for
+//! * [`Partial`] — an exact partial aggregate of one figure/table/
+//!   ablation point: count + [`ExactSum`] for means, count + Σx + Σx²
+//!   for moments (the shardable `mean_std`), success counts for
 //!   probabilities, per-element sums for curves, and a replicated
 //!   `Exact` value for deterministic (non-Monte-Carlo) rows.
-//! * [`JobSpec`] — a figure/table run identified by (kind, id, trials,
-//!   seed, k, s, tmax); [`JobSpec::run`] executes any shard of it.
-//! * [`ShardArtifact`] — the on-disk JSON form of one shard's partials
-//!   (`repro shard --out FILE`); [`ShardArtifact::merge`] validates the
-//!   partition (all shards present, same job, exactly once) and folds
-//!   the partials back into the unsharded result.
+//! * [`JobSpec`] — a figure/table/ablation run identified by (kind, id,
+//!   trials, seed, k, s, tmax); [`JobSpec::run`] executes any shard of
+//!   it. The id registries ([`FIGURE_IDS`], [`TABLE_IDS`],
+//!   [`ABLATION_IDS`]) are shared with the CLI, so every producible job
+//!   is also mergeable.
+//! * [`ShardArtifact`] — the on-disk JSON form of a set of shards'
+//!   partials (`repro shard --out FILE` writes a single-shard artifact;
+//!   `repro merge --out FILE` folds any disjoint subset into a
+//!   *compound* artifact covering several shard ids, which is what
+//!   makes tree-reduction over thousands of shards possible).
+//!   [`ShardArtifact::merge`] validates the partition (all shards
+//!   covered, same job, exactly once) and folds the partials back into
+//!   the unsharded result; [`ShardArtifact::merge_partial`] does the
+//!   same for an incomplete subset and re-emits an artifact;
+//!   [`ShardArtifact::verify_set`] audits a set (same job, disjoint
+//!   complete partition, per-artifact trial accounting) without
+//!   merging.
 //!
 //! All f64 payloads in the artifact are serialized as **hex bit
 //! patterns** (e.g. `"3fd0000000000000"` for 0.25), so a JSON round
 //! trip through [`crate::util::Json`] is exact by construction — no
-//! shortest-float printing subtleties involved.
+//! shortest-float printing subtleties involved. Every artifact also
+//! carries an FNV-1a **checksum** of its canonical body; parsing
+//! recomputes and compares it, so a corrupted or hand-edited artifact
+//! is rejected before it can poison a merge.
 //!
 //! # Example: in-process shard/merge parity
 //!
@@ -66,6 +81,7 @@ use std::ops::Range;
 
 use anyhow::{bail, Context, Result};
 
+use super::ablations::{self, AblationPartialPoint};
 use super::figures::{self, FigPartialPoint, FigureConfig};
 use super::montecarlo::MonteCarlo;
 use super::tables::{self, RowTemplate, TablePartialPoint};
@@ -235,13 +251,19 @@ impl Shard {
 
 // ------------------------------------------------------------- Partial
 
-/// An exact partial aggregate of one figure/table point over a shard's
-/// trial range. Merging partials from a disjoint trial partition and
-/// finalizing gives bit-identical results to the unsharded run.
+/// An exact partial aggregate of one figure/table/ablation point over a
+/// shard's trial range. Merging partials from a disjoint trial
+/// partition and finalizing gives bit-identical results to the
+/// unsharded run.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Partial {
     /// Partial mean: trial count and exact sum of trial values.
     Mean { count: u64, sum: ExactSum },
+    /// Partial first and second moments: trial count, exact Σx, and
+    /// exact Σx² — the merge-safe accumulator behind the shardable
+    /// `MonteCarlo::mean_std` (the per-trial square `x·x` is computed
+    /// before accumulation, so it is identical under any partition).
+    Moments { count: u64, sum: ExactSum, sumsq: ExactSum },
     /// Partial probability: trial count and number of successes.
     Prob { count: u64, hits: u64 },
     /// Partial element-wise curve mean (Fig. 5's error trajectories).
@@ -255,6 +277,7 @@ impl Partial {
     pub fn kind(&self) -> &'static str {
         match self {
             Partial::Mean { .. } => "mean",
+            Partial::Moments { .. } => "moments",
             Partial::Prob { .. } => "prob",
             Partial::Curve { .. } => "curve",
             Partial::Exact { .. } => "exact",
@@ -265,6 +288,7 @@ impl Partial {
     pub fn mc_trials(&self) -> Option<u64> {
         match self {
             Partial::Mean { count, .. }
+            | Partial::Moments { count, .. }
             | Partial::Prob { count, .. }
             | Partial::Curve { count, .. } => Some(*count),
             Partial::Exact { .. } => None,
@@ -277,6 +301,15 @@ impl Partial {
             (Partial::Mean { count, sum }, Partial::Mean { count: c2, sum: s2 }) => {
                 *count += c2;
                 sum.merge(s2);
+                Ok(())
+            }
+            (
+                Partial::Moments { count, sum, sumsq },
+                Partial::Moments { count: c2, sum: s2, sumsq: q2 },
+            ) => {
+                *count += c2;
+                sum.merge(s2);
+                sumsq.merge(q2);
                 Ok(())
             }
             (Partial::Prob { count, hits }, Partial::Prob { count: c2, hits: h2 }) => {
@@ -312,10 +345,44 @@ impl Partial {
     /// use [`Partial::curve_values`] for those.
     pub fn value(&self) -> f64 {
         match self {
-            Partial::Mean { count, sum } => sum.round() / (*count).max(1) as f64,
+            Partial::Mean { count, sum } | Partial::Moments { count, sum, .. } => {
+                sum.round() / (*count).max(1) as f64
+            }
             Partial::Prob { count, hits } => *hits as f64 / (*count).max(1) as f64,
             Partial::Exact { value } => *value,
             Partial::Curve { .. } => f64::NAN,
+        }
+    }
+
+    /// Finalized (mean, sample std) of a [`Partial::Moments`] aggregate:
+    /// `var = (Σx² − (Σx)²/n) / (n−1)`, clamped at 0 against rounding.
+    /// Every input is a correctly-rounded function of the exact sums
+    /// plus the count, so the result is invariant under the shard
+    /// partition — the property `repro`-level `mean_std` sharding rests
+    /// on. Non-moment partials return `(value, NaN)`.
+    ///
+    /// Accuracy caveat: the sums are exact, but the one-pass identity
+    /// itself cancels catastrophically when `mean² ≫ var` — the
+    /// relative error in `var` grows like `(mean²/var)·2⁻⁵³`. For such
+    /// data, center the trial values before accumulating (the shift is
+    /// deterministic per trial, so sharding is unaffected). The
+    /// pre-moments two-pass `mean_std` did not have this failure mode
+    /// but could not shard; no figure/table output uses `mean_std`.
+    pub fn mean_std(&self) -> (f64, f64) {
+        match self {
+            Partial::Moments { count, sum, sumsq } => {
+                let n = (*count).max(1) as f64;
+                let sum_r = sum.round();
+                let mean = sum_r / n;
+                let std = if *count > 1 {
+                    let var = (sumsq.round() - sum_r * sum_r / n) / (n - 1.0);
+                    var.max(0.0).sqrt()
+                } else {
+                    0.0
+                };
+                (mean, std)
+            }
+            p => (p.value(), f64::NAN),
         }
     }
 
@@ -371,6 +438,7 @@ impl PostMap {
 pub enum JobKind {
     Figure,
     Table,
+    Ablation,
 }
 
 impl JobKind {
@@ -378,6 +446,7 @@ impl JobKind {
         match self {
             JobKind::Figure => "figure",
             JobKind::Table => "table",
+            JobKind::Ablation => "ablation",
         }
     }
 
@@ -385,17 +454,20 @@ impl JobKind {
         match s {
             "figure" => Ok(JobKind::Figure),
             "table" => Ok(JobKind::Table),
-            other => bail!("unknown job kind {other:?} (figure|table)"),
+            "ablation" => Ok(JobKind::Ablation),
+            other => bail!("unknown job kind {other:?} (figure|table|ablation)"),
         }
     }
 }
 
-/// A fully-specified figure/table run: everything that determines the
-/// output bits. Two artifacts merge only if their jobs are identical.
+/// A fully-specified figure/table/ablation run: everything that
+/// determines the output bits. Two artifacts merge only if their jobs
+/// are identical.
 ///
-/// `id` is `"2".."5"` for figures and `"thm5".."thm24"` for tables;
-/// `s` is table-only (0 for figures, which sweep the paper's s values)
-/// and `tmax` is Figure-5-only (0 otherwise).
+/// `id` is `"2".."5"` for figures, `"thm5".."thm24"` for tables, and
+/// an [`ABLATION_IDS`] study for ablations; `s` is table/ablation-only
+/// (0 for figures, which sweep the paper's s values) and `tmax` is
+/// Figure-5-only (0 otherwise).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct JobSpec {
     pub kind: JobKind,
@@ -463,6 +535,10 @@ impl JobSpec {
                 };
                 Ok(ShardPoints::Table(pts))
             }
+            JobKind::Ablation => {
+                let pts = ablations::study_partials(&self.id, self.k, self.s, &mc, shard)?;
+                Ok(ShardPoints::Ablation(pts))
+            }
         }
     }
 }
@@ -474,6 +550,7 @@ impl JobSpec {
 pub enum ShardPoints {
     Fig(Vec<FigPartialPoint>),
     Table(Vec<TablePartialPoint>),
+    Ablation(Vec<AblationPartialPoint>),
 }
 
 impl ShardPoints {
@@ -481,6 +558,7 @@ impl ShardPoints {
         match self {
             ShardPoints::Fig(v) => v.len(),
             ShardPoints::Table(v) => v.len(),
+            ShardPoints::Ablation(v) => v.len(),
         }
     }
 
@@ -489,45 +567,85 @@ impl ShardPoints {
     }
 
     /// Fold another shard's points in. Points must line up exactly
-    /// (same order, same metadata) — they do by construction, since
+    /// (same order, same metadata — [`ShardPoints::check_aligned`], the
+    /// single home of that validation); they do by construction, since
     /// every shard enumerates the same sweep.
     pub fn merge_from(&mut self, other: &ShardPoints) -> Result<()> {
+        self.check_aligned(other)?;
         match (self, other) {
             (ShardPoints::Fig(a), ShardPoints::Fig(b)) => {
-                if a.len() != b.len() {
-                    bail!("point count mismatch: {} vs {}", a.len(), b.len());
-                }
                 for (i, (pa, pb)) in a.iter_mut().zip(b).enumerate() {
-                    if !pa.same_point(pb) {
-                        bail!("figure point {i} metadata mismatch across shards");
-                    }
                     pa.partial.merge(&pb.partial).with_context(|| format!("figure point {i}"))?;
                 }
                 Ok(())
             }
             (ShardPoints::Table(a), ShardPoints::Table(b)) => {
-                if a.len() != b.len() {
-                    bail!("point count mismatch: {} vs {}", a.len(), b.len());
-                }
                 for (i, (pa, pb)) in a.iter_mut().zip(b).enumerate() {
-                    if !pa.same_point(pb) {
-                        bail!("table point {i} metadata mismatch across shards");
-                    }
                     pa.partial.merge(&pb.partial).with_context(|| format!("table point {i}"))?;
                 }
                 Ok(())
             }
-            _ => bail!("cannot merge figure points with table points"),
+            (ShardPoints::Ablation(a), ShardPoints::Ablation(b)) => {
+                for (i, (pa, pb)) in a.iter_mut().zip(b).enumerate() {
+                    pa.partial
+                        .merge(&pb.partial)
+                        .with_context(|| format!("ablation point {i}"))?;
+                }
+                Ok(())
+            }
+            _ => unreachable!("check_aligned verified matching point kinds"),
         }
     }
 
-    /// Verify every Monte-Carlo point aggregated exactly `trials`
-    /// trials (i.e. the shard partition was complete and disjoint).
-    pub fn check_trials(&self, trials: usize) -> Result<()> {
+    /// The alignment validation shared by [`ShardPoints::merge_from`]
+    /// (which runs it before folding) and `verify` (which audits a set
+    /// without folding): same kind, same point count, same per-point
+    /// metadata.
+    pub fn check_aligned(&self, other: &ShardPoints) -> Result<()> {
+        let mismatch = |i: usize| -> Result<()> {
+            bail!("point {i} metadata mismatch across artifacts");
+        };
+        match (self, other) {
+            (ShardPoints::Fig(a), ShardPoints::Fig(b)) if a.len() == b.len() => {
+                for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+                    if !pa.same_point(pb) {
+                        return mismatch(i);
+                    }
+                }
+                Ok(())
+            }
+            (ShardPoints::Table(a), ShardPoints::Table(b)) if a.len() == b.len() => {
+                for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+                    if !pa.same_point(pb) {
+                        return mismatch(i);
+                    }
+                }
+                Ok(())
+            }
+            (ShardPoints::Ablation(a), ShardPoints::Ablation(b)) if a.len() == b.len() => {
+                for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+                    if !pa.same_point(pb) {
+                        return mismatch(i);
+                    }
+                }
+                Ok(())
+            }
+            (a, b) => bail!(
+                "point sets do not line up ({} point(s) vs {} of possibly different kind)",
+                a.len(),
+                b.len()
+            ),
+        }
+    }
+
+    /// Verify every Monte-Carlo point aggregated exactly `expected`
+    /// trials (for a full merge that is `job.trials`; for a partial
+    /// artifact it is the total size of its covered shard ranges).
+    pub fn check_trials(&self, expected: u64) -> Result<()> {
         let check = |i: usize, got: Option<u64>| -> Result<()> {
             if let Some(count) = got {
-                if count != trials as u64 {
-                    bail!("point {i} aggregated {count} trials, expected {trials}");
+                if count != expected {
+                    bail!("point {i} aggregated {count} trials, expected {expected}");
                 }
             }
             Ok(())
@@ -539,6 +657,11 @@ impl ShardPoints {
                 }
             }
             ShardPoints::Table(v) => {
+                for (i, p) in v.iter().enumerate() {
+                    check(i, p.partial.mc_trials())?;
+                }
+            }
+            ShardPoints::Ablation(v) => {
                 for (i, p) in v.iter().enumerate() {
                     check(i, p.partial.mc_trials())?;
                 }
@@ -572,6 +695,14 @@ impl ShardPoints {
                     }
                 }
             }
+            ShardPoints::Ablation(v) => {
+                out.push_str(ablations::AblationPoint::csv_header());
+                out.push('\n');
+                for p in v {
+                    out.push_str(&p.finalize().to_csv());
+                    out.push('\n');
+                }
+            }
         }
         out
     }
@@ -579,15 +710,37 @@ impl ShardPoints {
 
 // ------------------------------------------------------- ShardArtifact
 
-/// On-disk format tag; bump on incompatible schema changes.
-pub const SHARD_FORMAT: &str = "gradcode-shard/v1";
+/// On-disk format tag; bump on incompatible schema changes. v2 added
+/// compound `shard_ids` (tree-reduction) and the body checksum;
+/// [`ShardArtifact::parse`] still accepts [`SHARD_FORMAT_V1`] files.
+pub const SHARD_FORMAT: &str = "gradcode-shard/v2";
 
-/// One shard's serialized result: the job identity, which slice this
-/// is, and the per-point partial aggregates.
+/// The PR-3 era single-shard format (`shard_id` field, no checksum).
+/// Read-compatible; everything written today is [`SHARD_FORMAT`].
+pub const SHARD_FORMAT_V1: &str = "gradcode-shard/v1";
+
+/// FNV-1a 64-bit over the canonical (compact) body serialization —
+/// cheap, dependency-free integrity hash for artifact files. This
+/// guards against corruption and accidental edits, not adversaries.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A serialized set of shard partials: the job identity, which shard
+/// ids it covers (one for a freshly computed shard; several for a
+/// compound artifact produced by `repro merge --out`), and the
+/// per-point partial aggregates.
 #[derive(Clone, Debug)]
 pub struct ShardArtifact {
     pub job: JobSpec,
-    pub shard_id: usize,
+    /// Sorted, distinct shard ids folded into this artifact, each
+    /// `< num_shards`.
+    pub shard_ids: Vec<usize>,
     pub num_shards: usize,
     pub points: ShardPoints,
 }
@@ -605,37 +758,55 @@ impl MergedRun {
     }
 }
 
+fn validate_shard_ids(ids: &[usize], num_shards: usize) -> Result<()> {
+    if ids.is_empty() {
+        bail!("artifact covers no shard ids");
+    }
+    if !ids.windows(2).all(|w| w[0] < w[1]) {
+        bail!("shard_ids must be sorted and distinct, got {ids:?}");
+    }
+    let max = *ids.last().expect("non-empty");
+    if max >= num_shards {
+        bail!("shard id {max} out of range for num_shards {num_shards}");
+    }
+    Ok(())
+}
+
 impl ShardArtifact {
     /// Run one shard of `job` and package the result.
     pub fn compute(job: &JobSpec, shard: Shard, threads: Option<usize>) -> Result<ShardArtifact> {
         let points = job.run(shard, threads)?;
         Ok(ShardArtifact {
             job: job.clone(),
-            shard_id: shard.shard_id,
+            shard_ids: vec![shard.shard_id],
             num_shards: shard.num_shards,
             points,
         })
     }
 
-    /// Validate a set of shard artifacts and fold them into the
-    /// unsharded result: same job everywhere, shard ids covering
-    /// `0..num_shards` exactly once, metadata aligned pointwise, and
-    /// every Monte-Carlo point accounting for exactly `job.trials`
-    /// trials.
-    pub fn merge(mut shards: Vec<ShardArtifact>) -> Result<MergedRun> {
+    /// Total Monte-Carlo trials the covered shard ranges contain — what
+    /// every MC point of this artifact must have aggregated.
+    pub fn covered_trials(&self) -> u64 {
+        self.shard_ids
+            .iter()
+            .map(|&i| {
+                let shard = Shard { shard_id: i, num_shards: self.num_shards };
+                shard.range(self.job.trials).len() as u64
+            })
+            .sum()
+    }
+
+    /// Set-level validation shared by the merge paths and
+    /// [`ShardArtifact::verify_set`] — the single home of the rules, so
+    /// `verify` can never accept a set `merge` rejects (or vice versa):
+    /// same job and `num_shards` everywhere, pairwise-disjoint shard id
+    /// sets. Returns (num_shards, sorted union of covered ids);
+    /// completeness is the caller's policy via [`require_complete`].
+    fn validate_set(shards: &[ShardArtifact]) -> Result<(usize, Vec<usize>)> {
         if shards.is_empty() {
-            bail!("no shard artifacts to merge");
+            bail!("no shard artifacts given");
         }
-        shards.sort_by_key(|s| s.shard_id);
         let num_shards = shards[0].num_shards;
-        let ids: Vec<usize> = shards.iter().map(|s| s.shard_id).collect();
-        let expected: Vec<usize> = (0..num_shards).collect();
-        if ids != expected {
-            bail!(
-                "shard artifacts must cover ids 0..{num_shards} exactly once, got {ids:?} \
-                 (missing or duplicate shards?)"
-            );
-        }
         for s in &shards[1..] {
             if s.num_shards != num_shards {
                 bail!("num_shards disagrees: {} vs {}", s.num_shards, num_shards);
@@ -648,6 +819,22 @@ impl ShardArtifact {
                 );
             }
         }
+        let mut covered: Vec<usize> =
+            shards.iter().flat_map(|s| s.shard_ids.iter().copied()).collect();
+        covered.sort_unstable();
+        if let Some(w) = covered.windows(2).find(|w| w[0] == w[1]) {
+            bail!("shard id {} appears in more than one artifact (overlapping set)", w[0]);
+        }
+        validate_shard_ids(&covered, num_shards)?;
+        Ok((num_shards, covered))
+    }
+
+    /// Validate ([`ShardArtifact::validate_set`]) and fold: points are
+    /// aligned and folded in ascending-first-id order. Returns the
+    /// folded points plus the sorted union of covered ids.
+    fn fold(mut shards: Vec<ShardArtifact>) -> Result<(JobSpec, usize, ShardPoints, Vec<usize>)> {
+        let (num_shards, covered) = Self::validate_set(&shards)?;
+        shards.sort_by_key(|s| s.shard_ids.first().copied().unwrap_or(usize::MAX));
         let mut iter = shards.into_iter();
         let first = iter.next().expect("non-empty");
         let job = first.job;
@@ -655,46 +842,134 @@ impl ShardArtifact {
         for s in iter {
             points
                 .merge_from(&s.points)
-                .with_context(|| format!("merging shard {}", s.shard_id))?;
+                .with_context(|| format!("merging shards {:?}", s.shard_ids))?;
         }
-        points.check_trials(job.trials)?;
+        Ok((job, num_shards, points, covered))
+    }
+
+    /// Validate a set of shard artifacts and fold them into the
+    /// unsharded result: same job everywhere, shard ids covering
+    /// `0..num_shards` exactly once (compound artifacts count for every
+    /// id they fold), metadata aligned pointwise, and every Monte-Carlo
+    /// point accounting for exactly `job.trials` trials.
+    pub fn merge(shards: Vec<ShardArtifact>) -> Result<MergedRun> {
+        let (job, num_shards, points, covered) = Self::fold(shards)?;
+        require_complete(&covered, num_shards)?;
+        points.check_trials(job.trials as u64)?;
         Ok(MergedRun { job, points })
     }
 
+    /// Fold any disjoint subset of a job's artifacts into a single
+    /// *compound* artifact (the `repro merge --out` path). Folding is
+    /// exact, so any reduction tree over the shards — pairwise, 8→2→1,
+    /// whatever the orchestration favors — finalizes to the same bits
+    /// as a flat [`ShardArtifact::merge`] of the leaves.
+    pub fn merge_partial(shards: Vec<ShardArtifact>) -> Result<ShardArtifact> {
+        let (job, num_shards, points, covered) = Self::fold(shards)?;
+        let folded = ShardArtifact { job, shard_ids: covered, num_shards, points };
+        points_check(&folded)?;
+        Ok(folded)
+    }
+
+    /// Audit an artifact set **without merging**: the same set-level
+    /// rules as the merge paths (one shared `validate_set`, so `verify`
+    /// can never accept a set `merge` rejects) plus pointwise-aligned
+    /// metadata, complete `0..num_shards` coverage, and per-artifact
+    /// trial accounting (every Monte-Carlo point holds exactly the
+    /// trials of its covered ranges). Checksum integrity is enforced
+    /// earlier, by [`ShardArtifact::parse`].
+    pub fn verify_set(shards: &[ShardArtifact]) -> Result<()> {
+        let (num_shards, covered) = Self::validate_set(shards)?;
+        for s in &shards[1..] {
+            shards[0]
+                .points
+                .check_aligned(&s.points)
+                .with_context(|| format!("artifact covering shards {:?}", s.shard_ids))?;
+        }
+        require_complete(&covered, num_shards)?;
+        for s in shards {
+            points_check(s).with_context(|| {
+                format!("trial accounting of artifact covering shards {:?}", s.shard_ids)
+            })?;
+        }
+        Ok(())
+    }
+
     /// Serialize to the artifact JSON (pretty-printed for readable
-    /// diffs; all f64 payloads as hex bit patterns).
+    /// diffs; all f64 payloads as hex bit patterns; body checksummed).
     pub fn to_json_string(&self) -> String {
         self.to_json().write_pretty()
     }
 
-    /// Parse an artifact file's contents.
+    /// Parse an artifact file's contents (checksum-verified).
     pub fn parse(text: &str) -> Result<ShardArtifact> {
         Self::from_json(&Json::parse(text).context("invalid JSON")?)
+    }
+
+    /// Hex FNV-1a digest of the artifact body: the compact
+    /// serialization of the object with the `checksum` field omitted
+    /// ([`Json::write_excluding`] — no deep clone of the points
+    /// payload, which matters when tree-reduction collection points
+    /// parse thousands of artifacts). Stable across write→parse→write
+    /// because the writer is canonical (sorted keys, shortest-
+    /// round-trip numbers, hex f64 payloads).
+    fn checksum_of(body: &Json) -> Result<String> {
+        body.as_obj().context("artifact body must be an object")?;
+        Ok(format!("{:016x}", fnv1a64(body.write_excluding("checksum").as_bytes())))
     }
 
     pub fn to_json(&self) -> Json {
         let points = match &self.points {
             ShardPoints::Fig(v) => Json::Arr(v.iter().map(fig_point_to_json).collect()),
             ShardPoints::Table(v) => Json::Arr(v.iter().map(table_point_to_json).collect()),
+            ShardPoints::Ablation(v) => {
+                Json::Arr(v.iter().map(ablation_point_to_json).collect())
+            }
         };
-        obj(vec![
+        let body = obj(vec![
             ("format", Json::Str(SHARD_FORMAT.to_string())),
             ("job", job_to_json(&self.job)),
-            ("shard_id", Json::Num(self.shard_id as f64)),
             ("num_shards", Json::Num(self.num_shards as f64)),
+            (
+                "shard_ids",
+                Json::Arr(self.shard_ids.iter().map(|&i| Json::Num(i as f64)).collect()),
+            ),
             ("points", points),
-        ])
+        ]);
+        let digest = Self::checksum_of(&body).expect("artifact body is an object");
+        let Json::Obj(mut m) = body else { unreachable!("obj() builds an object") };
+        m.insert("checksum".to_string(), Json::Str(digest));
+        Json::Obj(m)
     }
 
     pub fn from_json(j: &Json) -> Result<ShardArtifact> {
         let format = j.get("format")?.as_str()?;
-        if format != SHARD_FORMAT {
+        let legacy_v1 = format == SHARD_FORMAT_V1;
+        if !legacy_v1 && format != SHARD_FORMAT {
             bail!("unsupported artifact format {format:?} (expected {SHARD_FORMAT:?})");
         }
+        match j.opt("checksum") {
+            Some(stored) => {
+                let stored = stored.as_str()?;
+                let expect = Self::checksum_of(j)?;
+                if stored != expect {
+                    bail!(
+                        "checksum mismatch: artifact claims {stored}, content hashes to \
+                         {expect} (corrupted or hand-edited artifact?)"
+                    );
+                }
+            }
+            None if legacy_v1 => {} // v1 predates checksums
+            None => bail!("artifact has no checksum (required by {SHARD_FORMAT:?})"),
+        }
         let job = job_from_json(j.get("job")?).context("job")?;
-        let shard_id = j.get("shard_id")?.as_usize()?;
         let num_shards = j.get("num_shards")?.as_usize()?;
-        Shard::new(shard_id, num_shards).context("shard header")?;
+        let shard_ids: Vec<usize> = match j.opt("shard_ids") {
+            Some(arr) => arr.as_arr()?.iter().map(Json::as_usize).collect::<Result<_>>()?,
+            // Legacy v1 single-shard header.
+            None => vec![j.get("shard_id")?.as_usize()?],
+        };
+        validate_shard_ids(&shard_ids, num_shards).context("shard header")?;
         let raw_points = j.get("points")?.as_arr()?;
         let points = match job.kind {
             JobKind::Figure => ShardPoints::Fig(
@@ -711,9 +986,37 @@ impl ShardArtifact {
                     .map(|(i, p)| table_point_from_json(p).with_context(|| format!("point {i}")))
                     .collect::<Result<Vec<_>>>()?,
             ),
+            JobKind::Ablation => ShardPoints::Ablation(
+                raw_points
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        ablation_point_from_json(p).with_context(|| format!("point {i}"))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            ),
         };
-        Ok(ShardArtifact { job, shard_id, num_shards, points })
+        Ok(ShardArtifact { job, shard_ids, num_shards, points })
     }
+}
+
+/// Per-artifact trial accounting: every MC point holds exactly the
+/// trials of the artifact's covered ranges.
+fn points_check(artifact: &ShardArtifact) -> Result<()> {
+    artifact.points.check_trials(artifact.covered_trials())
+}
+
+/// The full-partition requirement shared by [`ShardArtifact::merge`]
+/// and [`ShardArtifact::verify_set`]: the sorted covered ids must be
+/// exactly `0..num_shards`.
+fn require_complete(covered: &[usize], num_shards: usize) -> Result<()> {
+    let expected: Vec<usize> = (0..num_shards).collect();
+    if covered != expected {
+        let missing: Vec<usize> =
+            expected.into_iter().filter(|i| !covered.contains(i)).collect();
+        bail!("incomplete partition: ids {covered:?} of 0..{num_shards} (missing {missing:?})");
+    }
+    Ok(())
 }
 
 // ------------------------------------------------- JSON (de)serialization
@@ -755,6 +1058,12 @@ fn partial_to_json(p: &Partial) -> Json {
             ("count", Json::Num(*count as f64)),
             ("sum", exact_sum_to_json(sum)),
         ]),
+        Partial::Moments { count, sum, sumsq } => obj(vec![
+            ("kind", Json::Str("moments".into())),
+            ("count", Json::Num(*count as f64)),
+            ("sum", exact_sum_to_json(sum)),
+            ("sumsq", exact_sum_to_json(sumsq)),
+        ]),
         Partial::Prob { count, hits } => obj(vec![
             ("kind", Json::Str("prob".into())),
             ("count", Json::Num(*count as f64)),
@@ -777,6 +1086,11 @@ fn partial_from_json(j: &Json) -> Result<Partial> {
         "mean" => Ok(Partial::Mean {
             count: j.get("count")?.as_usize()? as u64,
             sum: exact_sum_from_json(j.get("sum")?)?,
+        }),
+        "moments" => Ok(Partial::Moments {
+            count: j.get("count")?.as_usize()? as u64,
+            sum: exact_sum_from_json(j.get("sum")?)?,
+            sumsq: exact_sum_from_json(j.get("sumsq")?)?,
         }),
         "prob" => Ok(Partial::Prob {
             count: j.get("count")?.as_usize()? as u64,
@@ -851,6 +1165,28 @@ pub const FIGURE_IDS: [&str; 4] = ["fig2", "fig3", "fig4", "fig5"];
 pub const TABLE_IDS: [&str; 8] =
     ["thm3", "thm5", "thm6", "thm8", "thm10", "thm11", "thm21", "thm24"];
 
+/// Every ablation study id the CLI (`repro ablation --study`,
+/// `repro shard --ablation`, `repro run --ablation`) and
+/// [`JobSpec::run`] accept — the single registry, like [`TABLE_IDS`],
+/// so a study cannot be producible-but-unmergeable (the dispatch lives
+/// in `ablations::study_partials`).
+pub const ABLATION_IDS: [&str; 4] = ["rho", "rbgc", "lsqr", "normalization"];
+
+/// Point-level study names (the `study` CSV column), interned on
+/// deserialization like figure/table ids.
+pub const ABLATION_STUDIES: [&str; 4] =
+    ["rho_sweep", "rbgc_threshold", "lsqr_tolerance", "normalization"];
+
+/// Intern a study name to the `&'static str` `AblationPoint.study`
+/// carries, against [`ABLATION_STUDIES`].
+fn intern_study(name: &str) -> Result<&'static str> {
+    ABLATION_STUDIES
+        .iter()
+        .find(|&&id| id == name)
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("unknown ablation study {name:?} in artifact"))
+}
+
 /// Intern a figure id to the `&'static str` `FigPoint.figure` carries.
 fn intern_figure(name: &str) -> Result<&'static str> {
     FIGURE_IDS
@@ -906,6 +1242,24 @@ fn table_point_to_json(p: &TablePartialPoint) -> Json {
         })
         .collect();
     obj(vec![("rows", Json::Arr(rows)), ("partial", partial_to_json(&p.partial))])
+}
+
+fn ablation_point_to_json(p: &AblationPartialPoint) -> Json {
+    obj(vec![
+        ("study", Json::Str(p.study.to_string())),
+        ("setting", Json::Str(p.setting.clone())),
+        ("k", Json::Num(p.k as f64)),
+        ("partial", partial_to_json(&p.partial)),
+    ])
+}
+
+fn ablation_point_from_json(j: &Json) -> Result<AblationPartialPoint> {
+    Ok(AblationPartialPoint {
+        study: intern_study(j.get("study")?.as_str()?)?,
+        setting: j.get("setting")?.as_str()?.to_string(),
+        k: j.get("k")?.as_usize()?,
+        partial: partial_from_json(j.get("partial")?)?,
+    })
 }
 
 fn table_point_from_json(j: &Json) -> Result<TablePartialPoint> {
@@ -1063,8 +1417,12 @@ mod tests {
         let mut sum = ExactSum::new();
         sum.add(0.3);
         sum.add(1e-17);
+        let mut sumsq = ExactSum::new();
+        sumsq.add(0.09);
+        sumsq.add(1e-19);
         let cases = [
             Partial::Mean { count: 42, sum: sum.clone() },
+            Partial::Moments { count: 42, sum: sum.clone(), sumsq },
             Partial::Prob { count: 100, hits: 3 },
             Partial::Curve { count: 7, sums: vec![sum.clone(), ExactSum::new()] },
             Partial::Exact { value: f64::NAN },
@@ -1075,11 +1433,51 @@ mod tests {
                 .unwrap();
             assert_eq!(back.kind(), p.kind());
             assert_eq!(back.value().to_bits(), p.value().to_bits());
+            let (m0, s0) = p.mean_std();
+            let (m1, s1) = back.mean_std();
+            assert_eq!(m1.to_bits(), m0.to_bits());
+            assert_eq!(s1.to_bits(), s0.to_bits());
             assert_eq!(
                 back.curve_values().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                 p.curve_values().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
             );
         }
+    }
+
+    #[test]
+    fn moments_merge_is_partition_invariant() {
+        let vals: Vec<f64> = (0..137).map(|i| ((i * 29) % 83) as f64 * 0.013 - 0.4).collect();
+        let moments_of = |slice: &[f64]| -> Partial {
+            let mut sum = ExactSum::new();
+            let mut sumsq = ExactSum::new();
+            for &v in slice {
+                sum.add(v);
+                sumsq.add(v * v);
+            }
+            Partial::Moments { count: slice.len() as u64, sum, sumsq }
+        };
+        let whole = moments_of(&vals);
+        let (m_whole, s_whole) = whole.mean_std();
+        assert!(s_whole > 0.0);
+        for pieces in [2usize, 3, 7] {
+            let mut merged: Option<Partial> = None;
+            for i in 0..pieces {
+                let lo = vals.len() * i / pieces;
+                let hi = vals.len() * (i + 1) / pieces;
+                let part = moments_of(&vals[lo..hi]);
+                match merged.as_mut() {
+                    None => merged = Some(part),
+                    Some(m) => m.merge(&part).unwrap(),
+                }
+            }
+            let (m, s) = merged.unwrap().mean_std();
+            assert_eq!(m.to_bits(), m_whole.to_bits(), "pieces={pieces}");
+            assert_eq!(s.to_bits(), s_whole.to_bits(), "pieces={pieces}");
+        }
+        // Constant data: exact zero std through the moments identity.
+        let (m, s) = moments_of(&[4.0; 50]).mean_std();
+        assert_eq!(m, 4.0);
+        assert_eq!(s, 0.0);
     }
 
     #[test]
@@ -1105,7 +1503,7 @@ mod tests {
         };
         let art = |sid: usize, n: usize| ShardArtifact {
             job: job.clone(),
-            shard_id: sid,
+            shard_ids: vec![sid],
             num_shards: n,
             points: ShardPoints::Table(vec![point.clone()]),
         };
@@ -1122,5 +1520,68 @@ mod tests {
         // Valid 2-shard partition of a deterministic point.
         let merged = ShardArtifact::merge(vec![art(0, 2), art(1, 2)]).unwrap();
         assert_eq!(merged.points.len(), 1);
+        // Folding a subset gives a compound artifact; overlaps reject.
+        let folded = ShardArtifact::merge_partial(vec![art(0, 3), art(2, 3)]).unwrap();
+        assert_eq!(folded.shard_ids, vec![0, 2]);
+        assert!(ShardArtifact::merge_partial(vec![folded.clone(), art(2, 3)]).is_err());
+        // Compound + disjoint remainder completes the partition.
+        assert!(ShardArtifact::merge(vec![folded.clone(), art(1, 3)]).is_ok());
+        assert!(ShardArtifact::verify_set(&[folded.clone(), art(1, 3)]).is_ok());
+        assert!(ShardArtifact::verify_set(&[folded]).is_err());
+    }
+
+    #[test]
+    fn checksum_rejects_tampered_artifacts() {
+        // thm11 is deterministic and cheap — a good artifact fixture.
+        let job = JobSpec {
+            kind: JobKind::Table,
+            id: "thm11".into(),
+            trials: 10,
+            seed: 3,
+            k: 12,
+            s: 3,
+            tmax: 0,
+        };
+        let art = ShardArtifact::compute(&job, Shard::new(0, 2).unwrap(), Some(1)).unwrap();
+        let text = art.to_json_string();
+        assert!(text.contains("\"checksum\""));
+        // Pristine text parses.
+        assert!(ShardArtifact::parse(&text).is_ok());
+        // Tampering with the body (without refreshing the checksum)
+        // must be caught.
+        let tampered = text.replacen("\"num_shards\": 2", "\"num_shards\": 4", 1);
+        assert_ne!(tampered, text);
+        let err = ShardArtifact::parse(&tampered).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        // Tampering with the checksum itself is equally fatal.
+        let bad_sum = text.replacen("\"checksum\": \"", "\"checksum\": \"f00d", 1);
+        assert!(ShardArtifact::parse(&bad_sum).is_err());
+    }
+
+    #[test]
+    fn legacy_v1_artifacts_still_parse() {
+        let job = JobSpec {
+            kind: JobKind::Table,
+            id: "thm11".into(),
+            trials: 10,
+            seed: 3,
+            k: 12,
+            s: 3,
+            tmax: 0,
+        };
+        let art = ShardArtifact::compute(&job, Shard::new(1, 3).unwrap(), Some(1)).unwrap();
+        // Rewrite the v2 artifact into the PR-3 v1 shape: single
+        // shard_id field, no shard_ids, no checksum.
+        let Json::Obj(mut m) = art.to_json() else { panic!("artifact is an object") };
+        m.remove("checksum");
+        m.remove("shard_ids");
+        m.insert("format".into(), Json::Str(SHARD_FORMAT_V1.into()));
+        m.insert("shard_id".into(), Json::Num(1.0));
+        let text = Json::Obj(m).write_pretty();
+        let parsed = ShardArtifact::parse(&text).unwrap();
+        assert_eq!(parsed.shard_ids, vec![1]);
+        assert_eq!(parsed.num_shards, 3);
+        // Re-serializing upgrades to v2 with a checksum.
+        assert!(parsed.to_json_string().contains(SHARD_FORMAT));
     }
 }

@@ -45,6 +45,18 @@ impl Json {
         }
     }
 
+    /// Optional object field lookup: `None` when the key is absent (or
+    /// when `self` is not an object). Callers that treat absence as an
+    /// error use [`Json::get`]; this is for schema fields that older
+    /// artifact versions legitimately omit (e.g. the shard artifact's
+    /// `checksum`, absent in the v1 format).
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -100,6 +112,36 @@ impl Json {
         self.write_into(&mut out, Some(2), 0);
         out.push('\n');
         out
+    }
+
+    /// Compact serialization of an object with one **top-level** key
+    /// omitted — byte-identical to removing the key from a clone and
+    /// calling [`Json::write`], but without deep-cloning the value tree
+    /// (the shard-artifact checksum hashes multi-megabyte bodies this
+    /// way on every parse). Non-objects serialize exactly as `write`.
+    pub fn write_excluding(&self, skip_key: &str) -> String {
+        match self {
+            Json::Obj(map) => {
+                let mut out = String::new();
+                out.push('{');
+                let mut first = true;
+                for (key, val) in map {
+                    if key == skip_key {
+                        continue;
+                    }
+                    if !first {
+                        out.push(',');
+                    }
+                    first = false;
+                    write_escaped(key, &mut out);
+                    out.push(':');
+                    val.write_into(&mut out, None, 0);
+                }
+                out.push('}');
+                out
+            }
+            other => other.write(),
+        }
     }
 
     fn write_into(&self, out: &mut String, indent: Option<usize>, level: usize) {
@@ -388,6 +430,14 @@ mod tests {
     }
 
     #[test]
+    fn opt_is_none_for_missing_keys_and_non_objects() {
+        let j = Json::parse(r#"{"a": 1}"#).unwrap();
+        assert!(j.opt("a").is_some());
+        assert!(j.opt("b").is_none());
+        assert!(Json::Num(1.0).opt("a").is_none());
+    }
+
+    #[test]
     fn as_usize_rejects_fractional_and_negative() {
         assert!(Json::Num(1.5).as_usize().is_err());
         assert!(Json::Num(-1.0).as_usize().is_err());
@@ -427,6 +477,23 @@ mod tests {
     fn write_compact_has_no_whitespace() {
         let j = Json::parse(r#"{"a": [1, 2], "b": "x"}"#).unwrap();
         assert_eq!(j.write(), r#"{"a":[1,2],"b":"x"}"#);
+    }
+
+    #[test]
+    fn write_excluding_matches_remove_then_write() {
+        let j = Json::parse(r#"{"a": [1, 2], "checksum": "xx", "z": {"c": 3}}"#).unwrap();
+        let Json::Obj(mut m) = j.clone() else { panic!("object") };
+        m.remove("checksum");
+        assert_eq!(j.write_excluding("checksum"), Json::Obj(m).write());
+        // Absent key: identical to a plain write. Only top-level keys
+        // are skipped (nested "c" survives).
+        assert_eq!(j.write_excluding("nope"), j.write());
+        assert_eq!(j.write_excluding("c"), j.write());
+        // Excluding the only key leaves the empty object.
+        let solo = Json::parse(r#"{"only": 1}"#).unwrap();
+        assert_eq!(solo.write_excluding("only"), "{}");
+        // Non-objects pass through.
+        assert_eq!(Json::Num(1.0).write_excluding("x"), "1");
     }
 
     #[test]

@@ -1,22 +1,25 @@
-//! Shard/merge bit-parity pins: for every figure and the Monte-Carlo
-//! theorem tables, running the trial range as {1, 2, 3, 7} disjoint
-//! shards (each with its own thread count), serializing every shard
-//! through the on-disk JSON artifact format, and merging must reproduce
-//! the single-process entry points **bit-for-bit** — the contract the
-//! `repro shard` / `repro merge` CLI pair and the CI fan-out job rely
-//! on.
+//! Shard/merge bit-parity pins: for every figure, the Monte-Carlo
+//! theorem tables, the ablation studies, and `mean_std`, running the
+//! trial range as {1, 2, 3, 7} disjoint shards (each with its own
+//! thread count), serializing every shard through the on-disk JSON
+//! artifact format, and merging must reproduce the single-process
+//! entry points **bit-for-bit** — the contract the `repro shard` /
+//! `repro merge` / `repro run --fanout` CLI paths and the CI fan-out
+//! jobs rely on. Also pins tree-reduction (`merge_partial` folds equal
+//! the flat merge byte-for-byte) and the `verify` accept/reject cases.
 
 use gradcode::codes::Scheme;
 use gradcode::sim::figures::{
     figure2, figure2_partials, figure3, figure3_partials, figure4, figure4_partials, figure5,
     figure5_partials, finalize_fig_points, FigPoint, FigureConfig,
 };
-use gradcode::sim::shard::ShardPoints;
+use gradcode::sim::shard::{Partial, ShardPoints, ABLATION_IDS};
 use gradcode::sim::tables::{
     finalize_table_points, thm21_partials, thm21_table, thm5_partials, thm5_table, thm6_partials,
     thm6_table, thm8_partials, thm8_table, TableRow,
 };
 use gradcode::sim::{JobKind, JobSpec, MonteCarlo, Shard, ShardArtifact};
+use gradcode::util::Rng;
 
 const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
 
@@ -28,7 +31,8 @@ fn roundtrip_and_merge(job: &JobSpec, per_shard: Vec<ShardPoints>) -> ShardPoint
         .into_iter()
         .enumerate()
         .map(|(sid, points)| {
-            let art = ShardArtifact { job: job.clone(), shard_id: sid, num_shards, points };
+            let art =
+                ShardArtifact { job: job.clone(), shard_ids: vec![sid], num_shards, points };
             let text = art.to_json_string();
             ShardArtifact::parse(&text).expect("artifact JSON round-trip")
         })
@@ -339,6 +343,163 @@ fn jobspec_sharded_run_reproduces_unsharded_csv() {
 }
 
 #[test]
+fn mean_std_shard_merge_bit_parity() {
+    // The moments accumulator behind mean_std: any shard partition ×
+    // any per-shard thread count merges to the single-process bits.
+    let mc = |threads: usize| MonteCarlo::new(271, 77).with_threads(threads);
+    let trial = |_: &mut (), rng: &mut Rng| {
+        let x = rng.f64();
+        x * x - 0.3
+    };
+    let (m_whole, s_whole) = mc(4).mean_std(|rng| {
+        let x = rng.f64();
+        x * x - 0.3
+    });
+    // The partial_ws path at Shard::full() is the same thing.
+    let (m_full, s_full) = mc(2).mean_std_partial_ws(Shard::full(), || (), trial).mean_std();
+    assert_eq!(m_full.to_bits(), m_whole.to_bits());
+    assert_eq!(s_full.to_bits(), s_whole.to_bits());
+    for &n in &SHARD_COUNTS {
+        let mut merged: Option<Partial> = None;
+        for sid in 0..n {
+            let part = mc(shard_threads(sid)).mean_std_partial_ws(
+                Shard::new(sid, n).unwrap(),
+                || (),
+                trial,
+            );
+            match merged.as_mut() {
+                None => merged = Some(part),
+                Some(m) => m.merge(&part).unwrap(),
+            }
+        }
+        let (m, s) = merged.unwrap().mean_std();
+        assert_eq!(m.to_bits(), m_whole.to_bits(), "mean, n={n}");
+        assert_eq!(s.to_bits(), s_whole.to_bits(), "std, n={n}");
+    }
+}
+
+#[test]
+fn ablation_studies_shard_merge_to_unsharded_csv() {
+    // All four registered studies, end to end through the exact code
+    // path the CLI uses: JobSpec::run for the full range vs
+    // ShardArtifact::compute per shard + JSON round trip + merge.
+    for &id in &ABLATION_IDS {
+        let job = JobSpec {
+            kind: JobKind::Ablation,
+            id: id.into(),
+            trials: 30,
+            seed: 17,
+            k: 20,
+            s: 4,
+            tmax: 0,
+        };
+        let unsharded = job.run(Shard::full(), Some(3)).unwrap().to_csv();
+        let other_threads = job.run(Shard::full(), Some(1)).unwrap().to_csv();
+        assert_eq!(unsharded, other_threads, "{id}: thread dependence");
+        assert!(unsharded.starts_with("study,setting,value\n"), "{id}: {unsharded}");
+        for &n in &SHARD_COUNTS {
+            let artifacts: Vec<ShardArtifact> = (0..n)
+                .map(|sid| {
+                    let art = ShardArtifact::compute(
+                        &job,
+                        Shard::new(sid, n).unwrap(),
+                        Some(shard_threads(sid)),
+                    )
+                    .unwrap();
+                    ShardArtifact::parse(&art.to_json_string()).unwrap()
+                })
+                .collect();
+            let merged = ShardArtifact::merge(artifacts).unwrap();
+            assert_eq!(merged.to_csv(), unsharded, "{id} n={n}");
+        }
+    }
+}
+
+#[test]
+fn tree_reduction_matches_flat_merge_byte_for_byte() {
+    let job = JobSpec {
+        kind: JobKind::Table,
+        id: "thm5".into(),
+        trials: 64,
+        seed: 5,
+        k: 20,
+        s: 5,
+        tmax: 0,
+    };
+    let arts: Vec<ShardArtifact> = (0..8)
+        .map(|sid| {
+            ShardArtifact::compute(&job, Shard::new(sid, 8).unwrap(), Some(1 + sid % 2)).unwrap()
+        })
+        .collect();
+    let flat = ShardArtifact::merge(arts.clone()).unwrap().to_csv();
+    let unsharded = job.run(Shard::full(), Some(2)).unwrap().to_csv();
+    assert_eq!(flat, unsharded, "flat merge vs unsharded");
+
+    // 8 -> 2 -> 1, every intermediate pushed through the JSON format.
+    let lo = ShardArtifact::merge_partial(arts[0..4].to_vec()).unwrap();
+    let hi = ShardArtifact::merge_partial(arts[4..8].to_vec()).unwrap();
+    assert_eq!(lo.shard_ids, vec![0, 1, 2, 3]);
+    assert_eq!(hi.shard_ids, vec![4, 5, 6, 7]);
+    let lo = ShardArtifact::parse(&lo.to_json_string()).unwrap();
+    let hi = ShardArtifact::parse(&hi.to_json_string()).unwrap();
+    let tree = ShardArtifact::merge(vec![lo.clone(), hi.clone()]).unwrap().to_csv();
+    assert_eq!(tree, flat, "8->2->1 tree differs from flat merge");
+
+    // A deeper, unbalanced tree: ((0,1) + (2..6)) + (6,7).
+    let a = ShardArtifact::merge_partial(arts[0..2].to_vec()).unwrap();
+    let b = ShardArtifact::merge_partial(arts[2..6].to_vec()).unwrap();
+    let ab = ShardArtifact::merge_partial(vec![a, b]).unwrap();
+    let c = ShardArtifact::merge_partial(arts[6..8].to_vec()).unwrap();
+    let deep = ShardArtifact::merge(vec![ab, c]).unwrap().to_csv();
+    assert_eq!(deep, flat, "unbalanced tree differs from flat merge");
+
+    // Overlapping folds and incomplete full merges are rejected.
+    assert!(ShardArtifact::merge_partial(vec![arts[0].clone(), lo.clone()]).is_err());
+    assert!(ShardArtifact::merge(vec![lo]).is_err());
+}
+
+#[test]
+fn verify_accepts_complete_sets_and_rejects_bad_ones() {
+    let job = JobSpec {
+        kind: JobKind::Table,
+        id: "thm6".into(),
+        trials: 30,
+        seed: 7,
+        k: 12,
+        s: 3,
+        tmax: 0,
+    };
+    let arts: Vec<ShardArtifact> = (0..3)
+        .map(|sid| {
+            let art =
+                ShardArtifact::compute(&job, Shard::new(sid, 3).unwrap(), Some(1)).unwrap();
+            ShardArtifact::parse(&art.to_json_string()).unwrap()
+        })
+        .collect();
+    // Complete set verifies.
+    assert!(ShardArtifact::verify_set(&arts).is_ok());
+    // Missing shard.
+    assert!(ShardArtifact::verify_set(&arts[0..2]).is_err());
+    // Overlapping coverage: a compound artifact plus one of its parts.
+    let pair = ShardArtifact::merge_partial(arts[0..2].to_vec()).unwrap();
+    assert!(
+        ShardArtifact::verify_set(&[pair.clone(), arts[1].clone(), arts[2].clone()]).is_err()
+    );
+    // Compound + disjoint remainder verifies (tree-reduction-ready).
+    assert!(ShardArtifact::verify_set(&[pair, arts[2].clone()]).is_ok());
+    // Mismatched jobs are rejected.
+    let mut other_job = job.clone();
+    other_job.seed = 8;
+    let alien = ShardArtifact::compute(&other_job, Shard::new(2, 3).unwrap(), Some(1)).unwrap();
+    assert!(ShardArtifact::verify_set(&[arts[0].clone(), arts[1].clone(), alien]).is_err());
+    // Corrupted payload: the checksum catches body tampering.
+    let text = arts[0].to_json_string();
+    let tampered = text.replacen("\"trials\": 30", "\"trials\": 31", 1);
+    assert_ne!(tampered, text, "tamper target must exist in the artifact text");
+    assert!(ShardArtifact::parse(&tampered).is_err());
+}
+
+#[test]
 fn merge_rejects_incomplete_or_mismatched_sets() {
     let job = JobSpec {
         kind: JobKind::Table,
@@ -384,7 +545,8 @@ fn artifact_json_is_parseable_and_stable() {
     let text = art.to_json_string();
     let reparsed = ShardArtifact::parse(&text).unwrap();
     assert_eq!(reparsed.to_json_string(), text);
-    // Sanity: the artifact names its format and shard.
-    assert!(text.contains("gradcode-shard/v1"));
-    assert!(text.contains("\"shard_id\": 1"));
+    // Sanity: the artifact names its format, shard coverage, checksum.
+    assert!(text.contains("gradcode-shard/v2"));
+    assert!(text.contains("\"shard_ids\""));
+    assert!(text.contains("\"checksum\""));
 }

@@ -139,18 +139,34 @@ fn csr_streamed_trial_loop_is_allocation_free_after_warmup() {
 /// The `assignment_into` re-draw loop: randomized schemes re-draw G
 /// itself every trial through the workspace, and with the worst-case
 /// reserve the whole draw→sample→decode loop performs zero heap
-/// allocations — including the very first trial.
+/// allocations — including the very first trial. All schemes run at a
+/// dense s = 6: for s-regular, a configuration draw is simple with
+/// probability ≈ exp(−(s²−1)/4) ≈ 1.6e-4, so essentially every trial
+/// exhausts the configuration attempts and lands on the **flat-buffer
+/// edge-swap repair** — the path this test pins as allocation-free
+/// (it fell back to an allocating repair before PR 4).
 #[test]
 fn redraw_trial_loop_is_allocation_free_for_randomized_schemes() {
-    let (k, r) = (60usize, 45usize);
+    let (k, s, r) = (60usize, 6usize, 45usize);
     for scheme in [Scheme::Bgc, Scheme::Rbgc, Scheme::RegularGraph, Scheme::Frc, Scheme::Cyclic] {
-        // s-regular runs at s=2: the configuration model accepts a draw
-        // with probability exp(−(s²−1)/4), so sparse degrees stay on
-        // the zero-alloc flat path while dense ones would fall back to
-        // the (allocating) edge-swap repair almost every draw.
-        let s = if scheme == Scheme::RegularGraph { 2usize } else { 6 };
         let rho = k as f64 / (r as f64 * s as f64);
         let code = scheme.build(k, k, s);
+
+        // RNG-stream pin: before counting allocations, check a few
+        // redraw trials against the legacy allocating sequence — the
+        // flat repair must not move a bit.
+        let mut legacy_ws = DecodeWorkspace::new();
+        let mut legacy_rng = Rng::new(23);
+        let mut check_ws = DecodeWorkspace::new();
+        let mut check_rng = Rng::new(23);
+        for trial in 0..3 {
+            let g = code.assignment(&mut legacy_rng);
+            let want = legacy_ws.onestep_trial(&g, r, rho, &mut legacy_rng);
+            let got = check_ws.onestep_redraw_trial(code.as_ref(), r, rho, &mut check_rng);
+            assert_eq!(want.to_bits(), got.to_bits(), "{}: trial {trial}", code.name());
+        }
+        assert_eq!(legacy_rng.next_u64(), check_rng.next_u64(), "{}: rng", code.name());
+
         let mut ws = DecodeWorkspace::new();
         // Reserve the k·n worst case up front: afterwards even a
         // maximally dense Bernoulli draw fits without reallocating.
@@ -176,6 +192,39 @@ fn redraw_trial_loop_is_allocation_free_for_randomized_schemes() {
             code.name()
         );
     }
+}
+
+/// One ablation loop (satellite of the ablation sharding PR): the
+/// thresholded-BGC study code plus both one-step variants the
+/// `normalization` study uses — boolean and column-normalized — run
+/// allocation-free through the workspace after the worst-case reserve.
+#[test]
+fn ablation_trial_loops_are_allocation_free_after_reserve() {
+    use gradcode::codes::ThresholdedBernoulliCode;
+    let (k, s, r) = (60usize, 6usize, 45usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let rho_norm = k as f64 / r as f64;
+    let code = ThresholdedBernoulliCode::new(k, k, s, 2.0, 1.0);
+    let mut ws = DecodeWorkspace::new();
+    ws.reserve_redraw(k, k, s);
+    let mut rng = Rng::new(31);
+
+    let mut warmup_sum = 0.0;
+    for _ in 0..3 {
+        warmup_sum += ws.onestep_redraw_trial(&code, r, rho, &mut rng);
+        warmup_sum += ws.onestep_normalized_redraw_trial(&code, r, rho_norm, &mut rng);
+    }
+    assert!(warmup_sum.is_finite());
+
+    let before = allocations_on_this_thread();
+    let mut sum = 0.0;
+    for _ in 0..100 {
+        sum += ws.onestep_redraw_trial(&code, r, rho, &mut rng);
+        sum += ws.onestep_normalized_redraw_trial(&code, r, rho_norm, &mut rng);
+    }
+    let allocs = allocations_on_this_thread() - before;
+    assert!(sum.is_finite() && sum >= 0.0);
+    assert_eq!(allocs, 0, "steady-state ablation loop allocated {allocs} times");
 }
 
 /// The optimal (LSQR) decoder composed with per-trial G re-draw: zero
