@@ -200,6 +200,61 @@ fn main() {
         });
     }
 
+    // -------------- scenario spine: straggler-model trial overhead
+    // The k = n = 1000 one-step redraw trial under (a) the legacy
+    // r-based uniform draw, (b) the spine's uniform model (same RNG
+    // stream through a vtable — should be noise), and (c/d) latency
+    // models, which add n latency draws plus the deadline policy
+    // (fastest-r pays an O(n log n) order-statistic sort).
+    {
+        use gradcode::stragglers::{
+            DeadlinePolicy, LatencyModel, LatencyStragglers, UniformStragglers,
+        };
+        let code = Scheme::Bgc.build(k1, k1, s1);
+        let mut rng = Rng::new(seed1);
+        let uniform = UniformStragglers::new(0.1); // r = 900 = r1
+        let pareto = LatencyModel::Pareto { scale: 0.02, shape: 1.5 };
+        let fastest = LatencyStragglers { model: pareto, policy: DeadlinePolicy::FastestR(r1) };
+        let deadline = LatencyStragglers { model: pareto, policy: DeadlinePolicy::Fixed(0.08) };
+        let t_legacy = b.bench("scenario/onestep-redraw/legacy-r/k1000", || {
+            black_box(ws.onestep_redraw_trial(code.as_ref(), r1, rho1, &mut rng))
+        });
+        let t_uniform = b.bench("scenario/onestep-redraw/uniform-model/k1000", || {
+            black_box(ws.onestep_redraw_trial_with(code.as_ref(), &uniform, rho1, &mut rng))
+        });
+        let t_fastest = b.bench("scenario/onestep-redraw/pareto-fastest-r/k1000", || {
+            black_box(ws.onestep_redraw_trial_with(code.as_ref(), &fastest, rho1, &mut rng))
+        });
+        let t_deadline = b.bench("scenario/onestep-redraw/pareto-deadline/k1000", || {
+            black_box(ws.onestep_redraw_trial_with(code.as_ref(), &deadline, rho1, &mut rng))
+        });
+        println!(
+            "bench scenario/spine-overhead/k1000                    uniform {:+.1}%, \
+             pareto fastest-r {:+.1}%, pareto deadline {:+.1}% vs legacy",
+            (t_uniform.as_secs_f64() / t_legacy.as_secs_f64() - 1.0) * 100.0,
+            (t_fastest.as_secs_f64() / t_legacy.as_secs_f64() - 1.0) * 100.0,
+            (t_deadline.as_secs_f64() / t_legacy.as_secs_f64() - 1.0) * 100.0
+        );
+        for (label, t) in [
+            ("scenario/legacy-r", t_legacy),
+            ("scenario/uniform-model", t_uniform),
+            ("scenario/pareto-fastest-r", t_fastest),
+            ("scenario/pareto-deadline", t_deadline),
+        ] {
+            records.push(DecodeBenchRecord {
+                label: label.to_string(),
+                scheme: "BGC".to_string(),
+                k: k1,
+                n: k1,
+                s: s1,
+                r: r1,
+                seed: seed1,
+                ns_per_decode: t.as_nanos() as f64,
+                decodes_per_sec: 1.0 / t.as_secs_f64(),
+            });
+        }
+    }
+
     // ------------------------------------- optimal decode: LSQR paths
     let opts = LsqrOptions::default();
     let t_alloc = b.bench("decode/optimal-lsqr/alloc/k1000", || {
@@ -293,6 +348,7 @@ fn main() {
         k: k1,
         s: 0,
         tmax: 0,
+        scenario: gradcode::stragglers::Scenario::default(),
     };
     let num_shards = 4usize;
 

@@ -33,9 +33,21 @@
 //!   trial (BGC, rBGC, s-regular) also run with zero steady-state heap
 //!   traffic. RNG consumption matches the historical
 //!   `assignment` + `*_trial` sequence, so seeded results are unchanged.
+//!
+//! The scenario-spine refactor adds `*_with` variants of every trial
+//! method taking a [`StragglerModel`]: straggler selection goes through
+//! [`StragglerModel::non_stragglers_into`] into the workspace-owned
+//! [`StragglerScratch`] instead of the hard-coded uniform draw. A
+//! uniform model *is* `Rng::sample_indices_into` (same RNG stream, same
+//! order), so the `*_with` paths are bit-identical to the r-based
+//! methods under the default scenario; latency-deadline and adversarial
+//! models plug in without touching the decode side. Latency models also
+//! record the gather wall-clock ([`DecodeWorkspace::last_gather_time`])
+//! — the time axis of the `repro scenario` time-to-accuracy sweeps.
 
 use crate::codes::{AssignmentScratch, GradientCode};
 use crate::linalg::{blocked, lsqr_with, CscMatrix, CsrMatrix, LsqrOptions, LsqrWorkspace};
+use crate::stragglers::{StragglerModel, StragglerScratch};
 use crate::util::Rng;
 
 /// err_1(A) computed directly from G plus the non-straggler index set,
@@ -97,10 +109,10 @@ pub struct DecodeWorkspace {
     ones: Vec<f64>,
     /// Warm-start vector (ρ · 1_r) for the optimal decoder.
     x0: Vec<f64>,
-    /// Fisher-Yates scratch for straggler sampling (length n).
-    pool: Vec<usize>,
-    /// The sampled non-straggler index set (length r).
-    idx: Vec<usize>,
+    /// Straggler-selection scratch (Fisher-Yates pool, selected index
+    /// set, latency draws, order-statistic buffer, gather time) — the
+    /// [`StragglerModel::non_stragglers_into`] half of the spine.
+    stragglers: StragglerScratch,
     /// LSQR iteration vectors.
     lsqr: LsqrWorkspace,
     /// Workspace-owned G for the allocation-free re-draw trials.
@@ -127,8 +139,7 @@ impl DecodeWorkspace {
             row_acc: Vec::new(),
             ones: Vec::new(),
             x0: Vec::new(),
-            pool: Vec::new(),
-            idx: Vec::new(),
+            stragglers: StragglerScratch::new(),
             lsqr: LsqrWorkspace::new(),
             g: CscMatrix::empty(),
             scratch: AssignmentScratch::new(),
@@ -161,14 +172,21 @@ impl DecodeWorkspace {
         self.row_acc.reserve(k);
         self.ones.reserve(k);
         self.x0.reserve(n);
-        self.pool.reserve(n);
-        self.idx.reserve(n);
+        self.stragglers.reserve(n);
         self.col_count.reserve(n);
     }
 
     /// The non-straggler set sampled by the most recent `*_trial` call.
     pub fn last_non_stragglers(&self) -> &[usize] {
-        &self.idx
+        &self.stragglers.idx
+    }
+
+    /// The gather wall-clock of the most recent `*_with` trial: when
+    /// the master stopped waiting under the scenario's deadline policy.
+    /// NaN for models with no time axis (uniform, adversarial) and for
+    /// the legacy r-based trial methods.
+    pub fn last_gather_time(&self) -> f64 {
+        self.stragglers.gather_time
     }
 
     /// Fused one-step error for an explicit non-straggler set.
@@ -208,8 +226,26 @@ impl DecodeWorkspace {
     /// `sample_indices` + `select_columns` + `err1` sequence, so seeded
     /// results are unchanged.
     pub fn onestep_trial(&mut self, g: &CscMatrix, r: usize, rho: f64, rng: &mut Rng) -> f64 {
-        rng.sample_indices_into(g.cols, r, &mut self.pool, &mut self.idx);
-        err1_from_supports(g, &self.idx, rho, &mut self.row_acc)
+        let scratch = &mut self.stragglers;
+        rng.sample_indices_into(g.cols, r, &mut scratch.pool, &mut scratch.idx);
+        scratch.gather_time = f64::NAN;
+        err1_from_supports(g, &scratch.idx, rho, &mut self.row_acc)
+    }
+
+    /// One full one-step trial on a fixed G under a pluggable straggler
+    /// model — the scenario spine's fixed-assignment path (adversarial
+    /// scenarios, thm10-style contrasts). With a uniform model this is
+    /// RNG-stream- and bit-identical to
+    /// [`DecodeWorkspace::onestep_trial`] at the model's r.
+    pub fn onestep_trial_with(
+        &mut self,
+        g: &CscMatrix,
+        model: &dyn StragglerModel,
+        rho: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        model.non_stragglers_into(g.cols, rng, &mut self.stragglers);
+        err1_from_supports(g, &self.stragglers.idx, rho, &mut self.row_acc)
     }
 
     /// One full Monte-Carlo trial of the optimal decoder: sample r
@@ -224,8 +260,27 @@ impl DecodeWorkspace {
         warm: Option<f64>,
         rng: &mut Rng,
     ) -> f64 {
-        rng.sample_indices_into(g.cols, r, &mut self.pool, &mut self.idx);
-        g.select_columns_into(&self.idx, &mut self.a);
+        let scratch = &mut self.stragglers;
+        rng.sample_indices_into(g.cols, r, &mut scratch.pool, &mut scratch.idx);
+        scratch.gather_time = f64::NAN;
+        g.select_columns_into(&scratch.idx, &mut self.a);
+        optimal_err_on_selected(&self.a, &mut self.ones, &mut self.x0, &mut self.lsqr, opts, warm)
+    }
+
+    /// One full optimal-decode trial on a fixed G under a pluggable
+    /// straggler model; see [`DecodeWorkspace::onestep_trial_with`] for
+    /// the fixed-assignment contract and
+    /// [`DecodeWorkspace::optimal_err`] for `warm`.
+    pub fn optimal_trial_with(
+        &mut self,
+        g: &CscMatrix,
+        model: &dyn StragglerModel,
+        opts: &LsqrOptions,
+        warm: Option<f64>,
+        rng: &mut Rng,
+    ) -> f64 {
+        model.non_stragglers_into(g.cols, rng, &mut self.stragglers);
+        g.select_columns_into(&self.stragglers.idx, &mut self.a);
         optimal_err_on_selected(&self.a, &mut self.ones, &mut self.x0, &mut self.lsqr, opts, warm)
     }
 
@@ -283,10 +338,12 @@ impl DecodeWorkspace {
             self.g_csr.rows > 0 || self.g_csr.cols > 0,
             "call mirror_csr before the streamed decode paths"
         );
-        rng.sample_indices_into(self.g_csr.cols, r, &mut self.pool, &mut self.idx);
+        let scratch = &mut self.stragglers;
+        rng.sample_indices_into(self.g_csr.cols, r, &mut scratch.pool, &mut scratch.idx);
+        scratch.gather_time = f64::NAN;
         self.col_count.clear();
         self.col_count.resize(self.g_csr.cols, 0);
-        for &j in &self.idx {
+        for &j in &scratch.idx {
             self.col_count[j] += 1;
         }
         err1_streamed_counts(&self.g_csr, &self.col_count, rho)
@@ -309,8 +366,30 @@ impl DecodeWorkspace {
     ) -> f64 {
         self.invalidate_mirror();
         code.assignment_into(rng, &mut self.g, &mut self.scratch);
-        rng.sample_indices_into(self.g.cols, r, &mut self.pool, &mut self.idx);
-        err1_from_supports(&self.g, &self.idx, rho, &mut self.row_acc)
+        let scratch = &mut self.stragglers;
+        rng.sample_indices_into(self.g.cols, r, &mut scratch.pool, &mut scratch.idx);
+        scratch.gather_time = f64::NAN;
+        err1_from_supports(&self.g, &scratch.idx, rho, &mut self.row_acc)
+    }
+
+    /// [`DecodeWorkspace::onestep_redraw_trial`] with a pluggable
+    /// straggler model — the scenario spine's re-draw path. With a
+    /// uniform model this is RNG-stream- and bit-identical to the
+    /// r-based method (the uniform draw *is*
+    /// `Rng::sample_indices_into`), which keeps every historical CSV
+    /// byte-identical under the default scenario; latency and
+    /// adversarial models substitute their own selection.
+    pub fn onestep_redraw_trial_with(
+        &mut self,
+        code: &dyn GradientCode,
+        model: &dyn StragglerModel,
+        rho: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.invalidate_mirror();
+        code.assignment_into(rng, &mut self.g, &mut self.scratch);
+        model.non_stragglers_into(self.g.cols, rng, &mut self.stragglers);
+        err1_from_supports(&self.g, &self.stragglers.idx, rho, &mut self.row_acc)
     }
 
     /// One full optimal-decode trial with per-trial G re-draw; see
@@ -326,8 +405,29 @@ impl DecodeWorkspace {
     ) -> f64 {
         self.invalidate_mirror();
         code.assignment_into(rng, &mut self.g, &mut self.scratch);
-        rng.sample_indices_into(self.g.cols, r, &mut self.pool, &mut self.idx);
-        self.g.select_columns_into(&self.idx, &mut self.a);
+        let scratch = &mut self.stragglers;
+        rng.sample_indices_into(self.g.cols, r, &mut scratch.pool, &mut scratch.idx);
+        scratch.gather_time = f64::NAN;
+        self.g.select_columns_into(&scratch.idx, &mut self.a);
+        optimal_err_on_selected(&self.a, &mut self.ones, &mut self.x0, &mut self.lsqr, opts, warm)
+    }
+
+    /// [`DecodeWorkspace::optimal_redraw_trial`] with a pluggable
+    /// straggler model; see
+    /// [`DecodeWorkspace::onestep_redraw_trial_with`] for the spine
+    /// contract and [`DecodeWorkspace::optimal_err`] for `warm`.
+    pub fn optimal_redraw_trial_with(
+        &mut self,
+        code: &dyn GradientCode,
+        model: &dyn StragglerModel,
+        opts: &LsqrOptions,
+        warm: Option<f64>,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.invalidate_mirror();
+        code.assignment_into(rng, &mut self.g, &mut self.scratch);
+        model.non_stragglers_into(self.g.cols, rng, &mut self.stragglers);
+        self.g.select_columns_into(&self.stragglers.idx, &mut self.a);
         optimal_err_on_selected(&self.a, &mut self.ones, &mut self.x0, &mut self.lsqr, opts, warm)
     }
 
@@ -351,28 +451,42 @@ impl DecodeWorkspace {
     ) -> f64 {
         self.invalidate_mirror();
         code.assignment_into(rng, &mut self.g, &mut self.scratch);
-        rng.sample_indices_into(self.g.cols, r, &mut self.pool, &mut self.idx);
-        self.g.select_columns_into(&self.idx, &mut self.a);
-        let Self { a, row_acc, .. } = self;
-        row_acc.clear();
-        row_acc.resize(a.rows, 0.0);
-        for j in 0..a.cols {
-            let (lo, hi) = (a.col_ptr[j], a.col_ptr[j + 1]);
-            let mut total = 0.0;
-            for p in lo..hi {
-                total += a.vals[p];
-            }
-            if total == 0.0 {
-                for p in lo..hi {
-                    row_acc[a.row_idx[p]] += a.vals[p];
-                }
-            } else {
-                for p in lo..hi {
-                    row_acc[a.row_idx[p]] += a.vals[p] / total;
-                }
-            }
-        }
-        row_acc.iter().map(|&v| (rho * v - 1.0).powi(2)).sum()
+        let scratch = &mut self.stragglers;
+        rng.sample_indices_into(self.g.cols, r, &mut scratch.pool, &mut scratch.idx);
+        scratch.gather_time = f64::NAN;
+        self.g.select_columns_into(&scratch.idx, &mut self.a);
+        err1_column_normalized(&self.a, rho, &mut self.row_acc)
+    }
+
+    /// [`DecodeWorkspace::onestep_normalized_redraw_trial`] with a
+    /// pluggable straggler model (the scenario spine's normalized arm);
+    /// uniform models reproduce the r-based method bit for bit.
+    pub fn onestep_normalized_redraw_trial_with(
+        &mut self,
+        code: &dyn GradientCode,
+        model: &dyn StragglerModel,
+        rho: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.invalidate_mirror();
+        code.assignment_into(rng, &mut self.g, &mut self.scratch);
+        model.non_stragglers_into(self.g.cols, rng, &mut self.stragglers);
+        self.g.select_columns_into(&self.stragglers.idx, &mut self.a);
+        err1_column_normalized(&self.a, rho, &mut self.row_acc)
+    }
+
+    /// Fixed-G variant of the normalized trial (adversarial standing
+    /// assignments in the `normalization` ablation).
+    pub fn onestep_normalized_trial_with(
+        &mut self,
+        g: &CscMatrix,
+        model: &dyn StragglerModel,
+        rho: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        model.non_stragglers_into(g.cols, rng, &mut self.stragglers);
+        g.select_columns_into(&self.stragglers.idx, &mut self.a);
+        err1_column_normalized(&self.a, rho, &mut self.row_acc)
     }
 
     /// Re-draw G and materialize one straggler trial's A in the
@@ -387,17 +501,78 @@ impl DecodeWorkspace {
     ) -> &CscMatrix {
         self.invalidate_mirror();
         code.assignment_into(rng, &mut self.g, &mut self.scratch);
-        rng.sample_indices_into(self.g.cols, r, &mut self.pool, &mut self.idx);
-        self.g.select_columns_into(&self.idx, &mut self.a);
+        let scratch = &mut self.stragglers;
+        rng.sample_indices_into(self.g.cols, r, &mut scratch.pool, &mut scratch.idx);
+        scratch.gather_time = f64::NAN;
+        self.g.select_columns_into(&scratch.idx, &mut self.a);
         &self.a
     }
+
+    /// [`DecodeWorkspace::redraw_submatrix`] with a pluggable straggler
+    /// model (the Fig. 5 algorithmic curve under a scenario); uniform
+    /// models reproduce the r-based method bit for bit.
+    pub fn redraw_submatrix_with(
+        &mut self,
+        code: &dyn GradientCode,
+        model: &dyn StragglerModel,
+        rng: &mut Rng,
+    ) -> &CscMatrix {
+        self.invalidate_mirror();
+        code.assignment_into(rng, &mut self.g, &mut self.scratch);
+        model.non_stragglers_into(self.g.cols, rng, &mut self.stragglers);
+        self.g.select_columns_into(&self.stragglers.idx, &mut self.a);
+        &self.a
+    }
+
+    /// Materialize one straggler trial's A from a **fixed** G under a
+    /// pluggable model (adversarial standing assignments).
+    pub fn select_submatrix_with(
+        &mut self,
+        g: &CscMatrix,
+        model: &dyn StragglerModel,
+        rng: &mut Rng,
+    ) -> &CscMatrix {
+        model.non_stragglers_into(g.cols, rng, &mut self.stragglers);
+        g.select_columns_into(&self.stragglers.idx, &mut self.a);
+        &self.a
+    }
+}
+
+/// One-step error on the **column-normalized** selected submatrix:
+/// `err_1 = ||ρ Â 1_r − 1_k||²` where Â rescales every column of A to
+/// sum to 1 (zero columns untouched) — without materializing Â.
+/// Accumulation order matches `codes::normalized::normalize_columns`
+/// followed by `OneStepDecoder::err1` exactly (per-column sequential
+/// total, same divisions, same row-scatter order, same final
+/// reduction), so the fused value is bit-identical to the historical
+/// allocating sequence — the ablation suite pins this.
+fn err1_column_normalized(a: &CscMatrix, rho: f64, row_acc: &mut Vec<f64>) -> f64 {
+    row_acc.clear();
+    row_acc.resize(a.rows, 0.0);
+    for j in 0..a.cols {
+        let (lo, hi) = (a.col_ptr[j], a.col_ptr[j + 1]);
+        let mut total = 0.0;
+        for p in lo..hi {
+            total += a.vals[p];
+        }
+        if total == 0.0 {
+            for p in lo..hi {
+                row_acc[a.row_idx[p]] += a.vals[p];
+            }
+        } else {
+            for p in lo..hi {
+                row_acc[a.row_idx[p]] += a.vals[p] / total;
+            }
+        }
+    }
+    row_acc.iter().map(|&v| (rho * v - 1.0).powi(2)).sum()
 }
 
 /// Shared tail of the optimal-decode paths: the empty-A convention,
 /// the 1_k rhs, the optional ρ·1_r warm start, and the LSQR solve —
 /// on already-selected A, with every buffer caller-owned. Free-standing
-/// (not a method) so `optimal_trial` can call it while `self.idx` is
-/// borrowed.
+/// (not a method) so `optimal_trial` can call it while the straggler
+/// scratch is borrowed.
 fn optimal_err_on_selected(
     a: &CscMatrix,
     ones: &mut Vec<f64>,
@@ -613,6 +788,97 @@ mod tests {
             assert_eq!(legacy.to_bits(), fused.to_bits(), "trial {trial}");
         }
         assert_eq!(legacy_rng.next_u64(), fused_rng.next_u64());
+    }
+
+    #[test]
+    fn with_variants_under_uniform_model_match_r_based_methods_bitwise() {
+        use crate::stragglers::UniformStragglers;
+        let (k, s, delta) = (24usize, 4usize, 0.25);
+        let model = UniformStragglers::new(delta);
+        let r = model.r(k);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let rho_norm = k as f64 / r as f64;
+        let opts = LsqrOptions::default();
+        for scheme in [Scheme::Bgc, Scheme::Frc] {
+            let code = scheme.build(k, k, s);
+            let mut ws_a = DecodeWorkspace::new();
+            let mut ws_b = DecodeWorkspace::new();
+            let mut rng_a = Rng::new(40);
+            let mut rng_b = Rng::new(40);
+            for trial in 0..6 {
+                let legacy = ws_a.onestep_redraw_trial(code.as_ref(), r, rho, &mut rng_a);
+                let spine = ws_b.onestep_redraw_trial_with(code.as_ref(), &model, rho, &mut rng_b);
+                assert_eq!(legacy.to_bits(), spine.to_bits(), "{scheme:?} onestep {trial}");
+                assert!(ws_b.last_gather_time().is_nan());
+
+                let legacy =
+                    ws_a.optimal_redraw_trial(code.as_ref(), r, &opts, Some(rho), &mut rng_a);
+                let spine = ws_b
+                    .optimal_redraw_trial_with(code.as_ref(), &model, &opts, Some(rho), &mut rng_b);
+                assert_eq!(legacy.to_bits(), spine.to_bits(), "{scheme:?} optimal {trial}");
+
+                let legacy =
+                    ws_a.onestep_normalized_redraw_trial(code.as_ref(), r, rho_norm, &mut rng_a);
+                let spine = ws_b.onestep_normalized_redraw_trial_with(
+                    code.as_ref(),
+                    &model,
+                    rho_norm,
+                    &mut rng_b,
+                );
+                assert_eq!(legacy.to_bits(), spine.to_bits(), "{scheme:?} normalized {trial}");
+
+                let legacy = ws_a.redraw_submatrix(code.as_ref(), r, &mut rng_a).clone();
+                let spine = ws_b.redraw_submatrix_with(code.as_ref(), &model, &mut rng_b);
+                assert_eq!(*spine, legacy, "{scheme:?} submatrix {trial}");
+            }
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{scheme:?} rng diverged");
+        }
+    }
+
+    #[test]
+    fn latency_model_trials_record_gather_time() {
+        use crate::stragglers::{DeadlinePolicy, LatencyModel, LatencyStragglers};
+        let (k, s, r) = (20usize, 4usize, 15usize);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let code = Scheme::Bgc.build(k, k, s);
+        let model = LatencyStragglers {
+            model: LatencyModel::Pareto { scale: 0.1, shape: 1.5 },
+            policy: DeadlinePolicy::FastestR(r),
+        };
+        let mut ws = DecodeWorkspace::new();
+        let mut rng = Rng::new(41);
+        for _ in 0..5 {
+            let err = ws.onestep_redraw_trial_with(code.as_ref(), &model, rho, &mut rng);
+            assert!(err.is_finite() && err >= 0.0);
+            assert_eq!(ws.last_non_stragglers().len(), r);
+            // Pareto(0.1, ·) latencies are >= 0.1; the r-th order
+            // statistic is a real gather time.
+            assert!(ws.last_gather_time() >= 0.1);
+        }
+    }
+
+    #[test]
+    fn fixed_g_with_variants_match_fixed_g_r_based_methods() {
+        use crate::stragglers::UniformStragglers;
+        let (k, s, delta) = (30usize, 5usize, 0.3);
+        let model = UniformStragglers::new(delta);
+        let r = model.r(k);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let g = draw_g(Scheme::Bgc, k, s, 42);
+        let opts = LsqrOptions::default();
+        let mut ws_a = DecodeWorkspace::new();
+        let mut ws_b = DecodeWorkspace::new();
+        let mut rng_a = Rng::new(43);
+        let mut rng_b = Rng::new(43);
+        for _ in 0..8 {
+            let legacy = ws_a.onestep_trial(&g, r, rho, &mut rng_a);
+            let spine = ws_b.onestep_trial_with(&g, &model, rho, &mut rng_b);
+            assert_eq!(legacy.to_bits(), spine.to_bits());
+            let legacy = ws_a.optimal_trial(&g, r, &opts, None, &mut rng_a);
+            let spine = ws_b.optimal_trial_with(&g, &model, &opts, None, &mut rng_b);
+            assert_eq!(legacy.to_bits(), spine.to_bits());
+        }
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //!
 //! * [`codes`] — FRC / BGC / rBGC / s-regular / cyclic constructions.
 //! * [`decode`] — one-step, optimal (LSQR), and algorithmic decoders.
-//! * [`stragglers`] — random and latency-driven straggler models.
+//! * [`stragglers`] — the straggler-scenario spine: uniform, latency-
+//!   deadline, and adversarial models behind one pluggable trait, plus
+//!   the CLI-facing [`stragglers::Scenario`] run identity.
 //! * [`adversary`] — Thm-10 FRC attack, greedy/local-search/exhaustive
 //!   heuristics, and the Thm-11 DkS reduction.
 //! * [`sim`] — Monte-Carlo harness regenerating Figures 2-5 and the

@@ -16,6 +16,7 @@
 //!                  --k 100          tasks/workers k (= n)
 //!                  --tmax 15        iterations for --fig 5 curves
 //!                  --threads auto   worker threads (results invariant)
+//!                  --stragglers uniform  straggler scenario (see below)
 //! repro tables     --table thm5     thm3|thm5|thm6|thm8|thm10|thm11|thm21|thm24
 //!                  --trials 2000    Monte-Carlo trials per point
 //!                  --seed 2017      root RNG seed
@@ -24,22 +25,35 @@
 //!                                   only; the other tables derive s and
 //!                                   reject the flag)
 //!                  --threads auto
+//!                  --stragglers uniform  (thm3/thm10/thm11 reject it)
 //! repro ablation   --study rho      rho|rbgc|lsqr|normalization
 //!                  --trials 500  --seed 2017  --k 100  --s 10
+//!                  --threads auto   --stragglers uniform
+//! repro scenario   --stragglers pareto:0.02,1.5  latency model (required
+//!                                   family: shifted-exp|pareto|bimodal)
+//!                  --trials 500  --seed 2017  --k 100  --s 10
 //!                  --threads auto
-//! repro shard      --fig F | --table T | --ablation STUDY  exactly one
+//!                                   emits time-to-accuracy curves: mean
+//!                                   gather wall-clock vs err1, per
+//!                                   scheme, for both deadline-policy
+//!                                   arms (fastest-r / fixed quantile
+//!                                   deadline) across the delta grid
+//! repro shard      --fig F | --table T | --ablation STUDY | --scenario STUDY
 //!                  --shard-id I     this shard's index (required, 0-based)
 //!                  --num-shards N   total shards (required)
 //!                  --out FILE       artifact path (default: stdout)
-//!                  (+ the figures/tables/ablation flags above; --trials
-//!                   defaults to 5000 for figures, 2000 for tables, 500
-//!                   for ablations)
-//! repro run        --fig F | --table T | --ablation STUDY  exactly one
+//!                  (+ the figures/tables/ablation/scenario flags above;
+//!                   --trials defaults to 5000 for figures, 2000 for
+//!                   tables, 500 for ablations and scenarios)
+//! repro run        --fig F | --table T | --ablation STUDY | --scenario STUDY
 //!                  --fanout 2       spawn N `repro shard` processes
 //!                                   locally, wait, verify, merge, and
 //!                                   emit the unsharded-identical CSV
 //!                  --artifacts-dir DIR  keep the shard artifacts there
 //!                                   (default: a temp dir, removed)
+//!                  --resume DIR     reuse the valid artifacts already in
+//!                                   DIR and respawn only missing/corrupt
+//!                                   shards (implies keeping artifacts)
 //!                  (+ the same job flags as `repro shard`; without
 //!                   --threads each child gets cores/fanout workers so
 //!                   the fan-out never oversubscribes the machine)
@@ -66,14 +80,29 @@
 //! repro help
 //! ```
 //!
-//! The `shard`/`merge` pair distributes a figure/table/ablation run
-//! across processes or machines: each shard runs a disjoint trial range
-//! and writes exact partial aggregates as JSON; `merge` validates the
-//! partition and reproduces the unsharded CSV bit-for-bit. `merge
-//! --out` folds any disjoint subset into a compound artifact (enabling
-//! tree-reduction over thousands of shards), `verify` audits an
-//! artifact set without merging, and `run --fanout N` drives the whole
-//! shard → verify → merge cycle as one local command (see `sim::shard`
+//! The `--stragglers` grammar (the straggler *scenario*, part of the
+//! run identity and the v3 shard-artifact format):
+//!
+//! ```text
+//! uniform                       the paper default (δ from the sweep)
+//! uniform:D                     fixed straggler fraction D
+//!                               (survivors: r = (1-D)k)
+//! shifted-exp:BASE,RATE[,P]     latency draws base + Exp(rate)
+//! pareto:SCALE,SHAPE[,P]        heavy-tailed Pareto latencies
+//! bimodal:FAST,SLOW,PSLOW[,P]   two-mode (clone-straggler) latencies
+//! adversarial:block|greedy|local-search   §4 standing-assignment attack
+//! P = fastest-r (default) | deadline:T
+//! ```
+//!
+//! The `shard`/`merge` pair distributes a figure/table/ablation/
+//! scenario run across processes or machines: each shard runs a
+//! disjoint trial range and writes exact partial aggregates as JSON;
+//! `merge` validates the partition and reproduces the unsharded CSV
+//! bit-for-bit. `merge --out` folds any disjoint subset into a
+//! compound artifact (enabling tree-reduction over thousands of
+//! shards), `verify` audits an artifact set without merging, and
+//! `run --fanout N` drives the whole shard → verify → merge cycle as
+//! one local command — resumably, with `--resume DIR` (see `sim::shard`
 //! and ARCHITECTURE.md).
 
 use anyhow::{anyhow, Context};
@@ -85,11 +114,11 @@ use gradcode::codes::Scheme;
 use gradcode::coordinator::{DecoderKind, ModelKind};
 use gradcode::decode::OptimalDecoder;
 use gradcode::runtime::{Backend, EnginePool, LinearDims, Manifest, MlpDims};
-use gradcode::sim::shard::{ABLATION_IDS, TABLE_IDS};
+use gradcode::sim::shard::{ABLATION_IDS, SCENARIO_IDS, TABLE_IDS};
 use gradcode::sim::{
     figures, FigureConfig, JobKind, JobSpec, MonteCarlo, Shard, ShardArtifact,
 };
-use gradcode::stragglers::{DeadlinePolicy, LatencyModel};
+use gradcode::stragglers::{DeadlinePolicy, LatencyModel, PolicySpec, Scenario};
 use gradcode::training::{train, TrainConfig};
 use gradcode::util::Rng;
 
@@ -218,27 +247,34 @@ fn run() -> CliResult<()> {
     let args = Args::parse()?;
     match args.sub.as_str() {
         "figures" => {
-            args.finish(&["fig", "trials", "seed", "k", "tmax", "threads"], false)?;
+            args.finish(&["fig", "trials", "seed", "k", "tmax", "threads", "stragglers"], false)?;
             cmd_figures(&args)
         }
         "tables" => {
-            args.finish(&["table", "trials", "seed", "k", "s", "threads"], false)?;
+            args.finish(&["table", "trials", "seed", "k", "s", "threads", "stragglers"], false)?;
             cmd_tables(&args)
+        }
+        "scenario" => {
+            args.finish(&["stragglers", "trials", "seed", "k", "s", "threads"], false)?;
+            cmd_scenario(&args)
         }
         "shard" => {
             // The job-specific flags mirror `figures`/`tables`/
-            // `ablation`: --tmax only makes sense for figure jobs and
-            // --s only for table/ablation jobs; whitelisting both
-            // unconditionally would silently ignore the wrong one
-            // instead of exiting 2.
+            // `ablation`/`scenario`: --tmax only makes sense for figure
+            // jobs and --s only for table/ablation/scenario jobs;
+            // whitelisting both unconditionally would silently ignore
+            // the wrong one instead of exiting 2.
             let mut allowed = vec![
-                "fig", "table", "ablation", "trials", "seed", "k", "shard-id", "num-shards",
-                "out", "threads",
+                "fig", "table", "ablation", "scenario", "trials", "seed", "k", "shard-id",
+                "num-shards", "out", "threads", "stragglers",
             ];
             if args.get("fig").is_some() {
                 allowed.push("tmax");
             }
-            if args.get("table").is_some() || args.get("ablation").is_some() {
+            if args.get("table").is_some()
+                || args.get("ablation").is_some()
+                || args.get("scenario").is_some()
+            {
                 allowed.push("s");
             }
             args.finish(&allowed, false)?;
@@ -247,13 +283,16 @@ fn run() -> CliResult<()> {
         "run" => {
             // Same conditional job flags as `shard`, plus the driver's.
             let mut allowed = vec![
-                "fig", "table", "ablation", "fanout", "trials", "seed", "k", "artifacts-dir",
-                "threads",
+                "fig", "table", "ablation", "scenario", "fanout", "trials", "seed", "k",
+                "artifacts-dir", "resume", "threads", "stragglers",
             ];
             if args.get("fig").is_some() {
                 allowed.push("tmax");
             }
-            if args.get("table").is_some() || args.get("ablation").is_some() {
+            if args.get("table").is_some()
+                || args.get("ablation").is_some()
+                || args.get("scenario").is_some()
+            {
                 allowed.push("s");
             }
             args.finish(&allowed, false)?;
@@ -282,7 +321,7 @@ fn run() -> CliResult<()> {
             cmd_adversary(&args)
         }
         "ablation" => {
-            args.finish(&["study", "trials", "seed", "k", "s", "threads"], false)?;
+            args.finish(&["study", "trials", "seed", "k", "s", "threads", "stragglers"], false)?;
             cmd_ablation(&args)
         }
         "inspect" => {
@@ -306,19 +345,33 @@ repro — Approximate Gradient Coding via Sparse Random Graphs (2017)
 
 USAGE:
   repro figures --fig 2|3|4|5 [--trials N] [--k K] [--seed S] [--tmax T]
-                [--threads T]
+                [--threads T] [--stragglers SPEC]
   repro tables  --table thm3|thm5|thm6|thm8|thm10|thm11|thm21|thm24
                 [--trials N] [--k K] [--s S] [--seed S] [--threads T]
+                [--stragglers SPEC]
   repro ablation --study rho|rbgc|lsqr|normalization [--trials N] [--k K]
-                [--s S] [--seed S] [--threads T]
-  repro shard   --fig F|--table T|--ablation STUDY --shard-id I
-                --num-shards N [--out FILE] [--trials N] [--k K] [--s S]
-                [--seed S] [--tmax T] [--threads T]
-  repro run     --fig F|--table T|--ablation STUDY [--fanout N]
-                [--artifacts-dir DIR] [--trials N] [--k K] [--s S]
-                [--seed S] [--tmax T] [--threads T]
+                [--s S] [--seed S] [--threads T] [--stragglers SPEC]
+  repro scenario [--stragglers SPEC] [--trials N] [--k K] [--s S]
+                [--seed S] [--threads T]
+                                    # time-to-accuracy curves: mean
+                                    # gather wall-clock vs err1 per
+                                    # scheme, fastest-r and fixed-
+                                    # deadline arms across the delta
+                                    # grid (SPEC must be a latency
+                                    # model)
+  repro shard   --fig F|--table T|--ablation STUDY|--scenario STUDY
+                --shard-id I --num-shards N [--out FILE] [--trials N]
+                [--k K] [--s S] [--seed S] [--tmax T] [--threads T]
+                [--stragglers SPEC]
+  repro run     --fig F|--table T|--ablation STUDY|--scenario STUDY
+                [--fanout N] [--artifacts-dir DIR | --resume DIR]
+                [--trials N] [--k K] [--s S] [--seed S] [--tmax T]
+                [--threads T] [--stragglers SPEC]
                                     # spawn N shard processes, wait,
-                                    # verify, merge -> CSV on stdout
+                                    # verify, merge -> CSV on stdout;
+                                    # --resume reuses DIR's valid
+                                    # artifacts and respawns only the
+                                    # missing/corrupt shards
   repro merge   FILE... [--out FILE]  # merge artifacts -> CSV on stdout;
                                     # with --out, fold any disjoint
                                     # subset into one partial artifact
@@ -333,28 +386,47 @@ USAGE:
   repro demo
   repro help
 
+STRAGGLER SCENARIOS (--stragglers SPEC; part of the run identity):
+  uniform                      paper default: r=(1-d)k uniform survivors
+  uniform:D                    fixed straggler fraction D (r = (1-D)k)
+  shifted-exp:BASE,RATE[,P]    latency draws base + Exp(rate)
+  pareto:SCALE,SHAPE[,P]       heavy-tailed Pareto latencies
+  bimodal:FAST,SLOW,PSLOW[,P]  two-mode (clone-straggler) latencies
+  adversarial:block|greedy|local-search   standing-assignment attack
+  P = fastest-r (default) | deadline:T
+  The default uniform scenario reproduces every published CSV
+  byte-for-byte; thm3/thm10/thm11 reject non-uniform scenarios.
+
 DEFAULTS:
   figures: --fig 2 --trials 5000 --seed 2017 --k 100 --tmax 15
   tables:  --table thm5 --trials 2000 --seed 2017 --k 100 --s 10
   ablation: --study rho --trials 500 --seed 2017 --k 100 --s 10
-  shard:   figures/tables/ablation defaults above; --out - (stdout)
+  scenario: --stragglers pareto:0.02,1.5 --trials 500 --seed 2017
+           --k 100 --s 10
+  shard:   figures/tables/ablation/scenario defaults above; --out - (stdout)
   run:     shard defaults above; --fanout 2; --artifacts-dir <temp dir>
            (temporary artifacts are removed after the merge); each child
            gets --threads cores/fanout unless --threads is given
   train:   --scheme frc --model linear --decoder onestep --k 100 --s 10
            --steps 200 --delta 0.2 --lr 0.5 --backend pjrt --engines 2 --seed 0
   adversary: --k 100 --s 10 --r 4k/5 --seed 2017
+  --stragglers defaults to uniform everywhere but `repro scenario`.
   --threads defaults to the machine's core count (capped at 16); results
   are bit-identical for every thread count.
 
 SHARDING:
-  `repro shard` runs one disjoint slice of a figure/table/ablation's
-  trial range and writes exact partial aggregates as a checksummed JSON
-  artifact; `repro merge` over a complete shard set reproduces the
-  unsharded CSV bit-for-bit, and `repro run --fanout N` drives the
-  whole cycle (spawn, wait, verify, merge) as one command:
+  `repro shard` runs one disjoint slice of a figure/table/ablation/
+  scenario's trial range and writes exact partial aggregates as a
+  checksummed JSON artifact; `repro merge` over a complete shard set
+  reproduces the unsharded CSV bit-for-bit, and `repro run --fanout N`
+  drives the whole cycle (spawn, wait, verify, merge) as one command:
 
     repro run --fig 3 --fanout 4 > fig3.csv
+
+  An interrupted fan-out resumes without recomputing finished shards:
+
+    repro run --fig 3 --fanout 8 --artifacts-dir fig3_shards   # killed
+    repro run --fig 3 --fanout 8 --resume fig3_shards > fig3.csv
 
   For multi-machine runs, fan out by hand and reduce as a tree —
   `merge --out` folds any disjoint subset into a compound artifact:
@@ -377,6 +449,19 @@ fn threads_flag(args: &Args) -> CliResult<Option<usize>> {
         Some(_) => Some(args.usize("threads", 0)?.max(1)),
         None => None,
     })
+}
+
+/// The straggler scenario named by `--stragglers` (default: the
+/// uniform model every published figure/table uses — byte-identical
+/// output to the pre-scenario CLI).
+fn stragglers_flag(args: &Args) -> CliResult<Scenario> {
+    match args.get("stragglers") {
+        None => Ok(Scenario::default()),
+        Some(spec) => match Scenario::parse(spec) {
+            Ok(s) => Ok(s),
+            Err(e) => usage(format!("--stragglers {spec:?}: {e:#}")),
+        },
+    }
 }
 
 fn cmd_figures(args: &Args) -> CliResult<()> {
@@ -404,6 +489,7 @@ fn figure_job(args: &Args) -> CliResult<JobSpec> {
         k: args.usize("k", 100)?,
         s: 0,
         tmax: args.usize("tmax", 15)?,
+        scenario: stragglers_flag(args)?,
     })
 }
 
@@ -421,6 +507,11 @@ fn cmd_tables(args: &Args) -> CliResult<()> {
 /// instance) and reject the flag.
 const TABLES_WITH_S: [&str; 4] = ["thm3", "thm5", "thm6", "thm10"];
 
+/// The tables with no uniform straggler sampling to swap out (thm3:
+/// spectral, thm10/thm11: their own adversarial protocol); they reject
+/// `--stragglers` rather than silently ignore it.
+const TABLES_WITHOUT_SCENARIO: [&str; 3] = ["thm3", "thm10", "thm11"];
+
 fn table_job(args: &Args) -> CliResult<JobSpec> {
     let table = args.get("table").unwrap_or("thm5");
     if !TABLE_IDS.contains(&table) {
@@ -431,6 +522,13 @@ fn table_job(args: &Args) -> CliResult<JobSpec> {
     if !TABLES_WITH_S.contains(&table) && args.get("s").is_some() {
         return usage(format!("--s is not accepted for --table {table} (s is derived internally)"));
     }
+    let scenario = stragglers_flag(args)?;
+    if !scenario.is_default() && TABLES_WITHOUT_SCENARIO.contains(&table) {
+        return usage(format!(
+            "--stragglers is not supported for --table {table} \
+             (no uniform straggler sampling to replace)"
+        ));
+    }
     Ok(JobSpec {
         kind: JobKind::Table,
         id: table.to_string(),
@@ -439,6 +537,7 @@ fn table_job(args: &Args) -> CliResult<JobSpec> {
         k: args.usize("k", 100)?,
         s: args.usize("s", 10)?,
         tmax: 0,
+        scenario,
     })
 }
 
@@ -459,6 +558,7 @@ fn ablation_job(args: &Args) -> CliResult<JobSpec> {
         k: args.usize("k", 100)?,
         s: args.usize("s", 10)?,
         tmax: 0,
+        scenario: stragglers_flag(args)?,
     })
 }
 
@@ -469,19 +569,81 @@ fn cmd_ablation(args: &Args) -> CliResult<()> {
     Ok(())
 }
 
+// ------------------------------------------------------------ scenario
+
+/// The scenario (time-to-accuracy) job: `repro scenario` and the
+/// `--scenario STUDY` kind flag of `repro shard`/`repro run`. Requires
+/// a latency straggler model — uniform and adversarial scenarios have
+/// no wall-clock axis — with the default (fastest-r) policy: the sweep
+/// derives both deadline-policy arms itself.
+fn scenario_job(args: &Args) -> CliResult<JobSpec> {
+    let study = args.get("scenario").unwrap_or("tta");
+    if !SCENARIO_IDS.contains(&study) {
+        return usage(format!(
+            "unknown scenario study {study:?} (one of {})",
+            SCENARIO_IDS.join("|")
+        ));
+    }
+    let scenario = match args.get("stragglers") {
+        // The coordinator's default cluster model: heavy-tailed Pareto.
+        None => Scenario::parse("pareto:0.02,1.5").expect("default scenario spec parses"),
+        Some(_) => stragglers_flag(args)?,
+    };
+    match &scenario {
+        Scenario::Latency { policy: PolicySpec::FastestR, .. } => {}
+        Scenario::Latency { .. } => {
+            return usage(
+                "the scenario job sweeps the deadline axis itself; drop the explicit \
+                 deadline:T policy from --stragglers",
+            );
+        }
+        _ => {
+            return usage(
+                "`repro scenario` needs a latency straggler model: \
+                 --stragglers shifted-exp:BASE,RATE | pareto:SCALE,SHAPE | bimodal:FAST,SLOW,P",
+            );
+        }
+    }
+    Ok(JobSpec {
+        kind: JobKind::Scenario,
+        id: study.to_string(),
+        trials: args.usize("trials", 500)?,
+        seed: args.u64("seed", 2017)?,
+        k: args.usize("k", 100)?,
+        s: args.usize("s", 10)?,
+        tmax: 0,
+        scenario,
+    })
+}
+
+fn cmd_scenario(args: &Args) -> CliResult<()> {
+    let job = scenario_job(args)?;
+    let points = job.run(Shard::full(), threads_flag(args)?)?;
+    print!("{}", points.to_csv());
+    Ok(())
+}
+
 // ----------------------------------------- shard / run / merge / verify
 
-/// The job named by exactly one of --fig / --table / --ablation (shared
-/// by `repro shard` and `repro run`).
+/// The job named by exactly one of --fig / --table / --ablation /
+/// --scenario (shared by `repro shard` and `repro run`).
 fn job_from_kind_flags(args: &Args, cmd: &str) -> CliResult<JobSpec> {
-    match (args.get("fig"), args.get("table"), args.get("ablation")) {
-        (Some(_), None, None) => figure_job(args),
-        (None, Some(_), None) => table_job(args),
-        (None, None, Some(_)) => ablation_job(args),
-        (None, None, None) => {
-            usage(format!("`repro {cmd}` needs --fig F, --table T, or --ablation STUDY"))
-        }
-        _ => usage(format!("pass exactly one of --fig / --table / --ablation to `repro {cmd}`")),
+    match (
+        args.get("fig"),
+        args.get("table"),
+        args.get("ablation"),
+        args.get("scenario"),
+    ) {
+        (Some(_), None, None, None) => figure_job(args),
+        (None, Some(_), None, None) => table_job(args),
+        (None, None, Some(_), None) => ablation_job(args),
+        (None, None, None, Some(_)) => scenario_job(args),
+        (None, None, None, None) => usage(format!(
+            "`repro {cmd}` needs --fig F, --table T, --ablation STUDY, or --scenario STUDY"
+        )),
+        _ => usage(format!(
+            "pass exactly one of --fig / --table / --ablation / --scenario to `repro {cmd}`"
+        )),
     }
 }
 
@@ -561,11 +723,20 @@ fn shard_child_args(
             v.push("--s".into());
             v.push(job.s.to_string());
         }
+        JobKind::Scenario => {
+            v.push("--scenario".into());
+            v.push(job.id.clone());
+            v.push("--s".into());
+            v.push(job.s.to_string());
+        }
     }
     for (flag, val) in [
         ("--trials", job.trials.to_string()),
         ("--seed", job.seed.to_string()),
         ("--k", job.k.to_string()),
+        // Canonical scenario string: the child's parse reproduces the
+        // parent's Scenario exactly (the parent cross-checks anyway).
+        ("--stragglers", job.scenario.to_string()),
         ("--shard-id", shard_id.to_string()),
         ("--num-shards", num_shards.to_string()),
     ] {
@@ -585,23 +756,25 @@ fn shard_child_args(
 /// shard` child processes of this same binary, waits for all of them,
 /// verifies the artifact set, merges, and prints the
 /// unsharded-identical CSV — the whole CI fan-out workflow in one
-/// command.
+/// command. With `--resume DIR`, artifacts already present in DIR (from
+/// an interrupted earlier run) are reused and only the missing or
+/// corrupt shards are respawned — `verify`'s missing-id accounting in
+/// driver form.
 fn cmd_run(args: &Args) -> CliResult<()> {
     let job = job_from_kind_flags(args, "run")?;
     let fanout = args.usize("fanout", 2)?;
     if fanout == 0 {
         return usage("--fanout must be at least 1");
     }
-    // Without an explicit --threads, split the machine's worker budget
-    // across the children instead of oversubscribing it N-fold (each
-    // child would otherwise default to the full core count). Results
-    // are thread-count invariant; this only affects wall-clock.
-    let threads = match threads_flag(args)? {
-        Some(t) => Some(t),
-        None => Some((gradcode::util::parallel::default_threads() / fanout).max(1)),
-    };
+    if args.get("artifacts-dir").is_some() && args.get("resume").is_some() {
+        return usage(
+            "pass either --artifacts-dir or --resume (a resumed run reuses and keeps \
+             the artifacts in its --resume directory)",
+        );
+    }
     let exe = std::env::current_exe().context("locating the running binary")?;
-    let (dir, keep) = match args.get("artifacts-dir") {
+    let resuming = args.get("resume").is_some();
+    let (dir, keep) = match args.get("resume").or(args.get("artifacts-dir")) {
         Some(d) => {
             std::fs::create_dir_all(d).with_context(|| format!("creating {d}"))?;
             (std::path::PathBuf::from(d), true)
@@ -619,15 +792,87 @@ fn cmd_run(args: &Args) -> CliResult<()> {
         }
     };
 
-    eprintln!(
-        "fanning {} {} out across {fanout} shard processes (artifacts in {})",
-        job.kind.name(),
-        job.id,
-        dir.display()
-    );
+    // Resume: reuse every artifact in the directory that parses
+    // (checksum-verified) and belongs to this exact job and shard
+    // count; everything else — absent, corrupt, or foreign — leaves
+    // its shard ids in the respawn set.
+    let mut reused: Vec<ShardArtifact> = Vec::new();
+    let mut covered: Vec<usize> = Vec::new();
+    if resuming {
+        let entries =
+            std::fs::read_dir(&dir).with_context(|| format!("reading {}", dir.display()))?;
+        for entry in entries {
+            let path = entry.with_context(|| format!("reading {}", dir.display()))?.path();
+            if path.extension().map_or(true, |e| e != "json") {
+                continue;
+            }
+            let text = match std::fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("resume: skipping unreadable {} ({e})", path.display());
+                    continue;
+                }
+            };
+            match ShardArtifact::parse(&text) {
+                Ok(a) if a.job == job && a.num_shards == fanout => {
+                    covered.extend(a.shard_ids.iter().copied());
+                    reused.push(a);
+                }
+                Ok(a) => eprintln!(
+                    "resume: skipping {} (different job or shard count: {} {} x{})",
+                    path.display(),
+                    a.job.kind.name(),
+                    a.job.id,
+                    a.num_shards
+                ),
+                Err(e) => eprintln!(
+                    "resume: discarding corrupt {} ({e:#}); its shard will be recomputed",
+                    path.display()
+                ),
+            }
+        }
+        covered.sort_unstable();
+        if let Some(w) = covered.windows(2).find(|w| w[0] == w[1]) {
+            return Err(CliError::Runtime(anyhow!(
+                "resume dir {} covers shard id {} more than once (overlapping artifacts); \
+                 remove the extras before resuming",
+                dir.display(),
+                w[0]
+            )));
+        }
+    }
+    let missing: Vec<usize> = (0..fanout).filter(|i| !covered.contains(i)).collect();
+    // Without an explicit --threads, split the machine's worker budget
+    // across the children that actually spawn — the respawn set, not
+    // the nominal fanout, so a resume of one missing shard still gets
+    // the whole machine. Results are thread-count invariant; this only
+    // affects wall-clock.
+    let threads = match threads_flag(args)? {
+        Some(t) => Some(t),
+        None => Some(
+            (gradcode::util::parallel::default_threads() / missing.len().max(1)).max(1),
+        ),
+    };
+    if resuming {
+        eprintln!(
+            "resuming {} {}: {}/{fanout} shard(s) present in {}, respawning {:?}",
+            job.kind.name(),
+            job.id,
+            covered.len(),
+            dir.display(),
+            missing
+        );
+    } else {
+        eprintln!(
+            "fanning {} {} out across {fanout} shard processes (artifacts in {})",
+            job.kind.name(),
+            job.id,
+            dir.display()
+        );
+    }
     let mut children = Vec::new();
     let mut spawn_errors: Vec<String> = Vec::new();
-    for sid in 0..fanout {
+    for &sid in &missing {
         let out = dir.join(format!("{}_{}_shard_{sid}_of_{fanout}.json", job.kind.name(), job.id));
         match std::process::Command::new(&exe)
             .args(shard_child_args(&job, sid, fanout, &out, threads))
@@ -640,9 +885,9 @@ fn cmd_run(args: &Args) -> CliResult<()> {
     // Wait for every spawned child (even after a spawn failure, so none
     // are left running), then verify + merge. The temp artifacts dir is
     // removed on success AND failure — the HELP text promises temporary
-    // artifacts never outlive the run; pass --artifacts-dir to keep
-    // them for debugging.
-    let outcome = wait_verify_merge(&job, children, spawn_errors);
+    // artifacts never outlive the run; pass --artifacts-dir (or
+    // --resume) to keep them for debugging or resumption.
+    let outcome = wait_verify_merge(&job, children, spawn_errors, reused);
     if !keep {
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -660,8 +905,9 @@ fn wait_verify_merge(
     job: &JobSpec,
     children: Vec<(usize, std::path::PathBuf, std::process::Child)>,
     mut failures: Vec<String>,
+    reused: Vec<ShardArtifact>,
 ) -> CliResult<gradcode::sim::MergedRun> {
-    let mut artifacts = Vec::new();
+    let mut artifacts = reused;
     for (sid, out, mut child) in children {
         let status = match child.wait() {
             Ok(status) => status,

@@ -27,10 +27,11 @@
 use anyhow::{bail, Result};
 
 use super::montecarlo::MonteCarlo;
+use super::scenario::scalar_partial_under;
 use super::shard::{Partial, Shard, ABLATION_IDS};
 use crate::codes::{normalized_rho, Scheme, ThresholdedBernoulliCode};
-use crate::decode::DecodeWorkspace;
 use crate::linalg::LsqrOptions;
+use crate::stragglers::Scenario;
 
 /// One ablation data point.
 #[derive(Clone, Debug)]
@@ -122,15 +123,18 @@ pub fn study_partials(
     study: &str,
     k: usize,
     s: usize,
+    scenario: &Scenario,
     mc: &MonteCarlo,
     shard: Shard,
 ) -> Result<Vec<AblationPartialPoint>> {
     Ok(match study {
-        "rho" => rho_sweep_partials(Scheme::Bgc, k, s, 0.25, &RHO_FACTORS, mc, shard),
-        "rbgc" => rbgc_threshold_partials(k, s, 0.25, &RBGC_PAIRS, mc, shard),
-        "lsqr" => lsqr_tolerance_partials(Scheme::Bgc, k, s, 0.25, &LSQR_CAPS, mc, shard),
+        "rho" => rho_sweep_partials(Scheme::Bgc, k, s, 0.25, &RHO_FACTORS, scenario, mc, shard),
+        "rbgc" => rbgc_threshold_partials(k, s, 0.25, &RBGC_PAIRS, scenario, mc, shard),
+        "lsqr" => {
+            lsqr_tolerance_partials(Scheme::Bgc, k, s, 0.25, &LSQR_CAPS, scenario, mc, shard)
+        }
         "normalization" => {
-            normalization_partials(Scheme::Bgc, k, s, &NORMALIZATION_DELTAS, mc, shard)
+            normalization_partials(Scheme::Bgc, k, s, &NORMALIZATION_DELTAS, scenario, mc, shard)
         }
         other => bail!("unknown ablation study {other:?} (one of {})", ABLATION_IDS.join("|")),
     })
@@ -150,19 +154,25 @@ pub fn rho_sweep_partials(
     s: usize,
     delta: f64,
     factors: &[f64],
+    scenario: &Scenario,
     mc: &MonteCarlo,
     shard: Shard,
 ) -> Vec<AblationPartialPoint> {
     let r = r_of(k, delta);
     let canonical = k as f64 / (r as f64 * s as f64);
     let code = scheme.build(k, k, s);
+    let resolved = scenario.resolve(code.as_ref(), delta, r, mc.seed);
     factors
         .iter()
         .map(|&f| {
             let rho = f * canonical;
-            let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
-                ws.onestep_redraw_trial(code.as_ref(), r, rho, rng)
-            });
+            let partial = scalar_partial_under(
+                &resolved,
+                mc,
+                shard,
+                |ws, model, rng| ws.onestep_redraw_trial_with(code.as_ref(), model, rho, rng),
+                |ws, g, model, rng| ws.onestep_trial_with(g, model, rho, rng),
+            );
             AblationPartialPoint {
                 study: "rho_sweep",
                 setting: format!("{} rho={f:.2}x", scheme.name()),
@@ -182,7 +192,16 @@ pub fn rho_sweep(
     factors: &[f64],
     mc: &MonteCarlo,
 ) -> Vec<AblationPoint> {
-    finalize_ablation_points(&rho_sweep_partials(scheme, k, s, delta, factors, mc, Shard::full()))
+    finalize_ablation_points(&rho_sweep_partials(
+        scheme,
+        k,
+        s,
+        delta,
+        factors,
+        &Scenario::default(),
+        mc,
+        Shard::full(),
+    ))
 }
 
 // ----------------------------------------------------- rbgc_threshold
@@ -199,6 +218,7 @@ pub fn rbgc_threshold_partials(
     s: usize,
     delta: f64,
     pairs: &[(f64, f64)],
+    scenario: &Scenario,
     mc: &MonteCarlo,
     shard: Shard,
 ) -> Vec<AblationPartialPoint> {
@@ -208,9 +228,14 @@ pub fn rbgc_threshold_partials(
         .iter()
         .map(|&(trigger, target)| {
             let code = ThresholdedBernoulliCode::new(k, k, s, trigger, target);
-            let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
-                ws.onestep_redraw_trial(&code, r, rho, rng)
-            });
+            let resolved = scenario.resolve(&code, delta, r, mc.seed);
+            let partial = scalar_partial_under(
+                &resolved,
+                mc,
+                shard,
+                |ws, model, rng| ws.onestep_redraw_trial_with(&code, model, rho, rng),
+                |ws, g, model, rng| ws.onestep_trial_with(g, model, rho, rng),
+            );
             AblationPartialPoint {
                 study: "rbgc_threshold",
                 setting: format!("trigger={trigger}s target={target}s"),
@@ -230,7 +255,15 @@ pub fn rbgc_threshold(
     pairs: &[(f64, f64)],
     mc: &MonteCarlo,
 ) -> Vec<AblationPoint> {
-    finalize_ablation_points(&rbgc_threshold_partials(k, s, delta, pairs, mc, Shard::full()))
+    finalize_ablation_points(&rbgc_threshold_partials(
+        k,
+        s,
+        delta,
+        pairs,
+        &Scenario::default(),
+        mc,
+        Shard::full(),
+    ))
 }
 
 // ----------------------------------------------------- lsqr_tolerance
@@ -244,17 +277,25 @@ pub fn lsqr_tolerance_partials(
     s: usize,
     delta: f64,
     caps: &[usize],
+    scenario: &Scenario,
     mc: &MonteCarlo,
     shard: Shard,
 ) -> Vec<AblationPartialPoint> {
     let r = r_of(k, delta);
     let code = scheme.build(k, k, s);
+    let resolved = scenario.resolve(code.as_ref(), delta, r, mc.seed);
     let mut out = Vec::new();
+    let run_cap = |opts: &LsqrOptions| {
+        scalar_partial_under(
+            &resolved,
+            mc,
+            shard,
+            |ws, model, rng| ws.optimal_redraw_trial_with(code.as_ref(), model, opts, None, rng),
+            |ws, g, model, rng| ws.optimal_trial_with(g, model, opts, None, rng),
+        )
+    };
     // Reference: full-budget decode.
-    let opts = LsqrOptions::default();
-    let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
-        ws.optimal_redraw_trial(code.as_ref(), r, &opts, None, rng)
-    });
+    let partial = run_cap(&LsqrOptions::default());
     out.push(AblationPartialPoint {
         study: "lsqr_tolerance",
         setting: "cap=default".into(),
@@ -263,9 +304,7 @@ pub fn lsqr_tolerance_partials(
     });
     for &cap in caps {
         let capped = LsqrOptions { max_iter: cap, ..LsqrOptions::default() };
-        let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
-            ws.optimal_redraw_trial(code.as_ref(), r, &capped, None, rng)
-        });
+        let partial = run_cap(&capped);
         out.push(AblationPartialPoint {
             study: "lsqr_tolerance",
             setting: format!("cap={cap}"),
@@ -285,7 +324,16 @@ pub fn lsqr_tolerance(
     caps: &[usize],
     mc: &MonteCarlo,
 ) -> Vec<AblationPoint> {
-    finalize_ablation_points(&lsqr_tolerance_partials(scheme, k, s, delta, caps, mc, Shard::full()))
+    finalize_ablation_points(&lsqr_tolerance_partials(
+        scheme,
+        k,
+        s,
+        delta,
+        caps,
+        &Scenario::default(),
+        mc,
+        Shard::full(),
+    ))
 }
 
 // ------------------------------------------------------ normalization
@@ -300,6 +348,7 @@ pub fn normalization_partials(
     k: usize,
     s: usize,
     deltas: &[f64],
+    scenario: &Scenario,
     mc: &MonteCarlo,
     shard: Shard,
 ) -> Vec<AblationPartialPoint> {
@@ -309,18 +358,29 @@ pub fn normalization_partials(
         let r = r_of(k, delta);
         let rho_boolean = k as f64 / (r as f64 * s as f64);
         let rho_normalized = normalized_rho(k, r);
-        let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
-            ws.onestep_redraw_trial(code.as_ref(), r, rho_boolean, rng)
-        });
+        let resolved = scenario.resolve(code.as_ref(), delta, r, mc.seed);
+        let partial = scalar_partial_under(
+            &resolved,
+            mc,
+            shard,
+            |ws, model, rng| ws.onestep_redraw_trial_with(code.as_ref(), model, rho_boolean, rng),
+            |ws, g, model, rng| ws.onestep_trial_with(g, model, rho_boolean, rng),
+        );
         out.push(AblationPartialPoint {
             study: "normalization",
             setting: format!("{} delta={delta:.1} boolean", scheme.name()),
             k,
             partial,
         });
-        let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
-            ws.onestep_normalized_redraw_trial(code.as_ref(), r, rho_normalized, rng)
-        });
+        let partial = scalar_partial_under(
+            &resolved,
+            mc,
+            shard,
+            |ws, model, rng| {
+                ws.onestep_normalized_redraw_trial_with(code.as_ref(), model, rho_normalized, rng)
+            },
+            |ws, g, model, rng| ws.onestep_normalized_trial_with(g, model, rho_normalized, rng),
+        );
         out.push(AblationPartialPoint {
             study: "normalization",
             setting: format!("{} delta={delta:.1} normalized", scheme.name()),
@@ -339,7 +399,15 @@ pub fn normalization(
     deltas: &[f64],
     mc: &MonteCarlo,
 ) -> Vec<AblationPoint> {
-    finalize_ablation_points(&normalization_partials(scheme, k, s, deltas, mc, Shard::full()))
+    finalize_ablation_points(&normalization_partials(
+        scheme,
+        k,
+        s,
+        deltas,
+        &Scenario::default(),
+        mc,
+        Shard::full(),
+    ))
 }
 
 #[cfg(test)]
@@ -418,7 +486,7 @@ mod tests {
         // stays machine-parseable with a naive comma split.
         let mc = MonteCarlo::new(2, 1);
         for &id in &ABLATION_IDS {
-            let pts = study_partials(id, 12, 2, &mc, Shard::full()).unwrap();
+            let pts = study_partials(id, 12, 2, &Scenario::default(), &mc, Shard::full()).unwrap();
             assert!(!pts.is_empty(), "{id}");
             for p in &pts {
                 assert!(
@@ -432,7 +500,7 @@ mod tests {
                 assert_eq!(row.matches(',').count(), 2, "{id}: {row}");
             }
         }
-        assert!(study_partials("nope", 12, 2, &mc, Shard::full()).is_err());
+        assert!(study_partials("nope", 12, 2, &Scenario::default(), &mc, Shard::full()).is_err());
     }
 
     // ---- legacy-parity pins: the workspace-threaded studies must
@@ -539,9 +607,18 @@ mod tests {
         let mc = MonteCarlo::new(45, 9);
         let args = (Scheme::Bgc, 16usize, 3usize, 0.25);
         let factors = [0.5, 1.0];
+        let sc = Scenario::default();
         let whole = rho_sweep(args.0, args.1, args.2, args.3, &factors, &mc);
-        let mut merged =
-            rho_sweep_partials(args.0, args.1, args.2, args.3, &factors, &mc, Shard::new(0, 3).unwrap());
+        let mut merged = rho_sweep_partials(
+            args.0,
+            args.1,
+            args.2,
+            args.3,
+            &factors,
+            &sc,
+            &mc,
+            Shard::new(0, 3).unwrap(),
+        );
         for sid in 1..3 {
             let part = rho_sweep_partials(
                 args.0,
@@ -549,6 +626,7 @@ mod tests {
                 args.2,
                 args.3,
                 &factors,
+                &sc,
                 &mc,
                 Shard::new(sid, 3).unwrap(),
             );

@@ -14,10 +14,12 @@
 //! bit-for-bit (see [`super::shard`] and `tests/shard_parity.rs`).
 
 use super::montecarlo::MonteCarlo;
+use super::scenario::scalar_partial_under;
 use super::shard::{Partial, Shard};
 use crate::codes::Scheme;
 use crate::decode::{algorithmic_error_curve, DecodeWorkspace, StepSize};
 use crate::linalg::{CscMatrix, LsqrOptions};
+use crate::stragglers::Scenario;
 use crate::util::Rng;
 
 /// One plotted point: figure id, series labels, x, y.
@@ -151,35 +153,48 @@ pub const FIG_SCHEMES: [Scheme; 3] = [Scheme::Frc, Scheme::Bgc, Scheme::RegularG
 
 /// Figure 2: average one-step error err_1(A)/k vs δ, ρ = k/(rs).
 pub fn figure2(cfg: &FigureConfig) -> Vec<FigPoint> {
-    finalize_fig_points(&figure2_partials(cfg, Shard::full()))
+    finalize_fig_points(&figure2_partials(cfg, &Scenario::default(), Shard::full()))
 }
 
-/// One shard of [`figure2`].
-pub fn figure2_partials(cfg: &FigureConfig, shard: Shard) -> Vec<FigPartialPoint> {
-    error_sweep_partials(cfg, "fig2", &FIG_SCHEMES, ErrorKind::OneStep, shard)
+/// One shard of [`figure2`] under a straggler scenario (the default
+/// uniform scenario reproduces [`figure2`] bit for bit).
+pub fn figure2_partials(
+    cfg: &FigureConfig,
+    scenario: &Scenario,
+    shard: Shard,
+) -> Vec<FigPartialPoint> {
+    error_sweep_partials(cfg, "fig2", &FIG_SCHEMES, ErrorKind::OneStep, scenario, shard)
 }
 
 /// Figure 3: average optimal decoding error err(A)/k vs δ.
 pub fn figure3(cfg: &FigureConfig) -> Vec<FigPoint> {
-    finalize_fig_points(&figure3_partials(cfg, Shard::full()))
+    finalize_fig_points(&figure3_partials(cfg, &Scenario::default(), Shard::full()))
 }
 
-/// One shard of [`figure3`].
-pub fn figure3_partials(cfg: &FigureConfig, shard: Shard) -> Vec<FigPartialPoint> {
-    error_sweep_partials(cfg, "fig3", &FIG_SCHEMES, ErrorKind::Optimal, shard)
+/// One shard of [`figure3`] under a straggler scenario.
+pub fn figure3_partials(
+    cfg: &FigureConfig,
+    scenario: &Scenario,
+    shard: Shard,
+) -> Vec<FigPartialPoint> {
+    error_sweep_partials(cfg, "fig3", &FIG_SCHEMES, ErrorKind::Optimal, scenario, shard)
 }
 
 /// Figure 4: one-step vs optimal per scheme (six panels). Emitted as
 /// both error kinds per scheme; the scheme label carries the decoder.
 pub fn figure4(cfg: &FigureConfig) -> Vec<FigPoint> {
-    finalize_fig_points(&figure4_partials(cfg, Shard::full()))
+    finalize_fig_points(&figure4_partials(cfg, &Scenario::default(), Shard::full()))
 }
 
-/// One shard of [`figure4`].
-pub fn figure4_partials(cfg: &FigureConfig, shard: Shard) -> Vec<FigPartialPoint> {
+/// One shard of [`figure4`] under a straggler scenario.
+pub fn figure4_partials(
+    cfg: &FigureConfig,
+    scenario: &Scenario,
+    shard: Shard,
+) -> Vec<FigPartialPoint> {
     let mut out = Vec::new();
     for kind in [ErrorKind::OneStep, ErrorKind::Optimal] {
-        for mut p in error_sweep_partials(cfg, "fig4", &FIG_SCHEMES, kind, shard) {
+        for mut p in error_sweep_partials(cfg, "fig4", &FIG_SCHEMES, kind, scenario, shard) {
             p.scheme = format!("{}/{}", p.scheme, kind.label());
             out.push(p);
         }
@@ -190,11 +205,17 @@ pub fn figure4_partials(cfg: &FigureConfig, shard: Shard) -> Vec<FigPartialPoint
 /// Figure 5: algorithmic decoding error ||u_t||²/k of a BGC for
 /// δ ∈ {0.1, 0.2, 0.3, 0.5, 0.8}, ν = ||A||², t = 0..=t_max.
 pub fn figure5(cfg: &FigureConfig, t_max: usize) -> Vec<FigPoint> {
-    finalize_fig_points(&figure5_partials(cfg, t_max, Shard::full()))
+    finalize_fig_points(&figure5_partials(cfg, t_max, &Scenario::default(), Shard::full()))
 }
 
-/// One shard of [`figure5`]: a [`Partial::Curve`] per (s, δ) point.
-pub fn figure5_partials(cfg: &FigureConfig, t_max: usize, shard: Shard) -> Vec<FigPartialPoint> {
+/// One shard of [`figure5`]: a [`Partial::Curve`] per (s, δ) point,
+/// with straggler selection through the scenario spine.
+pub fn figure5_partials(
+    cfg: &FigureConfig,
+    t_max: usize,
+    scenario: &Scenario,
+    shard: Shard,
+) -> Vec<FigPartialPoint> {
     let deltas = [0.1, 0.2, 0.3, 0.5, 0.8];
     let mut out = Vec::new();
     for &s in &cfg.s_values {
@@ -202,9 +223,13 @@ pub fn figure5_partials(cfg: &FigureConfig, t_max: usize, shard: Shard) -> Vec<F
             let r = cfg.r(delta);
             let k = cfg.k;
             let code = Scheme::Bgc.build(k, k, s);
+            let resolved = scenario.resolve(code.as_ref(), delta, r, cfg.mc.seed);
             let partial =
                 cfg.mc.mean_curve_partial_ws(t_max + 1, shard, DecodeWorkspace::new, |ws, rng| {
-                    let a = ws.redraw_submatrix(code.as_ref(), r, rng);
+                    let a = match &resolved.standing_g {
+                        None => ws.redraw_submatrix_with(code.as_ref(), &*resolved.model, rng),
+                        Some(g) => ws.select_submatrix_with(g, &*resolved.model, rng),
+                    };
                     algorithmic_error_curve(a, StepSize::SpectralNormSq, t_max, rng)
                 });
             out.push(FigPartialPoint {
@@ -239,19 +264,24 @@ impl ErrorKind {
 /// straggler→decode pipeline: each worker thread owns one
 /// [`DecodeWorkspace`], every trial re-draws G *into the workspace*
 /// (`assignment_into` — no allocation even for randomized schemes),
-/// samples stragglers, and decodes without materializing A (one-step)
-/// or allocating solver state (optimal). Per-trial RNG consumption
-/// matches the historical allocating path, so seeded *trial values*
-/// are unchanged; the final mean, however, is now the correctly-
-/// rounded exact sum (see [`super::shard::ExactSum`]), which can
-/// differ from the pre-sharding sequential sum in the last ulp. Runs
-/// only the `shard` slice of each point's trials and returns exact
-/// partials.
+/// selects stragglers through the scenario spine, and decodes without
+/// materializing A (one-step) or allocating solver state (optimal).
+/// Under the default uniform scenario, per-trial RNG consumption
+/// matches the historical hard-coded sampling, so seeded *trial
+/// values* are unchanged; the final mean is the correctly-rounded
+/// exact sum (see [`super::shard::ExactSum`]). Adversarial scenarios
+/// run in the standing-assignment setting — G drawn once per point
+/// (seeded by the job), the attack planned against it — which makes
+/// every trial deterministic, so the point collapses to one exact
+/// decode ([`scalar_partial_under`]) instead of `trials` identical
+/// solves. Runs only the `shard` slice of each point's trials and
+/// returns exact partials.
 fn error_sweep_partials(
     cfg: &FigureConfig,
     figure: &'static str,
     schemes: &[Scheme],
     kind: ErrorKind,
+    scenario: &Scenario,
     shard: Shard,
 ) -> Vec<FigPartialPoint> {
     let opts = LsqrOptions::default();
@@ -263,14 +293,24 @@ fn error_sweep_partials(
                 let k = cfg.k;
                 let rho = k as f64 / (r as f64 * s as f64);
                 let code = scheme.build(k, k, s);
-                let partial = cfg.mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
-                    match kind {
-                        ErrorKind::OneStep => ws.onestep_redraw_trial(code.as_ref(), r, rho, rng),
-                        ErrorKind::Optimal => {
-                            ws.optimal_redraw_trial(code.as_ref(), r, &opts, None, rng)
+                let resolved = scenario.resolve(code.as_ref(), delta, r, cfg.mc.seed);
+                let partial = scalar_partial_under(
+                    &resolved,
+                    &cfg.mc,
+                    shard,
+                    |ws, model, rng| match kind {
+                        ErrorKind::OneStep => {
+                            ws.onestep_redraw_trial_with(code.as_ref(), model, rho, rng)
                         }
-                    }
-                });
+                        ErrorKind::Optimal => {
+                            ws.optimal_redraw_trial_with(code.as_ref(), model, &opts, None, rng)
+                        }
+                    },
+                    |ws, g, model, rng| match kind {
+                        ErrorKind::OneStep => ws.onestep_trial_with(g, model, rho, rng),
+                        ErrorKind::Optimal => ws.optimal_trial_with(g, model, &opts, None, rng),
+                    },
+                );
                 out.push(FigPartialPoint {
                     figure,
                     scheme: scheme.name().to_string(),
@@ -385,10 +425,11 @@ mod tests {
     #[test]
     fn figure2_sharded_partials_merge_to_entry_point_bits() {
         let cfg = tiny_cfg();
+        let scenario = Scenario::default();
         let whole = figure2(&cfg);
-        let mut merged = figure2_partials(&cfg, Shard::new(0, 3).unwrap());
+        let mut merged = figure2_partials(&cfg, &scenario, Shard::new(0, 3).unwrap());
         for sid in 1..3 {
-            let part = figure2_partials(&cfg, Shard::new(sid, 3).unwrap());
+            let part = figure2_partials(&cfg, &scenario, Shard::new(sid, 3).unwrap());
             for (a, b) in merged.iter_mut().zip(&part) {
                 assert!(a.same_point(b));
                 a.partial.merge(&b.partial).unwrap();
@@ -399,6 +440,38 @@ mod tests {
         for (a, b) in merged.iter().zip(&whole) {
             assert_eq!(a.value.to_bits(), b.value.to_bits(), "{}/{}", a.scheme, a.delta);
         }
+    }
+
+    #[test]
+    fn latency_and_adversarial_scenarios_produce_finite_sweeps() {
+        let cfg = tiny_cfg();
+        let n_points = figure2(&cfg).len();
+        for spec in ["pareto:0.05,1.5", "pareto:0.05,1.5,deadline:0.2", "adversarial:greedy"] {
+            let scenario = Scenario::parse(spec).unwrap();
+            let pts = figure2_partials(&cfg, &scenario, Shard::full());
+            assert_eq!(pts.len(), n_points, "{spec}");
+            let vals = finalize_fig_points(&pts);
+            assert!(
+                vals.iter().all(|p| p.value.is_finite() && p.value >= 0.0),
+                "{spec}: {vals:?}"
+            );
+        }
+        // Adversarial selection is at least as damaging as uniform on
+        // the one-step objective, pointwise in expectation — sanity
+        // check one point rather than assert a theorem.
+        let uniform = finalize_fig_points(&figure2_partials(
+            &cfg,
+            &Scenario::default(),
+            Shard::full(),
+        ));
+        let adv = finalize_fig_points(&figure2_partials(
+            &cfg,
+            &Scenario::parse("adversarial:greedy").unwrap(),
+            Shard::full(),
+        ));
+        let mean_uniform: f64 = uniform.iter().map(|p| p.value).sum::<f64>();
+        let mean_adv: f64 = adv.iter().map(|p| p.value).sum::<f64>();
+        assert!(mean_adv >= 0.5 * mean_uniform, "adv {mean_adv} vs uniform {mean_uniform}");
     }
 
     #[test]

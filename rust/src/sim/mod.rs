@@ -12,11 +12,13 @@
 pub mod ablations;
 pub mod figures;
 pub mod montecarlo;
+pub mod scenario;
 pub mod shard;
 pub mod tables;
 
 pub use figures::{FigPoint, FigureConfig};
 pub use montecarlo::MonteCarlo;
 pub use ablations::{AblationPartialPoint, AblationPoint};
+pub use scenario::{ScenarioPartialPoint, ScenarioPoint};
 pub use shard::{JobKind, JobSpec, MergedRun, Shard, ShardArtifact};
 pub use tables::TableRow;

@@ -26,11 +26,15 @@
 //! are built once per thread and reused across every trial it runs —
 //! including, since the `assignment_into` re-draw path landed, the
 //! assignment matrix G itself for schemes that sample a fresh G every
-//! trial. Workspaces are scratch only — trial results must not depend
-//! on the workspace's prior contents, so means stay independent of
-//! thread count and scheduling. (A workspace-cached CSR mirror of a
-//! *fixed* G is fine: it is a pure function of the figure point, not
-//! of trial history.)
+//! trial, and, since the scenario spine landed, the straggler-selection
+//! scratch (`stragglers::StragglerScratch`) behind every
+//! `crate::stragglers::StragglerModel`. Workspaces are scratch only —
+//! trial results must not depend on the workspace's prior contents, so
+//! means stay independent of thread count and scheduling. (A
+//! workspace-cached CSR mirror of a *fixed* G is fine: it is a pure
+//! function of the figure point, not of trial history — as is a
+//! per-point resolved straggler model, which the sweeps build *outside*
+//! the trial closure and share immutably across threads.)
 
 use super::shard::{ExactSum, Partial, Shard};
 use crate::util::parallel::parallel_map_with;

@@ -1,0 +1,347 @@
+//! The `repro scenario` job family: **time-to-accuracy** sweeps — the
+//! plot the paper's abstract promises ("the slowest compute nodes in
+//! the system dictate the overall running time") but no figure/table
+//! entry point produces.
+//!
+//! The `tta` study sweeps the straggler-fraction grid δ ∈ {0.05..0.90}
+//! for every Fig. 2-4 scheme under a latency scenario, with **two
+//! deadline-policy arms** per scheme:
+//!
+//! * `fastest-r` — the master waits for the r = (1-δ)k fastest workers;
+//!   gather wall-clock is the r-th order statistic of the latency
+//!   draws (random per trial).
+//! * `deadline` — the master stops at the fixed wall-clock
+//!   `quantile(1-δ)` of the latency model (the deadline admitting a
+//!   (1-δ) fraction in expectation); the responding set — and hence
+//!   err₁ — varies per trial, the gather time does not.
+//!
+//! Each point aggregates a 2-element [`Partial::Curve`]
+//! (Σ gather, Σ err₁), so scenario runs shard/merge/verify/tree-reduce
+//! exactly like every figure and table: the per-trial pair is a pure
+//! function of the trial index, and curve partials fold through
+//! `ExactSum`. Finalizing yields (mean gather, mean err₁/k) — a
+//! parametric time-to-accuracy curve traced by δ, per scheme and arm.
+
+use anyhow::{bail, Result};
+
+use super::montecarlo::MonteCarlo;
+use super::shard::{Partial, Shard};
+use crate::decode::DecodeWorkspace;
+use crate::linalg::CscMatrix;
+use crate::sim::figures::FIG_SCHEMES;
+use crate::stragglers::{
+    DeadlinePolicy, LatencyStragglers, PolicySpec, ResolvedScenario, Scenario, StragglerModel,
+};
+use crate::util::Rng;
+
+/// Aggregate one sweep point's **scalar** statistic under a resolved
+/// scenario — the single dispatch every figure/table/ablation sweep
+/// shares (so no call site can pair the re-draw/standing trial
+/// flavors wrongly):
+///
+/// * re-draw scenarios (uniform, latency) run this shard's slice of
+///   the Monte-Carlo trial range through `redraw`;
+/// * standing-assignment scenarios (adversarial — fixed survivors
+///   replayed against a fixed G, no RNG consumed) are deterministic,
+///   so the point collapses to **one** decode carried as a replicated
+///   [`Partial::Exact`] (merged by bit-equality across shards, like
+///   thm10's attack row) instead of `trials` identical solves.
+pub fn scalar_partial_under(
+    resolved: &ResolvedScenario,
+    mc: &MonteCarlo,
+    shard: Shard,
+    redraw: impl Fn(&mut DecodeWorkspace, &dyn StragglerModel, &mut Rng) -> f64 + Sync,
+    standing: impl FnOnce(&mut DecodeWorkspace, &CscMatrix, &dyn StragglerModel, &mut Rng) -> f64,
+) -> Partial {
+    match &resolved.standing_g {
+        None => mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
+            redraw(ws, &*resolved.model, rng)
+        }),
+        Some(g) => {
+            let mut ws = DecodeWorkspace::new();
+            // The model replays a planned set without touching the RNG;
+            // the seeded stream is only a formality of the trial API.
+            let mut rng = Rng::new(mc.seed);
+            Partial::Exact { value: standing(&mut ws, g, &*resolved.model, &mut rng) }
+        }
+    }
+}
+
+/// [`scalar_partial_under`] for **probability** statistics (thm8):
+/// re-draw scenarios count successes over the shard's trial range;
+/// deterministic standing points collapse to an exact 0/1 value.
+pub fn prob_partial_under(
+    resolved: &ResolvedScenario,
+    mc: &MonteCarlo,
+    shard: Shard,
+    redraw: impl Fn(&mut DecodeWorkspace, &dyn StragglerModel, &mut Rng) -> bool + Sync,
+    standing: impl FnOnce(&mut DecodeWorkspace, &CscMatrix, &dyn StragglerModel, &mut Rng) -> bool,
+) -> Partial {
+    match &resolved.standing_g {
+        None => mc.probability_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
+            redraw(ws, &*resolved.model, rng)
+        }),
+        Some(g) => {
+            let mut ws = DecodeWorkspace::new();
+            let mut rng = Rng::new(mc.seed);
+            let hit = standing(&mut ws, g, &*resolved.model, &mut rng);
+            Partial::Exact { value: if hit { 1.0 } else { 0.0 } }
+        }
+    }
+}
+
+/// The deadline-policy arms every `tta` sweep emits.
+pub const TTA_POLICIES: [&str; 2] = ["fastest-r", "deadline"];
+
+/// The δ grid the `tta` study sweeps (the Fig. 2-4 grid).
+pub fn tta_deltas() -> Vec<f64> {
+    (1..=18).map(|i| i as f64 * 0.05).collect()
+}
+
+/// One published time-to-accuracy point.
+#[derive(Clone, Debug)]
+pub struct ScenarioPoint {
+    pub study: &'static str,
+    pub scheme: String,
+    /// Deadline-policy arm (one of [`TTA_POLICIES`]).
+    pub policy: &'static str,
+    pub s: usize,
+    pub delta: f64,
+    /// Mean gather wall-clock (seconds under the latency model).
+    pub gather: f64,
+    /// Mean one-step error err₁/k.
+    pub err1: f64,
+}
+
+impl ScenarioPoint {
+    pub fn csv_header() -> &'static str {
+        "scenario,scheme,policy,s,delta,gather,err1"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{:.3},{:.6e},{:.6e}",
+            self.study, self.scheme, self.policy, self.s, self.delta, self.gather, self.err1
+        )
+    }
+}
+
+/// One scenario point's *partial* state: sweep metadata plus the exact
+/// 2-element curve partial (Σ gather, Σ err₁) over this shard's trials.
+#[derive(Clone, Debug)]
+pub struct ScenarioPartialPoint {
+    pub study: &'static str,
+    pub scheme: String,
+    pub policy: &'static str,
+    pub s: usize,
+    pub delta: f64,
+    /// The sweep's k (finalize divides the err₁ mean by it).
+    pub k: usize,
+    pub partial: Partial,
+}
+
+impl ScenarioPartialPoint {
+    /// Metadata equality (delta compared by bits) — merge refuses to
+    /// combine partials from different sweep points.
+    pub fn same_point(&self, other: &ScenarioPartialPoint) -> bool {
+        self.study == other.study
+            && self.scheme == other.scheme
+            && self.policy == other.policy
+            && self.s == other.s
+            && self.delta.to_bits() == other.delta.to_bits()
+            && self.k == other.k
+            && self.partial.kind() == other.partial.kind()
+    }
+
+    /// Finalize a (fully-merged) partial into the published point.
+    pub fn finalize(&self) -> ScenarioPoint {
+        let curve = self.partial.curve_values();
+        let (gather, err1_total) = match curve.as_slice() {
+            [g, e] => (*g, *e),
+            _ => (f64::NAN, f64::NAN),
+        };
+        ScenarioPoint {
+            study: self.study,
+            scheme: self.scheme.clone(),
+            policy: self.policy,
+            s: self.s,
+            delta: self.delta,
+            gather,
+            err1: err1_total / self.k as f64,
+        }
+    }
+}
+
+/// Finalize a slice of fully-merged partial points.
+pub fn finalize_scenario_points(points: &[ScenarioPartialPoint]) -> Vec<ScenarioPoint> {
+    points.iter().map(|p| p.finalize()).collect()
+}
+
+/// One shard of the `tta` study. The scenario must carry a latency
+/// model with the default (fastest-r) policy — the sweep derives both
+/// arms itself: FastestR(r(δ)) and Fixed(quantile(1-δ)); uniform and
+/// adversarial scenarios have no wall-clock axis and are rejected, as
+/// is an explicit `deadline:T` policy (the deadline axis is swept, not
+/// fixed).
+pub fn tta_partials(
+    k: usize,
+    s: usize,
+    scenario: &Scenario,
+    mc: &MonteCarlo,
+    shard: Shard,
+) -> Result<Vec<ScenarioPartialPoint>> {
+    let latency = match scenario {
+        Scenario::Latency { model, policy: PolicySpec::FastestR } => *model,
+        Scenario::Latency { .. } => bail!(
+            "the scenario job sweeps the deadline axis itself (fastest-r per point plus \
+             model quantiles); drop the explicit deadline:T policy from --stragglers"
+        ),
+        other => bail!(
+            "the scenario job needs a latency straggler model \
+             (--stragglers shifted-exp:..|pareto:..|bimodal:..), got {other}"
+        ),
+    };
+    let mut out = Vec::new();
+    for policy_arm in TTA_POLICIES {
+        for &scheme in &FIG_SCHEMES {
+            for delta in tta_deltas() {
+                let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
+                let rho = k as f64 / (r as f64 * s as f64);
+                let code = scheme.build(k, k, s);
+                let policy = match policy_arm {
+                    "fastest-r" => DeadlinePolicy::FastestR(r),
+                    _ => DeadlinePolicy::Fixed(latency.quantile(1.0 - delta)),
+                };
+                let model = LatencyStragglers { model: latency, policy };
+                let partial = mc.mean_curve_partial_ws(2, shard, DecodeWorkspace::new, |ws, rng| {
+                    let err1 =
+                        ws.onestep_redraw_trial_with(code.as_ref(), &model as &dyn StragglerModel, rho, rng);
+                    vec![ws.last_gather_time(), err1]
+                });
+                out.push(ScenarioPartialPoint {
+                    study: "tta",
+                    scheme: scheme.name().to_string(),
+                    policy: policy_arm,
+                    s,
+                    delta,
+                    k,
+                    partial,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The single-process `tta` study (the `num_shards = 1` case of
+/// [`tta_partials`]) — what `repro scenario` prints.
+pub fn tta(k: usize, s: usize, scenario: &Scenario, mc: &MonteCarlo) -> Result<Vec<ScenarioPoint>> {
+    Ok(finalize_scenario_points(&tta_partials(k, s, scenario, mc, Shard::full())?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::shard::ExactSum;
+
+    fn pareto() -> Scenario {
+        Scenario::parse("pareto:0.05,1.5").unwrap()
+    }
+
+    #[test]
+    fn tta_rejects_scenarios_without_a_time_axis() {
+        let mc = MonteCarlo::new(4, 1);
+        for bad in ["uniform", "uniform:0.2", "adversarial:greedy", "pareto:1,1.5,deadline:0.5"] {
+            let sc = Scenario::parse(bad).unwrap();
+            assert!(tta_partials(12, 3, &sc, &mc, Shard::full()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn tta_shape_and_monotone_tradeoff() {
+        let mc = MonteCarlo::new(60, 5).with_threads(2);
+        let pts = tta(16, 4, &pareto(), &mc).unwrap();
+        // 2 arms x 3 schemes x 18 deltas.
+        assert_eq!(pts.len(), 2 * 3 * 18);
+        assert!(pts.iter().all(|p| p.err1.is_finite() && p.err1 >= 0.0));
+        assert!(pts.iter().all(|p| p.gather.is_finite() && p.gather > 0.0));
+        // The time-to-accuracy tradeoff: within one scheme and arm,
+        // waiting longer (smaller δ) costs gather time. Check the
+        // fastest-r arm end to end: gather at δ=0.05 (r large) is
+        // >= gather at δ=0.90 (r small).
+        for scheme in ["FRC", "BGC", "s-regular"] {
+            let arm: Vec<&ScenarioPoint> = pts
+                .iter()
+                .filter(|p| p.policy == "fastest-r" && p.scheme == scheme)
+                .collect();
+            assert_eq!(arm.len(), 18);
+            let first = arm.iter().find(|p| (p.delta - 0.05).abs() < 1e-9).unwrap();
+            let last = arm.iter().find(|p| (p.delta - 0.90).abs() < 1e-9).unwrap();
+            assert!(
+                first.gather >= last.gather,
+                "{scheme}: gather({}) < gather({})",
+                first.delta,
+                last.delta
+            );
+        }
+        // Deadline-arm gather is the deterministic model quantile.
+        let lat = pareto().latency_model().copied().unwrap();
+        for p in pts.iter().filter(|p| p.policy == "deadline") {
+            let expected = lat.quantile(1.0 - p.delta);
+            assert!(
+                (p.gather - expected).abs() < 1e-12,
+                "deadline gather {} vs quantile {expected}",
+                p.gather
+            );
+        }
+    }
+
+    #[test]
+    fn tta_partials_are_shard_invariant() {
+        let mc = MonteCarlo::new(45, 9).with_threads(2);
+        let whole = tta(12, 3, &pareto(), &mc).unwrap();
+        for num_shards in [2usize, 3] {
+            let mut merged = tta_partials(12, 3, &pareto(), &mc, Shard::new(0, num_shards).unwrap())
+                .unwrap();
+            for sid in 1..num_shards {
+                let part =
+                    tta_partials(12, 3, &pareto(), &mc, Shard::new(sid, num_shards).unwrap())
+                        .unwrap();
+                for (a, b) in merged.iter_mut().zip(&part) {
+                    assert!(a.same_point(b));
+                    a.partial.merge(&b.partial).unwrap();
+                }
+            }
+            let merged = finalize_scenario_points(&merged);
+            assert_eq!(merged.len(), whole.len());
+            for (a, b) in merged.iter().zip(&whole) {
+                assert_eq!(a.gather.to_bits(), b.gather.to_bits(), "{}/{}", a.scheme, a.delta);
+                assert_eq!(a.err1.to_bits(), b.err1.to_bits(), "{}/{}", a.scheme, a.delta);
+            }
+        }
+    }
+
+    #[test]
+    fn finalize_divides_err1_by_k_only() {
+        let mut g = ExactSum::new();
+        g.add(3.0);
+        let mut e = ExactSum::new();
+        e.add(20.0);
+        let p = ScenarioPartialPoint {
+            study: "tta",
+            scheme: "BGC".into(),
+            policy: "fastest-r",
+            s: 4,
+            delta: 0.25,
+            k: 10,
+            partial: Partial::Curve { count: 2, sums: vec![g, e] },
+        };
+        let f = p.finalize();
+        assert_eq!(f.gather, 1.5); // 3.0 / 2 trials
+        assert_eq!(f.err1, 1.0); // 20.0 / 2 trials / k=10
+        assert_eq!(
+            f.to_csv(),
+            "tta,BGC,fastest-r,4,0.250,1.500000e0,1.000000e0"
+        );
+    }
+}

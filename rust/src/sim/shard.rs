@@ -29,11 +29,14 @@
 //!   for moments (the shardable `mean_std`), success counts for
 //!   probabilities, per-element sums for curves, and a replicated
 //!   `Exact` value for deterministic (non-Monte-Carlo) rows.
-//! * [`JobSpec`] — a figure/table/ablation run identified by (kind, id,
-//!   trials, seed, k, s, tmax); [`JobSpec::run`] executes any shard of
-//!   it. The id registries ([`FIGURE_IDS`], [`TABLE_IDS`],
-//!   [`ABLATION_IDS`]) are shared with the CLI, so every producible job
-//!   is also mergeable.
+//! * [`JobSpec`] — a figure/table/ablation/scenario run identified by
+//!   (kind, id, trials, seed, k, s, tmax, scenario); [`JobSpec::run`]
+//!   executes any shard of it. The id registries ([`FIGURE_IDS`],
+//!   [`TABLE_IDS`], [`ABLATION_IDS`], [`SCENARIO_IDS`]) are shared with
+//!   the CLI, so every producible job is also mergeable. The straggler
+//!   scenario rides in the job (artifact format v3; v2/v1 parse as the
+//!   uniform default), so scenario sweeps shard/merge/verify/
+//!   tree-reduce exactly like everything else.
 //! * [`ShardArtifact`] — the on-disk JSON form of a set of shards'
 //!   partials (`repro shard --out FILE` writes a single-shard artifact;
 //!   `repro merge --out FILE` folds any disjoint subset into a
@@ -84,8 +87,11 @@ use anyhow::{bail, Context, Result};
 use super::ablations::{self, AblationPartialPoint};
 use super::figures::{self, FigPartialPoint, FigureConfig};
 use super::montecarlo::MonteCarlo;
+use super::scenario as scenario_mod;
+use super::scenario::ScenarioPartialPoint;
 use super::tables::{self, RowTemplate, TablePartialPoint};
 use crate::codes::Scheme;
+use crate::stragglers::Scenario;
 use crate::util::Json;
 
 // ------------------------------------------------------------ ExactSum
@@ -439,6 +445,7 @@ pub enum JobKind {
     Figure,
     Table,
     Ablation,
+    Scenario,
 }
 
 impl JobKind {
@@ -447,6 +454,7 @@ impl JobKind {
             JobKind::Figure => "figure",
             JobKind::Table => "table",
             JobKind::Ablation => "ablation",
+            JobKind::Scenario => "scenario",
         }
     }
 
@@ -455,19 +463,24 @@ impl JobKind {
             "figure" => Ok(JobKind::Figure),
             "table" => Ok(JobKind::Table),
             "ablation" => Ok(JobKind::Ablation),
-            other => bail!("unknown job kind {other:?} (figure|table|ablation)"),
+            "scenario" => Ok(JobKind::Scenario),
+            other => bail!("unknown job kind {other:?} (figure|table|ablation|scenario)"),
         }
     }
 }
 
-/// A fully-specified figure/table/ablation run: everything that
-/// determines the output bits. Two artifacts merge only if their jobs
-/// are identical.
+/// A fully-specified figure/table/ablation/scenario run: everything
+/// that determines the output bits. Two artifacts merge only if their
+/// jobs are identical.
 ///
-/// `id` is `"2".."5"` for figures, `"thm5".."thm24"` for tables, and
-/// an [`ABLATION_IDS`] study for ablations; `s` is table/ablation-only
-/// (0 for figures, which sweep the paper's s values) and `tmax` is
-/// Figure-5-only (0 otherwise).
+/// `id` is `"2".."5"` for figures, `"thm5".."thm24"` for tables, an
+/// [`ABLATION_IDS`] study for ablations, and a [`SCENARIO_IDS`] study
+/// for scenario runs; `s` is table/ablation/scenario-only (0 for
+/// figures, which sweep the paper's s values) and `tmax` is
+/// Figure-5-only (0 otherwise). `scenario` is the straggler scenario
+/// (`--stragglers`; the uniform default reproduces the pre-scenario
+/// output byte-for-byte) — part of the run identity, compared bitwise
+/// on its f64 parameters.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct JobSpec {
     pub kind: JobKind,
@@ -477,6 +490,7 @@ pub struct JobSpec {
     pub k: usize,
     pub s: usize,
     pub tmax: usize,
+    pub scenario: Scenario,
 }
 
 impl JobSpec {
@@ -489,16 +503,17 @@ impl JobSpec {
         if let Some(t) = threads {
             mc = mc.with_threads(t);
         }
+        let scenario = &self.scenario;
         match self.kind {
             JobKind::Figure => {
                 let mut cfg = FigureConfig::paper(self.trials, self.seed);
                 cfg.k = self.k;
                 cfg.mc = mc;
                 let pts = match self.id.as_str() {
-                    "2" => figures::figure2_partials(&cfg, shard),
-                    "3" => figures::figure3_partials(&cfg, shard),
-                    "4" => figures::figure4_partials(&cfg, shard),
-                    "5" => figures::figure5_partials(&cfg, self.tmax, shard),
+                    "2" => figures::figure2_partials(&cfg, scenario, shard),
+                    "3" => figures::figure3_partials(&cfg, scenario, shard),
+                    "4" => figures::figure4_partials(&cfg, scenario, shard),
+                    "5" => figures::figure5_partials(&cfg, self.tmax, scenario, shard),
                     other => bail!("unknown figure {other:?} (paper has figures 2-5)"),
                 };
                 Ok(ShardPoints::Fig(pts))
@@ -506,11 +521,25 @@ impl JobSpec {
             JobKind::Table => {
                 let (k, s) = (self.k, self.s);
                 let deltas = [0.1, 0.25, 0.5, 0.75];
+                // thm3 never samples stragglers, and thm10/thm11 carry
+                // their own adversarial-vs-random protocol; a non-default
+                // scenario would be a silent no-op there.
+                if !scenario.is_default() && matches!(self.id.as_str(), "thm3" | "thm10" | "thm11")
+                {
+                    bail!("--stragglers is not supported for table {}", self.id);
+                }
                 let pts = match self.id.as_str() {
                     "thm3" => tables::thm3_partials(&[k / 2, k, 2 * k], s, &mc, shard),
-                    "thm5" => tables::thm5_partials(k, s, &deltas, &mc, shard),
-                    "thm6" => tables::thm6_partials(k, s, &deltas, &mc, shard),
-                    "thm8" => tables::thm8_partials(k, &[0, 1, 2], &[0.1, 0.25, 0.5], &mc, shard),
+                    "thm5" => tables::thm5_partials(k, s, &deltas, scenario, &mc, shard),
+                    "thm6" => tables::thm6_partials(k, s, &deltas, scenario, &mc, shard),
+                    "thm8" => tables::thm8_partials(
+                        k,
+                        &[0, 1, 2],
+                        &[0.1, 0.25, 0.5],
+                        scenario,
+                        &mc,
+                        shard,
+                    ),
                     "thm10" => {
                         tables::thm10_partials(k, s, &[k / 4, k / 2, 3 * k / 4], &mc, shard)
                     }
@@ -520,6 +549,7 @@ impl JobSpec {
                         &[50, 100, 200, 400],
                         |k| ((k as f64).ln().ceil() as usize).max(2),
                         0.25,
+                        scenario,
                         &mc,
                         shard,
                     ),
@@ -528,6 +558,7 @@ impl JobSpec {
                         &[50, 100, 200, 400],
                         |k| ((k as f64).ln().ceil() as usize).max(2),
                         0.25,
+                        scenario,
                         &mc,
                         shard,
                     ),
@@ -536,8 +567,19 @@ impl JobSpec {
                 Ok(ShardPoints::Table(pts))
             }
             JobKind::Ablation => {
-                let pts = ablations::study_partials(&self.id, self.k, self.s, &mc, shard)?;
+                let pts =
+                    ablations::study_partials(&self.id, self.k, self.s, scenario, &mc, shard)?;
                 Ok(ShardPoints::Ablation(pts))
+            }
+            JobKind::Scenario => {
+                let pts = match self.id.as_str() {
+                    "tta" => scenario_mod::tta_partials(self.k, self.s, scenario, &mc, shard)?,
+                    other => bail!(
+                        "unknown scenario study {other:?} (one of {})",
+                        SCENARIO_IDS.join("|")
+                    ),
+                };
+                Ok(ShardPoints::Scenario(pts))
             }
         }
     }
@@ -551,6 +593,7 @@ pub enum ShardPoints {
     Fig(Vec<FigPartialPoint>),
     Table(Vec<TablePartialPoint>),
     Ablation(Vec<AblationPartialPoint>),
+    Scenario(Vec<ScenarioPartialPoint>),
 }
 
 impl ShardPoints {
@@ -559,6 +602,7 @@ impl ShardPoints {
             ShardPoints::Fig(v) => v.len(),
             ShardPoints::Table(v) => v.len(),
             ShardPoints::Ablation(v) => v.len(),
+            ShardPoints::Scenario(v) => v.len(),
         }
     }
 
@@ -593,6 +637,14 @@ impl ShardPoints {
                 }
                 Ok(())
             }
+            (ShardPoints::Scenario(a), ShardPoints::Scenario(b)) => {
+                for (i, (pa, pb)) in a.iter_mut().zip(b).enumerate() {
+                    pa.partial
+                        .merge(&pb.partial)
+                        .with_context(|| format!("scenario point {i}"))?;
+                }
+                Ok(())
+            }
             _ => unreachable!("check_aligned verified matching point kinds"),
         }
     }
@@ -623,6 +675,14 @@ impl ShardPoints {
                 Ok(())
             }
             (ShardPoints::Ablation(a), ShardPoints::Ablation(b)) if a.len() == b.len() => {
+                for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+                    if !pa.same_point(pb) {
+                        return mismatch(i);
+                    }
+                }
+                Ok(())
+            }
+            (ShardPoints::Scenario(a), ShardPoints::Scenario(b)) if a.len() == b.len() => {
                 for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
                     if !pa.same_point(pb) {
                         return mismatch(i);
@@ -666,6 +726,11 @@ impl ShardPoints {
                     check(i, p.partial.mc_trials())?;
                 }
             }
+            ShardPoints::Scenario(v) => {
+                for (i, p) in v.iter().enumerate() {
+                    check(i, p.partial.mc_trials())?;
+                }
+            }
         }
         Ok(())
     }
@@ -703,6 +768,14 @@ impl ShardPoints {
                     out.push('\n');
                 }
             }
+            ShardPoints::Scenario(v) => {
+                out.push_str(scenario_mod::ScenarioPoint::csv_header());
+                out.push('\n');
+                for p in v {
+                    out.push_str(&p.finalize().to_csv());
+                    out.push('\n');
+                }
+            }
         }
         out
     }
@@ -710,25 +783,66 @@ impl ShardPoints {
 
 // ------------------------------------------------------- ShardArtifact
 
-/// On-disk format tag; bump on incompatible schema changes. v2 added
-/// compound `shard_ids` (tree-reduction) and the body checksum;
-/// [`ShardArtifact::parse`] still accepts [`SHARD_FORMAT_V1`] files.
-pub const SHARD_FORMAT: &str = "gradcode-shard/v2";
+/// On-disk format tag; bump on incompatible schema changes. v3 added
+/// the `scenario` job field (straggler scenario as run identity) and
+/// the scenario point kind; v2 added compound `shard_ids`
+/// (tree-reduction) and the body checksum. [`ShardArtifact::parse`]
+/// still accepts [`SHARD_FORMAT_V2`] (scenario defaults to uniform —
+/// exactly what every v2 artifact computed) and [`SHARD_FORMAT_V1`]
+/// files.
+pub const SHARD_FORMAT: &str = "gradcode-shard/v3";
+
+/// The PR-4 era format: compound `shard_ids` + checksum, no scenario
+/// field. Read-compatible, parsed as the uniform scenario.
+pub const SHARD_FORMAT_V2: &str = "gradcode-shard/v2";
 
 /// The PR-3 era single-shard format (`shard_id` field, no checksum).
 /// Read-compatible; everything written today is [`SHARD_FORMAT`].
 pub const SHARD_FORMAT_V1: &str = "gradcode-shard/v1";
 
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
 /// FNV-1a 64-bit over the canonical (compact) body serialization —
 /// cheap, dependency-free integrity hash for artifact files. This
 /// guards against corruption and accidental edits, not adversaries.
+/// Production checksums stream through [`Fnv1aSink`] instead; this
+/// buffer-based twin remains as the reference the streaming pin test
+/// compares against.
+#[cfg(test)]
 fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h = FNV_OFFSET;
     for &b in bytes {
         h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        h = h.wrapping_mul(FNV_PRIME);
     }
     h
+}
+
+/// A `fmt::Write` sink folding FNV-1a over everything written to it —
+/// the streaming half of the artifact checksum: the JSON writer streams
+/// the canonical body straight through the hash, so checksumming never
+/// materializes the multi-megabyte body `String` (it used to, once per
+/// write *and* once per parse; tree-reduction collection points fold
+/// thousands of such artifacts).
+struct Fnv1aSink {
+    h: u64,
+}
+
+impl Fnv1aSink {
+    fn new() -> Self {
+        Fnv1aSink { h: FNV_OFFSET }
+    }
+}
+
+impl std::fmt::Write for Fnv1aSink {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        for &b in s.as_bytes() {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(FNV_PRIME);
+        }
+        Ok(())
+    }
 }
 
 /// A serialized set of shard partials: the job identity, which shard
@@ -907,15 +1021,20 @@ impl ShardArtifact {
     }
 
     /// Hex FNV-1a digest of the artifact body: the compact
-    /// serialization of the object with the `checksum` field omitted
-    /// ([`Json::write_excluding`] — no deep clone of the points
-    /// payload, which matters when tree-reduction collection points
-    /// parse thousands of artifacts). Stable across write→parse→write
-    /// because the writer is canonical (sorted keys, shortest-
-    /// round-trip numbers, hex f64 payloads).
+    /// serialization of the object with the `checksum` field omitted,
+    /// **streamed** through [`Fnv1aSink`] ([`Json::write_excluding_to`])
+    /// — no deep clone of the points payload and no materialized body
+    /// `String` either, which matters when tree-reduction collection
+    /// points parse thousands of multi-MB artifacts. Stable across
+    /// write→parse→write because the writer is canonical (sorted keys,
+    /// shortest-round-trip numbers, hex f64 payloads); pinned equal to
+    /// the materializing hash by a test below.
     fn checksum_of(body: &Json) -> Result<String> {
         body.as_obj().context("artifact body must be an object")?;
-        Ok(format!("{:016x}", fnv1a64(body.write_excluding("checksum").as_bytes())))
+        let mut sink = Fnv1aSink::new();
+        body.write_excluding_to("checksum", &mut sink)
+            .expect("Fnv1aSink never fails");
+        Ok(format!("{:016x}", sink.h))
     }
 
     pub fn to_json(&self) -> Json {
@@ -924,6 +1043,9 @@ impl ShardArtifact {
             ShardPoints::Table(v) => Json::Arr(v.iter().map(table_point_to_json).collect()),
             ShardPoints::Ablation(v) => {
                 Json::Arr(v.iter().map(ablation_point_to_json).collect())
+            }
+            ShardPoints::Scenario(v) => {
+                Json::Arr(v.iter().map(scenario_point_to_json).collect())
             }
         };
         let body = obj(vec![
@@ -945,7 +1067,8 @@ impl ShardArtifact {
     pub fn from_json(j: &Json) -> Result<ShardArtifact> {
         let format = j.get("format")?.as_str()?;
         let legacy_v1 = format == SHARD_FORMAT_V1;
-        if !legacy_v1 && format != SHARD_FORMAT {
+        let legacy_v2 = format == SHARD_FORMAT_V2;
+        if !legacy_v1 && !legacy_v2 && format != SHARD_FORMAT {
             bail!("unsupported artifact format {format:?} (expected {SHARD_FORMAT:?})");
         }
         match j.opt("checksum") {
@@ -992,6 +1115,15 @@ impl ShardArtifact {
                     .enumerate()
                     .map(|(i, p)| {
                         ablation_point_from_json(p).with_context(|| format!("point {i}"))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            JobKind::Scenario => ShardPoints::Scenario(
+                raw_points
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        scenario_point_from_json(p).with_context(|| format!("point {i}"))
                     })
                     .collect::<Result<Vec<_>>>()?,
             ),
@@ -1138,10 +1270,19 @@ fn job_to_json(job: &JobSpec) -> Json {
         ("k", Json::Num(job.k as f64)),
         ("s", Json::Num(job.s as f64)),
         ("tmax", Json::Num(job.tmax as f64)),
+        // Canonical scenario string (a parse fixed point; f64 params in
+        // shortest round-trip form, so the value survives exactly).
+        ("scenario", Json::Str(job.scenario.to_string())),
     ])
 }
 
 fn job_from_json(j: &Json) -> Result<JobSpec> {
+    // v1/v2 artifacts predate the scenario field; everything they ever
+    // computed was the uniform default, so that is what absence means.
+    let scenario = match j.opt("scenario") {
+        Some(s) => Scenario::parse(s.as_str()?).context("scenario")?,
+        None => Scenario::default(),
+    };
     Ok(JobSpec {
         kind: JobKind::parse(j.get("kind")?.as_str()?)?,
         id: j.get("id")?.as_str()?.to_string(),
@@ -1150,6 +1291,7 @@ fn job_from_json(j: &Json) -> Result<JobSpec> {
         k: j.get("k")?.as_usize()?,
         s: j.get("s")?.as_usize()?,
         tmax: j.get("tmax")?.as_usize()?,
+        scenario,
     })
 }
 
@@ -1177,32 +1319,21 @@ pub const ABLATION_IDS: [&str; 4] = ["rho", "rbgc", "lsqr", "normalization"];
 pub const ABLATION_STUDIES: [&str; 4] =
     ["rho_sweep", "rbgc_threshold", "lsqr_tolerance", "normalization"];
 
-/// Intern a study name to the `&'static str` `AblationPoint.study`
-/// carries, against [`ABLATION_STUDIES`].
-fn intern_study(name: &str) -> Result<&'static str> {
-    ABLATION_STUDIES
-        .iter()
-        .find(|&&id| id == name)
-        .copied()
-        .ok_or_else(|| anyhow::anyhow!("unknown ablation study {name:?} in artifact"))
-}
+/// Every scenario study id the CLI (`repro scenario`,
+/// `repro shard --scenario`, `repro run --scenario`) and
+/// [`JobSpec::run`] accept — the single registry, like [`TABLE_IDS`],
+/// so a study cannot be producible-but-unmergeable.
+pub const SCENARIO_IDS: [&str; 1] = ["tta"];
 
-/// Intern a figure id to the `&'static str` `FigPoint.figure` carries.
-fn intern_figure(name: &str) -> Result<&'static str> {
-    FIGURE_IDS
+/// Intern a deserialized name against one of the static id registries,
+/// yielding the `&'static str` the point structs carry — the single
+/// copy behind every per-registry wrapper below.
+fn intern(name: &str, registry: &'static [&'static str], what: &str) -> Result<&'static str> {
+    registry
         .iter()
         .find(|&&id| id == name)
         .copied()
-        .ok_or_else(|| anyhow::anyhow!("unknown figure id {name:?} in artifact"))
-}
-
-/// Same interning for table ids, against [`TABLE_IDS`].
-fn intern_table(name: &str) -> Result<&'static str> {
-    TABLE_IDS
-        .iter()
-        .find(|&&id| id == name)
-        .copied()
-        .ok_or_else(|| anyhow::anyhow!("unknown table id {name:?} in artifact"))
+        .ok_or_else(|| anyhow::anyhow!("unknown {what} {name:?} in artifact"))
 }
 
 fn fig_point_to_json(p: &FigPartialPoint) -> Json {
@@ -1218,7 +1349,7 @@ fn fig_point_to_json(p: &FigPartialPoint) -> Json {
 
 fn fig_point_from_json(j: &Json) -> Result<FigPartialPoint> {
     Ok(FigPartialPoint {
-        figure: intern_figure(j.get("figure")?.as_str()?)?,
+        figure: intern(j.get("figure")?.as_str()?, &FIGURE_IDS, "figure id")?,
         scheme: j.get("scheme")?.as_str()?.to_string(),
         s: j.get("s")?.as_usize()?,
         delta: f64_from_bits_json(j.get("delta")?)?,
@@ -1255,8 +1386,36 @@ fn ablation_point_to_json(p: &AblationPartialPoint) -> Json {
 
 fn ablation_point_from_json(j: &Json) -> Result<AblationPartialPoint> {
     Ok(AblationPartialPoint {
-        study: intern_study(j.get("study")?.as_str()?)?,
+        study: intern(j.get("study")?.as_str()?, &ABLATION_STUDIES, "ablation study")?,
         setting: j.get("setting")?.as_str()?.to_string(),
+        k: j.get("k")?.as_usize()?,
+        partial: partial_from_json(j.get("partial")?)?,
+    })
+}
+
+fn scenario_point_to_json(p: &ScenarioPartialPoint) -> Json {
+    obj(vec![
+        ("study", Json::Str(p.study.to_string())),
+        ("scheme", Json::Str(p.scheme.clone())),
+        ("policy", Json::Str(p.policy.to_string())),
+        ("s", Json::Num(p.s as f64)),
+        ("delta", f64_to_bits_json(p.delta)),
+        ("k", Json::Num(p.k as f64)),
+        ("partial", partial_to_json(&p.partial)),
+    ])
+}
+
+fn scenario_point_from_json(j: &Json) -> Result<ScenarioPartialPoint> {
+    Ok(ScenarioPartialPoint {
+        study: intern(j.get("study")?.as_str()?, &SCENARIO_IDS, "scenario study")?,
+        scheme: j.get("scheme")?.as_str()?.to_string(),
+        policy: intern(
+            j.get("policy")?.as_str()?,
+            &scenario_mod::TTA_POLICIES,
+            "scenario policy",
+        )?,
+        s: j.get("s")?.as_usize()?,
+        delta: f64_from_bits_json(j.get("delta")?)?,
         k: j.get("k")?.as_usize()?,
         partial: partial_from_json(j.get("partial")?)?,
     })
@@ -1269,7 +1428,7 @@ fn table_point_from_json(j: &Json) -> Result<TablePartialPoint> {
         .iter()
         .map(|r| {
             Ok(RowTemplate {
-                table: intern_table(r.get("table")?.as_str()?)?,
+                table: intern(r.get("table")?.as_str()?, &TABLE_IDS, "table id")?,
                 label: r.get("label")?.as_str()?.to_string(),
                 expected: f64_from_bits_json(r.get("expected")?)?,
                 note: r.get("note")?.as_str()?.to_string(),
@@ -1490,6 +1649,7 @@ mod tests {
             k: 10,
             s: 2,
             tmax: 0,
+            scenario: Scenario::default(),
         };
         let point = TablePartialPoint {
             rows: vec![RowTemplate {
@@ -1541,6 +1701,7 @@ mod tests {
             k: 12,
             s: 3,
             tmax: 0,
+            scenario: Scenario::default(),
         };
         let art = ShardArtifact::compute(&job, Shard::new(0, 2).unwrap(), Some(1)).unwrap();
         let text = art.to_json_string();
@@ -1568,20 +1729,143 @@ mod tests {
             k: 12,
             s: 3,
             tmax: 0,
+            scenario: Scenario::default(),
         };
         let art = ShardArtifact::compute(&job, Shard::new(1, 3).unwrap(), Some(1)).unwrap();
-        // Rewrite the v2 artifact into the PR-3 v1 shape: single
-        // shard_id field, no shard_ids, no checksum.
+        // Rewrite the v3 artifact into the PR-3 v1 shape: single
+        // shard_id field, no shard_ids, no checksum, no job scenario.
         let Json::Obj(mut m) = art.to_json() else { panic!("artifact is an object") };
         m.remove("checksum");
         m.remove("shard_ids");
         m.insert("format".into(), Json::Str(SHARD_FORMAT_V1.into()));
         m.insert("shard_id".into(), Json::Num(1.0));
+        let Some(Json::Obj(job_obj)) = m.get_mut("job") else { panic!("job is an object") };
+        job_obj.remove("scenario");
         let text = Json::Obj(m).write_pretty();
         let parsed = ShardArtifact::parse(&text).unwrap();
         assert_eq!(parsed.shard_ids, vec![1]);
         assert_eq!(parsed.num_shards, 3);
-        // Re-serializing upgrades to v2 with a checksum.
+        // The missing scenario parses as the uniform default, so v1
+        // artifacts stay mergeable with fresh uniform runs.
+        assert!(parsed.job.scenario.is_default());
+        assert_eq!(parsed.job, job);
+        // Re-serializing upgrades to v3 with a checksum.
         assert!(parsed.to_json_string().contains(SHARD_FORMAT));
+    }
+
+    /// The v2→v3 compatibility contract: a v2 artifact (no scenario
+    /// field anywhere, v2 format tag, checksum over the v2 body) parses
+    /// as the uniform scenario and merges with fresh v3 artifacts of
+    /// the same (uniform) job.
+    #[test]
+    fn legacy_v2_artifacts_parse_as_uniform_and_merge_with_v3() {
+        let job = JobSpec {
+            kind: JobKind::Table,
+            id: "thm11".into(),
+            trials: 10,
+            seed: 3,
+            k: 12,
+            s: 3,
+            tmax: 0,
+            scenario: Scenario::default(),
+        };
+        let art = ShardArtifact::compute(&job, Shard::new(0, 2).unwrap(), Some(1)).unwrap();
+        // Rewrite into the exact v2 shape: drop job.scenario, set the
+        // v2 format tag, recompute the checksum over the v2 body.
+        let Json::Obj(mut m) = art.to_json() else { panic!("artifact is an object") };
+        m.remove("checksum");
+        m.insert("format".into(), Json::Str(SHARD_FORMAT_V2.into()));
+        let Some(Json::Obj(job_obj)) = m.get_mut("job") else { panic!("job is an object") };
+        job_obj.remove("scenario");
+        let body = Json::Obj(m);
+        let digest = ShardArtifact::checksum_of(&body).unwrap();
+        let Json::Obj(mut m) = body else { unreachable!() };
+        m.insert("checksum".into(), Json::Str(digest));
+        let text = Json::Obj(m).write_pretty();
+        assert!(text.contains(SHARD_FORMAT_V2));
+
+        let parsed = ShardArtifact::parse(&text).unwrap();
+        assert!(parsed.job.scenario.is_default(), "v2 must parse as uniform");
+        assert_eq!(parsed.job, job);
+        // Round trip: v2 in, v3 (with scenario) out, same points.
+        let reserialized = parsed.to_json_string();
+        assert!(reserialized.contains(SHARD_FORMAT));
+        assert!(reserialized.contains("\"scenario\""));
+        // And it merges with a fresh v3 shard of the same job.
+        let v3 = ShardArtifact::compute(&job, Shard::new(1, 2).unwrap(), Some(1)).unwrap();
+        let merged = ShardArtifact::merge(vec![parsed, v3]).unwrap();
+        assert_eq!(merged.to_csv(), job.run(Shard::full(), Some(1)).unwrap().to_csv());
+        // A tampered v2 body is still caught by its checksum.
+        let tampered = text.replacen("\"trials\": 10", "\"trials\": 11", 1);
+        assert_ne!(tampered, text);
+        assert!(ShardArtifact::parse(&tampered).is_err());
+    }
+
+    /// Satellite pin: the streamed FNV-1a checksum (fmt::Write sink
+    /// through the JSON writer) equals the materialize-then-hash path
+    /// byte for byte.
+    #[test]
+    fn streamed_checksum_equals_materialized_hash() {
+        let job = JobSpec {
+            kind: JobKind::Table,
+            id: "thm5".into(),
+            trials: 10,
+            seed: 5,
+            k: 12,
+            s: 3,
+            tmax: 0,
+            scenario: Scenario::parse("pareto:0.02,1.5").unwrap(),
+        };
+        let art = ShardArtifact::compute(&job, Shard::new(0, 1).unwrap(), Some(1)).unwrap();
+        let body = art.to_json(); // includes the checksum field
+        let streamed = ShardArtifact::checksum_of(&body).unwrap();
+        let materialized =
+            format!("{:016x}", fnv1a64(body.write_excluding("checksum").as_bytes()));
+        assert_eq!(streamed, materialized);
+        // And on a hostile-string body (escapes must stream identically).
+        let j = Json::parse(r#"{"a": "q\"uo\\te\nnl", "checksum": "x", "b": [1.5, -0.0]}"#)
+            .unwrap();
+        let streamed = ShardArtifact::checksum_of(&j).unwrap();
+        let materialized = format!("{:016x}", fnv1a64(j.write_excluding("checksum").as_bytes()));
+        assert_eq!(streamed, materialized);
+    }
+
+    /// Scenario (tta) artifacts round-trip and shard/merge like every
+    /// other job family.
+    #[test]
+    fn scenario_job_artifacts_roundtrip_and_merge() {
+        let job = JobSpec {
+            kind: JobKind::Scenario,
+            id: "tta".into(),
+            trials: 12,
+            seed: 7,
+            k: 10,
+            s: 2,
+            tmax: 0,
+            scenario: Scenario::parse("pareto:0.05,1.5").unwrap(),
+        };
+        let unsharded = job.run(Shard::full(), Some(2)).unwrap().to_csv();
+        assert!(unsharded.starts_with("scenario,scheme,policy,s,delta,gather,err1\n"));
+        let arts: Vec<ShardArtifact> = (0..3)
+            .map(|sid| {
+                let art =
+                    ShardArtifact::compute(&job, Shard::new(sid, 3).unwrap(), Some(1)).unwrap();
+                ShardArtifact::parse(&art.to_json_string()).unwrap()
+            })
+            .collect();
+        assert!(ShardArtifact::verify_set(&arts).is_ok());
+        let merged = ShardArtifact::merge(arts).unwrap();
+        assert_eq!(merged.to_csv(), unsharded);
+        // A scenario job refuses to merge with the same job under a
+        // different scenario (the scenario is run identity).
+        let mut other = job.clone();
+        other.scenario = Scenario::parse("pareto:0.05,2.5").unwrap();
+        let a0 = ShardArtifact::compute(&job, Shard::new(0, 2).unwrap(), Some(1)).unwrap();
+        let b1 = ShardArtifact::compute(&other, Shard::new(1, 2).unwrap(), Some(1)).unwrap();
+        assert!(ShardArtifact::merge(vec![a0, b1]).is_err());
+        // Uniform scenarios are rejected for tta at run time.
+        let mut bad = job.clone();
+        bad.scenario = Scenario::default();
+        assert!(bad.run(Shard::full(), Some(1)).is_err());
     }
 }

@@ -16,6 +16,7 @@
 //! as [`Partial::Exact`] values, which merge by asserting bit-equality.
 
 use super::montecarlo::MonteCarlo;
+use super::scenario::{prob_partial_under, scalar_partial_under};
 use super::shard::{Partial, PostMap, Shard};
 use crate::adversary::{
     asp_objective, dks_to_asp, exhaustive_worst_case, frc_worst_stragglers, greedy_stragglers,
@@ -25,6 +26,7 @@ use crate::codes::{FractionalRepetitionCode, GradientCode, Scheme};
 use crate::decode::{DecodeWorkspace, OptimalDecoder};
 use crate::graph::random_regular_graph;
 use crate::linalg::LsqrOptions;
+use crate::stragglers::Scenario;
 use crate::util::Rng;
 
 /// One comparison row.
@@ -145,11 +147,15 @@ pub fn thm5_exact(k: usize, r: usize, s: usize) -> f64 {
 }
 
 /// One shard of [`thm5_table`]: one Monte-Carlo mean per δ feeding the
-/// exact-form and paper-form rows.
+/// exact-form and paper-form rows. Straggler selection goes through
+/// the scenario spine (closed-form `expected` columns describe the
+/// uniform model; under other scenarios they stay printed as the
+/// uniform reference the measurement deviates from).
 pub fn thm5_partials(
     k: usize,
     s: usize,
     deltas: &[f64],
+    scenario: &Scenario,
     mc: &MonteCarlo,
     shard: Shard,
 ) -> Vec<TablePartialPoint> {
@@ -159,9 +165,14 @@ pub fn thm5_partials(
         .map(|&delta| {
             let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
             let rho = k as f64 / (r as f64 * s as f64);
-            let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
-                ws.onestep_redraw_trial(code.as_ref(), r, rho, rng)
-            });
+            let resolved = scenario.resolve(code.as_ref(), delta, r, mc.seed);
+            let partial = scalar_partial_under(
+                &resolved,
+                mc,
+                shard,
+                |ws, model, rng| ws.onestep_redraw_trial_with(code.as_ref(), model, rho, rng),
+                |ws, g, model, rng| ws.onestep_trial_with(g, model, rho, rng),
+            );
             TablePartialPoint {
                 rows: vec![
                     RowTemplate {
@@ -186,7 +197,7 @@ pub fn thm5_partials(
 }
 
 pub fn thm5_table(k: usize, s: usize, deltas: &[f64], mc: &MonteCarlo) -> Vec<TableRow> {
-    finalize_table_points(&thm5_partials(k, s, deltas, mc, Shard::full()))
+    finalize_table_points(&thm5_partials(k, s, deltas, &Scenario::default(), mc, Shard::full()))
 }
 
 // ------------------------------------------------------------------- thm 6
@@ -213,11 +224,13 @@ pub fn thm6_paper(k: usize, r: usize, s: usize) -> f64 {
     k as f64 * binom_ratio(k - s, r - s, k, r)
 }
 
-/// One shard of [`thm6_table`].
+/// One shard of [`thm6_table`], straggler selection through the
+/// scenario spine.
 pub fn thm6_partials(
     k: usize,
     s: usize,
     deltas: &[f64],
+    scenario: &Scenario,
     mc: &MonteCarlo,
     shard: Shard,
 ) -> Vec<TablePartialPoint> {
@@ -233,9 +246,16 @@ pub fn thm6_partials(
             // with no stragglers this is the exact solution, and with
             // stragglers it deflates the covered blocks out of the rhs.
             let rho = k as f64 / (r as f64 * s as f64);
-            let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
-                ws.optimal_redraw_trial(code.as_ref(), r, &opts, Some(rho), rng)
-            });
+            let resolved = scenario.resolve(code.as_ref(), delta, r, mc.seed);
+            let partial = scalar_partial_under(
+                &resolved,
+                mc,
+                shard,
+                |ws, model, rng| {
+                    ws.optimal_redraw_trial_with(code.as_ref(), model, &opts, Some(rho), rng)
+                },
+                |ws, g, model, rng| ws.optimal_trial_with(g, model, &opts, Some(rho), rng),
+            );
             TablePartialPoint {
                 rows: vec![RowTemplate {
                     table: "thm6",
@@ -251,7 +271,7 @@ pub fn thm6_partials(
 }
 
 pub fn thm6_table(k: usize, s: usize, deltas: &[f64], mc: &MonteCarlo) -> Vec<TableRow> {
-    finalize_table_points(&thm6_partials(k, s, deltas, mc, Shard::full()))
+    finalize_table_points(&thm6_partials(k, s, deltas, &Scenario::default(), mc, Shard::full()))
 }
 
 // Thm 6 derivation detail: E[err] = k * P(block missed); expose the
@@ -262,11 +282,13 @@ pub fn block_miss_probability(k: usize, r: usize, s: usize) -> f64 {
 
 // ------------------------------------------------------------------- thm 8
 
-/// One shard of [`thm8_table`].
+/// One shard of [`thm8_table`], straggler selection through the
+/// scenario spine.
 pub fn thm8_partials(
     k: usize,
     alphas: &[usize],
     deltas: &[f64],
+    scenario: &Scenario,
     mc: &MonteCarlo,
     shard: Shard,
 ) -> Vec<TablePartialPoint> {
@@ -283,9 +305,19 @@ pub fn thm8_partials(
             let threshold = (alpha * s) as f64;
             let opts = LsqrOptions::default();
             let code = Scheme::Frc.build(k, k, s);
-            let partial = mc.probability_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
-                ws.optimal_redraw_trial(code.as_ref(), r, &opts, None, rng) > threshold + 1e-6
-            });
+            let resolved = scenario.resolve(code.as_ref(), delta, r, mc.seed);
+            let partial = prob_partial_under(
+                &resolved,
+                mc,
+                shard,
+                |ws, model, rng| {
+                    ws.optimal_redraw_trial_with(code.as_ref(), model, &opts, None, rng)
+                        > threshold + 1e-6
+                },
+                |ws, g, model, rng| {
+                    ws.optimal_trial_with(g, model, &opts, None, rng) > threshold + 1e-6
+                },
+            );
             points.push(TablePartialPoint {
                 rows: vec![RowTemplate {
                     table: "thm8",
@@ -306,7 +338,14 @@ pub fn thm8_partials(
 /// probability at the *smallest s meeting the threshold* (and s | k),
 /// and the 1/k budget.
 pub fn thm8_table(k: usize, alphas: &[usize], deltas: &[f64], mc: &MonteCarlo) -> Vec<TableRow> {
-    finalize_table_points(&thm8_partials(k, alphas, deltas, mc, Shard::full()))
+    finalize_table_points(&thm8_partials(
+        k,
+        alphas,
+        deltas,
+        &Scenario::default(),
+        mc,
+        Shard::full(),
+    ))
 }
 
 // ------------------------------------------------------------------ thm 10
@@ -484,6 +523,7 @@ pub fn thm21_partials(
     ks: &[usize],
     s_of_k: impl Fn(usize) -> usize,
     delta: f64,
+    scenario: &Scenario,
     mc: &MonteCarlo,
     shard: Shard,
 ) -> Vec<TablePartialPoint> {
@@ -498,9 +538,14 @@ pub fn thm21_partials(
             let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
             let rho = k as f64 / (r as f64 * s as f64);
             let code = scheme.build(k, k, s);
-            let partial = mc.mean_partial_ws(shard, DecodeWorkspace::new, |ws, rng| {
-                ws.onestep_redraw_trial(code.as_ref(), r, rho, rng)
-            });
+            let resolved = scenario.resolve(code.as_ref(), delta, r, mc.seed);
+            let partial = scalar_partial_under(
+                &resolved,
+                mc,
+                shard,
+                |ws, model, rng| ws.onestep_redraw_trial_with(code.as_ref(), model, rho, rng),
+                |ws, g, model, rng| ws.onestep_trial_with(g, model, rho, rng),
+            );
             TablePartialPoint {
                 rows: vec![RowTemplate {
                     table,
@@ -525,7 +570,15 @@ pub fn thm21_table(
     delta: f64,
     mc: &MonteCarlo,
 ) -> Vec<TableRow> {
-    finalize_table_points(&thm21_partials(scheme, ks, s_of_k, delta, mc, Shard::full()))
+    finalize_table_points(&thm21_partials(
+        scheme,
+        ks,
+        s_of_k,
+        delta,
+        &Scenario::default(),
+        mc,
+        Shard::full(),
+    ))
 }
 
 #[cfg(test)]
@@ -640,6 +693,23 @@ mod tests {
     }
 
     #[test]
+    fn thm5_under_latency_scenario_stays_finite() {
+        let mc = MonteCarlo::new(200, 21);
+        let sc = Scenario::parse("pareto:0.05,1.5").unwrap();
+        let pts = thm5_partials(20, 5, &[0.25, 0.5], &sc, &mc, Shard::full());
+        for row in finalize_table_points(&pts) {
+            assert!(row.measured.is_finite() && row.measured >= 0.0, "{}", row.label);
+        }
+        // Fastest-r keeps r fixed, so the measured mean should stay in
+        // the same regime as the uniform closed form (same survivor
+        // count, different — latency-driven — survivor identity).
+        let uniform = thm5_table(20, 5, &[0.25], &mc);
+        let latency = finalize_table_points(&thm5_partials(20, 5, &[0.25], &sc, &mc, Shard::full()));
+        let ratio = latency[0].measured / uniform[0].measured;
+        assert!((0.2..5.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
     fn thm21_constant_is_order_one() {
         let rows = thm21_table(
             Scheme::Bgc,
@@ -656,10 +726,11 @@ mod tests {
     #[test]
     fn thm5_sharded_partials_merge_to_entry_point_bits() {
         let mc = MonteCarlo::new(90, 17);
+        let sc = Scenario::default();
         let whole = thm5_table(20, 5, &[0.25, 0.5], &mc);
-        let mut merged = thm5_partials(20, 5, &[0.25, 0.5], &mc, Shard::new(0, 4).unwrap());
+        let mut merged = thm5_partials(20, 5, &[0.25, 0.5], &sc, &mc, Shard::new(0, 4).unwrap());
         for sid in 1..4 {
-            let part = thm5_partials(20, 5, &[0.25, 0.5], &mc, Shard::new(sid, 4).unwrap());
+            let part = thm5_partials(20, 5, &[0.25, 0.5], &sc, &mc, Shard::new(sid, 4).unwrap());
             for (a, b) in merged.iter_mut().zip(&part) {
                 assert!(a.same_point(b));
                 a.partial.merge(&b.partial).unwrap();

@@ -7,7 +7,7 @@
 //! code, not the data) and replayed every round — matching the paper's
 //! standing-assignment setting.
 
-use super::StragglerModel;
+use super::{StragglerModel, StragglerScratch};
 use crate::adversary::{frc_worst_stragglers, greedy_stragglers, local_search_stragglers};
 use crate::linalg::CscMatrix;
 use crate::util::Rng;
@@ -21,6 +21,27 @@ pub enum AttackKind {
     Greedy,
     /// Greedy + 1-swap local search.
     LocalSearch,
+}
+
+impl AttackKind {
+    /// The CLI/scenario token (`--stragglers adversarial:<token>`);
+    /// round-trips through [`AttackKind::parse`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            AttackKind::BlockAttack => "block",
+            AttackKind::Greedy => "greedy",
+            AttackKind::LocalSearch => "local-search",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AttackKind> {
+        match s {
+            "block" => Some(AttackKind::BlockAttack),
+            "greedy" => Some(AttackKind::Greedy),
+            "local-search" => Some(AttackKind::LocalSearch),
+            _ => None,
+        }
+    }
 }
 
 /// A straggler model that always returns the adversary's survivor set.
@@ -56,6 +77,16 @@ impl StragglerModel for AdversarialStragglers {
     fn non_stragglers(&self, n: usize, _rng: &mut Rng) -> Vec<usize> {
         assert!(self.survivors.iter().all(|&j| j < n), "attack planned for a different n");
         self.survivors.clone()
+    }
+
+    /// Replays the planned survivor set (in its planned order) without
+    /// touching the RNG — the standing-assignment attack is the same
+    /// every round.
+    fn non_stragglers_into(&self, n: usize, _rng: &mut Rng, ws: &mut StragglerScratch) {
+        assert!(self.survivors.iter().all(|&j| j < n), "attack planned for a different n");
+        ws.idx.clear();
+        ws.idx.extend_from_slice(&self.survivors);
+        ws.gather_time = f64::NAN;
     }
 
     fn name(&self) -> &'static str {
@@ -118,6 +149,29 @@ mod tests {
         let mut r1 = Rng::new(5);
         let mut r2 = Rng::new(99);
         assert_eq!(adv.non_stragglers(k, &mut r1), adv.non_stragglers(k, &mut r2));
+    }
+
+    #[test]
+    fn scratch_replay_matches_planned_survivors() {
+        use crate::stragglers::StragglerScratch;
+        let g = Scheme::Bgc.build(16, 16, 3).assignment(&mut Rng::new(8));
+        let adv = AdversarialStragglers::plan(&g, 12, 3, AttackKind::Greedy);
+        let mut ws = StragglerScratch::new();
+        let mut rng = Rng::new(9);
+        let before = rng.clone().next_u64();
+        adv.non_stragglers_into(16, &mut rng, &mut ws);
+        assert_eq!(ws.idx, adv.survivors());
+        assert!(ws.gather_time.is_nan());
+        // The replay consumes no RNG.
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn attack_kind_tokens_round_trip() {
+        for kind in [AttackKind::BlockAttack, AttackKind::Greedy, AttackKind::LocalSearch] {
+            assert_eq!(AttackKind::parse(kind.token()), Some(kind));
+        }
+        assert_eq!(AttackKind::parse("nope"), None);
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Latency-based stragglers: workers draw completion times from a
 //! latency distribution; the master's deadline policy decides who counts
 //! as a non-straggler. This is the mechanism behind the paper's
-//! abstract straggler model (see DESIGN.md §Hardware-Adaptation) and is
-//! what the e2e coordinator uses.
+//! abstract straggler model (see DESIGN.md §Hardware-Adaptation); the
+//! e2e coordinator uses it round by round, and the scenario spine
+//! ([`super::scenario`]) threads it through the Monte-Carlo decode
+//! pipeline and the `repro scenario` time-to-accuracy sweeps.
 
-use super::StragglerModel;
+use super::{StragglerModel, StragglerScratch};
 use crate::util::Rng;
 
 /// Worker completion-time distributions (seconds).
@@ -29,6 +31,26 @@ impl LatencyModel {
                     slow
                 } else {
                     fast
+                }
+            }
+        }
+    }
+
+    /// Closed-form quantile (inverse CDF) at probability `p` in [0, 1):
+    /// the deadline that admits a fraction `p` of workers in
+    /// expectation. Deterministic — the `repro scenario` deadline sweep
+    /// derives its grid from it, so the sweep is part of the run
+    /// identity rather than an empirical estimate.
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!((0.0..1.0).contains(&p), "quantile needs p in [0, 1), got {p}");
+        match *self {
+            LatencyModel::ShiftedExp { base, rate } => base - (1.0 - p).ln() / rate,
+            LatencyModel::Pareto { scale, shape } => scale / (1.0 - p).powf(1.0 / shape),
+            LatencyModel::Bimodal { fast, slow, p_slow } => {
+                if p < 1.0 - p_slow {
+                    fast
+                } else {
+                    slow
                 }
             }
         }
@@ -101,6 +123,44 @@ impl StragglerModel for LatencyStragglers {
         sample_round(&self.model, &self.policy, n, rng).non_stragglers
     }
 
+    /// Allocation-free [`sample_round`]: identical RNG stream (n model
+    /// draws) and identical survivor set + gather time, draw for draw.
+    /// Ties in the fastest-r order statistic break by worker index —
+    /// exactly what `sample_round`'s stable sort does — so the two
+    /// paths agree even for the tie-heavy Bimodal model (pinned below).
+    fn non_stragglers_into(&self, n: usize, rng: &mut Rng, ws: &mut StragglerScratch) {
+        ws.latencies.clear();
+        for _ in 0..n {
+            ws.latencies.push(self.model.sample(rng));
+        }
+        let StragglerScratch { idx, latencies, order, gather_time, .. } = ws;
+        match self.policy {
+            DeadlinePolicy::Fixed(deadline) => {
+                idx.clear();
+                idx.extend((0..n).filter(|&i| latencies[i] <= deadline));
+                *gather_time = deadline;
+            }
+            DeadlinePolicy::FastestR(r) => {
+                let r = r.clamp(1, n);
+                order.clear();
+                order.extend(0..n);
+                // Unstable in-place sort (no merge-sort scratch buffer);
+                // the (latency, index) key makes it deterministic and
+                // equal to sample_round's stable latency-only sort.
+                order.sort_unstable_by(|&a, &b| {
+                    latencies[a]
+                        .partial_cmp(&latencies[b])
+                        .expect("latency draws are finite")
+                        .then(a.cmp(&b))
+                });
+                *gather_time = latencies[order[r - 1]];
+                idx.clear();
+                idx.extend_from_slice(&order[..r]);
+                idx.sort_unstable();
+            }
+        }
+    }
+
     fn name(&self) -> &'static str {
         "latency"
     }
@@ -157,5 +217,95 @@ mod tests {
         let mut rng = Rng::new(4);
         let s = sample_round(&m, &DeadlinePolicy::FastestR(500), 10, &mut rng);
         assert_eq!(s.non_stragglers.len(), 10);
+    }
+
+    /// Seeded empirical quantiles vs the closed-form inverse CDF, for
+    /// all three models (the distribution sanity check behind the
+    /// `repro scenario` deadline grid).
+    #[test]
+    fn sampled_quantiles_match_closed_form() {
+        let models = [
+            LatencyModel::ShiftedExp { base: 0.1, rate: 2.0 },
+            LatencyModel::Pareto { scale: 0.5, shape: 2.5 },
+        ];
+        let trials = 40_000usize;
+        for (mi, m) in models.iter().enumerate() {
+            let mut rng = Rng::new(100 + mi as u64);
+            let mut lats: Vec<f64> = (0..trials).map(|_| m.sample(&mut rng)).collect();
+            lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for &q in &[0.1, 0.25, 0.5, 0.75, 0.9] {
+                let expected = m.quantile(q);
+                let got = lats[(q * trials as f64) as usize];
+                assert!(
+                    (got - expected).abs() <= 0.05 * expected.abs().max(0.05),
+                    "{} q={q}: sampled {got} vs quantile {expected}",
+                    m.name()
+                );
+            }
+        }
+        // Bimodal: quantile is a step function; check both branches and
+        // the empirical mass below the step.
+        let m = LatencyModel::Bimodal { fast: 0.1, slow: 5.0, p_slow: 0.3 };
+        assert_eq!(m.quantile(0.5), 0.1);
+        assert_eq!(m.quantile(0.8), 5.0);
+        let mut rng = Rng::new(200);
+        let fast_frac = (0..trials)
+            .filter(|_| m.sample(&mut rng) <= 0.1)
+            .count() as f64
+            / trials as f64;
+        assert!((fast_frac - 0.7).abs() < 0.02, "{fast_frac}");
+    }
+
+    /// Monotonicity + support sanity of the quantile functions.
+    #[test]
+    fn quantiles_are_monotone_and_respect_support() {
+        let m = LatencyModel::ShiftedExp { base: 0.2, rate: 3.0 };
+        assert_eq!(m.quantile(0.0), 0.2);
+        let p = LatencyModel::Pareto { scale: 1.5, shape: 1.1 };
+        assert_eq!(p.quantile(0.0), 1.5);
+        for model in [m, p] {
+            let mut prev = f64::NEG_INFINITY;
+            for i in 0..18 {
+                let q = model.quantile(i as f64 * 0.05);
+                assert!(q >= prev, "{}: not monotone at {i}", model.name());
+                prev = q;
+            }
+        }
+    }
+
+    /// The scratch draw is sample_round, draw for draw: same RNG
+    /// consumption, same survivors, same gather time — including the
+    /// tie-heavy Bimodal × fastest-r case where only the stable tie
+    /// order keeps the two paths aligned.
+    #[test]
+    fn scratch_draw_matches_sample_round_exactly() {
+        use crate::stragglers::StragglerScratch;
+        let models = [
+            LatencyModel::ShiftedExp { base: 0.1, rate: 2.0 },
+            LatencyModel::Pareto { scale: 0.5, shape: 1.5 },
+            LatencyModel::Bimodal { fast: 0.1, slow: 10.0, p_slow: 0.4 },
+        ];
+        let policies =
+            [DeadlinePolicy::Fixed(0.6), DeadlinePolicy::FastestR(13), DeadlinePolicy::FastestR(99)];
+        let mut ws = StragglerScratch::new();
+        for (mi, &model) in models.iter().enumerate() {
+            for (pi, &policy) in policies.iter().enumerate() {
+                let m = LatencyStragglers { model, policy };
+                let mut rng_a = Rng::new(300 + (mi * 7 + pi) as u64);
+                let mut rng_b = rng_a.clone();
+                for _ in 0..10 {
+                    let sample = sample_round(&model, &policy, 40, &mut rng_a);
+                    m.non_stragglers_into(40, &mut rng_b, &mut ws);
+                    assert_eq!(ws.idx, sample.non_stragglers, "{} policy {pi}", model.name());
+                    assert_eq!(
+                        ws.gather_time.to_bits(),
+                        sample.gather_time.to_bits(),
+                        "{} policy {pi}",
+                        model.name()
+                    );
+                }
+                assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+            }
+        }
     }
 }

@@ -5,21 +5,91 @@
 //! additionally supports latency-based models where stragglers emerge
 //! from heavy-tailed worker completion times and a gather deadline —
 //! the mechanism that produces "random" straggler sets in real clusters.
+//!
+//! Since the scenario-spine refactor, every layer of the repo selects
+//! stragglers through this one trait: the e2e coordinator uses the
+//! allocating [`StragglerModel::non_stragglers`], and the Monte-Carlo
+//! decode pipeline uses the allocation-free
+//! [`StragglerModel::non_stragglers_into`] with a per-workspace
+//! [`StragglerScratch`]. The [`scenario::Scenario`] enum names a model
+//! family on the CLI (`--stragglers ...`), carries it inside the shard
+//! run identity, and resolves it to a concrete model per sweep point.
 
 pub mod adversarial;
 pub mod latency;
 pub mod random;
+pub mod scenario;
 
-pub use latency::{sample_round, DeadlinePolicy, LatencyModel, LatencySample, LatencyStragglers};
 pub use adversarial::{AdversarialStragglers, AttackKind};
+pub use latency::{sample_round, DeadlinePolicy, LatencyModel, LatencySample, LatencyStragglers};
 pub use random::UniformStragglers;
+pub use scenario::{PolicySpec, ResolvedScenario, Scenario};
 
 use crate::util::Rng;
 
+/// Reusable scratch for [`StragglerModel::non_stragglers_into`]: every
+/// buffer a straggler draw needs, owned by the caller (one per
+/// `decode::DecodeWorkspace`) so the steady-state trial loop performs
+/// zero heap allocations. Each model uses the subset it needs.
+#[derive(Clone, Debug, Default)]
+pub struct StragglerScratch {
+    /// Fisher-Yates pool for uniform sampling (length n).
+    pub pool: Vec<usize>,
+    /// The selected non-straggler index set — the draw's output.
+    pub idx: Vec<usize>,
+    /// Per-worker latency draws (latency models only; length n).
+    pub latencies: Vec<f64>,
+    /// Order-statistic scratch for the fastest-r policy (length n).
+    pub order: Vec<usize>,
+    /// Gather wall-clock of the most recent draw: when the master
+    /// stopped waiting. Latency models set it (fixed deadline: the
+    /// deadline; fastest-r: the r-th order statistic); models with no
+    /// time axis (uniform, adversarial) set NaN.
+    pub gather_time: f64,
+}
+
+impl StragglerScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size every buffer for draws over n workers (optional — the
+    /// buffers grow on demand; after this call the draw loop performs
+    /// zero allocations from the very first trial).
+    pub fn reserve(&mut self, n: usize) {
+        self.pool.reserve(n);
+        self.idx.reserve(n);
+        self.latencies.reserve(n);
+        self.order.reserve(n);
+    }
+}
+
 /// A straggler model selects the non-straggler (responding) worker set.
-pub trait StragglerModel {
+///
+/// `Send + Sync` is a supertrait: the Monte-Carlo engine shares one
+/// resolved model across its worker threads by reference (models are
+/// immutable per sweep point; all per-draw state lives in the RNG and
+/// the [`StragglerScratch`]).
+pub trait StragglerModel: Send + Sync {
     /// Return the sorted indices of the non-straggler workers out of n.
     fn non_stragglers(&self, n: usize, rng: &mut Rng) -> Vec<usize>;
+
+    /// Allocation-free draw into caller-owned scratch: `ws.idx` receives
+    /// the non-straggler set and `ws.gather_time` the gather wall-clock
+    /// (NaN for models with no time axis).
+    ///
+    /// Unlike [`StragglerModel::non_stragglers`], the output **order is
+    /// part of the contract** — the decode pipeline accumulates
+    /// coverage in `ws.idx` order, so the order determines output bits:
+    ///
+    /// * uniform: Fisher-Yates draw order, RNG-stream- and
+    ///   order-identical to `Rng::sample_indices_into` — which is what
+    ///   keeps every pre-spine figure/table CSV byte-identical under
+    ///   the default scenario;
+    /// * latency and adversarial models: ascending worker index
+    ///   (matching their sorted `non_stragglers` output).
+    fn non_stragglers_into(&self, n: usize, rng: &mut Rng, ws: &mut StragglerScratch);
+
     fn name(&self) -> &'static str;
 }
 
@@ -34,5 +104,26 @@ mod tests {
         let ns = m.non_stragglers(100, &mut rng);
         assert_eq!(ns.len(), 70);
         assert!(ns.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn scratch_draw_matches_allocating_draw_as_a_set() {
+        // Same RNG stream -> the scratch draw selects the same worker
+        // set as the allocating draw (the scratch output is unsorted by
+        // contract; compare as sorted sets).
+        let m = UniformStragglers::new(0.4);
+        let mut ws = StragglerScratch::new();
+        let mut rng_a = Rng::new(7);
+        let mut rng_b = Rng::new(7);
+        for _ in 0..10 {
+            let sorted = m.non_stragglers(50, &mut rng_a);
+            m.non_stragglers_into(50, &mut rng_b, &mut ws);
+            let mut got = ws.idx.clone();
+            got.sort_unstable();
+            assert_eq!(got, sorted);
+            assert!(ws.gather_time.is_nan());
+        }
+        // Streams stayed in lockstep.
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
     }
 }

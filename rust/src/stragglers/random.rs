@@ -1,7 +1,7 @@
 //! Uniformly random stragglers — the paper's average-case model:
 //! the r = ceil((1-δ) n) non-stragglers are a uniform subset.
 
-use super::StragglerModel;
+use super::{StragglerModel, StragglerScratch};
 use crate::util::Rng;
 
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +28,18 @@ impl StragglerModel for UniformStragglers {
         let mut idx = rng.sample_indices(n, r);
         idx.sort_unstable();
         idx
+    }
+
+    /// Exactly `Rng::sample_indices_into(n, r, ..)` — the identical RNG
+    /// stream *and* output order as the pre-spine hard-coded sampling
+    /// in `decode::DecodeWorkspace`, so the default uniform scenario
+    /// reproduces every historical figure/table CSV byte-for-byte
+    /// (pinned by `tests/decode_parity.rs`). Unsorted by contract; the
+    /// decode pipeline's accumulation order is the draw order.
+    fn non_stragglers_into(&self, n: usize, rng: &mut Rng, ws: &mut StragglerScratch) {
+        let r = self.r(n);
+        rng.sample_indices_into(n, r, &mut ws.pool, &mut ws.idx);
+        ws.gather_time = f64::NAN;
     }
 
     fn name(&self) -> &'static str {
@@ -68,5 +80,24 @@ mod tests {
     #[should_panic(expected = "delta")]
     fn delta_one_rejected() {
         UniformStragglers::new(1.0);
+    }
+
+    #[test]
+    fn scratch_draw_is_bitwise_sample_indices_into() {
+        // The load-bearing pin of the scenario spine: the uniform
+        // scratch draw IS the historical workspace sampling — same RNG
+        // stream, same (unsorted) order.
+        use crate::stragglers::StragglerScratch;
+        let m = UniformStragglers::new(0.25);
+        let mut ws = StragglerScratch::new();
+        let (mut pool, mut out) = (Vec::new(), Vec::new());
+        let mut rng_a = Rng::new(5);
+        let mut rng_b = Rng::new(5);
+        for _ in 0..20 {
+            rng_a.sample_indices_into(40, m.r(40), &mut pool, &mut out);
+            m.non_stragglers_into(40, &mut rng_b, &mut ws);
+            assert_eq!(ws.idx, out);
+        }
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
     }
 }

@@ -1,0 +1,441 @@
+//! The straggler *scenario*: which [`StragglerModel`] family a whole
+//! run uses, as part of the run identity.
+//!
+//! A [`Scenario`] is what the CLI's `--stragglers` flag names, what
+//! `sim::shard::JobSpec` carries (and serializes into shard artifacts,
+//! format v3 — older artifacts parse as the uniform default), and what
+//! every figure/table/ablation sweep resolves into a concrete model per
+//! sweep point via [`Scenario::resolve`]. The canonical string form
+//! round-trips: `Scenario::parse(&s.to_string())` reproduces `s`
+//! exactly (f64 parameters use Rust's shortest round-trip formatting).
+//!
+//! Grammar (the `--stragglers` flag):
+//!
+//! ```text
+//! uniform                      the paper default: r = (1-δ)k uniform
+//!                              survivors, δ from the sweep point
+//! uniform:D                    fixed straggler fraction D (models a
+//!                              misestimated δ: selection uses D, the
+//!                              decoder stays configured for the sweep)
+//! shifted-exp:BASE,RATE[,P]    latency draws base + Exp(rate)
+//! pareto:SCALE,SHAPE[,P]       heavy-tailed Pareto latencies
+//! bimodal:FAST,SLOW,PSLOW[,P]  two-mode latencies (clone stragglers)
+//! adversarial:block|greedy|local-search
+//!                              §4 adversary, standing assignment
+//! P = fastest-r                wait for the point's r fastest (default)
+//!   | deadline:T               fixed wall-clock deadline T
+//! ```
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::{
+    AdversarialStragglers, AttackKind, DeadlinePolicy, LatencyModel, LatencyStragglers,
+    StragglerModel, UniformStragglers,
+};
+use crate::codes::GradientCode;
+use crate::linalg::CscMatrix;
+use crate::util::Rng;
+
+/// The deadline policy as specified in a scenario — `FastestR` is
+/// parameterized by the sweep point's r at [`Scenario::resolve`] time
+/// (a figure sweeps δ, so r varies per point), while `Deadline` carries
+/// its wall-clock bound directly.
+#[derive(Clone, Copy, Debug)]
+pub enum PolicySpec {
+    FastestR,
+    Deadline(f64),
+}
+
+/// A straggler scenario: the model family one run draws its
+/// non-straggler sets from. Part of the shard-run identity — two
+/// artifacts merge only if their scenarios are identical (bitwise on
+/// f64 parameters).
+#[derive(Clone, Debug)]
+pub enum Scenario {
+    /// The paper's average-case model (and the default): r uniform
+    /// survivors. `delta: None` takes δ from each sweep point —
+    /// byte-identical to the pre-spine hard-coded sampling; `Some(d)`
+    /// fixes the selection fraction at d regardless of the sweep.
+    Uniform { delta: Option<f64> },
+    /// Latency draws + deadline policy (the coordinator's mechanism,
+    /// now available to every figure/table/ablation sweep).
+    Latency { model: LatencyModel, policy: PolicySpec },
+    /// The §4 adversary in the standing-assignment setting: G is drawn
+    /// once per sweep point (seeded), the attack planned once against
+    /// it, and every trial replays the planned survivor set.
+    Adversarial { attack: AttackKind },
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario::Uniform { delta: None }
+    }
+}
+
+impl PartialEq for Scenario {
+    fn eq(&self, other: &Self) -> bool {
+        use Scenario::*;
+        match (self, other) {
+            (Uniform { delta: a }, Uniform { delta: b }) => {
+                a.map(f64::to_bits) == b.map(f64::to_bits)
+            }
+            (Latency { model: m1, policy: p1 }, Latency { model: m2, policy: p2 }) => {
+                latency_model_bits(m1) == latency_model_bits(m2) && policy_bits(p1) == policy_bits(p2)
+            }
+            (Adversarial { attack: a }, Adversarial { attack: b }) => a == b,
+            _ => false,
+        }
+    }
+}
+
+impl Eq for Scenario {}
+
+fn latency_model_bits(m: &LatencyModel) -> (u8, u64, u64, u64) {
+    match *m {
+        LatencyModel::ShiftedExp { base, rate } => (0, base.to_bits(), rate.to_bits(), 0),
+        LatencyModel::Pareto { scale, shape } => (1, scale.to_bits(), shape.to_bits(), 0),
+        LatencyModel::Bimodal { fast, slow, p_slow } => {
+            (2, fast.to_bits(), slow.to_bits(), p_slow.to_bits())
+        }
+    }
+}
+
+fn policy_bits(p: &PolicySpec) -> (u8, u64) {
+    match *p {
+        PolicySpec::FastestR => (0, 0),
+        PolicySpec::Deadline(t) => (1, t.to_bits()),
+    }
+}
+
+impl fmt::Display for Scenario {
+    /// The canonical string form (what artifacts store and
+    /// `shard_child_args` forwards). `fastest-r` is the policy default
+    /// and is omitted, so the canonical form is a parse fixed point.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Scenario::Uniform { delta: None } => write!(f, "uniform"),
+            Scenario::Uniform { delta: Some(d) } => write!(f, "uniform:{d}"),
+            Scenario::Latency { model, policy } => {
+                match *model {
+                    LatencyModel::ShiftedExp { base, rate } => {
+                        write!(f, "shifted-exp:{base},{rate}")?
+                    }
+                    LatencyModel::Pareto { scale, shape } => write!(f, "pareto:{scale},{shape}")?,
+                    LatencyModel::Bimodal { fast, slow, p_slow } => {
+                        write!(f, "bimodal:{fast},{slow},{p_slow}")?
+                    }
+                }
+                match *policy {
+                    PolicySpec::FastestR => Ok(()),
+                    PolicySpec::Deadline(t) => write!(f, ",deadline:{t}"),
+                }
+            }
+            Scenario::Adversarial { attack } => write!(f, "adversarial:{}", attack.token()),
+        }
+    }
+}
+
+impl Scenario {
+    /// The default scenario — today's hard-coded uniform sampling.
+    pub fn is_default(&self) -> bool {
+        matches!(self, Scenario::Uniform { delta: None })
+    }
+
+    /// The latency model, when this scenario has one (the `repro
+    /// scenario` time-to-accuracy sweeps require it: uniform and
+    /// adversarial scenarios have no wall-clock axis).
+    pub fn latency_model(&self) -> Option<&LatencyModel> {
+        match self {
+            Scenario::Latency { model, .. } => Some(model),
+            _ => None,
+        }
+    }
+
+    /// Parse the `--stragglers` grammar (see the module docs). Errors
+    /// name the offending piece; the canonical [`fmt::Display`] form
+    /// always parses back to an equal scenario.
+    pub fn parse(text: &str) -> Result<Scenario> {
+        let (head, rest) = match text.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (text, None),
+        };
+        match head {
+            "uniform" => match rest {
+                None => Ok(Scenario::Uniform { delta: None }),
+                Some(d) => {
+                    let delta = parse_f64(d, "uniform delta")?;
+                    if !(0.0..1.0).contains(&delta) {
+                        bail!("uniform delta must be in [0, 1), got {delta}");
+                    }
+                    Ok(Scenario::Uniform { delta: Some(delta) })
+                }
+            },
+            "shifted-exp" => {
+                let (params, policy) = split_policy(rest, "shifted-exp")?;
+                let [base, rate] = parse_params(&params, "shifted-exp", ["base", "rate"])?;
+                if rate <= 0.0 {
+                    bail!("shifted-exp rate must be > 0, got {rate}");
+                }
+                if base < 0.0 {
+                    bail!("shifted-exp base must be >= 0 (latencies are wall-clock), got {base}");
+                }
+                Ok(Scenario::Latency { model: LatencyModel::ShiftedExp { base, rate }, policy })
+            }
+            "pareto" => {
+                let (params, policy) = split_policy(rest, "pareto")?;
+                let [scale, shape] = parse_params(&params, "pareto", ["scale", "shape"])?;
+                if scale <= 0.0 || shape <= 0.0 {
+                    bail!("pareto scale and shape must be > 0, got {scale},{shape}");
+                }
+                Ok(Scenario::Latency { model: LatencyModel::Pareto { scale, shape }, policy })
+            }
+            "bimodal" => {
+                let (params, policy) = split_policy(rest, "bimodal")?;
+                let [fast, slow, p_slow] =
+                    parse_params(&params, "bimodal", ["fast", "slow", "p_slow"])?;
+                if !(0.0..=1.0).contains(&p_slow) {
+                    bail!("bimodal p_slow must be in [0, 1], got {p_slow}");
+                }
+                // fast > slow would make the quantile function
+                // non-monotone and silently invert the tta deadline
+                // sweep; negative latencies have no wall-clock meaning.
+                if fast < 0.0 || slow < fast {
+                    bail!("bimodal needs 0 <= fast <= slow, got fast={fast} slow={slow}");
+                }
+                Ok(Scenario::Latency {
+                    model: LatencyModel::Bimodal { fast, slow, p_slow },
+                    policy,
+                })
+            }
+            "adversarial" => {
+                let Some(tok) = rest else {
+                    bail!("adversarial scenario needs an attack: adversarial:block|greedy|local-search");
+                };
+                let Some(attack) = AttackKind::parse(tok) else {
+                    bail!("unknown attack {tok:?} (block|greedy|local-search)");
+                };
+                Ok(Scenario::Adversarial { attack })
+            }
+            other => bail!(
+                "unknown straggler scenario {other:?} \
+                 (uniform|shifted-exp|pareto|bimodal|adversarial)"
+            ),
+        }
+    }
+
+    /// Resolve this scenario into the concrete model one sweep point's
+    /// trials draw from. `delta` and `r` are the point's straggler
+    /// fraction and survivor count (r = round((1-δ)k) clamped, the
+    /// formula every sweep uses); `plan_seed` seeds the adversarial
+    /// standing assignment (shared by all shards of a job, so planning
+    /// is shard- and thread-invariant).
+    pub fn resolve(
+        &self,
+        code: &dyn GradientCode,
+        delta: f64,
+        r: usize,
+        plan_seed: u64,
+    ) -> ResolvedScenario {
+        match self {
+            Scenario::Uniform { delta: fixed } => ResolvedScenario {
+                model: Box::new(UniformStragglers::new(fixed.unwrap_or(delta))),
+                standing_g: None,
+            },
+            Scenario::Latency { model, policy } => {
+                let policy = match *policy {
+                    PolicySpec::FastestR => DeadlinePolicy::FastestR(r),
+                    PolicySpec::Deadline(t) => DeadlinePolicy::Fixed(t),
+                };
+                ResolvedScenario {
+                    model: Box::new(LatencyStragglers { model: *model, policy }),
+                    standing_g: None,
+                }
+            }
+            Scenario::Adversarial { attack } => {
+                let g = code.assignment(&mut Rng::new(plan_seed));
+                let model = AdversarialStragglers::plan(&g, r, code.s(), *attack);
+                ResolvedScenario { model: Box::new(model), standing_g: Some(g) }
+            }
+        }
+    }
+}
+
+fn parse_f64(s: &str, what: &str) -> Result<f64> {
+    match s.trim().parse::<f64>() {
+        Ok(x) if x.is_finite() => Ok(x),
+        _ => bail!("{what}: expected a finite number, got {s:?}"),
+    }
+}
+
+/// Split a latency spec's comma list into its numeric params and the
+/// optional trailing policy (`fastest-r` or `deadline:T`).
+fn split_policy(rest: Option<&str>, family: &str) -> Result<(Vec<String>, PolicySpec)> {
+    let Some(rest) = rest else {
+        bail!("{family} scenario needs parameters, e.g. {family}:<a>,<b>");
+    };
+    let mut parts: Vec<String> = rest.split(',').map(str::to_string).collect();
+    let policy = match parts.last().map(String::as_str) {
+        Some("fastest-r") => {
+            parts.pop();
+            PolicySpec::FastestR
+        }
+        Some(p) if p.starts_with("deadline:") => {
+            let t = parse_f64(&p["deadline:".len()..], "deadline")?;
+            if t <= 0.0 {
+                bail!("deadline must be > 0, got {t}");
+            }
+            parts.pop();
+            PolicySpec::Deadline(t)
+        }
+        _ => PolicySpec::FastestR,
+    };
+    Ok((parts, policy))
+}
+
+fn parse_params<const N: usize>(
+    parts: &[String],
+    family: &str,
+    names: [&str; N],
+) -> Result<[f64; N]> {
+    if parts.len() != N {
+        bail!(
+            "{family} scenario needs {N} parameters ({}), got {} in {parts:?}",
+            names.join(","),
+            parts.len()
+        );
+    }
+    let mut out = [0.0f64; N];
+    for (i, (part, name)) in parts.iter().zip(names).enumerate() {
+        out[i] = parse_f64(part, &format!("{family} {name}"))?;
+    }
+    Ok(out)
+}
+
+/// A scenario resolved at one sweep point: the concrete model plus,
+/// for adversarial scenarios, the standing assignment matrix the attack
+/// was planned against (trials decode on it instead of re-drawing G).
+///
+/// Invariant: `standing_g` is `Some` only for models whose draw is
+/// **deterministic** (a replayed survivor set consuming no RNG) — the
+/// sweeps rely on it to collapse standing points to a single exact
+/// decode (`sim::scenario::scalar_partial_under`).
+pub struct ResolvedScenario {
+    pub model: Box<dyn StragglerModel>,
+    pub standing_g: Option<CscMatrix>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::Scheme;
+    use crate::stragglers::StragglerScratch;
+
+    #[test]
+    fn canonical_form_is_a_parse_fixed_point() {
+        let cases = [
+            "uniform",
+            "uniform:0.2",
+            "shifted-exp:0.1,2",
+            "pareto:0.02,1.5",
+            "pareto:0.02,1.5,deadline:0.5",
+            "bimodal:0.1,10,0.25",
+            "adversarial:greedy",
+            "adversarial:block",
+            "adversarial:local-search",
+        ];
+        for text in cases {
+            let s = Scenario::parse(text).unwrap();
+            assert_eq!(s.to_string(), text, "canonical form drifted");
+            assert_eq!(Scenario::parse(&s.to_string()).unwrap(), s);
+        }
+        // fastest-r is the default policy and canonicalizes away.
+        let s = Scenario::parse("pareto:1,1.5,fastest-r").unwrap();
+        assert_eq!(s.to_string(), "pareto:1,1.5");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "frobnicate",
+            "uniform:1.0",
+            "uniform:x",
+            "pareto",
+            "pareto:1",
+            "pareto:1,2,3",
+            "pareto:0,1",
+            "shifted-exp:0.1,0",
+            "shifted-exp:-1,2",
+            "bimodal:1,2,1.5",
+            "bimodal:5,0.1,0.3",
+            "bimodal:-1,2,0.3",
+            "pareto:1,2,deadline:0",
+            "adversarial",
+            "adversarial:alien",
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn equality_is_bitwise_on_parameters() {
+        assert_eq!(Scenario::default(), Scenario::Uniform { delta: None });
+        assert!(Scenario::default().is_default());
+        assert_ne!(
+            Scenario::parse("pareto:1,1.5").unwrap(),
+            Scenario::parse("pareto:1,1.6").unwrap()
+        );
+        assert_ne!(
+            Scenario::parse("pareto:1,1.5").unwrap(),
+            Scenario::parse("pareto:1,1.5,deadline:2").unwrap()
+        );
+        assert_ne!(Scenario::parse("uniform").unwrap(), Scenario::parse("uniform:0.2").unwrap());
+    }
+
+    #[test]
+    fn uniform_resolution_uses_point_delta_unless_overridden() {
+        let code = Scheme::Bgc.build(20, 20, 4);
+        let mut ws = StragglerScratch::new();
+        let mut rng = Rng::new(3);
+        let resolved = Scenario::default().resolve(code.as_ref(), 0.25, 15, 0);
+        assert!(resolved.standing_g.is_none());
+        resolved.model.non_stragglers_into(20, &mut rng, &mut ws);
+        assert_eq!(ws.idx.len(), 15);
+        // Override: selection fraction fixed at 0.5 regardless of the
+        // point's δ = 0.25.
+        let over = Scenario::parse("uniform:0.5").unwrap().resolve(code.as_ref(), 0.25, 15, 0);
+        over.model.non_stragglers_into(20, &mut rng, &mut ws);
+        assert_eq!(ws.idx.len(), 10);
+    }
+
+    #[test]
+    fn latency_resolution_parameterizes_fastest_r_with_point_r() {
+        let code = Scheme::Bgc.build(30, 30, 4);
+        let s = Scenario::parse("pareto:0.1,1.5").unwrap();
+        let resolved = s.resolve(code.as_ref(), 0.4, 18, 0);
+        let mut ws = StragglerScratch::new();
+        let mut rng = Rng::new(4);
+        resolved.model.non_stragglers_into(30, &mut rng, &mut ws);
+        assert_eq!(ws.idx.len(), 18);
+        assert!(ws.gather_time.is_finite());
+    }
+
+    #[test]
+    fn adversarial_resolution_plans_a_standing_assignment() {
+        let code = Scheme::Frc.build(20, 20, 5);
+        let s = Scenario::parse("adversarial:block").unwrap();
+        let resolved = s.resolve(code.as_ref(), 0.25, 15, 99);
+        let g = resolved.standing_g.as_ref().expect("standing G");
+        // The standing G is the seeded draw the attack was planned on.
+        assert_eq!(*g, code.assignment(&mut Rng::new(99)));
+        let mut ws = StragglerScratch::new();
+        let mut rng = Rng::new(5);
+        resolved.model.non_stragglers_into(20, &mut rng, &mut ws);
+        assert_eq!(ws.idx.len(), 15);
+        // Replay: a second draw returns the same set.
+        let first = ws.idx.clone();
+        resolved.model.non_stragglers_into(20, &mut rng, &mut ws);
+        assert_eq!(ws.idx, first);
+    }
+}

@@ -9,8 +9,17 @@
 //! round-tripping float formatting; exact f64 interchange (bit
 //! patterns) is layered above this module by `sim::shard`, which
 //! encodes payload floats as hex strings.
+//!
+//! The writer is generic over [`fmt::Write`]: the `String`-returning
+//! entry points ([`Json::write`], [`Json::write_pretty`],
+//! [`Json::write_excluding`]) and the streaming ones
+//! ([`Json::write_compact_to`], [`Json::write_excluding_to`]) share one
+//! kernel, so a sink that folds a checksum (`sim::shard`'s FNV-1a
+//! state) sees byte-for-byte the same serialization without the body
+//! `String` ever being materialized.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -101,7 +110,7 @@ impl Json {
     /// bit patterns as strings instead of relying on `Json::Num`).
     pub fn write(&self) -> String {
         let mut out = String::new();
-        self.write_into(&mut out, None, 0);
+        self.write_to(&mut out, None, 0).expect("String sink never fails");
         out
     }
 
@@ -109,119 +118,135 @@ impl Json {
     /// Parses back identically to [`Json::write`]'s output.
     pub fn write_pretty(&self) -> String {
         let mut out = String::new();
-        self.write_into(&mut out, Some(2), 0);
+        self.write_to(&mut out, Some(2), 0).expect("String sink never fails");
         out.push('\n');
         out
     }
 
+    /// Stream the compact serialization into any [`fmt::Write`] sink —
+    /// byte-identical to [`Json::write`] without materializing the
+    /// `String`. This is what lets the shard-artifact checksum fold a
+    /// hash over multi-megabyte bodies allocation-free (the sink is
+    /// the hash state).
+    pub fn write_compact_to<W: fmt::Write>(&self, w: &mut W) -> fmt::Result {
+        self.write_to(w, None, 0)
+    }
+
     /// Compact serialization of an object with one **top-level** key
     /// omitted — byte-identical to removing the key from a clone and
-    /// calling [`Json::write`], but without deep-cloning the value tree
-    /// (the shard-artifact checksum hashes multi-megabyte bodies this
-    /// way on every parse). Non-objects serialize exactly as `write`.
+    /// calling [`Json::write`], but without deep-cloning the value tree.
+    /// Kept for tests and small bodies; the shard-artifact checksum
+    /// streams through [`Json::write_excluding_to`] instead.
     pub fn write_excluding(&self, skip_key: &str) -> String {
+        let mut out = String::new();
+        self.write_excluding_to(skip_key, &mut out).expect("String sink never fails");
+        out
+    }
+
+    /// Streaming form of [`Json::write_excluding`]: serialize into any
+    /// [`fmt::Write`] sink with one top-level key omitted, never
+    /// materializing the body. Byte-identical to `write_excluding`
+    /// (pinned by tests here and by the shard checksum pin).
+    pub fn write_excluding_to<W: fmt::Write>(&self, skip_key: &str, w: &mut W) -> fmt::Result {
         match self {
             Json::Obj(map) => {
-                let mut out = String::new();
-                out.push('{');
+                w.write_char('{')?;
                 let mut first = true;
                 for (key, val) in map {
                     if key == skip_key {
                         continue;
                     }
                     if !first {
-                        out.push(',');
+                        w.write_char(',')?;
                     }
                     first = false;
-                    write_escaped(key, &mut out);
-                    out.push(':');
-                    val.write_into(&mut out, None, 0);
+                    write_escaped(key, w)?;
+                    w.write_char(':')?;
+                    val.write_to(w, None, 0)?;
                 }
-                out.push('}');
-                out
+                w.write_char('}')
             }
-            other => other.write(),
+            other => other.write_to(w, None, 0),
         }
     }
 
-    fn write_into(&self, out: &mut String, indent: Option<usize>, level: usize) {
+    fn write_to<W: fmt::Write>(&self, out: &mut W, indent: Option<usize>, level: usize) -> fmt::Result {
         match self {
-            Json::Null => out.push_str("null"),
-            Json::Bool(true) => out.push_str("true"),
-            Json::Bool(false) => out.push_str("false"),
+            Json::Null => out.write_str("null"),
+            Json::Bool(true) => out.write_str("true"),
+            Json::Bool(false) => out.write_str("false"),
             Json::Num(x) => {
                 if x.is_finite() {
-                    out.push_str(&format!("{x}"));
+                    write!(out, "{x}")
                 } else {
                     debug_assert!(false, "non-finite number {x} has no JSON form");
-                    out.push_str("null");
+                    out.write_str("null")
                 }
             }
             Json::Str(s) => write_escaped(s, out),
             Json::Arr(items) => {
                 if items.is_empty() {
-                    out.push_str("[]");
-                    return;
+                    return out.write_str("[]");
                 }
-                out.push('[');
+                out.write_char('[')?;
                 for (i, item) in items.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_char(',')?;
                     }
-                    newline_indent(out, indent, level + 1);
-                    item.write_into(out, indent, level + 1);
+                    newline_indent(out, indent, level + 1)?;
+                    item.write_to(out, indent, level + 1)?;
                 }
-                newline_indent(out, indent, level);
-                out.push(']');
+                newline_indent(out, indent, level)?;
+                out.write_char(']')
             }
             Json::Obj(map) => {
                 if map.is_empty() {
-                    out.push_str("{}");
-                    return;
+                    return out.write_str("{}");
                 }
-                out.push('{');
+                out.write_char('{')?;
                 for (i, (key, val)) in map.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_char(',')?;
                     }
-                    newline_indent(out, indent, level + 1);
-                    write_escaped(key, out);
-                    out.push(':');
+                    newline_indent(out, indent, level + 1)?;
+                    write_escaped(key, out)?;
+                    out.write_char(':')?;
                     if indent.is_some() {
-                        out.push(' ');
+                        out.write_char(' ')?;
                     }
-                    val.write_into(out, indent, level + 1);
+                    val.write_to(out, indent, level + 1)?;
                 }
-                newline_indent(out, indent, level);
-                out.push('}');
+                newline_indent(out, indent, level)?;
+                out.write_char('}')
             }
         }
     }
 }
 
-fn newline_indent(out: &mut String, indent: Option<usize>, level: usize) {
+fn newline_indent<W: fmt::Write>(out: &mut W, indent: Option<usize>, level: usize) -> fmt::Result {
     if let Some(width) = indent {
-        out.push('\n');
+        out.write_char('\n')?;
         for _ in 0..width * level {
-            out.push(' ');
+            out.write_char(' ')?;
         }
     }
+    Ok(())
 }
 
-fn write_escaped(s: &str, out: &mut String) {
-    out.push('"');
+fn write_escaped<W: fmt::Write>(s: &str, out: &mut W) -> fmt::Result {
+    out.write_char('"')?;
     for c in s.chars() {
         match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
+            '"' => out.write_str("\\\"")?,
+            '\\' => out.write_str("\\\\")?,
+            '\n' => out.write_str("\\n")?,
+            '\r' => out.write_str("\\r")?,
+            '\t' => out.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(out, "\\u{:04x}", c as u32)?,
+            c => out.write_char(c)?,
         }
     }
-    out.push('"');
+    out.write_char('"')
 }
 
 struct Parser<'a> {
@@ -494,6 +519,26 @@ mod tests {
         assert_eq!(solo.write_excluding("only"), "{}");
         // Non-objects pass through.
         assert_eq!(Json::Num(1.0).write_excluding("x"), "1");
+    }
+
+    #[test]
+    fn streaming_writers_match_materializing_writers_byte_for_byte() {
+        let j = Json::parse(
+            r#"{"a": [1, 2.5, {"b": "c\"d\\e\nf"}], "checksum": "xx", "d": {}, "e": [],
+                "f": null, "g": true, "h": -0.125, "i": "δ"}"#,
+        )
+        .unwrap();
+        let mut streamed = String::new();
+        j.write_compact_to(&mut streamed).unwrap();
+        assert_eq!(streamed, j.write());
+        let mut streamed = String::new();
+        j.write_excluding_to("checksum", &mut streamed).unwrap();
+        assert_eq!(streamed, j.write_excluding("checksum"));
+        // Non-objects pass through both paths identically too.
+        let n = Json::Num(2e-7);
+        let mut streamed = String::new();
+        n.write_excluding_to("x", &mut streamed).unwrap();
+        assert_eq!(streamed, n.write());
     }
 
     #[test]

@@ -277,3 +277,90 @@ fn parallel_map_with_bit_identical_across_threads() {
         assert_eq!(x.to_bits(), y.to_bits());
     }
 }
+
+/// The scenario-spine acceptance pin: under the **default uniform
+/// scenario**, the refactored sweeps emit CSVs bit-identical to the
+/// pre-refactor hard-coded-sampling pipeline. The pre-refactor form is
+/// reconstructed here from the r-based workspace trial methods (which
+/// the spine's uniform model must reproduce RNG-draw for RNG-draw):
+/// fig3 (LSQR sweep) and thm6 (warm-started FRC table) — the two
+/// production shapes the ISSUE names.
+#[test]
+fn uniform_scenario_csv_matches_pre_refactor_fig3_and_thm6() {
+    use gradcode::sim::figures::{FigureConfig, FIG_SCHEMES};
+    use gradcode::sim::tables::thm6_expected;
+    use gradcode::sim::{JobKind, JobSpec, Shard};
+    use gradcode::stragglers::Scenario;
+
+    // ---- fig3 through the spine (JobSpec::run, default scenario).
+    let (k, trials, seed) = (16usize, 20usize, 2017u64);
+    let job = JobSpec {
+        kind: JobKind::Figure,
+        id: "3".into(),
+        trials,
+        seed,
+        k,
+        s: 0,
+        tmax: 0,
+        scenario: Scenario::default(),
+    };
+    let spine_csv = job.run(Shard::full(), Some(2)).unwrap().to_csv();
+
+    // The pre-refactor sweep, reconstructed: same point order, the
+    // r-based `optimal_redraw_trial`, same CSV formatting.
+    let mut cfg = FigureConfig::paper(trials, seed);
+    cfg.k = k;
+    cfg.mc = MonteCarlo::new(trials, seed).with_threads(2);
+    let opts = LsqrOptions::default();
+    let mut legacy = String::from("figure,scheme,s,delta,t,value\n");
+    for &scheme in &FIG_SCHEMES {
+        for &s in &cfg.s_values {
+            for &delta in &cfg.deltas {
+                let r = cfg.r(delta);
+                let code = scheme.build(k, k, s);
+                let mean = cfg.mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
+                    ws.optimal_redraw_trial(code.as_ref(), r, &opts, None, rng)
+                });
+                legacy.push_str(&format!(
+                    "fig3,{},{},{:.3},0,{:.6e}\n",
+                    scheme.name(),
+                    s,
+                    delta,
+                    mean / k as f64
+                ));
+            }
+        }
+    }
+    assert_eq!(spine_csv, legacy, "fig3 CSV drifted from the pre-refactor bytes");
+
+    // ---- thm6 through the spine.
+    let (k, s, trials, seed) = (12usize, 3usize, 30usize, 2017u64);
+    let job = JobSpec {
+        kind: JobKind::Table,
+        id: "thm6".into(),
+        trials,
+        seed,
+        k,
+        s,
+        tmax: 0,
+        scenario: Scenario::default(),
+    };
+    let spine_csv = job.run(Shard::full(), Some(2)).unwrap().to_csv();
+
+    let mc = MonteCarlo::new(trials, seed).with_threads(2);
+    let code = Scheme::Frc.build(k, k, s);
+    let mut legacy = String::from("table,label,expected,measured,note\n");
+    for &delta in &[0.1, 0.25, 0.5, 0.75] {
+        let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let mean = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
+            ws.optimal_redraw_trial(code.as_ref(), r, &opts, Some(rho), rng)
+        });
+        legacy.push_str(&format!(
+            "thm6,k={k} s={s} delta={delta:.2},{:.6e},{:.6e},E[err(A_frc)]\n",
+            thm6_expected(k, r, s),
+            mean
+        ));
+    }
+    assert_eq!(spine_csv, legacy, "thm6 CSV drifted from the pre-refactor bytes");
+}

@@ -1,0 +1,130 @@
+//! Integration test for the resumable fan-out driver:
+//! `repro run --fanout N --resume DIR` must reuse the valid shard
+//! artifacts already on disk, respawn only the absent/corrupt ones,
+//! and still emit the unsharded-identical CSV — the "kill one shard
+//! and pick the run back up" workflow.
+
+use std::path::Path;
+use std::process::Command;
+
+const BIN: &str = env!("CARGO_BIN_EXE_gradcode");
+
+/// Run the binary, assert success, return (stdout, stderr).
+fn run_ok(args: &[&str]) -> (String, String) {
+    let out = Command::new(BIN).args(args).output().expect("spawning repro");
+    assert!(
+        out.status.success(),
+        "repro {args:?} failed (status {:?}):\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (
+        String::from_utf8(out.stdout).expect("utf-8 stdout"),
+        String::from_utf8(out.stderr).expect("utf-8 stderr"),
+    )
+}
+
+fn artifact_paths(dir: &Path) -> Vec<std::path::PathBuf> {
+    let mut v: Vec<_> = std::fs::read_dir(dir)
+        .expect("artifacts dir")
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| p.extension().is_some_and(|e| e == "json"))
+        .collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn resume_respawns_only_missing_and_corrupt_shards() {
+    let dir = std::env::temp_dir().join(format!("gradcode-resume-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_str().expect("utf-8 temp dir");
+
+    let job_args =
+        ["--table", "thm5", "--trials", "40", "--k", "12", "--s", "3", "--threads", "1"];
+
+    // Reference: the unsharded run.
+    let mut unsharded_cmd: Vec<&str> = vec!["tables"];
+    unsharded_cmd.extend_from_slice(&job_args);
+    let (unsharded, _) = run_ok(&unsharded_cmd);
+
+    // Full fan-out, keeping the artifacts.
+    let mut run_cmd: Vec<&str> = vec!["run", "--fanout", "4", "--artifacts-dir", dir_s];
+    run_cmd.extend_from_slice(&job_args);
+    let (first_csv, _) = run_ok(&run_cmd);
+    assert_eq!(first_csv, unsharded, "fan-out CSV != unsharded CSV");
+    let paths = artifact_paths(&dir);
+    assert_eq!(paths.len(), 4, "expected 4 shard artifacts, got {paths:?}");
+
+    // Simulate a killed run: one shard never finished (file missing),
+    // another died mid-write (corrupt file).
+    std::fs::remove_file(&paths[1]).expect("deleting shard artifact");
+    std::fs::write(&paths[2], "{\"format\": \"gradcode-shard/v3\", truncated").expect("corrupting");
+
+    // Resume: only the two damaged shards get respawned; the merged CSV
+    // is still byte-identical to the unsharded run.
+    let mut resume_cmd: Vec<&str> = vec!["run", "--fanout", "4", "--resume", dir_s];
+    resume_cmd.extend_from_slice(&job_args);
+    let (resumed_csv, stderr) = run_ok(&resume_cmd);
+    assert_eq!(resumed_csv, unsharded, "resumed CSV != unsharded CSV");
+    assert!(
+        stderr.contains("2/4 shard(s) present"),
+        "resume accounting missing from stderr:\n{stderr}"
+    );
+    assert!(stderr.contains("respawning [1, 2]"), "wrong respawn set:\n{stderr}");
+    assert!(stderr.contains("discarding corrupt"), "corrupt artifact not reported:\n{stderr}");
+
+    // All four artifacts are back on disk and a second resume finds the
+    // set complete (respawns nothing).
+    assert_eq!(artifact_paths(&dir).len(), 4);
+    let (again_csv, stderr) = run_ok(&resume_cmd);
+    assert_eq!(again_csv, unsharded);
+    assert!(
+        stderr.contains("4/4 shard(s) present") && stderr.contains("respawning []"),
+        "complete resume should respawn nothing:\n{stderr}"
+    );
+
+    // --resume and --artifacts-dir together is a usage error (exit 2).
+    let mut bad_cmd: Vec<&str> =
+        vec!["run", "--fanout", "4", "--resume", dir_s, "--artifacts-dir", dir_s];
+    bad_cmd.extend_from_slice(&job_args);
+    let out = Command::new(BIN).args(&bad_cmd).output().expect("spawning repro");
+    assert_eq!(out.status.code(), Some(2), "expected usage exit");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_ignores_foreign_artifacts() {
+    let dir = std::env::temp_dir().join(format!("gradcode-resume-foreign-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("creating dir");
+    let dir_s = dir.to_str().expect("utf-8 temp dir");
+
+    // Seed the dir with an artifact from a DIFFERENT job (other seed).
+    // thm11 derives s internally and rejects --s, so it is left off.
+    let mut other_cmd: Vec<&str> = vec![
+        "shard", "--table", "thm11", "--trials", "10", "--k", "12", "--seed", "9", "--shard-id",
+        "0", "--num-shards", "2",
+    ];
+    let foreign = dir.join("foreign.json");
+    let foreign_s = foreign.to_str().expect("utf-8 path");
+    other_cmd.extend_from_slice(&["--out", foreign_s]);
+    run_ok(&other_cmd);
+
+    // A resumed run of another job must skip it and still succeed.
+    let (unsharded, _) = run_ok(&[
+        "tables", "--table", "thm11", "--trials", "10", "--k", "12", "--threads", "1",
+    ]);
+    let (csv, stderr) = run_ok(&[
+        "run", "--fanout", "2", "--resume", dir_s, "--table", "thm11", "--trials", "10", "--k",
+        "12", "--threads", "1",
+    ]);
+    assert_eq!(csv, unsharded);
+    assert!(
+        stderr.contains("skipping") && stderr.contains("0/2 shard(s) present"),
+        "foreign artifact not skipped:\n{stderr}"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -19,9 +19,17 @@ use gradcode::sim::tables::{
     thm6_table, thm8_partials, thm8_table, TableRow,
 };
 use gradcode::sim::{JobKind, JobSpec, MonteCarlo, Shard, ShardArtifact};
+use gradcode::stragglers::Scenario;
 use gradcode::util::Rng;
 
 const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+/// The default (uniform) scenario every pre-spine CSV was produced
+/// under; the parity tests below pin that it still produces those
+/// bytes.
+fn sc() -> Scenario {
+    Scenario::default()
+}
 
 /// Wrap per-shard points in artifacts, push every one of them through
 /// the JSON on-disk format, and merge.
@@ -49,11 +57,21 @@ fn fig_job(trials: usize, id: &str) -> JobSpec {
         k: 0,
         s: 0,
         tmax: 0,
+        scenario: Scenario::default(),
     }
 }
 
 fn table_job(trials: usize, id: &str) -> JobSpec {
-    JobSpec { kind: JobKind::Table, id: id.into(), trials, seed: 0, k: 0, s: 0, tmax: 0 }
+    JobSpec {
+        kind: JobKind::Table,
+        id: id.into(),
+        trials,
+        seed: 0,
+        k: 0,
+        s: 0,
+        tmax: 0,
+        scenario: Scenario::default(),
+    }
 }
 
 fn assert_fig_points_bit_equal(merged: &ShardPoints, whole: &[FigPoint], ctx: &str) {
@@ -128,7 +146,7 @@ fn figure2_shard_merge_bit_parity() {
         let per_shard: Vec<ShardPoints> = (0..n)
             .map(|sid| {
                 let cfg = tiny_fig_cfg(trials, shard_threads(sid));
-                ShardPoints::Fig(figure2_partials(&cfg, Shard::new(sid, n).unwrap()))
+                ShardPoints::Fig(figure2_partials(&cfg, &sc(), Shard::new(sid, n).unwrap()))
             })
             .collect();
         let merged = roundtrip_and_merge(&fig_job(trials, "2"), per_shard);
@@ -144,7 +162,7 @@ fn figure3_shard_merge_bit_parity() {
         let per_shard: Vec<ShardPoints> = (0..n)
             .map(|sid| {
                 let cfg = tiny_fig_cfg(trials, shard_threads(sid));
-                ShardPoints::Fig(figure3_partials(&cfg, Shard::new(sid, n).unwrap()))
+                ShardPoints::Fig(figure3_partials(&cfg, &sc(), Shard::new(sid, n).unwrap()))
             })
             .collect();
         let merged = roundtrip_and_merge(&fig_job(trials, "3"), per_shard);
@@ -160,7 +178,7 @@ fn figure4_shard_merge_bit_parity() {
         let per_shard: Vec<ShardPoints> = (0..n)
             .map(|sid| {
                 let cfg = tiny_fig_cfg(trials, shard_threads(sid));
-                ShardPoints::Fig(figure4_partials(&cfg, Shard::new(sid, n).unwrap()))
+                ShardPoints::Fig(figure4_partials(&cfg, &sc(), Shard::new(sid, n).unwrap()))
             })
             .collect();
         let merged = roundtrip_and_merge(&fig_job(trials, "4"), per_shard);
@@ -185,6 +203,7 @@ fn figure5_curve_shard_merge_bit_parity() {
                 ShardPoints::Fig(figure5_partials(
                     &cfg(shard_threads(sid)),
                     t_max,
+                    &sc(),
                     Shard::new(sid, n).unwrap(),
                 ))
             })
@@ -209,6 +228,7 @@ fn thm5_and_thm6_shard_merge_bit_parity() {
                     k,
                     s,
                     &deltas,
+                    &sc(),
                     &mc(shard_threads(sid)),
                     Shard::new(sid, n).unwrap(),
                 ))
@@ -223,6 +243,7 @@ fn thm5_and_thm6_shard_merge_bit_parity() {
                     k,
                     s,
                     &deltas,
+                    &sc(),
                     &mc(shard_threads(sid)),
                     Shard::new(sid, n).unwrap(),
                 ))
@@ -248,6 +269,7 @@ fn thm8_probability_shard_merge_bit_parity() {
                     k,
                     &alphas,
                     &deltas,
+                    &sc(),
                     &mc(shard_threads(sid)),
                     Shard::new(sid, n).unwrap(),
                 ))
@@ -275,6 +297,7 @@ fn thm21_postmap_and_nan_expected_shard_merge_bit_parity() {
                     &ks,
                     s_of_k,
                     0.25,
+                    &sc(),
                     &mc(shard_threads(sid)),
                     Shard::new(sid, n).unwrap(),
                 ))
@@ -299,6 +322,7 @@ fn jobspec_sharded_run_reproduces_unsharded_csv() {
             k: 16,
             s: 0,
             tmax: 0,
+            scenario: Scenario::default(),
         },
         JobSpec {
             kind: JobKind::Table,
@@ -308,6 +332,7 @@ fn jobspec_sharded_run_reproduces_unsharded_csv() {
             k: 12,
             s: 3,
             tmax: 0,
+            scenario: Scenario::default(),
         },
         JobSpec {
             kind: JobKind::Table,
@@ -317,6 +342,7 @@ fn jobspec_sharded_run_reproduces_unsharded_csv() {
             k: 12,
             s: 3,
             tmax: 0,
+            scenario: Scenario::default(),
         },
     ];
     for job in &jobs {
@@ -392,6 +418,7 @@ fn ablation_studies_shard_merge_to_unsharded_csv() {
             k: 20,
             s: 4,
             tmax: 0,
+            scenario: Scenario::default(),
         };
         let unsharded = job.run(Shard::full(), Some(3)).unwrap().to_csv();
         let other_threads = job.run(Shard::full(), Some(1)).unwrap().to_csv();
@@ -425,6 +452,7 @@ fn tree_reduction_matches_flat_merge_byte_for_byte() {
         k: 20,
         s: 5,
         tmax: 0,
+        scenario: Scenario::default(),
     };
     let arts: Vec<ShardArtifact> = (0..8)
         .map(|sid| {
@@ -468,6 +496,7 @@ fn verify_accepts_complete_sets_and_rejects_bad_ones() {
         k: 12,
         s: 3,
         tmax: 0,
+        scenario: Scenario::default(),
     };
     let arts: Vec<ShardArtifact> = (0..3)
         .map(|sid| {
@@ -509,6 +538,7 @@ fn merge_rejects_incomplete_or_mismatched_sets() {
         k: 12,
         s: 3,
         tmax: 0,
+        scenario: Scenario::default(),
     };
     let art = |sid: usize, n: usize, job: &JobSpec| {
         ShardArtifact::compute(job, Shard::new(sid, n).unwrap(), Some(1)).unwrap()
@@ -540,13 +570,100 @@ fn artifact_json_is_parseable_and_stable() {
         k: 16,
         s: 0,
         tmax: 0,
+        scenario: Scenario::default(),
     };
     let art = ShardArtifact::compute(&job, Shard::new(1, 3).unwrap(), Some(2)).unwrap();
     let text = art.to_json_string();
     let reparsed = ShardArtifact::parse(&text).unwrap();
     assert_eq!(reparsed.to_json_string(), text);
     // Sanity: the artifact names its format, shard coverage, checksum.
-    assert!(text.contains("gradcode-shard/v2"));
+    assert!(text.contains("gradcode-shard/v3"));
     assert!(text.contains("\"shard_ids\""));
     assert!(text.contains("\"checksum\""));
+}
+
+#[test]
+fn scenario_tta_shard_merge_reproduces_unsharded_csv() {
+    // The scenario job family shards like everything else: {1, 2, 3, 7}
+    // shards x varying per-shard thread counts x the JSON artifact
+    // round trip == the unsharded CSV, byte for byte.
+    let job = JobSpec {
+        kind: JobKind::Scenario,
+        id: "tta".into(),
+        trials: 24,
+        seed: 19,
+        k: 12,
+        s: 3,
+        tmax: 0,
+        scenario: Scenario::parse("pareto:0.05,1.5").unwrap(),
+    };
+    let unsharded = job.run(Shard::full(), Some(3)).unwrap().to_csv();
+    let other_threads = job.run(Shard::full(), Some(1)).unwrap().to_csv();
+    assert_eq!(unsharded, other_threads, "tta: thread dependence");
+    assert!(unsharded.starts_with("scenario,scheme,policy,s,delta,gather,err1\n"));
+    for &n in &SHARD_COUNTS {
+        let artifacts: Vec<ShardArtifact> = (0..n)
+            .map(|sid| {
+                let art = ShardArtifact::compute(
+                    &job,
+                    Shard::new(sid, n).unwrap(),
+                    Some(shard_threads(sid)),
+                )
+                .unwrap();
+                ShardArtifact::parse(&art.to_json_string()).unwrap()
+            })
+            .collect();
+        ShardArtifact::verify_set(&artifacts).expect("tta artifact set verifies");
+        let merged = ShardArtifact::merge(artifacts).unwrap();
+        assert_eq!(merged.to_csv(), unsharded, "tta n={n}");
+    }
+}
+
+#[test]
+fn non_uniform_scenarios_shard_merge_bit_parity_for_figures_and_tables() {
+    // Latency and adversarial scenarios ride the same shard machinery:
+    // sharded runs merge to the single-process bytes for a figure and a
+    // table job under each.
+    for spec in ["pareto:0.05,1.5", "bimodal:0.1,5,0.3,deadline:0.6", "adversarial:greedy"] {
+        let jobs = [
+            JobSpec {
+                kind: JobKind::Figure,
+                id: "2".into(),
+                trials: 12,
+                seed: 23,
+                k: 14,
+                s: 0,
+                tmax: 0,
+                scenario: Scenario::parse(spec).unwrap(),
+            },
+            JobSpec {
+                kind: JobKind::Table,
+                id: "thm5".into(),
+                trials: 30,
+                seed: 23,
+                k: 15,
+                s: 3,
+                tmax: 0,
+                scenario: Scenario::parse(spec).unwrap(),
+            },
+        ];
+        for job in &jobs {
+            let unsharded = job.run(Shard::full(), Some(2)).unwrap().to_csv();
+            for &n in &[3usize] {
+                let artifacts: Vec<ShardArtifact> = (0..n)
+                    .map(|sid| {
+                        let art = ShardArtifact::compute(
+                            job,
+                            Shard::new(sid, n).unwrap(),
+                            Some(shard_threads(sid)),
+                        )
+                        .unwrap();
+                        ShardArtifact::parse(&art.to_json_string()).unwrap()
+                    })
+                    .collect();
+                let merged = ShardArtifact::merge(artifacts).unwrap();
+                assert_eq!(merged.to_csv(), unsharded, "{spec}: {} n={n}", job.id);
+            }
+        }
+    }
 }

@@ -255,6 +255,56 @@ fn optimal_redraw_trial_loop_is_allocation_free_after_warmup() {
     assert_eq!(allocs, 0, "steady-state optimal redraw loop allocated {allocs} times");
 }
 
+/// The scenario spine: straggler selection through
+/// `StragglerModel::non_stragglers_into` (uniform, latency with both
+/// deadline policies, adversarial replay) runs the redraw trial loop
+/// with zero steady-state heap allocations, like the hard-coded
+/// uniform draw it replaces.
+#[test]
+fn scenario_spine_trial_loops_are_allocation_free_after_warmup() {
+    use gradcode::stragglers::{
+        AdversarialStragglers, AttackKind, DeadlinePolicy, LatencyModel, LatencyStragglers,
+        StragglerModel, UniformStragglers,
+    };
+    let (k, s, r) = (60usize, 6usize, 45usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let code = Scheme::Bgc.build(k, k, s);
+    let g = code.assignment(&mut Rng::new(41));
+
+    let uniform = UniformStragglers::new(0.25);
+    let pareto = LatencyModel::Pareto { scale: 0.05, shape: 1.5 };
+    let fastest = LatencyStragglers { model: pareto, policy: DeadlinePolicy::FastestR(r) };
+    let deadline = LatencyStragglers { model: pareto, policy: DeadlinePolicy::Fixed(0.2) };
+    let adversarial = AdversarialStragglers::plan(&g, r, s, AttackKind::Greedy);
+    let models: [(&str, &dyn StragglerModel); 4] = [
+        ("uniform", &uniform),
+        ("latency/fastest-r", &fastest),
+        ("latency/deadline", &deadline),
+        ("adversarial", &adversarial),
+    ];
+
+    for (name, model) in models {
+        let mut ws = DecodeWorkspace::new();
+        ws.reserve_redraw(k, k, s);
+        let mut rng = Rng::new(42);
+
+        let mut warmup_sum = 0.0;
+        for _ in 0..3 {
+            warmup_sum += ws.onestep_redraw_trial_with(code.as_ref(), model, rho, &mut rng);
+        }
+        assert!(warmup_sum.is_finite());
+
+        let before = allocations_on_this_thread();
+        let mut sum = 0.0;
+        for _ in 0..100 {
+            sum += ws.onestep_redraw_trial_with(code.as_ref(), model, rho, &mut rng);
+        }
+        let allocs = allocations_on_this_thread() - before;
+        assert!(sum.is_finite() && sum >= 0.0);
+        assert_eq!(allocs, 0, "{name}: steady-state scenario loop allocated {allocs} times");
+    }
+}
+
 /// Control: the counter itself works — the legacy allocating path must
 /// register allocations (otherwise the two tests above prove nothing).
 #[test]
