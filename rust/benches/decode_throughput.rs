@@ -11,6 +11,10 @@
 //! * workspace vs allocating LSQR, cold vs warm-started.
 //! * one-step decode: a single sparse pass; target >= 1e8 nnz/s.
 //! * scaling in k at fixed density.
+//! * **panel decode** (PR 6): W-trials-per-call batched kernels vs the
+//!   scalar trial loop at k = n = 1000 for W ∈ {4, 8, 16}, plus the
+//!   Aᵀx CSC-column-walk vs per-trial-CSR-conversion measurement that
+//!   settles the queued CSR-backed-LSQR question.
 //!
 //! Emits `BENCH_decode.json` (fixed seeds) for cross-PR trajectories.
 //!
@@ -469,6 +473,132 @@ fn main() {
             ns_per_decode: t.as_nanos() as f64,
             decodes_per_sec: 1.0 / t.as_secs_f64(),
         });
+    }
+
+    // ------------------- panel decode: W trials per kernel call (PR 6)
+    // Scalar trial baselines replicate the Monte-Carlo fork-per-trial
+    // structure (trial j draws from `root.fork(j)`), so the panel and
+    // scalar closures do identical RNG + draw work per trial and the
+    // comparison isolates the kernel batching. Panel time is divided by
+    // W to report per-trial cost.
+    {
+        use gradcode::decode::PanelWorkspace;
+
+        let root = Rng::new(seed1);
+        let mut sbase = 0u64;
+        let t_scalar_one = b.bench("decode/panel/one-step/scalar-trial/k1000", || {
+            let mut r = root.fork(sbase);
+            sbase += 1;
+            black_box(ws.onestep_trial(&g1, r1, rho1, &mut r))
+        });
+        let mut sbase_opt = 0u64;
+        let t_scalar_opt = b.bench("decode/panel/optimal/scalar-trial/k1000", || {
+            let mut r = root.fork(sbase_opt);
+            sbase_opt += 1;
+            black_box(ws.optimal_trial(&g1, r1, &opts, None, &mut r))
+        });
+        for (label, t) in [
+            ("panel/one-step/scalar-trial", t_scalar_one),
+            ("panel/optimal/scalar-trial", t_scalar_opt),
+        ] {
+            records.push(DecodeBenchRecord {
+                label: label.to_string(),
+                scheme: "BGC".to_string(),
+                k: k1,
+                n: k1,
+                s: s1,
+                r: r1,
+                seed: seed1,
+                ns_per_decode: t.as_nanos() as f64,
+                decodes_per_sec: 1.0 / t.as_secs_f64(),
+            });
+        }
+
+        for &w in &[4usize, 8, 16] {
+            let mut pw = PanelWorkspace::new(w);
+            pw.mirror_csr(&g1);
+            let mut out = vec![0.0f64; w];
+
+            let mut pbase = 0u64;
+            let t_panel_one = b.bench(&format!("decode/panel/one-step/w{w}/k1000"), || {
+                pw.onestep_panel(&g1, r1, rho1, &root, pbase, w, &mut out);
+                pbase += w as u64;
+                black_box(out[0])
+            });
+            let mut obase = 0u64;
+            let t_panel_opt = b.bench(&format!("decode/panel/optimal/w{w}/k1000"), || {
+                pw.optimal_panel(&g1, r1, &opts, None, &root, obase, w, &mut out);
+                obase += w as u64;
+                black_box(out[0])
+            });
+            println!(
+                "bench decode/panel/per-trial-speedup/w{w}/k1000         one-step {:.2}x, \
+                 optimal {:.2}x vs scalar",
+                t_scalar_one.as_secs_f64() / (t_panel_one.as_secs_f64() / w as f64),
+                t_scalar_opt.as_secs_f64() / (t_panel_opt.as_secs_f64() / w as f64)
+            );
+            for (label, t) in [
+                (format!("panel/one-step/w{w}"), t_panel_one),
+                (format!("panel/optimal/w{w}"), t_panel_opt),
+            ] {
+                records.push(DecodeBenchRecord {
+                    label,
+                    scheme: "BGC".to_string(),
+                    k: k1,
+                    n: k1,
+                    s: s1,
+                    r: r1,
+                    seed: seed1,
+                    // Per-trial cost: one closure call runs W trials.
+                    ns_per_decode: t.as_nanos() as f64 / w as f64,
+                    decodes_per_sec: w as f64 / t.as_secs_f64(),
+                });
+            }
+        }
+
+        // The queued CSR-backed-LSQR question, settled by measurement:
+        // Aᵀx per LSQR iteration as (a) the CSC column walk over the
+        // implicit selection — what `lsqr_selected_panel` does — vs (b)
+        // converting the materialized A to CSR once per trial and using
+        // the row-major transpose kernel. (b) pays O(nnz) conversion
+        // up front; at LSQR's typical iteration counts on these
+        // instances the walk wins, and the decision is recorded here so
+        // future PRs can revisit it against real numbers.
+        let xr: Vec<f64> = (0..k1).map(|i| ((i * 37 + 11) % 97) as f64 / 97.0).collect();
+        let mut yt = vec![0.0f64; r1];
+        let t_tm_csc = b.bench("linalg/t-matvec/csc-selected/k1000", || {
+            gradcode::linalg::t_matvec_selected_into(&g1, &idx1, &xr, &mut yt);
+            black_box(yt[0])
+        });
+        let mut a_csr_buf = CsrMatrix::empty();
+        let t_tm_csr = b.bench("linalg/t-matvec/csr-per-trial-convert/k1000", || {
+            a1.to_csr_into(&mut a_csr_buf);
+            a_csr_buf.t_matvec_into(&xr, &mut yt);
+            black_box(yt[0])
+        });
+        println!(
+            "bench linalg/t-matvec/decision/k1000                   {} (csc walk {} vs \
+             csr-convert {})",
+            if t_tm_csc <= t_tm_csr { "keep CSC column walk" } else { "CSR conversion wins" },
+            gradcode::util::bench::fmt_duration(t_tm_csc),
+            gradcode::util::bench::fmt_duration(t_tm_csr)
+        );
+        for (label, t) in [
+            ("panel/t-matvec/csc-selected", t_tm_csc),
+            ("panel/t-matvec/csr-per-trial-convert", t_tm_csr),
+        ] {
+            records.push(DecodeBenchRecord {
+                label: label.to_string(),
+                scheme: "BGC".to_string(),
+                k: k1,
+                n: k1,
+                s: s1,
+                r: r1,
+                seed: seed1,
+                ns_per_decode: t.as_nanos() as f64,
+                decodes_per_sec: 1.0 / t.as_secs_f64(),
+            });
+        }
     }
 
     common::write_decode_bench_json(&records);

@@ -4,14 +4,21 @@
 //! policy, select the survivor matrix A = G[:, non-stragglers], decode
 //! (one-step or optimal), and aggregate ĝ = Σ_j x_j · msg_j — the
 //! estimate of the gradient sum Σ_i f_i.
+//!
+//! The round runs on the `DecodeWorkspace` spine: straggler draws land
+//! in the workspace's `StragglerScratch` (`LatencyStragglers` is pinned
+//! draw-for-draw identical to the historical `sample_round`), A is
+//! materialized into the workspace submatrix, and both decode arms
+//! solve into workspace buffers — so a training loop's steady state
+//! allocates only what the returned [`Round`] itself owns.
 
 use anyhow::{bail, Result};
 
 use super::config::DecoderKind;
 use super::worker::Message;
-use crate::decode::{Decoder, OneStepDecoder, OptimalDecoder};
-use crate::linalg::CscMatrix;
-use crate::stragglers::{sample_round, DeadlinePolicy, LatencyModel};
+use crate::decode::{DecodeWorkspace, OneStepDecoder};
+use crate::linalg::{CscMatrix, LsqrOptions};
+use crate::stragglers::{DeadlinePolicy, LatencyModel, LatencyStragglers};
 use crate::util::Rng;
 
 /// Outcome of one coordination round.
@@ -35,6 +42,13 @@ pub struct Round {
 /// `messages` must hold all n workers' outputs (indexed by worker id);
 /// stragglers are decided here by the latency model, mirroring a real
 /// deployment where every worker computes but only the fast ones count.
+///
+/// `ws` supplies every scratch buffer (straggler draw, selected A,
+/// LSQR); build it once per training run and reuse it across rounds.
+/// Outputs are bit-identical to the historical allocating path
+/// (`sample_round` + `select_columns` + `Decoder::weights` +
+/// `decode_error`) — the straggler draw consumes the same RNG stream,
+/// and both decode arms replicate the same arithmetic.
 pub fn gather_and_decode(
     g: &CscMatrix,
     s: usize,
@@ -43,25 +57,27 @@ pub fn gather_and_decode(
     latency: &LatencyModel,
     deadline: &DeadlinePolicy,
     rng: &mut Rng,
+    ws: &mut DecodeWorkspace,
 ) -> Result<Round> {
     let n = g.cols;
     if messages.len() != n {
         bail!("expected {n} messages, got {}", messages.len());
     }
-    let sample = sample_round(latency, deadline, n, rng);
-    let survivors = sample.non_stragglers;
-    if survivors.is_empty() {
+    let model = LatencyStragglers { model: *latency, policy: *deadline };
+    ws.select_submatrix_with(g, &model, rng);
+    if ws.last_non_stragglers().is_empty() {
         bail!("all workers straggled: raise the deadline");
     }
-    let a = g.select_columns(&survivors);
     let k = g.rows;
-    let r = survivors.len();
+    let r = ws.last_non_stragglers().len();
 
     let weights = match decoder {
-        DecoderKind::OneStep => OneStepDecoder::canonical(k, r, s).weights(&a),
-        DecoderKind::Optimal => OptimalDecoder::new().weights(&a),
+        // One-step weights are the constant ρ·1_r — no solve needed.
+        DecoderKind::OneStep => vec![OneStepDecoder::canonical(k, r, s).rho; r],
+        DecoderKind::Optimal => ws.optimal_weights_selected(&LsqrOptions::default()).to_vec(),
     };
-    let decode_err = crate::decode::decode_error(&a, &weights);
+    let decode_err = ws.decode_error_selected(&weights);
+    let survivors = ws.last_non_stragglers();
 
     // ĝ = Σ_j x_j msg_j over survivors.
     let dim = messages[survivors[0]].payload.len();
@@ -85,8 +101,8 @@ pub fn gather_and_decode(
     let mean_loss = if tasks > 0 { loss_sum / tasks as f64 } else { 0.0 };
 
     Ok(Round {
-        non_stragglers: survivors,
-        gather_time: sample.gather_time,
+        non_stragglers: survivors.to_vec(),
+        gather_time: ws.last_gather_time(),
         weights,
         decode_err,
         estimate,
@@ -130,6 +146,7 @@ mod tests {
             &LatencyModel::ShiftedExp { base: 0.0, rate: 1.0 },
             &DeadlinePolicy::FastestR(k),
             &mut Rng::new(1),
+            &mut DecodeWorkspace::new(),
         )
         .unwrap();
         assert!(round.decode_err < 1e-12, "err {}", round.decode_err);
@@ -156,6 +173,7 @@ mod tests {
             &LatencyModel::ShiftedExp { base: 0.0, rate: 1.0 },
             &DeadlinePolicy::FastestR(15),
             &mut Rng::new(3),
+            &mut DecodeWorkspace::new(),
         )
         .unwrap();
         let f_norm_sq: f64 = (1..=k).map(|i| (i * i) as f64).sum();
@@ -184,6 +202,7 @@ mod tests {
             &LatencyModel::Pareto { scale: 0.1, shape: 1.5 },
             &DeadlinePolicy::FastestR(6),
             &mut Rng::new(5),
+            &mut DecodeWorkspace::new(),
         )
         .unwrap();
         assert_eq!(round.non_stragglers.len(), 6);
@@ -203,7 +222,55 @@ mod tests {
             &LatencyModel::ShiftedExp { base: 0.0, rate: 1.0 },
             &DeadlinePolicy::FastestR(5),
             &mut Rng::new(7),
+            &mut DecodeWorkspace::new(),
         )
         .is_err());
+    }
+
+    #[test]
+    fn workspace_round_matches_historical_allocating_path_bitwise() {
+        // The pre-port sequence: sample_round -> select_columns ->
+        // Decoder::weights -> decode_error. The workspace round must
+        // reproduce every output bit for bit, RNG stream included.
+        use crate::decode::{Decoder, OptimalDecoder};
+        use crate::stragglers::sample_round;
+        let (k, s) = (18usize, 3usize);
+        let g = FractionalRepetitionCode::new(k, k, s).assignment(&mut Rng::new(8));
+        let msgs = synthetic_messages(&g);
+        let latency = LatencyModel::ShiftedExp { base: 0.01, rate: 5.0 };
+        let deadline = DeadlinePolicy::FastestR(13);
+        for decoder in [DecoderKind::OneStep, DecoderKind::Optimal] {
+            let mut rng_ref = Rng::new(9);
+            let sample = sample_round(&latency, &deadline, g.cols, &mut rng_ref);
+            let a = g.select_columns(&sample.non_stragglers);
+            let r = sample.non_stragglers.len();
+            let weights_ref = match decoder {
+                DecoderKind::OneStep => OneStepDecoder::canonical(k, r, s).weights(&a),
+                DecoderKind::Optimal => OptimalDecoder::new().weights(&a),
+            };
+            let err_ref = crate::decode::decode_error(&a, &weights_ref);
+
+            let mut rng = Rng::new(9);
+            let round = gather_and_decode(
+                &g,
+                s,
+                &msgs,
+                decoder,
+                &latency,
+                &deadline,
+                &mut rng,
+                &mut DecodeWorkspace::new(),
+            )
+            .unwrap();
+            assert_eq!(round.non_stragglers, sample.non_stragglers, "{decoder:?}");
+            assert_eq!(round.gather_time.to_bits(), sample.gather_time.to_bits());
+            assert_eq!(round.weights.len(), weights_ref.len(), "{decoder:?}");
+            for (w, w_ref) in round.weights.iter().zip(&weights_ref) {
+                assert_eq!(w.to_bits(), w_ref.to_bits(), "{decoder:?}");
+            }
+            assert_eq!(round.decode_err.to_bits(), err_ref.to_bits(), "{decoder:?}");
+            // The two rngs must have consumed the same stream.
+            assert_eq!(rng.f64().to_bits(), rng_ref.f64().to_bits());
+        }
     }
 }

@@ -9,11 +9,13 @@
 pub mod algorithmic;
 pub mod onestep;
 pub mod optimal;
+pub mod panel;
 pub mod streaming;
 pub mod workspace;
 
 pub use algorithmic::{algorithmic_error_curve, AlgorithmicDecoder, StepSize};
 pub use onestep::OneStepDecoder;
+pub use panel::{PanelWorkspace, DEFAULT_PANEL_WIDTH};
 pub use streaming::StreamingOneStep;
 pub use optimal::OptimalDecoder;
 pub use workspace::{err1_from_supports, err1_streamed_counts, DecodeWorkspace};

@@ -1,0 +1,371 @@
+//! Panel decode workspace: W concurrent Monte-Carlo trials per kernel
+//! call against one shared G.
+//!
+//! [`PanelWorkspace`] is the panel-width analogue of
+//! [`DecodeWorkspace`](super::DecodeWorkspace): it owns the k×W
+//! coverage-count panel, the flattened per-lane survivor selections,
+//! and the per-lane LSQR states, and drives the multi-RHS kernels in
+//! [`crate::linalg::panel`]. The Monte-Carlo layer hands it a panel of
+//! trial indices (`base..base + lanes`) and an output slice; each lane
+//! produces exactly the value the scalar workspace would have produced
+//! for that trial index.
+//!
+//! # RNG-fork-per-lane contract
+//!
+//! Lane `l` of a panel starting at global trial index `base` uses the
+//! RNG stream `root.fork(base + l)` — the *same* stream the scalar
+//! Monte-Carlo loop forks for trial `base + l`. Batching therefore
+//! changes neither the draws nor their per-trial order, and the ragged
+//! tail (a final panel with fewer than W lanes) is just a narrower
+//! panel over the same streams. This is what makes panel results
+//! bit-identical to the scalar path at any width, including W = 1.
+//!
+//! # Which arms actually batch
+//!
+//! Only **fixed-G** trials share work across lanes (one G, W survivor
+//! draws): the one-step arm batches the coverage/err₁ pass over the CSR
+//! mirror, and the optimal arm runs the lockstep multi-RHS LSQR.
+//! **Redraw** arms draw a fresh G per trial, so there is nothing to
+//! share — those methods loop lanes through an internal scalar
+//! [`DecodeWorkspace`](super::DecodeWorkspace), trivially preserving
+//! parity while keeping the panel API uniform for callers. Non-boolean
+//! G (weighted assignments) likewise falls back to the per-lane scalar
+//! path, because the panel coverage kernel's exactness argument needs
+//! integer-valued data.
+
+use super::workspace::DecodeWorkspace;
+use crate::codes::GradientCode;
+use crate::linalg::{
+    panel, CscMatrix, CsrMatrix, LsqrOptions, LsqrSummary, PanelLsqr,
+};
+use crate::stragglers::StragglerModel;
+use crate::util::Rng;
+
+/// Default panel width for the simulation sweeps. Chosen from
+/// `benches/decode_throughput.rs` (`panel/*` records): wide enough to
+/// amortize each pass over G across lanes, small enough that the k×W
+/// coverage panel stays cache-resident at the paper's k = n = 1000
+/// acceptance instance.
+pub const DEFAULT_PANEL_WIDTH: usize = 8;
+
+/// Reusable state for a panel of up to `width` concurrent trials
+/// against a shared G. All buffers grow to the largest instance seen
+/// and are reused; steady-state panel loops perform no heap allocation
+/// (pinned in `tests/zero_alloc.rs`).
+#[derive(Debug)]
+pub struct PanelWorkspace {
+    width: usize,
+    /// Scalar workspace for redraw arms and non-boolean fallbacks.
+    scalar: DecodeWorkspace,
+    /// Row-major mirror of the standing G (explicit, like the scalar
+    /// workspace's streamed paths).
+    g_csr: CsrMatrix,
+    mirror_boolean: bool,
+    /// Coverage-count panel, lane-contiguous per column:
+    /// `counts[j * lanes + l]` = column j's multiplicity in lane l.
+    counts: Vec<f64>,
+    /// W-lane coverage scratch for the err₁ row sweep.
+    cov: Vec<f64>,
+    /// Flattened per-lane survivor selections + CSR-style lane bounds.
+    sel_flat: Vec<usize>,
+    sel_ptr: Vec<usize>,
+    sel_tmp: Vec<usize>,
+    pool: Vec<usize>,
+    /// Lanes with a non-degenerate selection (the ones LSQR solves).
+    active: Vec<usize>,
+    lsqr: PanelLsqr,
+    summaries: Vec<LsqrSummary>,
+    ones: Vec<f64>,
+}
+
+impl PanelWorkspace {
+    pub fn new(width: usize) -> Self {
+        assert!(width >= 1, "panel width must be >= 1");
+        PanelWorkspace {
+            width,
+            scalar: DecodeWorkspace::new(),
+            g_csr: CsrMatrix::empty(),
+            mirror_boolean: false,
+            counts: Vec::new(),
+            cov: Vec::new(),
+            sel_flat: Vec::new(),
+            sel_ptr: Vec::new(),
+            sel_tmp: Vec::new(),
+            pool: Vec::new(),
+            active: Vec::new(),
+            lsqr: PanelLsqr::new(),
+            summaries: Vec::new(),
+            ones: Vec::new(),
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Cache the CSR mirror of the standing G (required before
+    /// [`PanelWorkspace::onestep_panel`]). Also records whether G is
+    /// boolean — the panel coverage kernel's exactness precondition.
+    pub fn mirror_csr(&mut self, g: &CscMatrix) {
+        g.to_csr_into(&mut self.g_csr);
+        self.mirror_boolean = g.is_boolean();
+    }
+
+    /// The scalar fallback workspace (exposed for warm-up in
+    /// allocation-count tests).
+    pub fn scalar_ws(&mut self) -> &mut DecodeWorkspace {
+        &mut self.scalar
+    }
+
+    /// Draw each lane's survivor selection: lane `l` forks
+    /// `root.fork(base + l)` and samples r of n columns — exactly the
+    /// scalar Monte-Carlo trial's draw for trial index `base + l`.
+    fn draw_selections(&mut self, n: usize, r: usize, root: &Rng, base: u64, lanes: usize) {
+        self.sel_flat.clear();
+        self.sel_ptr.clear();
+        self.sel_ptr.push(0);
+        for lane in 0..lanes {
+            let mut rng = root.fork(base + lane as u64);
+            rng.sample_indices_into(n, r, &mut self.pool, &mut self.sel_tmp);
+            self.sel_flat.extend_from_slice(&self.sel_tmp);
+            self.sel_ptr.push(self.sel_flat.len());
+        }
+    }
+
+    /// Panel of fixed-G one-step trials: W survivor draws, one pass
+    /// over the CSR mirror for all W err₁ values. Bit-identical per
+    /// lane to [`DecodeWorkspace::onestep_trial`] on the same trial
+    /// indices. Requires [`PanelWorkspace::mirror_csr`] first; falls
+    /// back to the per-lane scalar path when G is not boolean.
+    pub fn onestep_panel(
+        &mut self,
+        g: &CscMatrix,
+        r: usize,
+        rho: f64,
+        root: &Rng,
+        base: u64,
+        lanes: usize,
+        out: &mut [f64],
+    ) {
+        assert!(lanes >= 1 && lanes <= self.width, "lanes {lanes} outside 1..={}", self.width);
+        assert_eq!(out.len(), lanes);
+        assert!(
+            self.g_csr.rows == g.rows && self.g_csr.cols == g.cols,
+            "call mirror_csr(g) before the panel one-step path"
+        );
+        if !self.mirror_boolean {
+            // Weighted G: the integer-exactness argument doesn't apply;
+            // take the scalar path per lane (same results, one at a time).
+            for lane in 0..lanes {
+                let mut rng = root.fork(base + lane as u64);
+                out[lane] = self.scalar.onestep_trial(g, r, rho, &mut rng);
+            }
+            return;
+        }
+        self.draw_selections(g.cols, r, root, base, lanes);
+        self.counts.clear();
+        self.counts.resize(g.cols * lanes, 0.0);
+        for lane in 0..lanes {
+            for &j in &self.sel_flat[self.sel_ptr[lane]..self.sel_ptr[lane + 1]] {
+                self.counts[j * lanes + lane] += 1.0;
+            }
+        }
+        self.cov.clear();
+        self.cov.resize(lanes, 0.0);
+        panel::err1_panel_counts(&self.g_csr, &self.counts, lanes, rho, &mut self.cov, out);
+    }
+
+    /// Panel of fixed-G optimal trials: W survivor draws, one lockstep
+    /// multi-RHS LSQR over the shared G (A is never materialized).
+    /// Bit-identical per lane to [`DecodeWorkspace::optimal_trial`] on
+    /// the same trial indices, including the `err = k` convention for
+    /// degenerate (empty / zero-nnz) selections and the
+    /// `warm = Some(rho)` warm start.
+    #[allow(clippy::too_many_arguments)] // mirrors the scalar trial surface + panel addressing
+    pub fn optimal_panel(
+        &mut self,
+        g: &CscMatrix,
+        r: usize,
+        opts: &LsqrOptions,
+        warm: Option<f64>,
+        root: &Rng,
+        base: u64,
+        lanes: usize,
+        out: &mut [f64],
+    ) {
+        assert!(lanes >= 1 && lanes <= self.width, "lanes {lanes} outside 1..={}", self.width);
+        assert_eq!(out.len(), lanes);
+        self.draw_selections(g.cols, r, root, base, lanes);
+        self.active.clear();
+        for lane in 0..lanes {
+            let sel = &self.sel_flat[self.sel_ptr[lane]..self.sel_ptr[lane + 1]];
+            if sel.is_empty() || panel::nnz_selected(g, sel) == 0 {
+                // Same convention as the scalar optimal_err_on_selected:
+                // nothing to solve, the residual is the whole 1_k.
+                out[lane] = g.rows as f64;
+            } else {
+                self.active.push(lane);
+            }
+        }
+        if self.active.is_empty() {
+            return;
+        }
+        self.ones.clear();
+        self.ones.resize(g.rows, 1.0);
+        self.summaries.clear();
+        self.summaries.resize(
+            lanes,
+            LsqrSummary { residual_norm: 0.0, iterations: 0, converged: false },
+        );
+        panel::lsqr_selected_panel(
+            g,
+            &self.sel_flat,
+            &self.sel_ptr,
+            &self.active,
+            &self.ones,
+            opts,
+            warm,
+            &mut self.lsqr,
+            &mut self.summaries,
+        );
+        for &lane in &self.active {
+            let s = &self.summaries[lane];
+            out[lane] = s.residual_norm * s.residual_norm;
+        }
+    }
+
+    /// Panel of one-step redraw trials (fresh G per lane — nothing to
+    /// share, so lanes run through the scalar workspace one by one,
+    /// each on its own forked stream). Bit-identical per lane to
+    /// [`DecodeWorkspace::onestep_redraw_trial_with`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn onestep_redraw_panel_with(
+        &mut self,
+        code: &dyn GradientCode,
+        model: &dyn StragglerModel,
+        rho: f64,
+        root: &Rng,
+        base: u64,
+        lanes: usize,
+        out: &mut [f64],
+    ) {
+        assert!(lanes >= 1 && lanes <= self.width);
+        assert_eq!(out.len(), lanes);
+        for lane in 0..lanes {
+            let mut rng = root.fork(base + lane as u64);
+            out[lane] = self.scalar.onestep_redraw_trial_with(code, model, rho, &mut rng);
+        }
+    }
+
+    /// Panel of optimal redraw trials (per-lane scalar loop, see
+    /// [`PanelWorkspace::onestep_redraw_panel_with`]). Bit-identical
+    /// per lane to [`DecodeWorkspace::optimal_redraw_trial_with`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn optimal_redraw_panel_with(
+        &mut self,
+        code: &dyn GradientCode,
+        model: &dyn StragglerModel,
+        opts: &LsqrOptions,
+        warm: Option<f64>,
+        root: &Rng,
+        base: u64,
+        lanes: usize,
+        out: &mut [f64],
+    ) {
+        assert!(lanes >= 1 && lanes <= self.width);
+        assert_eq!(out.len(), lanes);
+        for lane in 0..lanes {
+            let mut rng = root.fork(base + lane as u64);
+            out[lane] = self.scalar.optimal_redraw_trial_with(code, model, opts, warm, &mut rng);
+        }
+    }
+
+    /// Panel of column-normalized one-step redraw trials (per-lane
+    /// scalar loop). Bit-identical per lane to
+    /// [`DecodeWorkspace::onestep_normalized_redraw_trial_with`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn onestep_normalized_redraw_panel_with(
+        &mut self,
+        code: &dyn GradientCode,
+        model: &dyn StragglerModel,
+        rho: f64,
+        root: &Rng,
+        base: u64,
+        lanes: usize,
+        out: &mut [f64],
+    ) {
+        assert!(lanes >= 1 && lanes <= self.width);
+        assert_eq!(out.len(), lanes);
+        for lane in 0..lanes {
+            let mut rng = root.fork(base + lane as u64);
+            out[lane] =
+                self.scalar.onestep_normalized_redraw_trial_with(code, model, rho, &mut rng);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::Scheme;
+
+    #[test]
+    fn panel_onestep_lane_values_match_scalar_trials() {
+        let k = 40;
+        let code = Scheme::Bgc.build(k, k, 4);
+        let g = code.assignment(&mut Rng::new(9));
+        let (r, rho) = (30, k as f64 / (30.0 * 4.0));
+        let root = Rng::new(11);
+        let mut pws = PanelWorkspace::new(4);
+        pws.mirror_csr(&g);
+        let mut out = vec![0.0; 4];
+        pws.onestep_panel(&g, r, rho, &root, 12, 4, &mut out);
+        let mut sws = DecodeWorkspace::new();
+        for lane in 0..4 {
+            let mut rng = root.fork(12 + lane as u64);
+            let scalar = sws.onestep_trial(&g, r, rho, &mut rng);
+            assert_eq!(out[lane].to_bits(), scalar.to_bits(), "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn panel_optimal_lane_values_match_scalar_trials() {
+        let k = 30;
+        let code = Scheme::Bgc.build(k, k, 3);
+        let g = code.assignment(&mut Rng::new(5));
+        let r = 22;
+        let opts = LsqrOptions::default();
+        let root = Rng::new(13);
+        for warm in [None, Some(k as f64 / (r as f64 * 3.0))] {
+            let mut pws = PanelWorkspace::new(3);
+            let mut out = vec![0.0; 3];
+            pws.optimal_panel(&g, r, &opts, warm, &root, 7, 3, &mut out);
+            let mut sws = DecodeWorkspace::new();
+            for lane in 0..3 {
+                let mut rng = root.fork(7 + lane as u64);
+                let scalar = sws.optimal_trial(&g, r, &opts, warm, &mut rng);
+                assert_eq!(out[lane].to_bits(), scalar.to_bits(), "warm {warm:?} lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_boolean_g_falls_back_to_scalar_path() {
+        use crate::codes::normalized::normalize_columns;
+        let k = 20;
+        let code = Scheme::Frc.build(k, k, 4);
+        let g = normalize_columns(&code.assignment(&mut Rng::new(3)));
+        assert!(!g.is_boolean());
+        let root = Rng::new(4);
+        let mut pws = PanelWorkspace::new(4);
+        pws.mirror_csr(&g);
+        let mut out = vec![0.0; 4];
+        pws.onestep_panel(&g, 15, 0.4, &root, 0, 4, &mut out);
+        let mut sws = DecodeWorkspace::new();
+        for lane in 0..4 {
+            let mut rng = root.fork(lane as u64);
+            let scalar = sws.onestep_trial(&g, 15, 0.4, &mut rng);
+            assert_eq!(out[lane].to_bits(), scalar.to_bits(), "lane {lane}");
+        }
+    }
+}

@@ -1,4 +1,5 @@
-//! Streaming one-step decoder — the paper's memory argument made real.
+//! Streaming one-step decoder — the paper's §2.2 memory argument as a
+//! reference implementation, **not** a simulation hot path.
 //!
 //! §2.2: "we can apply the one-step decoding method even if we do not
 //! have direct access to A ... avoid putting the entire matrix A into
@@ -7,10 +8,23 @@
 //! coverage counts and payload sum — O(k + d) memory independent of r.
 //! It also exposes an *early-stop* signal: once every task is covered
 //! at its expected multiplicity, waiting longer cannot reduce err_1.
+//!
+//! # Status: superseded on the hot paths
+//!
+//! Nothing in the simulation or coordinator stack routes through this
+//! type. The Monte-Carlo sweeps use [`super::DecodeWorkspace`] (fused /
+//! streamed err₁ over the cached CSR mirror) and [`super::panel`]'s
+//! multi-RHS batched kernels; the e2e coordinator decodes on the same
+//! workspace spine. `StreamingOneStep` is kept as the faithful
+//! ingest-one-column-at-a-time rendition of §2.2 — the O(k + d) memory
+//! bound and the `fully_covered` early-stop signal are properties of
+//! *that* protocol, worth stating executable — and its equivalence to
+//! the batch decoder is pinned by the tests below. Reach for it only to
+//! model a master that cannot hold A; everything else should use the
+//! workspace layer.
 
-use crate::linalg::CscMatrix;
-
-/// Incremental one-step decode state.
+/// Incremental one-step decode state (reference implementation; see
+/// the module docs for why the hot paths don't use it).
 #[derive(Clone, Debug)]
 pub struct StreamingOneStep {
     k: usize,
@@ -71,12 +85,6 @@ impl StreamingOneStep {
         let target = 1.0 / self.rho;
         self.coverage.iter().all(|&c| c >= target - 1e-9)
     }
-}
-
-/// Reference check: streaming over all of A must equal the batch path.
-pub fn batch_equivalent(a: &CscMatrix, rho: f64) -> f64 {
-    let sums = a.row_sums();
-    sums.iter().map(|&v| (rho * v - 1.0).powi(2)).sum()
 }
 
 #[cfg(test)]

@@ -536,6 +536,36 @@ impl DecodeWorkspace {
         g.select_columns_into(&self.stragglers.idx, &mut self.a);
         &self.a
     }
+
+    /// Optimal decoding weights for the currently selected submatrix
+    /// (the A left behind by the most recent `select_submatrix_with` /
+    /// `*_trial*` call): a cold-start LSQR solve of `min_x ||A x − 1||`
+    /// into workspace buffers, returning the workspace-owned solution.
+    /// Bit-identical to `OptimalDecoder::weights` on the same A
+    /// (`lsqr_with` with `x0 = None` is pinned bit-identical to `lsqr`,
+    /// solution vector included) — the e2e coordinator's decode path.
+    pub fn optimal_weights_selected(&mut self, opts: &LsqrOptions) -> &[f64] {
+        self.ones.clear();
+        self.ones.resize(self.a.rows, 1.0);
+        lsqr_with(&self.a, &self.ones, opts, None, &mut self.lsqr);
+        self.lsqr.x()
+    }
+
+    /// `||A x − 1_k||²` for the currently selected submatrix, into
+    /// workspace buffers. Replicates `decode::decode_error`'s exact
+    /// sequence (matvec, per-element `− 1.0`, then the *dense* scalar
+    /// `norm2_sq`), so the value is bit-identical to the allocating
+    /// path the coordinator used to call.
+    pub fn decode_error_selected(&mut self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.a.cols, "weight vector length mismatch");
+        self.row_acc.clear();
+        self.row_acc.resize(self.a.rows, 0.0);
+        self.a.matvec_into(x, &mut self.row_acc);
+        for v in self.row_acc.iter_mut() {
+            *v -= 1.0;
+        }
+        crate::linalg::norm2_sq(&self.row_acc)
+    }
 }
 
 /// One-step error on the **column-normalized** selected submatrix:

@@ -27,17 +27,33 @@
 //! (exact on integer-valued data — every boolean assignment matrix —
 //! and within rounding otherwise). Both `lsqr` and `lsqr_with` use the
 //! same blocked kernels, so their mutual bit-parity is preserved.
+//!
+//! # Panel layer
+//!
+//! [`panel`] lifts the hot decode kernels to **multi-RHS panels**: W
+//! concurrent trials against one shared G, so each pass over G's
+//! nonzeros serves W lanes instead of one. Selected-submatrix matvecs
+//! avoid materializing A entirely, and the lockstep panel LSQR runs W
+//! solves per sweep — all while keeping every lane bit-identical to the
+//! scalar path (see the module docs for the exactness argument). The
+//! optional `simd` cargo feature swaps the lane-inner loop for SSE2
+//! intrinsics on x86_64 (bit-identical; portable loop is the default).
 
 pub mod blocked;
 pub mod cholesky;
 pub mod csr;
 pub mod dense;
 pub mod lsqr;
+pub mod panel;
 pub mod power_iter;
 pub mod sparse;
 
 pub use csr::CsrMatrix;
 pub use dense::{axpy, dot, norm2, norm2_sq, scale, DenseMatrix};
 pub use lsqr::{lsqr, lsqr_with, LsqrOptions, LsqrResult, LsqrSummary, LsqrWorkspace};
+pub use panel::{
+    err1_panel_counts, lsqr_selected_panel, matvec_selected_into, nnz_selected,
+    t_matvec_selected_into, PanelLsqr,
+};
 pub use power_iter::{regular_graph_lambda, spectral_norm};
 pub use sparse::CscMatrix;

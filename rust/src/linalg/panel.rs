@@ -1,0 +1,515 @@
+//! Multi-RHS **panel** kernels: W concurrent decode trials against one
+//! shared G, one pass over G's nonzeros serving all W lanes.
+//!
+//! Every Monte-Carlo point used to solve its trials one at a time, so
+//! each kernel invocation streamed G's index/value arrays from memory
+//! for a single trial — the classic bandwidth-bound shape. The panel
+//! kernels here batch W trials ("lanes") into one call: the coverage
+//! pass reads each CSR row once and feeds W coverage accumulators, and
+//! the panel LSQR runs W solves in iteration lockstep over the same G,
+//! so G's columns stay cache-resident across lanes.
+//!
+//! # Bit-parity contract
+//!
+//! Per-lane results are **bit-identical to the scalar path at any W**
+//! (pinned by `tests/decode_parity.rs`). Two mechanisms make that hold:
+//!
+//! * **Selected-submatrix kernels.** `select_columns_into` copies G's
+//!   column slices verbatim, so a matvec on A = G[:, sel] is *the same
+//!   arithmetic* as walking G's columns in `sel` order.
+//!   [`matvec_selected_into`] / [`t_matvec_selected_into`] do exactly
+//!   that — A is never materialized, and every addition happens in the
+//!   order the materialized kernels would use.
+//! * **Integer-exact coverage.** On boolean G (every code the paper
+//!   constructs) the per-row coverage counts are integers below 2⁵³,
+//!   and integer-valued f64 sums are exact under *any* accumulation
+//!   order (the [`blocked`] convention note). The panel coverage kernel
+//!   may therefore interleave lanes freely; the per-lane err₁ reduction
+//!   then sweeps rows 0..k sequentially — the same final reduction
+//!   order as `err1_from_supports` / `err1_streamed_counts`.
+//!
+//! The panel LSQR needs no such argument: each lane executes the
+//! `lsqr_with` sequence operation for operation (same blocked kernels,
+//! same Givens updates, same stopping rules), lanes merely take their
+//! iterations in lockstep so G is reused across lanes per iteration.
+//!
+//! # SIMD lanes (`--features simd`)
+//!
+//! The lane-inner loop of the coverage kernel is the one place true
+//! SIMD applies cleanly: lanes are independent accumulators, so packing
+//! two lanes into an SSE2 `__m128d` performs the *same* IEEE mul/add
+//! per element as the scalar loop — bit-identical by construction. The
+//! portable loop is the default; the intrinsics path is gated behind
+//! the `simd` cargo feature **and** `target_arch = "x86_64"` (SSE2 is
+//! baseline there), so non-x86 targets fall back gracefully.
+
+use super::blocked;
+use super::csr::CsrMatrix;
+use super::lsqr::{LsqrOptions, LsqrSummary};
+use super::sparse::CscMatrix;
+
+/// nnz of the implicit selection A = G[:, sel] (multiplicity counts).
+pub fn nnz_selected(g: &CscMatrix, sel: &[usize]) -> usize {
+    sel.iter().map(|&j| g.col_nnz(j)).sum()
+}
+
+/// y = A x for the implicit selection A = G[:, sel], without
+/// materializing A. Bit-identical to `g.select_columns(sel)` followed
+/// by `matvec_into`: A's column jj is G's column sel\[jj\] verbatim, so
+/// the scatter sequence is the same addition for addition.
+pub fn matvec_selected_into(g: &CscMatrix, sel: &[usize], x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), sel.len());
+    assert_eq!(y.len(), g.rows);
+    y.fill(0.0);
+    for (jj, &j) in sel.iter().enumerate() {
+        assert!(j < g.cols, "column {j} out of bounds ({})", g.cols);
+        let xj = x[jj];
+        if xj == 0.0 {
+            continue;
+        }
+        for p in g.col_ptr[j]..g.col_ptr[j + 1] {
+            y[g.row_idx[p]] += g.vals[p] * xj;
+        }
+    }
+}
+
+/// y = Aᵀ x for the implicit selection A = G[:, sel]. Bit-identical to
+/// the materialized `t_matvec_into` (per-column sequential accumulator,
+/// same visit order).
+pub fn t_matvec_selected_into(g: &CscMatrix, sel: &[usize], x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), g.rows);
+    assert_eq!(y.len(), sel.len());
+    for (jj, &j) in sel.iter().enumerate() {
+        assert!(j < g.cols, "column {j} out of bounds ({})", g.cols);
+        let mut acc = 0.0;
+        for p in g.col_ptr[j]..g.col_ptr[j + 1] {
+            acc += g.vals[p] * x[g.row_idx[p]];
+        }
+        y[jj] = acc;
+    }
+}
+
+/// `cov[l] += v * counts[l]` for every lane — the panel coverage
+/// kernel's inner loop. With `--features simd` on x86_64 this packs
+/// lane pairs into SSE2 registers; per-element IEEE mul/add on
+/// independent lanes is bit-identical to the scalar loop, so the two
+/// paths are interchangeable.
+#[inline]
+fn axpy_lanes(cov: &mut [f64], v: f64, counts: &[f64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        use std::arch::x86_64::{_mm_add_pd, _mm_loadu_pd, _mm_mul_pd, _mm_set1_pd, _mm_storeu_pd};
+        let pairs = cov.len() / 2;
+        // SAFETY: SSE2 is baseline on x86_64; all loads/stores stay in
+        // bounds (2*q + 1 < cov.len() and counts.len() >= cov.len()).
+        unsafe {
+            let vv = _mm_set1_pd(v);
+            for q in 0..pairs {
+                let c = _mm_loadu_pd(counts.as_ptr().add(2 * q));
+                let acc = _mm_loadu_pd(cov.as_ptr().add(2 * q));
+                _mm_storeu_pd(cov.as_mut_ptr().add(2 * q), _mm_add_pd(acc, _mm_mul_pd(vv, c)));
+            }
+        }
+        for l in 2 * pairs..cov.len() {
+            cov[l] += v * counts[l];
+        }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    for l in 0..cov.len() {
+        cov[l] += v * counts[l];
+    }
+}
+
+/// Panel one-step error: W trials' err₁ values in one pass over G.
+///
+/// `counts` is the k-trial coverage-count panel, lane-contiguous per
+/// column: `counts[j * width + l]` is column j's selection multiplicity
+/// in lane l (0 for that lane's stragglers). Each CSR row of G is read
+/// **once** and accumulates into all W lane coverages; `errs[l]`
+/// receives `Σ_i (ρ·cov_{i,l} − 1)²` with the row sweep in ascending
+/// order — the same final reduction as the scalar paths.
+///
+/// Exactness requires integer-valued data (boolean G × integer counts);
+/// callers with weighted G should use the per-lane scalar path instead.
+pub fn err1_panel_counts(
+    g: &CsrMatrix,
+    counts: &[f64],
+    width: usize,
+    rho: f64,
+    cov: &mut [f64],
+    errs: &mut [f64],
+) {
+    assert!(width > 0, "panel width must be >= 1");
+    assert_eq!(counts.len(), g.cols * width, "counts panel shape mismatch");
+    assert_eq!(cov.len(), width);
+    assert_eq!(errs.len(), width);
+    errs.fill(0.0);
+    for i in 0..g.rows {
+        cov.fill(0.0);
+        for p in g.row_ptr[i]..g.row_ptr[i + 1] {
+            let base = g.col_idx[p] * width;
+            axpy_lanes(cov, g.vals[p], &counts[base..base + width]);
+        }
+        for l in 0..width {
+            errs[l] += (rho * cov[l] - 1.0).powi(2);
+        }
+    }
+}
+
+/// One lane's LSQR state — the per-solve vectors and scalars of
+/// `lsqr_with`, owned per lane so lanes can advance in lockstep.
+#[derive(Clone, Debug, Default)]
+struct LsqrLane {
+    u: Vec<f64>,
+    v: Vec<f64>,
+    w: Vec<f64>,
+    x: Vec<f64>,
+    av: Vec<f64>,
+    atu: Vec<f64>,
+    alpha: f64,
+    beta: f64,
+    phi_bar: f64,
+    rho_bar: f64,
+    b_norm: f64,
+    a_norm_sq: f64,
+    max_iter: usize,
+    iterations: usize,
+    done: bool,
+    converged: bool,
+    residual_norm: f64,
+}
+
+/// Reusable scratch for [`lsqr_selected_panel`]: one [`LsqrLane`] per
+/// panel lane plus the shared warm-start buffer. Buffers grow to the
+/// largest instance seen and are reused, so a steady-state panel loop
+/// performs no heap allocation.
+#[derive(Clone, Debug, Default)]
+pub struct PanelLsqr {
+    lanes: Vec<LsqrLane>,
+    x0: Vec<f64>,
+}
+
+impl PanelLsqr {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The solution vector lane `l` converged to in the most recent
+    /// [`lsqr_selected_panel`] call (exposed for parity tests).
+    pub fn lane_x(&self, l: usize) -> &[f64] {
+        &self.lanes[l].x
+    }
+}
+
+/// Multi-RHS LSQR over implicit selections of one shared G: for every
+/// lane `l` in `active`, solve `min_x ||G[:, sel_l] x − b||` where
+/// `sel_l = sel_flat[sel_ptr[l]..sel_ptr[l+1]]`, writing the per-lane
+/// [`LsqrSummary`] into `out[l]`.
+///
+/// Lanes advance in **iteration lockstep** — every live lane takes
+/// iteration t before any lane takes t+1 — so each LSQR iteration's two
+/// passes over G serve all W lanes while G's arrays are hot. Converged
+/// lanes freeze. Per lane, the arithmetic is the `lsqr_with` sequence
+/// operation for operation (same blocked kernels, same Givens rotation,
+/// same Paige-Saunders stopping rules, same true-residual recompute),
+/// with the selected-submatrix kernels standing in for the materialized
+/// matvecs — so each lane's summary and solution are bit-identical to a
+/// scalar solve on the materialized A.
+///
+/// `warm = Some(rho)` warm-starts every lane at ρ·1 (the one-step
+/// weights), matching the scalar `optimal_err(.., Some(rho))` path.
+/// Degenerate lanes (empty selection / zero nnz) must be filtered out
+/// of `active` by the caller, which owns the `err = k` convention.
+#[allow(clippy::too_many_arguments)] // mirrors the scalar lsqr_with surface
+pub fn lsqr_selected_panel(
+    g: &CscMatrix,
+    sel_flat: &[usize],
+    sel_ptr: &[usize],
+    active: &[usize],
+    b: &[f64],
+    opts: &LsqrOptions,
+    warm: Option<f64>,
+    ws: &mut PanelLsqr,
+    out: &mut [LsqrSummary],
+) {
+    let m = g.rows;
+    assert_eq!(b.len(), m);
+    assert!(sel_ptr.len() >= 2 || active.is_empty(), "sel_ptr must cover every lane");
+    let num_lanes = sel_ptr.len().saturating_sub(1);
+    if ws.lanes.len() < num_lanes {
+        ws.lanes.resize_with(num_lanes, LsqrLane::default);
+    }
+    let PanelLsqr { lanes, x0 } = ws;
+
+    // ---- per-lane initialization (the lsqr_with prologue, verbatim)
+    for &l in active {
+        let sel = &sel_flat[sel_ptr[l]..sel_ptr[l + 1]];
+        let n = sel.len();
+        let lane = &mut lanes[l];
+        lane.max_iter = if opts.max_iter == 0 { 4 * m.max(n) } else { opts.max_iter };
+        lane.iterations = 0;
+        lane.done = false;
+        lane.converged = false;
+
+        lane.x.clear();
+        lane.x.resize(n, 0.0);
+        lane.v.clear();
+        lane.v.resize(n, 0.0);
+        lane.w.clear();
+        lane.w.resize(n, 0.0);
+        lane.av.clear();
+        lane.av.resize(m, 0.0);
+        lane.atu.clear();
+        lane.atu.resize(n, 0.0);
+
+        lane.u.clear();
+        lane.u.extend_from_slice(b);
+        if let Some(rho) = warm {
+            x0.clear();
+            x0.resize(n, rho);
+            matvec_selected_into(g, sel, x0, &mut lane.av);
+            for i in 0..m {
+                lane.u[i] -= lane.av[i];
+            }
+        }
+
+        lane.beta = blocked::norm2(&lane.u);
+        if lane.beta == 0.0 {
+            // rhs already reproduced exactly: x = x0.
+            if let Some(rho) = warm {
+                for xi in lane.x.iter_mut() {
+                    *xi = rho;
+                }
+            }
+            lane.residual_norm = 0.0;
+            lane.converged = true;
+            lane.done = true;
+            continue;
+        }
+        for ui in lane.u.iter_mut() {
+            *ui /= lane.beta;
+        }
+        t_matvec_selected_into(g, sel, &lane.u, &mut lane.v);
+        lane.alpha = blocked::norm2(&lane.v);
+        if lane.alpha == 0.0 {
+            // rhs orthogonal to range(A): dx = 0 is optimal.
+            if let Some(rho) = warm {
+                for xi in lane.x.iter_mut() {
+                    *xi = rho;
+                }
+            }
+            lane.residual_norm = lane.beta;
+            lane.converged = true;
+            lane.done = true;
+            continue;
+        }
+        for vi in lane.v.iter_mut() {
+            *vi /= lane.alpha;
+        }
+        lane.w.copy_from_slice(&lane.v);
+        lane.phi_bar = lane.beta;
+        lane.rho_bar = lane.alpha;
+        lane.b_norm = lane.beta;
+        lane.a_norm_sq = 0.0;
+    }
+
+    // ---- lockstep iterations: every live lane takes step t together.
+    loop {
+        let mut any_live = false;
+        for &l in active {
+            let sel = &sel_flat[sel_ptr[l]..sel_ptr[l + 1]];
+            let lane = &mut lanes[l];
+            if lane.done {
+                continue;
+            }
+            any_live = true;
+            lane.iterations += 1;
+
+            // u = A v - alpha u; beta = ||u||
+            matvec_selected_into(g, sel, &lane.v, &mut lane.av);
+            blocked::scaled_sub(&lane.av, lane.alpha, &mut lane.u);
+            lane.beta = blocked::norm2(&lane.u);
+            if lane.beta > 0.0 {
+                for ui in lane.u.iter_mut() {
+                    *ui /= lane.beta;
+                }
+            }
+
+            // v = A^T u - beta v; alpha = ||v||
+            t_matvec_selected_into(g, sel, &lane.u, &mut lane.atu);
+            blocked::scaled_sub(&lane.atu, lane.beta, &mut lane.v);
+            lane.alpha = blocked::norm2(&lane.v);
+            if lane.alpha > 0.0 {
+                for vi in lane.v.iter_mut() {
+                    *vi /= lane.alpha;
+                }
+            }
+
+            lane.a_norm_sq += lane.alpha * lane.alpha + lane.beta * lane.beta;
+
+            // Givens rotation to eliminate beta from the bidiagonal system.
+            let rho_g = (lane.rho_bar * lane.rho_bar + lane.beta * lane.beta).sqrt();
+            let c = lane.rho_bar / rho_g;
+            let s = lane.beta / rho_g;
+            let theta = s * lane.alpha;
+            lane.rho_bar = -c * lane.alpha;
+            let phi = c * lane.phi_bar;
+            lane.phi_bar *= s;
+
+            // Update x and the search direction w.
+            let t1 = phi / rho_g;
+            let t2 = -theta / rho_g;
+            blocked::update_x_w(&mut lane.x, &mut lane.w, &lane.v, t1, t2);
+
+            // Stopping rules (Paige-Saunders criteria 1 & 2).
+            let res = lane.phi_bar;
+            let a_norm = lane.a_norm_sq.sqrt();
+            let atr = lane.phi_bar * lane.alpha * c.abs();
+            if res <= opts.btol * lane.b_norm + opts.atol * a_norm * blocked::norm2(&lane.x) {
+                lane.converged = true;
+            } else if a_norm > 0.0 && res > 0.0 && atr / (a_norm * res) <= opts.atol {
+                lane.converged = true;
+            } else if lane.alpha == 0.0 {
+                lane.converged = true;
+            }
+            if lane.converged || lane.iterations == lane.max_iter {
+                // Fold the warm start back in, then recompute the true
+                // residual (phi_bar is an estimate) without allocating.
+                if let Some(rho) = warm {
+                    for xi in lane.x.iter_mut() {
+                        *xi += rho;
+                    }
+                }
+                matvec_selected_into(g, sel, &lane.x, &mut lane.av);
+                lane.residual_norm = blocked::diff_norm2_sq(b, &lane.av).sqrt();
+                lane.done = true;
+            }
+        }
+        if !any_live {
+            break;
+        }
+    }
+
+    for &l in active {
+        let lane = &lanes[l];
+        out[l] = LsqrSummary {
+            residual_norm: lane.residual_norm,
+            iterations: lane.iterations,
+            converged: lane.converged,
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{lsqr_with, LsqrWorkspace};
+    use crate::util::Rng;
+
+    fn random_boolean_g(k: usize, n: usize, p: f64, seed: u64) -> CscMatrix {
+        let mut rng = Rng::new(seed);
+        let cols: Vec<Vec<usize>> = (0..n)
+            .map(|_| (0..k).filter(|_| rng.f64() < p).collect())
+            .collect();
+        CscMatrix::from_supports(k, cols)
+    }
+
+    #[test]
+    fn selected_matvecs_bit_identical_to_materialized() {
+        let g = random_boolean_g(25, 30, 0.2, 1);
+        let mut rng = Rng::new(2);
+        for trial in 0..15 {
+            let r = 1 + rng.usize(30);
+            let sel = rng.sample_indices(30, r);
+            let a = g.select_columns(&sel);
+            let x: Vec<f64> = (0..r).map(|_| rng.normal()).collect();
+            let mut y_sel = vec![0.0; 25];
+            matvec_selected_into(&g, &sel, &x, &mut y_sel);
+            let y_mat = a.matvec(&x);
+            for (s, m) in y_sel.iter().zip(&y_mat) {
+                assert_eq!(s.to_bits(), m.to_bits(), "matvec trial {trial}");
+            }
+            let xr: Vec<f64> = (0..25).map(|_| rng.normal()).collect();
+            let mut yt_sel = vec![0.0; r];
+            t_matvec_selected_into(&g, &sel, &xr, &mut yt_sel);
+            let yt_mat = a.t_matvec(&xr);
+            for (s, m) in yt_sel.iter().zip(&yt_mat) {
+                assert_eq!(s.to_bits(), m.to_bits(), "t_matvec trial {trial}");
+            }
+            assert_eq!(nnz_selected(&g, &sel), a.nnz());
+        }
+    }
+
+    #[test]
+    fn panel_err1_matches_scalar_per_lane_all_widths() {
+        use crate::decode::err1_from_supports;
+        let g = random_boolean_g(30, 40, 0.15, 3);
+        let csr = g.to_csr();
+        let rho = 0.37;
+        let mut row_acc = Vec::new();
+        let mut rng = Rng::new(4);
+        for width in [1usize, 2, 3, 4, 8] {
+            let sels: Vec<Vec<usize>> =
+                (0..width).map(|_| rng.sample_indices(40, 25)).collect();
+            let mut counts = vec![0.0; 40 * width];
+            for (l, sel) in sels.iter().enumerate() {
+                for &j in sel {
+                    counts[j * width + l] += 1.0;
+                }
+            }
+            let mut cov = vec![0.0; width];
+            let mut errs = vec![0.0; width];
+            err1_panel_counts(&csr, &counts, width, rho, &mut cov, &mut errs);
+            for (l, sel) in sels.iter().enumerate() {
+                let scalar = err1_from_supports(&g, sel, rho, &mut row_acc);
+                assert_eq!(errs[l].to_bits(), scalar.to_bits(), "width {width} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_lsqr_bit_identical_to_scalar_on_materialized_a() {
+        let g = random_boolean_g(24, 30, 0.2, 5);
+        let b = vec![1.0; 24];
+        let opts = LsqrOptions::default();
+        let mut rng = Rng::new(6);
+        for warm in [None, Some(0.3)] {
+            let width = 4usize;
+            let sels: Vec<Vec<usize>> =
+                (0..width).map(|_| rng.sample_indices(30, 18)).collect();
+            let mut sel_flat = Vec::new();
+            let mut sel_ptr = vec![0usize];
+            for sel in &sels {
+                sel_flat.extend_from_slice(sel);
+                sel_ptr.push(sel_flat.len());
+            }
+            let active: Vec<usize> = (0..width).collect();
+            let mut pls = PanelLsqr::new();
+            let mut out =
+                vec![LsqrSummary { residual_norm: 0.0, iterations: 0, converged: false }; width];
+            lsqr_selected_panel(&g, &sel_flat, &sel_ptr, &active, &b, &opts, warm, &mut pls, &mut out);
+
+            let mut ws = LsqrWorkspace::new();
+            for (l, sel) in sels.iter().enumerate() {
+                let a = g.select_columns(sel);
+                let x0_buf: Vec<f64>;
+                let x0: Option<&[f64]> = match warm {
+                    Some(rho) => {
+                        x0_buf = vec![rho; a.cols];
+                        Some(&x0_buf)
+                    }
+                    None => None,
+                };
+                let reference = lsqr_with(&a, &b, &opts, x0, &mut ws);
+                assert_eq!(
+                    out[l].residual_norm.to_bits(),
+                    reference.residual_norm.to_bits(),
+                    "warm {warm:?} lane {l}"
+                );
+                assert_eq!(out[l].iterations, reference.iterations, "lane {l}");
+                assert_eq!(out[l].converged, reference.converged, "lane {l}");
+                assert_eq!(pls.lane_x(l), ws.x(), "warm {warm:?} lane {l}");
+            }
+        }
+    }
+}

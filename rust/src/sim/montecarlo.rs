@@ -35,9 +35,17 @@
 //! function of the figure point, not of trial history — as is a
 //! per-point resolved straggler model, which the sweeps build *outside*
 //! the trial closure and share immutably across threads.)
+//!
+//! [`MonteCarlo::mean_partial_panel_ws`] is the panel-batched variant:
+//! the trial range is cut into panels of W lanes and each worker
+//! produces a whole panel per closure call (multi-RHS decode kernels
+//! amortize every pass over G across the W lanes; the final panel is a
+//! ragged tail). Lane `l` of the panel at `base` still draws from
+//! `root.fork(base + l)`, so batching is unobservable in the results —
+//! the partial is bit-identical to the scalar path at every width.
 
 use super::shard::{ExactSum, Partial, Shard};
-use crate::util::parallel::parallel_map_with;
+use crate::util::parallel::{parallel_map_panels_with, parallel_map_with};
 use crate::util::Rng;
 
 /// Configuration shared by all simulation entry points.
@@ -88,6 +96,38 @@ impl MonteCarlo {
     /// [`MonteCarlo::mean_partial_ws`] without a workspace.
     pub fn mean_partial(&self, shard: Shard, f: impl Fn(&mut Rng) -> f64 + Sync) -> Partial {
         self.mean_partial_ws(shard, || (), |_, rng| f(rng))
+    }
+
+    /// Panel-batched [`MonteCarlo::mean_partial_ws`]: the trial range is
+    /// cut into panels of `width` lanes and `f(ws, root, base, lanes,
+    /// out)` produces a whole panel per call (`base` is the *global*
+    /// index of the panel's first trial; the final panel may be ragged,
+    /// `lanes < width`). `f` must give lane `l` the value the scalar
+    /// trial closure would produce for trial `base + l` from the stream
+    /// `root.fork(base + l)` — the [`crate::decode::PanelWorkspace`]
+    /// methods uphold exactly that — and then the returned partial is
+    /// bit-identical to the scalar entry point's at every width, thread
+    /// count, and shard layout: trial values land position-addressed in
+    /// global trial order, and the exact sum folds them in that order.
+    pub fn mean_partial_panel_ws<W>(
+        &self,
+        shard: Shard,
+        width: usize,
+        init: impl Fn() -> W + Sync,
+        f: impl Fn(&mut W, &Rng, u64, usize, &mut [f64]) + Sync,
+    ) -> Partial {
+        let root = Rng::new(self.seed);
+        let range = shard.range(self.trials);
+        let lo = range.start;
+        let vals = parallel_map_panels_with(range.len(), width, self.threads, init, |ws, p, out| {
+            let base = (lo + p * width) as u64;
+            f(ws, &root, base, out.len(), out);
+        });
+        let mut sum = ExactSum::new();
+        for &v in &vals {
+            sum.add(v);
+        }
+        Partial::Mean { count: vals.len() as u64, sum }
     }
 
     /// Partial first and second moments (count, exact Σx, exact Σx²)
@@ -323,6 +363,57 @@ mod tests {
             for (a, b) in c_merged.iter().zip(&c_whole) {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn panel_partial_matches_scalar_partial_bits() {
+        // A panel closure whose lanes reproduce the scalar trial from
+        // the same forked stream must yield the same Partial bits for
+        // every width / thread count / shard layout — including ragged
+        // tails (401 is prime to every width below).
+        let mc = MonteCarlo { trials: 401, seed: 17, threads: 4 };
+        let trial = |rng: &mut Rng| rng.f64() * 2.0 - 0.7;
+        let reference = mc.mean_partial_ws(Shard::full(), || (), |_, rng| trial(rng));
+        for width in [1usize, 3, 4, 8] {
+            for threads in [1usize, 5] {
+                let mc_t = MonteCarlo { threads, ..mc };
+                let panel = mc_t.mean_partial_panel_ws(
+                    Shard::full(),
+                    width,
+                    || (),
+                    |_, root, base, lanes, out| {
+                        for (l, slot) in out.iter_mut().enumerate().take(lanes) {
+                            let mut rng = root.fork(base + l as u64);
+                            *slot = trial(&mut rng);
+                        }
+                    },
+                );
+                assert_eq!(panel.mc_trials(), Some(401));
+                assert_eq!(
+                    panel.value().to_bits(),
+                    reference.value().to_bits(),
+                    "width {width} threads {threads}"
+                );
+            }
+        }
+        // Sharded panels merge to the same bits too.
+        for num_shards in [2usize, 3] {
+            let mut merged: Option<Partial> = None;
+            for sid in 0..num_shards {
+                let shard = Shard::new(sid, num_shards).unwrap();
+                let part = mc.mean_partial_panel_ws(shard, 4, || (), |_, root, base, lanes, out| {
+                    for (l, slot) in out.iter_mut().enumerate().take(lanes) {
+                        let mut rng = root.fork(base + l as u64);
+                        *slot = trial(&mut rng);
+                    }
+                });
+                match merged.as_mut() {
+                    None => merged = Some(part),
+                    Some(m) => m.merge(&part).unwrap(),
+                }
+            }
+            assert_eq!(merged.unwrap().value().to_bits(), reference.value().to_bits());
         }
     }
 

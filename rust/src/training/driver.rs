@@ -17,6 +17,7 @@ use crate::coordinator::{
     gather_and_decode, specs_from_assignment, worker::compute_message, worker::ModelKind,
     CoordinatorConfig, Message, RoundMetrics, TrainingHistory,
 };
+use crate::decode::DecodeWorkspace;
 use crate::runtime::Backend;
 use crate::util::{parallel::parallel_map, Rng};
 
@@ -77,6 +78,9 @@ pub fn train(backend: &Backend, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let g = code.assignment(&mut rng);
     let specs = specs_from_assignment(&g);
 
+    // One decode workspace for the whole run: every round's straggler
+    // draw, survivor submatrix, and decode solve reuse these buffers.
+    let mut decode_ws = DecodeWorkspace::new();
     let mut history = TrainingHistory::default();
     for step in 0..cfg.steps {
         let t0 = Instant::now();
@@ -100,6 +104,7 @@ pub fn train(backend: &Backend, cfg: &TrainConfig) -> Result<TrainOutcome> {
             &cfg.coordinator.latency,
             &cfg.coordinator.deadline,
             &mut rng,
+            &mut decode_ws,
         )?;
 
         // SGD update: estimate ≈ Σ_i ∇f_i, so the mean gradient is /k.

@@ -113,6 +113,83 @@ where
     }
 }
 
+/// Panel-granularity [`parallel_map_with`]: `n` trial values produced
+/// in panels of `width`, so each worker amortizes its kernel calls over
+/// W trials (the multi-RHS decode path). Workers claim whole panels off
+/// the atomic counter and `f(&mut ws, panel, out)` writes the panel's
+/// values directly into its disjoint output window
+/// `out[panel*width .. min((panel+1)*width, n)]` — the final panel may
+/// be ragged (fewer than `width` slots). Output is position-addressed,
+/// so as long as panel `p` is a pure function of its trial indices the
+/// results are bit-identical for every thread count — and, when `f`'s
+/// lanes reproduce the scalar per-trial computation, for every width.
+pub fn parallel_map_panels_with<W, I, F>(
+    n: usize,
+    width: usize,
+    threads: usize,
+    init: I,
+    f: F,
+) -> Vec<f64>
+where
+    I: Fn() -> W + Sync,
+    F: Fn(&mut W, usize, &mut [f64]) + Sync,
+{
+    assert!(width >= 1, "panel width must be >= 1");
+    let panels = n.div_ceil(width);
+    let threads = threads.max(1).min(panels.max(1));
+    let mut out = vec![0.0f64; n];
+    if threads == 1 || panels <= 1 {
+        let mut ws = init();
+        for p in 0..panels {
+            let lo = p * width;
+            let hi = ((p + 1) * width).min(n);
+            f(&mut ws, p, &mut out[lo..hi]);
+        }
+        return out;
+    }
+
+    // Same chunked-counter scheme as parallel_map_with, but the unit of
+    // work (and of output ownership) is a whole panel.
+    let chunk = (panels / (threads * 8)).max(1);
+
+    /// Shareable base pointer to the output; panel windows are disjoint
+    /// because the counter hands each panel to exactly one worker.
+    struct OutPtr(*mut f64);
+    unsafe impl Sync for OutPtr {}
+
+    let out_ptr = OutPtr(out.as_mut_ptr());
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let out_ptr = &out_ptr;
+            let next = &next;
+            let init = &init;
+            let f = &f;
+            scope.spawn(move || {
+                let mut ws = init();
+                loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= panels {
+                        break;
+                    }
+                    let end = (start + chunk).min(panels);
+                    for p in start..end {
+                        let lo = p * width;
+                        let hi = ((p + 1) * width).min(n);
+                        // SAFETY: panel p was claimed by exactly this
+                        // worker; panel windows partition 0..n, and the
+                        // scope join synchronizes writes with the reader.
+                        let window =
+                            unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo), hi - lo) };
+                        f(&mut ws, p, window);
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
 /// Parallel mean of `n` trial values (the Monte-Carlo primitive).
 pub fn parallel_mean<F>(n: usize, threads: usize, f: F) -> f64
 where
@@ -202,6 +279,43 @@ mod tests {
         let c = run(16);
         assert_eq!(a, b);
         assert_eq!(b, c);
+    }
+
+    #[test]
+    fn panel_map_matches_per_item_map_for_all_widths_and_threads() {
+        // f's lanes reproduce the scalar per-trial value, so the output
+        // must be identical for every (width, threads) combination —
+        // including ragged tails (137 % width != 0 for most widths).
+        let per_item = |i: usize| (i as f64).sqrt() + i as f64;
+        let reference: Vec<f64> = (0..137).map(per_item).collect();
+        for width in [1usize, 3, 4, 8, 200] {
+            for threads in [1usize, 4, 13] {
+                let got = parallel_map_panels_with(137, width, threads, || (), |_, p, out| {
+                    for (l, slot) in out.iter_mut().enumerate() {
+                        *slot = per_item(p * width + l);
+                    }
+                });
+                assert_eq!(got, reference, "width {width} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_map_passes_ragged_tail_window() {
+        // 10 trials, width 4 -> panels of 4, 4, 2.
+        let sizes = parallel_map_panels_with(10, 4, 1, || (), |_, _p, out| {
+            let w = out.len();
+            for slot in out.iter_mut() {
+                *slot = w as f64;
+            }
+        });
+        assert_eq!(sizes, vec![4.0, 4.0, 4.0, 4.0, 4.0, 4.0, 4.0, 4.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn panel_map_empty_input() {
+        let v = parallel_map_panels_with(0, 8, 4, || (), |_, _, _| panic!("no panels"));
+        assert!(v.is_empty());
     }
 
     #[test]

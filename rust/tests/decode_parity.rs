@@ -364,3 +364,201 @@ fn uniform_scenario_csv_matches_pre_refactor_fig3_and_thm6() {
     }
     assert_eq!(spine_csv, legacy, "thm6 CSV drifted from the pre-refactor bytes");
 }
+
+/// Panel decode (PR 6): the W-trials-per-call kernels must reproduce
+/// every scalar trial bit for bit, at every width, including ragged
+/// tails (trials = 11 is not divisible by 3, 4, or 8) — and the RNG
+/// fork contract is lockstep: lane `l` of the panel at `base` consumes
+/// exactly the stream `root.fork(base + l)`, the scalar trial's stream
+/// for trial index `base + l`.
+#[test]
+fn panel_trials_bit_identical_to_scalar_for_all_widths() {
+    use gradcode::decode::PanelWorkspace;
+    let (k, s, trials) = (50usize, 5usize, 11usize);
+    let g = Scheme::Bgc.build(k, k, s).assignment(&mut Rng::new(90));
+    let opts = LsqrOptions::default();
+    let root = Rng::new(91);
+    let mut ws = DecodeWorkspace::new();
+    for &delta in &[0.2, 0.5] {
+        let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
+        let rho = k as f64 / (r as f64 * s as f64);
+
+        // Scalar references: trial j runs on root.fork(j).
+        let mut ref_one = Vec::new();
+        let mut ref_cold = Vec::new();
+        let mut ref_warm = Vec::new();
+        for j in 0..trials {
+            let mut rng = root.fork(j as u64);
+            ref_one.push(ws.onestep_trial(&g, r, rho, &mut rng));
+            let mut rng = root.fork(j as u64);
+            ref_cold.push(ws.optimal_trial(&g, r, &opts, None, &mut rng));
+            let mut rng = root.fork(j as u64);
+            ref_warm.push(ws.optimal_trial(&g, r, &opts, Some(rho), &mut rng));
+        }
+
+        for &w in &[1usize, 3, 4, 8] {
+            let mut pw = PanelWorkspace::new(w);
+            pw.mirror_csr(&g);
+            let mut got_one = vec![0.0f64; trials];
+            let mut got_cold = vec![0.0f64; trials];
+            let mut got_warm = vec![0.0f64; trials];
+            let mut p = 0;
+            while p < trials {
+                let lanes = w.min(trials - p);
+                pw.onestep_panel(&g, r, rho, &root, p as u64, lanes, &mut got_one[p..p + lanes]);
+                pw.optimal_panel(
+                    &g, r, &opts, None, &root, p as u64, lanes,
+                    &mut got_cold[p..p + lanes],
+                );
+                pw.optimal_panel(
+                    &g, r, &opts, Some(rho), &root, p as u64, lanes,
+                    &mut got_warm[p..p + lanes],
+                );
+                p += lanes;
+            }
+            for j in 0..trials {
+                assert_eq!(
+                    got_one[j].to_bits(),
+                    ref_one[j].to_bits(),
+                    "one-step w={w} j={j} delta={delta}"
+                );
+                assert_eq!(
+                    got_cold[j].to_bits(),
+                    ref_cold[j].to_bits(),
+                    "optimal cold w={w} j={j} delta={delta}"
+                );
+                assert_eq!(
+                    got_warm[j].to_bits(),
+                    ref_warm[j].to_bits(),
+                    "optimal warm w={w} j={j} delta={delta}"
+                );
+            }
+        }
+    }
+}
+
+/// Panel decode at the Monte-Carlo level: `mean_partial_panel_ws` over
+/// `PanelWorkspace` kernels yields Partials bit-identical to the scalar
+/// `mean_partial_ws` pipeline on real decode workloads, for every panel
+/// width and across thread counts (101 trials is prime to every width,
+/// so the last panel is always ragged).
+#[test]
+fn panel_monte_carlo_partials_match_scalar_on_decode_workloads() {
+    use gradcode::decode::PanelWorkspace;
+    use gradcode::sim::Shard;
+    let (k, s, r) = (30usize, 4usize, 22usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let opts = LsqrOptions::default();
+    let g = Scheme::Bgc.build(k, k, s).assignment(&mut Rng::new(95));
+
+    let mc = MonteCarlo { trials: 101, seed: 96, threads: 4 };
+    let ref_one = mc.mean_partial_ws(Shard::full(), DecodeWorkspace::new, |ws, rng| {
+        ws.onestep_trial(&g, r, rho, rng)
+    });
+    let ref_opt = mc.mean_partial_ws(Shard::full(), DecodeWorkspace::new, |ws, rng| {
+        ws.optimal_trial(&g, r, &opts, Some(rho), rng)
+    });
+
+    for width in [3usize, 4, 8] {
+        for threads in [1usize, 4] {
+            let mc_t = MonteCarlo { threads, ..mc };
+            let init = || {
+                let mut pw = PanelWorkspace::new(width);
+                pw.mirror_csr(&g);
+                pw
+            };
+            let pan_one = mc_t.mean_partial_panel_ws(
+                Shard::full(),
+                width,
+                init,
+                |pw, root, base, lanes, out| pw.onestep_panel(&g, r, rho, root, base, lanes, out),
+            );
+            assert_eq!(
+                pan_one.value().to_bits(),
+                ref_one.value().to_bits(),
+                "one-step width {width} threads {threads}"
+            );
+            let pan_opt = mc_t.mean_partial_panel_ws(
+                Shard::full(),
+                width,
+                init,
+                |pw, root, base, lanes, out| {
+                    pw.optimal_panel(&g, r, &opts, Some(rho), root, base, lanes, out)
+                },
+            );
+            assert_eq!(
+                pan_opt.value().to_bits(),
+                ref_opt.value().to_bits(),
+                "optimal width {width} threads {threads}"
+            );
+        }
+    }
+}
+
+/// The redraw panel arms (fresh G per lane, so lanes delegate to the
+/// scalar workspace) stay bit-identical per lane to the scalar redraw
+/// trials under the scenario spine's straggler models.
+#[test]
+fn panel_redraw_arms_match_scalar_redraw_trials() {
+    use gradcode::decode::PanelWorkspace;
+    use gradcode::stragglers::UniformStragglers;
+    let (k, s, r) = (20usize, 5usize, 15usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let rho_norm = k as f64 / r as f64;
+    let opts = LsqrOptions::default();
+    let code = Scheme::Frc.build(k, k, s);
+    let model = UniformStragglers::new(0.25);
+    let root = Rng::new(97);
+    let trials = 10usize;
+
+    let mut ws = DecodeWorkspace::new();
+    let mut ref_one = Vec::new();
+    let mut ref_opt = Vec::new();
+    let mut ref_norm = Vec::new();
+    for j in 0..trials {
+        let mut rng = root.fork(j as u64);
+        ref_one.push(ws.onestep_redraw_trial_with(code.as_ref(), &model, rho, &mut rng));
+        let mut rng = root.fork(j as u64);
+        ref_opt.push(ws.optimal_redraw_trial_with(
+            code.as_ref(),
+            &model,
+            &opts,
+            Some(rho),
+            &mut rng,
+        ));
+        let mut rng = root.fork(j as u64);
+        ref_norm.push(ws.onestep_normalized_redraw_trial_with(
+            code.as_ref(),
+            &model,
+            rho_norm,
+            &mut rng,
+        ));
+    }
+
+    let w = 4usize;
+    let mut pw = PanelWorkspace::new(w);
+    let mut got = vec![0.0f64; w];
+    let mut p = 0;
+    while p < trials {
+        let lanes = w.min(trials - p);
+        pw.onestep_redraw_panel_with(
+            code.as_ref(), &model, rho, &root, p as u64, lanes, &mut got[..lanes],
+        );
+        for l in 0..lanes {
+            assert_eq!(got[l].to_bits(), ref_one[p + l].to_bits(), "one-step trial {}", p + l);
+        }
+        pw.optimal_redraw_panel_with(
+            code.as_ref(), &model, &opts, Some(rho), &root, p as u64, lanes, &mut got[..lanes],
+        );
+        for l in 0..lanes {
+            assert_eq!(got[l].to_bits(), ref_opt[p + l].to_bits(), "optimal trial {}", p + l);
+        }
+        pw.onestep_normalized_redraw_panel_with(
+            code.as_ref(), &model, rho_norm, &root, p as u64, lanes, &mut got[..lanes],
+        );
+        for l in 0..lanes {
+            assert_eq!(got[l].to_bits(), ref_norm[p + l].to_bits(), "normalized trial {}", p + l);
+        }
+        p += lanes;
+    }
+}

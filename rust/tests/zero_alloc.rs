@@ -305,6 +305,61 @@ fn scenario_spine_trial_loops_are_allocation_free_after_warmup() {
     }
 }
 
+/// The panel decode loop (PR 6): after warmup has grown the count
+/// panel, the flattened selection buffers, and every LSQR lane's
+/// iteration vectors, a steady-state loop of W-trials-per-call panel
+/// kernels — one-step coverage and both optimal (cold / warm-started)
+/// multi-RHS solves — performs zero heap allocations.
+#[test]
+fn panel_trial_loop_is_allocation_free_after_warmup() {
+    use gradcode::decode::PanelWorkspace;
+    let (k, s, r) = (200usize, 10usize, 150usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    // FRC: boolean with fixed per-column degree, so the panel's count
+    // and selection capacities are constant across draws.
+    let g = Scheme::Frc.build(k, k, s).assignment(&mut Rng::new(51));
+    let w = 4usize;
+    let mut pw = PanelWorkspace::new(w);
+    pw.mirror_csr(&g);
+    let opts = LsqrOptions::default();
+    let root = Rng::new(52);
+    let mut out = vec![0.0f64; w];
+
+    let mut warmup_sum = 0.0;
+    for p in 0..3u64 {
+        pw.onestep_panel(&g, r, rho, &root, p * w as u64, w, &mut out);
+        warmup_sum += out[0];
+        pw.optimal_panel(&g, r, &opts, None, &root, p * w as u64, w, &mut out);
+        warmup_sum += out[0];
+        pw.optimal_panel(&g, r, &opts, Some(rho), &root, p * w as u64, w, &mut out);
+        warmup_sum += out[0];
+    }
+    assert!(warmup_sum.is_finite());
+
+    let before = allocations_on_this_thread();
+    let mut sum = 0.0;
+    for p in 3..53u64 {
+        pw.onestep_panel(&g, r, rho, &root, p * w as u64, w, &mut out);
+        sum += out[0];
+        pw.optimal_panel(&g, r, &opts, None, &root, p * w as u64, w, &mut out);
+        sum += out[1];
+        pw.optimal_panel(&g, r, &opts, Some(rho), &root, p * w as u64, w, &mut out);
+        sum += out[2];
+    }
+    let allocs = allocations_on_this_thread() - before;
+    assert!(sum.is_finite() && sum >= 0.0);
+    assert_eq!(allocs, 0, "steady-state panel loop allocated {allocs} times");
+
+    // A ragged tail call (fewer lanes than width) reuses the same
+    // buffers — the count panel is lane-strided, so narrower calls
+    // only ever shrink the working set.
+    let before = allocations_on_this_thread();
+    pw.onestep_panel(&g, r, rho, &root, 500, 3, &mut out[..3]);
+    pw.optimal_panel(&g, r, &opts, Some(rho), &root, 500, 3, &mut out[..3]);
+    let allocs = allocations_on_this_thread() - before;
+    assert_eq!(allocs, 0, "ragged panel tail allocated {allocs} times");
+}
+
 /// Control: the counter itself works — the legacy allocating path must
 /// register allocations (otherwise the two tests above prove nothing).
 #[test]
