@@ -15,6 +15,9 @@
 //!   scalar trial loop at k = n = 1000 for W ∈ {4, 8, 16}, plus the
 //!   Aᵀx CSC-column-walk vs per-trial-CSR-conversion measurement that
 //!   settles the queued CSR-backed-LSQR question.
+//! * **serve/load** (PR 7): sustained decode rounds/sec through the
+//!   `repro serve` daemon (sockets, framing, memoized assignments, hot
+//!   workspaces) under a closed-loop `repro load` at k = n = 1000.
 //!
 //! Emits `BENCH_decode.json` (fixed seeds) for cross-PR trajectories.
 //!
@@ -599,6 +602,78 @@ fn main() {
                 decodes_per_sec: 1.0 / t.as_secs_f64(),
             });
         }
+    }
+
+    // --------------- serve/load: sustained daemon decode throughput
+    // The PR 7 acceptance record: rounds/sec the `repro serve` daemon
+    // sustains end-to-end (framing, request parsing, memoized standing
+    // assignment, hot per-connection workspaces) under a closed-loop
+    // `repro load` at the k = n = 1000 headline instance. Measured
+    // in-process through `gradcode::load::run_load` against a spawned
+    // daemon binary so the number includes the real socket path.
+    {
+        use gradcode::coordinator::DecoderKind;
+        use gradcode::load::{run_load, Arrival, LoadConfig};
+        use gradcode::serve::{frame, DecodeRequest};
+        use std::io::BufRead;
+
+        let (requests, rounds) = if common::quick() { (8usize, 16usize) } else { (32, 64) };
+        let mut child = std::process::Command::new(bin)
+            .args(["serve", "--addr", "127.0.0.1:0"])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawning repro serve");
+        let stdout = child.stdout.take().expect("daemon stdout");
+        let line = std::io::BufReader::new(stdout)
+            .lines()
+            .next()
+            .expect("daemon readiness line")
+            .expect("utf-8 readiness line");
+        let addr = line.strip_prefix("listening on ").expect("readiness line").to_string();
+
+        let cfg = LoadConfig {
+            addr: addr.clone(),
+            requests,
+            concurrency: 4,
+            arrival: Arrival::Closed,
+            seed: 2017,
+            slo_p99_ms: 0.0,
+            template: DecodeRequest {
+                scheme: Scheme::Frc,
+                k: k1,
+                n: k1,
+                s: s1,
+                r: r1,
+                rounds,
+                decoder: DecoderKind::OneStep,
+                assign_seed: 2017,
+                seed: 0,
+            },
+        };
+        let outcome = run_load(&cfg).expect("load run against the daemon");
+        println!(
+            "bench serve/load/one-step-sustained/k1000              {:.0} rounds/s \
+             ({} requests x {} rounds over {:.3} s)",
+            outcome.rounds_per_sec, requests, rounds, outcome.elapsed
+        );
+        records.push(DecodeBenchRecord {
+            label: "serve/load/one-step-sustained".to_string(),
+            scheme: "FRC".to_string(),
+            k: k1,
+            n: k1,
+            s: s1,
+            r: r1,
+            seed: 2017,
+            ns_per_decode: 1e9 * outcome.elapsed / outcome.total_rounds as f64,
+            decodes_per_sec: outcome.rounds_per_sec,
+        });
+
+        // Graceful shutdown so the record reflects a clean daemon exit.
+        let mut conn = std::net::TcpStream::connect(&addr).expect("shutdown connection");
+        frame::write_frame(&mut conn, "{\"cmd\":\"shutdown\"}").expect("shutdown frame");
+        let _ = frame::read_frame(&mut conn);
+        let _ = child.wait();
     }
 
     common::write_decode_bench_json(&records);

@@ -63,6 +63,20 @@ pub fn gather_and_decode(
     if messages.len() != n {
         bail!("expected {n} messages, got {}", messages.len());
     }
+    // Validate every payload dimension up front, against one expected
+    // value, before the straggler draw or any decode work: a single
+    // malformed payload is blamed by its own index (instead of making
+    // every *other* worker look wrong once the survivor anchor happens
+    // to be the bad one), and a bad batch fails before an LSQR solve is
+    // paid for. The check consumes no RNG, so the draw stream for valid
+    // inputs is untouched.
+    let dim = messages.first().map_or(0, |m| m.payload.len());
+    if let Some(bad) = messages.iter().position(|m| m.payload.len() != dim) {
+        bail!(
+            "message {bad} has payload length {}, expected {dim} (dimension of message 0)",
+            messages[bad].payload.len()
+        );
+    }
     let model = LatencyStragglers { model: *latency, policy: *deadline };
     ws.select_submatrix_with(g, &model, rng);
     if ws.last_non_stragglers().is_empty() {
@@ -79,16 +93,12 @@ pub fn gather_and_decode(
     let decode_err = ws.decode_error_selected(&weights);
     let survivors = ws.last_non_stragglers();
 
-    // ĝ = Σ_j x_j msg_j over survivors.
-    let dim = messages[survivors[0]].payload.len();
+    // ĝ = Σ_j x_j msg_j over survivors (dimensions validated above).
     let mut estimate = vec![0.0f32; dim];
     let mut loss_sum = 0.0f64;
     let mut tasks = 0usize;
     for (pos, &j) in survivors.iter().enumerate() {
         let msg = &messages[j];
-        if msg.payload.len() != dim {
-            bail!("message {j} has wrong payload length");
-        }
         let w = weights[pos] as f32;
         if w != 0.0 {
             for (e, p) in estimate.iter_mut().zip(&msg.payload) {
@@ -225,6 +235,31 @@ mod tests {
             &mut DecodeWorkspace::new(),
         )
         .is_err());
+    }
+
+    #[test]
+    fn malformed_payload_is_blamed_by_index_before_any_decode_work() {
+        let (k, s) = (12usize, 3usize);
+        let g = FractionalRepetitionCode::new(k, k, s).assignment(&mut Rng::new(10));
+        let mut msgs = synthetic_messages(&g);
+        msgs[7].payload.pop(); // worker 7 ships a short gradient
+        let mut rng = Rng::new(11);
+        let err = gather_and_decode(
+            &g,
+            s,
+            &msgs,
+            DecoderKind::Optimal,
+            &LatencyModel::ShiftedExp { base: 0.0, rate: 1.0 },
+            &DeadlinePolicy::FastestR(k),
+            &mut rng,
+            &mut DecodeWorkspace::new(),
+        )
+        .unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("message 7"), "the malformed worker must be named: {text}");
+        // The validation fired before the straggler draw: the caller's
+        // rng stream is untouched (still equal to a fresh one).
+        assert_eq!(rng.next_u64(), Rng::new(11).next_u64());
     }
 
     #[test]

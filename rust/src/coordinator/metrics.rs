@@ -1,4 +1,10 @@
-//! Per-round metrics and training history (CSV-dumpable).
+//! Per-round metrics and training history (CSV-dumpable), plus the
+//! serving-layer observability types: a log-bucketed
+//! [`LatencyHistogram`] and the [`ServeMetrics`] counters behind
+//! `repro serve`'s `/metrics` endpoint and `repro load`'s report.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// One training round's observability record.
 #[derive(Clone, Debug, Default)]
@@ -67,6 +73,195 @@ impl TrainingHistory {
     }
 }
 
+// ---------------------------------------------------- LatencyHistogram
+
+/// Sub-buckets per power-of-two octave: 16 gives ~6.7% worst-case
+/// relative bucket width — HDR-histogram resolution without its
+/// configurability.
+const SUB_BUCKETS: usize = 16;
+
+/// Values `0..16` get exact unit buckets; every later octave
+/// `[2^e, 2^(e+1))` for `e in 4..=63` splits into 16 linear sub-buckets.
+const NUM_BUCKETS: usize = SUB_BUCKETS + (63 - 4) * SUB_BUCKETS + SUB_BUCKETS;
+
+/// Log-bucketed histogram of nanosecond latencies.
+///
+/// Recording is O(1) (a leading-zeros count), memory is one fixed
+/// 976-slot table covering the full u64 range, and quantiles are a pure
+/// function of the recorded multiset — independent of record order — so
+/// two runs that observe the same set of values render identical
+/// summaries. Mergeable: worker threads each fill their own and fold
+/// them together afterwards.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    max_ns: u64,
+    sum_ns: u128,
+}
+
+fn bucket_of(ns: u64) -> usize {
+    if ns < SUB_BUCKETS as u64 {
+        return ns as usize;
+    }
+    let exp = 63 - ns.leading_zeros() as usize; // floor(log2 ns), >= 4 here
+    let sub = ((ns >> (exp - 4)) & 15) as usize;
+    (exp - 3) * SUB_BUCKETS + sub
+}
+
+/// Largest value a bucket covers (quantiles report this conservative
+/// upper edge, clamped to the true observed max).
+fn bucket_upper_ns(b: usize) -> u64 {
+    if b < SUB_BUCKETS {
+        return b as u64;
+    }
+    // Bucket (exp-3)*16 + sub covers [(16+sub) << (exp-4), ..) with
+    // width 2^(exp-4); `shift` is that exp-4.
+    let shift = (b / SUB_BUCKETS) as u32 - 1;
+    let sub = (b % SUB_BUCKETS) as u64;
+    let lower = (SUB_BUCKETS as u64 + sub) << shift;
+    lower + (1u64 << shift) - 1
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: vec![0; NUM_BUCKETS], total: 0, max_ns: 0, sum_ns: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[bucket_of(ns)] += 1;
+        self.total += 1;
+        self.max_ns = self.max_ns.max(ns);
+        self.sum_ns += ns as u128;
+    }
+
+    /// Fold another histogram in (disjoint worker shards of one run).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.max_ns = self.max_ns.max(other.max_ns);
+        self.sum_ns += other.sum_ns;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.total as f64
+    }
+
+    /// The q-quantile (q in [0, 1]) as a bucket upper edge — within
+    /// ~6.7% of the true order statistic, exact for values < 16 ns and
+    /// for the maximum. 0 when nothing was recorded.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper_ns(b).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+}
+
+// -------------------------------------------------------- ServeMetrics
+
+/// Shared counters behind `repro serve`'s `/metrics` endpoint.
+///
+/// Counter bumps are lock-free atomics; the latency histogram takes one
+/// short mutex hold per completed request. Counters are recorded
+/// *before* the response frame is written, so a client that has seen
+/// its reply is guaranteed to see itself in a subsequent scrape.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Framed requests handled (including ones answered with an error).
+    pub requests: AtomicU64,
+    /// Requests answered with an `ok: false` frame plus framing-level
+    /// failures (oversized prefix, truncated frame).
+    pub errors: AtomicU64,
+    /// Decode rounds executed across all `decode` requests.
+    pub rounds: AtomicU64,
+    /// Fan-out jobs scheduled via `job` requests.
+    pub jobs: AtomicU64,
+    /// Connections accepted.
+    pub connections: AtomicU64,
+    latency: Mutex<LatencyHistogram>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one handled request and its wall-clock latency.
+    pub fn observe_request(&self, latency_ns: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latency.lock().expect("latency histogram poisoned").record_ns(latency_ns);
+    }
+
+    pub fn observe_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_rounds(&self, n: u64) {
+        self.rounds.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn observe_job(&self) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn observe_connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the latency histogram.
+    pub fn latency_snapshot(&self) -> LatencyHistogram {
+        self.latency.lock().expect("latency histogram poisoned").clone()
+    }
+
+    /// Text exposition (one `name value` pair per line) — what the
+    /// HTTP `/metrics` endpoint serves.
+    pub fn render(&self) -> String {
+        let lat = self.latency_snapshot();
+        let mut out = String::new();
+        for (name, value) in [
+            ("gradcode_connections_total", self.connections.load(Ordering::Relaxed)),
+            ("gradcode_requests_total", self.requests.load(Ordering::Relaxed)),
+            ("gradcode_errors_total", self.errors.load(Ordering::Relaxed)),
+            ("gradcode_rounds_total", self.rounds.load(Ordering::Relaxed)),
+            ("gradcode_jobs_total", self.jobs.load(Ordering::Relaxed)),
+            ("gradcode_request_latency_count", lat.count()),
+            ("gradcode_request_latency_p50_us", lat.quantile_ns(0.50) / 1_000),
+            ("gradcode_request_latency_p99_us", lat.quantile_ns(0.99) / 1_000),
+            ("gradcode_request_latency_max_us", lat.quantile_ns(1.0) / 1_000),
+        ] {
+            out.push_str(name);
+            out.push(' ');
+            out.push_str(&value.to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,5 +292,85 @@ mod tests {
         let h = TrainingHistory::default();
         assert!(h.final_loss().is_nan());
         assert!(h.mean_decode_err().is_nan());
+    }
+
+    #[test]
+    fn histogram_buckets_partition_the_u64_range() {
+        // Every bucket's upper edge maps back to itself, edges are
+        // strictly increasing, and the next value starts the next
+        // bucket — i.e. the buckets tile u64 with no gaps or overlaps.
+        let mut prev_upper: Option<u64> = None;
+        for b in 0..NUM_BUCKETS {
+            let upper = bucket_upper_ns(b);
+            assert_eq!(bucket_of(upper), b, "upper edge of bucket {b}");
+            if let Some(p) = prev_upper {
+                assert!(upper > p, "bucket {b} edges not increasing");
+                assert_eq!(bucket_of(p + 1), b, "gap before bucket {b}");
+            }
+            prev_upper = Some(upper);
+        }
+        assert_eq!(prev_upper, Some(u64::MAX));
+        assert_eq!(bucket_of(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_order_independent_and_tight() {
+        let values: Vec<u64> = (1..=1000).map(|i| i * 1_000).collect(); // 1..=1000 us
+        let mut forward = LatencyHistogram::new();
+        let mut backward = LatencyHistogram::new();
+        for &v in &values {
+            forward.record_ns(v);
+        }
+        for &v in values.iter().rev() {
+            backward.record_ns(v);
+        }
+        for q in [0.0, 0.5, 0.99, 0.999, 1.0] {
+            assert_eq!(forward.quantile_ns(q), backward.quantile_ns(q), "q={q}");
+        }
+        // Upper-edge quantiles overshoot by at most one bucket width
+        // (~6.7%) and never undershoot the true order statistic.
+        let p50 = forward.quantile_ns(0.5);
+        assert!((500_000..=540_000).contains(&p50), "p50 {p50}");
+        let p99 = forward.quantile_ns(0.99);
+        assert!((990_000..=1_060_000).contains(&p99), "p99 {p99}");
+        assert_eq!(forward.quantile_ns(1.0), 1_000_000); // max is exact
+        assert_eq!(forward.count(), 1000);
+        assert!((forward.mean_ns() - 500_500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_recording() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut whole = LatencyHistogram::new();
+        for i in 0..500u64 {
+            let v = i * i + 17;
+            if i % 2 == 0 { a.record_ns(v) } else { b.record_ns(v) }
+            whole.record_ns(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.counts, whole.counts);
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile_ns(q), whole.quantile_ns(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn serve_metrics_render_contains_every_counter() {
+        let m = ServeMetrics::new();
+        m.observe_connection();
+        m.observe_request(1_500_000);
+        m.observe_request(2_500_000);
+        m.observe_error();
+        m.add_rounds(32);
+        m.observe_job();
+        let text = m.render();
+        assert!(text.contains("gradcode_connections_total 1\n"), "{text}");
+        assert!(text.contains("gradcode_requests_total 2\n"), "{text}");
+        assert!(text.contains("gradcode_errors_total 1\n"), "{text}");
+        assert!(text.contains("gradcode_rounds_total 32\n"), "{text}");
+        assert!(text.contains("gradcode_jobs_total 1\n"), "{text}");
+        assert!(text.contains("gradcode_request_latency_count 2\n"), "{text}");
     }
 }

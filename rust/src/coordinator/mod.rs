@@ -14,7 +14,7 @@ pub mod worker;
 
 pub use config::{CoordinatorConfig, DecoderKind};
 pub use master::{gather_and_decode, Round};
-pub use metrics::{RoundMetrics, TrainingHistory};
+pub use metrics::{LatencyHistogram, RoundMetrics, ServeMetrics, TrainingHistory};
 pub use worker::{
     compute_message, compute_message_via, specs_from_assignment, Message, MessagePath,
     ModelKind, WorkerSpec,

@@ -18,6 +18,12 @@
 //! * [`runtime`] — PJRT engine pool executing the AOT HLO artifacts.
 //! * [`coordinator`] — master/worker gather, deadline, decode.
 //! * [`training`] — synthetic data + the end-to-end coded GD loop.
+//! * [`serve`] — the `repro serve` daemon: length-prefixed JSON
+//!   frames, hot per-connection decode workspaces, memoized standing
+//!   assignments, a `/metrics` endpoint, and the fan-out job scheduler
+//!   (shared with `repro run --fanout`).
+//! * [`load`] — seeded deterministic traffic generator with
+//!   byte-reproducible replays and latency/throughput SLO reports.
 //! * [`graph`], [`linalg`], [`util`] — substrates built from scratch.
 
 pub mod adversary;
@@ -26,7 +32,9 @@ pub mod coordinator;
 pub mod decode;
 pub mod graph;
 pub mod linalg;
+pub mod load;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod stragglers;
 pub mod training;

@@ -1,0 +1,332 @@
+//! `repro load`: a seeded, deterministic traffic generator for the
+//! `repro serve` daemon.
+//!
+//! The generator fires `requests` decode requests at the daemon over
+//! `concurrency` persistent connections and produces two artifacts:
+//!
+//! - a **replay** (stdout): one CSV row per request with its derived
+//!   seed and error-sequence summary, plus a log2 histogram of the
+//!   per-request mean errors. Request `i` always carries seed
+//!   `root.fork(i).next_u64()` and the server decodes round `t` of
+//!   seed `w` from `Rng::new(w).fork(t)`, so the replay is a pure
+//!   function of `(seed, template)` — byte-identical across runs,
+//!   concurrency levels, and arrival processes. Diffing two replays is
+//!   the end-to-end regression check for the whole serve path.
+//! - a **report** (stderr): latency quantiles (p50/p99/p999/max) from
+//!   a [`LatencyHistogram`], throughput in requests/s and decode
+//!   rounds/s, and a PASS/FAIL verdict against an optional p99 SLO.
+//!   This half is timing and *not* reproducible — which is exactly why
+//!   it is kept out of the replay bytes.
+//!
+//! Arrival processes: `closed` (fire as fast as replies come back),
+//! `uniform:GAP_MS` (fixed think time per worker), `poisson:RATE`
+//! (exponential gaps; `RATE` is the *aggregate* target req/s, split
+//! evenly across workers). Gap draws come from per-worker forks
+//! disjoint from the per-request seed streams, so the arrival process
+//! never perturbs the replay.
+
+use std::io::BufWriter;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::LatencyHistogram;
+use crate::serve::frame;
+use crate::serve::{DecodeRequest, Request};
+use crate::util::{Json, Rng};
+
+/// When the next request leaves a worker.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Closed loop: next request leaves as soon as the reply lands.
+    Closed,
+    /// Fixed gap of `gap_ms` milliseconds before each request.
+    Uniform { gap_ms: u64 },
+    /// Poisson arrivals at `rate` requests/second aggregate.
+    Poisson { rate: f64 },
+}
+
+impl Arrival {
+    /// Parse `closed`, `uniform:GAP_MS`, or `poisson:RATE`.
+    pub fn parse(text: &str) -> Result<Arrival> {
+        if text == "closed" {
+            return Ok(Arrival::Closed);
+        }
+        if let Some(ms) = text.strip_prefix("uniform:") {
+            let gap_ms = ms.parse::<u64>().with_context(|| format!("gap in {text:?}"))?;
+            return Ok(Arrival::Uniform { gap_ms });
+        }
+        if let Some(r) = text.strip_prefix("poisson:") {
+            let rate = r.parse::<f64>().with_context(|| format!("rate in {text:?}"))?;
+            if !(rate > 0.0 && rate.is_finite()) {
+                bail!("poisson rate must be finite and positive, got {rate}");
+            }
+            return Ok(Arrival::Poisson { rate });
+        }
+        bail!("unknown arrival process {text:?} (closed | uniform:GAP_MS | poisson:RATE)");
+    }
+}
+
+/// One load run's shape.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Daemon address, e.g. `127.0.0.1:7117`.
+    pub addr: String,
+    pub requests: usize,
+    pub concurrency: usize,
+    pub arrival: Arrival,
+    /// Root seed: derives every per-request seed and every arrival gap.
+    pub seed: u64,
+    /// p99 SLO in milliseconds; 0 disables the verdict line.
+    pub slo_p99_ms: f64,
+    /// The decode request fired on every arrival (its `seed` field is
+    /// overwritten per request; `assign_seed` stays fixed, so all
+    /// requests share one memoized standing assignment server-side).
+    pub template: DecodeRequest,
+}
+
+/// What a load run produced.
+#[derive(Clone, Debug)]
+pub struct LoadOutcome {
+    /// Byte-reproducible replay CSV (print to stdout).
+    pub replay: String,
+    /// Human latency/throughput report (print to stderr).
+    pub report: String,
+    /// True iff `slo_p99_ms == 0` or the measured p99 met it.
+    pub slo_ok: bool,
+    pub total_rounds: u64,
+    pub elapsed: f64,
+    pub rounds_per_sec: f64,
+    pub requests_per_sec: f64,
+}
+
+/// Error summary of one request's reply.
+struct RequestResult {
+    index: usize,
+    seed: u64,
+    errs: Vec<f64>,
+}
+
+struct WorkerOutput {
+    results: Vec<RequestResult>,
+    latency: LatencyHistogram,
+}
+
+fn send_request(stream: &mut TcpStream, req: &Request) -> Result<Json> {
+    {
+        let mut w = BufWriter::new(&mut *stream);
+        frame::write_frame(&mut w, &req.to_json().write()).context("sending request frame")?;
+    }
+    let body = frame::read_frame(stream)
+        .map_err(|e| anyhow::anyhow!("reading reply frame: {e}"))?;
+    Json::parse(&body).context("parsing reply frame")
+}
+
+fn worker(cfg: &LoadConfig, t: usize, c: usize, root: &Rng) -> Result<WorkerOutput> {
+    let mut stream = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("worker {t}: connecting to {}", cfg.addr))?;
+    stream.set_nodelay(true).ok();
+    // Gap stream disjoint from per-request seed forks (those use
+    // indices 0..requests; requests is bounded far below u64::MAX - c).
+    let mut gaps = root.fork(u64::MAX - t as u64);
+    let mut results = Vec::new();
+    let mut latency = LatencyHistogram::new();
+    let mut i = t;
+    while i < cfg.requests {
+        match cfg.arrival {
+            Arrival::Closed => {}
+            Arrival::Uniform { gap_ms } => std::thread::sleep(Duration::from_millis(gap_ms)),
+            Arrival::Poisson { rate } => {
+                let gap_s = gaps.exp(rate / c as f64);
+                std::thread::sleep(Duration::from_secs_f64(gap_s.min(60.0)));
+            }
+        }
+        let seed = root.fork(i as u64).next_u64();
+        let mut req = cfg.template.clone();
+        req.seed = seed;
+        let start = Instant::now();
+        let reply = send_request(&mut stream, &Request::Decode(req))
+            .with_context(|| format!("request {i}"))?;
+        latency.record_ns(start.elapsed().as_nanos() as u64);
+        let ok = matches!(reply.get("ok"), Ok(Json::Bool(true)));
+        if !ok {
+            let msg = reply
+                .get("error")
+                .and_then(|e| e.as_str().map(str::to_string))
+                .unwrap_or_else(|_| reply.write());
+            bail!("request {i}: server error: {msg}");
+        }
+        let errs: Vec<f64> = reply
+            .get("errs")?
+            .as_arr()?
+            .iter()
+            .map(Json::as_f64)
+            .collect::<Result<_>>()
+            .with_context(|| format!("request {i}: errs"))?;
+        if errs.len() != cfg.template.rounds {
+            bail!(
+                "request {i}: reply has {} errors, expected {} rounds",
+                errs.len(),
+                cfg.template.rounds
+            );
+        }
+        results.push(RequestResult { index: i, seed, errs });
+        i += c;
+    }
+    Ok(WorkerOutput { results, latency })
+}
+
+/// Log2 bucket of a positive error: the unbiased f64 exponent, read
+/// straight from the bit pattern so bucketing is deterministic across
+/// platforms (no libm `log2` variance). Zero maps to the subnormal
+/// floor bucket -1023.
+fn log2_bucket(x: f64) -> i64 {
+    ((x.to_bits() >> 52) & 0x7ff) as i64 - 1023
+}
+
+fn render_replay(cfg: &LoadConfig, results: &[RequestResult]) -> String {
+    use std::fmt::Write as _;
+    let t = &cfg.template;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# repro load replay: seed={} requests={} scheme={} k={} n={} s={} r={} rounds={} decoder={}",
+        cfg.seed, cfg.requests, t.scheme.name(), t.k, t.n, t.s, t.r, t.rounds,
+        t.decoder.name(),
+    );
+    out.push_str("request,seed,mean_err,min_err,max_err,first_err,last_err\n");
+    let mut hist = std::collections::BTreeMap::new();
+    for r in results {
+        let mean = r.errs.iter().sum::<f64>() / r.errs.len() as f64;
+        let min = r.errs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = r.errs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let _ = writeln!(
+            out,
+            "{},{},{:e},{:e},{:e},{:e},{:e}",
+            r.index,
+            r.seed,
+            mean,
+            min,
+            max,
+            r.errs[0],
+            r.errs[r.errs.len() - 1],
+        );
+        *hist.entry(log2_bucket(mean)).or_insert(0u64) += 1;
+    }
+    out.push_str("bucket,count\n");
+    for (b, c) in &hist {
+        let _ = writeln!(out, "{b},{c}");
+    }
+    out
+}
+
+/// Fire the load and collect both artifacts. Fails if any request
+/// errors or any index is missing — a partial replay would diff clean
+/// against another partial replay with the same holes.
+pub fn run_load(cfg: &LoadConfig) -> Result<LoadOutcome> {
+    if cfg.requests == 0 {
+        bail!("--requests must be at least 1");
+    }
+    let c = cfg.concurrency.clamp(1, cfg.requests);
+    let root = Rng::new(cfg.seed);
+    let start = Instant::now();
+    let outputs: Vec<Result<WorkerOutput>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..c)
+            .map(|t| {
+                let root = root.clone();
+                scope.spawn(move || worker(cfg, t, c, &root))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("load worker panicked")).collect()
+    });
+    let elapsed = start.elapsed().as_secs_f64().max(1e-9);
+
+    let mut results = Vec::with_capacity(cfg.requests);
+    let mut latency = LatencyHistogram::new();
+    for out in outputs {
+        let out = out?;
+        latency.merge(&out.latency);
+        results.extend(out.results);
+    }
+    results.sort_by_key(|r| r.index);
+    for (want, r) in results.iter().enumerate() {
+        if r.index != want {
+            bail!("request {want} missing from results (got index {})", r.index);
+        }
+    }
+    if results.len() != cfg.requests {
+        bail!("collected {} results, expected {}", results.len(), cfg.requests);
+    }
+
+    let total_rounds = (cfg.requests * cfg.template.rounds) as u64;
+    let requests_per_sec = cfg.requests as f64 / elapsed;
+    let rounds_per_sec = total_rounds as f64 / elapsed;
+    let p50 = latency.quantile_ns(0.50) as f64 / 1e6;
+    let p99 = latency.quantile_ns(0.99) as f64 / 1e6;
+    let p999 = latency.quantile_ns(0.999) as f64 / 1e6;
+    let maxl = latency.quantile_ns(1.0) as f64 / 1e6;
+    let slo_ok = cfg.slo_p99_ms <= 0.0 || p99 <= cfg.slo_p99_ms;
+
+    use std::fmt::Write as _;
+    let mut report = String::new();
+    let _ = writeln!(
+        report,
+        "load: {} requests x {} rounds over {} connection(s), arrival {:?}, seed {}",
+        cfg.requests, cfg.template.rounds, c, cfg.arrival, cfg.seed
+    );
+    let _ = writeln!(
+        report,
+        "latency: p50 {p50:.3} ms, p99 {p99:.3} ms, p999 {p999:.3} ms, max {maxl:.3} ms, \
+         mean {:.3} ms",
+        latency.mean_ns() / 1e6
+    );
+    let _ = writeln!(
+        report,
+        "throughput: {requests_per_sec:.1} req/s, {rounds_per_sec:.1} decode rounds/s \
+         over {elapsed:.3} s"
+    );
+    if cfg.slo_p99_ms > 0.0 {
+        let _ = writeln!(
+            report,
+            "slo: p99 {p99:.3} ms vs target {:.3} ms -> {}",
+            cfg.slo_p99_ms,
+            if slo_ok { "PASS" } else { "FAIL" }
+        );
+    }
+
+    Ok(LoadOutcome {
+        replay: render_replay(cfg, &results),
+        report,
+        slo_ok,
+        total_rounds,
+        elapsed,
+        rounds_per_sec,
+        requests_per_sec,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_parse_accepts_the_three_processes() {
+        assert_eq!(Arrival::parse("closed").unwrap(), Arrival::Closed);
+        assert_eq!(Arrival::parse("uniform:5").unwrap(), Arrival::Uniform { gap_ms: 5 });
+        assert_eq!(Arrival::parse("poisson:200").unwrap(), Arrival::Poisson { rate: 200.0 });
+        for bad in ["open", "uniform:", "uniform:x", "poisson:0", "poisson:-1", "poisson:inf"] {
+            assert!(Arrival::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn log2_bucket_matches_the_exponent_field() {
+        assert_eq!(log2_bucket(1.0), 0);
+        assert_eq!(log2_bucket(2.0), 1);
+        assert_eq!(log2_bucket(0.5), -1);
+        assert_eq!(log2_bucket(3.9), 1);
+        assert_eq!(log2_bucket(0.0), -1023);
+        assert_eq!(log2_bucket(1e-3), -10);
+    }
+}

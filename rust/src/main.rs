@@ -57,6 +57,31 @@
 //!                  (+ the same job flags as `repro shard`; without
 //!                   --threads each child gets cores/fanout workers so
 //!                   the fan-out never oversubscribes the machine)
+//! repro serve      --addr 127.0.0.1:7117  bind address (port 0 =
+//!                                   ephemeral; the bound address is
+//!                                   printed as `listening on ADDR`)
+//!                                   decode/experiment-job daemon:
+//!                                   length-prefixed JSON frames with
+//!                                   hot per-connection decode
+//!                                   workspaces, memoized standing
+//!                                   assignments, the fan-out job
+//!                                   scheduler (`job` requests), and
+//!                                   HTTP GET /metrics counters on the
+//!                                   same port
+//! repro load       --addr 127.0.0.1:7117  daemon to fire at
+//!                  --requests 64    total decode requests
+//!                  --concurrency 4  persistent connections
+//!                  --arrival closed closed | uniform:GAP_MS | poisson:RATE
+//!                  --seed 2017      root seed: derives every request
+//!                                   seed, so the stdout replay CSV is
+//!                                   byte-identical per seed at any
+//!                                   concurrency/arrival setting
+//!                  --scheme frc --k 100 --n K --s 10 --delta 0.2
+//!                  --r (1-delta)*n  survivors per decode round
+//!                  --rounds 8       decode rounds per request
+//!                  --decoder onestep onestep|optimal
+//!                  --slo-ms 0       p99 SLO in ms (0 = report only;
+//!                                   otherwise FAIL exits 1)
 //! repro merge      FILE...          shard artifacts; emits the same CSV
 //!                                   as the unsharded run, bit-for-bit
 //!                  --out FILE       instead fold the (possibly
@@ -105,7 +130,7 @@
 //! one local command — resumably, with `--resume DIR` (see `sim::shard`
 //! and ARCHITECTURE.md).
 
-use anyhow::{anyhow, Context};
+use anyhow::Context;
 
 use gradcode::adversary::{
     asp_objective, frc_worst_stragglers, greedy_stragglers, local_search_stragglers,
@@ -113,8 +138,14 @@ use gradcode::adversary::{
 use gradcode::codes::Scheme;
 use gradcode::coordinator::{DecoderKind, ModelKind};
 use gradcode::decode::OptimalDecoder;
+use gradcode::load::{run_load, Arrival, LoadConfig};
 use gradcode::runtime::{Backend, EnginePool, LinearDims, Manifest, MlpDims};
-use gradcode::sim::shard::{ABLATION_IDS, SCENARIO_IDS, TABLE_IDS};
+use gradcode::serve::{
+    run_fanout, serve, ArtifactDir, DecodeRequest, FanoutPlan, ServeConfig,
+};
+use gradcode::sim::shard::{
+    ABLATION_IDS, SCENARIO_IDS, TABLES_WITHOUT_SCENARIO, TABLES_WITH_S, TABLE_IDS,
+};
 use gradcode::sim::{
     figures, FigureConfig, JobKind, JobSpec, MonteCarlo, Shard, ShardArtifact,
 };
@@ -298,6 +329,20 @@ fn run() -> CliResult<()> {
             args.finish(&allowed, false)?;
             cmd_run(&args)
         }
+        "serve" => {
+            args.finish(&["addr"], false)?;
+            cmd_serve(&args)
+        }
+        "load" => {
+            args.finish(
+                &[
+                    "addr", "requests", "concurrency", "arrival", "seed", "scheme", "k", "n",
+                    "s", "delta", "r", "rounds", "decoder", "slo-ms",
+                ],
+                false,
+            )?;
+            cmd_load(&args)
+        }
         "merge" => {
             args.finish(&["out"], true)?;
             cmd_merge(&args)
@@ -372,6 +417,25 @@ USAGE:
                                     # --resume reuses DIR's valid
                                     # artifacts and respawns only the
                                     # missing/corrupt shards
+  repro serve   [--addr ADDR]      # decode/experiment-job daemon:
+                                    # length-prefixed JSON frames, hot
+                                    # per-connection decode workspaces,
+                                    # memoized standing assignments, a
+                                    # shared fan-out job scheduler, and
+                                    # HTTP GET /metrics counters on the
+                                    # same port; {\"cmd\":\"shutdown\"}
+                                    # stops it
+  repro load    [--addr ADDR] [--requests N] [--concurrency C]
+                [--arrival closed|uniform:GAP_MS|poisson:RATE] [--seed S]
+                [--scheme S] [--k K] [--n N] [--s S] [--delta D] [--r R]
+                [--rounds N] [--decoder onestep|optimal] [--slo-ms MS]
+                                    # seeded deterministic traffic
+                                    # generator: replay CSV on stdout is
+                                    # byte-identical per seed (any
+                                    # concurrency/arrival); latency
+                                    # p50/p99/p999 + throughput report
+                                    # on stderr; --slo-ms gates the
+                                    # exit status on the p99 target
   repro merge   FILE... [--out FILE]  # merge artifacts -> CSV on stdout;
                                     # with --out, fold any disjoint
                                     # subset into one partial artifact
@@ -407,6 +471,12 @@ DEFAULTS:
   run:     shard defaults above; --fanout 2; --artifacts-dir <temp dir>
            (temporary artifacts are removed after the merge); each child
            gets --threads cores/fanout unless --threads is given
+  serve:   --addr 127.0.0.1:7117 (port 0 picks an ephemeral port; the
+           bound address is printed as `listening on ADDR`)
+  load:    --addr 127.0.0.1:7117 --requests 64 --concurrency 4
+           --arrival closed --seed 2017 --scheme frc --k 100 --n K --s 10
+           --delta 0.2 --r (1-delta)*n --rounds 8 --decoder onestep
+           --slo-ms 0 (0 = no SLO verdict)
   train:   --scheme frc --model linear --decoder onestep --k 100 --s 10
            --steps 200 --delta 0.2 --lr 0.5 --backend pjrt --engines 2 --seed 0
   adversary: --k 100 --s 10 --r 4k/5 --seed 2017
@@ -501,16 +571,6 @@ fn cmd_tables(args: &Args) -> CliResult<()> {
     print!("{}", points.to_csv());
     Ok(())
 }
-
-/// The tables whose `--s` flag is meaningful; the rest derive s
-/// internally (thm8: log-threshold, thm21/24: ln k, thm11: fixed
-/// instance) and reject the flag.
-const TABLES_WITH_S: [&str; 4] = ["thm3", "thm5", "thm6", "thm10"];
-
-/// The tables with no uniform straggler sampling to swap out (thm3:
-/// spectral, thm10/thm11: their own adversarial protocol); they reject
-/// `--stragglers` rather than silently ignore it.
-const TABLES_WITHOUT_SCENARIO: [&str; 3] = ["thm3", "thm10", "thm11"];
 
 fn table_job(args: &Args) -> CliResult<JobSpec> {
     let table = args.get("table").unwrap_or("thm5");
@@ -687,79 +747,16 @@ fn cmd_shard(args: &Args) -> CliResult<()> {
     Ok(())
 }
 
-/// The argv a `repro run` child gets: the job reconstructed flag by
-/// flag (so the child's JobSpec is identical to the parent's and the
-/// artifacts merge), plus the shard header and output path.
-fn shard_child_args(
-    job: &JobSpec,
-    shard_id: usize,
-    num_shards: usize,
-    out: &std::path::Path,
-    threads: Option<usize>,
-) -> Vec<String> {
-    let mut v: Vec<String> = vec!["shard".into()];
-    match job.kind {
-        JobKind::Figure => {
-            v.push("--fig".into());
-            v.push(job.id.clone());
-            if job.id == "5" {
-                v.push("--tmax".into());
-                v.push(job.tmax.to_string());
-            }
-        }
-        JobKind::Table => {
-            v.push("--table".into());
-            v.push(job.id.clone());
-            // Derived-s tables reject --s; their JobSpec carries the
-            // default, which the child reproduces by omission.
-            if TABLES_WITH_S.contains(&job.id.as_str()) {
-                v.push("--s".into());
-                v.push(job.s.to_string());
-            }
-        }
-        JobKind::Ablation => {
-            v.push("--ablation".into());
-            v.push(job.id.clone());
-            v.push("--s".into());
-            v.push(job.s.to_string());
-        }
-        JobKind::Scenario => {
-            v.push("--scenario".into());
-            v.push(job.id.clone());
-            v.push("--s".into());
-            v.push(job.s.to_string());
-        }
-    }
-    for (flag, val) in [
-        ("--trials", job.trials.to_string()),
-        ("--seed", job.seed.to_string()),
-        ("--k", job.k.to_string()),
-        // Canonical scenario string: the child's parse reproduces the
-        // parent's Scenario exactly (the parent cross-checks anyway).
-        ("--stragglers", job.scenario.to_string()),
-        ("--shard-id", shard_id.to_string()),
-        ("--num-shards", num_shards.to_string()),
-    ] {
-        v.push(flag.into());
-        v.push(val);
-    }
-    v.push("--out".into());
-    v.push(out.to_string_lossy().into_owned());
-    if let Some(t) = threads {
-        v.push("--threads".into());
-        v.push(t.to_string());
-    }
-    v
-}
-
-/// `repro run --fanout N`: the local fan-out driver. Spawns N `repro
-/// shard` child processes of this same binary, waits for all of them,
+/// `repro run --fanout N`: the local fan-out driver. A thin
+/// flag-parsing shim over [`gradcode::serve::run_fanout`] — the same
+/// scheduler the `repro serve` daemon uses for `job` requests — which
+/// spawns N `repro shard` child processes of this same binary, waits,
 /// verifies the artifact set, merges, and prints the
-/// unsharded-identical CSV — the whole CI fan-out workflow in one
-/// command. With `--resume DIR`, artifacts already present in DIR (from
-/// an interrupted earlier run) are reused and only the missing or
-/// corrupt shards are respawned — `verify`'s missing-id accounting in
-/// driver form.
+/// unsharded-identical CSV. With `--resume DIR`, valid artifacts
+/// already in DIR are reused and only the missing/corrupt shards are
+/// respawned; a *non-resume* run pointed at a directory that already
+/// holds artifacts is refused (stale shards would silently mix into
+/// the fresh verify/merge set).
 fn cmd_run(args: &Args) -> CliResult<()> {
     let job = job_from_kind_flags(args, "run")?;
     let fanout = args.usize("fanout", 2)?;
@@ -773,171 +770,119 @@ fn cmd_run(args: &Args) -> CliResult<()> {
         );
     }
     let exe = std::env::current_exe().context("locating the running binary")?;
-    let resuming = args.get("resume").is_some();
-    let (dir, keep) = match args.get("resume").or(args.get("artifacts-dir")) {
-        Some(d) => {
-            std::fs::create_dir_all(d).with_context(|| format!("creating {d}"))?;
-            (std::path::PathBuf::from(d), true)
-        }
-        None => {
-            let d = std::env::temp_dir().join(format!(
-                "gradcode-fanout-{}-{}-{}",
-                std::process::id(),
-                job.kind.name(),
-                job.id
-            ));
-            std::fs::create_dir_all(&d)
-                .with_context(|| format!("creating {}", d.display()))?;
-            (d, false)
-        }
+    let dir = match (args.get("resume"), args.get("artifacts-dir")) {
+        (Some(d), _) => ArtifactDir::Resume(std::path::PathBuf::from(d)),
+        (None, Some(d)) => ArtifactDir::Keep(std::path::PathBuf::from(d)),
+        (None, None) => ArtifactDir::Temp,
     };
-
-    // Resume: reuse every artifact in the directory that parses
-    // (checksum-verified) and belongs to this exact job and shard
-    // count; everything else — absent, corrupt, or foreign — leaves
-    // its shard ids in the respawn set.
-    let mut reused: Vec<ShardArtifact> = Vec::new();
-    let mut covered: Vec<usize> = Vec::new();
-    if resuming {
-        let entries =
-            std::fs::read_dir(&dir).with_context(|| format!("reading {}", dir.display()))?;
-        for entry in entries {
-            let path = entry.with_context(|| format!("reading {}", dir.display()))?.path();
-            if path.extension().map_or(true, |e| e != "json") {
-                continue;
-            }
-            let text = match std::fs::read_to_string(&path) {
-                Ok(t) => t,
-                Err(e) => {
-                    eprintln!("resume: skipping unreadable {} ({e})", path.display());
-                    continue;
-                }
-            };
-            match ShardArtifact::parse(&text) {
-                Ok(a) if a.job == job && a.num_shards == fanout => {
-                    covered.extend(a.shard_ids.iter().copied());
-                    reused.push(a);
-                }
-                Ok(a) => eprintln!(
-                    "resume: skipping {} (different job or shard count: {} {} x{})",
-                    path.display(),
-                    a.job.kind.name(),
-                    a.job.id,
-                    a.num_shards
-                ),
-                Err(e) => eprintln!(
-                    "resume: discarding corrupt {} ({e:#}); its shard will be recomputed",
-                    path.display()
-                ),
-            }
-        }
-        covered.sort_unstable();
-        if let Some(w) = covered.windows(2).find(|w| w[0] == w[1]) {
-            return Err(CliError::Runtime(anyhow!(
-                "resume dir {} covers shard id {} more than once (overlapping artifacts); \
-                 remove the extras before resuming",
-                dir.display(),
-                w[0]
-            )));
-        }
-    }
-    let missing: Vec<usize> = (0..fanout).filter(|i| !covered.contains(i)).collect();
-    // Without an explicit --threads, split the machine's worker budget
-    // across the children that actually spawn — the respawn set, not
-    // the nominal fanout, so a resume of one missing shard still gets
-    // the whole machine. Results are thread-count invariant; this only
-    // affects wall-clock.
-    let threads = match threads_flag(args)? {
-        Some(t) => Some(t),
-        None => Some(
-            (gradcode::util::parallel::default_threads() / missing.len().max(1)).max(1),
-        ),
-    };
-    if resuming {
-        eprintln!(
-            "resuming {} {}: {}/{fanout} shard(s) present in {}, respawning {:?}",
-            job.kind.name(),
-            job.id,
-            covered.len(),
-            dir.display(),
-            missing
-        );
-    } else {
-        eprintln!(
-            "fanning {} {} out across {fanout} shard processes (artifacts in {})",
-            job.kind.name(),
-            job.id,
-            dir.display()
-        );
-    }
-    let mut children = Vec::new();
-    let mut spawn_errors: Vec<String> = Vec::new();
-    for &sid in &missing {
-        let out = dir.join(format!("{}_{}_shard_{sid}_of_{fanout}.json", job.kind.name(), job.id));
-        match std::process::Command::new(&exe)
-            .args(shard_child_args(&job, sid, fanout, &out, threads))
-            .spawn()
-        {
-            Ok(child) => children.push((sid, out, child)),
-            Err(e) => spawn_errors.push(format!("spawning shard {sid}: {e}")),
-        }
-    }
-    // Wait for every spawned child (even after a spawn failure, so none
-    // are left running), then verify + merge. The temp artifacts dir is
-    // removed on success AND failure — the HELP text promises temporary
-    // artifacts never outlive the run; pass --artifacts-dir (or
-    // --resume) to keep them for debugging or resumption.
-    let outcome = wait_verify_merge(&job, children, spawn_errors, reused);
-    if !keep {
-        let _ = std::fs::remove_dir_all(&dir);
-    }
-    let merged = outcome?;
+    let plan = FanoutPlan { job, fanout, dir, threads: threads_flag(args)? };
+    let merged = run_fanout(&exe, &plan)?;
     print!("{}", merged.to_csv());
     Ok(())
 }
 
-/// The collection half of `repro run`: wait for all shard children,
-/// parse their artifacts, verify the set against the **parent's** job
-/// (the children reconstruct it from `shard_child_args`' flags, so a
-/// missed flag would otherwise make every child consistently wrong and
-/// sail through the mutual-consistency checks), and merge.
-fn wait_verify_merge(
-    job: &JobSpec,
-    children: Vec<(usize, std::path::PathBuf, std::process::Child)>,
-    mut failures: Vec<String>,
-    reused: Vec<ShardArtifact>,
-) -> CliResult<gradcode::sim::MergedRun> {
-    let mut artifacts = reused;
-    for (sid, out, mut child) in children {
-        let status = match child.wait() {
-            Ok(status) => status,
-            Err(e) => {
-                failures.push(format!("waiting for shard {sid}: {e}"));
-                continue;
-            }
-        };
-        if !status.success() {
-            failures.push(format!("shard {sid} exited with {status}"));
-            continue;
-        }
-        match std::fs::read_to_string(&out) {
-            Ok(text) => match ShardArtifact::parse(&text) {
-                Ok(a) if a.job != *job => failures.push(format!(
-                    "shard {sid} computed a different job than requested: {:?} vs {:?} \
-                     (shard_child_args out of step with a job flag?)",
-                    a.job, job
-                )),
-                Ok(a) => artifacts.push(a),
-                Err(e) => failures.push(format!("shard {sid}: {e:#}")),
-            },
-            Err(e) => failures.push(format!("shard {sid}: reading {}: {e}", out.display())),
-        }
+// --------------------------------------------------------- serve / load
+
+/// `repro serve`: run the decode/experiment-job daemon until a
+/// `shutdown` frame arrives. Prints `listening on ADDR` to stdout once
+/// bound (`--addr` port 0 picks an ephemeral port), then speaks
+/// length-prefixed JSON frames — plus HTTP `GET /metrics` on the same
+/// port — until shut down. See `gradcode::serve` for the protocol.
+fn cmd_serve(args: &Args) -> CliResult<()> {
+    let cfg = ServeConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7117").to_string(),
+        exe: std::env::current_exe().context("locating the running binary")?,
+    };
+    serve(&cfg)?;
+    Ok(())
+}
+
+/// `repro load`: fire a seeded, deterministic decode workload at a
+/// running daemon. The replay CSV (stdout) is byte-identical for a
+/// given `--seed` and request template, independent of `--concurrency`
+/// and `--arrival`; the latency/throughput report goes to stderr. A
+/// configured `--slo-ms` p99 target turns the exit status into the SLO
+/// verdict (0 = PASS, 1 = FAIL).
+fn cmd_load(args: &Args) -> CliResult<()> {
+    let requests = args.usize("requests", 64)?;
+    if requests == 0 {
+        return usage("--requests must be at least 1");
     }
-    if !failures.is_empty() {
-        return Err(CliError::Runtime(anyhow!("fan-out failed: {}", failures.join("; "))));
+    let concurrency = args.usize("concurrency", 4)?;
+    if concurrency == 0 {
+        return usage("--concurrency must be at least 1");
     }
-    ShardArtifact::verify_set(&artifacts)?;
-    Ok(ShardArtifact::merge(artifacts)?)
+    let arrival_spec = args.get("arrival").unwrap_or("closed");
+    let arrival = match Arrival::parse(arrival_spec) {
+        Ok(a) => a,
+        Err(e) => return usage(format!("--arrival {arrival_spec:?}: {e:#}")),
+    };
+    let scheme_name = args.get("scheme").unwrap_or("frc");
+    let Some(scheme) = Scheme::parse(scheme_name) else {
+        return usage(format!("unknown scheme {scheme_name:?}"));
+    };
+    let k = args.usize("k", 100)?;
+    if k == 0 {
+        return usage("--k must be at least 1");
+    }
+    let n = args.usize("n", k)?;
+    if n == 0 {
+        return usage("--n must be at least 1");
+    }
+    let s = args.usize("s", 10)?;
+    if !(1..=k).contains(&s) {
+        return usage(format!("--s {s} out of range [1, {k}]"));
+    }
+    let delta = args.f64("delta", 0.2)?;
+    if !(0.0..1.0).contains(&delta) {
+        return usage(format!("--delta {delta} out of range [0, 1)"));
+    }
+    let r_default = (((1.0 - delta) * n as f64).round() as usize).clamp(1, n);
+    let r = args.usize("r", r_default)?;
+    if !(1..=n).contains(&r) {
+        return usage(format!("--r {r} out of range [1, {n}]"));
+    }
+    let rounds = args.usize("rounds", 8)?;
+    if rounds == 0 {
+        return usage("--rounds must be at least 1");
+    }
+    let decoder_name = args.get("decoder").unwrap_or("onestep");
+    let Some(decoder) = DecoderKind::parse(decoder_name) else {
+        return usage(format!("unknown decoder {decoder_name:?} (onestep|optimal)"));
+    };
+    let seed = args.u64("seed", 2017)?;
+    let cfg = LoadConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7117").to_string(),
+        requests,
+        concurrency,
+        arrival,
+        seed,
+        slo_p99_ms: args.f64("slo-ms", 0.0)?,
+        template: DecodeRequest {
+            scheme,
+            k,
+            n,
+            s,
+            r,
+            rounds,
+            decoder,
+            // All requests share one standing assignment (drawn from
+            // the root seed); the per-request field is overwritten by
+            // the generator.
+            assign_seed: seed,
+            seed: 0,
+        },
+    };
+    let outcome = run_load(&cfg)?;
+    print!("{}", outcome.replay);
+    eprint!("{}", outcome.report);
+    if !outcome.slo_ok {
+        return Err(CliError::Runtime(anyhow::anyhow!(
+            "p99 latency SLO missed (target {} ms)",
+            cfg.slo_p99_ms
+        )));
+    }
+    Ok(())
 }
 
 fn read_artifacts(paths: &[String]) -> CliResult<Vec<ShardArtifact>> {

@@ -1,0 +1,166 @@
+//! Length-prefixed JSON framing for the serve socket.
+//!
+//! A frame is a 4-byte big-endian length prefix followed by that many
+//! bytes of UTF-8 JSON. The prefix is capped at [`MAX_FRAME`] so a
+//! corrupt or hostile length cannot make the server allocate
+//! gigabytes; everything past the prefix is plain `util::json` text,
+//! so the wire format is debuggable with `xxd` and a JSON
+//! pretty-printer.
+//!
+//! Errors distinguish the cases the session loop treats differently:
+//! a clean close at a frame boundary ([`FrameError::Closed`]) is a
+//! normal disconnect, a mid-frame EOF ([`FrameError::Truncated`]) is a
+//! dropped client, and an oversized prefix ([`FrameError::Oversized`])
+//! gets an error frame back before the connection is abandoned (the
+//! body was never consumed, so the stream cannot be re-synchronized).
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// Hard cap on a frame body: 16 MiB. Far above any legal request or
+/// response (a 1000-round decode reply is a few tens of KiB) while
+/// keeping a garbage prefix from looking like a huge allocation.
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// Why reading a frame stopped.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean end of stream at a frame boundary (normal disconnect).
+    Closed,
+    /// EOF in the middle of a length prefix or body.
+    Truncated { got: usize, wanted: usize },
+    /// Length prefix beyond [`MAX_FRAME`].
+    Oversized { len: u32 },
+    /// Frame body is not UTF-8.
+    BadUtf8,
+    Io(io::Error),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::Truncated { got, wanted } => {
+                write!(f, "truncated frame: got {got} of {wanted} bytes before EOF")
+            }
+            FrameError::Oversized { len } => {
+                write!(f, "frame length {len} exceeds the {MAX_FRAME}-byte cap")
+            }
+            FrameError::BadUtf8 => write!(f, "frame body is not UTF-8"),
+            FrameError::Io(e) => write!(f, "frame io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+fn read_exact_or(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    clean_eof_is_close: bool,
+) -> Result<(), FrameError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if clean_eof_is_close && filled == 0 {
+                    return Err(FrameError::Closed);
+                }
+                return Err(FrameError::Truncated { got: filled, wanted: buf.len() });
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read the 4-byte length prefix. A clean EOF before any byte is
+/// [`FrameError::Closed`]; an EOF after 1-3 bytes is a truncation.
+/// (The server peeks these bytes itself to sniff HTTP `GET `
+/// requests for the `/metrics` endpoint.)
+pub fn read_prefix(r: &mut impl Read) -> Result<[u8; 4], FrameError> {
+    let mut prefix = [0u8; 4];
+    read_exact_or(r, &mut prefix, true)?;
+    Ok(prefix)
+}
+
+/// Read a frame body of `len` bytes (validated against [`MAX_FRAME`]).
+pub fn read_body(r: &mut impl Read, len: u32) -> Result<String, FrameError> {
+    if len > MAX_FRAME {
+        return Err(FrameError::Oversized { len });
+    }
+    let mut body = vec![0u8; len as usize];
+    read_exact_or(r, &mut body, false)?;
+    String::from_utf8(body).map_err(|_| FrameError::BadUtf8)
+}
+
+/// Read one whole frame: prefix, cap check, body.
+pub fn read_frame(r: &mut impl Read) -> Result<String, FrameError> {
+    let prefix = read_prefix(r)?;
+    read_body(r, u32::from_be_bytes(prefix))
+}
+
+/// Write one frame and flush (requests and replies are both
+/// single-frame, so the peer can always make progress after a flush).
+pub fn write_frame(w: &mut impl Write, body: &str) -> io::Result<()> {
+    debug_assert!(body.len() as u64 <= MAX_FRAME as u64, "oversized outgoing frame");
+    w.write_all(&(body.len() as u32).to_be_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_round_trip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "{\"cmd\":\"ping\"}").unwrap();
+        write_frame(&mut buf, "").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), "{\"cmd\":\"ping\"}");
+        assert_eq!(read_frame(&mut r).unwrap(), "");
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn clean_eof_is_closed_but_partial_prefix_is_truncated() {
+        let mut empty = Cursor::new(Vec::new());
+        assert!(matches!(read_frame(&mut empty), Err(FrameError::Closed)));
+        let mut partial = Cursor::new(vec![0u8, 0]);
+        assert!(matches!(
+            read_frame(&mut partial),
+            Err(FrameError::Truncated { got: 2, wanted: 4 })
+        ));
+    }
+
+    #[test]
+    fn truncated_body_reports_progress() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&64u32.to_be_bytes());
+        buf.extend_from_slice(b"abc");
+        let mut r = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Truncated { got: 3, wanted: 64 })));
+    }
+
+    #[test]
+    fn oversized_prefix_is_rejected_without_allocating() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_be_bytes());
+        let mut r = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Oversized { len: u32::MAX })));
+    }
+
+    #[test]
+    fn non_utf8_body_is_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&2u32.to_be_bytes());
+        buf.extend_from_slice(&[0xff, 0xfe]);
+        let mut r = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut r), Err(FrameError::BadUtf8)));
+    }
+}

@@ -1,0 +1,30 @@
+//! Serving layer: the `repro serve` daemon and its job scheduler.
+//!
+//! Four pieces, bottom-up:
+//!
+//! - [`frame`] — length-prefixed JSON framing (4-byte big-endian
+//!   prefix, 16 MiB cap, UTF-8 body) with error cases the session loop
+//!   can tell apart: clean close, truncation, oversized prefix.
+//! - [`protocol`] — the request/response schema. Requests are JSON
+//!   objects with a `"cmd"` key (`ping`, `decode`, `job`, `metrics`,
+//!   `shutdown`); `job` embeds a [`crate::sim::JobSpec`] via its own
+//!   `to_json`/`from_json`, so the wire format reuses the
+//!   shard-artifact format instead of inventing a second one.
+//! - [`scheduler`] — the fan-out/resume/verify machinery that
+//!   `repro run --fanout` uses, extracted so the daemon schedules
+//!   `job` requests through the identical code path.
+//! - [`server`] — the accept loop, per-connection sessions with hot
+//!   [`crate::decode::DecodeWorkspace`]s, the process-wide standing-
+//!   assignment memo, and the HTTP `/metrics` counter endpoint.
+//!
+//! The client side lives in [`crate::load`]: a seeded deterministic
+//! traffic generator whose replay output is byte-reproducible.
+
+pub mod frame;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+
+pub use protocol::{DecodeRequest, Request};
+pub use scheduler::{run_fanout, ArtifactDir, FanoutPlan};
+pub use server::{serve, ServeConfig};

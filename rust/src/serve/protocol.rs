@@ -1,0 +1,275 @@
+//! Request/response schema of the serve socket.
+//!
+//! Every frame body is one JSON object. Requests carry a `"cmd"` key:
+//!
+//! ```text
+//! {"cmd": "ping"}
+//! {"cmd": "decode", "scheme": "frc", "k": 1000, "n": 1000, "s": 10,
+//!  "r": 800, "rounds": 32, "decoder": "onestep",
+//!  "assign_seed": "11", "seed": "42"}
+//! {"cmd": "job", "fanout": 4, "job": {<JobSpec::to_json form>}}
+//! {"cmd": "metrics"}
+//! {"cmd": "shutdown"}
+//! ```
+//!
+//! Replies are `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
+//! Seeds travel as decimal strings (the `JobSpec` artifact convention:
+//! u64 exceeds f64's exact-integer range), and the embedded job uses
+//! [`JobSpec::to_json`] verbatim, so the wire format and the
+//! shard-artifact format cannot drift apart.
+//!
+//! Responses are deterministic functions of the request: the
+//! standing assignment G is drawn from `assign_seed` (memoized
+//! server-side) and round `t` of a `decode` request forks stream `t`
+//! off `seed`, so the same request always yields the same error
+//! sequence — the property `repro load`'s byte-reproducible replay is
+//! built on.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::codes::Scheme;
+use crate::coordinator::DecoderKind;
+use crate::sim::JobSpec;
+use crate::util::Json;
+
+/// Upper bounds a single request may ask for — generous for real use,
+/// tight enough that a malicious frame cannot turn into an
+/// hours-long solve or a huge allocation.
+pub const MAX_DIM: usize = 1_000_000;
+pub const MAX_ROUNDS: usize = 1_000_000;
+pub const MAX_FANOUT: usize = 256;
+
+/// A standing-assignment decode request: run `rounds` straggler-draw +
+/// decode rounds against the (memoized) assignment G drawn from
+/// `(scheme, k, n, s, assign_seed)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecodeRequest {
+    pub scheme: Scheme,
+    pub k: usize,
+    pub n: usize,
+    pub s: usize,
+    /// Survivors per round (fastest-r uniform straggler draw).
+    pub r: usize,
+    pub rounds: usize,
+    pub decoder: DecoderKind,
+    /// Seed of the standing assignment (part of the server's memo key).
+    pub assign_seed: u64,
+    /// Root seed of the per-round straggler draws; round t forks
+    /// stream t, so rounds are independent of request batching.
+    pub seed: u64,
+}
+
+/// A parsed request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Decode(DecodeRequest),
+    Job { job: JobSpec, fanout: usize },
+    Metrics,
+    Shutdown,
+}
+
+fn seed_field(j: &Json, key: &str) -> Result<u64> {
+    // Decimal-string seeds, like the shard artifacts.
+    j.get(key)?.as_str()?.parse::<u64>().with_context(|| format!("field {key:?}"))
+}
+
+fn bounded(j: &Json, key: &str, lo: usize, hi: usize) -> Result<usize> {
+    let v = j.get(key)?.as_usize().with_context(|| format!("field {key:?}"))?;
+    if !(lo..=hi).contains(&v) {
+        bail!("field {key:?} = {v} out of range [{lo}, {hi}]");
+    }
+    Ok(v)
+}
+
+impl Request {
+    pub fn from_json(j: &Json) -> Result<Request> {
+        match j.get("cmd")?.as_str()? {
+            "ping" => Ok(Request::Ping),
+            "metrics" => Ok(Request::Metrics),
+            "shutdown" => Ok(Request::Shutdown),
+            "decode" => {
+                let scheme_name = j.get("scheme")?.as_str()?;
+                let scheme = Scheme::parse(scheme_name)
+                    .ok_or_else(|| anyhow!("unknown scheme {scheme_name:?}"))?;
+                let k = bounded(j, "k", 1, MAX_DIM)?;
+                let n = match j.opt("n") {
+                    Some(v) => v.as_usize().context("field \"n\"")?,
+                    None => k,
+                };
+                if !(1..=MAX_DIM).contains(&n) {
+                    bail!("field \"n\" = {n} out of range [1, {MAX_DIM}]");
+                }
+                let s = bounded(j, "s", 1, k)?;
+                let r = bounded(j, "r", 1, n)?;
+                let rounds = bounded(j, "rounds", 1, MAX_ROUNDS)?;
+                let decoder = match j.opt("decoder") {
+                    None => DecoderKind::OneStep,
+                    Some(v) => {
+                        let name = v.as_str()?;
+                        DecoderKind::parse(name)
+                            .ok_or_else(|| anyhow!("unknown decoder {name:?}"))?
+                    }
+                };
+                Ok(Request::Decode(DecodeRequest {
+                    scheme,
+                    k,
+                    n,
+                    s,
+                    r,
+                    rounds,
+                    decoder,
+                    assign_seed: seed_field(j, "assign_seed")?,
+                    seed: seed_field(j, "seed")?,
+                }))
+            }
+            "job" => {
+                let job = JobSpec::from_json(j.get("job")?).context("field \"job\"")?;
+                let fanout = match j.opt("fanout") {
+                    None => 2,
+                    Some(v) => {
+                        let f = v.as_usize().context("field \"fanout\"")?;
+                        if !(1..=MAX_FANOUT).contains(&f) {
+                            bail!("field \"fanout\" = {f} out of range [1, {MAX_FANOUT}]");
+                        }
+                        f
+                    }
+                };
+                Ok(Request::Job { job, fanout })
+            }
+            other => bail!("unknown cmd {other:?} (ping|decode|job|metrics|shutdown)"),
+        }
+    }
+
+    /// Serialize for the client side (`repro load` and tests).
+    /// `Request::from_json(&req.to_json())` reproduces `req` exactly.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        match self {
+            Request::Ping => {
+                m.insert("cmd".into(), Json::Str("ping".into()));
+            }
+            Request::Metrics => {
+                m.insert("cmd".into(), Json::Str("metrics".into()));
+            }
+            Request::Shutdown => {
+                m.insert("cmd".into(), Json::Str("shutdown".into()));
+            }
+            Request::Decode(d) => {
+                m.insert("cmd".into(), Json::Str("decode".into()));
+                m.insert("scheme".into(), Json::Str(d.scheme.name().into()));
+                m.insert("k".into(), Json::Num(d.k as f64));
+                m.insert("n".into(), Json::Num(d.n as f64));
+                m.insert("s".into(), Json::Num(d.s as f64));
+                m.insert("r".into(), Json::Num(d.r as f64));
+                m.insert("rounds".into(), Json::Num(d.rounds as f64));
+                m.insert("decoder".into(), Json::Str(d.decoder.name().into()));
+                m.insert("assign_seed".into(), Json::Str(d.assign_seed.to_string()));
+                m.insert("seed".into(), Json::Str(d.seed.to_string()));
+            }
+            Request::Job { job, fanout } => {
+                m.insert("cmd".into(), Json::Str("job".into()));
+                m.insert("job".into(), job.to_json());
+                m.insert("fanout".into(), Json::Num(*fanout as f64));
+            }
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Build an `{"ok": true, ...}` reply.
+pub fn ok_response(fields: Vec<(&str, Json)>) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("ok".to_string(), Json::Bool(true));
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Build an `{"ok": false, "error": ...}` reply.
+pub fn error_response(msg: &str) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("ok".to_string(), Json::Bool(false));
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::JobKind;
+    use crate::stragglers::Scenario;
+
+    fn sample_decode() -> DecodeRequest {
+        DecodeRequest {
+            scheme: Scheme::Rbgc,
+            k: 100,
+            n: 120,
+            s: 10,
+            r: 96,
+            rounds: 8,
+            decoder: DecoderKind::Optimal,
+            assign_seed: u64::MAX,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn requests_round_trip_through_json() {
+        let job = JobSpec {
+            kind: JobKind::Table,
+            id: "thm5".into(),
+            trials: 2000,
+            seed: u64::MAX - 1,
+            k: 100,
+            s: 10,
+            tmax: 0,
+            scenario: Scenario::default(),
+        };
+        for req in [
+            Request::Ping,
+            Request::Metrics,
+            Request::Shutdown,
+            Request::Decode(sample_decode()),
+            Request::Job { job, fanout: 4 },
+        ] {
+            let text = req.to_json().write();
+            let back = Request::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, req, "{text}");
+        }
+    }
+
+    #[test]
+    fn decode_defaults_and_bounds() {
+        let j = Json::parse(
+            r#"{"cmd": "decode", "scheme": "frc", "k": 50, "s": 5, "r": 40,
+                "rounds": 2, "assign_seed": "1", "seed": "2"}"#,
+        )
+        .unwrap();
+        let Request::Decode(d) = Request::from_json(&j).unwrap() else { panic!("decode") };
+        assert_eq!(d.n, 50, "n defaults to k");
+        assert_eq!(d.decoder, DecoderKind::OneStep, "decoder defaults to one-step");
+
+        for bad in [
+            r#"{"cmd": "decode", "scheme": "nope", "k": 50, "s": 5, "r": 40, "rounds": 2, "assign_seed": "1", "seed": "2"}"#,
+            r#"{"cmd": "decode", "scheme": "frc", "k": 0, "s": 5, "r": 40, "rounds": 2, "assign_seed": "1", "seed": "2"}"#,
+            r#"{"cmd": "decode", "scheme": "frc", "k": 50, "s": 51, "r": 40, "rounds": 2, "assign_seed": "1", "seed": "2"}"#,
+            r#"{"cmd": "decode", "scheme": "frc", "k": 50, "s": 5, "r": 51, "rounds": 2, "assign_seed": "1", "seed": "2"}"#,
+            r#"{"cmd": "decode", "scheme": "frc", "k": 50, "s": 5, "r": 40, "rounds": 0, "assign_seed": "1", "seed": "2"}"#,
+            r#"{"cmd": "decode", "scheme": "frc", "k": 50, "s": 5, "r": 40, "rounds": 2, "assign_seed": "-1", "seed": "2"}"#,
+            r#"{"cmd": "frobnicate"}"#,
+        ] {
+            assert!(Request::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn response_helpers_have_the_ok_discriminant() {
+        let ok = ok_response(vec![("pong", Json::Bool(true))]).write();
+        assert!(ok.contains("\"ok\":true"), "{ok}");
+        let err = error_response("boom").write();
+        assert!(err.contains("\"ok\":false"), "{err}");
+        assert!(err.contains("\"error\":\"boom\""), "{err}");
+    }
+}

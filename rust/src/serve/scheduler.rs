@@ -1,0 +1,344 @@
+//! The fan-out job scheduler: spawn `repro shard` children, wait,
+//! verify, merge.
+//!
+//! This is `repro run --fanout N`'s driver, extracted from the CLI so
+//! the serve daemon can schedule `job` requests through the exact same
+//! machinery (`main.rs`'s `cmd_run` is now a thin flag-parsing shim
+//! over [`run_fanout`]). Progress goes to stderr, results come back as
+//! a [`MergedRun`], and failures are `anyhow` errors — usage-level
+//! validation (exit-2 discipline) stays in the CLI.
+//!
+//! Artifact-directory policy ([`ArtifactDir`]):
+//!
+//! * `Temp` — a pid-named directory under the OS temp dir, **cleared
+//!   if it already exists** (a leftover from a crashed run whose pid
+//!   got recycled would otherwise mix stale shard artifacts into this
+//!   run's verify/merge set), and removed again on exit, success or
+//!   failure.
+//! * `Keep` — an explicit `--artifacts-dir`: created if absent, but a
+//!   directory that already holds shard artifacts is **refused** (the
+//!   same stale-mixing hazard; pass `Resume` to reuse them
+//!   deliberately, or point at a clean directory).
+//! * `Resume` — reuse every artifact in the directory that parses
+//!   (checksum-verified) and matches this exact job and shard count;
+//!   respawn only the missing or corrupt shards.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::shard::TABLES_WITH_S;
+use crate::sim::{JobKind, JobSpec, MergedRun, ShardArtifact};
+
+/// Where a fan-out run keeps its shard artifacts.
+#[derive(Clone, Debug)]
+pub enum ArtifactDir {
+    /// Fresh pid-named temp dir, removed after the run.
+    Temp,
+    /// Explicit directory, kept after the run; must not already hold
+    /// artifacts.
+    Keep(PathBuf),
+    /// Explicit directory whose valid artifacts are reused; only
+    /// missing/corrupt shards are respawned. Kept after the run.
+    Resume(PathBuf),
+}
+
+/// One fan-out run, fully specified.
+#[derive(Clone, Debug)]
+pub struct FanoutPlan {
+    pub job: JobSpec,
+    /// Number of shard processes (>= 1; the CLI validates before
+    /// building a plan, the library re-checks).
+    pub fanout: usize,
+    pub dir: ArtifactDir,
+    /// Explicit per-child `--threads`; `None` splits the machine's
+    /// worker budget across the children that actually spawn.
+    pub threads: Option<usize>,
+}
+
+/// The artifacts (`*.json` files) already present in `dir`, sorted.
+fn existing_artifacts(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut found = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(found),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", dir.display())),
+    };
+    for entry in entries {
+        let path = entry.with_context(|| format!("reading {}", dir.display()))?.path();
+        if path.extension().is_some_and(|e| e == "json") {
+            found.push(path);
+        }
+    }
+    found.sort();
+    Ok(found)
+}
+
+/// Resolve the plan's directory policy: returns `(dir, keep)` with the
+/// directory existing and safe to write shard artifacts into.
+fn prepare_dir(plan: &FanoutPlan) -> Result<(PathBuf, bool)> {
+    match &plan.dir {
+        ArtifactDir::Temp => {
+            let d = std::env::temp_dir().join(format!(
+                "gradcode-fanout-{}-{}-{}",
+                std::process::id(),
+                plan.job.kind.name(),
+                plan.job.id
+            ));
+            // The name embeds this process's pid, so anything already
+            // there is a leftover from a crashed run whose pid got
+            // recycled — clear it rather than merge its stale shards.
+            match std::fs::remove_dir_all(&d) {
+                Ok(()) => eprintln!(
+                    "clearing stale temp artifacts dir {} (crashed run with a recycled pid)",
+                    d.display()
+                ),
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => {
+                    return Err(e).with_context(|| format!("clearing stale {}", d.display()))
+                }
+            }
+            std::fs::create_dir_all(&d).with_context(|| format!("creating {}", d.display()))?;
+            Ok((d, false))
+        }
+        ArtifactDir::Keep(d) => {
+            let stale = existing_artifacts(d)?;
+            if let Some(first) = stale.first() {
+                bail!(
+                    "artifacts dir {} already holds {} shard artifact(s) (e.g. {}); a \
+                     non-resume run would mix them into a fresh verify/merge set — pass \
+                     --resume to reuse them, or choose a clean directory",
+                    d.display(),
+                    stale.len(),
+                    first.display()
+                );
+            }
+            std::fs::create_dir_all(d).with_context(|| format!("creating {}", d.display()))?;
+            Ok((d.clone(), true))
+        }
+        ArtifactDir::Resume(d) => {
+            std::fs::create_dir_all(d).with_context(|| format!("creating {}", d.display()))?;
+            Ok((d.clone(), true))
+        }
+    }
+}
+
+/// The argv a fan-out child gets: the job reconstructed flag by flag
+/// (so the child's JobSpec is identical to the parent's and the
+/// artifacts merge), plus the shard header and output path.
+fn shard_child_args(
+    job: &JobSpec,
+    shard_id: usize,
+    num_shards: usize,
+    out: &Path,
+    threads: Option<usize>,
+) -> Vec<String> {
+    let mut v: Vec<String> = vec!["shard".into()];
+    match job.kind {
+        JobKind::Figure => {
+            v.push("--fig".into());
+            v.push(job.id.clone());
+            if job.id == "5" {
+                v.push("--tmax".into());
+                v.push(job.tmax.to_string());
+            }
+        }
+        JobKind::Table => {
+            v.push("--table".into());
+            v.push(job.id.clone());
+            // Derived-s tables reject --s; their JobSpec carries the
+            // default, which the child reproduces by omission.
+            if TABLES_WITH_S.contains(&job.id.as_str()) {
+                v.push("--s".into());
+                v.push(job.s.to_string());
+            }
+        }
+        JobKind::Ablation => {
+            v.push("--ablation".into());
+            v.push(job.id.clone());
+            v.push("--s".into());
+            v.push(job.s.to_string());
+        }
+        JobKind::Scenario => {
+            v.push("--scenario".into());
+            v.push(job.id.clone());
+            v.push("--s".into());
+            v.push(job.s.to_string());
+        }
+    }
+    for (flag, val) in [
+        ("--trials", job.trials.to_string()),
+        ("--seed", job.seed.to_string()),
+        ("--k", job.k.to_string()),
+        // Canonical scenario string: the child's parse reproduces the
+        // parent's Scenario exactly (the parent cross-checks anyway).
+        ("--stragglers", job.scenario.to_string()),
+        ("--shard-id", shard_id.to_string()),
+        ("--num-shards", num_shards.to_string()),
+    ] {
+        v.push(flag.into());
+        v.push(val);
+    }
+    v.push("--out".into());
+    v.push(out.to_string_lossy().into_owned());
+    if let Some(t) = threads {
+        v.push("--threads".into());
+        v.push(t.to_string());
+    }
+    v
+}
+
+/// The collection half: wait for all shard children, parse their
+/// artifacts, verify the set against the **parent's** job (the
+/// children reconstruct it from `shard_child_args`' flags, so a missed
+/// flag would otherwise make every child consistently wrong and sail
+/// through the mutual-consistency checks), and merge.
+fn wait_verify_merge(
+    job: &JobSpec,
+    children: Vec<(usize, PathBuf, std::process::Child)>,
+    mut failures: Vec<String>,
+    reused: Vec<ShardArtifact>,
+) -> Result<MergedRun> {
+    let mut artifacts = reused;
+    for (sid, out, mut child) in children {
+        let status = match child.wait() {
+            Ok(status) => status,
+            Err(e) => {
+                failures.push(format!("waiting for shard {sid}: {e}"));
+                continue;
+            }
+        };
+        if !status.success() {
+            failures.push(format!("shard {sid} exited with {status}"));
+            continue;
+        }
+        match std::fs::read_to_string(&out) {
+            Ok(text) => match ShardArtifact::parse(&text) {
+                Ok(a) if a.job != *job => failures.push(format!(
+                    "shard {sid} computed a different job than requested: {:?} vs {:?} \
+                     (shard_child_args out of step with a job flag?)",
+                    a.job, job
+                )),
+                Ok(a) => artifacts.push(a),
+                Err(e) => failures.push(format!("shard {sid}: {e:#}")),
+            },
+            Err(e) => failures.push(format!("shard {sid}: reading {}: {e}", out.display())),
+        }
+    }
+    if !failures.is_empty() {
+        bail!("fan-out failed: {}", failures.join("; "));
+    }
+    ShardArtifact::verify_set(&artifacts)?;
+    Ok(ShardArtifact::merge(artifacts)?)
+}
+
+/// Run the whole fan-out cycle: prepare the artifacts dir, reuse valid
+/// artifacts when resuming, spawn `exe shard ...` children for the
+/// missing shards, wait, verify, merge. `exe` is the `repro` binary to
+/// spawn (the CLI and the serve daemon both pass
+/// `std::env::current_exe()`).
+pub fn run_fanout(exe: &Path, plan: &FanoutPlan) -> Result<MergedRun> {
+    let job = &plan.job;
+    let fanout = plan.fanout;
+    if fanout == 0 {
+        bail!("fanout must be at least 1");
+    }
+    let resuming = matches!(plan.dir, ArtifactDir::Resume(_));
+    let (dir, keep) = prepare_dir(plan)?;
+
+    // Resume: reuse every artifact in the directory that parses
+    // (checksum-verified) and belongs to this exact job and shard
+    // count; everything else — absent, corrupt, or foreign — leaves
+    // its shard ids in the respawn set.
+    let mut reused: Vec<ShardArtifact> = Vec::new();
+    let mut covered: Vec<usize> = Vec::new();
+    if resuming {
+        for path in existing_artifacts(&dir)? {
+            let text = match std::fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("resume: skipping unreadable {} ({e})", path.display());
+                    continue;
+                }
+            };
+            match ShardArtifact::parse(&text) {
+                Ok(a) if a.job == *job && a.num_shards == fanout => {
+                    covered.extend(a.shard_ids.iter().copied());
+                    reused.push(a);
+                }
+                Ok(a) => eprintln!(
+                    "resume: skipping {} (different job or shard count: {} {} x{})",
+                    path.display(),
+                    a.job.kind.name(),
+                    a.job.id,
+                    a.num_shards
+                ),
+                Err(e) => eprintln!(
+                    "resume: discarding corrupt {} ({e:#}); its shard will be recomputed",
+                    path.display()
+                ),
+            }
+        }
+        covered.sort_unstable();
+        if let Some(w) = covered.windows(2).find(|w| w[0] == w[1]) {
+            bail!(
+                "resume dir {} covers shard id {} more than once (overlapping artifacts); \
+                 remove the extras before resuming",
+                dir.display(),
+                w[0]
+            );
+        }
+    }
+    let missing: Vec<usize> = (0..fanout).filter(|i| !covered.contains(i)).collect();
+    // Without an explicit thread count, split the machine's worker
+    // budget across the children that actually spawn — the respawn
+    // set, not the nominal fanout, so a resume of one missing shard
+    // still gets the whole machine. Results are thread-count
+    // invariant; this only affects wall-clock.
+    let threads = match plan.threads {
+        Some(t) => Some(t),
+        None => {
+            Some((crate::util::parallel::default_threads() / missing.len().max(1)).max(1))
+        }
+    };
+    if resuming {
+        eprintln!(
+            "resuming {} {}: {}/{fanout} shard(s) present in {}, respawning {:?}",
+            job.kind.name(),
+            job.id,
+            covered.len(),
+            dir.display(),
+            missing
+        );
+    } else {
+        eprintln!(
+            "fanning {} {} out across {fanout} shard processes (artifacts in {})",
+            job.kind.name(),
+            job.id,
+            dir.display()
+        );
+    }
+    let mut children = Vec::new();
+    let mut spawn_errors: Vec<String> = Vec::new();
+    for &sid in &missing {
+        let out =
+            dir.join(format!("{}_{}_shard_{sid}_of_{fanout}.json", job.kind.name(), job.id));
+        match std::process::Command::new(exe)
+            .args(shard_child_args(job, sid, fanout, &out, threads))
+            .spawn()
+        {
+            Ok(child) => children.push((sid, out, child)),
+            Err(e) => spawn_errors.push(format!("spawning shard {sid}: {e}")),
+        }
+    }
+    // Wait for every spawned child (even after a spawn failure, so none
+    // are left running), then verify + merge. The temp artifacts dir is
+    // removed on success AND failure — temporary artifacts never
+    // outlive the run; use Keep or Resume to retain them for debugging
+    // or resumption.
+    let outcome = wait_verify_merge(job, children, spawn_errors, reused);
+    if !keep {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    outcome
+}

@@ -1,0 +1,337 @@
+//! The `repro serve` daemon: TCP listener, per-connection sessions,
+//! shared assignment memo, metrics, shutdown.
+//!
+//! One OS thread per connection. Each session owns a hot
+//! [`DecodeWorkspace`] reused across every request on that connection
+//! (steady-state decode rounds allocate nothing), plus the CSR mirror
+//! of whichever standing assignment it decoded last — switching
+//! assignments re-mirrors, staying on one does not. The standing
+//! assignments themselves are memoized process-wide behind a mutex
+//! keyed by `(scheme, k, n, s, assign_seed)`, so concurrent clients
+//! decoding the same configuration share one `Arc<CscMatrix>` instead
+//! of redrawing G per request.
+//!
+//! The same port speaks two protocols, disambiguated by the first four
+//! bytes: a legal frame prefix is at most [`frame::MAX_FRAME`]
+//! (16 MiB), while ASCII `"GET "` reads as ~1.2e9, so an HTTP request
+//! can never be mistaken for a frame. HTTP gets the plain-text
+//! `/metrics` counters ([`ServeMetrics::render`]) and the connection
+//! closes; everything else is length-prefixed JSON frames
+//! ([`super::protocol`]).
+//!
+//! A request that panics (a parameter combination an assignment
+//! builder asserts on) kills only its session thread — the client sees
+//! a dropped connection, the daemon keeps serving.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{DecoderKind, ServeMetrics};
+use crate::decode::{DecodeWorkspace, OneStepDecoder};
+use crate::linalg::{CscMatrix, LsqrOptions};
+use crate::util::{Json, Rng};
+
+use super::frame::{self, FrameError};
+use super::protocol::{error_response, ok_response, DecodeRequest, Request};
+use super::scheduler::{run_fanout, ArtifactDir, FanoutPlan};
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:7117`; port 0 picks an ephemeral
+    /// port (the bound address is printed as `listening on ADDR`).
+    pub addr: String,
+    /// Path of the `repro` binary to spawn for fan-out `job` requests
+    /// (the daemon schedules them through `scheduler::run_fanout`).
+    pub exe: PathBuf,
+}
+
+/// Memo key of a standing assignment. `Scheme::name()` is a unique
+/// `&'static str` per variant, which keeps the key `Hash + Eq` without
+/// demanding those derives of `Scheme` itself.
+type AssignKey = (&'static str, usize, usize, usize, u64);
+
+struct Shared {
+    metrics: ServeMetrics,
+    assignments: Mutex<HashMap<AssignKey, Arc<CscMatrix>>>,
+    shutdown: AtomicBool,
+    listen_addr: SocketAddr,
+    exe: PathBuf,
+}
+
+/// Run the daemon until a `shutdown` request arrives. Blocks the
+/// calling thread; prints `listening on ADDR` to stdout once the
+/// socket is bound (stdout is line-buffered, so supervisors and tests
+/// can wait for that line even through a pipe).
+pub fn serve(cfg: &ServeConfig) -> Result<()> {
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let listen_addr = listener.local_addr().context("reading the bound address")?;
+    println!("listening on {listen_addr}");
+    eprintln!(
+        "repro serve: length-prefixed JSON frames on {listen_addr} \
+         (HTTP GET /metrics on the same port); send {{\"cmd\": \"shutdown\"}} to stop"
+    );
+    let shared = Arc::new(Shared {
+        metrics: ServeMetrics::new(),
+        assignments: Mutex::new(HashMap::new()),
+        shutdown: AtomicBool::new(false),
+        listen_addr,
+        exe: cfg.exe.clone(),
+    });
+    for conn in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || session(stream, shared));
+            }
+            Err(e) => eprintln!("repro serve: accept failed: {e}"),
+        }
+    }
+    eprintln!(
+        "repro serve: shutting down after {} request(s) on {} connection(s)",
+        shared.metrics.requests.load(Ordering::Relaxed),
+        shared.metrics.connections.load(Ordering::Relaxed),
+    );
+    Ok(())
+}
+
+/// What handling one request produced.
+struct Handled {
+    reply: Json,
+    is_error: bool,
+    /// Decode rounds executed (for the rounds counter).
+    rounds: u64,
+    shutdown: bool,
+}
+
+fn session(stream: TcpStream, shared: Arc<Shared>) {
+    shared.metrics.observe_connection();
+    let _ = stream.set_nodelay(true);
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(e) => {
+            eprintln!("repro serve: cloning connection: {e}");
+            return;
+        }
+    };
+    let mut writer = BufWriter::new(stream);
+    // Per-connection hot state: the workspace survives across requests,
+    // and `mirrored` names the standing assignment its CSR mirror
+    // currently matches (one-step decodes re-mirror only on switch).
+    let mut ws = DecodeWorkspace::new();
+    let mut mirrored: Option<AssignKey> = None;
+    loop {
+        let prefix = match frame::read_prefix(&mut reader) {
+            Ok(p) => p,
+            Err(FrameError::Closed) => return,
+            Err(_) => {
+                // EOF mid-prefix or a socket error: dropped client.
+                shared.metrics.observe_error();
+                return;
+            }
+        };
+        if &prefix == b"GET " {
+            let _ = serve_http(&mut reader, &mut writer, &shared);
+            return;
+        }
+        let body = match frame::read_body(&mut reader, u32::from_be_bytes(prefix)) {
+            Ok(b) => b,
+            Err(e @ (FrameError::Oversized { .. } | FrameError::BadUtf8)) => {
+                // The frame boundary is lost (Oversized never consumed
+                // the body), so reply with an error frame and close.
+                shared.metrics.observe_error();
+                let _ = frame::write_frame(&mut writer, &error_response(&e.to_string()).write());
+                return;
+            }
+            Err(_) => {
+                // Truncated mid-body or socket error: dropped client.
+                shared.metrics.observe_error();
+                return;
+            }
+        };
+        let start = Instant::now();
+        let handled = handle(&body, &shared, &mut ws, &mut mirrored);
+        // Record metrics before replying, so a client that has seen its
+        // reply also sees itself in a subsequent /metrics scrape.
+        shared.metrics.observe_request(start.elapsed().as_nanos() as u64);
+        if handled.is_error {
+            shared.metrics.observe_error();
+        }
+        if handled.rounds > 0 {
+            shared.metrics.add_rounds(handled.rounds);
+        }
+        if frame::write_frame(&mut writer, &handled.reply.write()).is_err() {
+            return;
+        }
+        if handled.shutdown {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            // Wake the acceptor loop so it observes the flag.
+            let _ = TcpStream::connect(shared.listen_addr);
+            return;
+        }
+    }
+}
+
+fn handle(
+    body: &str,
+    shared: &Arc<Shared>,
+    ws: &mut DecodeWorkspace,
+    mirrored: &mut Option<AssignKey>,
+) -> Handled {
+    let parsed = Json::parse(body).and_then(|j| Request::from_json(&j));
+    let req = match parsed {
+        Ok(r) => r,
+        Err(e) => {
+            return Handled {
+                reply: error_response(&format!("{e:#}")),
+                is_error: true,
+                rounds: 0,
+                shutdown: false,
+            }
+        }
+    };
+    match req {
+        Request::Ping => Handled {
+            reply: ok_response(vec![("pong", Json::Bool(true))]),
+            is_error: false,
+            rounds: 0,
+            shutdown: false,
+        },
+        Request::Metrics => Handled {
+            reply: ok_response(vec![("metrics", Json::Str(shared.metrics.render()))]),
+            is_error: false,
+            rounds: 0,
+            shutdown: false,
+        },
+        Request::Shutdown => Handled {
+            reply: ok_response(vec![("shutdown", Json::Bool(true))]),
+            is_error: false,
+            rounds: 0,
+            shutdown: true,
+        },
+        Request::Decode(d) => match run_decode(&d, shared, ws, mirrored) {
+            Ok(reply) => {
+                Handled { reply, is_error: false, rounds: d.rounds as u64, shutdown: false }
+            }
+            Err(e) => Handled {
+                reply: error_response(&format!("{e:#}")),
+                is_error: true,
+                rounds: 0,
+                shutdown: false,
+            },
+        },
+        Request::Job { job, fanout } => {
+            shared.metrics.observe_job();
+            let plan = FanoutPlan { job, fanout, dir: ArtifactDir::Temp, threads: None };
+            match run_fanout(&shared.exe, &plan) {
+                Ok(merged) => Handled {
+                    reply: ok_response(vec![("csv", Json::Str(merged.to_csv()))]),
+                    is_error: false,
+                    rounds: 0,
+                    shutdown: false,
+                },
+                Err(e) => Handled {
+                    reply: error_response(&format!("{e:#}")),
+                    is_error: true,
+                    rounds: 0,
+                    shutdown: false,
+                },
+            }
+        }
+    }
+}
+
+/// The memoized standing assignment for a decode request; first use
+/// draws it from `assign_seed` (inside the lock: concurrent first
+/// requests serialize briefly, but G is built exactly once).
+fn standing_assignment(shared: &Shared, d: &DecodeRequest) -> Arc<CscMatrix> {
+    let key: AssignKey = (d.scheme.name(), d.k, d.n, d.s, d.assign_seed);
+    let mut memo = shared.assignments.lock().expect("assignment memo poisoned");
+    Arc::clone(memo.entry(key).or_insert_with(|| {
+        let mut rng = Rng::new(d.assign_seed);
+        Arc::new(d.scheme.build(d.k, d.n, d.s).assignment(&mut rng))
+    }))
+}
+
+/// Run a decode request's rounds. Round t forks stream t off the
+/// request seed, so the reply is a pure function of the request — the
+/// determinism `repro load`'s byte-reproducible replay relies on.
+fn run_decode(
+    d: &DecodeRequest,
+    shared: &Shared,
+    ws: &mut DecodeWorkspace,
+    mirrored: &mut Option<AssignKey>,
+) -> Result<Json> {
+    let g = standing_assignment(shared, d);
+    let rho = OneStepDecoder::canonical(d.k, d.r, d.s).rho;
+    let root = Rng::new(d.seed);
+    let mut errs = Vec::with_capacity(d.rounds);
+    match d.decoder {
+        DecoderKind::OneStep => {
+            // One-step rounds stream over the CSR mirror (bit-identical
+            // to the CSC path); re-mirror only on assignment switch.
+            let key: AssignKey = (d.scheme.name(), d.k, d.n, d.s, d.assign_seed);
+            if *mirrored != Some(key) {
+                ws.mirror_csr(&g);
+                *mirrored = Some(key);
+            }
+            for t in 0..d.rounds {
+                let mut rng = root.fork(t as u64);
+                errs.push(ws.onestep_trial_streamed(d.r, rho, &mut rng));
+            }
+        }
+        DecoderKind::Optimal => {
+            let opts = LsqrOptions::default();
+            for t in 0..d.rounds {
+                let mut rng = root.fork(t as u64);
+                errs.push(ws.optimal_trial(&g, d.r, &opts, Some(rho), &mut rng));
+            }
+        }
+    }
+    Ok(ok_response(vec![
+        ("rounds", Json::Num(d.rounds as f64)),
+        ("errs", Json::Arr(errs.into_iter().map(Json::Num).collect())),
+    ]))
+}
+
+/// Minimal HTTP/1.0 for the `/metrics` endpoint. The `"GET "` bytes
+/// were already consumed as a would-be frame prefix; read the rest of
+/// the request line for the path, drain the headers, answer, close.
+fn serve_http(
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    shared: &Shared,
+) -> std::io::Result<()> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let path = line.split_whitespace().next().unwrap_or("").to_string();
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 || header.trim().is_empty() {
+            break;
+        }
+    }
+    let (status, body) = if path == "/metrics" {
+        ("200 OK", shared.metrics.render())
+    } else {
+        ("404 Not Found", "only /metrics is served\n".to_string())
+    };
+    write!(
+        writer,
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    writer.flush()
+}

@@ -583,6 +583,21 @@ impl JobSpec {
             }
         }
     }
+
+    /// The canonical JSON form of this job — the same encoding the
+    /// shard-artifact format embeds, reused verbatim as the serve-socket
+    /// wire format (`serve::protocol`). Seeds travel as decimal strings
+    /// (u64 exceeds f64's exact-integer range) and the scenario as its
+    /// canonical parse-fixed-point string.
+    pub fn to_json(&self) -> Json {
+        job_to_json(self)
+    }
+
+    /// Parse [`JobSpec::to_json`]'s encoding back. An absent `scenario`
+    /// field means the uniform default (v1/v2 artifacts predate it).
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        job_from_json(j)
+    }
 }
 
 // --------------------------------------------------------- ShardPoints
@@ -1306,6 +1321,18 @@ pub const FIGURE_IDS: [&str; 4] = ["fig2", "fig3", "fig4", "fig5"];
 /// match in step when extending it).
 pub const TABLE_IDS: [&str; 8] =
     ["thm3", "thm5", "thm6", "thm8", "thm10", "thm11", "thm21", "thm24"];
+
+/// The tables whose `--s` flag is meaningful; the rest derive s
+/// internally (thm8: log-threshold, thm21/24: ln k, thm11: fixed
+/// instance) and reject the flag. Shared by the CLI's flag validation
+/// and the fan-out scheduler's child-argv reconstruction
+/// (`serve::scheduler`), which must agree on when `--s` is legal.
+pub const TABLES_WITH_S: [&str; 4] = ["thm3", "thm5", "thm6", "thm10"];
+
+/// The tables with no uniform straggler sampling to swap out (thm3:
+/// spectral, thm10/thm11: their own adversarial protocol); they reject
+/// `--stragglers` rather than silently ignore it.
+pub const TABLES_WITHOUT_SCENARIO: [&str; 3] = ["thm3", "thm10", "thm11"];
 
 /// Every ablation study id the CLI (`repro ablation --study`,
 /// `repro shard --ablation`, `repro run --ablation`) and

@@ -75,10 +75,19 @@ impl Json {
 
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
-        if x < 0.0 || x.fract() != 0.0 {
+        if !(x >= 0.0 && x < 18_446_744_073_709_551_616.0) || x.fract() != 0.0 {
             bail!("not a non-negative integer: {x}");
         }
-        Ok(x as usize)
+        // Past 2^53 (and past usize::MAX on 32-bit targets) `x as usize`
+        // saturates or lands on a value the document never contained, so
+        // a corrupted trial count or shard id would parse to a silently
+        // wrong number. Accept only values that survive the
+        // usize -> f64 -> usize round trip exactly.
+        let u = x as usize;
+        if u as f64 != x {
+            bail!("integer {x} does not round-trip through f64 exactly (precision lost)");
+        }
+        Ok(u)
     }
 
     pub fn as_str(&self) -> Result<&str> {
@@ -467,6 +476,27 @@ mod tests {
         assert!(Json::Num(1.5).as_usize().is_err());
         assert!(Json::Num(-1.0).as_usize().is_err());
         assert_eq!(Json::Num(7.0).as_usize().unwrap(), 7);
+    }
+
+    #[test]
+    fn as_usize_rejects_values_that_lost_integer_precision() {
+        // 1e300 has a zero fraction but `as usize` would saturate to
+        // usize::MAX; the old accessor accepted it silently.
+        assert!(Json::parse("1e300").unwrap().as_usize().is_err());
+        // 2^64 saturates too — and deceptively compares equal after the
+        // saturating cast, so the range check must fire first.
+        assert!(Json::parse("18446744073709551616").unwrap().as_usize().is_err());
+        assert!(Json::Num(f64::INFINITY).as_usize().is_err());
+        assert!(Json::Num(f64::NAN).as_usize().is_err());
+        // 2^53 is the last f64 with unit spacing; it round-trips.
+        assert_eq!(Json::parse("9007199254740992").unwrap().as_usize().unwrap(), 1usize << 53);
+        // Exactly-representable values above 2^53 still round-trip and
+        // stay accepted (u64 seeds travel as strings, but large exact
+        // counts are legitimate).
+        assert_eq!(
+            Json::parse("1152921504606846976").unwrap().as_usize().unwrap(),
+            1usize << 60
+        );
     }
 
     #[test]

@@ -95,6 +95,56 @@ fn resume_respawns_only_missing_and_corrupt_shards() {
 }
 
 #[test]
+fn non_resume_run_refuses_a_dir_with_stale_artifacts() {
+    let dir = std::env::temp_dir().join(format!("gradcode-stale-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_str().expect("utf-8 temp dir");
+
+    let job_args =
+        ["--table", "thm5", "--trials", "40", "--k", "12", "--s", "3", "--threads", "1"];
+    let mut run_cmd: Vec<&str> = vec!["run", "--fanout", "2", "--artifacts-dir", dir_s];
+    run_cmd.extend_from_slice(&job_args);
+
+    // First run populates the directory (simulating a crashed or
+    // completed earlier run that left its shard artifacts behind).
+    run_ok(&run_cmd);
+    assert_eq!(artifact_paths(&dir).len(), 2);
+
+    // A second NON-resume run pointed at the same directory must
+    // refuse: silently reusing (or mixing with) the stale artifacts
+    // would corrupt the fresh verify/merge set.
+    let out = Command::new(BIN).args(&run_cmd).output().expect("spawning repro");
+    assert!(!out.status.success(), "non-resume run accepted a dir holding stale artifacts");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("already holds") && stderr.contains("--resume"),
+        "refusal should name the hazard and point at --resume:\n{stderr}"
+    );
+    // Refusal happens before any child spawns: the stale artifacts are
+    // untouched, so --resume can still pick them up.
+    assert_eq!(artifact_paths(&dir).len(), 2, "refusal must not disturb the artifacts");
+
+    // The escape hatches both work: --resume reuses the set as-is...
+    let (unsharded, _) = {
+        let mut c: Vec<&str> = vec!["tables"];
+        c.extend_from_slice(&job_args);
+        run_ok(&c)
+    };
+    let mut resume_cmd: Vec<&str> = vec!["run", "--fanout", "2", "--resume", dir_s];
+    resume_cmd.extend_from_slice(&job_args);
+    let (csv, stderr) = run_ok(&resume_cmd);
+    assert_eq!(csv, unsharded);
+    assert!(stderr.contains("2/2 shard(s) present"), "resume should reuse both:\n{stderr}");
+
+    // ...and a clean directory satisfies the non-resume path.
+    let _ = std::fs::remove_dir_all(&dir);
+    let (csv, _) = run_ok(&run_cmd);
+    assert_eq!(csv, unsharded);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn resume_ignores_foreign_artifacts() {
     let dir = std::env::temp_dir().join(format!("gradcode-resume-foreign-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);

@@ -1,0 +1,327 @@
+//! Integration tests for the serving layer: the `repro serve` daemon
+//! and the `repro load` traffic generator.
+//!
+//! Each test spawns its own daemon on an ephemeral port (`--addr
+//! 127.0.0.1:0`) and reads the bound address off the readiness line,
+//! so tests run in parallel without port races. The frame helpers come
+//! from the library itself (`gradcode::serve::frame`) except where a
+//! test deliberately writes garbage bytes.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use gradcode::codes::Scheme;
+use gradcode::decode::{DecodeWorkspace, OneStepDecoder};
+use gradcode::serve::frame;
+use gradcode::sim::{JobKind, JobSpec};
+use gradcode::stragglers::Scenario;
+use gradcode::util::{Json, Rng};
+
+const BIN: &str = env!("CARGO_BIN_EXE_gradcode");
+
+/// A daemon child on an ephemeral port, killed on drop.
+struct Server {
+    child: Option<Child>,
+    addr: String,
+}
+
+impl Server {
+    fn start() -> Server {
+        let mut child = Command::new(BIN)
+            .args(["serve", "--addr", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning repro serve");
+        let stdout = child.stdout.take().expect("daemon stdout");
+        let line = BufReader::new(stdout)
+            .lines()
+            .next()
+            .expect("daemon readiness line")
+            .expect("utf-8 readiness line");
+        let addr = line
+            .strip_prefix("listening on ")
+            .unwrap_or_else(|| panic!("unexpected readiness line {line:?}"))
+            .to_string();
+        Server { child: Some(child), addr }
+    }
+
+    fn connect(&self) -> TcpStream {
+        let s = TcpStream::connect(&self.addr).expect("connecting to daemon");
+        s.set_read_timeout(Some(Duration::from_secs(120))).expect("read timeout");
+        s
+    }
+
+    /// Graceful stop: shutdown frame, ok reply, clean exit status.
+    fn shutdown(mut self) {
+        let mut conn = self.connect();
+        let reply = request(&mut conn, "{\"cmd\":\"shutdown\"}");
+        assert!(reply.contains("\"ok\":true"), "shutdown not acknowledged: {reply}");
+        let status = self.child.take().expect("child").wait().expect("waiting for daemon");
+        assert!(status.success(), "daemon exited with {status:?}");
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(mut c) = self.child.take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// One request/reply exchange over an open connection.
+fn request(conn: &mut TcpStream, body: &str) -> String {
+    frame::write_frame(conn, body).expect("sending frame");
+    frame::read_frame(conn).expect("reading reply frame")
+}
+
+/// Run `repro load` against `addr`, assert success, return
+/// (stdout replay, stderr report).
+fn load(addr: &str, extra: &[&str]) -> (String, String) {
+    let mut args = vec!["load", "--addr", addr];
+    args.extend_from_slice(extra);
+    let out = Command::new(BIN).args(&args).output().expect("spawning repro load");
+    assert!(
+        out.status.success(),
+        "repro {args:?} failed (status {:?}):\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (
+        String::from_utf8(out.stdout).expect("utf-8 stdout"),
+        String::from_utf8(out.stderr).expect("utf-8 stderr"),
+    )
+}
+
+#[test]
+fn load_replay_is_byte_identical_across_runs_and_concurrency() {
+    let server = Server::start();
+    let base = ["--requests", "10", "--seed", "7", "--k", "24", "--s", "4", "--rounds", "3"];
+
+    let run = |concurrency: &str, seed: &str| {
+        let mut extra = base.to_vec();
+        extra.extend_from_slice(&["--concurrency", concurrency, "--seed", seed]);
+        load(&server.addr, &extra)
+    };
+
+    // Same seed, same concurrency: byte-identical replays.
+    let (a, report) = run("2", "7");
+    let (b, _) = run("2", "7");
+    assert_eq!(a, b, "replay differs between identical runs");
+
+    // Same seed, different concurrency: still byte-identical — the
+    // replay is a pure function of (seed, template), not of scheduling.
+    let (c, _) = run("5", "7");
+    assert_eq!(a, c, "replay depends on concurrency");
+
+    // Different seed: different bytes.
+    let (d, _) = run("2", "8");
+    assert_ne!(a, d, "seed does not reach the replay");
+
+    // Shape: header comment, per-request rows, error histogram.
+    assert!(a.starts_with("# repro load replay: seed=7"), "missing header:\n{a}");
+    assert!(a.contains("request,seed,mean_err"), "missing row header:\n{a}");
+    assert!(a.contains("bucket,count"), "missing histogram:\n{a}");
+    let data_rows = a
+        .lines()
+        .skip_while(|l| !l.starts_with("request,seed"))
+        .skip(1)
+        .take_while(|l| *l != "bucket,count")
+        .count();
+    assert_eq!(data_rows, 10, "expected one replay row per request:\n{a}");
+    assert!(report.contains("latency:"), "missing latency report:\n{report}");
+    assert!(report.contains("throughput:"), "missing throughput report:\n{report}");
+}
+
+#[test]
+fn protocol_errors_reply_error_frames_and_do_not_kill_the_daemon() {
+    let server = Server::start();
+
+    // Malformed JSON: error frame, connection stays usable.
+    let mut conn = server.connect();
+    let reply = request(&mut conn, "{not json");
+    assert!(reply.contains("\"ok\":false"), "malformed JSON not rejected: {reply}");
+    let pong = request(&mut conn, "{\"cmd\":\"ping\"}");
+    assert!(pong.contains("\"ok\":true"), "connection dead after bad JSON: {pong}");
+
+    // Unknown command: same deal.
+    let reply = request(&mut conn, "{\"cmd\":\"frobnicate\"}");
+    assert!(
+        reply.contains("\"ok\":false") && reply.contains("unknown cmd"),
+        "unknown cmd not rejected: {reply}"
+    );
+    assert!(request(&mut conn, "{\"cmd\":\"ping\"}").contains("\"ok\":true"));
+
+    // Oversized length prefix: error frame, then the server closes (the
+    // frame boundary is unrecoverable).
+    let mut conn = server.connect();
+    conn.write_all(&u32::MAX.to_be_bytes()).expect("writing oversized prefix");
+    conn.flush().expect("flush");
+    let reply = frame::read_frame(&mut conn).expect("error frame for oversized prefix");
+    assert!(
+        reply.contains("\"ok\":false") && reply.contains("exceeds"),
+        "oversized prefix not rejected: {reply}"
+    );
+    let mut rest = Vec::new();
+    conn.read_to_end(&mut rest).expect("server should close the connection");
+    assert!(rest.is_empty(), "unexpected bytes after the error frame");
+
+    // Truncated frame then drop: client promises 100 bytes, sends 3,
+    // hangs up. The daemon must just log the error internally.
+    let mut conn = server.connect();
+    conn.write_all(&100u32.to_be_bytes()).expect("prefix");
+    conn.write_all(b"abc").expect("partial body");
+    drop(conn);
+
+    // Drop mid-exchange: connect and hang up without a full prefix.
+    let mut conn = server.connect();
+    conn.write_all(&[0u8, 0]).expect("half a prefix");
+    drop(conn);
+
+    // After all of the above, the daemon is still serving.
+    let mut conn = server.connect();
+    assert!(request(&mut conn, "{\"cmd\":\"ping\"}").contains("\"ok\":true"));
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_share_the_standing_assignment_and_agree() {
+    let server = Server::start();
+    let (k, n, s, r, rounds) = (30usize, 30usize, 5usize, 24usize, 4usize);
+    let body = format!(
+        "{{\"cmd\":\"decode\",\"scheme\":\"bgc\",\"k\":{k},\"n\":{n},\"s\":{s},\"r\":{r},\
+         \"rounds\":{rounds},\"assign_seed\":\"11\",\"seed\":\"42\"}}"
+    );
+
+    // Four clients fire the identical request concurrently; the server
+    // must hand every one the same memoized assignment and therefore
+    // the same reply bytes.
+    let replies: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let body = body.clone();
+                let server = &server;
+                scope.spawn(move || request(&mut server.connect(), &body))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    for reply in &replies[1..] {
+        assert_eq!(reply, &replies[0], "concurrent identical requests disagree");
+    }
+    assert!(replies[0].contains("\"ok\":true"), "decode failed: {}", replies[0]);
+
+    // Cross-check against an in-process decode of the same standing
+    // assignment: round t of seed w uses Rng::new(w).fork(t), and the
+    // reply's shortest-round-trip JSON floats parse back bit-exact.
+    let reply = Json::parse(&replies[0]).expect("reply JSON");
+    let errs: Vec<f64> = reply
+        .get("errs")
+        .expect("errs")
+        .as_arr()
+        .expect("errs array")
+        .iter()
+        .map(|e| e.as_f64().expect("err"))
+        .collect();
+    assert_eq!(errs.len(), rounds);
+    let g = Scheme::Bgc.build(k, n, s).assignment(&mut Rng::new(11));
+    let rho = OneStepDecoder::canonical(k, r, s).rho;
+    let mut ws = DecodeWorkspace::new();
+    let root = Rng::new(42);
+    for (t, &err) in errs.iter().enumerate() {
+        let expect = ws.onestep_trial(&g, r, rho, &mut root.fork(t as u64));
+        assert_eq!(err, expect, "round {t} differs from the in-process decode");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn http_metrics_endpoint_reports_counters() {
+    let server = Server::start();
+
+    // Generate some traffic first so the counters are non-zero.
+    let mut conn = server.connect();
+    assert!(request(&mut conn, "{\"cmd\":\"ping\"}").contains("\"ok\":true"));
+    drop(conn);
+
+    // A raw HTTP GET on the same port: the "GET " bytes cannot be a
+    // legal frame prefix, so the server switches protocols.
+    let mut conn = server.connect();
+    conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").expect("http request");
+    conn.flush().expect("flush");
+    let mut response = String::new();
+    conn.read_to_string(&mut response).expect("http response");
+    assert!(response.starts_with("HTTP/1.0 200"), "bad status line:\n{response}");
+    for counter in [
+        "gradcode_connections_total",
+        "gradcode_requests_total",
+        "gradcode_errors_total",
+        "gradcode_rounds_total",
+        "gradcode_jobs_total",
+        "gradcode_request_latency_p99_us",
+    ] {
+        assert!(response.contains(counter), "missing {counter}:\n{response}");
+    }
+
+    // Unknown paths get a 404, not a hang or a crash.
+    let mut conn = server.connect();
+    conn.write_all(b"GET /nope HTTP/1.0\r\n\r\n").expect("http request");
+    let mut response = String::new();
+    conn.read_to_string(&mut response).expect("http response");
+    assert!(response.starts_with("HTTP/1.0 404"), "bad status line:\n{response}");
+
+    // The frame-level metrics command reports the same counters.
+    let mut conn = server.connect();
+    let reply = request(&mut conn, "{\"cmd\":\"metrics\"}");
+    assert!(
+        reply.contains("\"ok\":true") && reply.contains("gradcode_requests_total"),
+        "metrics frame missing counters: {reply}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn job_request_runs_the_fanout_scheduler() {
+    // Reference: the same table computed unsharded, straight from the CLI.
+    let reference = {
+        let out = Command::new(BIN)
+            .args(["tables", "--table", "thm5", "--trials", "24", "--k", "12", "--s", "3",
+                   "--threads", "1"])
+            .output()
+            .expect("spawning repro tables");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8(out.stdout).expect("utf-8 csv")
+    };
+
+    let server = Server::start();
+    let job = JobSpec {
+        kind: JobKind::Table,
+        id: "thm5".into(),
+        trials: 24,
+        seed: 2017,
+        k: 12,
+        s: 3,
+        tmax: 0,
+        scenario: Scenario::default(),
+    };
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("cmd".to_string(), Json::Str("job".into()));
+    m.insert("fanout".to_string(), Json::Num(2.0));
+    m.insert("job".to_string(), job.to_json());
+    let body = Json::Obj(m).write();
+
+    let mut conn = server.connect();
+    let reply = request(&mut conn, &body);
+    let parsed = Json::parse(&reply).expect("reply JSON");
+    assert!(
+        matches!(parsed.get("ok"), Ok(Json::Bool(true))),
+        "job request failed: {reply}"
+    );
+    let csv = parsed.get("csv").expect("csv").as_str().expect("csv string");
+    assert_eq!(csv, reference, "daemon-scheduled fan-out CSV != unsharded CSV");
+    server.shutdown();
+}
