@@ -28,7 +28,8 @@ mod common;
 use common::DecodeBenchRecord;
 use gradcode::codes::{AssignmentScratch, GradientCode, Scheme};
 use gradcode::decode::{
-    algorithmic_error_curve, DecodeWorkspace, OneStepDecoder, OptimalDecoder, StepSize,
+    algorithmic_error_curve, DecodeWorkspace, IncrementalDecoder, OneStepDecoder, OptimalDecoder,
+    StepSize,
 };
 use gradcode::linalg::{blocked, spectral_norm, CscMatrix, CsrMatrix, LsqrOptions};
 use gradcode::sim::figures::{draw_non_straggler_matrix, FigPartialPoint};
@@ -75,6 +76,52 @@ fn main() {
             seed: seed1,
             ns_per_decode: t.as_nanos() as f64,
             decodes_per_sec: 1.0 / t.as_secs_f64(),
+        });
+    }
+
+    // ------------- incremental anytime decode (PR 8): per-arrival cost
+    // One iteration replays the full r = 900 survivor arrival stream
+    // through `IncrementalDecoder::arrive` — O(deg) coverage + running
+    // err₁ per survivor — so the per-arrival figure is replay time / r.
+    // The exact err₁ query is the O(k) fold an anytime stopping rule
+    // pays at each prefix it actually inspects; the batch comparison is
+    // the fused one-step decode above (same survivors, one shot).
+    let mut inc = IncrementalDecoder::new();
+    inc.reserve(k1, k1);
+    let t_replay = b.bench("decode/incremental/replay-r-arrivals/k1000", || {
+        inc.begin(k1, rho1);
+        for &j in &idx1 {
+            inc.arrive(&g1, j);
+        }
+        black_box(inc.err1_running())
+    });
+    inc.begin(k1, rho1);
+    for &j in &idx1 {
+        inc.arrive(&g1, j);
+    }
+    let t_exact = b.bench("decode/incremental/exact-err1-query/k1000", || black_box(inc.err1()));
+    println!(
+        "bench decode/incremental/per-arrival/k1000             {:.0} ns/arrival (full replay \
+         {:.2}x one batch fused decode; exact err1 query {})",
+        t_replay.as_secs_f64() * 1e9 / r1 as f64,
+        t_replay.as_secs_f64() / t_fused.as_secs_f64(),
+        gradcode::util::bench::fmt_duration(t_exact)
+    );
+    for (label, t, per) in [
+        ("incremental/replay-full-arrival-stream", t_replay, r1 as f64),
+        ("incremental/exact-err1-query", t_exact, 1.0),
+    ] {
+        records.push(DecodeBenchRecord {
+            label: label.to_string(),
+            scheme: "BGC".to_string(),
+            k: k1,
+            n: k1,
+            s: s1,
+            r: r1,
+            seed: seed1,
+            // Per-arrival cost for the replay: one closure call feeds r survivors.
+            ns_per_decode: t.as_nanos() as f64 / per,
+            decodes_per_sec: per / t.as_secs_f64(),
         });
     }
 
@@ -649,6 +696,7 @@ fn main() {
                 decoder: DecoderKind::OneStep,
                 assign_seed: 2017,
                 seed: 0,
+                prefix: None,
             },
         };
         let outcome = run_load(&cfg).expect("load run against the daemon");

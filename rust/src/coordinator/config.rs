@@ -29,6 +29,31 @@ impl DecoderKind {
     }
 }
 
+/// Anytime stopping rule applied to the master's arrival stream: with
+/// decoding incremental, the master can act *during* the gather instead
+/// of waiting the deadline out. See
+/// [`crate::coordinator::master::gather_and_decode_anytime`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AnytimePolicy {
+    /// Gather the configured policy's full survivor set (the default).
+    None,
+    /// Cancel-on-target: stop at the first arrival whose exact
+    /// incremental err₁ satisfies err₁/k ≤ target.
+    TargetErr1(f64),
+    /// Mid-round deadline revision: at wall-clock `at`, revise the
+    /// gather cutoff to `to`. Messages already in hand can't be
+    /// un-received, so the effective cutoff is `max(at, to)`, clamped
+    /// to the original gather (revision only shortens). Ignored for
+    /// straggler draws with no time axis.
+    ReviseDeadline { at: f64, to: f64 },
+}
+
+impl Default for AnytimePolicy {
+    fn default() -> Self {
+        AnytimePolicy::None
+    }
+}
+
 /// Full coordinator setup for a training run.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {

@@ -14,7 +14,7 @@
 
 use anyhow::{bail, Result};
 
-use super::config::DecoderKind;
+use super::config::{AnytimePolicy, DecoderKind};
 use super::worker::Message;
 use crate::decode::{DecodeWorkspace, OneStepDecoder};
 use crate::linalg::{CscMatrix, LsqrOptions};
@@ -35,6 +35,21 @@ pub struct Round {
     pub estimate: Vec<f32>,
     /// Mean per-task loss over surviving workers (MLP rounds).
     pub mean_loss: f64,
+    /// The survivors in message-arrival order (ascending completion
+    /// time; draw order for models with no time axis) — the order the
+    /// incremental decoder consumed them in.
+    pub arrivals: Vec<usize>,
+    /// Exact incremental err₁ after each arrival: `err1_trace[i]` is
+    /// bit-identical to a batch decode on the first i+1 arrivals
+    /// (prefix-parity contract), at the round's planned step size
+    /// ρ = k/(r_planned·s). Truncated at the stopping arrival when an
+    /// anytime policy fires.
+    pub err1_trace: Vec<f64>,
+    /// `Some(count)` when an [`AnytimePolicy`] fired: the number of
+    /// arrivals actually consumed (the decode, weights, and estimate
+    /// all reflect exactly that prefix). `None` when the round ran the
+    /// deadline policy to completion.
+    pub stopped_at: Option<usize>,
 }
 
 /// Run the gather + decode for one round.
@@ -56,6 +71,39 @@ pub fn gather_and_decode(
     decoder: DecoderKind,
     latency: &LatencyModel,
     deadline: &DeadlinePolicy,
+    rng: &mut Rng,
+    ws: &mut DecodeWorkspace,
+) -> Result<Round> {
+    gather_and_decode_anytime(
+        g,
+        s,
+        messages,
+        decoder,
+        latency,
+        deadline,
+        AnytimePolicy::None,
+        rng,
+        ws,
+    )
+}
+
+/// [`gather_and_decode`] with an anytime stopping rule: decoding runs
+/// *as the messages arrive* (the workspace's incremental decoder
+/// replays the draw in arrival order, recording the exact err₁ after
+/// every arrival), so the master can cancel on a target error or
+/// revise its deadline mid-round and commit the decode for exactly the
+/// prefix in hand. With [`AnytimePolicy::None`] every published output
+/// is bit-identical to the historical gather-then-decode path — the
+/// trace rides along without touching the decode.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_and_decode_anytime(
+    g: &CscMatrix,
+    s: usize,
+    messages: &[Message],
+    decoder: DecoderKind,
+    latency: &LatencyModel,
+    deadline: &DeadlinePolicy,
+    anytime: AnytimePolicy,
     rng: &mut Rng,
     ws: &mut DecodeWorkspace,
 ) -> Result<Round> {
@@ -83,6 +131,59 @@ pub fn gather_and_decode(
         bail!("all workers straggled: raise the deadline");
     }
     let k = g.rows;
+    let r_full = ws.last_non_stragglers().len();
+
+    // Decode-as-messages-arrive: replay the draw through the
+    // incremental decoder in arrival order, recording the exact err₁
+    // after every arrival. The step size uses the *planned* survivor
+    // count (a streaming master cannot know the realized r mid-gather).
+    let rho_planned = OneStepDecoder::canonical(k, r_full, s).rho;
+    let mut err1_trace = Vec::with_capacity(r_full);
+    ws.incremental_trace_selected(g, rho_planned, &mut err1_trace);
+    let mut arrivals = ws.last_arrival_order().to_vec();
+
+    let mut stopped_at = None;
+    match anytime {
+        AnytimePolicy::None => {}
+        AnytimePolicy::TargetErr1(t) => {
+            let target = t * k as f64;
+            if let Some(i) = err1_trace.iter().position(|&e| e <= target) {
+                let stop = i + 1;
+                let gather = if ws.last_gather_time().is_nan() {
+                    f64::NAN
+                } else {
+                    // The master cancels the moment the target-hitting
+                    // message lands.
+                    ws.last_latencies()[arrivals[i]]
+                };
+                ws.adopt_arrival_prefix(g, stop, gather);
+                stopped_at = Some(stop);
+                err1_trace.truncate(stop);
+                arrivals.truncate(stop);
+            }
+        }
+        AnytimePolicy::ReviseDeadline { at, to } => {
+            let gather0 = ws.last_gather_time();
+            if !gather0.is_nan() {
+                let eff = gather0.min(at.max(to));
+                if eff < gather0 {
+                    let stop = {
+                        let lat = ws.last_latencies();
+                        arrivals.iter().take_while(|&&j| lat[j] <= eff).count()
+                    };
+                    if stop == 0 {
+                        bail!(
+                            "the revised deadline ({eff}) cut every survivor: revise later or higher"
+                        );
+                    }
+                    ws.adopt_arrival_prefix(g, stop, eff);
+                    stopped_at = Some(stop);
+                    err1_trace.truncate(stop);
+                    arrivals.truncate(stop);
+                }
+            }
+        }
+    }
     let r = ws.last_non_stragglers().len();
 
     let weights = match decoder {
@@ -117,6 +218,9 @@ pub fn gather_and_decode(
         decode_err,
         estimate,
         mean_loss,
+        arrivals,
+        err1_trace,
+        stopped_at,
     })
 }
 
@@ -307,5 +411,131 @@ mod tests {
             // The two rngs must have consumed the same stream.
             assert_eq!(rng.f64().to_bits(), rng_ref.f64().to_bits());
         }
+    }
+
+    #[test]
+    fn err1_trace_is_prefix_parity_with_batch_decode() {
+        let (k, s) = (18usize, 3usize);
+        let g = FractionalRepetitionCode::new(k, k, s).assignment(&mut Rng::new(20));
+        let msgs = synthetic_messages(&g);
+        let round = gather_and_decode(
+            &g,
+            s,
+            &msgs,
+            DecoderKind::OneStep,
+            &LatencyModel::Pareto { scale: 0.1, shape: 1.5 },
+            &DeadlinePolicy::FastestR(13),
+            &mut Rng::new(21),
+            &mut DecodeWorkspace::new(),
+        )
+        .unwrap();
+        assert_eq!(round.err1_trace.len(), round.arrivals.len());
+        assert!(round.stopped_at.is_none());
+        // Arrivals are a permutation of the survivor set.
+        let mut sorted = round.arrivals.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, round.non_stragglers);
+        // Every trace entry is bit-identical to a batch decode on
+        // exactly that arrival prefix.
+        let rho = OneStepDecoder::canonical(k, round.non_stragglers.len(), s).rho;
+        let mut batch_ws = DecodeWorkspace::new();
+        for i in 0..round.arrivals.len() {
+            let batch = batch_ws.err1_fused(&g, &round.arrivals[..i + 1], rho);
+            assert_eq!(round.err1_trace[i].to_bits(), batch.to_bits(), "prefix {}", i + 1);
+        }
+    }
+
+    #[test]
+    fn anytime_policy_none_round_is_bit_identical_to_plain_round() {
+        let (k, s) = (18usize, 3usize);
+        let g = FractionalRepetitionCode::new(k, k, s).assignment(&mut Rng::new(22));
+        let msgs = synthetic_messages(&g);
+        let latency = LatencyModel::ShiftedExp { base: 0.01, rate: 5.0 };
+        let deadline = DeadlinePolicy::FastestR(13);
+        let plain = gather_and_decode(
+            &g, s, &msgs, DecoderKind::Optimal, &latency, &deadline,
+            &mut Rng::new(23), &mut DecodeWorkspace::new(),
+        )
+        .unwrap();
+        let anytime = gather_and_decode_anytime(
+            &g, s, &msgs, DecoderKind::Optimal, &latency, &deadline,
+            AnytimePolicy::None, &mut Rng::new(23), &mut DecodeWorkspace::new(),
+        )
+        .unwrap();
+        assert_eq!(plain.non_stragglers, anytime.non_stragglers);
+        assert_eq!(plain.gather_time.to_bits(), anytime.gather_time.to_bits());
+        assert_eq!(plain.decode_err.to_bits(), anytime.decode_err.to_bits());
+        for (a, b) in plain.weights.iter().zip(&anytime.weights) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn cancel_on_target_commits_the_decode_for_the_stopped_prefix() {
+        let (k, s) = (18usize, 3usize);
+        let g = FractionalRepetitionCode::new(k, k, s).assignment(&mut Rng::new(24));
+        let msgs = synthetic_messages(&g);
+        let latency = LatencyModel::Pareto { scale: 0.1, shape: 1.5 };
+        let deadline = DeadlinePolicy::FastestR(16);
+        // FRC reaches low err1 well before all 16 arrivals; a loose
+        // target must fire before the full gather.
+        let round = gather_and_decode_anytime(
+            &g, s, &msgs, DecoderKind::OneStep, &latency, &deadline,
+            AnytimePolicy::TargetErr1(0.9), &mut Rng::new(25), &mut DecodeWorkspace::new(),
+        )
+        .unwrap();
+        let stop = round.stopped_at.expect("target must fire below err1 = k");
+        assert_eq!(round.arrivals.len(), stop);
+        assert_eq!(round.err1_trace.len(), stop);
+        assert_eq!(round.non_stragglers.len(), stop);
+        assert!(*round.err1_trace.last().unwrap() <= 0.9 * k as f64);
+        // The committed survivor set is the sorted arrival prefix, the
+        // gather clock is the stopping arrival's completion time, and
+        // the weights cover exactly the prefix.
+        let mut sorted = round.arrivals.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, round.non_stragglers);
+        assert_eq!(round.weights.len(), stop);
+        assert!(round.gather_time.is_finite());
+        // Decode error matches a from-scratch decode on the committed set.
+        let a = g.select_columns(&round.non_stragglers);
+        let reference = crate::decode::decode_error(&a, &round.weights);
+        assert_eq!(round.decode_err.to_bits(), reference.to_bits());
+    }
+
+    #[test]
+    fn deadline_revision_shortens_the_gather_and_respects_arrival_times() {
+        let (k, s) = (18usize, 3usize);
+        let g = FractionalRepetitionCode::new(k, k, s).assignment(&mut Rng::new(26));
+        let msgs = synthetic_messages(&g);
+        let latency = LatencyModel::Pareto { scale: 0.1, shape: 1.2 };
+        let deadline = DeadlinePolicy::Fixed(10.0);
+        let full = gather_and_decode(
+            &g, s, &msgs, DecoderKind::OneStep, &latency, &deadline,
+            &mut Rng::new(27), &mut DecodeWorkspace::new(),
+        )
+        .unwrap();
+        let revised = gather_and_decode_anytime(
+            &g, s, &msgs, DecoderKind::OneStep, &latency, &deadline,
+            AnytimePolicy::ReviseDeadline { at: 0.15, to: 0.4 },
+            &mut Rng::new(27), &mut DecodeWorkspace::new(),
+        )
+        .unwrap();
+        assert_eq!(full.gather_time, 10.0);
+        assert_eq!(revised.gather_time, 0.4);
+        let stop = revised.stopped_at.expect("revision fired");
+        assert!(stop <= full.non_stragglers.len());
+        // Every committed survivor beat the revised cutoff; the set is
+        // a subset of the full round's survivors.
+        assert!(revised.non_stragglers.iter().all(|j| full.non_stragglers.contains(j)));
+        // Revision that never binds leaves the round bit-identical.
+        let noop = gather_and_decode_anytime(
+            &g, s, &msgs, DecoderKind::OneStep, &latency, &deadline,
+            AnytimePolicy::ReviseDeadline { at: 11.0, to: 12.0 },
+            &mut Rng::new(27), &mut DecodeWorkspace::new(),
+        )
+        .unwrap();
+        assert!(noop.stopped_at.is_none());
+        assert_eq!(noop.decode_err.to_bits(), full.decode_err.to_bits());
     }
 }

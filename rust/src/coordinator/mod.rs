@@ -12,8 +12,8 @@ pub mod master;
 pub mod metrics;
 pub mod worker;
 
-pub use config::{CoordinatorConfig, DecoderKind};
-pub use master::{gather_and_decode, Round};
+pub use config::{AnytimePolicy, CoordinatorConfig, DecoderKind};
+pub use master::{gather_and_decode, gather_and_decode_anytime, Round};
 pub use metrics::{LatencyHistogram, RoundMetrics, ServeMetrics, TrainingHistory};
 pub use worker::{
     compute_message, compute_message_via, specs_from_assignment, Message, MessagePath,

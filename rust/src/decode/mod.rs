@@ -7,16 +7,16 @@
 //! (eq. 2.3: the recovery error is at most ||f||^2 · err).
 
 pub mod algorithmic;
+pub mod incremental;
 pub mod onestep;
 pub mod optimal;
 pub mod panel;
-pub mod streaming;
 pub mod workspace;
 
 pub use algorithmic::{algorithmic_error_curve, AlgorithmicDecoder, StepSize};
+pub use incremental::IncrementalDecoder;
 pub use onestep::OneStepDecoder;
 pub use panel::{PanelWorkspace, DEFAULT_PANEL_WIDTH};
-pub use streaming::StreamingOneStep;
 pub use optimal::OptimalDecoder;
 pub use workspace::{err1_from_supports, err1_streamed_counts, DecodeWorkspace};
 

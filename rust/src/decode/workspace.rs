@@ -46,6 +46,7 @@
 //! — the time axis of the `repro scenario` time-to-accuracy sweeps.
 
 use crate::codes::{AssignmentScratch, GradientCode};
+use crate::decode::incremental::IncrementalDecoder;
 use crate::linalg::{blocked, lsqr_with, CscMatrix, CsrMatrix, LsqrOptions, LsqrWorkspace};
 use crate::stragglers::{StragglerModel, StragglerScratch};
 use crate::util::Rng;
@@ -124,6 +125,9 @@ pub struct DecodeWorkspace {
     g_csr: CsrMatrix,
     /// Per-column selection multiplicities for the streamed err_1 pass.
     col_count: Vec<u32>,
+    /// Arrival-ordered streaming decode state (the anytime paths); see
+    /// [`crate::decode::incremental`] for the prefix-parity contract.
+    incremental: IncrementalDecoder,
 }
 
 impl Default for DecodeWorkspace {
@@ -145,6 +149,7 @@ impl DecodeWorkspace {
             scratch: AssignmentScratch::new(),
             g_csr: CsrMatrix::empty(),
             col_count: Vec::new(),
+            incremental: IncrementalDecoder::new(),
         }
     }
 
@@ -174,6 +179,7 @@ impl DecodeWorkspace {
         self.x0.reserve(n);
         self.stragglers.reserve(n);
         self.col_count.reserve(n);
+        self.incremental.reserve(k, n);
     }
 
     /// The non-straggler set sampled by the most recent `*_trial` call.
@@ -566,6 +572,211 @@ impl DecodeWorkspace {
         }
         crate::linalg::norm2_sq(&self.row_acc)
     }
+
+    // -------------------------------------- incremental anytime paths
+
+    /// The workspace-owned streaming decode state (see
+    /// [`crate::decode::incremental`] for the prefix-parity,
+    /// arrival-order, and warm-start contracts).
+    pub fn incremental(&self) -> &IncrementalDecoder {
+        &self.incremental
+    }
+
+    pub fn incremental_mut(&mut self) -> &mut IncrementalDecoder {
+        &mut self.incremental
+    }
+
+    /// Message-arrival order of the most recent straggler draw
+    /// (computed on demand; see
+    /// [`StragglerScratch::compute_arrivals`]).
+    pub fn last_arrival_order(&mut self) -> &[usize] {
+        self.stragglers.compute_arrivals();
+        &self.stragglers.arrivals
+    }
+
+    /// Per-worker latency draws of the most recent straggler draw
+    /// (empty / stale for models with no time axis — check
+    /// [`DecodeWorkspace::last_gather_time`] first).
+    pub fn last_latencies(&self) -> &[f64] {
+        &self.stragglers.latencies
+    }
+
+    /// Replay the most recent draw's survivors through the incremental
+    /// decoder in arrival order, appending the **exact** err₁ after
+    /// each arrival to `trace` (`trace[i]` is bit-identical to a batch
+    /// decode on the first i+1 arrivals). Leaves the incremental state
+    /// at the full survivor set for follow-up queries.
+    pub fn incremental_trace_selected(
+        &mut self,
+        g: &CscMatrix,
+        rho: f64,
+        trace: &mut Vec<f64>,
+    ) {
+        self.stragglers.compute_arrivals();
+        self.incremental.begin(g.rows, rho);
+        for &j in &self.stragglers.arrivals {
+            self.incremental.arrive(g, j);
+            trace.push(self.incremental.err1());
+        }
+    }
+
+    /// Adopt an arrival-order prefix of the most recent draw as *the*
+    /// survivor set — the anytime stopping rules' commit step: `idx`
+    /// becomes the sorted prefix, the gather clock becomes `gather`
+    /// (the stopping arrival's latency, or the revised deadline), and
+    /// A is re-materialized so the batch decode machinery
+    /// ([`DecodeWorkspace::optimal_weights_selected`],
+    /// [`DecodeWorkspace::decode_error_selected`]) runs on exactly the
+    /// stopped prefix.
+    pub fn adopt_arrival_prefix(&mut self, g: &CscMatrix, stop: usize, gather: f64) {
+        assert!(
+            stop <= self.stragglers.arrivals.len(),
+            "prefix {stop} exceeds {} arrivals",
+            self.stragglers.arrivals.len()
+        );
+        self.stragglers.idx.clear();
+        let (idx, arrivals) = (&mut self.stragglers.idx, &self.stragglers.arrivals);
+        idx.extend_from_slice(&arrivals[..stop]);
+        idx.sort_unstable();
+        self.stragglers.gather_time = gather;
+        g.select_columns_into(&self.stragglers.idx, &mut self.a);
+    }
+
+    /// Arrival-ordered incremental re-draw trial: draw G, draw the
+    /// survivor set, stream it through the incremental decoder in
+    /// arrival order, return the exact err₁. Bit- and RNG-identical to
+    /// [`DecodeWorkspace::onestep_redraw_trial_with`] for every
+    /// straggler model: the coverage adds are exact (boolean G), so the
+    /// arrival-order permutation cannot change the accumulated bits,
+    /// and the final fold is the same row-order fold — the prefix-parity
+    /// contract applied at the full prefix.
+    pub fn onestep_incremental_redraw_trial_with(
+        &mut self,
+        code: &dyn GradientCode,
+        model: &dyn StragglerModel,
+        rho: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.invalidate_mirror();
+        code.assignment_into(rng, &mut self.g, &mut self.scratch);
+        model.non_stragglers_into(self.g.cols, rng, &mut self.stragglers);
+        self.stragglers.compute_arrivals();
+        self.incremental.begin(self.g.rows, rho);
+        for &j in &self.stragglers.arrivals {
+            self.incremental.arrive(&self.g, j);
+        }
+        self.incremental.err1()
+    }
+
+    /// Anytime variant of the incremental re-draw trial, applying the
+    /// two stopping rules to the arrival stream and returning
+    /// `(gather_time, err1)` for the prefix actually consumed:
+    ///
+    /// * `revise = Some((at, to))` — mid-round deadline revision: at
+    ///   wall-clock `at` the master revises its cutoff to `to`.
+    ///   Messages already in hand can't be un-received, so the
+    ///   effective cutoff is `max(at, to)`, clamped to the original
+    ///   gather (revision only shortens; draws with no time axis
+    ///   ignore it).
+    /// * `target_err1 = Some(t)` — cancel-on-target: stop at the first
+    ///   arrival whose **exact** err₁ satisfies err₁/k ≤ t; the gather
+    ///   clock is that arrival's completion time.
+    ///
+    /// With both rules `None` this is exactly
+    /// [`DecodeWorkspace::onestep_incremental_redraw_trial_with`].
+    pub fn onestep_incremental_anytime_redraw_trial_with(
+        &mut self,
+        code: &dyn GradientCode,
+        model: &dyn StragglerModel,
+        rho: f64,
+        target_err1: Option<f64>,
+        revise: Option<(f64, f64)>,
+        rng: &mut Rng,
+    ) -> (f64, f64) {
+        self.invalidate_mirror();
+        code.assignment_into(rng, &mut self.g, &mut self.scratch);
+        model.non_stragglers_into(self.g.cols, rng, &mut self.stragglers);
+        self.stragglers.compute_arrivals();
+        let k = self.g.rows;
+        let mut gather = self.stragglers.gather_time;
+        let mut n_keep = self.stragglers.arrivals.len();
+        if let Some((at, to)) = revise {
+            if !gather.is_nan() {
+                let eff = gather.min(at.max(to));
+                let (arrivals, latencies) =
+                    (&self.stragglers.arrivals, &self.stragglers.latencies);
+                n_keep = arrivals
+                    .iter()
+                    .take_while(|&&j| latencies[j] <= eff)
+                    .count();
+                gather = eff;
+            }
+        }
+        self.incremental.begin(k, rho);
+        let mut err1 = self.incremental.err1();
+        let target = target_err1.map(|t| t * k as f64);
+        for i in 0..n_keep {
+            let j = self.stragglers.arrivals[i];
+            self.incremental.arrive(&self.g, j);
+            err1 = self.incremental.err1();
+            if let Some(t) = target {
+                if err1 <= t {
+                    if !self.stragglers.gather_time.is_nan() {
+                        gather = self.stragglers.latencies[j];
+                    }
+                    break;
+                }
+            }
+        }
+        (gather, err1)
+    }
+
+    /// Uniform-draw one-step trial decoded at an arrival prefix: draw r
+    /// survivors (identical RNG stream to
+    /// [`DecodeWorkspace::onestep_trial`]) but ingest only the first
+    /// `prefix` of them in arrival (= draw) order, returning the exact
+    /// err₁ of that prefix. `prefix == r` is bit-identical to the full
+    /// batch trial — the serve daemon's `prefix` decode path.
+    pub fn onestep_prefix_trial(
+        &mut self,
+        g: &CscMatrix,
+        r: usize,
+        prefix: usize,
+        rho: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        assert!(prefix <= r, "prefix {prefix} exceeds r {r}");
+        let scratch = &mut self.stragglers;
+        rng.sample_indices_into(g.cols, r, &mut scratch.pool, &mut scratch.idx);
+        scratch.gather_time = f64::NAN;
+        self.incremental.begin(g.rows, rho);
+        for i in 0..prefix {
+            let j = self.stragglers.idx[i];
+            self.incremental.arrive(g, j);
+        }
+        self.incremental.err1()
+    }
+
+    /// Uniform-draw optimal trial decoded at an arrival prefix (same
+    /// RNG stream as [`DecodeWorkspace::optimal_trial`]; `prefix == r`
+    /// is bit-identical to it). See [`DecodeWorkspace::optimal_err`]
+    /// for `warm`.
+    pub fn optimal_prefix_trial(
+        &mut self,
+        g: &CscMatrix,
+        r: usize,
+        prefix: usize,
+        opts: &LsqrOptions,
+        warm: Option<f64>,
+        rng: &mut Rng,
+    ) -> f64 {
+        assert!(prefix <= r, "prefix {prefix} exceeds r {r}");
+        let scratch = &mut self.stragglers;
+        rng.sample_indices_into(g.cols, r, &mut scratch.pool, &mut scratch.idx);
+        scratch.gather_time = f64::NAN;
+        g.select_columns_into(&self.stragglers.idx[..prefix], &mut self.a);
+        optimal_err_on_selected(&self.a, &mut self.ones, &mut self.x0, &mut self.lsqr, opts, warm)
+    }
 }
 
 /// One-step error on the **column-normalized** selected submatrix:
@@ -909,6 +1120,198 @@ mod tests {
             assert_eq!(legacy.to_bits(), spine.to_bits());
         }
         assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+    }
+
+    #[test]
+    fn incremental_redraw_trial_matches_batch_spine_bitwise() {
+        use crate::stragglers::{
+            DeadlinePolicy, LatencyModel, LatencyStragglers, StragglerModel, UniformStragglers,
+        };
+        let (k, s, r) = (24usize, 4usize, 18usize);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let models: Vec<Box<dyn StragglerModel>> = vec![
+            Box::new(UniformStragglers::new(0.25)),
+            Box::new(LatencyStragglers {
+                model: LatencyModel::Pareto { scale: 0.1, shape: 1.5 },
+                policy: DeadlinePolicy::FastestR(r),
+            }),
+            Box::new(LatencyStragglers {
+                model: LatencyModel::ShiftedExp { base: 0.1, rate: 2.0 },
+                policy: DeadlinePolicy::Fixed(0.6),
+            }),
+        ];
+        for scheme in [Scheme::Bgc, Scheme::Frc, Scheme::RegularGraph] {
+            let code = scheme.build(k, k, s);
+            for model in &models {
+                let mut ws_a = DecodeWorkspace::new();
+                let mut ws_b = DecodeWorkspace::new();
+                let mut rng_a = Rng::new(50);
+                let mut rng_b = Rng::new(50);
+                for trial in 0..6 {
+                    let batch =
+                        ws_a.onestep_redraw_trial_with(code.as_ref(), model.as_ref(), rho, &mut rng_a);
+                    let inc = ws_b.onestep_incremental_redraw_trial_with(
+                        code.as_ref(),
+                        model.as_ref(),
+                        rho,
+                        &mut rng_b,
+                    );
+                    assert_eq!(batch.to_bits(), inc.to_bits(), "{scheme:?} {} trial {trial}", model.name());
+                    assert_eq!(
+                        ws_a.last_gather_time().to_bits(),
+                        ws_b.last_gather_time().to_bits()
+                    );
+                }
+                assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{scheme:?} rng diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn anytime_trial_without_rules_matches_plain_incremental_trial() {
+        use crate::stragglers::{DeadlinePolicy, LatencyModel, LatencyStragglers};
+        let (k, s, r) = (20usize, 4usize, 15usize);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let code = Scheme::Bgc.build(k, k, s);
+        let model = LatencyStragglers {
+            model: LatencyModel::Pareto { scale: 0.1, shape: 1.5 },
+            policy: DeadlinePolicy::FastestR(r),
+        };
+        let mut ws_a = DecodeWorkspace::new();
+        let mut ws_b = DecodeWorkspace::new();
+        let mut rng_a = Rng::new(51);
+        let mut rng_b = Rng::new(51);
+        for _ in 0..5 {
+            let plain =
+                ws_a.onestep_incremental_redraw_trial_with(code.as_ref(), &model, rho, &mut rng_a);
+            let (gather, err1) = ws_b.onestep_incremental_anytime_redraw_trial_with(
+                code.as_ref(),
+                &model,
+                rho,
+                None,
+                None,
+                &mut rng_b,
+            );
+            assert_eq!(plain.to_bits(), err1.to_bits());
+            assert_eq!(gather.to_bits(), ws_a.last_gather_time().to_bits());
+        }
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+    }
+
+    #[test]
+    fn anytime_target_stops_at_first_satisfying_arrival() {
+        use crate::stragglers::{DeadlinePolicy, LatencyModel, LatencyStragglers};
+        let (k, s, r) = (20usize, 4usize, 18usize);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let code = Scheme::Frc.build(k, k, s);
+        let model = LatencyStragglers {
+            model: LatencyModel::ShiftedExp { base: 0.1, rate: 2.0 },
+            policy: DeadlinePolicy::FastestR(r),
+        };
+        let mut ws = DecodeWorkspace::new();
+        // Stopping on a target can only shorten the gather, and when it
+        // fires the exact err1 is at or below the target.
+        let (gather_full, _) = ws.onestep_incremental_anytime_redraw_trial_with(
+            code.as_ref(), &model, rho, None, None, &mut Rng::new(53),
+        );
+        let (gather_stop, err1) = ws.onestep_incremental_anytime_redraw_trial_with(
+            code.as_ref(), &model, rho, Some(0.9), None, &mut Rng::new(53),
+        );
+        assert!(err1 <= 0.9 * k as f64 || gather_stop.to_bits() == gather_full.to_bits());
+        assert!(gather_stop <= gather_full);
+    }
+
+    #[test]
+    fn anytime_deadline_revision_only_shortens_the_gather() {
+        use crate::stragglers::{DeadlinePolicy, LatencyModel, LatencyStragglers};
+        let (k, s) = (20usize, 4usize);
+        let rho = k as f64 / (15.0 * s as f64);
+        let code = Scheme::Bgc.build(k, k, s);
+        let model = LatencyStragglers {
+            model: LatencyModel::Pareto { scale: 0.1, shape: 1.2 },
+            policy: DeadlinePolicy::Fixed(5.0),
+        };
+        let mut ws = DecodeWorkspace::new();
+        for seed in 60..65 {
+            let (gather_full, err_full) = ws.onestep_incremental_anytime_redraw_trial_with(
+                code.as_ref(), &model, rho, None, None, &mut Rng::new(seed),
+            );
+            // Revise at t=0.2 down to t=0.3: cutoff becomes 0.3.
+            let (gather_rev, err_rev) = ws.onestep_incremental_anytime_redraw_trial_with(
+                code.as_ref(), &model, rho, None, Some((0.2, 0.3)), &mut Rng::new(seed),
+            );
+            assert_eq!(gather_full, 5.0);
+            assert_eq!(gather_rev, 0.3);
+            assert!(err_rev.is_finite() && err_rev >= 0.0 && err_full >= 0.0);
+            // Revision past the original deadline is a no-op.
+            let (gather_noop, err_noop) = ws.onestep_incremental_anytime_redraw_trial_with(
+                code.as_ref(), &model, rho, None, Some((6.0, 9.0)), &mut Rng::new(seed),
+            );
+            assert_eq!(gather_noop, 5.0);
+            assert_eq!(err_noop.to_bits(), err_full.to_bits());
+        }
+    }
+
+    #[test]
+    fn prefix_trials_at_full_prefix_match_batch_trials_bitwise() {
+        let (k, s, r) = (24usize, 4usize, 18usize);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let g = draw_g(Scheme::Bgc, k, s, 54);
+        let opts = LsqrOptions::default();
+        let mut ws_a = DecodeWorkspace::new();
+        let mut ws_b = DecodeWorkspace::new();
+        let mut rng_a = Rng::new(55);
+        let mut rng_b = Rng::new(55);
+        for _ in 0..6 {
+            let batch = ws_a.onestep_trial(&g, r, rho, &mut rng_a);
+            let prefixed = ws_b.onestep_prefix_trial(&g, r, r, rho, &mut rng_b);
+            assert_eq!(batch.to_bits(), prefixed.to_bits());
+            let batch = ws_a.optimal_trial(&g, r, &opts, Some(rho), &mut rng_a);
+            let prefixed = ws_b.optimal_prefix_trial(&g, r, r, &opts, Some(rho), &mut rng_b);
+            assert_eq!(batch.to_bits(), prefixed.to_bits());
+        }
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+    }
+
+    #[test]
+    fn prefix_trial_matches_manual_prefix_decode() {
+        let (k, s, r, p) = (24usize, 4usize, 18usize, 7usize);
+        let rho = k as f64 / (r as f64 * s as f64);
+        let g = draw_g(Scheme::RegularGraph, k, s, 56);
+        let mut ws = DecodeWorkspace::new();
+        let mut rng = Rng::new(57);
+        let prefixed = ws.onestep_prefix_trial(&g, r, p, rho, &mut rng);
+        let drawn: Vec<usize> = ws.last_non_stragglers()[..p].to_vec();
+        let batch = ws.err1_fused(&g, &drawn, rho);
+        assert_eq!(prefixed.to_bits(), batch.to_bits());
+    }
+
+    #[test]
+    fn adopt_arrival_prefix_rematerializes_sorted_prefix() {
+        use crate::stragglers::{DeadlinePolicy, LatencyModel, LatencyStragglers};
+        let (k, s, r) = (20usize, 4usize, 14usize);
+        let g = draw_g(Scheme::Bgc, k, s, 58);
+        let model = LatencyStragglers {
+            model: LatencyModel::Pareto { scale: 0.1, shape: 1.5 },
+            policy: DeadlinePolicy::FastestR(r),
+        };
+        let mut ws = DecodeWorkspace::new();
+        let mut rng = Rng::new(59);
+        ws.select_submatrix_with(&g, &model, &mut rng);
+        let arrivals: Vec<usize> = ws.last_arrival_order().to_vec();
+        let stop = 5usize;
+        let gather = ws.last_latencies()[arrivals[stop - 1]];
+        ws.adopt_arrival_prefix(&g, stop, gather);
+        let mut expect = arrivals[..stop].to_vec();
+        expect.sort_unstable();
+        assert_eq!(ws.last_non_stragglers(), &expect[..]);
+        assert_eq!(ws.last_gather_time().to_bits(), gather.to_bits());
+        // The re-materialized A matches a direct selection.
+        let direct = g.select_columns(&expect);
+        let weights = vec![0.25; stop];
+        let via_ws = ws.decode_error_selected(&weights);
+        let reference = crate::decode::decode_error(&direct, &weights);
+        assert_eq!(via_ws.to_bits(), reference.to_bits());
     }
 
     #[test]

@@ -195,6 +195,11 @@ fn render_replay(cfg: &LoadConfig, results: &[RequestResult]) -> String {
         cfg.seed, cfg.requests, t.scheme.name(), t.k, t.n, t.s, t.r, t.rounds,
         t.decoder.name(),
     );
+    if let Some(p) = t.prefix {
+        // Only prefixed templates emit this line, so prefix-free
+        // replays stay byte-identical to pre-prefix builds.
+        let _ = writeln!(out, "# anytime prefix={p} (first {p} arrivals of each round's draw)");
+    }
     out.push_str("request,seed,mean_err,min_err,max_err,first_err,last_err\n");
     let mut hist = std::collections::BTreeMap::new();
     for r in results {

@@ -147,7 +147,8 @@ use gradcode::sim::shard::{
     ABLATION_IDS, SCENARIO_IDS, TABLES_WITHOUT_SCENARIO, TABLES_WITH_S, TABLE_IDS,
 };
 use gradcode::sim::{
-    figures, FigureConfig, JobKind, JobSpec, MonteCarlo, Shard, ShardArtifact,
+    figures, tta_anytime, AnytimeRules, FigureConfig, JobKind, JobSpec, MonteCarlo,
+    ScenarioPoint, Shard, ShardArtifact,
 };
 use gradcode::stragglers::{DeadlinePolicy, LatencyModel, PolicySpec, Scenario};
 use gradcode::training::{train, TrainConfig};
@@ -286,7 +287,13 @@ fn run() -> CliResult<()> {
             cmd_tables(&args)
         }
         "scenario" => {
-            args.finish(&["stragglers", "trials", "seed", "k", "s", "threads"], false)?;
+            args.finish(
+                &[
+                    "stragglers", "study", "trials", "seed", "k", "s", "threads",
+                    "target-err", "revise-at", "revise-to",
+                ],
+                false,
+            )?;
             cmd_scenario(&args)
         }
         "shard" => {
@@ -337,7 +344,7 @@ fn run() -> CliResult<()> {
             args.finish(
                 &[
                     "addr", "requests", "concurrency", "arrival", "seed", "scheme", "k", "n",
-                    "s", "delta", "r", "rounds", "decoder", "slo-ms",
+                    "s", "delta", "r", "rounds", "decoder", "prefix", "slo-ms",
                 ],
                 false,
             )?;
@@ -396,14 +403,24 @@ USAGE:
                 [--stragglers SPEC]
   repro ablation --study rho|rbgc|lsqr|normalization [--trials N] [--k K]
                 [--s S] [--seed S] [--threads T] [--stragglers SPEC]
-  repro scenario [--stragglers SPEC] [--trials N] [--k K] [--s S]
-                [--seed S] [--threads T]
+  repro scenario [--study tta|tta3] [--stragglers SPEC] [--trials N]
+                [--k K] [--s S] [--seed S] [--threads T]
+                [--target-err E] [--revise-at T --revise-to T]
                                     # time-to-accuracy curves: mean
                                     # gather wall-clock vs err1 per
                                     # scheme, fastest-r and fixed-
                                     # deadline arms across the delta
                                     # grid (SPEC must be a latency
-                                    # model)
+                                    # model); --study tta3 adds the
+                                    # optimal (LSQR) decoder as a third
+                                    # arm on the fastest-r draws; the
+                                    # anytime flags (tta only) stream
+                                    # each trial through the
+                                    # incremental decoder and stop
+                                    # early: --target-err cancels at
+                                    # the first arrival with err1/k <=
+                                    # E, --revise-at/--revise-to
+                                    # shorten the deadline mid-round
   repro shard   --fig F|--table T|--ablation STUDY|--scenario STUDY
                 --shard-id I --num-shards N [--out FILE] [--trials N]
                 [--k K] [--s S] [--seed S] [--tmax T] [--threads T]
@@ -428,7 +445,10 @@ USAGE:
   repro load    [--addr ADDR] [--requests N] [--concurrency C]
                 [--arrival closed|uniform:GAP_MS|poisson:RATE] [--seed S]
                 [--scheme S] [--k K] [--n N] [--s S] [--delta D] [--r R]
-                [--rounds N] [--decoder onestep|optimal] [--slo-ms MS]
+                [--rounds N] [--decoder onestep|optimal] [--prefix P]
+                [--slo-ms MS]       # --prefix P decodes only the first
+                                    # P arrivals of each round (anytime
+                                    # decode at the server)
                                     # seeded deterministic traffic
                                     # generator: replay CSV on stdout is
                                     # byte-identical per seed (any
@@ -465,8 +485,8 @@ DEFAULTS:
   figures: --fig 2 --trials 5000 --seed 2017 --k 100 --tmax 15
   tables:  --table thm5 --trials 2000 --seed 2017 --k 100 --s 10
   ablation: --study rho --trials 500 --seed 2017 --k 100 --s 10
-  scenario: --stragglers pareto:0.02,1.5 --trials 500 --seed 2017
-           --k 100 --s 10
+  scenario: --study tta --stragglers pareto:0.02,1.5 --trials 500
+           --seed 2017 --k 100 --s 10
   shard:   figures/tables/ablation/scenario defaults above; --out - (stdout)
   run:     shard defaults above; --fanout 2; --artifacts-dir <temp dir>
            (temporary artifacts are removed after the merge); each child
@@ -637,7 +657,9 @@ fn cmd_ablation(args: &Args) -> CliResult<()> {
 /// no wall-clock axis — with the default (fastest-r) policy: the sweep
 /// derives both deadline-policy arms itself.
 fn scenario_job(args: &Args) -> CliResult<JobSpec> {
-    let study = args.get("scenario").unwrap_or("tta");
+    // `repro scenario --study X` and `repro shard/run --scenario X`
+    // name the same registry (the `ablation`/`--study` convention).
+    let study = args.get("scenario").or(args.get("study")).unwrap_or("tta");
     if !SCENARIO_IDS.contains(&study) {
         return usage(format!(
             "unknown scenario study {study:?} (one of {})",
@@ -676,10 +698,67 @@ fn scenario_job(args: &Args) -> CliResult<JobSpec> {
     })
 }
 
+/// Anytime stopping rules from the `repro scenario` flags. CLI-only:
+/// the rules change what a trial measures, so they are not part of the
+/// shardable job identity (`repro shard`/`repro run` reject them at
+/// the flag whitelist).
+fn anytime_rules_flags(args: &Args) -> CliResult<AnytimeRules> {
+    let target_err1 = match args.get("target-err") {
+        None => None,
+        Some(_) => {
+            let t = args.f64("target-err", 0.0)?;
+            if !t.is_finite() || t < 0.0 {
+                return usage(format!(
+                    "--target-err {t}: expected a finite non-negative err1/k target"
+                ));
+            }
+            Some(t)
+        }
+    };
+    let revise = match (args.get("revise-at"), args.get("revise-to")) {
+        (None, None) => None,
+        (Some(_), Some(_)) => {
+            let at = args.f64("revise-at", 0.0)?;
+            let to = args.f64("revise-to", 0.0)?;
+            if !(at.is_finite() && to.is_finite() && at >= 0.0 && to >= 0.0) {
+                return usage(
+                    "--revise-at/--revise-to: expected finite non-negative wall-clock times",
+                );
+            }
+            Some((at, to))
+        }
+        _ => return usage("--revise-at and --revise-to must be given together"),
+    };
+    Ok(AnytimeRules { target_err1, revise })
+}
+
 fn cmd_scenario(args: &Args) -> CliResult<()> {
+    let rules = anytime_rules_flags(args)?;
     let job = scenario_job(args)?;
-    let points = job.run(Shard::full(), threads_flag(args)?)?;
-    print!("{}", points.to_csv());
+    if rules.is_empty() {
+        let points = job.run(Shard::full(), threads_flag(args)?)?;
+        print!("{}", points.to_csv());
+        return Ok(());
+    }
+    if job.id != "tta" {
+        return usage(
+            "anytime rules (--target-err/--revise-at/--revise-to) apply to the one-step \
+             `tta` arms only; drop --study tta3",
+        );
+    }
+    let mut mc = MonteCarlo::new(job.trials, job.seed);
+    if let Some(t) = threads_flag(args)? {
+        mc = mc.with_threads(t);
+    }
+    let points = tta_anytime(job.k, job.s, &job.scenario, &mc, rules)?;
+    let mut out = String::new();
+    out.push_str(ScenarioPoint::csv_header());
+    out.push('\n');
+    for p in &points {
+        out.push_str(&p.to_csv());
+        out.push('\n');
+    }
+    print!("{out}");
     Ok(())
 }
 
@@ -850,6 +929,16 @@ fn cmd_load(args: &Args) -> CliResult<()> {
     let Some(decoder) = DecoderKind::parse(decoder_name) else {
         return usage(format!("unknown decoder {decoder_name:?} (onestep|optimal)"));
     };
+    let prefix = match args.get("prefix") {
+        None => None,
+        Some(_) => {
+            let p = args.usize("prefix", r)?;
+            if !(1..=r).contains(&p) {
+                return usage(format!("--prefix {p} out of range [1, {r}]"));
+            }
+            Some(p)
+        }
+    };
     let seed = args.u64("seed", 2017)?;
     let cfg = LoadConfig {
         addr: args.get("addr").unwrap_or("127.0.0.1:7117").to_string(),
@@ -871,6 +960,7 @@ fn cmd_load(args: &Args) -> CliResult<()> {
             // the generator.
             assign_seed: seed,
             seed: 0,
+            prefix,
         },
     };
     let outcome = run_load(&cfg)?;

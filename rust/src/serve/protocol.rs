@@ -57,6 +57,11 @@ pub struct DecodeRequest {
     /// Root seed of the per-round straggler draws; round t forks
     /// stream t, so rounds are independent of request batching.
     pub seed: u64,
+    /// Anytime prefix: decode only the first `prefix` arrivals of each
+    /// round's survivor draw (1 ≤ prefix ≤ r). `None` decodes the full
+    /// survivor set — the wire bytes of prefix-free requests are
+    /// unchanged, so existing `repro load` replays stay byte-identical.
+    pub prefix: Option<usize>,
 }
 
 /// A parsed request frame.
@@ -111,6 +116,10 @@ impl Request {
                             .ok_or_else(|| anyhow!("unknown decoder {name:?}"))?
                     }
                 };
+                let prefix = match j.opt("prefix") {
+                    None => None,
+                    Some(_) => Some(bounded(j, "prefix", 1, r)?),
+                };
                 Ok(Request::Decode(DecodeRequest {
                     scheme,
                     k,
@@ -121,6 +130,7 @@ impl Request {
                     decoder,
                     assign_seed: seed_field(j, "assign_seed")?,
                     seed: seed_field(j, "seed")?,
+                    prefix,
                 }))
             }
             "job" => {
@@ -166,6 +176,9 @@ impl Request {
                 m.insert("decoder".into(), Json::Str(d.decoder.name().into()));
                 m.insert("assign_seed".into(), Json::Str(d.assign_seed.to_string()));
                 m.insert("seed".into(), Json::Str(d.seed.to_string()));
+                if let Some(p) = d.prefix {
+                    m.insert("prefix".into(), Json::Num(p as f64));
+                }
             }
             Request::Job { job, fanout } => {
                 m.insert("cmd".into(), Json::Str("job".into()));
@@ -212,6 +225,7 @@ mod tests {
             decoder: DecoderKind::Optimal,
             assign_seed: u64::MAX,
             seed: 42,
+            prefix: None,
         }
     }
 
@@ -232,6 +246,7 @@ mod tests {
             Request::Metrics,
             Request::Shutdown,
             Request::Decode(sample_decode()),
+            Request::Decode(DecodeRequest { prefix: Some(17), ..sample_decode() }),
             Request::Job { job, fanout: 4 },
         ] {
             let text = req.to_json().write();
@@ -250,6 +265,11 @@ mod tests {
         let Request::Decode(d) = Request::from_json(&j).unwrap() else { panic!("decode") };
         assert_eq!(d.n, 50, "n defaults to k");
         assert_eq!(d.decoder, DecoderKind::OneStep, "decoder defaults to one-step");
+        assert_eq!(d.prefix, None, "prefix defaults to full survivor set");
+        assert!(
+            !Request::Decode(d).to_json().write().contains("prefix"),
+            "prefix-free requests serialize without the key (replay byte parity)"
+        );
 
         for bad in [
             r#"{"cmd": "decode", "scheme": "nope", "k": 50, "s": 5, "r": 40, "rounds": 2, "assign_seed": "1", "seed": "2"}"#,
@@ -258,6 +278,8 @@ mod tests {
             r#"{"cmd": "decode", "scheme": "frc", "k": 50, "s": 5, "r": 51, "rounds": 2, "assign_seed": "1", "seed": "2"}"#,
             r#"{"cmd": "decode", "scheme": "frc", "k": 50, "s": 5, "r": 40, "rounds": 0, "assign_seed": "1", "seed": "2"}"#,
             r#"{"cmd": "decode", "scheme": "frc", "k": 50, "s": 5, "r": 40, "rounds": 2, "assign_seed": "-1", "seed": "2"}"#,
+            r#"{"cmd": "decode", "scheme": "frc", "k": 50, "s": 5, "r": 40, "rounds": 2, "assign_seed": "1", "seed": "2", "prefix": 0}"#,
+            r#"{"cmd": "decode", "scheme": "frc", "k": 50, "s": 5, "r": 40, "rounds": 2, "assign_seed": "1", "seed": "2", "prefix": 41}"#,
             r#"{"cmd": "frobnicate"}"#,
         ] {
             assert!(Request::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");

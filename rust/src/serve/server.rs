@@ -277,8 +277,8 @@ fn run_decode(
     let rho = OneStepDecoder::canonical(d.k, d.r, d.s).rho;
     let root = Rng::new(d.seed);
     let mut errs = Vec::with_capacity(d.rounds);
-    match d.decoder {
-        DecoderKind::OneStep => {
+    match (d.decoder, d.prefix) {
+        (DecoderKind::OneStep, None) => {
             // One-step rounds stream over the CSR mirror (bit-identical
             // to the CSC path); re-mirror only on assignment switch.
             let key: AssignKey = (d.scheme.name(), d.k, d.n, d.s, d.assign_seed);
@@ -291,11 +291,24 @@ fn run_decode(
                 errs.push(ws.onestep_trial_streamed(d.r, rho, &mut rng));
             }
         }
-        DecoderKind::Optimal => {
+        (DecoderKind::OneStep, Some(p)) => {
+            // Anytime route: draw the same r survivors as the full
+            // path (same RNG stream), decode the first p arrivals
+            // through the incremental state. p == r is bit-identical
+            // to the full one-step round.
+            for t in 0..d.rounds {
+                let mut rng = root.fork(t as u64);
+                errs.push(ws.onestep_prefix_trial(&g, d.r, p, rho, &mut rng));
+            }
+        }
+        (DecoderKind::Optimal, prefix) => {
             let opts = LsqrOptions::default();
             for t in 0..d.rounds {
                 let mut rng = root.fork(t as u64);
-                errs.push(ws.optimal_trial(&g, d.r, &opts, Some(rho), &mut rng));
+                errs.push(match prefix {
+                    None => ws.optimal_trial(&g, d.r, &opts, Some(rho), &mut rng),
+                    Some(p) => ws.optimal_prefix_trial(&g, d.r, p, &opts, Some(rho), &mut rng),
+                });
             }
         }
     }

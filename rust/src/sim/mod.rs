@@ -19,6 +19,6 @@ pub mod tables;
 pub use figures::{FigPoint, FigureConfig};
 pub use montecarlo::MonteCarlo;
 pub use ablations::{AblationPartialPoint, AblationPoint};
-pub use scenario::{ScenarioPartialPoint, ScenarioPoint};
+pub use scenario::{tta_anytime, AnytimeRules, ScenarioPartialPoint, ScenarioPoint};
 pub use shard::{JobKind, JobSpec, MergedRun, Shard, ShardArtifact};
 pub use tables::TableRow;

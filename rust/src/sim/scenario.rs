@@ -27,10 +27,11 @@ use anyhow::{bail, Result};
 use super::montecarlo::MonteCarlo;
 use super::shard::{Partial, Shard};
 use crate::decode::DecodeWorkspace;
-use crate::linalg::CscMatrix;
+use crate::linalg::{CscMatrix, LsqrOptions};
 use crate::sim::figures::FIG_SCHEMES;
 use crate::stragglers::{
-    DeadlinePolicy, LatencyStragglers, PolicySpec, ResolvedScenario, Scenario, StragglerModel,
+    DeadlinePolicy, LatencyModel, LatencyStragglers, PolicySpec, ResolvedScenario, Scenario,
+    StragglerModel,
 };
 use crate::util::Rng;
 
@@ -92,6 +93,15 @@ pub fn prob_partial_under(
 
 /// The deadline-policy arms every `tta` sweep emits.
 pub const TTA_POLICIES: [&str; 2] = ["fastest-r", "deadline"];
+
+/// The `tta3` study's arms: the two deadline-policy arms plus the
+/// survivor-set-optimal decoder (Glasgow & Wootters, *Approximate
+/// Gradient Coding with Optimal Decoding*) on the fastest-r survivor
+/// draw — err(A) rides the `err1` CSV column, putting the optimal
+/// decoder's time-to-accuracy frontier alongside the one-step arms.
+/// A strict superset of [`TTA_POLICIES`] so `tta` artifacts intern
+/// unchanged.
+pub const TTA3_POLICIES: [&str; 3] = ["fastest-r", "deadline", "optimal"];
 
 /// The δ grid the `tta` study sweeps (the Fig. 2-4 grid).
 pub fn tta_deltas() -> Vec<f64> {
@@ -177,21 +187,15 @@ pub fn finalize_scenario_points(points: &[ScenarioPartialPoint]) -> Vec<Scenario
     points.iter().map(|p| p.finalize()).collect()
 }
 
-/// One shard of the `tta` study. The scenario must carry a latency
-/// model with the default (fastest-r) policy — the sweep derives both
-/// arms itself: FastestR(r(δ)) and Fixed(quantile(1-δ)); uniform and
-/// adversarial scenarios have no wall-clock axis and are rejected, as
-/// is an explicit `deadline:T` policy (the deadline axis is swept, not
-/// fixed).
-pub fn tta_partials(
-    k: usize,
-    s: usize,
-    scenario: &Scenario,
-    mc: &MonteCarlo,
-    shard: Shard,
-) -> Result<Vec<ScenarioPartialPoint>> {
-    let latency = match scenario {
-        Scenario::Latency { model, policy: PolicySpec::FastestR } => *model,
+/// Extract the latency model a `tta`-family sweep runs on. The
+/// scenario must carry a latency model with the default (fastest-r)
+/// policy — the sweep derives the deadline arms itself: FastestR(r(δ))
+/// and Fixed(quantile(1-δ)); uniform and adversarial scenarios have no
+/// wall-clock axis and are rejected, as is an explicit `deadline:T`
+/// policy (the deadline axis is swept, not fixed).
+fn tta_latency_model(scenario: &Scenario) -> Result<LatencyModel> {
+    match scenario {
+        Scenario::Latency { model, policy: PolicySpec::FastestR } => Ok(*model),
         Scenario::Latency { .. } => bail!(
             "the scenario job sweeps the deadline axis itself (fastest-r per point plus \
              model quantiles); drop the explicit deadline:T policy from --stragglers"
@@ -200,26 +204,63 @@ pub fn tta_partials(
             "the scenario job needs a latency straggler model \
              (--stragglers shifted-exp:..|pareto:..|bimodal:..), got {other}"
         ),
-    };
+    }
+}
+
+/// Shared sweep core of the `tta` family: one point per
+/// (arm, scheme, δ). One-step arms stream each trial's survivors
+/// through the workspace's incremental decoder in arrival order — the
+/// exact err₁ is bit-identical to the historical batch path
+/// (prefix-parity contract at the full prefix), so published `tta`
+/// CSVs are byte-unchanged. The `optimal` arm decodes the same
+/// fastest-r survivor draws with the survivor-set-optimal LSQR solve
+/// (warm-started at ρ·1, per-trial pure — shard invariance needs no
+/// cross-trial state).
+fn tta_family_partials(
+    study: &'static str,
+    policies: &'static [&'static str],
+    k: usize,
+    s: usize,
+    scenario: &Scenario,
+    mc: &MonteCarlo,
+    shard: Shard,
+) -> Result<Vec<ScenarioPartialPoint>> {
+    let latency = tta_latency_model(scenario)?;
+    let opts = LsqrOptions::default();
     let mut out = Vec::new();
-    for policy_arm in TTA_POLICIES {
+    for &policy_arm in policies {
         for &scheme in &FIG_SCHEMES {
             for delta in tta_deltas() {
                 let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
                 let rho = k as f64 / (r as f64 * s as f64);
                 let code = scheme.build(k, k, s);
                 let policy = match policy_arm {
-                    "fastest-r" => DeadlinePolicy::FastestR(r),
-                    _ => DeadlinePolicy::Fixed(latency.quantile(1.0 - delta)),
+                    "deadline" => DeadlinePolicy::Fixed(latency.quantile(1.0 - delta)),
+                    // fastest-r and the optimal arm share the
+                    // fastest-r survivor draw (and RNG stream).
+                    _ => DeadlinePolicy::FastestR(r),
                 };
                 let model = LatencyStragglers { model: latency, policy };
                 let partial = mc.mean_curve_partial_ws(2, shard, DecodeWorkspace::new, |ws, rng| {
-                    let err1 =
-                        ws.onestep_redraw_trial_with(code.as_ref(), &model as &dyn StragglerModel, rho, rng);
-                    vec![ws.last_gather_time(), err1]
+                    let err = match policy_arm {
+                        "optimal" => ws.optimal_redraw_trial_with(
+                            code.as_ref(),
+                            &model as &dyn StragglerModel,
+                            &opts,
+                            Some(rho),
+                            rng,
+                        ),
+                        _ => ws.onestep_incremental_redraw_trial_with(
+                            code.as_ref(),
+                            &model as &dyn StragglerModel,
+                            rho,
+                            rng,
+                        ),
+                    };
+                    vec![ws.last_gather_time(), err]
                 });
                 out.push(ScenarioPartialPoint {
-                    study: "tta",
+                    study,
                     scheme: scheme.name().to_string(),
                     policy: policy_arm,
                     s,
@@ -233,10 +274,115 @@ pub fn tta_partials(
     Ok(out)
 }
 
+/// One shard of the `tta` study; see [`tta_family_partials`] for the
+/// arm derivation and the incremental-decode parity contract.
+pub fn tta_partials(
+    k: usize,
+    s: usize,
+    scenario: &Scenario,
+    mc: &MonteCarlo,
+    shard: Shard,
+) -> Result<Vec<ScenarioPartialPoint>> {
+    tta_family_partials("tta", &TTA_POLICIES, k, s, scenario, mc, shard)
+}
+
+/// One shard of the `tta3` study: [`tta_partials`] plus the
+/// survivor-set-optimal third arm ([`TTA3_POLICIES`]).
+pub fn tta3_partials(
+    k: usize,
+    s: usize,
+    scenario: &Scenario,
+    mc: &MonteCarlo,
+    shard: Shard,
+) -> Result<Vec<ScenarioPartialPoint>> {
+    tta_family_partials("tta3", &TTA3_POLICIES, k, s, scenario, mc, shard)
+}
+
 /// The single-process `tta` study (the `num_shards = 1` case of
 /// [`tta_partials`]) — what `repro scenario` prints.
 pub fn tta(k: usize, s: usize, scenario: &Scenario, mc: &MonteCarlo) -> Result<Vec<ScenarioPoint>> {
     Ok(finalize_scenario_points(&tta_partials(k, s, scenario, mc, Shard::full())?))
+}
+
+/// The single-process `tta3` study.
+pub fn tta3(k: usize, s: usize, scenario: &Scenario, mc: &MonteCarlo) -> Result<Vec<ScenarioPoint>> {
+    Ok(finalize_scenario_points(&tta3_partials(k, s, scenario, mc, Shard::full())?))
+}
+
+/// Anytime stopping rules for the single-process `repro scenario`
+/// sweep. Deliberately **not** part of the shardable job identity:
+/// the rules change what a trial measures, so they are CLI-only flags
+/// on `repro scenario` and are rejected by `repro shard`/`repro run`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AnytimeRules {
+    /// Cancel-on-target: stop the gather at the first arrival whose
+    /// exact err₁ satisfies err₁/k ≤ target.
+    pub target_err1: Option<f64>,
+    /// Mid-round deadline revision `(at, to)`: at wall-clock `at` the
+    /// master revises its cutoff to `to` (effective cutoff
+    /// `max(at, to)`, clamped to the arm's own gather — revision only
+    /// shortens).
+    pub revise: Option<(f64, f64)>,
+}
+
+impl AnytimeRules {
+    pub fn is_empty(&self) -> bool {
+        self.target_err1.is_none() && self.revise.is_none()
+    }
+}
+
+/// The `tta` sweep under anytime stopping rules (study id
+/// `tta-anytime`): every trial streams its arrivals through the
+/// incremental decoder and applies the rules mid-gather, so `gather`
+/// is the wall-clock the master *actually* stopped at (the stopping
+/// arrival's completion time, or the revised deadline) and `err1` is
+/// the exact error of the prefix in hand. With empty rules the values
+/// reproduce the `tta` study bit for bit.
+pub fn tta_anytime(
+    k: usize,
+    s: usize,
+    scenario: &Scenario,
+    mc: &MonteCarlo,
+    rules: AnytimeRules,
+) -> Result<Vec<ScenarioPoint>> {
+    let latency = tta_latency_model(scenario)?;
+    let mut out = Vec::new();
+    for policy_arm in TTA_POLICIES {
+        for &scheme in &FIG_SCHEMES {
+            for delta in tta_deltas() {
+                let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
+                let rho = k as f64 / (r as f64 * s as f64);
+                let code = scheme.build(k, k, s);
+                let policy = match policy_arm {
+                    "deadline" => DeadlinePolicy::Fixed(latency.quantile(1.0 - delta)),
+                    _ => DeadlinePolicy::FastestR(r),
+                };
+                let model = LatencyStragglers { model: latency, policy };
+                let partial =
+                    mc.mean_curve_partial_ws(2, Shard::full(), DecodeWorkspace::new, |ws, rng| {
+                        let (gather, err1) = ws.onestep_incremental_anytime_redraw_trial_with(
+                            code.as_ref(),
+                            &model as &dyn StragglerModel,
+                            rho,
+                            rules.target_err1,
+                            rules.revise,
+                            rng,
+                        );
+                        vec![gather, err1]
+                    });
+                out.push(ScenarioPartialPoint {
+                    study: "tta-anytime",
+                    scheme: scheme.name().to_string(),
+                    policy: policy_arm,
+                    s,
+                    delta,
+                    k,
+                    partial,
+                });
+            }
+        }
+    }
+    Ok(finalize_scenario_points(&out))
 }
 
 #[cfg(test)]
@@ -318,6 +464,112 @@ mod tests {
                 assert_eq!(a.gather.to_bits(), b.gather.to_bits(), "{}/{}", a.scheme, a.delta);
                 assert_eq!(a.err1.to_bits(), b.err1.to_bits(), "{}/{}", a.scheme, a.delta);
             }
+        }
+    }
+
+    #[test]
+    fn tta3_adds_an_optimal_arm_that_dominates_fastest_r() {
+        let mc = MonteCarlo::new(40, 5).with_threads(2);
+        let pts = tta3(12, 3, &pareto(), &mc).unwrap();
+        // 3 arms x 3 schemes x 18 deltas.
+        assert_eq!(pts.len(), 3 * 3 * 18);
+        // The first two arms are bit-identical to the tta study (the
+        // optimal arm only appends).
+        let base = tta(12, 3, &pareto(), &mc).unwrap();
+        for (a, b) in base.iter().zip(&pts) {
+            assert_eq!(a.scheme, b.scheme);
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.gather.to_bits(), b.gather.to_bits());
+            assert_eq!(a.err1.to_bits(), b.err1.to_bits());
+        }
+        // Per-trial, err(A) <= err1(A) (the optimal decoder minimizes
+        // over all weight vectors); both arms decode the same fastest-r
+        // survivor draws (same RNG stream), so the means inherit the
+        // dominance.
+        for p in pts.iter().filter(|p| p.policy == "optimal") {
+            let onestep = pts
+                .iter()
+                .find(|q| {
+                    q.policy == "fastest-r"
+                        && q.scheme == p.scheme
+                        && q.delta.to_bits() == p.delta.to_bits()
+                })
+                .unwrap();
+            assert!(
+                p.err1 <= onestep.err1 + 1e-9,
+                "{}/{}: optimal {} > one-step {}",
+                p.scheme,
+                p.delta,
+                p.err1,
+                onestep.err1
+            );
+            assert_eq!(p.gather.to_bits(), onestep.gather.to_bits());
+        }
+    }
+
+    #[test]
+    fn tta3_partials_are_shard_invariant() {
+        let mc = MonteCarlo::new(30, 9).with_threads(2);
+        let whole = tta3(10, 3, &pareto(), &mc).unwrap();
+        let num_shards = 3usize;
+        let mut merged =
+            tta3_partials(10, 3, &pareto(), &mc, Shard::new(0, num_shards).unwrap()).unwrap();
+        for sid in 1..num_shards {
+            let part =
+                tta3_partials(10, 3, &pareto(), &mc, Shard::new(sid, num_shards).unwrap()).unwrap();
+            for (a, b) in merged.iter_mut().zip(&part) {
+                assert!(a.same_point(b));
+                a.partial.merge(&b.partial).unwrap();
+            }
+        }
+        let merged = finalize_scenario_points(&merged);
+        assert_eq!(merged.len(), whole.len());
+        for (a, b) in merged.iter().zip(&whole) {
+            assert_eq!(a.gather.to_bits(), b.gather.to_bits(), "{}/{}/{}", a.policy, a.scheme, a.delta);
+            assert_eq!(a.err1.to_bits(), b.err1.to_bits(), "{}/{}/{}", a.policy, a.scheme, a.delta);
+        }
+    }
+
+    #[test]
+    fn anytime_with_empty_rules_reproduces_tta_bitwise() {
+        let mc = MonteCarlo::new(25, 7).with_threads(2);
+        let base = tta(10, 3, &pareto(), &mc).unwrap();
+        let anytime = tta_anytime(10, 3, &pareto(), &mc, AnytimeRules::default()).unwrap();
+        assert_eq!(base.len(), anytime.len());
+        for (a, b) in base.iter().zip(&anytime) {
+            assert_eq!(b.study, "tta-anytime");
+            assert_eq!(a.scheme, b.scheme);
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.gather.to_bits(), b.gather.to_bits(), "{}/{}", a.scheme, a.delta);
+            assert_eq!(a.err1.to_bits(), b.err1.to_bits(), "{}/{}", a.scheme, a.delta);
+        }
+    }
+
+    #[test]
+    fn anytime_rules_only_shorten_the_gather() {
+        let mc = MonteCarlo::new(25, 7).with_threads(2);
+        let base = tta(10, 3, &pareto(), &mc).unwrap();
+        let target = tta_anytime(
+            10,
+            3,
+            &pareto(),
+            &mc,
+            AnytimeRules { target_err1: Some(0.5), revise: None },
+        )
+        .unwrap();
+        for (a, b) in base.iter().zip(&target) {
+            assert!(b.gather <= a.gather + 1e-12, "{}/{}", a.scheme, a.delta);
+        }
+        let revised = tta_anytime(
+            10,
+            3,
+            &pareto(),
+            &mc,
+            AnytimeRules { target_err1: None, revise: Some((0.05, 0.2)) },
+        )
+        .unwrap();
+        for (a, b) in base.iter().zip(&revised) {
+            assert!(b.gather <= a.gather + 1e-12, "{}/{}", a.scheme, a.delta);
         }
     }
 

@@ -574,6 +574,7 @@ impl JobSpec {
             JobKind::Scenario => {
                 let pts = match self.id.as_str() {
                     "tta" => scenario_mod::tta_partials(self.k, self.s, scenario, &mc, shard)?,
+                    "tta3" => scenario_mod::tta3_partials(self.k, self.s, scenario, &mc, shard)?,
                     other => bail!(
                         "unknown scenario study {other:?} (one of {})",
                         SCENARIO_IDS.join("|")
@@ -1350,7 +1351,7 @@ pub const ABLATION_STUDIES: [&str; 4] =
 /// `repro shard --scenario`, `repro run --scenario`) and
 /// [`JobSpec::run`] accept — the single registry, like [`TABLE_IDS`],
 /// so a study cannot be producible-but-unmergeable.
-pub const SCENARIO_IDS: [&str; 1] = ["tta"];
+pub const SCENARIO_IDS: [&str; 2] = ["tta", "tta3"];
 
 /// Intern a deserialized name against one of the static id registries,
 /// yielding the `&'static str` the point structs carry — the single
@@ -1438,7 +1439,7 @@ fn scenario_point_from_json(j: &Json) -> Result<ScenarioPartialPoint> {
         scheme: j.get("scheme")?.as_str()?.to_string(),
         policy: intern(
             j.get("policy")?.as_str()?,
-            &scenario_mod::TTA_POLICIES,
+            &scenario_mod::TTA3_POLICIES,
             "scenario policy",
         )?,
         s: j.get("s")?.as_usize()?,

@@ -41,6 +41,9 @@ pub struct StragglerScratch {
     pub latencies: Vec<f64>,
     /// Order-statistic scratch for the fastest-r policy (length n).
     pub order: Vec<usize>,
+    /// The selected set in message-arrival order (filled on demand by
+    /// [`StragglerScratch::compute_arrivals`]).
+    pub arrivals: Vec<usize>,
     /// Gather wall-clock of the most recent draw: when the master
     /// stopped waiting. Latency models set it (fixed deadline: the
     /// deadline; fastest-r: the r-th order statistic); models with no
@@ -61,6 +64,34 @@ impl StragglerScratch {
         self.idx.reserve(n);
         self.latencies.reserve(n);
         self.order.reserve(n);
+        self.arrivals.reserve(n);
+    }
+
+    /// Derive the message-arrival order of the most recent draw into
+    /// `arrivals` — **arrival order is contract** for the incremental
+    /// decode paths:
+    ///
+    /// * draws with a time axis (`gather_time` finite): ascending
+    ///   (latency, worker index) over the selected set — the order the
+    ///   coded messages actually reach the master;
+    /// * draws with no time axis (uniform, adversarial,
+    ///   `gather_time` NaN): the draw order of `idx` itself, matching
+    ///   the [`StragglerModel::non_stragglers_into`] order contract.
+    ///
+    /// Allocation-free at steady state (one `extend_from_slice` into a
+    /// reserved buffer plus an in-place sort).
+    pub fn compute_arrivals(&mut self) {
+        self.arrivals.clear();
+        self.arrivals.extend_from_slice(&self.idx);
+        if !self.gather_time.is_nan() {
+            let latencies = &self.latencies;
+            self.arrivals.sort_unstable_by(|&a, &b| {
+                latencies[a]
+                    .partial_cmp(&latencies[b])
+                    .expect("latency draws are finite")
+                    .then(a.cmp(&b))
+            });
+        }
     }
 }
 
@@ -125,5 +156,40 @@ mod tests {
         }
         // Streams stayed in lockstep.
         assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+    }
+
+    #[test]
+    fn arrivals_without_time_axis_are_draw_order() {
+        let m = UniformStragglers::new(0.4);
+        let mut ws = StragglerScratch::new();
+        let mut rng = Rng::new(9);
+        m.non_stragglers_into(50, &mut rng, &mut ws);
+        ws.compute_arrivals();
+        assert_eq!(ws.arrivals, ws.idx);
+    }
+
+    #[test]
+    fn arrivals_under_latency_draw_are_sorted_by_latency_then_index() {
+        let model = LatencyStragglers {
+            model: LatencyModel::Pareto { scale: 0.1, shape: 1.5 },
+            policy: DeadlinePolicy::FastestR(12),
+        };
+        let mut ws = StragglerScratch::new();
+        let mut rng = Rng::new(10);
+        for _ in 0..5 {
+            model.non_stragglers_into(40, &mut rng, &mut ws);
+            ws.compute_arrivals();
+            assert_eq!(ws.arrivals.len(), ws.idx.len());
+            // Same set as idx, ordered by ascending completion time.
+            let mut sorted = ws.arrivals.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, ws.idx);
+            assert!(ws
+                .arrivals
+                .windows(2)
+                .all(|w| ws.latencies[w[0]] <= ws.latencies[w[1]]));
+            // The fastest-r order buffer IS the arrival order.
+            assert_eq!(ws.arrivals, ws.order[..ws.idx.len()]);
+        }
     }
 }

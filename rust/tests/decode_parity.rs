@@ -365,6 +365,77 @@ fn uniform_scenario_csv_matches_pre_refactor_fig3_and_thm6() {
     assert_eq!(spine_csv, legacy, "thm6 CSV drifted from the pre-refactor bytes");
 }
 
+/// The tta scenario acceptance pin (PR 8): the `tta` study now streams
+/// every trial's survivors through the incremental decoder in arrival
+/// order, and its CSV must stay byte-identical to the legacy post-hoc
+/// path (one batch err₁ decode after the gather) under the default
+/// scenario configuration — the prefix-parity contract at the full
+/// prefix, observed at the published-artifact level.
+#[test]
+fn tta_csv_from_incremental_path_matches_post_hoc_reconstruction() {
+    use gradcode::sim::figures::FIG_SCHEMES;
+    use gradcode::sim::scenario::{tta_deltas, ScenarioPartialPoint, TTA_POLICIES};
+    use gradcode::sim::{JobKind, JobSpec, Shard};
+    use gradcode::stragglers::{DeadlinePolicy, LatencyStragglers, Scenario, StragglerModel};
+
+    let (k, s, trials, seed) = (16usize, 4usize, 12usize, 2017u64);
+    let scenario = Scenario::parse("pareto:0.02,1.5").unwrap();
+    let job = JobSpec {
+        kind: JobKind::Scenario,
+        id: "tta".into(),
+        trials,
+        seed,
+        k,
+        s,
+        tmax: 0,
+        scenario: scenario.clone(),
+    };
+    let spine_csv = job.run(Shard::full(), Some(2)).unwrap().to_csv();
+
+    // Post-hoc reconstruction: the identical sweep, but each trial
+    // decodes once on the full survivor set (the pre-incremental
+    // batch trial) instead of streaming arrivals.
+    let mc = MonteCarlo::new(trials, seed).with_threads(2);
+    let Scenario::Latency { model: latency, .. } = scenario else { panic!("latency scenario") };
+    let mut legacy = String::from("scenario,scheme,policy,s,delta,gather,err1\n");
+    for &policy_arm in &TTA_POLICIES {
+        for &scheme in &FIG_SCHEMES {
+            for delta in tta_deltas() {
+                let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
+                let rho = k as f64 / (r as f64 * s as f64);
+                let code = scheme.build(k, k, s);
+                let policy = match policy_arm {
+                    "deadline" => DeadlinePolicy::Fixed(latency.quantile(1.0 - delta)),
+                    _ => DeadlinePolicy::FastestR(r),
+                };
+                let model = LatencyStragglers { model: latency, policy };
+                let partial =
+                    mc.mean_curve_partial_ws(2, Shard::full(), DecodeWorkspace::new, |ws, rng| {
+                        let err = ws.onestep_redraw_trial_with(
+                            code.as_ref(),
+                            &model as &dyn StragglerModel,
+                            rho,
+                            rng,
+                        );
+                        vec![ws.last_gather_time(), err]
+                    });
+                let point = ScenarioPartialPoint {
+                    study: "tta",
+                    scheme: scheme.name().to_string(),
+                    policy: policy_arm,
+                    s,
+                    delta,
+                    k,
+                    partial,
+                };
+                legacy.push_str(&point.finalize().to_csv());
+                legacy.push('\n');
+            }
+        }
+    }
+    assert_eq!(spine_csv, legacy, "tta CSV drifted from the post-hoc decode path");
+}
+
 /// Panel decode (PR 6): the W-trials-per-call kernels must reproduce
 /// every scalar trial bit for bit, at every width, including ragged
 /// tails (trials = 11 is not divisible by 3, 4, or 8) — and the RNG

@@ -1,0 +1,248 @@
+//! Prefix-parity suite for the incremental anytime decoder
+//! (`decode::incremental`) — the PR's binding contract: after the
+//! first i arrivals, incremental state must be bit-identical to a
+//! batch decode on exactly those i survivors, for **every** prefix,
+//! every code scheme, every straggler model family, and any arrival
+//! permutation. Plus: the warm-started LSQR chain agrees with a cold
+//! solve at the final prefix (summary-level equality — LSQR from two
+//! starting points converges to the same least-squares optimum, not
+//! the same bit pattern).
+
+use gradcode::codes::Scheme;
+use gradcode::decode::{DecodeWorkspace, IncrementalDecoder};
+use gradcode::linalg::{CscMatrix, LsqrOptions};
+use gradcode::stragglers::{
+    AdversarialStragglers, AttackKind, DeadlinePolicy, LatencyModel, LatencyStragglers,
+    StragglerModel, StragglerScratch, UniformStragglers,
+};
+use gradcode::util::Rng;
+
+const ALL_SCHEMES: [Scheme; 5] =
+    [Scheme::Frc, Scheme::Bgc, Scheme::Rbgc, Scheme::RegularGraph, Scheme::Cyclic];
+
+/// Drive a fresh `IncrementalDecoder` through `arrivals` one survivor
+/// at a time, pinning the exact err₁ (and the coverage row counts) of
+/// **every** prefix — 0, 1, …, len — bit-for-bit against the batch
+/// workspace decode of exactly that prefix set.
+fn check_prefix_parity(
+    g: &CscMatrix,
+    rho: f64,
+    arrivals: &[usize],
+    ws: &mut DecodeWorkspace,
+    label: &str,
+) {
+    let mut inc = IncrementalDecoder::new();
+    inc.begin(g.rows, rho);
+    let want_empty = ws.err1_fused(g, &[], rho);
+    assert_eq!(inc.err1().to_bits(), want_empty.to_bits(), "{label}: empty prefix");
+    for i in 0..arrivals.len() {
+        inc.arrive(g, arrivals[i]);
+        let want = ws.err1_fused(g, &arrivals[..i + 1], rho);
+        assert_eq!(
+            inc.err1().to_bits(),
+            want.to_bits(),
+            "{label}: prefix {} of {}",
+            i + 1,
+            arrivals.len()
+        );
+    }
+}
+
+/// The full matrix: five schemes × four straggler model families ×
+/// (real arrival order + a shuffled permutation of it) × every prefix,
+/// over several independent draws. The ragged ends i ∈ {0, 1, len−1,
+/// len} ride along since every prefix is checked.
+#[test]
+fn every_scheme_model_and_prefix_is_bit_identical_to_batch() {
+    let (k, n, s) = (48usize, 48usize, 5usize);
+    let r = 36usize;
+    let rho = k as f64 / (r as f64 * s as f64);
+    let mut ws = DecodeWorkspace::new();
+    for (si, scheme) in ALL_SCHEMES.iter().enumerate() {
+        let g = scheme.build(k, n, s).assignment(&mut Rng::new(100 + si as u64));
+        let pareto = LatencyModel::Pareto { scale: 0.05, shape: 1.5 };
+        let shifted = LatencyModel::ShiftedExp { base: 0.05, rate: 10.0 };
+        let uniform = UniformStragglers::new(0.25);
+        let fastest = LatencyStragglers { model: pareto, policy: DeadlinePolicy::FastestR(r) };
+        let deadline = LatencyStragglers { model: shifted, policy: DeadlinePolicy::Fixed(0.2) };
+        let adversarial = AdversarialStragglers::plan(&g, r, s, AttackKind::Greedy);
+        let models: [(&str, &dyn StragglerModel); 4] = [
+            ("uniform", &uniform),
+            ("latency/fastest-r", &fastest),
+            ("latency/deadline", &deadline),
+            ("adversarial", &adversarial),
+        ];
+        for (mi, (mname, model)) in models.iter().enumerate() {
+            let mut scratch = StragglerScratch::new();
+            let mut rng = Rng::new(1 + 7 * si as u64 + mi as u64);
+            for trial in 0..4 {
+                model.non_stragglers_into(n, &mut rng, &mut scratch);
+                scratch.compute_arrivals();
+                let arrivals = scratch.arrivals.clone();
+                let label = format!("{}/{mname}/trial {trial}", scheme.name());
+                check_prefix_parity(&g, rho, &arrivals, &mut ws, &label);
+
+                // Permuted arrival order: different prefix *sets*, but
+                // each prefix must still match batch on exactly that
+                // set (boolean coverage adds are exact, so order never
+                // moves a bit).
+                let mut permuted = arrivals.clone();
+                rng.shuffle(&mut permuted);
+                check_prefix_parity(&g, rho, &permuted, &mut ws, &format!("{label}/permuted"));
+            }
+        }
+    }
+}
+
+/// Arrival order from a time-axis draw is sorted by (latency, worker
+/// index) — the incremental prefix after i arrivals is the i fastest
+/// workers, so the prefix err₁ curve pinned above is the real anytime
+/// decode-at-deadline curve, not an artifact of index order.
+#[test]
+fn time_axis_arrival_prefixes_are_the_fastest_workers() {
+    let (n, r) = (40usize, 30usize);
+    let model = LatencyStragglers {
+        model: LatencyModel::Pareto { scale: 0.05, shape: 1.2 },
+        policy: DeadlinePolicy::FastestR(r),
+    };
+    let mut scratch = StragglerScratch::new();
+    let mut rng = Rng::new(33);
+    model.non_stragglers_into(n, &mut rng, &mut scratch);
+    scratch.compute_arrivals();
+    assert_eq!(scratch.arrivals.len(), r);
+    for w in scratch.arrivals.windows(2) {
+        assert!(
+            scratch.latencies[w[0]] <= scratch.latencies[w[1]],
+            "arrivals out of latency order"
+        );
+    }
+    // The last arrival is exactly the gather time of a fastest-r draw.
+    let last = *scratch.arrivals.last().unwrap();
+    assert_eq!(scratch.latencies[last].to_bits(), scratch.gather_time.to_bits());
+}
+
+/// Warm-start rule, summary level: a chain of LSQR solves at growing
+/// prefixes (each warm-started from the previous prefix's solution)
+/// lands on the same optimum as one cold solve at the final prefix,
+/// for every scheme. The cold incremental solve itself is bit-identical
+/// to the batch workspace warm path (`warm = Some(rho)`).
+#[test]
+fn warm_started_lsqr_chain_agrees_with_cold_solve_at_final_prefix() {
+    let (k, n, s, r) = (40usize, 40usize, 4usize, 30usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let opts = LsqrOptions::default();
+    for (si, scheme) in ALL_SCHEMES.iter().enumerate() {
+        let g = scheme.build(k, n, s).assignment(&mut Rng::new(200 + si as u64));
+        let model = LatencyStragglers {
+            model: LatencyModel::Pareto { scale: 0.05, shape: 1.5 },
+            policy: DeadlinePolicy::FastestR(r),
+        };
+        let mut scratch = StragglerScratch::new();
+        let mut rng = Rng::new(300 + si as u64);
+        model.non_stragglers_into(n, &mut rng, &mut scratch);
+        scratch.compute_arrivals();
+        let arrivals = scratch.arrivals.clone();
+
+        // Warm chain: re-solve every few arrivals, then at the end.
+        let mut warm = IncrementalDecoder::new();
+        warm.begin(k, rho);
+        let mut warm_err = f64::NAN;
+        for (i, &j) in arrivals.iter().enumerate() {
+            warm.arrive(&g, j);
+            if (i + 1) % 6 == 0 || i + 1 == arrivals.len() {
+                warm_err = warm.optimal_err(&g, &opts);
+            }
+        }
+        let warm_summary = warm.last_lsqr_summary().expect("warm chain solved");
+
+        // Cold: a fresh decoder fed the same arrivals, one solve.
+        let mut cold = IncrementalDecoder::new();
+        cold.begin(k, rho);
+        for &j in &arrivals {
+            cold.arrive(&g, j);
+        }
+        let cold_err = cold.optimal_err(&g, &opts);
+        let cold_summary = cold.last_lsqr_summary().expect("cold solve ran");
+
+        // The cold first solve IS the batch warm path, bit for bit.
+        let mut ws = DecodeWorkspace::new();
+        let batch = ws.optimal_err(&g, &arrivals, &opts, Some(rho));
+        assert_eq!(cold_err.to_bits(), batch.to_bits(), "{}", scheme.name());
+
+        // Summary equality at the final prefix: same convergence
+        // verdict, same optimum up to the solver's own tolerance.
+        assert_eq!(
+            warm_summary.converged,
+            cold_summary.converged,
+            "{}: convergence verdicts differ",
+            scheme.name()
+        );
+        assert!(
+            (warm_err - cold_err).abs() <= 1e-6 * (1.0 + cold_err.abs()),
+            "{}: warm {warm_err} vs cold {cold_err}",
+            scheme.name()
+        );
+        assert!(
+            (warm_summary.residual_norm - cold_summary.residual_norm).abs()
+                <= 1e-6 * (1.0 + cold_summary.residual_norm.abs()),
+            "{}: residual norms diverge ({} vs {})",
+            scheme.name(),
+            warm_summary.residual_norm,
+            cold_summary.residual_norm,
+        );
+        // err(A) ≤ err₁(A): the optimal decode starts at the one-step
+        // weights and only improves.
+        let err1 = ws.err1_fused(&g, &arrivals, rho);
+        assert!(
+            cold_err <= err1 + 1e-9 * (1.0 + err1),
+            "{}: optimal {cold_err} worse than one-step {err1}",
+            scheme.name()
+        );
+    }
+}
+
+/// The workspace-level prefix trial helpers used by the serve daemon:
+/// at prefix == r they are bit-identical to the full-draw trial
+/// methods (same RNG stream, same survivor draw), and the one-step
+/// prefix trial matches a hand-driven incremental decode of the same
+/// prefix.
+#[test]
+fn workspace_prefix_trials_pin_the_serve_daemon_route() {
+    let (k, s, r) = (32usize, 4usize, 24usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let opts = LsqrOptions::default();
+    for (si, scheme) in ALL_SCHEMES.iter().enumerate() {
+        let g = scheme.build(k, k, s).assignment(&mut Rng::new(400 + si as u64));
+        let mut ws = DecodeWorkspace::new();
+
+        // Full prefix == full trial, bit for bit, on lockstep streams.
+        let mut rng_a = Rng::new(41);
+        let mut rng_b = Rng::new(41);
+        for _ in 0..3 {
+            let full = ws.onestep_trial(&g, r, rho, &mut rng_a);
+            let prefixed = ws.onestep_prefix_trial(&g, r, r, rho, &mut rng_b);
+            assert_eq!(full.to_bits(), prefixed.to_bits(), "{}", scheme.name());
+        }
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{}: rng drift", scheme.name());
+
+        // A strict prefix matches the hand-driven incremental decode
+        // of the same draw's first p survivors.
+        let p = r / 2;
+        let mut rng_c = Rng::new(42);
+        let got = ws.onestep_prefix_trial(&g, r, p, rho, &mut rng_c);
+        let drawn = Rng::new(42).sample_indices(k, r);
+        let mut inc = IncrementalDecoder::new();
+        inc.begin(k, rho);
+        for &j in &drawn[..p] {
+            inc.arrive(&g, j);
+        }
+        assert_eq!(got.to_bits(), inc.err1().to_bits(), "{}: prefix trial", scheme.name());
+
+        // Optimal prefix trial at full prefix == the warm optimal trial.
+        let mut rng_d = Rng::new(43);
+        let mut rng_e = Rng::new(43);
+        let full = ws.optimal_trial(&g, r, &opts, Some(rho), &mut rng_d);
+        let prefixed = ws.optimal_prefix_trial(&g, r, r, &opts, Some(rho), &mut rng_e);
+        assert_eq!(full.to_bits(), prefixed.to_bits(), "{}: optimal prefix", scheme.name());
+    }
+}

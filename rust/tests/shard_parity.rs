@@ -620,6 +620,65 @@ fn scenario_tta_shard_merge_reproduces_unsharded_csv() {
 }
 
 #[test]
+fn scenario_tta3_optimal_arm_is_shard_partition_invariant() {
+    // The tta3 study (PR 8) adds the survivor-set-optimal decoder as a
+    // third arm; its LSQR solves are per-trial pure (warm-started at
+    // ρ·1 from a fresh workspace state each trial), so the arm must be
+    // exactly as partition-invariant as the one-step arms: any shard
+    // split x thread counts x the artifact round trip merges to the
+    // unsharded bytes.
+    let job = JobSpec {
+        kind: JobKind::Scenario,
+        id: "tta3".into(),
+        trials: 20,
+        seed: 19,
+        k: 12,
+        s: 3,
+        tmax: 0,
+        scenario: Scenario::parse("pareto:0.05,1.5").unwrap(),
+    };
+    let unsharded = job.run(Shard::full(), Some(3)).unwrap().to_csv();
+    let other_threads = job.run(Shard::full(), Some(1)).unwrap().to_csv();
+    assert_eq!(unsharded, other_threads, "tta3: thread dependence");
+    assert!(unsharded.starts_with("scenario,scheme,policy,s,delta,gather,err1\n"));
+    // All three arms are present, and the one-step arms precede the
+    // optimal arm (TTA3_POLICIES is a strict superset of TTA_POLICIES,
+    // so tta rows keep their positions).
+    for arm in ["fastest-r", "deadline", "optimal"] {
+        assert!(unsharded.contains(&format!(",{arm},")), "missing arm {arm}");
+    }
+    for &n in &SHARD_COUNTS {
+        let artifacts: Vec<ShardArtifact> = (0..n)
+            .map(|sid| {
+                let art = ShardArtifact::compute(
+                    &job,
+                    Shard::new(sid, n).unwrap(),
+                    Some(shard_threads(sid)),
+                )
+                .unwrap();
+                ShardArtifact::parse(&art.to_json_string()).unwrap()
+            })
+            .collect();
+        ShardArtifact::verify_set(&artifacts).expect("tta3 artifact set verifies");
+        let merged = ShardArtifact::merge(artifacts).unwrap();
+        assert_eq!(merged.to_csv(), unsharded, "tta3 n={n}");
+    }
+
+    // The two one-step arms are bit-identical to the plain tta study
+    // on the same job parameters: the third arm rides alongside
+    // without perturbing a single published tta byte.
+    let tta_job = JobSpec { id: "tta".into(), ..job };
+    let tta_csv = tta_job.run(Shard::full(), Some(2)).unwrap().to_csv();
+    let tta_rows: Vec<&str> = tta_csv.lines().collect();
+    let tta3_rows: Vec<&str> = unsharded.lines().collect();
+    assert!(tta3_rows.len() > tta_rows.len());
+    for (i, row) in tta_rows.iter().enumerate() {
+        let expect = if i == 0 { row.to_string() } else { row.replacen("tta,", "tta3,", 1) };
+        assert_eq!(tta3_rows[i], expect, "tta3 row {i} diverges from tta");
+    }
+}
+
+#[test]
 fn non_uniform_scenarios_shard_merge_bit_parity_for_figures_and_tables() {
     // Latency and adversarial scenarios ride the same shard machinery:
     // sharded runs merge to the single-process bytes for a figure and a

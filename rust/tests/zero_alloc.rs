@@ -360,6 +360,71 @@ fn panel_trial_loop_is_allocation_free_after_warmup() {
     assert_eq!(allocs, 0, "ragged panel tail allocated {allocs} times");
 }
 
+/// The incremental anytime spine (PR 8): after `reserve_redraw`, the
+/// arrival-ordered per-survivor update loop — redraw G, draw
+/// stragglers, sort the arrival order, feed survivors one at a time
+/// through the `IncrementalDecoder` — performs zero steady-state heap
+/// allocations, with and without the anytime stopping rules (which
+/// query the exact prefix err₁ after every arrival).
+#[test]
+fn incremental_arrival_loop_is_allocation_free_after_reserve() {
+    use gradcode::stragglers::{
+        DeadlinePolicy, LatencyModel, LatencyStragglers, StragglerModel, UniformStragglers,
+    };
+    let (k, s, r) = (60usize, 6usize, 45usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let code = Scheme::Bgc.build(k, k, s);
+    let pareto = LatencyModel::Pareto { scale: 0.05, shape: 1.5 };
+    let fastest = LatencyStragglers { model: pareto, policy: DeadlinePolicy::FastestR(r) };
+    let uniform = UniformStragglers::new(0.25);
+    let models: [(&str, &dyn StragglerModel); 2] =
+        [("latency/fastest-r", &fastest), ("uniform", &uniform)];
+
+    for (name, model) in models {
+        let mut ws = DecodeWorkspace::new();
+        ws.reserve_redraw(k, k, s);
+        let mut rng = Rng::new(61);
+
+        let mut warmup_sum = 0.0;
+        for _ in 0..3 {
+            warmup_sum +=
+                ws.onestep_incremental_redraw_trial_with(code.as_ref(), model, rho, &mut rng);
+            let (gather, err1) = ws.onestep_incremental_anytime_redraw_trial_with(
+                code.as_ref(),
+                model,
+                rho,
+                Some(0.5),
+                Some((0.1, 0.2)),
+                &mut rng,
+            );
+            // Uniform draws have no time axis: gather is NaN there.
+            warmup_sum += err1 + if gather.is_nan() { 0.0 } else { gather };
+        }
+        assert!(warmup_sum.is_finite());
+
+        let before = allocations_on_this_thread();
+        let mut sum = 0.0;
+        for _ in 0..100 {
+            sum += ws.onestep_incremental_redraw_trial_with(code.as_ref(), model, rho, &mut rng);
+            let (_gather, err1) = ws.onestep_incremental_anytime_redraw_trial_with(
+                code.as_ref(),
+                model,
+                rho,
+                Some(0.5),
+                Some((0.1, 0.2)),
+                &mut rng,
+            );
+            sum += err1;
+        }
+        let allocs = allocations_on_this_thread() - before;
+        assert!(sum.is_finite() && sum >= 0.0);
+        assert_eq!(
+            allocs, 0,
+            "{name}: steady-state incremental arrival loop allocated {allocs} times"
+        );
+    }
+}
+
 /// Control: the counter itself works — the legacy allocating path must
 /// register allocations (otherwise the two tests above prove nothing).
 #[test]
