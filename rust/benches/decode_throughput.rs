@@ -18,6 +18,11 @@
 //! * **serve/load** (PR 7): sustained decode rounds/sec through the
 //!   `repro serve` daemon (sockets, framing, memoized assignments, hot
 //!   workspaces) under a closed-loop `repro load` at k = n = 1000.
+//! * **SIMD lane tiers + fused redraw panels** (PR 9): the W = 8 panel
+//!   re-measured with the runtime dispatcher capped at each available
+//!   tier (portable/SSE2/AVX2/AVX-512 — all bit-identical, only
+//!   wall-clock differs), and the fused fresh-G redraw panel vs the
+//!   scalar fork-per-trial redraw loop.
 //!
 //! Emits `BENCH_decode.json` (fixed seeds) for cross-PR trajectories.
 //!
@@ -39,6 +44,18 @@ use gradcode::util::bench::black_box;
 use gradcode::util::Rng;
 
 fn main() {
+    // One startup note when the build asked for SIMD but the target has
+    // no x86-64 tier (e.g. aarch64): every kernel silently runs the
+    // portable loops, and the per-tier records below collapse to one
+    // tier. Bench-only — the library itself never prints.
+    if cfg!(feature = "simd")
+        && gradcode::linalg::detected_simd_tier() == gradcode::linalg::SimdTier::Portable
+    {
+        eprintln!(
+            "WARN: the `simd` feature is enabled but no x86-64 SIMD tier is available on \
+             this target; panel kernels run the portable scalar loops"
+        );
+    }
     let b = common::bencher();
     let mut records: Vec<DecodeBenchRecord> = Vec::new();
 
@@ -602,6 +619,134 @@ fn main() {
                     // Per-trial cost: one closure call runs W trials.
                     ns_per_decode: t.as_nanos() as f64 / w as f64,
                     decodes_per_sec: w as f64 / t.as_secs_f64(),
+                });
+            }
+        }
+
+        // ---------------- per-lane-tier panel throughput (PR 9)
+        // Cap the runtime dispatcher at each tier at or below the one
+        // this machine detects and re-measure the W = 8 panels. Every
+        // tier produces bit-identical errors (independent per-lane IEEE
+        // accumulators, no FMA) — only wall-clock differs — so the
+        // records chart the SSE2 → AVX2 (→ AVX-512) trajectory on
+        // capable hardware and collapse to one row elsewhere.
+        {
+            use gradcode::linalg::{
+                cap_simd_tier, detected_simd_tier, uncap_simd_tier, SimdTier,
+            };
+
+            let detected = detected_simd_tier();
+            println!("bench decode/panel/simd-tier/detected                  {}", detected.name());
+            let w = 8usize;
+            let mut pw = PanelWorkspace::new(w);
+            pw.mirror_csr(&g1);
+            let mut out = vec![0.0f64; w];
+            for tier in [SimdTier::Portable, SimdTier::Sse2, SimdTier::Avx2, SimdTier::Avx512] {
+                if tier > detected {
+                    continue;
+                }
+                cap_simd_tier(tier);
+                let mut pbase = 0u64;
+                let t_tier_one =
+                    b.bench(&format!("decode/panel/one-step/w8/{}/k1000", tier.name()), || {
+                        pw.onestep_panel(&g1, r1, rho1, &root, pbase, w, &mut out);
+                        pbase += w as u64;
+                        black_box(out[0])
+                    });
+                let mut obase = 0u64;
+                let t_tier_opt =
+                    b.bench(&format!("decode/panel/optimal/w8/{}/k1000", tier.name()), || {
+                        pw.optimal_panel(&g1, r1, &opts, None, &root, obase, w, &mut out);
+                        obase += w as u64;
+                        black_box(out[0])
+                    });
+                for (label, t) in [
+                    (format!("panel/one-step/w8/{}", tier.name()), t_tier_one),
+                    (format!("panel/optimal/w8/{}", tier.name()), t_tier_opt),
+                ] {
+                    records.push(DecodeBenchRecord {
+                        label,
+                        scheme: "BGC".to_string(),
+                        k: k1,
+                        n: k1,
+                        s: s1,
+                        r: r1,
+                        seed: seed1,
+                        ns_per_decode: t.as_nanos() as f64 / w as f64,
+                        decodes_per_sec: w as f64 / t.as_secs_f64(),
+                    });
+                }
+            }
+            uncap_simd_tier();
+            // The tier the uncapped dispatcher actually chose, recorded
+            // as a zero-cost marker row so BENCH_decode.json states the
+            // hardware context of every panel/* record above.
+            records.push(DecodeBenchRecord {
+                label: format!("panel/simd-tier/{}", detected.name()),
+                scheme: "BGC".to_string(),
+                k: k1,
+                n: k1,
+                s: s1,
+                r: r1,
+                seed: seed1,
+                ns_per_decode: 0.0,
+                decodes_per_sec: 0.0,
+            });
+        }
+
+        // ---------------- fused redraw panels (PR 9)
+        // Fresh-G arms: trial j draws a new assignment from
+        // `root.fork(j)` before decoding. The scalar baseline pays one
+        // full draw + decode per call; the fused panel batches W draws
+        // into a lane-strided coverage panel and runs one fused err₁
+        // sweep. Per-trial cost is panel time / W, as above.
+        {
+            use gradcode::stragglers::UniformStragglers;
+
+            let model = UniformStragglers::new(0.1); // r = 900 = r1
+            let mut sbase_rd = 0u64;
+            let t_redraw_scalar =
+                b.bench("decode/panel/redraw/one-step/scalar-trial/k1000", || {
+                    let mut r = root.fork(sbase_rd);
+                    sbase_rd += 1;
+                    black_box(ws.onestep_redraw_trial_with(code1.as_ref(), &model, rho1, &mut r))
+                });
+            let w = 8usize;
+            let mut pw = PanelWorkspace::new(w);
+            pw.reserve_redraw(k1, k1, s1);
+            let mut out = vec![0.0f64; w];
+            let mut pbase_rd = 0u64;
+            let t_redraw_panel = b.bench("decode/panel/redraw/one-step/w8/k1000", || {
+                pw.onestep_redraw_panel_with(
+                    code1.as_ref(),
+                    &model,
+                    rho1,
+                    &root,
+                    pbase_rd,
+                    w,
+                    &mut out,
+                );
+                pbase_rd += w as u64;
+                black_box(out[0])
+            });
+            println!(
+                "bench decode/panel/redraw/per-trial-speedup/w8/k1000   {:.2}x vs scalar",
+                t_redraw_scalar.as_secs_f64() / (t_redraw_panel.as_secs_f64() / w as f64)
+            );
+            for (label, t, per) in [
+                ("panel/redraw/one-step/scalar-trial", t_redraw_scalar, 1usize),
+                ("panel/redraw/one-step/w8", t_redraw_panel, w),
+            ] {
+                records.push(DecodeBenchRecord {
+                    label: label.to_string(),
+                    scheme: "BGC".to_string(),
+                    k: k1,
+                    n: k1,
+                    s: s1,
+                    r: r1,
+                    seed: seed1,
+                    ns_per_decode: t.as_nanos() as f64 / per as f64,
+                    decodes_per_sec: per as f64 / t.as_secs_f64(),
                 });
             }
         }

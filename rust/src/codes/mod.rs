@@ -52,7 +52,12 @@ impl AssignmentScratch {
 }
 
 /// A gradient-code construction.
-pub trait GradientCode {
+///
+/// `Send + Sync` supertraits: every construction is plain immutable
+/// parameter data (all randomness flows through the `rng` arguments),
+/// and the sharded Monte-Carlo layer hands `&dyn GradientCode` to
+/// worker threads for the panelized redraw sweeps.
+pub trait GradientCode: Send + Sync {
     /// Number of tasks / functions k.
     fn k(&self) -> usize;
     /// Number of workers n.

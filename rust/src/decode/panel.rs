@@ -22,16 +22,30 @@
 //!
 //! # Which arms actually batch
 //!
-//! Only **fixed-G** trials share work across lanes (one G, W survivor
-//! draws): the one-step arm batches the coverage/err₁ pass over the CSR
-//! mirror, and the optimal arm runs the lockstep multi-RHS LSQR.
-//! **Redraw** arms draw a fresh G per trial, so there is nothing to
-//! share — those methods loop lanes through an internal scalar
-//! [`DecodeWorkspace`](super::DecodeWorkspace), trivially preserving
-//! parity while keeping the panel API uniform for callers. Non-boolean
-//! G (weighted assignments) likewise falls back to the per-lane scalar
-//! path, because the panel coverage kernel's exactness argument needs
+//! **Fixed-G** trials share the most (one G, W survivor draws): the
+//! one-step arm batches the coverage/err₁ pass over the CSR mirror, and
+//! the optimal arm runs the lockstep multi-RHS LSQR. Non-boolean G
+//! (weighted assignments) falls back to the per-lane scalar path there,
+//! because the counts-panel kernel's exactness argument needs
 //! integer-valued data.
+//!
+//! **One-step redraw** trials draw a fresh G per lane, so no pass over
+//! G is shared — but the err₁ reduction is: each lane
+//! scatter-accumulates its own G's survivor coverage into a
+//! lane-strided k×W panel (one `AssignmentScratch`, one workspace G
+//! overwritten lane by lane), and a single fused
+//! [`err1_panel_cov`](crate::linalg::err1_panel_cov) sweep reduces all
+//! W lanes with the SIMD lane tiers. Lane l's scatter *is* the scalar
+//! trial's scatter, addition for addition, into its own column of
+//! accumulators — so the fused form is bit-identical on weighted G
+//! too, no integer-exactness argument needed.
+//!
+//! **Optimal / normalized redraw** arms have nothing to fuse: each
+//! lane's LSQR (or column normalization) runs against a *distinct* G,
+//! so batching shares neither matrix passes nor reductions. Those
+//! methods loop lanes through the internal scalar
+//! [`DecodeWorkspace`](super::DecodeWorkspace), trivially preserving
+//! parity while keeping the panel API uniform for callers.
 
 use super::workspace::DecodeWorkspace;
 use crate::codes::GradientCode;
@@ -66,6 +80,9 @@ pub struct PanelWorkspace {
     counts: Vec<f64>,
     /// W-lane coverage scratch for the err₁ row sweep.
     cov: Vec<f64>,
+    /// Lane-strided k×W coverage panel for the fused redraw arm:
+    /// `cov_panel[i * lanes + l]` = row i's coverage in lane l's G.
+    cov_panel: Vec<f64>,
     /// Flattened per-lane survivor selections + CSR-style lane bounds.
     sel_flat: Vec<usize>,
     sel_ptr: Vec<usize>,
@@ -88,6 +105,7 @@ impl PanelWorkspace {
             mirror_boolean: false,
             counts: Vec::new(),
             cov: Vec::new(),
+            cov_panel: Vec::new(),
             sel_flat: Vec::new(),
             sel_ptr: Vec::new(),
             sel_tmp: Vec::new(),
@@ -115,6 +133,16 @@ impl PanelWorkspace {
     /// allocation-count tests).
     pub fn scalar_ws(&mut self) -> &mut DecodeWorkspace {
         &mut self.scalar
+    }
+
+    /// Pre-size every buffer the redraw panel touches at (k, n, s) —
+    /// the panel-width analogue of
+    /// [`DecodeWorkspace::reserve_redraw`], so the fused redraw loop
+    /// performs zero heap allocations from the very first panel
+    /// (pinned by `tests/zero_alloc.rs`).
+    pub fn reserve_redraw(&mut self, k: usize, n: usize, s: usize) {
+        self.scalar.reserve_redraw(k, n, s);
+        self.cov_panel.reserve(k * self.width);
     }
 
     /// Draw each lane's survivor selection: lane `l` forks
@@ -234,10 +262,20 @@ impl PanelWorkspace {
         }
     }
 
-    /// Panel of one-step redraw trials (fresh G per lane — nothing to
-    /// share, so lanes run through the scalar workspace one by one,
-    /// each on its own forked stream). Bit-identical per lane to
-    /// [`DecodeWorkspace::onestep_redraw_trial_with`].
+    /// Panel of one-step redraw trials, fused: a fresh G per lane
+    /// (drawn into the shared workspace matrix through one
+    /// `AssignmentScratch`), each lane's survivor coverage
+    /// scatter-accumulated into its own stride of the k×W coverage
+    /// panel, and a single [`err1_panel_cov`](panel::err1_panel_cov)
+    /// sweep reducing all lanes with the SIMD lane tiers.
+    ///
+    /// Bit-identical per lane to
+    /// [`DecodeWorkspace::onestep_redraw_trial_with`]: lane `l` forks
+    /// `root.fork(base + l)`, draws G and the survivor set in the same
+    /// order, and its scatter into `cov_panel[.. * lanes + l]` is the
+    /// scalar trial's `row_acc` scatter addition for addition — so the
+    /// fusion holds on weighted G too (no integer-exactness argument
+    /// needed, unlike the fixed-G counts panel).
     #[allow(clippy::too_many_arguments)]
     pub fn onestep_redraw_panel_with(
         &mut self,
@@ -251,15 +289,31 @@ impl PanelWorkspace {
     ) {
         assert!(lanes >= 1 && lanes <= self.width);
         assert_eq!(out.len(), lanes);
+        let k = code.k();
+        self.cov_panel.clear();
+        self.cov_panel.resize(k * lanes, 0.0);
+        let (g, scratch, stragglers) = self.scalar.redraw_parts();
         for lane in 0..lanes {
             let mut rng = root.fork(base + lane as u64);
-            out[lane] = self.scalar.onestep_redraw_trial_with(code, model, rho, &mut rng);
+            code.assignment_into(&mut rng, g, scratch);
+            debug_assert_eq!(g.rows, k);
+            model.non_stragglers_into(g.cols, &mut rng, stragglers);
+            for &j in &stragglers.idx {
+                assert!(j < g.cols, "column {j} out of bounds ({})", g.cols);
+                for p in g.col_ptr[j]..g.col_ptr[j + 1] {
+                    self.cov_panel[g.row_idx[p] * lanes + lane] += g.vals[p];
+                }
+            }
         }
+        panel::err1_panel_cov(&self.cov_panel, lanes, rho, out);
     }
 
-    /// Panel of optimal redraw trials (per-lane scalar loop, see
-    /// [`PanelWorkspace::onestep_redraw_panel_with`]). Bit-identical
-    /// per lane to [`DecodeWorkspace::optimal_redraw_trial_with`].
+    /// Panel of optimal redraw trials. Unlike the one-step redraw arm
+    /// there is nothing to fuse — each lane's LSQR runs against a
+    /// *distinct* fresh G, sharing neither matrix passes nor the final
+    /// reduction — so lanes run through the scalar workspace one by
+    /// one, each on its own forked stream. Bit-identical per lane to
+    /// [`DecodeWorkspace::optimal_redraw_trial_with`].
     #[allow(clippy::too_many_arguments)]
     pub fn optimal_redraw_panel_with(
         &mut self,
@@ -280,8 +334,11 @@ impl PanelWorkspace {
         }
     }
 
-    /// Panel of column-normalized one-step redraw trials (per-lane
-    /// scalar loop). Bit-identical per lane to
+    /// Panel of column-normalized one-step redraw trials. The per-lane
+    /// column normalization rebuilds a distinct weighted G per lane, so
+    /// — like the optimal redraw arm — there is nothing to fuse; lanes
+    /// run through the scalar workspace one by one. Bit-identical per
+    /// lane to
     /// [`DecodeWorkspace::onestep_normalized_redraw_trial_with`].
     #[allow(clippy::too_many_arguments)]
     pub fn onestep_normalized_redraw_panel_with(
@@ -345,6 +402,43 @@ mod tests {
                 let mut rng = root.fork(7 + lane as u64);
                 let scalar = sws.optimal_trial(&g, r, &opts, warm, &mut rng);
                 assert_eq!(out[lane].to_bits(), scalar.to_bits(), "warm {warm:?} lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_redraw_panel_matches_scalar_redraw_trials() {
+        use crate::stragglers::UniformStragglers;
+        let (k, s) = (30, 4);
+        let model = UniformStragglers::new(0.3);
+        let rho = 1.1;
+        for scheme in [Scheme::Bgc, Scheme::Frc, Scheme::RegularGraph] {
+            let code = scheme.build(k, k, s);
+            let root = Rng::new(21);
+            // Full panels, a ragged tail, and a W = 1 panel.
+            for (base, lanes) in [(0u64, 4usize), (4, 3), (7, 1)] {
+                let mut pws = PanelWorkspace::new(4);
+                let mut out = vec![0.0; lanes];
+                pws.onestep_redraw_panel_with(
+                    code.as_ref(),
+                    &model,
+                    rho,
+                    &root,
+                    base,
+                    lanes,
+                    &mut out,
+                );
+                let mut sws = DecodeWorkspace::new();
+                for lane in 0..lanes {
+                    let mut rng = root.fork(base + lane as u64);
+                    let scalar = sws.onestep_redraw_trial_with(code.as_ref(), &model, rho, &mut rng);
+                    assert_eq!(
+                        out[lane].to_bits(),
+                        scalar.to_bits(),
+                        "{} base {base} lane {lane}",
+                        scheme.name()
+                    );
+                }
             }
         }
     }

@@ -317,6 +317,20 @@ impl DecodeWorkspace {
         self.g_csr.vals.clear();
     }
 
+    /// Split borrow for the fused redraw panel
+    /// (`decode::PanelWorkspace::onestep_redraw_panel_with`): the
+    /// workspace-owned G, the constructor scratch, and the straggler
+    /// scratch as disjoint mutable borrows, so the panel can drive W
+    /// `assignment_into` draws while scatter-accumulating into its own
+    /// lane-strided coverage panel. Invalidates the CSR mirror (G is
+    /// about to be overwritten lane by lane).
+    pub(crate) fn redraw_parts(
+        &mut self,
+    ) -> (&mut CscMatrix, &mut AssignmentScratch, &mut StragglerScratch) {
+        self.invalidate_mirror();
+        (&mut self.g, &mut self.scratch, &mut self.stragglers)
+    }
+
     /// err_1 for an explicit non-straggler set, streamed over the
     /// cached CSR mirror (one contiguous row-major pass; bit-identical
     /// to [`DecodeWorkspace::err1_fused`] on boolean G).

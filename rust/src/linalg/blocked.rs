@@ -2,9 +2,19 @@
 //! blocking for the dense reductions in the LSQR inner loop and the
 //! row reductions of the CSR fast path.
 //!
-//! No `std::simd` / intrinsics (the crate builds on stable with no
-//! deps); instead every reduction runs 4 independent accumulators so
-//! LLVM can keep them in one vector register, plus a scalar tail.
+//! The portable default uses no `std::simd` / intrinsics (the crate
+//! builds on stable with no deps); instead every reduction runs 4
+//! independent accumulators so LLVM can keep them in one vector
+//! register, plus a scalar tail. Under `--features simd` on x86_64 the
+//! dense kernels additionally get an explicit AVX2 tier, dispatched at
+//! runtime via [`super::tier::simd_tier`]: one `__m256d` holds the same
+//! 4 accumulators, the horizontal combine replays the exact portable
+//! grouping, and the tail stays scalar — so the AVX2 tier is
+//! **bit-identical to the portable kernels on arbitrary data** (not
+//! just integer data; no FMA anywhere). The gather-shaped reductions
+//! (`sum` is cheap, `masked_row_sum` is index-indirect) keep only the
+//! portable form — this module tops out at AVX2; the AVX-512 tier
+//! lives in the panel kernels where the lane-strided layout earns it.
 //!
 //! **Blocking convention** (shared by every kernel here, and the
 //! contract the parity suite pins):
@@ -21,13 +31,51 @@
 //!   counts < 2^53) every grouping is exact, so blocked == scalar
 //!   bit-for-bit. `tests/linalg_parity.rs` pins both regimes.
 
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use super::tier::{simd_tier, SimdTier};
+
 /// Lane width of the manual blocking.
 pub const LANES: usize = 4;
+
+/// AVX2 tier of [`dot`]: the 4 portable accumulators live in one
+/// `__m256d` (register lane j accumulates indices `4c + j`), combined
+/// with the portable grouping `((s0+s1)+(s2+s3)) + tail` — bit-identical
+/// to the portable kernel on arbitrary data.
+///
+/// # Safety
+/// The CPU must support AVX2 (callers dispatch on [`simd_tier`]).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    use std::arch::x86_64::{_mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_setzero_pd, _mm256_storeu_pd};
+    let n = a.len();
+    let q = n - n % LANES;
+    let mut acc = _mm256_setzero_pd();
+    let mut i = 0;
+    while i < q {
+        let va = _mm256_loadu_pd(a.as_ptr().add(i));
+        let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+        i += LANES;
+    }
+    let mut s = [0.0f64; LANES];
+    _mm256_storeu_pd(s.as_mut_ptr(), acc);
+    let mut tail = 0.0;
+    for j in q..n {
+        tail += a[j] * b[j];
+    }
+    ((s[0] + s[1]) + (s[2] + s[3])) + tail
+}
 
 /// Blocked dot product Σ a_i b_i.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_tier() >= SimdTier::Avx2 {
+        // SAFETY: dispatch is guarded by runtime avx2 detection.
+        return unsafe { dot_avx2(a, b) };
+    }
     let n = a.len();
     let q = n - n % LANES;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
@@ -79,10 +127,44 @@ pub fn sum(a: &[f64]) -> f64 {
     ((s0 + s1) + (s2 + s3)) + tail
 }
 
+/// AVX2 tier of [`diff_norm2_sq`]: same accumulator layout and combine
+/// as [`dot_avx2`], differences computed per lane — bit-identical to
+/// the portable kernel on arbitrary data.
+///
+/// # Safety
+/// The CPU must support AVX2 (callers dispatch on [`simd_tier`]).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn diff_norm2_sq_avx2(a: &[f64], b: &[f64]) -> f64 {
+    use std::arch::x86_64::{_mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_setzero_pd, _mm256_storeu_pd, _mm256_sub_pd};
+    let n = a.len();
+    let q = n - n % LANES;
+    let mut acc = _mm256_setzero_pd();
+    let mut i = 0;
+    while i < q {
+        let d = _mm256_sub_pd(_mm256_loadu_pd(a.as_ptr().add(i)), _mm256_loadu_pd(b.as_ptr().add(i)));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+        i += LANES;
+    }
+    let mut s = [0.0f64; LANES];
+    _mm256_storeu_pd(s.as_mut_ptr(), acc);
+    let mut tail = 0.0;
+    for j in q..n {
+        let d = a[j] - b[j];
+        tail += d * d;
+    }
+    ((s[0] + s[1]) + (s[2] + s[3])) + tail
+}
+
 /// Blocked Σ (a_i − b_i)² — the LSQR true-residual recomputation.
 #[inline]
 pub fn diff_norm2_sq(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_tier() >= SimdTier::Avx2 {
+        // SAFETY: dispatch is guarded by runtime avx2 detection.
+        return unsafe { diff_norm2_sq_avx2(a, b) };
+    }
     let n = a.len();
     let q = n - n % LANES;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
@@ -134,10 +216,39 @@ pub fn masked_row_sum(vals: &[f64], cols: &[usize], count: &[u32]) -> f64 {
 
 // --------------------------------------------- elementwise (bit-transparent)
 
+/// AVX2 tier of [`axpy`]. Elementwise mul/add per lane, no FMA —
+/// bit-identical to the scalar loop.
+///
+/// # Safety
+/// The CPU must support AVX2 (callers dispatch on [`simd_tier`]).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+    use std::arch::x86_64::{_mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_storeu_pd};
+    let n = x.len();
+    let q = n - n % LANES;
+    let va = _mm256_set1_pd(alpha);
+    let mut i = 0;
+    while i < q {
+        let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+        let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+        _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_add_pd(vy, _mm256_mul_pd(va, vx)));
+        i += LANES;
+    }
+    for j in q..n {
+        y[j] += alpha * x[j];
+    }
+}
+
 /// y += α·x, 4-unrolled. Elementwise: bit-identical to the scalar loop.
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_tier() >= SimdTier::Avx2 {
+        // SAFETY: dispatch is guarded by runtime avx2 detection.
+        return unsafe { axpy_avx2(alpha, x, y) };
+    }
     let n = x.len();
     let q = n - n % LANES;
     let mut i = 0;
@@ -153,11 +264,40 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// AVX2 tier of [`scaled_sub`]. Elementwise, no FMA — bit-identical to
+/// the scalar loop.
+///
+/// # Safety
+/// The CPU must support AVX2 (callers dispatch on [`simd_tier`]).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn scaled_sub_avx2(x: &[f64], alpha: f64, y: &mut [f64]) {
+    use std::arch::x86_64::{_mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_storeu_pd, _mm256_sub_pd};
+    let n = x.len();
+    let q = n - n % LANES;
+    let va = _mm256_set1_pd(alpha);
+    let mut i = 0;
+    while i < q {
+        let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+        let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+        _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_sub_pd(vx, _mm256_mul_pd(va, vy)));
+        i += LANES;
+    }
+    for j in q..n {
+        y[j] = x[j] - alpha * y[j];
+    }
+}
+
 /// y ← x − α·y, 4-unrolled (the LSQR bidiagonalization refresh
 /// `u = A v − α u`). Elementwise: bit-identical to the scalar loop.
 #[inline]
 pub fn scaled_sub(x: &[f64], alpha: f64, y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_tier() >= SimdTier::Avx2 {
+        // SAFETY: dispatch is guarded by runtime avx2 detection.
+        return unsafe { scaled_sub_avx2(x, alpha, y) };
+    }
     let n = x.len();
     let q = n - n % LANES;
     let mut i = 0;
@@ -173,6 +313,35 @@ pub fn scaled_sub(x: &[f64], alpha: f64, y: &mut [f64]) {
     }
 }
 
+/// AVX2 tier of [`update_x_w`]: the old `w` quad is loaded once and
+/// used for both updates, matching the scalar loop's read-before-write
+/// order. Elementwise, no FMA — bit-identical.
+///
+/// # Safety
+/// The CPU must support AVX2 (callers dispatch on [`simd_tier`]).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn update_x_w_avx2(x: &mut [f64], w: &mut [f64], v: &[f64], t1: f64, t2: f64) {
+    use std::arch::x86_64::{_mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_storeu_pd};
+    let n = x.len();
+    let q = n - n % LANES;
+    let vt1 = _mm256_set1_pd(t1);
+    let vt2 = _mm256_set1_pd(t2);
+    let mut i = 0;
+    while i < q {
+        let vw = _mm256_loadu_pd(w.as_ptr().add(i));
+        let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+        let vv = _mm256_loadu_pd(v.as_ptr().add(i));
+        _mm256_storeu_pd(x.as_mut_ptr().add(i), _mm256_add_pd(vx, _mm256_mul_pd(vt1, vw)));
+        _mm256_storeu_pd(w.as_mut_ptr().add(i), _mm256_add_pd(vv, _mm256_mul_pd(vt2, vw)));
+        i += LANES;
+    }
+    for j in q..n {
+        x[j] += t1 * w[j];
+        w[j] = v[j] + t2 * w[j];
+    }
+}
+
 /// The fused LSQR solution/search-direction update:
 /// x += t1·w; w ← v + t2·w (old w used for both, per element).
 /// Elementwise: bit-identical to the scalar loop.
@@ -180,6 +349,11 @@ pub fn scaled_sub(x: &[f64], alpha: f64, y: &mut [f64]) {
 pub fn update_x_w(x: &mut [f64], w: &mut [f64], v: &[f64], t1: f64, t2: f64) {
     debug_assert_eq!(x.len(), w.len());
     debug_assert_eq!(x.len(), v.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_tier() >= SimdTier::Avx2 {
+        // SAFETY: dispatch is guarded by runtime avx2 detection.
+        return unsafe { update_x_w_avx2(x, w, v, t1, t2) };
+    }
     let n = x.len();
     let q = n - n % LANES;
     let mut i = 0;

@@ -36,8 +36,11 @@
 //! avoid materializing A entirely, and the lockstep panel LSQR runs W
 //! solves per sweep — all while keeping every lane bit-identical to the
 //! scalar path (see the module docs for the exactness argument). The
-//! optional `simd` cargo feature swaps the lane-inner loop for SSE2
-//! intrinsics on x86_64 (bit-identical; portable loop is the default).
+//! optional `simd` cargo feature swaps the lane-inner loops for x86_64
+//! intrinsics, runtime-dispatched across lane tiers — SSE2 baseline,
+//! AVX2 when detected, AVX-512F behind the extra `avx512` feature (see
+//! [`tier`]). Every tier performs the same per-lane IEEE operations, so
+//! all of them — and the portable default — are bit-identical.
 
 pub mod blocked;
 pub mod cholesky;
@@ -47,13 +50,15 @@ pub mod lsqr;
 pub mod panel;
 pub mod power_iter;
 pub mod sparse;
+pub mod tier;
 
 pub use csr::CsrMatrix;
 pub use dense::{axpy, dot, norm2, norm2_sq, scale, DenseMatrix};
 pub use lsqr::{lsqr, lsqr_with, LsqrOptions, LsqrResult, LsqrSummary, LsqrWorkspace};
 pub use panel::{
-    err1_panel_counts, lsqr_selected_panel, matvec_selected_into, nnz_selected,
+    err1_panel_counts, err1_panel_cov, lsqr_selected_panel, matvec_selected_into, nnz_selected,
     t_matvec_selected_into, PanelLsqr,
 };
+pub use tier::{cap_simd_tier, detected_simd_tier, simd_tier, uncap_simd_tier, SimdTier};
 pub use power_iter::{regular_graph_lambda, spectral_norm};
 pub use sparse::CscMatrix;

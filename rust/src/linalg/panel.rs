@@ -33,20 +33,31 @@
 //! same Givens updates, same stopping rules), lanes merely take their
 //! iterations in lockstep so G is reused across lanes per iteration.
 //!
-//! # SIMD lanes (`--features simd`)
+//! # SIMD lane tiers (`--features simd`)
 //!
-//! The lane-inner loop of the coverage kernel is the one place true
-//! SIMD applies cleanly: lanes are independent accumulators, so packing
-//! two lanes into an SSE2 `__m128d` performs the *same* IEEE mul/add
-//! per element as the scalar loop — bit-identical by construction. The
-//! portable loop is the default; the intrinsics path is gated behind
-//! the `simd` cargo feature **and** `target_arch = "x86_64"` (SSE2 is
-//! baseline there), so non-x86 targets fall back gracefully.
+//! The lane-inner loops (coverage [`axpy_lanes`] and the per-row err₁
+//! update) are the one place true SIMD applies cleanly: lanes are
+//! independent accumulators, so packing 2 (SSE2 `__m128d`), 4 (AVX2
+//! `__m256d`), or 8 (AVX-512 `__m512d`) of them into one register
+//! performs the *same* IEEE mul/add per element as the scalar loop —
+//! bit-identical by construction at every tier. No FMA is ever used
+//! (contraction would change rounding), and `(x).powi(2)` is a single
+//! self-multiply, so the vector `mul(t, t)` matches it exactly.
+//!
+//! The portable loop is the default. Under the `simd` cargo feature on
+//! x86_64, [`super::tier::simd_tier`] picks the widest tier the CPU
+//! supports at runtime (`is_x86_feature_detected!`): SSE2 is baseline,
+//! AVX2 is detected, and the AVX-512F tier additionally needs the
+//! `avx512` cargo feature (toolchain gate — see `linalg::tier`).
+//! Non-x86 targets fall back to the portable loop regardless of
+//! features.
 
 use super::blocked;
 use super::csr::CsrMatrix;
 use super::lsqr::{LsqrOptions, LsqrSummary};
 use super::sparse::CscMatrix;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use super::tier::{simd_tier, SimdTier};
 
 /// nnz of the implicit selection A = G[:, sel] (multiplicity counts).
 pub fn nnz_selected(g: &CscMatrix, sel: &[usize]) -> usize {
@@ -89,34 +100,207 @@ pub fn t_matvec_selected_into(g: &CscMatrix, sel: &[usize], x: &[f64], y: &mut [
     }
 }
 
+/// SSE2 tier of [`axpy_lanes`]: lane pairs in `__m128d`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn axpy_lanes_sse2(cov: &mut [f64], v: f64, counts: &[f64]) {
+    use std::arch::x86_64::{_mm_add_pd, _mm_loadu_pd, _mm_mul_pd, _mm_set1_pd, _mm_storeu_pd};
+    let pairs = cov.len() / 2;
+    // SAFETY: SSE2 is baseline on x86_64; all loads/stores stay in
+    // bounds (2*q + 1 < cov.len() and counts.len() >= cov.len()).
+    unsafe {
+        let vv = _mm_set1_pd(v);
+        for q in 0..pairs {
+            let c = _mm_loadu_pd(counts.as_ptr().add(2 * q));
+            let acc = _mm_loadu_pd(cov.as_ptr().add(2 * q));
+            _mm_storeu_pd(cov.as_mut_ptr().add(2 * q), _mm_add_pd(acc, _mm_mul_pd(vv, c)));
+        }
+    }
+    for l in 2 * pairs..cov.len() {
+        cov[l] += v * counts[l];
+    }
+}
+
+/// AVX2 tier of [`axpy_lanes`]: lane quads in `__m256d`. Same IEEE
+/// mul/add per lane as the scalar loop; no FMA.
+///
+/// # Safety
+/// The CPU must support AVX2 (callers dispatch on [`simd_tier`]).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_lanes_avx2(cov: &mut [f64], v: f64, counts: &[f64]) {
+    use std::arch::x86_64::{
+        _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_storeu_pd,
+    };
+    let quads = cov.len() / 4;
+    let vv = _mm256_set1_pd(v);
+    for q in 0..quads {
+        let c = _mm256_loadu_pd(counts.as_ptr().add(4 * q));
+        let acc = _mm256_loadu_pd(cov.as_ptr().add(4 * q));
+        _mm256_storeu_pd(cov.as_mut_ptr().add(4 * q), _mm256_add_pd(acc, _mm256_mul_pd(vv, c)));
+    }
+    for l in 4 * quads..cov.len() {
+        cov[l] += v * counts[l];
+    }
+}
+
+/// AVX-512F tier of [`axpy_lanes`]: lane octets in `__m512d`.
+///
+/// # Safety
+/// The CPU must support AVX-512F (callers dispatch on [`simd_tier`]).
+#[cfg(all(feature = "simd", feature = "avx512", target_arch = "x86_64"))]
+#[target_feature(enable = "avx512f")]
+unsafe fn axpy_lanes_avx512(cov: &mut [f64], v: f64, counts: &[f64]) {
+    use std::arch::x86_64::{
+        _mm512_add_pd, _mm512_loadu_pd, _mm512_mul_pd, _mm512_set1_pd, _mm512_storeu_pd,
+    };
+    let octets = cov.len() / 8;
+    let vv = _mm512_set1_pd(v);
+    for q in 0..octets {
+        let c = _mm512_loadu_pd(counts.as_ptr().add(8 * q));
+        let acc = _mm512_loadu_pd(cov.as_ptr().add(8 * q));
+        _mm512_storeu_pd(cov.as_mut_ptr().add(8 * q), _mm512_add_pd(acc, _mm512_mul_pd(vv, c)));
+    }
+    for l in 8 * octets..cov.len() {
+        cov[l] += v * counts[l];
+    }
+}
+
 /// `cov[l] += v * counts[l]` for every lane — the panel coverage
-/// kernel's inner loop. With `--features simd` on x86_64 this packs
-/// lane pairs into SSE2 registers; per-element IEEE mul/add on
-/// independent lanes is bit-identical to the scalar loop, so the two
-/// paths are interchangeable.
+/// kernel's inner loop. With `--features simd` on x86_64 this dispatches
+/// on the runtime [`simd_tier`] (SSE2 pairs / AVX2 quads / AVX-512
+/// octets); per-element IEEE mul/add on independent lanes is
+/// bit-identical to the scalar loop at every tier, so all paths are
+/// interchangeable.
 #[inline]
 fn axpy_lanes(cov: &mut [f64], v: f64, counts: &[f64]) {
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     {
-        use std::arch::x86_64::{_mm_add_pd, _mm_loadu_pd, _mm_mul_pd, _mm_set1_pd, _mm_storeu_pd};
-        let pairs = cov.len() / 2;
-        // SAFETY: SSE2 is baseline on x86_64; all loads/stores stay in
-        // bounds (2*q + 1 < cov.len() and counts.len() >= cov.len()).
-        unsafe {
-            let vv = _mm_set1_pd(v);
-            for q in 0..pairs {
-                let c = _mm_loadu_pd(counts.as_ptr().add(2 * q));
-                let acc = _mm_loadu_pd(cov.as_ptr().add(2 * q));
-                _mm_storeu_pd(cov.as_mut_ptr().add(2 * q), _mm_add_pd(acc, _mm_mul_pd(vv, c)));
-            }
+        let tier = simd_tier();
+        #[cfg(feature = "avx512")]
+        if tier == SimdTier::Avx512 {
+            // SAFETY: dispatch is guarded by runtime avx512f detection.
+            unsafe { axpy_lanes_avx512(cov, v, counts) };
+            return;
         }
-        for l in 2 * pairs..cov.len() {
-            cov[l] += v * counts[l];
+        if tier >= SimdTier::Avx2 {
+            // SAFETY: dispatch is guarded by runtime avx2 detection.
+            unsafe { axpy_lanes_avx2(cov, v, counts) };
+            return;
         }
+        if tier == SimdTier::Sse2 {
+            axpy_lanes_sse2(cov, v, counts);
+            return;
+        }
+        // SimdTier::Portable (bench tier cap): fall through.
     }
-    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
     for l in 0..cov.len() {
         cov[l] += v * counts[l];
+    }
+}
+
+/// SSE2 tier of [`err_update_lanes`].
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn err_update_lanes_sse2(errs: &mut [f64], rho: f64, cov: &[f64]) {
+    use std::arch::x86_64::{
+        _mm_add_pd, _mm_loadu_pd, _mm_mul_pd, _mm_set1_pd, _mm_storeu_pd, _mm_sub_pd,
+    };
+    let pairs = errs.len() / 2;
+    // SAFETY: SSE2 is baseline on x86_64; loads/stores stay in bounds.
+    unsafe {
+        let rv = _mm_set1_pd(rho);
+        let one = _mm_set1_pd(1.0);
+        for q in 0..pairs {
+            let c = _mm_loadu_pd(cov.as_ptr().add(2 * q));
+            let t = _mm_sub_pd(_mm_mul_pd(rv, c), one);
+            let e = _mm_loadu_pd(errs.as_ptr().add(2 * q));
+            _mm_storeu_pd(errs.as_mut_ptr().add(2 * q), _mm_add_pd(e, _mm_mul_pd(t, t)));
+        }
+    }
+    for l in 2 * pairs..errs.len() {
+        errs[l] += (rho * cov[l] - 1.0).powi(2);
+    }
+}
+
+/// AVX2 tier of [`err_update_lanes`].
+///
+/// # Safety
+/// The CPU must support AVX2 (callers dispatch on [`simd_tier`]).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn err_update_lanes_avx2(errs: &mut [f64], rho: f64, cov: &[f64]) {
+    use std::arch::x86_64::{
+        _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_storeu_pd,
+        _mm256_sub_pd,
+    };
+    let quads = errs.len() / 4;
+    let rv = _mm256_set1_pd(rho);
+    let one = _mm256_set1_pd(1.0);
+    for q in 0..quads {
+        let c = _mm256_loadu_pd(cov.as_ptr().add(4 * q));
+        let t = _mm256_sub_pd(_mm256_mul_pd(rv, c), one);
+        let e = _mm256_loadu_pd(errs.as_ptr().add(4 * q));
+        _mm256_storeu_pd(errs.as_mut_ptr().add(4 * q), _mm256_add_pd(e, _mm256_mul_pd(t, t)));
+    }
+    for l in 4 * quads..errs.len() {
+        errs[l] += (rho * cov[l] - 1.0).powi(2);
+    }
+}
+
+/// AVX-512F tier of [`err_update_lanes`].
+///
+/// # Safety
+/// The CPU must support AVX-512F (callers dispatch on [`simd_tier`]).
+#[cfg(all(feature = "simd", feature = "avx512", target_arch = "x86_64"))]
+#[target_feature(enable = "avx512f")]
+unsafe fn err_update_lanes_avx512(errs: &mut [f64], rho: f64, cov: &[f64]) {
+    use std::arch::x86_64::{
+        _mm512_add_pd, _mm512_loadu_pd, _mm512_mul_pd, _mm512_set1_pd, _mm512_storeu_pd,
+        _mm512_sub_pd,
+    };
+    let octets = errs.len() / 8;
+    let rv = _mm512_set1_pd(rho);
+    let one = _mm512_set1_pd(1.0);
+    for q in 0..octets {
+        let c = _mm512_loadu_pd(cov.as_ptr().add(8 * q));
+        let t = _mm512_sub_pd(_mm512_mul_pd(rv, c), one);
+        let e = _mm512_loadu_pd(errs.as_ptr().add(8 * q));
+        _mm512_storeu_pd(errs.as_mut_ptr().add(8 * q), _mm512_add_pd(e, _mm512_mul_pd(t, t)));
+    }
+    for l in 8 * octets..errs.len() {
+        errs[l] += (rho * cov[l] - 1.0).powi(2);
+    }
+}
+
+/// `errs[l] += (ρ·cov[l] − 1)²` for every lane — the per-row err₁
+/// update shared by [`err1_panel_counts`] and [`err1_panel_cov`].
+/// `.powi(2)` is a single self-multiply, so the vector `mul(t, t)` is
+/// the same IEEE operation; no FMA at any tier, hence bit-identical to
+/// the scalar loop.
+#[inline]
+fn err_update_lanes(errs: &mut [f64], rho: f64, cov: &[f64]) {
+    debug_assert_eq!(errs.len(), cov.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        let tier = simd_tier();
+        #[cfg(feature = "avx512")]
+        if tier == SimdTier::Avx512 {
+            // SAFETY: dispatch is guarded by runtime avx512f detection.
+            unsafe { err_update_lanes_avx512(errs, rho, cov) };
+            return;
+        }
+        if tier >= SimdTier::Avx2 {
+            // SAFETY: dispatch is guarded by runtime avx2 detection.
+            unsafe { err_update_lanes_avx2(errs, rho, cov) };
+            return;
+        }
+        if tier == SimdTier::Sse2 {
+            err_update_lanes_sse2(errs, rho, cov);
+            return;
+        }
+        // SimdTier::Portable (bench tier cap): fall through.
+    }
+    for l in 0..errs.len() {
+        errs[l] += (rho * cov[l] - 1.0).powi(2);
     }
 }
 
@@ -150,9 +334,28 @@ pub fn err1_panel_counts(
             let base = g.col_idx[p] * width;
             axpy_lanes(cov, g.vals[p], &counts[base..base + width]);
         }
-        for l in 0..width {
-            errs[l] += (rho * cov[l] - 1.0).powi(2);
-        }
+        err_update_lanes(errs, rho, cov);
+    }
+}
+
+/// Per-lane err₁ from a lane-strided coverage panel: `errs[l] =
+/// Σ_i (ρ·cov_panel[i·width + l] − 1)²`, rows swept in ascending order —
+/// the same final reduction as `err1_from_supports`.
+///
+/// Backs the fused redraw panel
+/// (`decode::PanelWorkspace::onestep_redraw_panel_with`), where each
+/// lane's coverage row was scatter-accumulated from that lane's own G
+/// in scalar selection order. No integer-exactness argument is needed
+/// here (unlike [`err1_panel_counts`]): lane l's additions *are* the
+/// scalar trial's additions, operation for operation, so the panel is
+/// bit-identical to the scalar path even on weighted G.
+pub fn err1_panel_cov(cov_panel: &[f64], width: usize, rho: f64, errs: &mut [f64]) {
+    assert!(width > 0, "panel width must be >= 1");
+    assert_eq!(errs.len(), width);
+    assert_eq!(cov_panel.len() % width, 0, "coverage panel shape mismatch");
+    errs.fill(0.0);
+    for row in cov_panel.chunks_exact(width) {
+        err_update_lanes(errs, rho, row);
     }
 }
 
@@ -462,6 +665,26 @@ mod tests {
             err1_panel_counts(&csr, &counts, width, rho, &mut cov, &mut errs);
             for (l, sel) in sels.iter().enumerate() {
                 let scalar = err1_from_supports(&g, sel, rho, &mut row_acc);
+                assert_eq!(errs[l].to_bits(), scalar.to_bits(), "width {width} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_cov_err1_matches_scalar_reduction_all_widths() {
+        let k = 23usize;
+        let rho = 0.41;
+        let mut rng = Rng::new(7);
+        for width in [1usize, 2, 3, 5, 8, 16] {
+            // Non-integer coverages on purpose: err1_panel_cov carries no
+            // integer-exactness requirement (weighted-G redraw panels).
+            let cov_panel: Vec<f64> = (0..k * width).map(|_| rng.f64() * 3.0).collect();
+            let mut errs = vec![0.0; width];
+            err1_panel_cov(&cov_panel, width, rho, &mut errs);
+            for l in 0..width {
+                let scalar: f64 = (0..k)
+                    .map(|i| (rho * cov_panel[i * width + l] - 1.0).powi(2))
+                    .sum();
                 assert_eq!(errs[l].to_bits(), scalar.to_bits(), "width {width} lane {l}");
             }
         }

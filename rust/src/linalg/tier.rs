@@ -1,0 +1,162 @@
+//! Runtime SIMD lane-tier detection for the panel decode kernels.
+//!
+//! The `simd` cargo feature compiles three intrinsics tiers for the
+//! lane-inner loops in [`super::panel`] / [`super::blocked`] —
+//! SSE2 (the x86_64 baseline), AVX2, and (behind the additional
+//! `avx512` feature) AVX-512F — and this module picks the widest one
+//! the running CPU supports via `is_x86_feature_detected!`, once,
+//! cached in an atomic. Without the feature, or off x86_64, the tier
+//! is [`SimdTier::Portable`] and every kernel keeps its portable loop.
+//!
+//! Bit-parity is tier-independent by construction: panel lanes are
+//! independent IEEE accumulators, so packing 2 (SSE2), 4 (AVX2), or
+//! 8 (AVX-512) of them into one register performs the *same* per-lane
+//! mul/add sequence as the scalar loop — no FMA contraction, no
+//! reassociation. `tests/decode_parity.rs` pins this at every tier the
+//! CI matrix can reach.
+//!
+//! [`cap_simd_tier`] lets benches force a *lower* tier to record
+//! per-tier throughput (`panel/*` records in BENCH_decode.json); the
+//! cap is clamped to the detected capability, so it can never enable
+//! instructions the CPU lacks.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// The SIMD tier driving the lane-inner loops, widest first wins.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SimdTier {
+    /// No intrinsics: the portable lane loops (also the only tier off
+    /// x86_64 or without `--features simd`).
+    Portable = 0,
+    /// 2 f64 lanes per register (baseline on x86_64).
+    Sse2 = 1,
+    /// 4 f64 lanes per register (runtime-detected).
+    Avx2 = 2,
+    /// 8 f64 lanes per register (runtime-detected; needs the `avx512`
+    /// cargo feature so the crate still builds on toolchains without
+    /// stable AVX-512 intrinsics).
+    Avx512 = 3,
+}
+
+impl SimdTier {
+    /// Stable label for bench records and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Portable => "portable",
+            SimdTier::Sse2 => "sse2",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Avx512 => "avx512",
+        }
+    }
+}
+
+const TIER_UNSET: u8 = u8::MAX;
+
+/// Cached result of [`detect`] (set on first query).
+static DETECTED: AtomicU8 = AtomicU8::new(TIER_UNSET);
+/// Bench-only cap; `TIER_UNSET` means "no cap".
+static CAP: AtomicU8 = AtomicU8::new(TIER_UNSET);
+
+fn from_u8(v: u8) -> SimdTier {
+    match v {
+        0 => SimdTier::Portable,
+        1 => SimdTier::Sse2,
+        2 => SimdTier::Avx2,
+        _ => SimdTier::Avx512,
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn detect() -> SimdTier {
+    #[cfg(feature = "avx512")]
+    {
+        if is_x86_feature_detected!("avx512f") {
+            return SimdTier::Avx512;
+        }
+    }
+    if is_x86_feature_detected!("avx2") {
+        SimdTier::Avx2
+    } else {
+        SimdTier::Sse2
+    }
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+fn detect() -> SimdTier {
+    SimdTier::Portable
+}
+
+/// The tier the CPU (and feature set) supports, detected once.
+pub fn detected_simd_tier() -> SimdTier {
+    let t = DETECTED.load(Ordering::Relaxed);
+    if t != TIER_UNSET {
+        return from_u8(t);
+    }
+    let d = detect();
+    DETECTED.store(d as u8, Ordering::Relaxed);
+    d
+}
+
+/// The tier the kernels dispatch on right now: the detected tier,
+/// unless a bench capped it lower.
+pub fn simd_tier() -> SimdTier {
+    let cap = CAP.load(Ordering::Relaxed);
+    if cap != TIER_UNSET {
+        return from_u8(cap);
+    }
+    detected_simd_tier()
+}
+
+/// Cap the dispatch tier (bench plumbing for per-tier throughput
+/// records). Clamped to the detected capability; returns the tier that
+/// actually took effect. Lanes are bit-identical across tiers, so a
+/// concurrent capped/uncapped mix cannot change any result — only
+/// speed. Undo with [`uncap_simd_tier`].
+pub fn cap_simd_tier(cap: SimdTier) -> SimdTier {
+    let applied = cap.min(detected_simd_tier());
+    CAP.store(applied as u8, Ordering::Relaxed);
+    applied
+}
+
+/// Remove a [`cap_simd_tier`] cap, returning dispatch to the detected
+/// tier.
+pub fn uncap_simd_tier() {
+    CAP.store(TIER_UNSET, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detected_tier_is_consistent_with_build_config() {
+        let t = detected_simd_tier();
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        assert_eq!(t, SimdTier::Portable);
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        assert!(t >= SimdTier::Sse2, "x86_64 baseline is SSE2, got {t:?}");
+        // Idempotent (cached).
+        assert_eq!(detected_simd_tier(), t);
+    }
+
+    #[test]
+    fn cap_clamps_to_capability_and_uncaps() {
+        let detected = detected_simd_tier();
+        // Capping above the capability stays at the capability.
+        assert_eq!(cap_simd_tier(SimdTier::Avx512), detected.min(SimdTier::Avx512));
+        // Capping below always takes effect.
+        assert_eq!(cap_simd_tier(SimdTier::Portable), SimdTier::Portable);
+        assert_eq!(simd_tier(), SimdTier::Portable);
+        uncap_simd_tier();
+        assert_eq!(simd_tier(), detected);
+    }
+
+    #[test]
+    fn tier_names_are_stable() {
+        assert_eq!(SimdTier::Portable.name(), "portable");
+        assert_eq!(SimdTier::Sse2.name(), "sse2");
+        assert_eq!(SimdTier::Avx2.name(), "avx2");
+        assert_eq!(SimdTier::Avx512.name(), "avx512");
+    }
+}

@@ -16,6 +16,7 @@
 //!                  --k 100          tasks/workers k (= n)
 //!                  --tmax 15        iterations for --fig 5 curves
 //!                  --threads auto   worker threads (results invariant)
+//!                  --panel-width 8  decode-panel lanes (results invariant)
 //!                  --stragglers uniform  straggler scenario (see below)
 //! repro tables     --table thm5     thm3|thm5|thm6|thm8|thm10|thm11|thm21|thm24
 //!                  --trials 2000    Monte-Carlo trials per point
@@ -279,11 +280,17 @@ fn run() -> CliResult<()> {
     let args = Args::parse()?;
     match args.sub.as_str() {
         "figures" => {
-            args.finish(&["fig", "trials", "seed", "k", "tmax", "threads", "stragglers"], false)?;
+            args.finish(
+                &["fig", "trials", "seed", "k", "tmax", "threads", "panel-width", "stragglers"],
+                false,
+            )?;
             cmd_figures(&args)
         }
         "tables" => {
-            args.finish(&["table", "trials", "seed", "k", "s", "threads", "stragglers"], false)?;
+            args.finish(
+                &["table", "trials", "seed", "k", "s", "threads", "panel-width", "stragglers"],
+                false,
+            )?;
             cmd_tables(&args)
         }
         "scenario" => {
@@ -304,7 +311,7 @@ fn run() -> CliResult<()> {
             // the wrong one instead of exiting 2.
             let mut allowed = vec![
                 "fig", "table", "ablation", "scenario", "trials", "seed", "k", "shard-id",
-                "num-shards", "out", "threads", "stragglers",
+                "num-shards", "out", "threads", "panel-width", "stragglers",
             ];
             if args.get("fig").is_some() {
                 allowed.push("tmax");
@@ -322,7 +329,7 @@ fn run() -> CliResult<()> {
             // Same conditional job flags as `shard`, plus the driver's.
             let mut allowed = vec![
                 "fig", "table", "ablation", "scenario", "fanout", "trials", "seed", "k",
-                "artifacts-dir", "resume", "threads", "stragglers",
+                "artifacts-dir", "resume", "threads", "panel-width", "stragglers",
             ];
             if args.get("fig").is_some() {
                 allowed.push("tmax");
@@ -337,7 +344,7 @@ fn run() -> CliResult<()> {
             cmd_run(&args)
         }
         "serve" => {
-            args.finish(&["addr"], false)?;
+            args.finish(&["addr", "panel-width"], false)?;
             cmd_serve(&args)
         }
         "load" => {
@@ -397,10 +404,10 @@ repro — Approximate Gradient Coding via Sparse Random Graphs (2017)
 
 USAGE:
   repro figures --fig 2|3|4|5 [--trials N] [--k K] [--seed S] [--tmax T]
-                [--threads T] [--stragglers SPEC]
+                [--threads T] [--panel-width W] [--stragglers SPEC]
   repro tables  --table thm3|thm5|thm6|thm8|thm10|thm11|thm21|thm24
                 [--trials N] [--k K] [--s S] [--seed S] [--threads T]
-                [--stragglers SPEC]
+                [--panel-width W] [--stragglers SPEC]
   repro ablation --study rho|rbgc|lsqr|normalization [--trials N] [--k K]
                 [--s S] [--seed S] [--threads T] [--stragglers SPEC]
   repro scenario [--study tta|tta3] [--stragglers SPEC] [--trials N]
@@ -424,17 +431,18 @@ USAGE:
   repro shard   --fig F|--table T|--ablation STUDY|--scenario STUDY
                 --shard-id I --num-shards N [--out FILE] [--trials N]
                 [--k K] [--s S] [--seed S] [--tmax T] [--threads T]
-                [--stragglers SPEC]
+                [--panel-width W] [--stragglers SPEC]
   repro run     --fig F|--table T|--ablation STUDY|--scenario STUDY
                 [--fanout N] [--artifacts-dir DIR | --resume DIR]
                 [--trials N] [--k K] [--s S] [--seed S] [--tmax T]
-                [--threads T] [--stragglers SPEC]
+                [--threads T] [--panel-width W] [--stragglers SPEC]
                                     # spawn N shard processes, wait,
                                     # verify, merge -> CSV on stdout;
                                     # --resume reuses DIR's valid
                                     # artifacts and respawns only the
                                     # missing/corrupt shards
-  repro serve   [--addr ADDR]      # decode/experiment-job daemon:
+  repro serve   [--addr ADDR] [--panel-width W]
+                                    # decode/experiment-job daemon:
                                     # length-prefixed JSON frames, hot
                                     # per-connection decode workspaces,
                                     # memoized standing assignments, a
@@ -503,6 +511,10 @@ DEFAULTS:
   --stragglers defaults to uniform everywhere but `repro scenario`.
   --threads defaults to the machine's core count (capped at 16); results
   are bit-identical for every thread count.
+  --panel-width defaults to 8 lanes per panel decode sweep; results are
+  bit-identical at every width (each lane replays its trial's exact RNG
+  fork). 0 and widths above 4096 are usage errors; the flag is an
+  execution hint only and never enters the shard artifacts.
 
 SHARDING:
   `repro shard` runs one disjoint slice of a figure/table/ablation/
@@ -541,6 +553,36 @@ fn threads_flag(args: &Args) -> CliResult<Option<usize>> {
     })
 }
 
+/// The `--panel-width W` execution hint: how many Monte-Carlo trials
+/// the panel decode kernels batch per lane-strided sweep. Pure
+/// wall-clock knob — every lane replays its trial's exact RNG fork, so
+/// the output bits are invariant in W and the flag never enters the job
+/// identity or the shard artifacts. W = 0 (no lanes) and absurd widths
+/// (the panel buffers scale with W) are usage errors.
+fn panel_width_flag(args: &Args) -> CliResult<Option<usize>> {
+    match args.get("panel-width") {
+        None => Ok(None),
+        Some(v) => {
+            let w = match v.parse::<usize>() {
+                Ok(x) => x,
+                Err(_) => {
+                    return usage(format!("--panel-width {v:?}: expected a positive integer"))
+                }
+            };
+            if w == 0 {
+                return usage("--panel-width 0: the panel needs at least one lane");
+            }
+            if w > 4096 {
+                return usage(format!(
+                    "--panel-width {w}: width out of range [1, 4096] (panel workspace \
+                     buffers scale with W)"
+                ));
+            }
+            Ok(Some(w))
+        }
+    }
+}
+
 /// The straggler scenario named by `--stragglers` (default: the
 /// uniform model every published figure/table uses — byte-identical
 /// output to the pre-scenario CLI).
@@ -556,7 +598,7 @@ fn stragglers_flag(args: &Args) -> CliResult<Scenario> {
 
 fn cmd_figures(args: &Args) -> CliResult<()> {
     let job = figure_job(args)?;
-    let points = job.run(Shard::full(), threads_flag(args)?)?;
+    let points = job.run_hinted(Shard::full(), threads_flag(args)?, panel_width_flag(args)?)?;
     print!("{}", points.to_csv());
     Ok(())
 }
@@ -587,7 +629,7 @@ fn figure_job(args: &Args) -> CliResult<JobSpec> {
 
 fn cmd_tables(args: &Args) -> CliResult<()> {
     let job = table_job(args)?;
-    let points = job.run(Shard::full(), threads_flag(args)?)?;
+    let points = job.run_hinted(Shard::full(), threads_flag(args)?, panel_width_flag(args)?)?;
     print!("{}", points.to_csv());
     Ok(())
 }
@@ -807,7 +849,8 @@ fn cmd_shard(args: &Args) -> CliResult<()> {
         Err(e) => return usage(format!("{e}")),
     };
 
-    let artifact = ShardArtifact::compute(&job, shard, threads_flag(args)?)?;
+    let artifact =
+        ShardArtifact::compute_hinted(&job, shard, threads_flag(args)?, panel_width_flag(args)?)?;
     let text = artifact.to_json_string();
     match args.get("out") {
         Some("-") | None => print!("{text}"),
@@ -854,7 +897,13 @@ fn cmd_run(args: &Args) -> CliResult<()> {
         (None, Some(d)) => ArtifactDir::Keep(std::path::PathBuf::from(d)),
         (None, None) => ArtifactDir::Temp,
     };
-    let plan = FanoutPlan { job, fanout, dir, threads: threads_flag(args)? };
+    let plan = FanoutPlan {
+        job,
+        fanout,
+        dir,
+        threads: threads_flag(args)?,
+        panel_width: panel_width_flag(args)?,
+    };
     let merged = run_fanout(&exe, &plan)?;
     print!("{}", merged.to_csv());
     Ok(())
@@ -871,6 +920,7 @@ fn cmd_serve(args: &Args) -> CliResult<()> {
     let cfg = ServeConfig {
         addr: args.get("addr").unwrap_or("127.0.0.1:7117").to_string(),
         exe: std::env::current_exe().context("locating the running binary")?,
+        panel_width: panel_width_flag(args)?,
     };
     serve(&cfg)?;
     Ok(())

@@ -54,6 +54,10 @@ pub struct FanoutPlan {
     /// Explicit per-child `--threads`; `None` splits the machine's
     /// worker budget across the children that actually spawn.
     pub threads: Option<usize>,
+    /// Explicit per-child `--panel-width`; `None` keeps the children on
+    /// their default. Execution hint only — never part of the job
+    /// identity, and the merged bits are invariant in it.
+    pub panel_width: Option<usize>,
 }
 
 /// The artifacts (`*.json` files) already present in `dir`, sorted.
@@ -132,6 +136,7 @@ fn shard_child_args(
     num_shards: usize,
     out: &Path,
     threads: Option<usize>,
+    panel_width: Option<usize>,
 ) -> Vec<String> {
     let mut v: Vec<String> = vec!["shard".into()];
     match job.kind {
@@ -184,6 +189,10 @@ fn shard_child_args(
     if let Some(t) = threads {
         v.push("--threads".into());
         v.push(t.to_string());
+    }
+    if let Some(w) = panel_width {
+        v.push("--panel-width".into());
+        v.push(w.to_string());
     }
     v
 }
@@ -324,7 +333,7 @@ pub fn run_fanout(exe: &Path, plan: &FanoutPlan) -> Result<MergedRun> {
         let out =
             dir.join(format!("{}_{}_shard_{sid}_of_{fanout}.json", job.kind.name(), job.id));
         match std::process::Command::new(exe)
-            .args(shard_child_args(job, sid, fanout, &out, threads))
+            .args(shard_child_args(job, sid, fanout, &out, threads, plan.panel_width))
             .spawn()
         {
             Ok(child) => children.push((sid, out, child)),

@@ -11,6 +11,16 @@
 //! decoding the same configuration share one `Arc<CscMatrix>` instead
 //! of redrawing G per request.
 //!
+//! Sessions also own a [`PanelWorkspace`]: full (non-prefix) decode
+//! requests with at least `--panel-width` rounds run their rounds
+//! through the batched panel kernels instead of the round-at-a-time
+//! scalar loop. Round `t` forks stream `t` off the request seed in
+//! both paths, and panel lane `l` at base `t0` replays exactly the
+//! fork `t0 + l`, so the reply is **bit-equal** to the scalar path —
+//! the fast path changes wall-clock only, never bytes (pinned by
+//! `tests/serve_load.rs`). Prefix (anytime) requests and short
+//! requests stay on the scalar loop.
+//!
 //! The same port speaks two protocols, disambiguated by the first four
 //! bytes: a legal frame prefix is at most [`frame::MAX_FRAME`]
 //! (16 MiB), while ASCII `"GET "` reads as ~1.2e9, so an HTTP request
@@ -34,7 +44,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{DecoderKind, ServeMetrics};
-use crate::decode::{DecodeWorkspace, OneStepDecoder};
+use crate::decode::{DecodeWorkspace, OneStepDecoder, PanelWorkspace, DEFAULT_PANEL_WIDTH};
 use crate::linalg::{CscMatrix, LsqrOptions};
 use crate::util::{Json, Rng};
 
@@ -51,6 +61,10 @@ pub struct ServeConfig {
     /// Path of the `repro` binary to spawn for fan-out `job` requests
     /// (the daemon schedules them through `scheduler::run_fanout`).
     pub exe: PathBuf,
+    /// `--panel-width`: lanes per batched decode panel on the serve
+    /// fast path (`None` = [`DEFAULT_PANEL_WIDTH`]). Execution hint
+    /// only: replies are bit-identical at every width.
+    pub panel_width: Option<usize>,
 }
 
 /// Memo key of a standing assignment. `Scheme::name()` is a unique
@@ -64,6 +78,8 @@ struct Shared {
     shutdown: AtomicBool,
     listen_addr: SocketAddr,
     exe: PathBuf,
+    /// Resolved panel width every session's fast path uses (>= 1).
+    panel_width: usize,
 }
 
 /// Run the daemon until a `shutdown` request arrives. Blocks the
@@ -85,6 +101,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
         shutdown: AtomicBool::new(false),
         listen_addr,
         exe: cfg.exe.clone(),
+        panel_width: cfg.panel_width.unwrap_or(DEFAULT_PANEL_WIDTH).max(1),
     });
     for conn in listener.incoming() {
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -126,11 +143,15 @@ fn session(stream: TcpStream, shared: Arc<Shared>) {
         }
     };
     let mut writer = BufWriter::new(stream);
-    // Per-connection hot state: the workspace survives across requests,
-    // and `mirrored` names the standing assignment its CSR mirror
-    // currently matches (one-step decodes re-mirror only on switch).
+    // Per-connection hot state: the workspaces survive across requests,
+    // and each `*mirrored` names the standing assignment whose CSR
+    // mirror its workspace currently holds (one-step decodes re-mirror
+    // only on switch). The panel workspace drives the batched fast
+    // path for full decode requests of >= panel_width rounds.
     let mut ws = DecodeWorkspace::new();
     let mut mirrored: Option<AssignKey> = None;
+    let mut panel = PanelWorkspace::new(shared.panel_width);
+    let mut panel_mirrored: Option<AssignKey> = None;
     loop {
         let prefix = match frame::read_prefix(&mut reader) {
             Ok(p) => p,
@@ -161,7 +182,8 @@ fn session(stream: TcpStream, shared: Arc<Shared>) {
             }
         };
         let start = Instant::now();
-        let handled = handle(&body, &shared, &mut ws, &mut mirrored);
+        let handled =
+            handle(&body, &shared, &mut ws, &mut mirrored, &mut panel, &mut panel_mirrored);
         // Record metrics before replying, so a client that has seen its
         // reply also sees itself in a subsequent /metrics scrape.
         shared.metrics.observe_request(start.elapsed().as_nanos() as u64);
@@ -188,6 +210,8 @@ fn handle(
     shared: &Arc<Shared>,
     ws: &mut DecodeWorkspace,
     mirrored: &mut Option<AssignKey>,
+    panel: &mut PanelWorkspace,
+    panel_mirrored: &mut Option<AssignKey>,
 ) -> Handled {
     let parsed = Json::parse(body).and_then(|j| Request::from_json(&j));
     let req = match parsed {
@@ -220,7 +244,7 @@ fn handle(
             rounds: 0,
             shutdown: true,
         },
-        Request::Decode(d) => match run_decode(&d, shared, ws, mirrored) {
+        Request::Decode(d) => match run_decode(&d, shared, ws, mirrored, panel, panel_mirrored) {
             Ok(reply) => {
                 Handled { reply, is_error: false, rounds: d.rounds as u64, shutdown: false }
             }
@@ -233,7 +257,13 @@ fn handle(
         },
         Request::Job { job, fanout } => {
             shared.metrics.observe_job();
-            let plan = FanoutPlan { job, fanout, dir: ArtifactDir::Temp, threads: None };
+            let plan = FanoutPlan {
+                job,
+                fanout,
+                dir: ArtifactDir::Temp,
+                threads: None,
+                panel_width: None,
+            };
             match run_fanout(&shared.exe, &plan) {
                 Ok(merged) => Handled {
                     reply: ok_response(vec![("csv", Json::Str(merged.to_csv()))]),
@@ -267,17 +297,43 @@ fn standing_assignment(shared: &Shared, d: &DecodeRequest) -> Arc<CscMatrix> {
 /// Run a decode request's rounds. Round t forks stream t off the
 /// request seed, so the reply is a pure function of the request — the
 /// determinism `repro load`'s byte-reproducible replay relies on.
+///
+/// Full (non-prefix) requests with at least `panel.width()` rounds run
+/// through the batched panel kernels: rounds are chunked into panels
+/// at base `t0`, and lane `l` of a panel replays exactly the scalar
+/// loop's `root.fork(t0 + l)` round, so the `errs` array — and the
+/// reply — is bit-equal to the scalar path at every width (the final
+/// ragged chunk just runs a narrower panel).
 fn run_decode(
     d: &DecodeRequest,
     shared: &Shared,
     ws: &mut DecodeWorkspace,
     mirrored: &mut Option<AssignKey>,
+    panel: &mut PanelWorkspace,
+    panel_mirrored: &mut Option<AssignKey>,
 ) -> Result<Json> {
     let g = standing_assignment(shared, d);
     let rho = OneStepDecoder::canonical(d.k, d.r, d.s).rho;
     let root = Rng::new(d.seed);
-    let mut errs = Vec::with_capacity(d.rounds);
+    let width = panel.width();
+    let mut errs = vec![0.0; d.rounds];
     match (d.decoder, d.prefix) {
+        (DecoderKind::OneStep, None) if d.rounds >= width => {
+            // Panel fast path over the panel workspace's own CSR
+            // mirror (the same bit-identical streamed kernel, W lanes
+            // at a time); re-mirror only on assignment switch.
+            let key: AssignKey = (d.scheme.name(), d.k, d.n, d.s, d.assign_seed);
+            if *panel_mirrored != Some(key) {
+                panel.mirror_csr(&g);
+                *panel_mirrored = Some(key);
+            }
+            let mut t0 = 0;
+            while t0 < d.rounds {
+                let lanes = width.min(d.rounds - t0);
+                panel.onestep_panel(&g, d.r, rho, &root, t0 as u64, lanes, &mut errs[t0..t0 + lanes]);
+                t0 += lanes;
+            }
+        }
         (DecoderKind::OneStep, None) => {
             // One-step rounds stream over the CSR mirror (bit-identical
             // to the CSC path); re-mirror only on assignment switch.
@@ -286,29 +342,50 @@ fn run_decode(
                 ws.mirror_csr(&g);
                 *mirrored = Some(key);
             }
-            for t in 0..d.rounds {
+            for (t, e) in errs.iter_mut().enumerate() {
                 let mut rng = root.fork(t as u64);
-                errs.push(ws.onestep_trial_streamed(d.r, rho, &mut rng));
+                *e = ws.onestep_trial_streamed(d.r, rho, &mut rng);
             }
         }
         (DecoderKind::OneStep, Some(p)) => {
             // Anytime route: draw the same r survivors as the full
             // path (same RNG stream), decode the first p arrivals
             // through the incremental state. p == r is bit-identical
-            // to the full one-step round.
-            for t in 0..d.rounds {
+            // to the full one-step round. Stays scalar: the prefix
+            // arm's incremental state has no panel kernel.
+            for (t, e) in errs.iter_mut().enumerate() {
                 let mut rng = root.fork(t as u64);
-                errs.push(ws.onestep_prefix_trial(&g, d.r, p, rho, &mut rng));
+                *e = ws.onestep_prefix_trial(&g, d.r, p, rho, &mut rng);
+            }
+        }
+        (DecoderKind::Optimal, None) if d.rounds >= width => {
+            // Panel fast path: one lockstep multi-RHS LSQR per panel,
+            // warm-started at ρ·1 like the scalar arm below.
+            let opts = LsqrOptions::default();
+            let mut t0 = 0;
+            while t0 < d.rounds {
+                let lanes = width.min(d.rounds - t0);
+                panel.optimal_panel(
+                    &g,
+                    d.r,
+                    &opts,
+                    Some(rho),
+                    &root,
+                    t0 as u64,
+                    lanes,
+                    &mut errs[t0..t0 + lanes],
+                );
+                t0 += lanes;
             }
         }
         (DecoderKind::Optimal, prefix) => {
             let opts = LsqrOptions::default();
-            for t in 0..d.rounds {
+            for (t, e) in errs.iter_mut().enumerate() {
                 let mut rng = root.fork(t as u64);
-                errs.push(match prefix {
+                *e = match prefix {
                     None => ws.optimal_trial(&g, d.r, &opts, Some(rho), &mut rng),
                     Some(p) => ws.optimal_prefix_trial(&g, d.r, p, &opts, Some(rho), &mut rng),
-                });
+                };
             }
         }
     }

@@ -14,7 +14,7 @@
 //! bit-for-bit (see [`super::shard`] and `tests/shard_parity.rs`).
 
 use super::montecarlo::MonteCarlo;
-use super::scenario::scalar_partial_under;
+use super::scenario::{scalar_partial_panel_under, PanelKind};
 use super::shard::{Partial, Shard};
 use crate::codes::Scheme;
 use crate::decode::{algorithmic_error_curve, DecodeWorkspace, StepSize};
@@ -273,9 +273,12 @@ impl ErrorKind {
 /// run in the standing-assignment setting — G drawn once per point
 /// (seeded by the job), the attack planned against it — which makes
 /// every trial deterministic, so the point collapses to one exact
-/// decode ([`scalar_partial_under`]) instead of `trials` identical
-/// solves. Runs only the `shard` slice of each point's trials and
-/// returns exact partials.
+/// decode instead of `trials` identical solves. Re-draw points run in
+/// [`crate::decode::PanelWorkspace`] panels of `mc.panel_width` lanes
+/// through [`scalar_partial_panel_under`] — the RNG-fork-per-lane
+/// lockstep keeps every published CSV byte-identical to the scalar
+/// path at any width. Runs only the `shard` slice of each point's
+/// trials and returns exact partials.
 fn error_sweep_partials(
     cfg: &FigureConfig,
     figure: &'static str,
@@ -294,18 +297,16 @@ fn error_sweep_partials(
                 let rho = k as f64 / (r as f64 * s as f64);
                 let code = scheme.build(k, k, s);
                 let resolved = scenario.resolve(code.as_ref(), delta, r, cfg.mc.seed);
-                let partial = scalar_partial_under(
+                let panel_kind = match kind {
+                    ErrorKind::OneStep => PanelKind::OneStep { rho },
+                    ErrorKind::Optimal => PanelKind::Optimal { opts: &opts, warm: None },
+                };
+                let partial = scalar_partial_panel_under(
                     &resolved,
                     &cfg.mc,
                     shard,
-                    |ws, model, rng| match kind {
-                        ErrorKind::OneStep => {
-                            ws.onestep_redraw_trial_with(code.as_ref(), model, rho, rng)
-                        }
-                        ErrorKind::Optimal => {
-                            ws.optimal_redraw_trial_with(code.as_ref(), model, &opts, None, rng)
-                        }
-                    },
+                    code.as_ref(),
+                    panel_kind,
                     |ws, g, model, rng| match kind {
                         ErrorKind::OneStep => ws.onestep_trial_with(g, model, rho, rng),
                         ErrorKind::Optimal => ws.optimal_trial_with(g, model, &opts, None, rng),

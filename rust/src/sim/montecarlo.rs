@@ -49,20 +49,38 @@ use crate::util::parallel::{parallel_map_panels_with, parallel_map_with};
 use crate::util::Rng;
 
 /// Configuration shared by all simulation entry points.
+///
+/// `threads` and `panel_width` are **execution hints only**: results
+/// are bit-identical at every thread count and panel width (the RNG
+/// forks per global trial index), so neither participates in run
+/// identity — `JobSpec` serialization excludes both.
 #[derive(Clone, Copy, Debug)]
 pub struct MonteCarlo {
     pub trials: usize,
     pub seed: u64,
     pub threads: usize,
+    /// Panel width W for the panelized sweeps (lanes per
+    /// [`MonteCarlo::mean_partial_panel_ws`] kernel call).
+    pub panel_width: usize,
 }
 
 impl MonteCarlo {
     pub fn new(trials: usize, seed: u64) -> Self {
-        MonteCarlo { trials, seed, threads: crate::util::parallel::default_threads() }
+        MonteCarlo {
+            trials,
+            seed,
+            threads: crate::util::parallel::default_threads(),
+            panel_width: crate::decode::DEFAULT_PANEL_WIDTH,
+        }
     }
 
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    pub fn with_panel_width(mut self, width: usize) -> Self {
+        self.panel_width = width.max(1);
         self
     }
 
@@ -282,8 +300,8 @@ mod tests {
     #[test]
     fn mean_independent_of_thread_count() {
         let f = |rng: &mut Rng| rng.f64();
-        let a = MonteCarlo { trials: 500, seed: 1, threads: 1 }.mean(f);
-        let b = MonteCarlo { trials: 500, seed: 1, threads: 8 }.mean(f);
+        let a = MonteCarlo::new(500, 1).with_threads(1).mean(f);
+        let b = MonteCarlo::new(500, 1).with_threads(8).mean(f);
         assert_eq!(a, b);
     }
 
@@ -291,9 +309,9 @@ mod tests {
     fn mean_ws_matches_mean_and_thread_invariance() {
         // A workspace-using trial whose result ignores workspace history
         // must agree with the plain path at every thread count.
-        let plain = MonteCarlo { trials: 400, seed: 3, threads: 4 }.mean(|rng| rng.f64());
+        let plain = MonteCarlo::new(400, 3).with_threads(4).mean(|rng| rng.f64());
         for threads in [1, 2, 8] {
-            let ws_mean = MonteCarlo { trials: 400, seed: 3, threads }.mean_ws(
+            let ws_mean = MonteCarlo::new(400, 3).with_threads(threads).mean_ws(
                 || vec![0.0f64; 4],
                 |ws, rng| {
                     ws[0] = rng.f64(); // fully overwritten each trial
@@ -306,7 +324,7 @@ mod tests {
 
     #[test]
     fn sharded_mean_merges_to_single_process_bits() {
-        let mc = MonteCarlo { trials: 501, seed: 11, threads: 4 };
+        let mc = MonteCarlo::new(501, 11).with_threads(4);
         let whole = mc.mean_ws(|| (), |_, rng| rng.f64() - 0.5);
         for num_shards in [1usize, 2, 3, 7] {
             let mut merged: Option<Partial> = None;
@@ -332,7 +350,7 @@ mod tests {
 
     #[test]
     fn sharded_probability_and_curve_merge_to_single_process_bits() {
-        let mc = MonteCarlo { trials: 300, seed: 12, threads: 3 };
+        let mc = MonteCarlo::new(300, 12).with_threads(3);
         let p_whole = mc.probability_ws(|| (), |_, rng| rng.bernoulli(0.3));
         let c_whole = mc.mean_curve_ws(2, || (), |_, rng| {
             let x = rng.f64();
@@ -372,7 +390,7 @@ mod tests {
         // the same forked stream must yield the same Partial bits for
         // every width / thread count / shard layout — including ragged
         // tails (401 is prime to every width below).
-        let mc = MonteCarlo { trials: 401, seed: 17, threads: 4 };
+        let mc = MonteCarlo::new(401, 17).with_threads(4);
         let trial = |rng: &mut Rng| rng.f64() * 2.0 - 0.7;
         let reference = mc.mean_partial_ws(Shard::full(), || (), |_, rng| trial(rng));
         for width in [1usize, 3, 4, 8] {
@@ -449,7 +467,7 @@ mod tests {
 
     #[test]
     fn sharded_mean_std_merges_to_single_process_bits() {
-        let mc = MonteCarlo { trials: 501, seed: 13, threads: 4 };
+        let mc = MonteCarlo::new(501, 13).with_threads(4);
         let trial = |_: &mut (), rng: &mut Rng| rng.f64() * 3.0 - 1.0;
         let (m_whole, s_whole) = mc.mean_std(|rng| rng.f64() * 3.0 - 1.0);
         for num_shards in [1usize, 2, 3, 7] {

@@ -26,7 +26,8 @@ use anyhow::{bail, Result};
 
 use super::montecarlo::MonteCarlo;
 use super::shard::{Partial, Shard};
-use crate::decode::DecodeWorkspace;
+use crate::codes::GradientCode;
+use crate::decode::{DecodeWorkspace, PanelWorkspace};
 use crate::linalg::{CscMatrix, LsqrOptions};
 use crate::sim::figures::FIG_SCHEMES;
 use crate::stragglers::{
@@ -62,6 +63,80 @@ pub fn scalar_partial_under(
             let mut ws = DecodeWorkspace::new();
             // The model replays a planned set without touching the RNG;
             // the seeded stream is only a formality of the trial API.
+            let mut rng = Rng::new(mc.seed);
+            Partial::Exact { value: standing(&mut ws, g, &*resolved.model, &mut rng) }
+        }
+    }
+}
+
+/// Which redraw arm a panelized sweep point runs — the re-draw half of
+/// the [`scalar_partial_panel_under`] dispatch.
+#[derive(Clone, Copy)]
+pub enum PanelKind<'a> {
+    /// One-step err₁ redraw trials — the fused lane-strided coverage
+    /// panel ([`PanelWorkspace::onestep_redraw_panel_with`]).
+    OneStep { rho: f64 },
+    /// Optimal (LSQR) redraw trials — per-lane delegation
+    /// ([`PanelWorkspace::optimal_redraw_panel_with`]); distinct
+    /// per-lane G leaves nothing to fuse.
+    Optimal { opts: &'a LsqrOptions, warm: Option<f64> },
+}
+
+/// Panel-batched [`scalar_partial_under`] — the dispatch behind every
+/// panelized figure/table sweep point:
+///
+/// * re-draw scenarios (uniform, latency) run this shard's slice of
+///   the trial range in [`PanelWorkspace`] panels of `mc.panel_width`
+///   lanes. Lane `l` of the panel at `base` forks `root.fork(base + l)`
+///   — the scalar trial's stream — so the partial is **bit-identical
+///   to [`scalar_partial_under`] at every width**, and published CSVs
+///   are unchanged by panelization (pinned in
+///   `tests/decode_parity.rs`);
+/// * standing-assignment scenarios (adversarial) are deterministic and
+///   collapse to the same single-decode [`Partial::Exact`] as the
+///   scalar dispatch — a collapsed point has nothing to batch.
+pub fn scalar_partial_panel_under(
+    resolved: &ResolvedScenario,
+    mc: &MonteCarlo,
+    shard: Shard,
+    code: &dyn GradientCode,
+    kind: PanelKind<'_>,
+    standing: impl FnOnce(&mut DecodeWorkspace, &CscMatrix, &dyn StragglerModel, &mut Rng) -> f64,
+) -> Partial {
+    match &resolved.standing_g {
+        None => {
+            let width = mc.panel_width.max(1);
+            mc.mean_partial_panel_ws(
+                shard,
+                width,
+                || PanelWorkspace::new(width),
+                |ws, root, base, lanes, out| match kind {
+                    PanelKind::OneStep { rho } => ws.onestep_redraw_panel_with(
+                        code,
+                        &*resolved.model,
+                        rho,
+                        root,
+                        base,
+                        lanes,
+                        out,
+                    ),
+                    PanelKind::Optimal { opts, warm } => ws.optimal_redraw_panel_with(
+                        code,
+                        &*resolved.model,
+                        opts,
+                        warm,
+                        root,
+                        base,
+                        lanes,
+                        out,
+                    ),
+                },
+            )
+        }
+        Some(g) => {
+            let mut ws = DecodeWorkspace::new();
+            // Same collapse as scalar_partial_under: the model replays a
+            // planned set without touching the RNG.
             let mut rng = Rng::new(mc.seed);
             Partial::Exact { value: standing(&mut ws, g, &*resolved.model, &mut rng) }
         }

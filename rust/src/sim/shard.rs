@@ -499,9 +499,26 @@ impl JobSpec {
     /// only changes wall-clock). The full run is `shard = Shard::full()`
     /// — exactly what `repro figures` / `repro tables` execute.
     pub fn run(&self, shard: Shard, threads: Option<usize>) -> Result<ShardPoints> {
+        self.run_hinted(shard, threads, None)
+    }
+
+    /// [`JobSpec::run`] with every execution hint: `threads` and
+    /// `panel_width` (the `--panel-width` flag). Both are wall-clock
+    /// knobs only — neither is part of the job identity or the artifact,
+    /// and the output bits are invariant in them (panel lanes replay the
+    /// exact per-trial RNG forks; pinned by `tests/decode_parity.rs`).
+    pub fn run_hinted(
+        &self,
+        shard: Shard,
+        threads: Option<usize>,
+        panel_width: Option<usize>,
+    ) -> Result<ShardPoints> {
         let mut mc = MonteCarlo::new(self.trials, self.seed);
         if let Some(t) = threads {
             mc = mc.with_threads(t);
+        }
+        if let Some(w) = panel_width {
+            mc = mc.with_panel_width(w);
         }
         let scenario = &self.scenario;
         match self.kind {
@@ -905,7 +922,18 @@ fn validate_shard_ids(ids: &[usize], num_shards: usize) -> Result<()> {
 impl ShardArtifact {
     /// Run one shard of `job` and package the result.
     pub fn compute(job: &JobSpec, shard: Shard, threads: Option<usize>) -> Result<ShardArtifact> {
-        let points = job.run(shard, threads)?;
+        Self::compute_hinted(job, shard, threads, None)
+    }
+
+    /// [`ShardArtifact::compute`] with the full execution-hint set
+    /// (thread count and panel width); hints never enter the artifact.
+    pub fn compute_hinted(
+        job: &JobSpec,
+        shard: Shard,
+        threads: Option<usize>,
+        panel_width: Option<usize>,
+    ) -> Result<ShardArtifact> {
+        let points = job.run_hinted(shard, threads, panel_width)?;
         Ok(ShardArtifact {
             job: job.clone(),
             shard_ids: vec![shard.shard_id],

@@ -16,7 +16,7 @@
 //! as [`Partial::Exact`] values, which merge by asserting bit-equality.
 
 use super::montecarlo::MonteCarlo;
-use super::scenario::{prob_partial_under, scalar_partial_under};
+use super::scenario::{prob_partial_under, scalar_partial_panel_under, PanelKind};
 use super::shard::{Partial, PostMap, Shard};
 use crate::adversary::{
     asp_objective, dks_to_asp, exhaustive_worst_case, frc_worst_stragglers, greedy_stragglers,
@@ -166,11 +166,12 @@ pub fn thm5_partials(
             let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
             let rho = k as f64 / (r as f64 * s as f64);
             let resolved = scenario.resolve(code.as_ref(), delta, r, mc.seed);
-            let partial = scalar_partial_under(
+            let partial = scalar_partial_panel_under(
                 &resolved,
                 mc,
                 shard,
-                |ws, model, rng| ws.onestep_redraw_trial_with(code.as_ref(), model, rho, rng),
+                code.as_ref(),
+                PanelKind::OneStep { rho },
                 |ws, g, model, rng| ws.onestep_trial_with(g, model, rho, rng),
             );
             TablePartialPoint {
@@ -247,13 +248,12 @@ pub fn thm6_partials(
             // stragglers it deflates the covered blocks out of the rhs.
             let rho = k as f64 / (r as f64 * s as f64);
             let resolved = scenario.resolve(code.as_ref(), delta, r, mc.seed);
-            let partial = scalar_partial_under(
+            let partial = scalar_partial_panel_under(
                 &resolved,
                 mc,
                 shard,
-                |ws, model, rng| {
-                    ws.optimal_redraw_trial_with(code.as_ref(), model, &opts, Some(rho), rng)
-                },
+                code.as_ref(),
+                PanelKind::Optimal { opts: &opts, warm: Some(rho) },
                 |ws, g, model, rng| ws.optimal_trial_with(g, model, &opts, Some(rho), rng),
             );
             TablePartialPoint {
@@ -382,7 +382,7 @@ pub fn thm10_partials(
         // so the published CSVs are unchanged; the win is pinned by the
         // `panel/optimal/*` records in `benches/decode_throughput.rs`).
         let opts = LsqrOptions::default();
-        let width = crate::decode::DEFAULT_PANEL_WIDTH;
+        let width = mc.panel_width.max(1);
         let partial = mc.mean_partial_panel_ws(
             shard,
             width,
@@ -550,11 +550,12 @@ pub fn thm21_partials(
             let rho = k as f64 / (r as f64 * s as f64);
             let code = scheme.build(k, k, s);
             let resolved = scenario.resolve(code.as_ref(), delta, r, mc.seed);
-            let partial = scalar_partial_under(
+            let partial = scalar_partial_panel_under(
                 &resolved,
                 mc,
                 shard,
-                |ws, model, rng| ws.onestep_redraw_trial_with(code.as_ref(), model, rho, rng),
+                code.as_ref(),
+                PanelKind::OneStep { rho },
                 |ws, g, model, rng| ws.onestep_trial_with(g, model, rho, rng),
             );
             TablePartialPoint {

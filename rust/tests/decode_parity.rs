@@ -210,7 +210,7 @@ fn redraw_monte_carlo_means_match_pr1_closure_form() {
     for &delta in &[0.25, 0.5] {
         let r = (((1.0 - delta) * k as f64).round() as usize).clamp(1, k);
         let rho = k as f64 / (r as f64 * s as f64);
-        let mc = MonteCarlo { trials: 150, seed: 31, threads: 4 };
+        let mc = MonteCarlo::new(150, 31).with_threads(4);
 
         let legacy_onestep = mc.mean_ws(DecodeWorkspace::new, |ws, rng| {
             let g = Scheme::Frc.build(k, k, s).assignment(rng);
@@ -241,7 +241,7 @@ fn workspace_monte_carlo_thread_invariance() {
     let (k, s, r) = (40usize, 5usize, 30usize);
     let rho = k as f64 / (r as f64 * s as f64);
     let run = |threads: usize| {
-        MonteCarlo { trials: 200, seed: 9, threads }.mean_ws(DecodeWorkspace::new, |ws, rng| {
+        MonteCarlo::new(200, 9).with_threads(threads).mean_ws(DecodeWorkspace::new, |ws, rng| {
             let g = Scheme::Bgc.build(k, k, s).assignment(rng);
             ws.onestep_trial(&g, r, rho, rng)
         })
@@ -522,7 +522,7 @@ fn panel_monte_carlo_partials_match_scalar_on_decode_workloads() {
     let opts = LsqrOptions::default();
     let g = Scheme::Bgc.build(k, k, s).assignment(&mut Rng::new(95));
 
-    let mc = MonteCarlo { trials: 101, seed: 96, threads: 4 };
+    let mc = MonteCarlo::new(101, 96).with_threads(4);
     let ref_one = mc.mean_partial_ws(Shard::full(), DecodeWorkspace::new, |ws, rng| {
         ws.onestep_trial(&g, r, rho, rng)
     });
@@ -631,5 +631,160 @@ fn panel_redraw_arms_match_scalar_redraw_trials() {
             assert_eq!(got[l].to_bits(), ref_norm[p + l].to_bits(), "normalized trial {}", p + l);
         }
         p += lanes;
+    }
+}
+
+/// The sweeps panelized in PR 9 — figure points (both the uniform
+/// redraw arm and the adversarial standing-G arm) and the thm21/thm24
+/// k-sweeps — publish byte-identical CSVs at every `--panel-width`:
+/// the width is an execution hint only, because panel lane `l` at
+/// `base` replays exactly the scalar trial `base + l`'s RNG fork.
+/// Trials = 11 is prime to 3, 8, and 16, so every width ends on a
+/// ragged tail panel.
+#[test]
+fn panelized_sweep_csvs_invariant_across_panel_widths() {
+    use gradcode::sim::{JobKind, JobSpec, Shard};
+    use gradcode::stragglers::Scenario;
+
+    let jobs = [
+        (JobKind::Figure, "2", 16usize, 0usize, Scenario::default()),
+        (JobKind::Figure, "2", 16, 0, Scenario::parse("adversarial:greedy").unwrap()),
+        (JobKind::Table, "thm21", 50, 0, Scenario::default()),
+        (JobKind::Table, "thm24", 50, 0, Scenario::default()),
+    ];
+    for (kind, id, k, s, scenario) in jobs {
+        let job = JobSpec {
+            kind,
+            id: id.into(),
+            trials: 11,
+            seed: 2017,
+            k,
+            s,
+            tmax: 0,
+            scenario,
+        };
+        let reference = job.run(Shard::full(), Some(2)).unwrap().to_csv();
+        for w in [1usize, 3, 8, 16] {
+            let got = job.run_hinted(Shard::full(), Some(2), Some(w)).unwrap().to_csv();
+            assert_eq!(got, reference, "{id} width {w} drifted from the default-width bytes");
+        }
+    }
+}
+
+/// The panelized redraw arms at the Monte-Carlo level:
+/// `mean_partial_panel_ws` driving the fused redraw kernels yields
+/// Partials bit-identical to the scalar `mean_partial_ws` +
+/// `*_redraw_trial_with` pipeline — the exact equivalence the
+/// figure/table sweeps rely on — for uniform and latency models at
+/// every width (13 trials is prime, so the tail panel is ragged at
+/// every width but 1).
+#[test]
+fn panel_redraw_monte_carlo_partials_match_scalar_pipeline() {
+    use gradcode::decode::PanelWorkspace;
+    use gradcode::sim::Shard;
+    use gradcode::stragglers::{
+        DeadlinePolicy, LatencyModel, LatencyStragglers, StragglerModel, UniformStragglers,
+    };
+
+    let (k, s, r) = (24usize, 4usize, 18usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let opts = LsqrOptions::default();
+    let code = Scheme::Bgc.build(k, k, s);
+    let models: [Box<dyn StragglerModel>; 2] = [
+        Box::new(UniformStragglers::new(0.25)),
+        Box::new(LatencyStragglers {
+            model: LatencyModel::Pareto { scale: 0.02, shape: 1.5 },
+            policy: DeadlinePolicy::FastestR(r),
+        }),
+    ];
+    let mc = MonteCarlo::new(13, 41).with_threads(2);
+    for model in &models {
+        let ref_one = mc.mean_partial_ws(Shard::full(), DecodeWorkspace::new, |ws, rng| {
+            ws.onestep_redraw_trial_with(code.as_ref(), model.as_ref(), rho, rng)
+        });
+        let ref_opt = mc.mean_partial_ws(Shard::full(), DecodeWorkspace::new, |ws, rng| {
+            ws.optimal_redraw_trial_with(code.as_ref(), model.as_ref(), &opts, Some(rho), rng)
+        });
+        for width in [1usize, 3, 8, 16] {
+            let pan_one = mc.mean_partial_panel_ws(
+                Shard::full(),
+                width,
+                || PanelWorkspace::new(width),
+                |pw, root, base, lanes, out| {
+                    pw.onestep_redraw_panel_with(
+                        code.as_ref(), model.as_ref(), rho, root, base, lanes, out,
+                    )
+                },
+            );
+            assert_eq!(
+                pan_one.value().to_bits(),
+                ref_one.value().to_bits(),
+                "one-step {} width {width}",
+                model.name()
+            );
+            let pan_opt = mc.mean_partial_panel_ws(
+                Shard::full(),
+                width,
+                || PanelWorkspace::new(width),
+                |pw, root, base, lanes, out| {
+                    pw.optimal_redraw_panel_with(
+                        code.as_ref(), model.as_ref(), &opts, Some(rho), root, base, lanes, out,
+                    )
+                },
+            );
+            assert_eq!(
+                pan_opt.value().to_bits(),
+                ref_opt.value().to_bits(),
+                "optimal {} width {width}",
+                model.name()
+            );
+        }
+    }
+}
+
+/// PR 9's fused redraw panels (W batched G draws scattered into one
+/// lane-strided coverage panel, one fused err₁ sweep) vs explicit
+/// lane-by-lane delegation to the scalar workspace — same forks, same
+/// bits, under a latency model whose straggler draw consumes a
+/// different RNG stream shape than the uniform draw.
+#[test]
+fn fused_redraw_panels_match_lane_by_lane_delegation() {
+    use gradcode::decode::PanelWorkspace;
+    use gradcode::stragglers::{DeadlinePolicy, LatencyModel, LatencyStragglers};
+
+    let (k, s, r) = (20usize, 5usize, 15usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let code = Scheme::Bgc.build(k, k, s);
+    let model = LatencyStragglers {
+        model: LatencyModel::Pareto { scale: 0.02, shape: 1.5 },
+        policy: DeadlinePolicy::FastestR(r),
+    };
+    let root = Rng::new(113);
+    let trials = 13usize;
+
+    // Lane-by-lane delegation: lane l of the panel at `base` is the
+    // scalar redraw trial on root.fork(base + l).
+    let mut ws = DecodeWorkspace::new();
+    let mut reference = Vec::new();
+    for j in 0..trials {
+        let mut rng = root.fork(j as u64);
+        reference.push(ws.onestep_redraw_trial_with(code.as_ref(), &model, rho, &mut rng));
+    }
+
+    for &w in &[8usize, 16] {
+        let mut pw = PanelWorkspace::new(w);
+        pw.reserve_redraw(k, k, s);
+        let mut got = vec![0.0f64; w];
+        let mut p = 0;
+        while p < trials {
+            let lanes = w.min(trials - p);
+            pw.onestep_redraw_panel_with(
+                code.as_ref(), &model, rho, &root, p as u64, lanes, &mut got[..lanes],
+            );
+            for l in 0..lanes {
+                assert_eq!(got[l].to_bits(), reference[p + l].to_bits(), "w={w} trial {}", p + l);
+            }
+            p += lanes;
+        }
     }
 }

@@ -29,8 +29,15 @@ struct Server {
 
 impl Server {
     fn start() -> Server {
+        Server::start_with(&[])
+    }
+
+    /// `start` with extra daemon flags (e.g. `--panel-width`).
+    fn start_with(extra: &[&str]) -> Server {
+        let mut args = vec!["serve", "--addr", "127.0.0.1:0"];
+        args.extend_from_slice(extra);
         let mut child = Command::new(BIN)
-            .args(["serve", "--addr", "127.0.0.1:0"])
+            .args(&args)
             .stdout(Stdio::piped())
             .stderr(Stdio::null())
             .spawn()
@@ -237,6 +244,75 @@ fn concurrent_clients_share_the_standing_assignment_and_agree() {
         assert_eq!(err, expect, "round {t} differs from the in-process decode");
     }
     server.shutdown();
+}
+
+/// The serve panel fast path (PR 9): full (non-prefix) decode requests
+/// with rounds ≥ the session's panel width run through the panel
+/// kernels — W rounds per kernel call — and the reply must stay
+/// bit-equal to an in-process scalar per-round decode, for both
+/// decoders, at the default width and under an explicit
+/// `--panel-width 3`, with a ragged final panel either way
+/// (19 = 2·8 + 3 = 6·3 + 1).
+#[test]
+fn panel_fast_path_replies_bit_equal_to_scalar_decode() {
+    use gradcode::linalg::LsqrOptions;
+
+    let (k, n, s, r, rounds) = (30usize, 30usize, 5usize, 24usize, 19usize);
+    let g = Scheme::Bgc.build(k, n, s).assignment(&mut Rng::new(11));
+    let rho = OneStepDecoder::canonical(k, r, s).rho;
+    let opts = LsqrOptions::default();
+    let root = Rng::new(42);
+    let mut ws = DecodeWorkspace::new();
+
+    // Scalar references: round t decodes on Rng::new(seed).fork(t).
+    let mut ref_one = Vec::new();
+    let mut ref_opt = Vec::new();
+    for t in 0..rounds {
+        ref_one.push(ws.onestep_trial(&g, r, rho, &mut root.fork(t as u64)));
+        ref_opt.push(ws.optimal_trial(&g, r, &opts, Some(rho), &mut root.fork(t as u64)));
+    }
+
+    let body = |decoder: &str| {
+        format!(
+            "{{\"cmd\":\"decode\",\"scheme\":\"bgc\",\"k\":{k},\"n\":{n},\"s\":{s},\"r\":{r},\
+             \"rounds\":{rounds},\"decoder\":\"{decoder}\",\"assign_seed\":\"11\",\
+             \"seed\":\"42\"}}"
+        )
+    };
+    let errs_of = |reply: &str| -> Vec<f64> {
+        let parsed = Json::parse(reply).expect("reply JSON");
+        assert!(matches!(parsed.get("ok"), Ok(Json::Bool(true))), "decode failed: {reply}");
+        parsed
+            .get("errs")
+            .expect("errs")
+            .as_arr()
+            .expect("errs array")
+            .iter()
+            .map(|e| e.as_f64().expect("err"))
+            .collect()
+    };
+
+    for width_flags in [&[][..], &["--panel-width", "3"][..]] {
+        let server = Server::start_with(width_flags);
+        let mut conn = server.connect();
+        let one = errs_of(&request(&mut conn, &body("onestep")));
+        let opt = errs_of(&request(&mut conn, &body("optimal")));
+        assert_eq!(one.len(), rounds);
+        assert_eq!(opt.len(), rounds);
+        for t in 0..rounds {
+            assert_eq!(
+                one[t].to_bits(),
+                ref_one[t].to_bits(),
+                "one-step round {t} (flags {width_flags:?}) differs from scalar decode"
+            );
+            assert_eq!(
+                opt[t].to_bits(),
+                ref_opt[t].to_bits(),
+                "optimal round {t} (flags {width_flags:?}) differs from scalar decode"
+            );
+        }
+        server.shutdown();
+    }
 }
 
 #[test]

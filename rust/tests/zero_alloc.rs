@@ -360,6 +360,59 @@ fn panel_trial_loop_is_allocation_free_after_warmup() {
     assert_eq!(allocs, 0, "ragged panel tail allocated {allocs} times");
 }
 
+/// The fused redraw panels (PR 9): after `reserve_redraw` has sized
+/// the per-lane assignment scratch, the straggler buffers, and the
+/// lane-strided coverage panel, a steady-state loop of
+/// W-redraw-trials-per-call fused panels — fresh G per lane, one
+/// batched err₁ sweep — performs zero heap allocations, for both the
+/// uniform and the latency straggler models, including ragged tails.
+#[test]
+fn redraw_panel_loop_is_allocation_free_after_reserve() {
+    use gradcode::decode::PanelWorkspace;
+    use gradcode::stragglers::{
+        DeadlinePolicy, LatencyModel, LatencyStragglers, StragglerModel, UniformStragglers,
+    };
+    let (k, s, r) = (60usize, 6usize, 45usize);
+    let rho = k as f64 / (r as f64 * s as f64);
+    let code = Scheme::Bgc.build(k, k, s);
+    let uniform = UniformStragglers::new(0.25);
+    let pareto = LatencyModel::Pareto { scale: 0.05, shape: 1.5 };
+    let fastest = LatencyStragglers { model: pareto, policy: DeadlinePolicy::FastestR(r) };
+    let models: [(&str, &dyn StragglerModel); 2] =
+        [("uniform", &uniform), ("latency/fastest-r", &fastest)];
+
+    for (name, model) in models {
+        let w = 4usize;
+        let mut pw = PanelWorkspace::new(w);
+        pw.reserve_redraw(k, k, s);
+        let root = Rng::new(71);
+        let mut out = vec![0.0f64; w];
+
+        let mut warmup_sum = 0.0;
+        for p in 0..3u64 {
+            pw.onestep_redraw_panel_with(code.as_ref(), model, rho, &root, p * w as u64, w, &mut out);
+            warmup_sum += out[0];
+        }
+        assert!(warmup_sum.is_finite());
+
+        let before = allocations_on_this_thread();
+        let mut sum = 0.0;
+        for p in 3..103u64 {
+            pw.onestep_redraw_panel_with(code.as_ref(), model, rho, &root, p * w as u64, w, &mut out);
+            sum += out[0];
+        }
+        let allocs = allocations_on_this_thread() - before;
+        assert!(sum.is_finite() && sum >= 0.0);
+        assert_eq!(allocs, 0, "{name}: steady-state redraw panel loop allocated {allocs} times");
+
+        // Ragged tail: fewer lanes than width reuses the same buffers.
+        let before = allocations_on_this_thread();
+        pw.onestep_redraw_panel_with(code.as_ref(), model, rho, &root, 500, 3, &mut out[..3]);
+        let allocs = allocations_on_this_thread() - before;
+        assert_eq!(allocs, 0, "{name}: ragged redraw panel tail allocated {allocs} times");
+    }
+}
+
 /// The incremental anytime spine (PR 8): after `reserve_redraw`, the
 /// arrival-ordered per-survivor update loop — redraw G, draw
 /// stragglers, sort the arrival order, feed survivors one at a time
