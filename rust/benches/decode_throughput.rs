@@ -805,29 +805,41 @@ fn main() {
     // daemon binary so the number includes the real socket path.
     {
         use gradcode::coordinator::DecoderKind;
-        use gradcode::load::{run_load, Arrival, LoadConfig};
+        use gradcode::load::{run_load, Arrival, LoadConfig, Workload};
         use gradcode::serve::{frame, DecodeRequest};
         use std::io::BufRead;
 
         let (requests, rounds) = if common::quick() { (8usize, 16usize) } else { (32, 64) };
-        let mut child = std::process::Command::new(bin)
-            .args(["serve", "--addr", "127.0.0.1:0"])
-            .stdout(std::process::Stdio::piped())
-            .stderr(std::process::Stdio::null())
-            .spawn()
-            .expect("spawning repro serve");
-        let stdout = child.stdout.take().expect("daemon stdout");
-        let line = std::io::BufReader::new(stdout)
-            .lines()
-            .next()
-            .expect("daemon readiness line")
-            .expect("utf-8 readiness line");
-        let addr = line.strip_prefix("listening on ").expect("readiness line").to_string();
 
-        let cfg = LoadConfig {
-            addr: addr.clone(),
+        let spawn_daemon = |session_loop: &str| {
+            let mut child = std::process::Command::new(bin)
+                .args(["serve", "--addr", "127.0.0.1:0", "--serve-threads", session_loop])
+                .stdout(std::process::Stdio::piped())
+                .stderr(std::process::Stdio::null())
+                .spawn()
+                .expect("spawning repro serve");
+            let stdout = child.stdout.take().expect("daemon stdout");
+            let line = std::io::BufReader::new(stdout)
+                .lines()
+                .next()
+                .expect("daemon readiness line")
+                .expect("utf-8 readiness line");
+            let addr =
+                line.strip_prefix("listening on ").expect("readiness line").to_string();
+            (child, addr)
+        };
+        let shutdown = |mut child: std::process::Child, addr: &str| {
+            // Graceful shutdown so every record reflects a clean exit.
+            let mut conn = std::net::TcpStream::connect(addr).expect("shutdown connection");
+            frame::write_frame(&mut conn, "{\"cmd\":\"shutdown\"}").expect("shutdown frame");
+            let _ = frame::read_frame(&mut conn);
+            let _ = child.wait();
+        };
+        let make_cfg = |addr: &str, concurrency: usize, pipeline: usize| LoadConfig {
+            addr: addr.to_string(),
             requests,
-            concurrency: 4,
+            concurrency,
+            pipeline,
             arrival: Arrival::Closed,
             seed: 2017,
             slo_p99_ms: 0.0,
@@ -843,8 +855,11 @@ fn main() {
                 seed: 0,
                 prefix: None,
             },
+            workload: Workload::Fixed,
         };
-        let outcome = run_load(&cfg).expect("load run against the daemon");
+
+        let (child, addr) = spawn_daemon("reactor");
+        let outcome = run_load(&make_cfg(&addr, 4, 1)).expect("load run against the daemon");
         println!(
             "bench serve/load/one-step-sustained/k1000              {:.0} rounds/s \
              ({} requests x {} rounds over {:.3} s)",
@@ -862,11 +877,52 @@ fn main() {
             decodes_per_sec: outcome.rounds_per_sec,
         });
 
-        // Graceful shutdown so the record reflects a clean daemon exit.
-        let mut conn = std::net::TcpStream::connect(&addr).expect("shutdown connection");
-        frame::write_frame(&mut conn, "{\"cmd\":\"shutdown\"}").expect("shutdown frame");
-        let _ = frame::read_frame(&mut conn);
-        let _ = child.wait();
+        // PR 10 acceptance records: rounds/sec over 2 connections as
+        // the per-connection pipeline depth grows. Depth 1 is the
+        // lockstep baseline; deeper pipelines keep the daemon's worker
+        // pool busy while replies are still in flight. The legacy
+        // thread-per-connection loop at depth 1 anchors the comparison.
+        for depth in [1usize, 8, 32] {
+            let outcome =
+                run_load(&make_cfg(&addr, 2, depth)).expect("pipelined load run");
+            println!(
+                "bench serve/pipelined-sustained/depth{depth:<2}                 {:.0} rounds/s \
+                 ({} requests x {} rounds over {:.3} s)",
+                outcome.rounds_per_sec, requests, rounds, outcome.elapsed
+            );
+            records.push(DecodeBenchRecord {
+                label: format!("serve/pipelined-sustained/depth{depth}"),
+                scheme: "FRC".to_string(),
+                k: k1,
+                n: k1,
+                s: s1,
+                r: r1,
+                seed: 2017,
+                ns_per_decode: 1e9 * outcome.elapsed / outcome.total_rounds as f64,
+                decodes_per_sec: outcome.rounds_per_sec,
+            });
+        }
+        shutdown(child, &addr);
+
+        let (child, addr) = spawn_daemon("legacy");
+        let outcome = run_load(&make_cfg(&addr, 2, 1)).expect("legacy load run");
+        println!(
+            "bench serve/pipelined-sustained/legacy-depth1          {:.0} rounds/s \
+             ({} requests x {} rounds over {:.3} s)",
+            outcome.rounds_per_sec, requests, rounds, outcome.elapsed
+        );
+        records.push(DecodeBenchRecord {
+            label: "serve/pipelined-sustained/legacy-depth1".to_string(),
+            scheme: "FRC".to_string(),
+            k: k1,
+            n: k1,
+            s: s1,
+            r: r1,
+            seed: 2017,
+            ns_per_decode: 1e9 * outcome.elapsed / outcome.total_rounds as f64,
+            decodes_per_sec: outcome.rounds_per_sec,
+        });
+        shutdown(child, &addr);
     }
 
     common::write_decode_bench_json(&records);

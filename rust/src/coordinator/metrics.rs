@@ -202,6 +202,16 @@ pub struct ServeMetrics {
     pub jobs: AtomicU64,
     /// Connections accepted.
     pub connections: AtomicU64,
+    /// Requests accepted but not yet answered — a gauge, not a
+    /// counter: incremented when a frame parses as a request,
+    /// decremented once its reply is queued for the socket. Under
+    /// pipelining this is the aggregate in-flight depth.
+    pub inflight: AtomicU64,
+    /// Reactor `epoll_wait` returns. Stays near zero while the daemon
+    /// is idle (level-triggered interest is deregistered when there is
+    /// nothing to do), so a busy-spinning reactor shows up as this
+    /// counter running away between scrapes.
+    pub wakeups: AtomicU64,
     latency: Mutex<LatencyHistogram>,
 }
 
@@ -232,6 +242,22 @@ impl ServeMetrics {
         self.connections.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A request was accepted (parsed off the wire) and is now in
+    /// flight.
+    pub fn inflight_inc(&self) {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The in-flight request's reply has been queued for its socket.
+    pub fn inflight_dec(&self) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// One reactor `epoll_wait` return.
+    pub fn observe_wakeup(&self) {
+        self.wakeups.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// A point-in-time copy of the latency histogram.
     pub fn latency_snapshot(&self) -> LatencyHistogram {
         self.latency.lock().expect("latency histogram poisoned").clone()
@@ -248,6 +274,8 @@ impl ServeMetrics {
             ("gradcode_errors_total", self.errors.load(Ordering::Relaxed)),
             ("gradcode_rounds_total", self.rounds.load(Ordering::Relaxed)),
             ("gradcode_jobs_total", self.jobs.load(Ordering::Relaxed)),
+            ("gradcode_inflight_requests", self.inflight.load(Ordering::Relaxed)),
+            ("gradcode_reactor_wakeups_total", self.wakeups.load(Ordering::Relaxed)),
             ("gradcode_request_latency_count", lat.count()),
             ("gradcode_request_latency_p50_us", lat.quantile_ns(0.50) / 1_000),
             ("gradcode_request_latency_p99_us", lat.quantile_ns(0.99) / 1_000),
@@ -365,12 +393,20 @@ mod tests {
         m.observe_error();
         m.add_rounds(32);
         m.observe_job();
+        m.inflight_inc();
+        m.inflight_inc();
+        m.inflight_dec();
+        m.observe_wakeup();
+        m.observe_wakeup();
+        m.observe_wakeup();
         let text = m.render();
         assert!(text.contains("gradcode_connections_total 1\n"), "{text}");
         assert!(text.contains("gradcode_requests_total 2\n"), "{text}");
         assert!(text.contains("gradcode_errors_total 1\n"), "{text}");
         assert!(text.contains("gradcode_rounds_total 32\n"), "{text}");
         assert!(text.contains("gradcode_jobs_total 1\n"), "{text}");
+        assert!(text.contains("gradcode_inflight_requests 1\n"), "{text}");
+        assert!(text.contains("gradcode_reactor_wakeups_total 3\n"), "{text}");
         assert!(text.contains("gradcode_request_latency_count 2\n"), "{text}");
     }
 }

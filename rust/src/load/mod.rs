@@ -2,21 +2,41 @@
 //! `repro serve` daemon.
 //!
 //! The generator fires `requests` decode requests at the daemon over
-//! `concurrency` persistent connections and produces two artifacts:
+//! `concurrency` persistent connections, keeping up to `pipeline`
+//! requests in flight per connection, and produces two artifacts:
 //!
 //! - a **replay** (stdout): one CSV row per request with its derived
 //!   seed and error-sequence summary, plus a log2 histogram of the
 //!   per-request mean errors. Request `i` always carries seed
 //!   `root.fork(i).next_u64()` and the server decodes round `t` of
 //!   seed `w` from `Rng::new(w).fork(t)`, so the replay is a pure
-//!   function of `(seed, template)` — byte-identical across runs,
-//!   concurrency levels, and arrival processes. Diffing two replays is
-//!   the end-to-end regression check for the whole serve path.
+//!   function of `(seed, workload)` — byte-identical across runs,
+//!   concurrency levels, arrival processes, and pipeline depths.
+//!   Diffing two replays is the end-to-end regression check for the
+//!   whole serve path.
 //! - a **report** (stderr): latency quantiles (p50/p99/p999/max) from
 //!   a [`LatencyHistogram`], throughput in requests/s and decode
 //!   rounds/s, and a PASS/FAIL verdict against an optional p99 SLO.
 //!   This half is timing and *not* reproducible — which is exactly why
 //!   it is kept out of the replay bytes.
+//!
+//! **Pipelining.** Every request carries an `"id"` (its request index,
+//! as a decimal string); the daemon echoes the id in the reply, so a
+//! worker can keep `pipeline` requests outstanding and match replies
+//! in whatever order the server completes them. Depth 1 degenerates to
+//! the classic lockstep request/reply loop. Because replies are pure
+//! functions of their requests, the replay bytes cannot depend on
+//! completion order.
+//!
+//! **Workloads.** The default workload fires one fixed template per
+//! request. `--workload latparam` instead cycles request `i` through
+//! the `latparam` study's template grid
+//! ([`crate::sim::scenario::latparam_models`]): one decode template
+//! per (sweep arm, scheme, parameter point), with each template's `r`
+//! set to the survivor count the swept latency model is expected to
+//! deliver by the fixed deadline. The grid is a deterministic function
+//! of the base latency model, so the workload is as reproducible as
+//! the fixed template.
 //!
 //! Arrival processes: `closed` (fire as fast as replies come back),
 //! `uniform:GAP_MS` (fixed think time per worker), `poisson:RATE`
@@ -24,7 +44,14 @@
 //! evenly across workers). Gap draws come from per-worker forks
 //! disjoint from the per-request seed streams, so the arrival process
 //! never perturbs the replay.
+//!
+//! Connections are dialed lazily — a worker opens its socket when its
+//! first request is ready to leave, with a bounded exponential-backoff
+//! retry window — so a daemon that is still binding its listener (or
+//! briefly over its accept backlog) delays the run instead of failing
+//! it on one `ECONNREFUSED`.
 
+use std::collections::HashMap;
 use std::io::BufWriter;
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -33,7 +60,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::LatencyHistogram;
 use crate::serve::frame;
+use crate::serve::protocol;
 use crate::serve::{DecodeRequest, Request};
+use crate::sim::figures::FIG_SCHEMES;
+use crate::sim::scenario::{
+    latparam_deadline, latparam_expected_r, latparam_models, LATPARAM_ARMS,
+};
+use crate::stragglers::LatencyModel;
 use crate::util::{Json, Rng};
 
 /// When the next request leaves a worker.
@@ -68,6 +101,19 @@ impl Arrival {
     }
 }
 
+/// Which decode template each request carries.
+#[derive(Clone, Debug)]
+pub enum Workload {
+    /// Every request fires the one configured template.
+    Fixed,
+    /// The standing latency-parameter workload: request `i` cycles
+    /// through the `latparam` study's template grid built from `base`
+    /// (one template per sweep arm x scheme x parameter point, `r` set
+    /// from the swept model's expected survivors at the fixed
+    /// deadline).
+    Latparam { base: LatencyModel },
+}
+
 /// One load run's shape.
 #[derive(Clone, Debug)]
 pub struct LoadConfig {
@@ -75,6 +121,8 @@ pub struct LoadConfig {
     pub addr: String,
     pub requests: usize,
     pub concurrency: usize,
+    /// Max requests in flight per connection (1 = lockstep).
+    pub pipeline: usize,
     pub arrival: Arrival,
     /// Root seed: derives every per-request seed and every arrival gap.
     pub seed: u64,
@@ -83,7 +131,11 @@ pub struct LoadConfig {
     /// The decode request fired on every arrival (its `seed` field is
     /// overwritten per request; `assign_seed` stays fixed, so all
     /// requests share one memoized standing assignment server-side).
+    /// Under [`Workload::Latparam`] this is the grid's base template:
+    /// its `k`, `s`, `rounds`, `decoder`, and `assign_seed` carry over
+    /// to every grid point, while `scheme`, `n`, and `r` vary.
     pub template: DecodeRequest,
+    pub workload: Workload,
 }
 
 /// What a load run produced.
@@ -113,42 +165,125 @@ struct WorkerOutput {
     latency: LatencyHistogram,
 }
 
-fn send_request(stream: &mut TcpStream, req: &Request) -> Result<Json> {
-    {
-        let mut w = BufWriter::new(&mut *stream);
-        frame::write_frame(&mut w, &req.to_json().write()).context("sending request frame")?;
+/// The per-request decode templates of a workload. Request `i` fires
+/// template `i % len`, so the mapping is independent of concurrency
+/// and pipeline depth.
+fn request_templates(cfg: &LoadConfig) -> Vec<DecodeRequest> {
+    match &cfg.workload {
+        Workload::Fixed => vec![cfg.template.clone()],
+        Workload::Latparam { base } => {
+            let deadline = latparam_deadline(base);
+            let k = cfg.template.k;
+            let mut out = Vec::new();
+            for &arm in &LATPARAM_ARMS {
+                for &scheme in &FIG_SCHEMES {
+                    for (_param, swept) in latparam_models(arm, base) {
+                        let mut t = cfg.template.clone();
+                        t.scheme = scheme;
+                        // The study's geometry: square code, survivors
+                        // from the swept model's CDF at the deadline.
+                        t.n = k;
+                        t.r = latparam_expected_r(&swept, deadline, k);
+                        t.prefix = None;
+                        out.push(t);
+                    }
+                }
+            }
+            out
+        }
     }
-    let body = frame::read_frame(stream)
-        .map_err(|e| anyhow::anyhow!("reading reply frame: {e}"))?;
-    Json::parse(&body).context("parsing reply frame")
 }
 
-fn worker(cfg: &LoadConfig, t: usize, c: usize, root: &Rng) -> Result<WorkerOutput> {
-    let mut stream = TcpStream::connect(&cfg.addr)
-        .with_context(|| format!("worker {t}: connecting to {}", cfg.addr))?;
-    stream.set_nodelay(true).ok();
+/// Bounded-retry dial. Workers connect lazily (first send, not worker
+/// start), and a listener that is not accepting yet gets an
+/// exponential-backoff window of `patience` before the run fails.
+fn connect_with_retry(addr: &str, t: usize, patience: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + patience;
+    let mut delay = Duration::from_millis(5);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                stream.set_nodelay(true).ok();
+                return Ok(stream);
+            }
+            Err(e) => {
+                if Instant::now() + delay >= deadline {
+                    return Err(e).with_context(|| format!("worker {t}: connecting to {addr}"));
+                }
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_millis(250));
+            }
+        }
+    }
+}
+
+/// How long a worker keeps retrying its initial dial.
+const CONNECT_PATIENCE: Duration = Duration::from_secs(5);
+
+/// One request awaiting its reply.
+struct Pending {
+    index: usize,
+    seed: u64,
+    start: Instant,
+}
+
+fn worker(
+    cfg: &LoadConfig,
+    templates: &[DecodeRequest],
+    t: usize,
+    c: usize,
+    root: &Rng,
+) -> Result<WorkerOutput> {
+    let depth = cfg.pipeline.max(1);
     // Gap stream disjoint from per-request seed forks (those use
     // indices 0..requests; requests is bounded far below u64::MAX - c).
     let mut gaps = root.fork(u64::MAX - t as u64);
     let mut results = Vec::new();
     let mut latency = LatencyHistogram::new();
-    let mut i = t;
-    while i < cfg.requests {
-        match cfg.arrival {
-            Arrival::Closed => {}
-            Arrival::Uniform { gap_ms } => std::thread::sleep(Duration::from_millis(gap_ms)),
-            Arrival::Poisson { rate } => {
-                let gap_s = gaps.exp(rate / c as f64);
-                std::thread::sleep(Duration::from_secs_f64(gap_s.min(60.0)));
+    // Lazily dialed: no socket until the first request is ready.
+    let mut stream: Option<TcpStream> = None;
+    let mut outstanding: HashMap<u64, Pending> = HashMap::new();
+    let mut next = t;
+    while next < cfg.requests || !outstanding.is_empty() {
+        // Fill the pipeline window, then block on one reply.
+        while next < cfg.requests && outstanding.len() < depth {
+            match cfg.arrival {
+                Arrival::Closed => {}
+                Arrival::Uniform { gap_ms } => std::thread::sleep(Duration::from_millis(gap_ms)),
+                Arrival::Poisson { rate } => {
+                    let gap_s = gaps.exp(rate / c as f64);
+                    std::thread::sleep(Duration::from_secs_f64(gap_s.min(60.0)));
+                }
             }
+            let i = next;
+            next += c;
+            let seed = root.fork(i as u64).next_u64();
+            let mut req = templates[i % templates.len()].clone();
+            req.seed = seed;
+            if stream.is_none() {
+                stream = Some(connect_with_retry(&cfg.addr, t, CONNECT_PATIENCE)?);
+            }
+            let conn = stream.as_mut().expect("just connected");
+            let body = protocol::with_id(Request::Decode(req).to_json(), Some(i as u64)).write();
+            {
+                let mut w = BufWriter::new(&mut *conn);
+                frame::write_frame(&mut w, &body)
+                    .with_context(|| format!("sending request {i}"))?;
+            }
+            outstanding.insert(i as u64, Pending { index: i, seed, start: Instant::now() });
         }
-        let seed = root.fork(i as u64).next_u64();
-        let mut req = cfg.template.clone();
-        req.seed = seed;
-        let start = Instant::now();
-        let reply = send_request(&mut stream, &Request::Decode(req))
-            .with_context(|| format!("request {i}"))?;
-        latency.record_ns(start.elapsed().as_nanos() as u64);
+        let conn = stream.as_mut().expect("in-flight requests imply a connection");
+        let body = frame::read_frame(conn)
+            .map_err(|e| anyhow::anyhow!("reading reply frame: {e}"))?;
+        let reply = Json::parse(&body).context("parsing reply frame")?;
+        let id = protocol::request_id(&reply)
+            .context("reply id")?
+            .ok_or_else(|| anyhow::anyhow!("reply carries no id: {}", reply.write()))?;
+        let Some(p) = outstanding.remove(&id) else {
+            bail!("unsolicited reply id {id} (never sent or already answered)");
+        };
+        latency.record_ns(p.start.elapsed().as_nanos() as u64);
+        let i = p.index;
         let ok = matches!(reply.get("ok"), Ok(Json::Bool(true)));
         if !ok {
             let msg = reply
@@ -171,8 +306,7 @@ fn worker(cfg: &LoadConfig, t: usize, c: usize, root: &Rng) -> Result<WorkerOutp
                 cfg.template.rounds
             );
         }
-        results.push(RequestResult { index: i, seed, errs });
-        i += c;
+        results.push(RequestResult { index: i, seed: p.seed, errs });
     }
     Ok(WorkerOutput { results, latency })
 }
@@ -199,6 +333,16 @@ fn render_replay(cfg: &LoadConfig, results: &[RequestResult]) -> String {
         // Only prefixed templates emit this line, so prefix-free
         // replays stay byte-identical to pre-prefix builds.
         let _ = writeln!(out, "# anytime prefix={p} (first {p} arrivals of each round's draw)");
+    }
+    if let Workload::Latparam { base } = &cfg.workload {
+        // Likewise latparam-only, so default-workload replays keep
+        // their exact historical bytes.
+        let _ = writeln!(
+            out,
+            "# workload latparam: base={base:?} deadline={:.6e} templates={}",
+            latparam_deadline(base),
+            2 * FIG_SCHEMES.len() * 18,
+        );
     }
     out.push_str("request,seed,mean_err,min_err,max_err,first_err,last_err\n");
     let mut hist = std::collections::BTreeMap::new();
@@ -233,14 +377,19 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadOutcome> {
     if cfg.requests == 0 {
         bail!("--requests must be at least 1");
     }
+    if cfg.pipeline == 0 {
+        bail!("--pipeline must be at least 1");
+    }
     let c = cfg.concurrency.clamp(1, cfg.requests);
+    let templates = request_templates(cfg);
     let root = Rng::new(cfg.seed);
     let start = Instant::now();
     let outputs: Vec<Result<WorkerOutput>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..c)
             .map(|t| {
                 let root = root.clone();
-                scope.spawn(move || worker(cfg, t, c, &root))
+                let templates = &templates;
+                scope.spawn(move || worker(cfg, templates, t, c, &root))
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("load worker panicked")).collect()
@@ -277,8 +426,13 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadOutcome> {
     let mut report = String::new();
     let _ = writeln!(
         report,
-        "load: {} requests x {} rounds over {} connection(s), arrival {:?}, seed {}",
-        cfg.requests, cfg.template.rounds, c, cfg.arrival, cfg.seed
+        "load: {} requests x {} rounds over {} connection(s), pipeline {}, arrival {:?}, seed {}",
+        cfg.requests,
+        cfg.template.rounds,
+        c,
+        cfg.pipeline.max(1),
+        cfg.arrival,
+        cfg.seed
     );
     let _ = writeln!(
         report,
@@ -314,6 +468,8 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadOutcome> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codes::Scheme;
+    use crate::coordinator::DecoderKind;
 
     #[test]
     fn arrival_parse_accepts_the_three_processes() {
@@ -333,5 +489,84 @@ mod tests {
         assert_eq!(log2_bucket(3.9), 1);
         assert_eq!(log2_bucket(0.0), -1023);
         assert_eq!(log2_bucket(1e-3), -10);
+    }
+
+    fn test_cfg(workload: Workload) -> LoadConfig {
+        LoadConfig {
+            addr: "127.0.0.1:0".into(),
+            requests: 8,
+            concurrency: 2,
+            pipeline: 1,
+            arrival: Arrival::Closed,
+            seed: 11,
+            slo_p99_ms: 0.0,
+            template: DecodeRequest {
+                scheme: Scheme::Frc,
+                k: 20,
+                n: 20,
+                s: 4,
+                r: 16,
+                rounds: 3,
+                decoder: DecoderKind::OneStep,
+                assign_seed: 11,
+                seed: 0,
+                prefix: None,
+            },
+            workload,
+        }
+    }
+
+    #[test]
+    fn latparam_workload_builds_the_full_template_grid() {
+        let base = LatencyModel::Pareto { scale: 0.05, shape: 1.5 };
+        let cfg = test_cfg(Workload::Latparam { base });
+        let templates = request_templates(&cfg);
+        // 2 arms x 3 schemes x 18 parameter points, cycling.
+        assert_eq!(templates.len(), 2 * 3 * 18);
+        let deadline = latparam_deadline(&base);
+        for t in &templates {
+            assert_eq!(t.k, 20);
+            assert_eq!(t.n, 20);
+            assert_eq!(t.s, 4);
+            assert_eq!(t.rounds, 3);
+            assert!((1..=t.n).contains(&t.r));
+            assert!(t.prefix.is_none());
+        }
+        // Templates vary along the sweep: the heavy-tail end of the
+        // pareto-shape arm admits fewer survivors than the light end.
+        let models = latparam_models("pareto-shape", &base);
+        assert_eq!(templates[0].r, latparam_expected_r(&models[0].1, deadline, 20));
+        assert!(templates[0].r < templates[17].r);
+        // The fixed workload is a single template, unchanged.
+        assert_eq!(request_templates(&test_cfg(Workload::Fixed)).len(), 1);
+    }
+
+    #[test]
+    fn connect_retries_until_a_late_listener_binds() {
+        // Reserve an ephemeral port, release it, and bind it again
+        // from another thread only after a delay — the shape of the
+        // `repro load`-beats-the-daemon race this retry loop absorbs.
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let binder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            let listener = std::net::TcpListener::bind(addr).unwrap();
+            listener.accept().unwrap();
+        });
+        let start = Instant::now();
+        let stream = connect_with_retry(&addr.to_string(), 0, Duration::from_secs(10)).unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(100), "must actually have waited");
+        drop(stream);
+        binder.join().unwrap();
+
+        // A listener that never shows up fails within the patience
+        // bound instead of hanging.
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let dead = probe.local_addr().unwrap();
+        drop(probe);
+        let start = Instant::now();
+        assert!(connect_with_retry(&dead.to_string(), 0, Duration::from_millis(200)).is_err());
+        assert!(start.elapsed() < Duration::from_secs(5));
     }
 }

@@ -30,7 +30,8 @@
 //! repro ablation   --study rho      rho|rbgc|lsqr|normalization
 //!                  --trials 500  --seed 2017  --k 100  --s 10
 //!                  --threads auto   --stragglers uniform
-//! repro scenario   --stragglers pareto:0.02,1.5  latency model (required
+//! repro scenario   --study tta      tta|tta3|latparam
+//!                  --stragglers pareto:0.02,1.5  latency model (required
 //!                                   family: shifted-exp|pareto|bimodal)
 //!                  --trials 500  --seed 2017  --k 100  --s 10
 //!                  --threads auto
@@ -38,7 +39,12 @@
 //!                                   gather wall-clock vs err1, per
 //!                                   scheme, for both deadline-policy
 //!                                   arms (fastest-r / fixed quantile
-//!                                   deadline) across the delta grid
+//!                                   deadline) across the delta grid;
+//!                                   --study latparam instead fixes the
+//!                                   deadline at the base model's 80th
+//!                                   percentile and sweeps the latency
+//!                                   parameters (Pareto tail index /
+//!                                   shifted-exp rate arms)
 //! repro shard      --fig F | --table T | --ablation STUDY | --scenario STUDY
 //!                  --shard-id I     this shard's index (required, 0-based)
 //!                  --num-shards N   total shards (required)
@@ -61,6 +67,7 @@
 //! repro serve      --addr 127.0.0.1:7117  bind address (port 0 =
 //!                                   ephemeral; the bound address is
 //!                                   printed as `listening on ADDR`)
+//!                  --serve-threads reactor  reactor|legacy session loop
 //!                                   decode/experiment-job daemon:
 //!                                   length-prefixed JSON frames with
 //!                                   hot per-connection decode
@@ -68,15 +75,27 @@
 //!                                   assignments, the fan-out job
 //!                                   scheduler (`job` requests), and
 //!                                   HTTP GET /metrics counters on the
-//!                                   same port
+//!                                   same port; the default reactor is
+//!                                   an epoll event loop answering
+//!                                   pipelined requests in completion
+//!                                   order and draining in-flight work
+//!                                   on shutdown; legacy keeps the old
+//!                                   thread-per-connection loop
 //! repro load       --addr 127.0.0.1:7117  daemon to fire at
 //!                  --requests 64    total decode requests
 //!                  --concurrency 4  persistent connections
+//!                  --pipeline 1     requests in flight per connection
+//!                                   (replies matched by echoed id)
+//!                  --workload fixed fixed | latparam (cycle the latparam
+//!                                   study's 108-template grid; base
+//!                                   model from --stragglers, default
+//!                                   pareto:0.02,1.5)
 //!                  --arrival closed closed | uniform:GAP_MS | poisson:RATE
 //!                  --seed 2017      root seed: derives every request
 //!                                   seed, so the stdout replay CSV is
 //!                                   byte-identical per seed at any
-//!                                   concurrency/arrival setting
+//!                                   concurrency/arrival/pipeline
+//!                                   setting
 //!                  --scheme frc --k 100 --n K --s 10 --delta 0.2
 //!                  --r (1-delta)*n  survivors per decode round
 //!                  --rounds 8       decode rounds per request
@@ -139,10 +158,10 @@ use gradcode::adversary::{
 use gradcode::codes::Scheme;
 use gradcode::coordinator::{DecoderKind, ModelKind};
 use gradcode::decode::OptimalDecoder;
-use gradcode::load::{run_load, Arrival, LoadConfig};
+use gradcode::load::{run_load, Arrival, LoadConfig, Workload};
 use gradcode::runtime::{Backend, EnginePool, LinearDims, Manifest, MlpDims};
 use gradcode::serve::{
-    run_fanout, serve, ArtifactDir, DecodeRequest, FanoutPlan, ServeConfig,
+    run_fanout, serve, ArtifactDir, DecodeRequest, FanoutPlan, ServeConfig, SessionLoop,
 };
 use gradcode::sim::shard::{
     ABLATION_IDS, SCENARIO_IDS, TABLES_WITHOUT_SCENARIO, TABLES_WITH_S, TABLE_IDS,
@@ -344,14 +363,15 @@ fn run() -> CliResult<()> {
             cmd_run(&args)
         }
         "serve" => {
-            args.finish(&["addr", "panel-width"], false)?;
+            args.finish(&["addr", "panel-width", "serve-threads"], false)?;
             cmd_serve(&args)
         }
         "load" => {
             args.finish(
                 &[
-                    "addr", "requests", "concurrency", "arrival", "seed", "scheme", "k", "n",
-                    "s", "delta", "r", "rounds", "decoder", "prefix", "slo-ms",
+                    "addr", "requests", "concurrency", "pipeline", "arrival", "seed", "scheme",
+                    "k", "n", "s", "delta", "r", "rounds", "decoder", "prefix", "slo-ms",
+                    "workload", "stragglers",
                 ],
                 false,
             )?;
@@ -410,7 +430,7 @@ USAGE:
                 [--panel-width W] [--stragglers SPEC]
   repro ablation --study rho|rbgc|lsqr|normalization [--trials N] [--k K]
                 [--s S] [--seed S] [--threads T] [--stragglers SPEC]
-  repro scenario [--study tta|tta3] [--stragglers SPEC] [--trials N]
+  repro scenario [--study tta|tta3|latparam] [--stragglers SPEC] [--trials N]
                 [--k K] [--s S] [--seed S] [--threads T]
                 [--target-err E] [--revise-at T --revise-to T]
                                     # time-to-accuracy curves: mean
@@ -427,7 +447,12 @@ USAGE:
                                     # early: --target-err cancels at
                                     # the first arrival with err1/k <=
                                     # E, --revise-at/--revise-to
-                                    # shorten the deadline mid-round
+                                    # shorten the deadline mid-round;
+                                    # --study latparam fixes the
+                                    # deadline (base 80th percentile)
+                                    # and sweeps the latency-model
+                                    # parameters instead: Pareto tail
+                                    # index and shifted-exp rate arms
   repro shard   --fig F|--table T|--ablation STUDY|--scenario STUDY
                 --shard-id I --num-shards N [--out FILE] [--trials N]
                 [--k K] [--s S] [--seed S] [--tmax T] [--threads T]
@@ -442,6 +467,7 @@ USAGE:
                                     # artifacts and respawns only the
                                     # missing/corrupt shards
   repro serve   [--addr ADDR] [--panel-width W]
+                [--serve-threads reactor|legacy]
                                     # decode/experiment-job daemon:
                                     # length-prefixed JSON frames, hot
                                     # per-connection decode workspaces,
@@ -449,21 +475,34 @@ USAGE:
                                     # shared fan-out job scheduler, and
                                     # HTTP GET /metrics counters on the
                                     # same port; {\"cmd\":\"shutdown\"}
-                                    # stops it
+                                    # drains in-flight requests and
+                                    # stops it; the default reactor is
+                                    # an epoll event loop (pipelined
+                                    # requests answered in completion
+                                    # order), legacy the old thread-
+                                    # per-connection loop
   repro load    [--addr ADDR] [--requests N] [--concurrency C]
+                [--pipeline D] [--workload fixed|latparam]
                 [--arrival closed|uniform:GAP_MS|poisson:RATE] [--seed S]
                 [--scheme S] [--k K] [--n N] [--s S] [--delta D] [--r R]
                 [--rounds N] [--decoder onestep|optimal] [--prefix P]
-                [--slo-ms MS]       # --prefix P decodes only the first
+                [--slo-ms MS] [--stragglers SPEC]
+                                    # --prefix P decodes only the first
                                     # P arrivals of each round (anytime
                                     # decode at the server)
                                     # seeded deterministic traffic
                                     # generator: replay CSV on stdout is
                                     # byte-identical per seed (any
-                                    # concurrency/arrival); latency
-                                    # p50/p99/p999 + throughput report
-                                    # on stderr; --slo-ms gates the
-                                    # exit status on the p99 target
+                                    # concurrency/arrival/pipeline
+                                    # depth); --pipeline D keeps D
+                                    # requests in flight per connection
+                                    # (replies matched by echoed id);
+                                    # --workload latparam cycles the
+                                    # latparam study's template grid
+                                    # (base model from --stragglers);
+                                    # latency p50/p99/p999 + throughput
+                                    # report on stderr; --slo-ms gates
+                                    # the exit status on the p99 target
   repro merge   FILE... [--out FILE]  # merge artifacts -> CSV on stdout;
                                     # with --out, fold any disjoint
                                     # subset into one partial artifact
@@ -785,7 +824,7 @@ fn cmd_scenario(args: &Args) -> CliResult<()> {
     if job.id != "tta" {
         return usage(
             "anytime rules (--target-err/--revise-at/--revise-to) apply to the one-step \
-             `tta` arms only; drop --study tta3",
+             `tta` arms only; drop --study tta3|latparam",
         );
     }
     let mut mc = MonteCarlo::new(job.trials, job.seed);
@@ -917,10 +956,15 @@ fn cmd_run(args: &Args) -> CliResult<()> {
 /// length-prefixed JSON frames — plus HTTP `GET /metrics` on the same
 /// port — until shut down. See `gradcode::serve` for the protocol.
 fn cmd_serve(args: &Args) -> CliResult<()> {
+    let loop_name = args.get("serve-threads").unwrap_or("reactor");
+    let Some(session_loop) = SessionLoop::parse(loop_name) else {
+        return usage(format!("unknown --serve-threads {loop_name:?} (reactor|legacy)"));
+    };
     let cfg = ServeConfig {
         addr: args.get("addr").unwrap_or("127.0.0.1:7117").to_string(),
         exe: std::env::current_exe().context("locating the running binary")?,
         panel_width: panel_width_flag(args)?,
+        session_loop,
     };
     serve(&cfg)?;
     Ok(())
@@ -940,6 +984,10 @@ fn cmd_load(args: &Args) -> CliResult<()> {
     let concurrency = args.usize("concurrency", 4)?;
     if concurrency == 0 {
         return usage("--concurrency must be at least 1");
+    }
+    let pipeline = args.usize("pipeline", 1)?;
+    if !(1..=1024).contains(&pipeline) {
+        return usage(format!("--pipeline {pipeline} out of range [1, 1024]"));
     }
     let arrival_spec = args.get("arrival").unwrap_or("closed");
     let arrival = match Arrival::parse(arrival_spec) {
@@ -990,10 +1038,33 @@ fn cmd_load(args: &Args) -> CliResult<()> {
         }
     };
     let seed = args.u64("seed", 2017)?;
+    let workload = match args.get("workload").unwrap_or("fixed") {
+        "fixed" => Workload::Fixed,
+        "latparam" => {
+            // The latparam grid's base model: --stragglers if given,
+            // else the same default cluster model as `repro scenario`.
+            let scenario = match args.get("stragglers") {
+                None => Scenario::parse("pareto:0.02,1.5").expect("default scenario spec parses"),
+                Some(_) => stragglers_flag(args)?,
+            };
+            let Some(base) = scenario.latency_model().copied() else {
+                return usage(
+                    "--workload latparam needs a latency straggler model: \
+                     --stragglers shifted-exp:BASE,RATE | pareto:SCALE,SHAPE | bimodal:FAST,SLOW,P",
+                );
+            };
+            Workload::Latparam { base }
+        }
+        other => return usage(format!("unknown --workload {other:?} (fixed|latparam)")),
+    };
+    if matches!(workload, Workload::Fixed) && args.get("stragglers").is_some() {
+        return usage("--stragglers only applies to --workload latparam");
+    }
     let cfg = LoadConfig {
         addr: args.get("addr").unwrap_or("127.0.0.1:7117").to_string(),
         requests,
         concurrency,
+        pipeline,
         arrival,
         seed,
         slo_p99_ms: args.f64("slo-ms", 0.0)?,
@@ -1012,6 +1083,7 @@ fn cmd_load(args: &Args) -> CliResult<()> {
             seed: 0,
             prefix,
         },
+        workload,
     };
     let outcome = run_load(&cfg)?;
     print!("{}", outcome.replay);

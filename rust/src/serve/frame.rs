@@ -111,6 +111,112 @@ pub fn write_frame(w: &mut impl Write, body: &str) -> io::Result<()> {
     w.flush()
 }
 
+/// Encode one frame into a byte vector (the reactor queues these on a
+/// connection outbox instead of writing to a blocking stream).
+pub fn encode_frame(body: &str) -> Vec<u8> {
+    debug_assert!(body.len() as u64 <= MAX_FRAME as u64, "oversized outgoing frame");
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
+/// What [`FrameDecoder::next`] produced from the buffered bytes.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Decoded {
+    /// One complete frame body.
+    Frame(String),
+    /// The first four bytes were `"GET "`: the peer is speaking HTTP
+    /// (the `/metrics` endpoint). The sniffed bytes are consumed; the
+    /// rest of the request line is still buffered — take it with
+    /// [`FrameDecoder::take_buffered`] and switch to HTTP parsing.
+    HttpGet,
+}
+
+/// Incremental frame reassembly for nonblocking sockets.
+///
+/// The blocking readers above pull exact byte counts from a stream;
+/// a readiness-driven session instead receives whatever chunk the
+/// kernel has — possibly one byte, possibly three frames and a half.
+/// `FrameDecoder` buffers those chunks ([`extend`](Self::extend)) and
+/// yields complete frames ([`next`](Self::next)) without ever blocking:
+/// `Ok(None)` means "need more bytes", never "wait".
+///
+/// Errors mirror the blocking path: an oversized prefix or a non-UTF-8
+/// body poisons the stream (the caller replies with an error frame and
+/// abandons the connection; re-synchronization is impossible). EOF
+/// handling stays with the caller: a socket close with
+/// [`buffered`](Self::buffered)` > 0` is the nonblocking analogue of
+/// [`FrameError::Truncated`].
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already consumed by yielded frames. Compacted
+    /// lazily so a byte-at-a-time dribbler costs O(1) amortized.
+    pos: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        FrameDecoder::default()
+    }
+
+    /// Buffer freshly received bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= 64 * 1024 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet yielded (a partial frame if > 0).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Drain the unconsumed buffer (used when switching to HTTP mode:
+    /// the bytes after the sniffed `"GET "` belong to the request line).
+    pub fn take_buffered(&mut self) -> Vec<u8> {
+        let rest = self.buf[self.pos..].to_vec();
+        self.buf.clear();
+        self.pos = 0;
+        rest
+    }
+
+    /// Yield the next complete frame, or `Ok(None)` if more bytes are
+    /// needed. Call in a loop after each [`extend`](Self::extend): one
+    /// chunk may complete several pipelined frames.
+    pub fn next(&mut self) -> Result<Option<Decoded>, FrameError> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < 4 {
+            return Ok(None);
+        }
+        let prefix: [u8; 4] = avail[..4].try_into().unwrap();
+        if &prefix == b"GET " {
+            self.pos += 4;
+            return Ok(Some(Decoded::HttpGet));
+        }
+        let len = u32::from_be_bytes(prefix);
+        if len > MAX_FRAME {
+            return Err(FrameError::Oversized { len });
+        }
+        let len = len as usize;
+        if avail.len() < 4 + len {
+            return Ok(None);
+        }
+        let body = avail[4..4 + len].to_vec();
+        self.pos += 4 + len;
+        match String::from_utf8(body) {
+            Ok(s) => Ok(Some(Decoded::Frame(s))),
+            Err(_) => Err(FrameError::BadUtf8),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,5 +268,76 @@ mod tests {
         buf.extend_from_slice(&[0xff, 0xfe]);
         let mut r = Cursor::new(buf);
         assert!(matches!(read_frame(&mut r), Err(FrameError::BadUtf8)));
+    }
+
+    #[test]
+    fn decoder_reassembles_a_byte_at_a_time() {
+        let wire = encode_frame("{\"cmd\":\"ping\"}");
+        let mut dec = FrameDecoder::new();
+        for (i, b) in wire.iter().enumerate() {
+            assert!(dec.next().unwrap().is_none(), "byte {i} of {}", wire.len());
+            dec.extend(std::slice::from_ref(b));
+        }
+        assert_eq!(dec.next().unwrap(), Some(Decoded::Frame("{\"cmd\":\"ping\"}".into())));
+        assert!(dec.next().unwrap().is_none());
+        assert_eq!(dec.buffered(), 0);
+    }
+
+    #[test]
+    fn decoder_yields_every_frame_in_one_chunk() {
+        let mut wire = encode_frame("{\"a\":1}");
+        wire.extend_from_slice(&encode_frame(""));
+        wire.extend_from_slice(&encode_frame("{\"b\":2}"));
+        // Trailing partial frame: prefix + half a body.
+        wire.extend_from_slice(&8u32.to_be_bytes());
+        wire.extend_from_slice(b"half");
+        let mut dec = FrameDecoder::new();
+        dec.extend(&wire);
+        assert_eq!(dec.next().unwrap(), Some(Decoded::Frame("{\"a\":1}".into())));
+        assert_eq!(dec.next().unwrap(), Some(Decoded::Frame("".into())));
+        assert_eq!(dec.next().unwrap(), Some(Decoded::Frame("{\"b\":2}".into())));
+        assert!(dec.next().unwrap().is_none());
+        assert_eq!(dec.buffered(), 8, "partial frame stays buffered");
+        dec.extend(b"body");
+        assert_eq!(dec.next().unwrap(), Some(Decoded::Frame("halfbody".into())));
+    }
+
+    #[test]
+    fn decoder_rejects_oversized_and_non_utf8() {
+        let mut dec = FrameDecoder::new();
+        dec.extend(&u32::MAX.to_be_bytes());
+        assert!(matches!(dec.next(), Err(FrameError::Oversized { len: u32::MAX })));
+
+        let mut dec = FrameDecoder::new();
+        dec.extend(&2u32.to_be_bytes());
+        dec.extend(&[0xff, 0xfe]);
+        assert!(matches!(dec.next(), Err(FrameError::BadUtf8)));
+    }
+
+    #[test]
+    fn decoder_sniffs_http_and_hands_back_the_tail() {
+        let mut dec = FrameDecoder::new();
+        dec.extend(b"GET /metrics HTTP/1.0\r\n");
+        assert_eq!(dec.next().unwrap(), Some(Decoded::HttpGet));
+        assert_eq!(dec.take_buffered(), b"/metrics HTTP/1.0\r\n");
+        assert_eq!(dec.buffered(), 0);
+    }
+
+    #[test]
+    fn decoder_compacts_without_losing_the_partial_tail() {
+        // Force the lazy-compaction path: consume > 64 KiB, leaving a
+        // partial frame straddling the compaction boundary.
+        let big = "x".repeat(40 * 1024);
+        let mut dec = FrameDecoder::new();
+        let mut wire = encode_frame(&big);
+        wire.extend_from_slice(&encode_frame(&big));
+        wire.extend_from_slice(&5u32.to_be_bytes());
+        wire.extend_from_slice(b"he");
+        dec.extend(&wire);
+        assert!(matches!(dec.next().unwrap(), Some(Decoded::Frame(_))));
+        assert!(matches!(dec.next().unwrap(), Some(Decoded::Frame(_))));
+        assert!(dec.next().unwrap().is_none());
+        dec.extend(b"llo"); // triggers drain-compaction (pos > 64 KiB)
+        assert_eq!(dec.next().unwrap(), Some(Decoded::Frame("hello".into())));
     }
 }

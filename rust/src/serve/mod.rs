@@ -1,30 +1,45 @@
 //! Serving layer: the `repro serve` daemon and its job scheduler.
 //!
-//! Four pieces, bottom-up:
+//! Five pieces, bottom-up:
 //!
 //! - [`frame`] — length-prefixed JSON framing (4-byte big-endian
 //!   prefix, 16 MiB cap, UTF-8 body) with error cases the session loop
-//!   can tell apart: clean close, truncation, oversized prefix.
+//!   can tell apart: clean close, truncation, oversized prefix. Two
+//!   readers: blocking (`read_frame`) for clients and the legacy loop,
+//!   and the resumable [`frame::FrameDecoder`] that reassembles frames
+//!   from arbitrary chunks for the nonblocking reactor.
 //! - [`protocol`] — the request/response schema. Requests are JSON
 //!   objects with a `"cmd"` key (`ping`, `decode`, `job`, `metrics`,
 //!   `shutdown`); `job` embeds a [`crate::sim::JobSpec`] via its own
 //!   `to_json`/`from_json`, so the wire format reuses the
-//!   shard-artifact format instead of inventing a second one.
+//!   shard-artifact format instead of inventing a second one. An
+//!   optional `"id"` (echoed in the reply) lets pipelined clients
+//!   match replies written in completion order.
+//! - [`reactor`] — a minimal epoll wrapper (raw glibc syscalls; the
+//!   offline vendor set has no tokio/mio/libc) plus an eventfd
+//!   [`reactor::Waker`] for worker-to-reactor completion signaling.
 //! - [`scheduler`] — the fan-out/resume/verify machinery that
 //!   `repro run --fanout` uses, extracted so the daemon schedules
 //!   `job` requests through the identical code path.
-//! - [`server`] — the accept loop, per-connection sessions with hot
-//!   [`crate::decode::DecodeWorkspace`]s, the process-wide standing-
-//!   assignment memo, and the HTTP `/metrics` counter endpoint.
+//! - [`server`] — the session loops: the default readiness-driven
+//!   reactor (nonblocking sockets, per-connection frame reassembly,
+//!   bounded worker pool, completion-order replies, draining
+//!   shutdown) and the legacy thread-per-connection loop
+//!   (`--serve-threads legacy`), both over the same handler, hot
+//!   per-connection [`crate::decode::DecodeWorkspace`]s, the
+//!   process-wide standing-assignment memo, and the HTTP `/metrics`
+//!   counter endpoint.
 //!
 //! The client side lives in [`crate::load`]: a seeded deterministic
-//! traffic generator whose replay output is byte-reproducible.
+//! traffic generator whose replay output is byte-reproducible at any
+//! concurrency, arrival process, and pipeline depth.
 
 pub mod frame;
 pub mod protocol;
+pub mod reactor;
 pub mod scheduler;
 pub mod server;
 
 pub use protocol::{DecodeRequest, Request};
 pub use scheduler::{run_fanout, ArtifactDir, FanoutPlan};
-pub use server::{serve, ServeConfig};
+pub use server::{serve, ServeConfig, SessionLoop};

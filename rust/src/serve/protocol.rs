@@ -190,6 +190,34 @@ impl Request {
     }
 }
 
+/// Parse the optional pipelining id: `"id"` as a decimal string (the
+/// seed convention — u64 exceeds f64's exact-integer range). Absent
+/// means the client is running strict request/reply turn-taking;
+/// requests without an id serialize identically to the pre-pipelining
+/// wire format, so old replays stay byte-identical.
+pub fn request_id(j: &Json) -> Result<Option<u64>> {
+    match j.opt("id") {
+        None => Ok(None),
+        Some(v) => {
+            Ok(Some(v.as_str()?.parse::<u64>().context("field \"id\"")?))
+        }
+    }
+}
+
+/// Attach the request's id to a request or reply object. The server
+/// echoes the id so a pipelined client can match replies written in
+/// completion order; an id-free request gets an id-free reply, byte
+/// for byte as before.
+pub fn with_id(j: Json, id: Option<u64>) -> Json {
+    match (j, id) {
+        (Json::Obj(mut m), Some(i)) => {
+            m.insert("id".to_string(), Json::Str(i.to_string()));
+            Json::Obj(m)
+        }
+        (j, _) => j,
+    }
+}
+
 /// Build an `{"ok": true, ...}` reply.
 pub fn ok_response(fields: Vec<(&str, Json)>) -> Json {
     let mut m = std::collections::BTreeMap::new();
@@ -284,6 +312,29 @@ mod tests {
         ] {
             assert!(Request::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn ids_parse_echo_and_stay_off_the_wire_when_absent() {
+        let bare = Json::parse(r#"{"cmd": "ping"}"#).unwrap();
+        assert_eq!(request_id(&bare).unwrap(), None);
+
+        let tagged = Json::parse(r#"{"cmd": "ping", "id": "18446744073709551615"}"#).unwrap();
+        assert_eq!(request_id(&tagged).unwrap(), Some(u64::MAX));
+        // Unknown keys are ignored by from_json, so tagging is
+        // parse-compatible with the original protocol.
+        assert_eq!(Request::from_json(&tagged).unwrap(), Request::Ping);
+
+        for bad in [r#"{"cmd": "ping", "id": 7}"#, r#"{"cmd": "ping", "id": "-1"}"#] {
+            assert!(request_id(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+
+        let reply = ok_response(vec![("pong", Json::Bool(true))]);
+        let untagged = with_id(reply.clone(), None).write();
+        assert!(!untagged.contains("\"id\""), "id-free stays id-free: {untagged}");
+        assert_eq!(untagged, reply.write(), "with_id(None) is byte-identity");
+        let tagged = with_id(reply, Some(42)).write();
+        assert!(tagged.contains("\"id\":\"42\""), "{tagged}");
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! A minimal epoll wrapper — the readiness layer under the serve
+//! daemon's event loop.
+//!
+//! The offline vendor set has no `tokio`, `mio`, or even `libc`, so
+//! this module declares the four syscall entry points it needs
+//! (`epoll_create1` / `epoll_ctl` / `epoll_wait` / `eventfd`) as
+//! `extern "C"` functions against the glibc the standard library
+//! already links. Everything else stays in std: sockets come in as
+//! [`RawFd`]s via `AsRawFd`, nonblocking mode is
+//! `TcpStream::set_nonblocking`, and fd lifetimes are owned by the
+//! std types — the [`Poller`] never closes a socket it did not open.
+//!
+//! Design points:
+//!
+//! * **Level-triggered.** Interest fires as long as the condition
+//!   holds, so a handler that drains "as much as is there" can never
+//!   strand buffered bytes; the loop cannot busy-spin because interest
+//!   is deregistered (EPOLLOUT dropped once an outbox drains) rather
+//!   than polled.
+//! * **Tokens, not pointers.** `epoll_event.data` carries a plain
+//!   `u64` connection token; the server maps tokens to state. Stale
+//!   events for a closed connection just miss the map.
+//! * **[`Waker`]** is an `eventfd` registered like any other readable
+//!   fd — worker threads finish a decode, push the reply on a
+//!   completion queue, and `wake()`; the reactor drains the eventfd
+//!   and the queue on its next wakeup.
+//!
+//! The `epoll_event` struct is `repr(packed)` only on x86-64 — the
+//! one ABI quirk in the interface (the kernel packs the 12-byte struct
+//! there; other architectures use natural alignment).
+
+use std::io;
+use std::os::fd::RawFd;
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+const EPOLL_CLOEXEC: i32 = 0x80000;
+const EFD_CLOEXEC: i32 = 0x80000;
+const EFD_NONBLOCK: i32 = 0x800;
+
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn close(fd: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+}
+
+fn check(ret: i32) -> io::Result<i32> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// One readiness event: which registration fired, and how.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: u64,
+    events: u32,
+}
+
+impl Event {
+    pub fn readable(&self) -> bool {
+        self.events & (EPOLLIN | EPOLLHUP | EPOLLRDHUP | EPOLLERR) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.events & (EPOLLOUT | EPOLLHUP | EPOLLERR) != 0
+    }
+}
+
+/// An epoll instance. Registrations are `(fd, token, interest)`;
+/// [`wait`](Self::wait) blocks until at least one fires.
+#[derive(Debug)]
+pub struct Poller {
+    epfd: RawFd,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        // SAFETY: plain syscall, no pointers.
+        let epfd = check(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+        Ok(Poller { epfd })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+        let mut ev = EpollEvent { events: interest, data: token };
+        // SAFETY: `ev` outlives the call; the kernel copies it.
+        check(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+        Ok(())
+    }
+
+    /// Register `fd` with the given interest mask (plus EPOLLRDHUP so
+    /// peer half-close surfaces as readable).
+    pub fn add(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, token, interest | EPOLLRDHUP)
+    }
+
+    /// Re-register `fd` with a new interest mask — how the server
+    /// implements backpressure (drop EPOLLIN above the in-flight cap,
+    /// add EPOLLOUT while an outbox has bytes).
+    pub fn modify(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, token, interest | EPOLLRDHUP)
+    }
+
+    /// Deregister `fd`. Must happen before the fd is closed (a closed
+    /// fd is removed by the kernel, but only once all duplicates are
+    /// gone).
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        let mut ev = EpollEvent { events: 0, data: 0 };
+        // SAFETY: the event pointer is ignored for DEL on modern
+        // kernels but must be non-null for pre-2.6.9 compatibility.
+        check(unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) })?;
+        Ok(())
+    }
+
+    /// Block until readiness (or `timeout_ms`; -1 blocks forever).
+    /// Returns the fired events.
+    pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+        const MAX_EVENTS: usize = 256;
+        let mut raw = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+        out.clear();
+        let n = loop {
+            // SAFETY: `raw` is a stack buffer of MAX_EVENTS entries.
+            let r = unsafe { epoll_wait(self.epfd, raw.as_mut_ptr(), MAX_EVENTS as i32, timeout_ms) };
+            if r >= 0 {
+                break r as usize;
+            }
+            let e = io::Error::last_os_error();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        };
+        for ev in &raw[..n] {
+            // Copy out of the possibly-packed struct field by field.
+            let (events, data) = (ev.events, ev.data);
+            out.push(Event { token: data, events });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        // SAFETY: we own epfd and close it exactly once.
+        unsafe { close(self.epfd) };
+    }
+}
+
+/// A cross-thread wakeup handle: an `eventfd` the reactor registers
+/// for EPOLLIN. Worker threads [`wake`](Self::wake) after pushing onto
+/// the completion queue; the reactor [`drain`](Self::drain)s the
+/// counter before popping, so a wake can never be lost (wake-then-pop
+/// vs push-then-wake ordering).
+#[derive(Debug)]
+pub struct Waker {
+    fd: RawFd,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        // SAFETY: plain syscall, no pointers.
+        let fd = check(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+        Ok(Waker { fd })
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Nudge the reactor. Callable from any thread; an eventfd write
+    /// is async-signal-safe and never blocks below u64::MAX - 1 pending
+    /// wakes.
+    pub fn wake(&self) {
+        let one: u64 = 1;
+        // SAFETY: 8 bytes from a live stack value; eventfd writes of
+        // size 8 are atomic.
+        unsafe { write(self.fd, (&one as *const u64).cast(), 8) };
+    }
+
+    /// Reset the counter after a readable event. Nonblocking: if
+    /// another thread's wake races in after this, the eventfd simply
+    /// reads ready again on the next `epoll_wait`.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        // SAFETY: 8-byte stack buffer; EFD_NONBLOCK means this returns
+        // EAGAIN instead of blocking when the counter is zero.
+        unsafe { read(self.fd, buf.as_mut_ptr(), 8) };
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        // SAFETY: we own fd and close it exactly once.
+        unsafe { close(self.fd) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+
+    #[test]
+    fn poller_reports_readability_by_token() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(listener.as_raw_fd(), 7, EPOLLIN).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "nothing pending yet");
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        poller.wait(&mut events, 2000).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable()), "accept readiness");
+
+        // Accepted stream: writable immediately, readable only after
+        // the peer sends.
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_nonblocking(true).unwrap();
+        poller.add(stream.as_raw_fd(), 8, EPOLLIN | EPOLLOUT).unwrap();
+        poller.wait(&mut events, 2000).unwrap();
+        let ev = events.iter().find(|e| e.token == 8).expect("stream event");
+        assert!(ev.writable() && !ev.readable());
+
+        client.write_all(b"hi").unwrap();
+        // Interest re-registration: drop EPOLLOUT, wait for the bytes.
+        poller.modify(stream.as_raw_fd(), 8, EPOLLIN).unwrap();
+        poller.wait(&mut events, 2000).unwrap();
+        let ev = events.iter().find(|e| e.token == 8).expect("stream event");
+        assert!(ev.readable() && !ev.writable());
+
+        poller.delete(stream.as_raw_fd()).unwrap();
+        poller.delete(listener.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn waker_crosses_threads_and_drains() {
+        let poller = Poller::new().unwrap();
+        let waker = std::sync::Arc::new(Waker::new().unwrap());
+        poller.add(waker.fd(), 1, EPOLLIN).unwrap();
+
+        let w = waker.clone();
+        let t = std::thread::spawn(move || w.wake());
+        let mut events = Vec::new();
+        poller.wait(&mut events, 2000).unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable()));
+        t.join().unwrap();
+
+        waker.drain();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "drained waker is quiet");
+    }
+}

@@ -1,17 +1,37 @@
-//! The `repro serve` daemon: TCP listener, per-connection sessions,
+//! The `repro serve` daemon: TCP listener, readiness-driven sessions,
 //! shared assignment memo, metrics, shutdown.
 //!
-//! One OS thread per connection. Each session owns a hot
-//! [`DecodeWorkspace`] reused across every request on that connection
-//! (steady-state decode rounds allocate nothing), plus the CSR mirror
-//! of whichever standing assignment it decoded last — switching
-//! assignments re-mirrors, staying on one does not. The standing
-//! assignments themselves are memoized process-wide behind a mutex
-//! keyed by `(scheme, k, n, s, assign_seed)`, so concurrent clients
-//! decoding the same configuration share one `Arc<CscMatrix>` instead
-//! of redrawing G per request.
+//! Two session loops share one wire protocol and one request handler:
 //!
-//! Sessions also own a [`PanelWorkspace`]: full (non-prefix) decode
+//! * **Reactor** (default): a single epoll thread
+//!   ([`super::reactor::Poller`]) owns the listener and every
+//!   connection. Sockets are nonblocking; each connection carries a
+//!   [`FrameDecoder`] that reassembles length-prefixed frames from
+//!   whatever chunks the kernel delivers, an outbox of encoded reply
+//!   frames, and its hot workspaces behind a mutex so they survive the
+//!   nonblocking boundary. Cheap requests (`ping`, `metrics`,
+//!   `shutdown`) are answered inline on the reactor thread;
+//!   `decode`/`job` work is dispatched to a bounded worker pool, so
+//!   one slow `job` cannot stall a thousand `ping`s. Replies are
+//!   written in completion order, tagged with the request's echoed
+//!   `id`. Backpressure is interest re-registration, never blocking:
+//!   EPOLLOUT is added only while an outbox has bytes, and EPOLLIN is
+//!   dropped while a connection is over its in-flight or outbox caps.
+//! * **Legacy** (`--serve-threads legacy`): the original
+//!   thread-per-connection blocking loop, kept so tests can pin that
+//!   both loops produce bit-identical replies.
+//!
+//! Each connection owns a hot [`DecodeWorkspace`] reused across every
+//! request on that connection (steady-state decode rounds allocate
+//! nothing), plus the CSR mirror of whichever standing assignment it
+//! decoded last — switching assignments re-mirrors, staying on one
+//! does not. The standing assignments themselves are memoized
+//! process-wide behind a mutex keyed by `(scheme, k, n, s,
+//! assign_seed)`, so concurrent clients decoding the same
+//! configuration share one `Arc<CscMatrix>` instead of redrawing G per
+//! request.
+//!
+//! Connections also own a [`PanelWorkspace`]: full (non-prefix) decode
 //! requests with at least `--panel-width` rounds run their rounds
 //! through the batched panel kernels instead of the round-at-a-time
 //! scalar loop. Round `t` forks stream `t` off the request seed in
@@ -29,17 +49,29 @@
 //! closes; everything else is length-prefixed JSON frames
 //! ([`super::protocol`]).
 //!
+//! **Shutdown drains.** A `shutdown` request stops the accept loop and
+//! all further reads, but every request accepted before it — on any
+//! connection — still runs to completion and has its reply flushed
+//! before the daemon exits (the legacy loop gets the same guarantee
+//! per connection from its strict in-order handling). Only clients
+//! that stop reading their replies are abandoned, after a grace
+//! period.
+//!
 //! A request that panics (a parameter combination an assignment
-//! builder asserts on) kills only its session thread — the client sees
-//! a dropped connection, the daemon keeps serving.
+//! builder asserts on) kills only its session — the client sees a
+//! dropped connection, the daemon keeps serving.
 
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -48,9 +80,38 @@ use crate::decode::{DecodeWorkspace, OneStepDecoder, PanelWorkspace, DEFAULT_PAN
 use crate::linalg::{CscMatrix, LsqrOptions};
 use crate::util::{Json, Rng};
 
-use super::frame::{self, FrameError};
-use super::protocol::{error_response, ok_response, DecodeRequest, Request};
+use super::frame::{self, Decoded, FrameDecoder, FrameError};
+use super::protocol::{error_response, ok_response, request_id, with_id, DecodeRequest, Request};
+use super::reactor::{Poller, Waker, EPOLLIN, EPOLLOUT};
 use super::scheduler::{run_fanout, ArtifactDir, FanoutPlan};
+
+/// Which session loop the daemon runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionLoop {
+    /// Readiness-driven epoll loop with a bounded worker pool
+    /// (default).
+    Reactor,
+    /// Thread-per-connection blocking loop (the pre-reactor model,
+    /// kept for bit-parity pins).
+    Legacy,
+}
+
+impl SessionLoop {
+    pub fn parse(s: &str) -> Option<SessionLoop> {
+        match s {
+            "reactor" => Some(SessionLoop::Reactor),
+            "legacy" => Some(SessionLoop::Legacy),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SessionLoop::Reactor => "reactor",
+            SessionLoop::Legacy => "legacy",
+        }
+    }
+}
 
 /// Daemon configuration.
 #[derive(Clone, Debug)]
@@ -65,6 +126,9 @@ pub struct ServeConfig {
     /// fast path (`None` = [`DEFAULT_PANEL_WIDTH`]). Execution hint
     /// only: replies are bit-identical at every width.
     pub panel_width: Option<usize>,
+    /// `--serve-threads`: which session loop runs the sockets.
+    /// Execution hint only: replies are bit-identical across loops.
+    pub session_loop: SessionLoop,
 }
 
 /// Memo key of a standing assignment. `Scheme::name()` is a unique
@@ -82,6 +146,29 @@ struct Shared {
     panel_width: usize,
 }
 
+/// Per-connection hot state: the workspaces survive across requests,
+/// and each `*mirrored` names the standing assignment whose CSR
+/// mirror its workspace currently holds (one-step decodes re-mirror
+/// only on switch). The panel workspace drives the batched fast path
+/// for full decode requests of >= panel_width rounds.
+struct SessionWorkspaces {
+    ws: DecodeWorkspace,
+    mirrored: Option<AssignKey>,
+    panel: PanelWorkspace,
+    panel_mirrored: Option<AssignKey>,
+}
+
+impl SessionWorkspaces {
+    fn new(panel_width: usize) -> Self {
+        SessionWorkspaces {
+            ws: DecodeWorkspace::new(),
+            mirrored: None,
+            panel: PanelWorkspace::new(panel_width),
+            panel_mirrored: None,
+        }
+    }
+}
+
 /// Run the daemon until a `shutdown` request arrives. Blocks the
 /// calling thread; prints `listening on ADDR` to stdout once the
 /// socket is bound (stdout is line-buffered, so supervisors and tests
@@ -92,8 +179,9 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
     let listen_addr = listener.local_addr().context("reading the bound address")?;
     println!("listening on {listen_addr}");
     eprintln!(
-        "repro serve: length-prefixed JSON frames on {listen_addr} \
-         (HTTP GET /metrics on the same port); send {{\"cmd\": \"shutdown\"}} to stop"
+        "repro serve: length-prefixed JSON frames on {listen_addr} ({} loop; HTTP GET \
+         /metrics on the same port); send {{\"cmd\": \"shutdown\"}} to stop",
+        cfg.session_loop.name()
     );
     let shared = Arc::new(Shared {
         metrics: ServeMetrics::new(),
@@ -103,17 +191,9 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
         exe: cfg.exe.clone(),
         panel_width: cfg.panel_width.unwrap_or(DEFAULT_PANEL_WIDTH).max(1),
     });
-    for conn in listener.incoming() {
-        if shared.shutdown.load(Ordering::SeqCst) {
-            break;
-        }
-        match conn {
-            Ok(stream) => {
-                let shared = Arc::clone(&shared);
-                std::thread::spawn(move || session(stream, shared));
-            }
-            Err(e) => eprintln!("repro serve: accept failed: {e}"),
-        }
+    match cfg.session_loop {
+        SessionLoop::Legacy => serve_legacy(listener, &shared)?,
+        SessionLoop::Reactor => Reactor::run(listener, &shared)?,
     }
     eprintln!(
         "repro serve: shutting down after {} request(s) on {} connection(s)",
@@ -123,6 +203,9 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
     Ok(())
 }
 
+// ========================================================== the handler
+// (shared verbatim by both loops, so replies cannot drift apart)
+
 /// What handling one request produced.
 struct Handled {
     reply: Json,
@@ -130,6 +213,226 @@ struct Handled {
     /// Decode rounds executed (for the rounds counter).
     rounds: u64,
     shutdown: bool,
+}
+
+impl Handled {
+    fn ok(reply: Json) -> Handled {
+        Handled { reply, is_error: false, rounds: 0, shutdown: false }
+    }
+
+    fn err(msg: &str) -> Handled {
+        Handled { reply: error_response(msg), is_error: true, rounds: 0, shutdown: false }
+    }
+}
+
+/// Split a frame body into its pipelining id and the parsed request.
+/// The id survives a request-level parse failure (so an error reply
+/// still echoes it and a pipelined client stays in sync), but not a
+/// body-level one (nothing to echo if the JSON itself is garbage).
+fn parse_request(body: &str) -> (Option<u64>, Result<Request>) {
+    match Json::parse(body) {
+        Err(e) => (None, Err(e)),
+        Ok(j) => match request_id(&j) {
+            Err(e) => (None, Err(e)),
+            Ok(id) => (id, Request::from_json(&j)),
+        },
+    }
+}
+
+/// Answer the requests that never touch a workspace and never block:
+/// the reactor runs these inline on the event thread.
+fn respond_light(req: &Request, shared: &Shared) -> Option<Handled> {
+    match req {
+        Request::Ping => Some(Handled::ok(ok_response(vec![("pong", Json::Bool(true))]))),
+        Request::Metrics => Some(Handled::ok(ok_response(vec![(
+            "metrics",
+            Json::Str(shared.metrics.render()),
+        )]))),
+        Request::Shutdown => Some(Handled {
+            reply: ok_response(vec![("shutdown", Json::Bool(true))]),
+            is_error: false,
+            rounds: 0,
+            shutdown: true,
+        }),
+        _ => None,
+    }
+}
+
+/// Answer a `decode` or `job` request against the session's hot
+/// workspaces: the reactor runs these on its worker pool.
+fn respond_heavy(req: Request, shared: &Shared, wss: &mut SessionWorkspaces) -> Handled {
+    match req {
+        Request::Decode(d) => match run_decode(&d, shared, wss) {
+            Ok(reply) => {
+                Handled { reply, is_error: false, rounds: d.rounds as u64, shutdown: false }
+            }
+            Err(e) => Handled::err(&format!("{e:#}")),
+        },
+        Request::Job { job, fanout } => {
+            shared.metrics.observe_job();
+            let plan = FanoutPlan {
+                job,
+                fanout,
+                dir: ArtifactDir::Temp,
+                threads: None,
+                panel_width: None,
+            };
+            match run_fanout(&shared.exe, &plan) {
+                Ok(merged) => Handled::ok(ok_response(vec![("csv", Json::Str(merged.to_csv()))])),
+                Err(e) => Handled::err(&format!("{e:#}")),
+            }
+        }
+        light => respond_light(&light, shared).expect("light request routed to heavy path"),
+    }
+}
+
+/// Full request handling for the blocking loop: parse, dispatch, echo
+/// the id.
+fn handle(body: &str, shared: &Shared, wss: &mut SessionWorkspaces) -> Handled {
+    let (id, parsed) = parse_request(body);
+    let mut handled = match parsed {
+        Err(e) => Handled::err(&format!("{e:#}")),
+        Ok(req) => match respond_light(&req, shared) {
+            Some(h) => h,
+            None => respond_heavy(req, shared, wss),
+        },
+    };
+    handled.reply = with_id(handled.reply, id);
+    handled
+}
+
+/// The memoized standing assignment for a decode request; first use
+/// draws it from `assign_seed` (inside the lock: concurrent first
+/// requests serialize briefly, but G is built exactly once).
+fn standing_assignment(shared: &Shared, d: &DecodeRequest) -> Arc<CscMatrix> {
+    let key: AssignKey = (d.scheme.name(), d.k, d.n, d.s, d.assign_seed);
+    let mut memo = shared.assignments.lock().expect("assignment memo poisoned");
+    Arc::clone(memo.entry(key).or_insert_with(|| {
+        let mut rng = Rng::new(d.assign_seed);
+        Arc::new(d.scheme.build(d.k, d.n, d.s).assignment(&mut rng))
+    }))
+}
+
+/// Run a decode request's rounds. Round t forks stream t off the
+/// request seed, so the reply is a pure function of the request — the
+/// determinism `repro load`'s byte-reproducible replay relies on (and
+/// what lets the reactor write replies in completion order without
+/// changing any bytes).
+///
+/// Full (non-prefix) requests with at least `panel.width()` rounds run
+/// through the batched panel kernels: rounds are chunked into panels
+/// at base `t0`, and lane `l` of a panel replays exactly the scalar
+/// loop's `root.fork(t0 + l)` round, so the `errs` array — and the
+/// reply — is bit-equal to the scalar path at every width (the final
+/// ragged chunk just runs a narrower panel).
+fn run_decode(d: &DecodeRequest, shared: &Shared, wss: &mut SessionWorkspaces) -> Result<Json> {
+    let g = standing_assignment(shared, d);
+    let rho = OneStepDecoder::canonical(d.k, d.r, d.s).rho;
+    let root = Rng::new(d.seed);
+    let width = wss.panel.width();
+    let mut errs = vec![0.0; d.rounds];
+    match (d.decoder, d.prefix) {
+        (DecoderKind::OneStep, None) if d.rounds >= width => {
+            // Panel fast path over the panel workspace's own CSR
+            // mirror (the same bit-identical streamed kernel, W lanes
+            // at a time); re-mirror only on assignment switch.
+            let key: AssignKey = (d.scheme.name(), d.k, d.n, d.s, d.assign_seed);
+            if wss.panel_mirrored != Some(key) {
+                wss.panel.mirror_csr(&g);
+                wss.panel_mirrored = Some(key);
+            }
+            let mut t0 = 0;
+            while t0 < d.rounds {
+                let lanes = width.min(d.rounds - t0);
+                wss.panel.onestep_panel(
+                    &g,
+                    d.r,
+                    rho,
+                    &root,
+                    t0 as u64,
+                    lanes,
+                    &mut errs[t0..t0 + lanes],
+                );
+                t0 += lanes;
+            }
+        }
+        (DecoderKind::OneStep, None) => {
+            // One-step rounds stream over the CSR mirror (bit-identical
+            // to the CSC path); re-mirror only on assignment switch.
+            let key: AssignKey = (d.scheme.name(), d.k, d.n, d.s, d.assign_seed);
+            if wss.mirrored != Some(key) {
+                wss.ws.mirror_csr(&g);
+                wss.mirrored = Some(key);
+            }
+            for (t, e) in errs.iter_mut().enumerate() {
+                let mut rng = root.fork(t as u64);
+                *e = wss.ws.onestep_trial_streamed(d.r, rho, &mut rng);
+            }
+        }
+        (DecoderKind::OneStep, Some(p)) => {
+            // Anytime route: draw the same r survivors as the full
+            // path (same RNG stream), decode the first p arrivals
+            // through the incremental state. p == r is bit-identical
+            // to the full one-step round. Stays scalar: the prefix
+            // arm's incremental state has no panel kernel.
+            for (t, e) in errs.iter_mut().enumerate() {
+                let mut rng = root.fork(t as u64);
+                *e = wss.ws.onestep_prefix_trial(&g, d.r, p, rho, &mut rng);
+            }
+        }
+        (DecoderKind::Optimal, None) if d.rounds >= width => {
+            // Panel fast path: one lockstep multi-RHS LSQR per panel,
+            // warm-started at ρ·1 like the scalar arm below.
+            let opts = LsqrOptions::default();
+            let mut t0 = 0;
+            while t0 < d.rounds {
+                let lanes = width.min(d.rounds - t0);
+                wss.panel.optimal_panel(
+                    &g,
+                    d.r,
+                    &opts,
+                    Some(rho),
+                    &root,
+                    t0 as u64,
+                    lanes,
+                    &mut errs[t0..t0 + lanes],
+                );
+                t0 += lanes;
+            }
+        }
+        (DecoderKind::Optimal, prefix) => {
+            let opts = LsqrOptions::default();
+            for (t, e) in errs.iter_mut().enumerate() {
+                let mut rng = root.fork(t as u64);
+                *e = match prefix {
+                    None => wss.ws.optimal_trial(&g, d.r, &opts, Some(rho), &mut rng),
+                    Some(p) => wss.ws.optimal_prefix_trial(&g, d.r, p, &opts, Some(rho), &mut rng),
+                };
+            }
+        }
+    }
+    Ok(ok_response(vec![
+        ("rounds", Json::Num(d.rounds as f64)),
+        ("errs", Json::Arr(errs.into_iter().map(Json::Num).collect())),
+    ]))
+}
+
+// ========================================================= legacy loop
+
+fn serve_legacy(listener: TcpListener, shared: &Arc<Shared>) -> Result<()> {
+    for conn in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let shared = Arc::clone(shared);
+                std::thread::spawn(move || session(stream, shared));
+            }
+            Err(e) => eprintln!("repro serve: accept failed: {e}"),
+        }
+    }
+    Ok(())
 }
 
 fn session(stream: TcpStream, shared: Arc<Shared>) {
@@ -143,15 +446,7 @@ fn session(stream: TcpStream, shared: Arc<Shared>) {
         }
     };
     let mut writer = BufWriter::new(stream);
-    // Per-connection hot state: the workspaces survive across requests,
-    // and each `*mirrored` names the standing assignment whose CSR
-    // mirror its workspace currently holds (one-step decodes re-mirror
-    // only on switch). The panel workspace drives the batched fast
-    // path for full decode requests of >= panel_width rounds.
-    let mut ws = DecodeWorkspace::new();
-    let mut mirrored: Option<AssignKey> = None;
-    let mut panel = PanelWorkspace::new(shared.panel_width);
-    let mut panel_mirrored: Option<AssignKey> = None;
+    let mut wss = SessionWorkspaces::new(shared.panel_width);
     loop {
         let prefix = match frame::read_prefix(&mut reader) {
             Ok(p) => p,
@@ -182,8 +477,8 @@ fn session(stream: TcpStream, shared: Arc<Shared>) {
             }
         };
         let start = Instant::now();
-        let handled =
-            handle(&body, &shared, &mut ws, &mut mirrored, &mut panel, &mut panel_mirrored);
+        shared.metrics.inflight_inc();
+        let handled = handle(&body, &shared, &mut wss);
         // Record metrics before replying, so a client that has seen its
         // reply also sees itself in a subsequent /metrics scrape.
         shared.metrics.observe_request(start.elapsed().as_nanos() as u64);
@@ -193,206 +488,21 @@ fn session(stream: TcpStream, shared: Arc<Shared>) {
         if handled.rounds > 0 {
             shared.metrics.add_rounds(handled.rounds);
         }
+        shared.metrics.inflight_dec();
         if frame::write_frame(&mut writer, &handled.reply.write()).is_err() {
             return;
         }
         if handled.shutdown {
             shared.shutdown.store(true, Ordering::SeqCst);
-            // Wake the acceptor loop so it observes the flag.
+            // Wake the acceptor loop so it observes the flag. (The
+            // reactor loop drains instead; this self-connect wake is
+            // the legacy mechanism, kept with the legacy loop. Strict
+            // in-order handling means every request this connection
+            // pipelined before the shutdown was already answered.)
             let _ = TcpStream::connect(shared.listen_addr);
             return;
         }
     }
-}
-
-fn handle(
-    body: &str,
-    shared: &Arc<Shared>,
-    ws: &mut DecodeWorkspace,
-    mirrored: &mut Option<AssignKey>,
-    panel: &mut PanelWorkspace,
-    panel_mirrored: &mut Option<AssignKey>,
-) -> Handled {
-    let parsed = Json::parse(body).and_then(|j| Request::from_json(&j));
-    let req = match parsed {
-        Ok(r) => r,
-        Err(e) => {
-            return Handled {
-                reply: error_response(&format!("{e:#}")),
-                is_error: true,
-                rounds: 0,
-                shutdown: false,
-            }
-        }
-    };
-    match req {
-        Request::Ping => Handled {
-            reply: ok_response(vec![("pong", Json::Bool(true))]),
-            is_error: false,
-            rounds: 0,
-            shutdown: false,
-        },
-        Request::Metrics => Handled {
-            reply: ok_response(vec![("metrics", Json::Str(shared.metrics.render()))]),
-            is_error: false,
-            rounds: 0,
-            shutdown: false,
-        },
-        Request::Shutdown => Handled {
-            reply: ok_response(vec![("shutdown", Json::Bool(true))]),
-            is_error: false,
-            rounds: 0,
-            shutdown: true,
-        },
-        Request::Decode(d) => match run_decode(&d, shared, ws, mirrored, panel, panel_mirrored) {
-            Ok(reply) => {
-                Handled { reply, is_error: false, rounds: d.rounds as u64, shutdown: false }
-            }
-            Err(e) => Handled {
-                reply: error_response(&format!("{e:#}")),
-                is_error: true,
-                rounds: 0,
-                shutdown: false,
-            },
-        },
-        Request::Job { job, fanout } => {
-            shared.metrics.observe_job();
-            let plan = FanoutPlan {
-                job,
-                fanout,
-                dir: ArtifactDir::Temp,
-                threads: None,
-                panel_width: None,
-            };
-            match run_fanout(&shared.exe, &plan) {
-                Ok(merged) => Handled {
-                    reply: ok_response(vec![("csv", Json::Str(merged.to_csv()))]),
-                    is_error: false,
-                    rounds: 0,
-                    shutdown: false,
-                },
-                Err(e) => Handled {
-                    reply: error_response(&format!("{e:#}")),
-                    is_error: true,
-                    rounds: 0,
-                    shutdown: false,
-                },
-            }
-        }
-    }
-}
-
-/// The memoized standing assignment for a decode request; first use
-/// draws it from `assign_seed` (inside the lock: concurrent first
-/// requests serialize briefly, but G is built exactly once).
-fn standing_assignment(shared: &Shared, d: &DecodeRequest) -> Arc<CscMatrix> {
-    let key: AssignKey = (d.scheme.name(), d.k, d.n, d.s, d.assign_seed);
-    let mut memo = shared.assignments.lock().expect("assignment memo poisoned");
-    Arc::clone(memo.entry(key).or_insert_with(|| {
-        let mut rng = Rng::new(d.assign_seed);
-        Arc::new(d.scheme.build(d.k, d.n, d.s).assignment(&mut rng))
-    }))
-}
-
-/// Run a decode request's rounds. Round t forks stream t off the
-/// request seed, so the reply is a pure function of the request — the
-/// determinism `repro load`'s byte-reproducible replay relies on.
-///
-/// Full (non-prefix) requests with at least `panel.width()` rounds run
-/// through the batched panel kernels: rounds are chunked into panels
-/// at base `t0`, and lane `l` of a panel replays exactly the scalar
-/// loop's `root.fork(t0 + l)` round, so the `errs` array — and the
-/// reply — is bit-equal to the scalar path at every width (the final
-/// ragged chunk just runs a narrower panel).
-fn run_decode(
-    d: &DecodeRequest,
-    shared: &Shared,
-    ws: &mut DecodeWorkspace,
-    mirrored: &mut Option<AssignKey>,
-    panel: &mut PanelWorkspace,
-    panel_mirrored: &mut Option<AssignKey>,
-) -> Result<Json> {
-    let g = standing_assignment(shared, d);
-    let rho = OneStepDecoder::canonical(d.k, d.r, d.s).rho;
-    let root = Rng::new(d.seed);
-    let width = panel.width();
-    let mut errs = vec![0.0; d.rounds];
-    match (d.decoder, d.prefix) {
-        (DecoderKind::OneStep, None) if d.rounds >= width => {
-            // Panel fast path over the panel workspace's own CSR
-            // mirror (the same bit-identical streamed kernel, W lanes
-            // at a time); re-mirror only on assignment switch.
-            let key: AssignKey = (d.scheme.name(), d.k, d.n, d.s, d.assign_seed);
-            if *panel_mirrored != Some(key) {
-                panel.mirror_csr(&g);
-                *panel_mirrored = Some(key);
-            }
-            let mut t0 = 0;
-            while t0 < d.rounds {
-                let lanes = width.min(d.rounds - t0);
-                panel.onestep_panel(&g, d.r, rho, &root, t0 as u64, lanes, &mut errs[t0..t0 + lanes]);
-                t0 += lanes;
-            }
-        }
-        (DecoderKind::OneStep, None) => {
-            // One-step rounds stream over the CSR mirror (bit-identical
-            // to the CSC path); re-mirror only on assignment switch.
-            let key: AssignKey = (d.scheme.name(), d.k, d.n, d.s, d.assign_seed);
-            if *mirrored != Some(key) {
-                ws.mirror_csr(&g);
-                *mirrored = Some(key);
-            }
-            for (t, e) in errs.iter_mut().enumerate() {
-                let mut rng = root.fork(t as u64);
-                *e = ws.onestep_trial_streamed(d.r, rho, &mut rng);
-            }
-        }
-        (DecoderKind::OneStep, Some(p)) => {
-            // Anytime route: draw the same r survivors as the full
-            // path (same RNG stream), decode the first p arrivals
-            // through the incremental state. p == r is bit-identical
-            // to the full one-step round. Stays scalar: the prefix
-            // arm's incremental state has no panel kernel.
-            for (t, e) in errs.iter_mut().enumerate() {
-                let mut rng = root.fork(t as u64);
-                *e = ws.onestep_prefix_trial(&g, d.r, p, rho, &mut rng);
-            }
-        }
-        (DecoderKind::Optimal, None) if d.rounds >= width => {
-            // Panel fast path: one lockstep multi-RHS LSQR per panel,
-            // warm-started at ρ·1 like the scalar arm below.
-            let opts = LsqrOptions::default();
-            let mut t0 = 0;
-            while t0 < d.rounds {
-                let lanes = width.min(d.rounds - t0);
-                panel.optimal_panel(
-                    &g,
-                    d.r,
-                    &opts,
-                    Some(rho),
-                    &root,
-                    t0 as u64,
-                    lanes,
-                    &mut errs[t0..t0 + lanes],
-                );
-                t0 += lanes;
-            }
-        }
-        (DecoderKind::Optimal, prefix) => {
-            let opts = LsqrOptions::default();
-            for (t, e) in errs.iter_mut().enumerate() {
-                let mut rng = root.fork(t as u64);
-                *e = match prefix {
-                    None => ws.optimal_trial(&g, d.r, &opts, Some(rho), &mut rng),
-                    Some(p) => ws.optimal_prefix_trial(&g, d.r, p, &opts, Some(rho), &mut rng),
-                };
-            }
-        }
-    }
-    Ok(ok_response(vec![
-        ("rounds", Json::Num(d.rounds as f64)),
-        ("errs", Json::Arr(errs.into_iter().map(Json::Num).collect())),
-    ]))
 }
 
 /// Minimal HTTP/1.0 for the `/metrics` endpoint. The `"GET "` bytes
@@ -412,16 +522,591 @@ fn serve_http(
             break;
         }
     }
+    let response = http_response(&path, shared);
+    writer.write_all(&response)?;
+    writer.flush()
+}
+
+fn http_response(path: &str, shared: &Shared) -> Vec<u8> {
     let (status, body) = if path == "/metrics" {
         ("200 OK", shared.metrics.render())
     } else {
         ("404 Not Found", "only /metrics is served\n".to_string())
     };
-    write!(
-        writer,
+    format!(
         "HTTP/1.0 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
-    )?;
-    writer.flush()
+    )
+    .into_bytes()
+}
+
+// ======================================================== reactor loop
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+const READ_CHUNK: usize = 16 * 1024;
+/// Per-connection cap on dispatched-but-unanswered requests: above it
+/// the reactor stops reading that socket until replies drain.
+const MAX_CONN_INFLIGHT: usize = 128;
+/// Outbox bytes above which reads pause — a client that pipelines but
+/// never reads cannot balloon the reply queue.
+const MAX_OUTBOX_BYTES: usize = 4 * 1024 * 1024;
+/// After the worker pool drains on shutdown, how long to wait for
+/// clients to read their flushed replies before abandoning them.
+const DRAIN_FLUSH_DEADLINE: Duration = Duration::from_secs(10);
+
+/// The part of a connection the worker pool sees: its token (to route
+/// the completion) and the hot workspaces. Decodes on the same
+/// connection serialize on the mutex; pings never touch it.
+struct ConnWork {
+    token: u64,
+    wss: Mutex<SessionWorkspaces>,
+}
+
+/// One request dispatched to the worker pool.
+struct Job {
+    work: Arc<ConnWork>,
+    req: Request,
+    id: Option<u64>,
+    /// When the frame was parsed — queue wait counts toward the
+    /// request latency histogram, which is what a pipelined client
+    /// actually experiences.
+    accepted: Instant,
+}
+
+/// One completed pool request, routed back to the reactor thread.
+struct Done {
+    token: u64,
+    /// Encoded reply frame; `None` if the handler panicked (the
+    /// connection is dropped, like a legacy session thread dying).
+    frame: Option<Vec<u8>>,
+}
+
+enum ConnMode {
+    Frames,
+    /// The peer sent `"GET "`: buffer the rest of the HTTP request.
+    Http(Vec<u8>),
+}
+
+struct Conn {
+    stream: TcpStream,
+    decoder: FrameDecoder,
+    mode: ConnMode,
+    /// Encoded reply frames not yet fully written, front first;
+    /// `outbox_pos` is the write offset into the front frame.
+    outbox: VecDeque<Vec<u8>>,
+    outbox_pos: usize,
+    outbox_bytes: usize,
+    /// Requests dispatched to the pool whose replies are not yet
+    /// queued on the outbox.
+    inflight: usize,
+    /// Interest mask currently registered with the poller.
+    interest: u32,
+    /// No more reads; close once the outbox drains and in-flight
+    /// replies are delivered (error frame sent, HTTP response queued,
+    /// or a draining shutdown).
+    closing: bool,
+    /// Peer sent EOF; pending replies still flush (half-close).
+    read_eof: bool,
+    work: Arc<ConnWork>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, token: u64, panel_width: usize) -> Conn {
+        Conn {
+            stream,
+            decoder: FrameDecoder::new(),
+            mode: ConnMode::Frames,
+            outbox: VecDeque::new(),
+            outbox_pos: 0,
+            outbox_bytes: 0,
+            inflight: 0,
+            interest: 0,
+            closing: false,
+            read_eof: false,
+            work: Arc::new(ConnWork { token, wss: Mutex::new(SessionWorkspaces::new(panel_width)) }),
+        }
+    }
+
+    fn wants_read(&self, draining: bool) -> bool {
+        !self.closing
+            && !self.read_eof
+            && !draining
+            && self.inflight < MAX_CONN_INFLIGHT
+            && self.outbox_bytes <= MAX_OUTBOX_BYTES
+    }
+
+    fn desired_interest(&self, draining: bool) -> u32 {
+        let mut interest = 0;
+        if self.wants_read(draining) {
+            interest |= EPOLLIN;
+        }
+        if !self.outbox.is_empty() {
+            interest |= EPOLLOUT;
+        }
+        interest
+    }
+
+    fn push_reply(&mut self, frame_bytes: Vec<u8>) {
+        self.outbox_bytes += frame_bytes.len();
+        self.outbox.push_back(frame_bytes);
+    }
+
+    /// Nothing left to do for this connection?
+    fn finished(&self) -> bool {
+        (self.closing || self.read_eof) && self.outbox.is_empty() && self.inflight == 0
+    }
+}
+
+struct Reactor {
+    shared: Arc<Shared>,
+    poller: Poller,
+    listener: TcpListener,
+    waker: Arc<Waker>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    tx: Option<Sender<Job>>,
+    done: Arc<Mutex<Vec<Done>>>,
+    workers: Vec<JoinHandle<()>>,
+    /// Pool requests dispatched but not yet completed, across all
+    /// connections (the shutdown drain waits on this).
+    pool_inflight: usize,
+    draining: bool,
+    /// Set once draining *and* the pool is empty: the flush grace
+    /// period for clients that have not read their replies yet.
+    drain_flush_since: Option<Instant>,
+}
+
+impl Reactor {
+    fn run(listener: TcpListener, shared: &Arc<Shared>) -> Result<()> {
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let poller = Poller::new().context("epoll_create1")?;
+        let waker = Arc::new(Waker::new().context("eventfd")?);
+        poller
+            .add(listener.as_raw_fd(), TOKEN_LISTENER, EPOLLIN)
+            .context("registering the listener")?;
+        poller.add(waker.fd(), TOKEN_WAKER, EPOLLIN).context("registering the waker")?;
+
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let done = Arc::new(Mutex::new(Vec::new()));
+        let pool = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8);
+        let workers = (0..pool)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(shared);
+                let done = Arc::clone(&done);
+                let waker = Arc::clone(&waker);
+                std::thread::spawn(move || worker_loop(rx, shared, done, waker))
+            })
+            .collect();
+
+        let mut reactor = Reactor {
+            shared: Arc::clone(shared),
+            poller,
+            listener,
+            waker,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            tx: Some(tx),
+            done,
+            workers,
+            pool_inflight: 0,
+            draining: false,
+            drain_flush_since: None,
+        };
+        let result = reactor.event_loop();
+        // Closing the job channel makes idle workers exit; the drain
+        // guaranteed none are mid-request.
+        drop(reactor.tx.take());
+        reactor.waker.wake();
+        for w in reactor.workers.drain(..) {
+            let _ = w.join();
+        }
+        result
+    }
+
+    fn event_loop(&mut self) -> Result<()> {
+        let mut events = Vec::new();
+        loop {
+            let timeout = if self.draining { 50 } else { -1 };
+            self.poller.wait(&mut events, timeout).context("epoll_wait")?;
+            self.shared.metrics.observe_wakeup();
+            for ev in events.clone() {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.waker.drain(),
+                    token => {
+                        if ev.writable() {
+                            self.flush_conn(token);
+                        }
+                        if ev.readable() {
+                            self.read_conn(token);
+                        }
+                    }
+                }
+            }
+            self.pump_done();
+            if self.draining {
+                if self.pool_inflight == 0 {
+                    let since = *self.drain_flush_since.get_or_insert_with(Instant::now);
+                    let all_flushed = self.conns.values().all(|c| c.outbox.is_empty());
+                    if all_flushed || since.elapsed() > DRAIN_FLUSH_DEADLINE {
+                        return Ok(());
+                    }
+                } else {
+                    self.drain_flush_since = None;
+                }
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        if self.draining {
+            return;
+        }
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    self.shared.metrics.observe_connection();
+                    let _ = stream.set_nodelay(true);
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    let mut conn = Conn::new(stream, token, self.shared.panel_width);
+                    if self.poller.add(conn.stream.as_raw_fd(), token, EPOLLIN).is_err() {
+                        continue;
+                    }
+                    conn.interest = EPOLLIN;
+                    self.conns.insert(token, conn);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    eprintln!("repro serve: accept failed: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Level-triggered read: drain the socket until WouldBlock (or a
+    /// backpressure cap pauses this connection — the unread bytes wait
+    /// in the kernel buffer, which is the backpressure signal TCP
+    /// propagates to the peer).
+    fn read_conn(&mut self, token: u64) {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if conn.read_eof || conn.closing {
+                break;
+            }
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.read_eof = true;
+                    if matches!(conn.mode, ConnMode::Frames) && conn.decoder.buffered() > 0 {
+                        // EOF mid-frame: dropped client.
+                        self.shared.metrics.observe_error();
+                    }
+                    break;
+                }
+                Ok(n) => {
+                    let is_frames = match &mut conn.mode {
+                        ConnMode::Frames => {
+                            conn.decoder.extend(&chunk[..n]);
+                            true
+                        }
+                        ConnMode::Http(buf) => {
+                            buf.extend_from_slice(&chunk[..n]);
+                            false
+                        }
+                    };
+                    if is_frames {
+                        if !self.pump_frames(token) {
+                            return;
+                        }
+                    } else {
+                        self.try_http(token);
+                    }
+                    let Some(conn) = self.conns.get(&token) else { return };
+                    if !conn.wants_read(self.draining) {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_conn(token);
+                    return;
+                }
+            }
+        }
+        // EOF on an HTTP connection answers with whatever arrived.
+        if self.conns.get(&token).is_some_and(|c| c.read_eof && matches!(c.mode, ConnMode::Http(_)))
+        {
+            self.try_http(token);
+        }
+        self.settle(token);
+    }
+
+    /// Decode and dispatch every complete frame buffered on `token`.
+    /// Returns false if the connection was closed.
+    fn pump_frames(&mut self, token: u64) -> bool {
+        loop {
+            let step = {
+                let Some(conn) = self.conns.get_mut(&token) else { return false };
+                if conn.closing
+                    || self.draining
+                    || !matches!(conn.mode, ConnMode::Frames)
+                    || conn.inflight >= MAX_CONN_INFLIGHT
+                    || conn.outbox_bytes > MAX_OUTBOX_BYTES
+                {
+                    return true;
+                }
+                conn.decoder.next()
+            };
+            match step {
+                Ok(None) => return true,
+                Ok(Some(Decoded::HttpGet)) => {
+                    let Some(conn) = self.conns.get_mut(&token) else { return false };
+                    let tail = conn.decoder.take_buffered();
+                    conn.mode = ConnMode::Http(tail);
+                    self.try_http(token);
+                    return true;
+                }
+                Ok(Some(Decoded::Frame(body))) => {
+                    if !self.accept_frame(token, body) {
+                        return false;
+                    }
+                }
+                Err(e) => {
+                    // Oversized prefix or non-UTF-8 body: the frame
+                    // boundary is lost, so reply with an error frame
+                    // and close once it flushes.
+                    self.shared.metrics.observe_error();
+                    let Some(conn) = self.conns.get_mut(&token) else { return false };
+                    conn.push_reply(frame::encode_frame(&error_response(&e.to_string()).write()));
+                    conn.closing = true;
+                    self.flush_conn(token);
+                    return self.conns.contains_key(&token);
+                }
+            }
+        }
+    }
+
+    /// One parsed frame: answer light requests inline, dispatch heavy
+    /// ones to the pool. Returns false if the connection was closed.
+    fn accept_frame(&mut self, token: u64, body: String) -> bool {
+        let accepted = Instant::now();
+        let (id, parsed) = parse_request(&body);
+        self.shared.metrics.inflight_inc();
+        let inline = match parsed {
+            Err(e) => Handled::err(&format!("{e:#}")),
+            Ok(req) => match respond_light(&req, &self.shared) {
+                Some(h) => h,
+                None => {
+                    let Some(conn) = self.conns.get_mut(&token) else {
+                        self.shared.metrics.inflight_dec();
+                        return false;
+                    };
+                    conn.inflight += 1;
+                    self.pool_inflight += 1;
+                    let job = Job { work: Arc::clone(&conn.work), req, id, accepted };
+                    if let Some(tx) = &self.tx {
+                        tx.send(job).expect("worker pool outlives the reactor");
+                    }
+                    return true;
+                }
+            },
+        };
+        // Inline reply: metrics before the reply bytes, like the pool
+        // path and the legacy loop.
+        self.shared.metrics.observe_request(accepted.elapsed().as_nanos() as u64);
+        if inline.is_error {
+            self.shared.metrics.observe_error();
+        }
+        self.shared.metrics.inflight_dec();
+        let reply = frame::encode_frame(&with_id(inline.reply, id).write());
+        let Some(conn) = self.conns.get_mut(&token) else { return false };
+        conn.push_reply(reply);
+        if inline.shutdown {
+            self.begin_drain();
+        }
+        self.flush_conn(token);
+        self.conns.contains_key(&token)
+    }
+
+    /// A `shutdown` request was accepted: stop accepting connections
+    /// and reading requests, let the pool finish everything already
+    /// accepted, flush every outbox, then exit.
+    fn begin_drain(&mut self) {
+        if self.draining {
+            return;
+        }
+        self.draining = true;
+        let _ = self.poller.delete(self.listener.as_raw_fd());
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for token in tokens {
+            if let Some(conn) = self.conns.get_mut(&token) {
+                conn.closing = true;
+            }
+            self.settle(token);
+        }
+    }
+
+    /// Reply completions from the worker pool, routed by token. Stale
+    /// tokens (connection died while its request ran) just miss the
+    /// map — the request still counts as drained.
+    fn pump_done(&mut self) {
+        let done: Vec<Done> = std::mem::take(&mut *self.done.lock().expect("completions poisoned"));
+        for d in done {
+            self.pool_inflight -= 1;
+            self.shared.metrics.inflight_dec();
+            let Some(conn) = self.conns.get_mut(&d.token) else { continue };
+            conn.inflight -= 1;
+            match d.frame {
+                Some(f) => conn.push_reply(f),
+                None => {
+                    // Handler panicked: drop the connection, keep the
+                    // daemon (legacy sessions die the same way).
+                    self.close_conn(d.token);
+                    continue;
+                }
+            }
+            self.flush_conn(d.token);
+            // Replies draining may lift the read backpressure; frames
+            // may already be buffered, so pump before trusting epoll.
+            if self.pump_frames(d.token) {
+                self.read_conn(d.token);
+            }
+        }
+    }
+
+    /// Write the outbox until empty or WouldBlock; EPOLLOUT interest
+    /// exists only while bytes remain (write-side backpressure).
+    fn flush_conn(&mut self, token: u64) {
+        let mut failed = false;
+        {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            'outer: while let Some(front) = conn.outbox.front() {
+                match conn.stream.write(&front[conn.outbox_pos..]) {
+                    Ok(0) => {
+                        failed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.outbox_pos += n;
+                        conn.outbox_bytes -= n;
+                        if conn.outbox_pos == front.len() {
+                            conn.outbox.pop_front();
+                            conn.outbox_pos = 0;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break 'outer,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        failed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if failed {
+            self.close_conn(token);
+        } else {
+            self.settle(token);
+        }
+    }
+
+    /// Close a finished connection, or re-register its interest mask
+    /// if it changed (how both backpressure directions are applied and
+    /// lifted).
+    fn settle(&mut self, token: u64) {
+        let Some(conn) = self.conns.get(&token) else { return };
+        if conn.finished() {
+            self.close_conn(token);
+            return;
+        }
+        let desired = conn.desired_interest(self.draining);
+        if desired != conn.interest {
+            let fd = conn.stream.as_raw_fd();
+            if self.poller.modify(fd, token, desired).is_err() {
+                self.close_conn(token);
+                return;
+            }
+            self.conns.get_mut(&token).expect("conn vanished").interest = desired;
+        }
+    }
+
+    fn close_conn(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            let _ = self.poller.delete(conn.stream.as_raw_fd());
+        }
+    }
+
+    /// Answer HTTP once the header terminator (or EOF) arrives. The
+    /// request line's first token after the sniffed `"GET "` is the
+    /// path, exactly like the legacy parser.
+    fn try_http(&mut self, token: u64) {
+        let path = {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            let ConnMode::Http(buf) = &conn.mode else { return };
+            if conn.closing {
+                return; // already answered
+            }
+            if !conn.read_eof && !buf.windows(4).any(|w| w == b"\r\n\r\n") {
+                return; // headers still arriving
+            }
+            let text = String::from_utf8_lossy(buf);
+            let line = text.lines().next().unwrap_or("");
+            line.split_whitespace().next().unwrap_or("").to_string()
+        };
+        let response = http_response(&path, &self.shared);
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        conn.push_reply(response);
+        conn.closing = true;
+        self.flush_conn(token);
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Job>>>,
+    shared: Arc<Shared>,
+    done: Arc<Mutex<Vec<Done>>>,
+    waker: Arc<Waker>,
+) {
+    loop {
+        let job = match rx.lock().expect("job queue poisoned").recv() {
+            Ok(j) => j,
+            Err(_) => return, // reactor dropped the sender: shut down
+        };
+        let Job { work, req, id, accepted } = job;
+        let token = work.token;
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut wss = work.wss.lock().expect("session workspaces poisoned");
+            respond_heavy(req, &shared, &mut wss)
+        }));
+        let d = match result {
+            Ok(handled) => {
+                // Metrics before the reply is queued, so a client that
+                // has seen its reply sees itself in a later scrape.
+                shared.metrics.observe_request(accepted.elapsed().as_nanos() as u64);
+                if handled.is_error {
+                    shared.metrics.observe_error();
+                }
+                if handled.rounds > 0 {
+                    shared.metrics.add_rounds(handled.rounds);
+                }
+                let body = with_id(handled.reply, id).write();
+                Done { token, frame: Some(frame::encode_frame(&body)) }
+            }
+            Err(_) => Done { token, frame: None },
+        };
+        done.lock().expect("completions poisoned").push(d);
+        waker.wake();
+    }
 }

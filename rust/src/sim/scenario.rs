@@ -183,6 +183,78 @@ pub fn tta_deltas() -> Vec<f64> {
     (1..=18).map(|i| i as f64 * 0.05).collect()
 }
 
+/// The `latparam` study's arms: each sweeps one latency-model
+/// parameter at a fixed deadline. They ride the `policy` CSV/artifact
+/// column (an arm label, like the `tta` family's deadline-policy
+/// arms), and the swept parameter value rides the `delta` column.
+pub const LATPARAM_ARMS: [&str; 2] = ["pareto-shape", "sexp-rate"];
+
+/// Every arm label a scenario artifact's `policy` column may carry —
+/// the intern registry for scenario shard artifacts. Strict superset
+/// of [`TTA3_POLICIES`] (so older artifacts parse unchanged) plus the
+/// [`LATPARAM_ARMS`].
+pub const SCENARIO_POLICIES: [&str; 5] =
+    ["fastest-r", "deadline", "optimal", "pareto-shape", "sexp-rate"];
+
+/// The fixed deadline the `latparam` study (and the matching
+/// `repro load --workload latparam` traffic source) evaluates at: the
+/// base model's 80th-percentile completion time, so the sweep measures
+/// how err₁ at a realistic cutoff responds as the tail gets heavier or
+/// the service rate drops.
+pub fn latparam_deadline(base: &LatencyModel) -> f64 {
+    base.quantile(0.8)
+}
+
+/// The latency models one `latparam` arm sweeps: 18 `(parameter,
+/// model)` points, mirroring the 18-point δ grid of the `tta` family.
+///
+/// * `pareto-shape` — Pareto tail index α ∈ {1.1, 1.2, …, 2.8} (heavy
+///   → light tail) at the base model's scale (0.02 if the base is not
+///   Pareto).
+/// * `sexp-rate` — shifted-exponential service rate ∈ {10, 20, …, 180}
+///   at the base model's shift (0.02 if the base is not shifted-exp).
+///
+/// Deterministic functions of the base model only, so the sweep is
+/// part of the job identity and `repro load` can rebuild the identical
+/// grid client-side.
+pub fn latparam_models(arm: &str, base: &LatencyModel) -> Vec<(f64, LatencyModel)> {
+    match arm {
+        "pareto-shape" => {
+            let scale = match *base {
+                LatencyModel::Pareto { scale, .. } => scale,
+                _ => 0.02,
+            };
+            (1..=18)
+                .map(|i| {
+                    let shape = 1.0 + i as f64 * 0.1;
+                    (shape, LatencyModel::Pareto { scale, shape })
+                })
+                .collect()
+        }
+        "sexp-rate" => {
+            let b = match *base {
+                LatencyModel::ShiftedExp { base, .. } => base,
+                _ => 0.02,
+            };
+            (1..=18)
+                .map(|i| {
+                    let rate = 10.0 * i as f64;
+                    (rate, LatencyModel::ShiftedExp { base: b, rate })
+                })
+                .collect()
+        }
+        other => panic!("unknown latparam arm {other:?} (one of {LATPARAM_ARMS:?})"),
+    }
+}
+
+/// The survivor count a latency model is expected to deliver by the
+/// deadline: ⌈CDF(T)·k⌋ clamped to [1, k]. Sets the one-step ρ for a
+/// `latparam` point and the `r` of the matching `repro load` decode
+/// template.
+pub fn latparam_expected_r(model: &LatencyModel, deadline: f64, k: usize) -> usize {
+    ((model.cdf(deadline) * k as f64).round() as usize).clamp(1, k)
+}
+
 /// One published time-to-accuracy point.
 #[derive(Clone, Debug)]
 pub struct ScenarioPoint {
@@ -382,6 +454,76 @@ pub fn tta(k: usize, s: usize, scenario: &Scenario, mc: &MonteCarlo) -> Result<V
 /// The single-process `tta3` study.
 pub fn tta3(k: usize, s: usize, scenario: &Scenario, mc: &MonteCarlo) -> Result<Vec<ScenarioPoint>> {
     Ok(finalize_scenario_points(&tta3_partials(k, s, scenario, mc, Shard::full())?))
+}
+
+/// One shard of the `latparam` study: the latency-parameter sweep.
+///
+/// Where the `tta` family sweeps the deadline axis under one latency
+/// model, `latparam` holds the deadline fixed
+/// ([`latparam_deadline`]: the base model's 80th percentile) and
+/// sweeps the latency-model *parameters* — Pareto tail index and
+/// shifted-exp service rate ([`latparam_models`]) — measuring the
+/// err₁ each scheme achieves when the master cuts off at that
+/// wall-clock. One point per (arm, scheme, parameter); the swept
+/// parameter rides the `delta` column, the arm rides `policy`. Every
+/// trial decodes the fixed-deadline survivor draw through the
+/// incremental one-step decoder with ρ set from the expected survivor
+/// count ([`latparam_expected_r`]); `gather` finalizes to the deadline
+/// itself (a fixed-deadline policy's gather time is the deadline),
+/// which pins the sweep's time axis exactly.
+///
+/// Same 2-element `Partial::Curve` spine as `tta`, so shards merge,
+/// verify, and tree-reduce identically.
+pub fn latparam_partials(
+    k: usize,
+    s: usize,
+    scenario: &Scenario,
+    mc: &MonteCarlo,
+    shard: Shard,
+) -> Result<Vec<ScenarioPartialPoint>> {
+    let base = tta_latency_model(scenario)?;
+    let deadline = latparam_deadline(&base);
+    let mut out = Vec::new();
+    for &arm in &LATPARAM_ARMS {
+        for &scheme in &FIG_SCHEMES {
+            for (param, swept) in latparam_models(arm, &base) {
+                let r = latparam_expected_r(&swept, deadline, k);
+                let rho = k as f64 / (r as f64 * s as f64);
+                let code = scheme.build(k, k, s);
+                let model =
+                    LatencyStragglers { model: swept, policy: DeadlinePolicy::Fixed(deadline) };
+                let partial = mc.mean_curve_partial_ws(2, shard, DecodeWorkspace::new, |ws, rng| {
+                    let err = ws.onestep_incremental_redraw_trial_with(
+                        code.as_ref(),
+                        &model as &dyn StragglerModel,
+                        rho,
+                        rng,
+                    );
+                    vec![ws.last_gather_time(), err]
+                });
+                out.push(ScenarioPartialPoint {
+                    study: "latparam",
+                    scheme: scheme.name().to_string(),
+                    policy: arm,
+                    s,
+                    delta: param,
+                    k,
+                    partial,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The single-process `latparam` study.
+pub fn latparam(
+    k: usize,
+    s: usize,
+    scenario: &Scenario,
+    mc: &MonteCarlo,
+) -> Result<Vec<ScenarioPoint>> {
+    Ok(finalize_scenario_points(&latparam_partials(k, s, scenario, mc, Shard::full())?))
 }
 
 /// Anytime stopping rules for the single-process `repro scenario`
@@ -592,6 +734,68 @@ mod tests {
         for sid in 1..num_shards {
             let part =
                 tta3_partials(10, 3, &pareto(), &mc, Shard::new(sid, num_shards).unwrap()).unwrap();
+            for (a, b) in merged.iter_mut().zip(&part) {
+                assert!(a.same_point(b));
+                a.partial.merge(&b.partial).unwrap();
+            }
+        }
+        let merged = finalize_scenario_points(&merged);
+        assert_eq!(merged.len(), whole.len());
+        for (a, b) in merged.iter().zip(&whole) {
+            assert_eq!(a.gather.to_bits(), b.gather.to_bits(), "{}/{}/{}", a.policy, a.scheme, a.delta);
+            assert_eq!(a.err1.to_bits(), b.err1.to_bits(), "{}/{}/{}", a.policy, a.scheme, a.delta);
+        }
+    }
+
+    #[test]
+    fn latparam_sweeps_both_arms_at_the_fixed_deadline() {
+        let mc = MonteCarlo::new(30, 13).with_threads(2);
+        let pts = latparam(12, 3, &pareto(), &mc).unwrap();
+        // 2 arms x 3 schemes x 18 parameter points.
+        assert_eq!(pts.len(), 2 * 3 * 18);
+        let base = pareto().latency_model().copied().unwrap();
+        let deadline = latparam_deadline(&base);
+        for p in &pts {
+            assert_eq!(p.study, "latparam");
+            assert!(LATPARAM_ARMS.contains(&p.policy), "{}", p.policy);
+            // Fixed-deadline gather is the deadline itself (up to the
+            // mean's final rounding).
+            assert!(
+                (p.gather - deadline).abs() < 1e-12,
+                "{}/{}: gather {} vs deadline {deadline}",
+                p.policy,
+                p.delta,
+                p.gather
+            );
+            assert!(p.err1.is_finite() && p.err1 >= 0.0);
+        }
+        // Heavier tails / slower service hurt: the first parameter
+        // point of each arm (α=1.1, rate=10) admits fewer survivors by
+        // the deadline than the last (α=2.8, rate=180), so its
+        // expected err₁ is at least as large. Compare via the expected
+        // survivor counts, which are deterministic.
+        for arm in LATPARAM_ARMS {
+            let models = latparam_models(arm, &base);
+            let r_first = latparam_expected_r(&models[0].1, deadline, 12);
+            let r_last = latparam_expected_r(&models[17].1, deadline, 12);
+            assert!(
+                r_first < r_last,
+                "{arm}: expected survivors {r_first} !< {r_last}"
+            );
+        }
+    }
+
+    #[test]
+    fn latparam_partials_are_shard_invariant() {
+        let mc = MonteCarlo::new(24, 11).with_threads(2);
+        let whole = latparam(10, 3, &pareto(), &mc).unwrap();
+        let num_shards = 3usize;
+        let mut merged =
+            latparam_partials(10, 3, &pareto(), &mc, Shard::new(0, num_shards).unwrap()).unwrap();
+        for sid in 1..num_shards {
+            let part =
+                latparam_partials(10, 3, &pareto(), &mc, Shard::new(sid, num_shards).unwrap())
+                    .unwrap();
             for (a, b) in merged.iter_mut().zip(&part) {
                 assert!(a.same_point(b));
                 a.partial.merge(&b.partial).unwrap();

@@ -592,6 +592,9 @@ impl JobSpec {
                 let pts = match self.id.as_str() {
                     "tta" => scenario_mod::tta_partials(self.k, self.s, scenario, &mc, shard)?,
                     "tta3" => scenario_mod::tta3_partials(self.k, self.s, scenario, &mc, shard)?,
+                    "latparam" => {
+                        scenario_mod::latparam_partials(self.k, self.s, scenario, &mc, shard)?
+                    }
                     other => bail!(
                         "unknown scenario study {other:?} (one of {})",
                         SCENARIO_IDS.join("|")
@@ -1379,7 +1382,7 @@ pub const ABLATION_STUDIES: [&str; 4] =
 /// `repro shard --scenario`, `repro run --scenario`) and
 /// [`JobSpec::run`] accept — the single registry, like [`TABLE_IDS`],
 /// so a study cannot be producible-but-unmergeable.
-pub const SCENARIO_IDS: [&str; 2] = ["tta", "tta3"];
+pub const SCENARIO_IDS: [&str; 3] = ["tta", "tta3", "latparam"];
 
 /// Intern a deserialized name against one of the static id registries,
 /// yielding the `&'static str` the point structs carry — the single
@@ -1467,7 +1470,7 @@ fn scenario_point_from_json(j: &Json) -> Result<ScenarioPartialPoint> {
         scheme: j.get("scheme")?.as_str()?.to_string(),
         policy: intern(
             j.get("policy")?.as_str()?,
-            &scenario_mod::TTA3_POLICIES,
+            &scenario_mod::SCENARIO_POLICIES,
             "scenario policy",
         )?,
         s: j.get("s")?.as_usize()?,
@@ -1923,5 +1926,36 @@ mod tests {
         let mut bad = job.clone();
         bad.scenario = Scenario::default();
         assert!(bad.run(Shard::full(), Some(1)).is_err());
+    }
+
+    /// The latparam study rides the same scenario-job spine: artifacts
+    /// round-trip through JSON (interning the new sweep-arm policy
+    /// labels) and shards merge back to the unsharded run.
+    #[test]
+    fn latparam_job_artifacts_roundtrip_and_merge() {
+        let job = JobSpec {
+            kind: JobKind::Scenario,
+            id: "latparam".into(),
+            trials: 9,
+            seed: 3,
+            k: 8,
+            s: 2,
+            tmax: 0,
+            scenario: Scenario::parse("pareto:0.05,1.5").unwrap(),
+        };
+        let unsharded = job.run(Shard::full(), Some(2)).unwrap().to_csv();
+        assert!(unsharded.starts_with("scenario,scheme,policy,s,delta,gather,err1\n"));
+        assert!(unsharded.contains(",pareto-shape,"));
+        assert!(unsharded.contains(",sexp-rate,"));
+        let arts: Vec<ShardArtifact> = (0..2)
+            .map(|sid| {
+                let art =
+                    ShardArtifact::compute(&job, Shard::new(sid, 2).unwrap(), Some(1)).unwrap();
+                ShardArtifact::parse(&art.to_json_string()).unwrap()
+            })
+            .collect();
+        assert!(ShardArtifact::verify_set(&arts).is_ok());
+        let merged = ShardArtifact::merge(arts).unwrap();
+        assert_eq!(merged.to_csv(), unsharded);
     }
 }

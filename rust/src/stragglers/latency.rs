@@ -56,6 +56,41 @@ impl LatencyModel {
         }
     }
 
+    /// Closed-form CDF: the probability a worker finishes by time `t`
+    /// — equivalently, the expected fraction of non-stragglers under a
+    /// fixed deadline `t`. Inverse of [`quantile`](Self::quantile) on
+    /// the continuous families; the `latparam` study uses it to map a
+    /// swept latency model to the expected survivor count at a fixed
+    /// deadline.
+    pub fn cdf(&self, t: f64) -> f64 {
+        match *self {
+            LatencyModel::ShiftedExp { base, rate } => {
+                if t < base {
+                    0.0
+                } else {
+                    1.0 - (-rate * (t - base)).exp()
+                }
+            }
+            LatencyModel::Pareto { scale, shape } => {
+                if t < scale {
+                    0.0
+                } else {
+                    1.0 - (scale / t).powf(shape)
+                }
+            }
+            LatencyModel::Bimodal { fast, slow, p_slow } => {
+                let mut p = 0.0;
+                if t >= fast {
+                    p += 1.0 - p_slow;
+                }
+                if t >= slow {
+                    p += p_slow;
+                }
+                p
+            }
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             LatencyModel::ShiftedExp { .. } => "shifted-exp",
@@ -169,6 +204,29 @@ impl StragglerModel for LatencyStragglers {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cdf_inverts_quantile_on_the_continuous_families() {
+        for m in [
+            LatencyModel::ShiftedExp { base: 0.02, rate: 5.0 },
+            LatencyModel::Pareto { scale: 0.02, shape: 1.5 },
+        ] {
+            for p in [0.0, 0.1, 0.5, 0.8, 0.99] {
+                let t = m.quantile(p);
+                assert!(
+                    (m.cdf(t) - p).abs() < 1e-12,
+                    "{}: cdf(quantile({p})) = {}",
+                    m.name(),
+                    m.cdf(t)
+                );
+            }
+            assert_eq!(m.cdf(0.0), 0.0, "{}: nothing finishes at t=0", m.name());
+        }
+        let b = LatencyModel::Bimodal { fast: 0.1, slow: 10.0, p_slow: 0.3 };
+        assert_eq!(b.cdf(0.05), 0.0);
+        assert!((b.cdf(1.0) - 0.7).abs() < 1e-12);
+        assert!((b.cdf(20.0) - 1.0).abs() < 1e-12);
+    }
 
     #[test]
     fn fastest_r_returns_exactly_r() {

@@ -69,6 +69,13 @@ impl Server {
         let status = self.child.take().expect("child").wait().expect("waiting for daemon");
         assert!(status.success(), "daemon exited with {status:?}");
     }
+
+    /// Wait for an exit the test already initiated in-band (a shutdown
+    /// frame it wrote itself) and assert it was clean.
+    fn wait_exit(mut self) {
+        let status = self.child.take().expect("child").wait().expect("waiting for daemon");
+        assert!(status.success(), "daemon exited with {status:?}");
+    }
 }
 
 impl Drop for Server {
@@ -84,6 +91,34 @@ impl Drop for Server {
 fn request(conn: &mut TcpStream, body: &str) -> String {
     frame::write_frame(conn, body).expect("sending frame");
     frame::read_frame(conn).expect("reading reply frame")
+}
+
+/// Tag a request body with a pipelining id through the library's own
+/// canonical serializer (the same one the daemon echoes with).
+fn tag(body: &str, id: u64) -> String {
+    gradcode::serve::protocol::with_id(Json::parse(body).expect("request JSON"), Some(id)).write()
+}
+
+/// The echoed pipelining id of a reply frame.
+fn reply_id(reply: &str) -> Option<u64> {
+    let parsed = Json::parse(reply).expect("reply JSON");
+    let id = parsed.get("id").ok()?;
+    Some(id.as_str().expect("id is a string").parse().expect("decimal id"))
+}
+
+/// Scrape one counter off the HTTP `/metrics` endpoint.
+fn metric(addr: &str, name: &str) -> u64 {
+    let mut conn = TcpStream::connect(addr).expect("connecting for /metrics");
+    conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").expect("http request");
+    let mut response = String::new();
+    conn.read_to_string(&mut response).expect("http response");
+    response
+        .lines()
+        .find_map(|l| match l.split_once(' ') {
+            Some((n, v)) if n == name => Some(v.trim().parse().expect("counter value")),
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("missing {name}:\n{response}"))
 }
 
 /// Run `repro load` against `addr`, assert success, return
@@ -338,6 +373,8 @@ fn http_metrics_endpoint_reports_counters() {
         "gradcode_errors_total",
         "gradcode_rounds_total",
         "gradcode_jobs_total",
+        "gradcode_inflight_requests",
+        "gradcode_reactor_wakeups_total",
         "gradcode_request_latency_p99_us",
     ] {
         assert!(response.contains(counter), "missing {counter}:\n{response}");
@@ -399,5 +436,283 @@ fn job_request_runs_the_fanout_scheduler() {
     );
     let csv = parsed.get("csv").expect("csv").as_str().expect("csv string");
     assert_eq!(csv, reference, "daemon-scheduled fan-out CSV != unsharded CSV");
+    server.shutdown();
+}
+
+/// A decode request body covering one scheme/decoder/prefix corner.
+fn decode_body(decoder: &str, rounds: usize, prefix: Option<usize>, seed: u64) -> String {
+    let prefix = prefix.map(|p| format!(",\"prefix\":{p}")).unwrap_or_default();
+    format!(
+        "{{\"cmd\":\"decode\",\"scheme\":\"bgc\",\"k\":20,\"n\":20,\"s\":4,\"r\":16,\
+         \"rounds\":{rounds},\"decoder\":\"{decoder}\"{prefix},\"assign_seed\":\"11\",\
+         \"seed\":\"{seed}\"}}"
+    )
+}
+
+/// The PR 10 tentpole pin: the epoll reactor (default) and the legacy
+/// thread-per-connection loop answer every request kind with
+/// byte-identical frames — ping, scalar decode, panel-path decode,
+/// anytime prefix decode, optimal decode, fan-out job — both bare and
+/// tagged with pipelining ids (which must be echoed).
+#[test]
+fn reactor_and_legacy_loops_reply_byte_identically() {
+    let reactor = Server::start_with(&["--serve-threads", "reactor"]);
+    let legacy = Server::start_with(&["--serve-threads", "legacy"]);
+
+    let job = {
+        let job = JobSpec {
+            kind: JobKind::Table,
+            id: "thm5".into(),
+            trials: 12,
+            seed: 2017,
+            k: 10,
+            s: 2,
+            tmax: 0,
+            scenario: Scenario::default(),
+        };
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("cmd".to_string(), Json::Str("job".into()));
+        m.insert("fanout".to_string(), Json::Num(2.0));
+        m.insert("job".to_string(), job.to_json());
+        Json::Obj(m).write()
+    };
+    let bodies = [
+        "{\"cmd\":\"ping\"}".to_string(),
+        decode_body("onestep", 3, None, 42),  // scalar loop (rounds < panel width)
+        decode_body("onestep", 9, None, 42),  // panel fast path (default width 8)
+        decode_body("onestep", 4, Some(12), 42), // anytime prefix route
+        decode_body("optimal", 3, None, 42),
+        job,
+    ];
+
+    let mut rconn = reactor.connect();
+    let mut lconn = legacy.connect();
+    for body in &bodies {
+        assert_eq!(
+            request(&mut rconn, body),
+            request(&mut lconn, body),
+            "session loops disagree on {body}"
+        );
+    }
+    for (i, body) in bodies.iter().enumerate() {
+        let id = 1000 + i as u64;
+        let tagged = tag(body, id);
+        let r = request(&mut rconn, &tagged);
+        assert_eq!(r, request(&mut lconn, &tagged), "session loops disagree on {tagged}");
+        assert_eq!(reply_id(&r), Some(id), "id not echoed: {r}");
+    }
+    reactor.shutdown();
+    legacy.shutdown();
+}
+
+/// Pipelining: a client may write many id-tagged requests before
+/// reading anything. The daemon answers all of them (in completion
+/// order), and each reply is byte-identical to the lockstep reply for
+/// the identical request — replies are pure functions of requests, so
+/// reordering cannot change bytes.
+#[test]
+fn pipelined_burst_replies_match_lockstep_per_id() {
+    let server = Server::start();
+    let n = 8u64;
+    let body = |i: u64| tag(&decode_body("onestep", 2, None, 100 + i), i);
+
+    // Lockstep references, one request at a time.
+    let mut conn = server.connect();
+    let reference: Vec<String> = (0..n).map(|i| request(&mut conn, &body(i))).collect();
+
+    // Burst: every frame in one write, with a light ping pipelined
+    // behind the heavy decodes, then match replies by echoed id.
+    let mut burst = Vec::new();
+    for i in 0..n {
+        burst.extend_from_slice(&frame::encode_frame(&body(i)));
+    }
+    burst.extend_from_slice(&frame::encode_frame(&tag("{\"cmd\":\"ping\"}", 999)));
+    let mut conn = server.connect();
+    conn.write_all(&burst).expect("burst write");
+    conn.flush().expect("flush");
+    let mut got = std::collections::HashMap::new();
+    for _ in 0..=n {
+        let reply = frame::read_frame(&mut conn).expect("pipelined reply");
+        let id = reply_id(&reply).expect("pipelined reply without an id");
+        assert!(got.insert(id, reply).is_none(), "duplicate reply id {id}");
+    }
+    assert!(got[&999].contains("\"pong\":true"), "ping starved by the burst: {}", got[&999]);
+    for i in 0..n {
+        assert_eq!(got[&i], reference[i as usize], "pipelined reply {i} differs from lockstep");
+    }
+    server.shutdown();
+}
+
+/// `repro load --pipeline D`: the replay is a pure function of
+/// (seed, template), so its bytes cannot depend on the pipeline depth
+/// or on which session loop the daemon runs.
+#[test]
+fn pipelined_replay_is_byte_identical_across_depths_and_loops() {
+    let reactor = Server::start();
+    let legacy = Server::start_with(&["--serve-threads", "legacy"]);
+    let base =
+        ["--requests", "12", "--seed", "3", "--k", "20", "--s", "4", "--rounds", "2",
+         "--concurrency", "3"];
+    let run = |addr: &str, depth: &str| {
+        let mut extra = base.to_vec();
+        extra.extend_from_slice(&["--pipeline", depth]);
+        load(addr, &extra).0
+    };
+
+    let baseline = run(&reactor.addr, "1");
+    for depth in ["4", "16"] {
+        assert_eq!(baseline, run(&reactor.addr, depth), "replay depends on pipeline depth {depth}");
+    }
+    assert_eq!(baseline, run(&legacy.addr, "8"), "replay depends on the session loop");
+    reactor.shutdown();
+    legacy.shutdown();
+}
+
+/// Partial-frame delivery: the reactor's resumable frame decoder must
+/// reassemble frames from whatever chunks arrive — a byte-at-a-time
+/// dribble, and a pipelined pair split mid-second-frame.
+#[test]
+fn dribbled_bytes_and_split_frames_still_decode() {
+    let server = Server::start();
+
+    // One frame delivered a byte at a time.
+    let mut conn = server.connect();
+    let bytes = frame::encode_frame("{\"cmd\":\"ping\"}");
+    for b in &bytes {
+        conn.write_all(std::slice::from_ref(b)).expect("dribbled byte");
+        conn.flush().expect("flush");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let reply = frame::read_frame(&mut conn).expect("reply to dribbled frame");
+    assert!(reply.contains("\"pong\":true"), "dribbled ping misparsed: {reply}");
+
+    // Two pipelined frames where the first chunk ends mid-way through
+    // the second frame's body.
+    let f1 = frame::encode_frame(&tag("{\"cmd\":\"ping\"}", 1));
+    let f2 = frame::encode_frame(&tag(&decode_body("onestep", 2, None, 7), 2));
+    let mut all = f1.clone();
+    all.extend_from_slice(&f2);
+    let cut = f1.len() + f2.len() / 2;
+    conn.write_all(&all[..cut]).expect("first chunk");
+    conn.flush().expect("flush");
+    std::thread::sleep(Duration::from_millis(30));
+    conn.write_all(&all[cut..]).expect("second chunk");
+    conn.flush().expect("flush");
+    let mut ids = Vec::new();
+    for _ in 0..2 {
+        let reply = frame::read_frame(&mut conn).expect("reply to split frames");
+        assert!(reply.contains("\"ok\":true"), "split frame misparsed: {reply}");
+        ids.push(reply_id(&reply).expect("id"));
+    }
+    ids.sort_unstable();
+    assert_eq!(ids, vec![1, 2], "replies lost or duplicated across the split");
+    server.shutdown();
+}
+
+/// A client that writes half a frame and stalls must not wedge the
+/// daemon (other connections keep being served) and must not make the
+/// reactor busy-spin (the wakeup counter barely moves while the
+/// half-frame sits in the decoder).
+#[test]
+fn stalled_half_written_frame_neither_blocks_nor_spins_the_daemon() {
+    let server = Server::start();
+    let mut stalled = server.connect();
+    stalled.write_all(&64u32.to_be_bytes()).expect("prefix");
+    stalled.write_all(&[b'x'; 20]).expect("half the promised body");
+    stalled.flush().expect("flush");
+    std::thread::sleep(Duration::from_millis(50));
+
+    // Other connections are served while the stalled one waits.
+    let mut conn = server.connect();
+    assert!(request(&mut conn, "{\"cmd\":\"ping\"}").contains("\"pong\":true"));
+    assert_eq!(metric(&server.addr, "gradcode_inflight_requests"), 0, "phantom in-flight");
+
+    // Quiet window: a level-triggered loop that forgot to deregister
+    // interest would spin through tens of thousands of wakeups here;
+    // the two scrapes themselves only cost a handful.
+    let w0 = metric(&server.addr, "gradcode_reactor_wakeups_total");
+    std::thread::sleep(Duration::from_millis(400));
+    let w1 = metric(&server.addr, "gradcode_reactor_wakeups_total");
+    assert!(w1 - w0 < 50, "reactor busy-spins on a stalled connection: {w0} -> {w1}");
+
+    // The stalled client finishes its frame (garbage JSON) and still
+    // gets its answer: an error frame on a connection that stays up.
+    stalled.write_all(&[b'x'; 44]).expect("rest of the body");
+    stalled.flush().expect("flush");
+    let reply = frame::read_frame(&mut stalled).expect("late reply");
+    assert!(reply.contains("\"ok\":false"), "garbage body accepted: {reply}");
+    assert!(request(&mut stalled, "{\"cmd\":\"ping\"}").contains("\"pong\":true"));
+    server.shutdown();
+}
+
+/// Shutdown drains: every request accepted before the shutdown frame —
+/// here a burst pipelined ahead of it on the same connection — is
+/// answered before the daemon exits. No accepted request is dropped.
+#[test]
+fn shutdown_drains_pipelined_in_flight_requests() {
+    let server = Server::start();
+    let n = 6u64;
+    let mut burst = Vec::new();
+    for i in 0..n {
+        burst.extend_from_slice(&frame::encode_frame(&tag(&decode_body(
+            "onestep",
+            4,
+            None,
+            200 + i,
+        ), i)));
+    }
+    burst.extend_from_slice(&frame::encode_frame("{\"cmd\":\"shutdown\"}"));
+    let mut conn = server.connect();
+    conn.write_all(&burst).expect("burst write");
+    conn.flush().expect("flush");
+
+    // n decode replies plus the shutdown ack, in completion order.
+    let mut ids = std::collections::HashSet::new();
+    let mut acked = false;
+    for _ in 0..=n {
+        let reply = frame::read_frame(&mut conn).expect("drained reply");
+        assert!(reply.contains("\"ok\":true"), "in-flight request dropped or failed: {reply}");
+        match reply_id(&reply) {
+            Some(id) => {
+                assert!(ids.insert(id), "duplicate drained reply {id}");
+            }
+            None => acked = true,
+        }
+    }
+    assert!(acked, "shutdown never acknowledged");
+    assert_eq!(ids.len(), n as usize, "missing pipelined replies: {ids:?}");
+
+    // After the drain the daemon closes the connection and exits clean.
+    let mut rest = Vec::new();
+    conn.read_to_end(&mut rest).expect("clean close after the drain");
+    assert!(rest.is_empty(), "stray bytes after the drain");
+    server.wait_exit();
+}
+
+/// The latparam workload sweeps the latency-parameter template grid;
+/// like the fixed workload, its replay is byte-reproducible across
+/// runs and pipeline depths, and it labels itself in the header.
+#[test]
+fn latparam_workload_replay_is_reproducible_and_labeled() {
+    let server = Server::start();
+    let base = ["--workload", "latparam", "--requests", "12", "--seed", "9", "--k", "16",
+                "--s", "4", "--rounds", "2", "--concurrency", "2"];
+    let run = |depth: &str| {
+        let mut extra = base.to_vec();
+        extra.extend_from_slice(&["--pipeline", depth]);
+        load(&server.addr, &extra).0
+    };
+
+    let a = run("4");
+    assert_eq!(a, run("4"), "latparam replay differs between identical runs");
+    assert_eq!(a, run("1"), "latparam replay depends on pipeline depth");
+    assert!(a.contains("# workload latparam:"), "missing workload header:\n{a}");
+    let data_rows = a
+        .lines()
+        .skip_while(|l| !l.starts_with("request,seed"))
+        .skip(1)
+        .take_while(|l| *l != "bucket,count")
+        .count();
+    assert_eq!(data_rows, 12, "expected one replay row per request:\n{a}");
     server.shutdown();
 }
